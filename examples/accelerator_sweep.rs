@@ -1,0 +1,46 @@
+//! Domain example: hardware design-space exploration on the cycle-level
+//! accelerator model — sweep CU count and DRAM port width and watch where
+//! the MoR advantage grows (memory-bound) or shrinks (compute-bound).
+use anyhow::Result;
+use mor::config::Config;
+use mor::model::Artifacts;
+use mor::predictor::{exec, MorPolicy, RunOpts};
+use mor::sim::Simulator;
+use mor::util::bench::Table;
+
+fn main() -> Result<()> {
+    let dir = std::env::var("MOR_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let arts = Artifacts::load(&dir, "cnn10")?;
+    let pol = MorPolicy::new(&arts.model, &arts.predictor, Default::default());
+    let trace = exec::run_sample(
+        &arts.model,
+        Some(&pol),
+        arts.data.test_sample(0),
+        RunOpts { oracle: false, collect_trace: true },
+    )
+    .traces;
+
+    let mut t = Table::new(
+        "design-space sweep (cnn10): MoR speedup across CU count x DRAM port",
+        &["num_cus", "port_bytes", "base_cycles", "mor_cycles", "speedup"],
+    );
+    for num_cus in [4usize, 8, 16] {
+        for port in [4u64, 8, 16] {
+            let mut cfg = Config::default();
+            cfg.accel.num_cus = num_cus;
+            cfg.dram.port_bytes = port;
+            let sim = Simulator::new(cfg);
+            let b = sim.simulate_sample(&arts.model, None, None);
+            let m = sim.simulate_sample(&arts.model, Some(&pol), Some(&trace));
+            t.row(&[
+                num_cus.to_string(),
+                port.to_string(),
+                b.cycles.to_string(),
+                m.cycles.to_string(),
+                format!("{:.3}", b.cycles as f64 / m.cycles as f64),
+            ]);
+        }
+    }
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,109 @@
+//! END-TO-END driver (DESIGN.md: the run recorded in EXPERIMENTS.md):
+//! exercises all layers of the stack on a real small workload and proves
+//! they compose:
+//!
+//!   1. artifacts (L1 Pallas kernels + L2 JAX models, AOT-lowered) load;
+//!   2. the PJRT runtime executes a model's HLO and its logits agree with
+//!      the rust functional engine on real test samples;
+//!   3. the MoR predictor runs on all four models: accuracy loss < 1 pp
+//!      with real computation savings;
+//!   4. the cycle-level accelerator simulates baseline vs MoR (speedup);
+//!   5. the serving coordinator sustains a request stream with the
+//!      predictor enabled.
+use anyhow::{ensure, Result};
+use mor::config::{Config, PredictorConfig};
+use mor::coordinator::{serve, Backend};
+use mor::model::Artifacts;
+use mor::predictor::{argmax, exec, MorPolicy, MorRun, RunOpts};
+use mor::runtime::Runtime;
+use mor::sim::Simulator;
+use mor::workload::RequestStream;
+
+fn main() -> Result<()> {
+    let dir = std::env::var("MOR_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    println!("=== E2E full-system driver ===");
+
+    // -- stage 1+2: PJRT runtime vs functional engine ----------------------
+    let rt = Runtime::cpu()?;
+    println!("[1] PJRT platform: {}", rt.platform());
+    let arts = Artifacts::load(&dir, "tds")?;
+    let exe = rt.load_hlo(Artifacts::hlo_path(&dir, "tds"), arts.meta.input_shape)?;
+    let mut agree = 0;
+    let n_check = 16;
+    for i in 0..n_check {
+        let sample = arts.data.test_sample(i);
+        let pjrt_logits = exe.forward(sample)?;
+        let eng = exec::run_sample(&arts.model, None, sample, RunOpts { oracle: false, collect_trace: false });
+        if argmax(&pjrt_logits) == argmax(&eng.logits) {
+            agree += 1;
+        }
+        let md: f32 = pjrt_logits
+            .iter()
+            .zip(&eng.logits)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        ensure!(md < 1e-2, "PJRT vs engine logits diverge: max |Δ| = {md}");
+    }
+    println!("[2] PJRT == engine on {agree}/{n_check} argmax, logits allclose ✓");
+
+    // -- stage 3: MoR on the full zoo --------------------------------------
+    let mut total_saved = 0.0;
+    for name in mor::MODELS {
+        let a = Artifacts::load(&dir, name)?;
+        let base = MorRun::evaluate(&a, None, 96, RunOpts::default());
+        // per-DNN threshold from training data, as in the paper (Sec 3.2.1)
+        let thr = mor::predictor::choose_threshold(&a, &PredictorConfig::default(), 3.2, 32);
+        let pol = MorPolicy::new(
+            &a.model,
+            &a.predictor,
+            PredictorConfig { threshold: thr, ..Default::default() },
+        );
+        let s = MorRun::evaluate(&a, Some(&pol), 96, RunOpts::default());
+        let loss_pp = (base.accuracy - s.accuracy) * 100.0;
+        let saved = s.ops.macs_saved_frac() * 100.0;
+        total_saved += saved;
+        println!(
+            "[3] {name:<12} T={thr} saved {saved:>5.1}% MACs | accuracy {:.1}% → {:.1}% (Δ {loss_pp:+.2} pp)",
+            base.accuracy * 100.0,
+            s.accuracy * 100.0
+        );
+        ensure!(loss_pp < 1.5, "{name}: accuracy loss {loss_pp} pp exceeds budget");
+        ensure!(saved > 0.0, "{name}: no savings");
+    }
+    ensure!(total_saved > 0.0);
+
+    // -- stage 4: cycle-level accelerator ----------------------------------
+    let cfg = Config::default();
+    let a = Artifacts::load(&dir, "cnn10")?;
+    let thr = mor::predictor::choose_threshold(&a, &cfg.predictor, 3.2, 32);
+    let pol = MorPolicy::new(
+        &a.model,
+        &a.predictor,
+        PredictorConfig { threshold: thr, ..cfg.predictor.clone() },
+    );
+    let sim = Simulator::new(cfg.clone());
+    let tr = exec::run_sample(&a.model, Some(&pol), a.data.test_sample(0),
+        RunOpts { oracle: false, collect_trace: true }).traces;
+    let b = sim.simulate_sample(&a.model, None, None);
+    let m = sim.simulate_sample(&a.model, Some(&pol), Some(&tr));
+    println!(
+        "[4] cnn10 accelerator: {} → {} cycles (speedup {:.3}x) | DRAM {} → {} KB",
+        b.cycles, m.cycles,
+        b.cycles as f64 / m.cycles as f64,
+        b.dram_bytes / 1024, m.dram_bytes / 1024
+    );
+    ensure!(m.cycles <= b.cycles, "MoR made the accelerator slower");
+
+    // -- stage 5: serving ---------------------------------------------------
+    let arts = Artifacts::load(&dir, "tds")?;
+    let policy = MorPolicy::new(&arts.model, &arts.predictor, PredictorConfig::default());
+    let mut stream = RequestStream::new(200.0, arts.data.n_test(), 11);
+    let requests = stream.generate(2.0);
+    let n_req = requests.len();
+    let rep = serve(&arts, Some(policy), Backend::Engine, 4, requests, &dir, 1.0)?;
+    rep.print("e2e");
+    ensure!(rep.completed == n_req, "dropped requests");
+
+    println!("=== E2E OK: all layers compose ===");
+    Ok(())
+}

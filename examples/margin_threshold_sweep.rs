@@ -1,0 +1,34 @@
+//! Operating-point exploration: sweeps the skip-confidence margin (our
+//! extension over the paper's raw rule) x the auto-chosen correlation
+//! threshold, reporting the savings/accuracy frontier per model.
+use mor::config::PredictorConfig;
+use mor::predictor::{choose_threshold, MorPolicy, MorRun, RunOpts};
+use mor::util::bench::Table;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::var("MOR_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let mut t = Table::new(
+        "margin x threshold frontier (256 test samples)",
+        &["model", "margin_sigmas", "auto_T", "ops_saved_pct", "accuracy_loss_pp", "incorrect_zero_pct"],
+    );
+    for name in mor::MODELS {
+        let a = mor::model::Artifacts::load(&dir, name)?;
+        let base = MorRun::evaluate(&a, None, 256, RunOpts::default());
+        for margin in [0.0f32, 0.25, 0.5, 1.0, 2.0] {
+            let cfg0 = PredictorConfig { margin_sigmas: margin, ..Default::default() };
+            let thr = choose_threshold(&a, &cfg0, 3.2, 32);
+            let pol = MorPolicy::new(&a.model, &a.predictor, PredictorConfig { threshold: thr, ..cfg0 });
+            let s = MorRun::evaluate(&a, Some(&pol), 256, RunOpts::default());
+            t.row(&[
+                name.to_string(),
+                format!("{margin}"),
+                format!("{thr}"),
+                format!("{:.1}", s.ops.macs_saved_frac() * 100.0),
+                format!("{:+.2}", (base.accuracy - s.accuracy) * 100.0),
+                format!("{:.2}", s.pred.frac(s.pred.incorrect_zero) * 100.0),
+            ]);
+        }
+    }
+    t.print();
+    Ok(())
+}

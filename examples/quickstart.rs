@@ -1,0 +1,45 @@
+//! Quickstart: load a model bundle, run Mixture-of-Rookies inference on a
+//! few samples, print savings and prediction quality.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+use anyhow::Result;
+use mor::config::PredictorConfig;
+use mor::model::Artifacts;
+use mor::predictor::{MorPolicy, MorRun, RunOpts};
+
+fn main() -> Result<()> {
+    let dir = std::env::var("MOR_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let arts = Artifacts::load(&dir, "tds")?;
+    println!(
+        "loaded {}: {:?} input, {:.1}M MACs/sample, int8 top-1 {:.1}%",
+        arts.meta.name,
+        arts.meta.input_shape,
+        arts.meta.macs_per_sample as f64 / 1e6,
+        arts.meta.int8_accuracy * 100.0
+    );
+
+    // baseline (no predictor) vs Mixture-of-Rookies
+    let base = MorRun::evaluate(&arts, None, 64, RunOpts::default());
+    let policy = MorPolicy::new(&arts.model, &arts.predictor, PredictorConfig::default());
+    let mor = MorRun::evaluate(&arts, Some(&policy), 64, RunOpts::default());
+
+    println!("baseline accuracy: {:.1}%", base.accuracy * 100.0);
+    println!(
+        "MoR accuracy:      {:.1}%  (Δ {:+.2} pp)",
+        mor.accuracy * 100.0,
+        (mor.accuracy - base.accuracy) * 100.0
+    );
+    println!(
+        "computations avoided: {:.1}% of MACs, {:.1} KB of weight traffic per sample",
+        mor.ops.macs_saved_frac() * 100.0,
+        mor.ops.weight_bytes_saved as f64 / 64.0 / 1024.0
+    );
+    let p = &mor.pred;
+    println!(
+        "outcomes: correct-zero {:.1}% | incorrect-zero {:.2}% | correct-nonzero {:.1}%",
+        p.frac(p.correct_zero) * 100.0,
+        p.frac(p.incorrect_zero) * 100.0,
+        p.frac(p.correct_nonzero) * 100.0
+    );
+    Ok(())
+}

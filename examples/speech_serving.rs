@@ -1,0 +1,37 @@
+//! Domain example: low-latency speech recognition serving (the paper's
+//! motivating workload — TDS frame-by-frame inference on-edge).
+//!
+//! Streams Poisson-arriving utterance requests through the coordinator on
+//! the functional engine backend with the MoR predictor enabled, then
+//! compares against the no-predictor baseline.
+use anyhow::Result;
+use mor::config::PredictorConfig;
+use mor::coordinator::{serve, Backend};
+use mor::model::Artifacts;
+use mor::predictor::MorPolicy;
+use mor::workload::RequestStream;
+
+fn main() -> Result<()> {
+    let dir = std::env::var("MOR_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let arts = Artifacts::load(&dir, "tds")?;
+    let rps = 300.0;
+    let duration = 3.0;
+    let workers = 4;
+
+    let mut stream = RequestStream::new(rps, arts.data.n_test(), 7);
+    let requests = stream.generate(duration);
+    println!("speech serving: {} requests at {rps} rps over {duration}s, {workers} workers", requests.len());
+
+    let policy = MorPolicy::new(&arts.model, &arts.predictor, PredictorConfig::default());
+    let rep = serve(&arts, Some(policy), Backend::Engine, workers, requests.clone(), &dir, 1.0)?;
+    rep.print("tds+MoR");
+
+    let rep0 = serve(&arts, None, Backend::Engine, workers, requests, &dir, 1.0)?;
+    rep0.print("tds baseline");
+
+    println!(
+        "service-time speedup from skipping: {:.2}x",
+        rep0.mean_service_ms / rep.mean_service_ms.max(1e-9)
+    );
+    Ok(())
+}

@@ -1,0 +1,179 @@
+"""AOT driver: train → quantize → calibrate → export artifacts.
+
+Run once by ``make artifacts``; python never appears on the request path.
+Per model it emits into ``artifacts/``:
+
+* ``<model>.w.bin``          — quantized model (MORW, see artifacts_io.py)
+* ``<model>.predictor.json`` — offline MoR parameters (c/m/b, clusters)
+* ``<model>.data.bin``       — test + calibration splits (MORD)
+* ``<model>_fwd.hlo.txt``    — integer deploy forward lowered to HLO *text*
+                               (NOT .serialize(): the image's xla_extension
+                               0.5.1 rejects jax>=0.5 64-bit-id protos; the
+                               text parser reassigns ids — see
+                               /opt/xla-example/README.md)
+* ``meta.json``              — index + accuracies + MAC counts
+
+Trained parameters are cached in ``artifacts/cache/<model>.npz`` keyed by a
+config hash, so re-running is cheap unless the model zoo changes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import artifacts_io, calibrate as C, model as M, quantize as Q, train as T
+
+
+def to_hlo_text(lowered) -> str:
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is ESSENTIAL: the default printer elides
+    # the baked weight tensors as `constant({...})`, which the rust-side
+    # text parser silently reads as zeros — the artifact would "run" with
+    # empty weights.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _zoo_hash(name: str, steps: int, seed: int) -> str:
+    """Cache key: model definition + training hyperparameters + source."""
+    h = hashlib.sha256()
+    for dep in ("model.py", "datasets.py", "train.py"):
+        h.update(open(os.path.join(os.path.dirname(__file__), dep), "rb").read())
+    h.update(f"{name}|{steps}|{seed}".encode())
+    return h.hexdigest()[:16]
+
+
+def _save_cache(path: str, params, state, info, key: str):
+    flat = {}
+    for i, p in enumerate(params):
+        for k, v in p.items():
+            flat[f"p{i}_{k}"] = np.asarray(v)
+    for i, s in enumerate(state):
+        for k, v in s.items():
+            flat[f"s{i}_{k}"] = np.asarray(v)
+    flat["__info"] = np.frombuffer(json.dumps(info).encode(), dtype=np.uint8)
+    flat["__key"] = np.frombuffer(key.encode(), dtype=np.uint8)
+    np.savez(path, **flat)
+
+
+def _load_cache(path: str, n_nodes: int, key: str):
+    if not os.path.exists(path):
+        return None
+    z = np.load(path)
+    if "__key" not in z.files or bytes(z["__key"]).decode() != key:
+        return None
+    params = [dict() for _ in range(n_nodes)]
+    state = [dict() for _ in range(n_nodes)]
+    for name in z.files:
+        if name.startswith("__"):
+            continue
+        if name.startswith("p"):
+            i, k = name[1:].split("_", 1)
+            params[int(i)][k] = jnp.asarray(z[name])
+        elif name.startswith("s"):
+            i, k = name[1:].split("_", 1)
+            state[int(i)][k] = jnp.asarray(z[name])
+    info = json.loads(bytes(z["__info"]).decode())
+    return params, state, info
+
+
+def build_model(name: str, out_dir: str, steps: int, seed: int, skip_hlo: bool) -> dict:
+    mdef = M.ZOO[name]()
+    cache_dir = os.path.join(out_dir, "cache")
+    os.makedirs(cache_dir, exist_ok=True)
+    key = _zoo_hash(name, steps, seed)
+    cache_path = os.path.join(cache_dir, f"{name}.npz")
+
+    cached = _load_cache(cache_path, len(mdef.nodes), key)
+    if cached is not None:
+        params, state, info = cached
+        print(f"  [{name}] using cached training (acc={info['test_accuracy']*100:.1f}%)")
+    else:
+        print(f"  [{name}] training {steps} steps ...")
+        params, state, info = T.train_model(mdef, steps=steps, seed=seed)
+        _save_cache(cache_path, params, state, info, key)
+
+    calib_x, calib_y = T.calib_split(mdef)
+    test_x, test_y = T.test_split(mdef)
+
+    qm = Q.quantize(mdef, params, state, calib_x)
+
+    # quantized accuracy (integer path) on the test split
+    logits, _ = Q.quant_forward(qm, test_x)
+    quant_acc = float((jnp.argmax(logits, axis=1) == test_y).mean())
+    print(f"  [{name}] int8 top-1 = {quant_acc*100:.1f}% (fp32 {info['test_accuracy']*100:.1f}%)")
+
+    # offline MoR stage — fit regressions on the first 96 calibration
+    # samples; the last 32 stay untouched as the threshold-selection
+    # holdout used by the rust side (predictor::choose_threshold)
+    cal = C.calibrate(qm, calib_x[:96])
+
+    # artifacts
+    artifacts_io.write_weights(os.path.join(out_dir, f"{name}.w.bin"), qm)
+    artifacts_io.write_data(
+        os.path.join(out_dir, f"{name}.data.bin"), test_x, test_y, calib_x, calib_y
+    )
+    with open(os.path.join(out_dir, f"{name}.predictor.json"), "w") as f:
+        json.dump(C.to_json_dict(cal), f)
+
+    hlo_path = os.path.join(out_dir, f"{name}_fwd.hlo.txt")
+    if not skip_hlo:
+        t0 = time.time()
+        spec = jax.ShapeDtypeStruct(mdef.input_shape, jnp.float32)
+        lowered = jax.jit(lambda x: (Q.deploy_forward(qm, x),)).lower(spec)
+        with open(hlo_path, "w") as f:
+            f.write(to_hlo_text(lowered))
+        print(f"  [{name}] lowered HLO in {time.time()-t0:.1f}s")
+
+    return {
+        "name": name,
+        "weights": f"{name}.w.bin",
+        "predictor": f"{name}.predictor.json",
+        "data": f"{name}.data.bin",
+        "hlo": f"{name}_fwd.hlo.txt",
+        "input_shape": list(mdef.input_shape),
+        "num_nodes": len(mdef.nodes),
+        "relu_layers": mdef.relu_layers(),
+        "macs_per_sample": int(sum(M.mac_counts(mdef))),
+        "fp32_accuracy": info["test_accuracy"],
+        "int8_accuracy": quant_acc,
+        "train_steps": info["steps"],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default="tds,cnn10,darknet19m,resnet18m")
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--skip-hlo", action="store_true", help="skip HLO lowering (fast dev loop)")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    metas = []
+    for name in args.models.split(","):
+        name = name.strip()
+        print(f"[aot] building {name}")
+        metas.append(build_model(name, args.out_dir, args.steps, args.seed, args.skip_hlo))
+
+    meta = {"version": 1, "models": metas}
+    with open(os.path.join(args.out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"[aot] wrote {len(metas)} models to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,151 @@
+"""Binary artifact formats shared with the rust loaders (rust/src/model).
+
+Two custom little-endian formats (no numpy/serde on the rust side):
+
+``<model>.w.bin`` — MORW v1, the quantized model:
+
+    magic   4 bytes  b"MORW"
+    version u32      1
+    n_nodes u32
+    sx0     f32      model-input activation scale
+    then per node:
+      kind      u8   0=conv 1=fc 2=maxpool 3=gap 4=relu
+      flags     u8   bit0 relu, bit1 bn
+      res_from  i32  node index whose float output is added pre-ReLU (-1 none)
+      consumes  i32  node index whose output this node reads (-1 = input)
+      conv: kh,kw,cin,cout,stride u32 x5, pad u8 (1=same), sw f32, sx f32,
+            weights i8[kh*kw*cin*cout] in (KH,KW,CIN,COUT) row-major,
+            if bn: scale f32[cout], shift f32[cout]
+      fc:   cin,cout u32 x2, sw f32, sx f32, weights i8[cin*cout] (CIN,COUT),
+            if bn: scale f32[cout], shift f32[cout]
+      maxpool: size u32
+      gap/relu: no payload
+
+``<model>.data.bin`` — MORD v1, evaluation data:
+
+    magic b"MORD", version u32 1, n_test u32, n_calib u32, h,w,c u32 x3,
+    test_x f32[n_test*h*w*c], test_y u16[n_test],
+    calib_x f32[n_calib*h*w*c], calib_y u16[n_calib]
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import List
+
+import numpy as np
+
+from . import model as M
+from . import quantize as Q
+
+KIND_CONV, KIND_FC, KIND_MAXPOOL, KIND_GAP, KIND_RELU = 0, 1, 2, 3, 4
+
+
+def write_weights(path: str, qm: Q.QuantModel) -> None:
+    mdef = qm.mdef
+    out = bytearray()
+    out += b"MORW"
+    out += struct.pack("<II", 1, len(mdef.nodes))
+    out += struct.pack("<f", qm.sx0)
+    for i, nd in enumerate(mdef.nodes):
+        res_from = getattr(nd, "res_from", None)
+        res_from = -1 if res_from is None else res_from
+        consumes = M.input_of(mdef, i)
+        if isinstance(nd, M.Conv):
+            ql = qm.layers[i]
+            flags = (1 if nd.relu else 0) | (2 if nd.bn else 0)
+            out += struct.pack("<BBii", KIND_CONV, flags, res_from, consumes)
+            kh, kw, cin, cout = ql.w_int8.shape
+            out += struct.pack("<5IB", kh, kw, cin, cout, nd.stride, 1 if nd.pad == "same" else 0)
+            out += struct.pack("<ff", ql.sw, ql.sx)
+            out += ql.w_int8.tobytes()  # row-major (KH,KW,CIN,COUT)
+            if nd.bn:
+                out += ql.bn_scale.astype("<f4").tobytes()
+                out += ql.bn_shift.astype("<f4").tobytes()
+        elif isinstance(nd, M.FC):
+            ql = qm.layers[i]
+            flags = (1 if nd.relu else 0) | (2 if nd.bn else 0)
+            out += struct.pack("<BBii", KIND_FC, flags, res_from, consumes)
+            cin, cout = ql.w_int8.shape
+            out += struct.pack("<II", cin, cout)
+            out += struct.pack("<ff", ql.sw, ql.sx)
+            out += ql.w_int8.tobytes()
+            if nd.bn:
+                out += ql.bn_scale.astype("<f4").tobytes()
+                out += ql.bn_shift.astype("<f4").tobytes()
+        elif isinstance(nd, M.MaxPool):
+            out += struct.pack("<BBii", KIND_MAXPOOL, 0, -1, consumes)
+            out += struct.pack("<I", nd.size)
+        elif isinstance(nd, M.GAP):
+            out += struct.pack("<BBii", KIND_GAP, 0, -1, consumes)
+        elif isinstance(nd, M.ReLUNode):
+            out += struct.pack("<BBii", KIND_RELU, 0, -1, consumes)
+        else:  # pragma: no cover
+            raise TypeError(nd)
+    with open(path, "wb") as f:
+        f.write(bytes(out))
+
+
+def write_data(path: str, test_x, test_y, calib_x, calib_y) -> None:
+    tx = np.asarray(test_x, dtype="<f4")
+    cx = np.asarray(calib_x, dtype="<f4")
+    ty = np.asarray(test_y, dtype="<u2")
+    cy = np.asarray(calib_y, dtype="<u2")
+    n_test, h, w, c = tx.shape
+    n_calib = cx.shape[0]
+    with open(path, "wb") as f:
+        f.write(b"MORD")
+        f.write(struct.pack("<IIIIII", 1, n_test, n_calib, h, w, c))
+        f.write(tx.tobytes())
+        f.write(ty.tobytes())
+        f.write(cx.tobytes())
+        f.write(cy.tobytes())
+
+
+def read_weights_header(path: str) -> List[dict]:
+    """Debug/test helper: parse MORW back into dicts (not used at runtime)."""
+    with open(path, "rb") as f:
+        buf = f.read()
+    assert buf[:4] == b"MORW"
+    ver, n_nodes = struct.unpack_from("<II", buf, 4)
+    assert ver == 1
+    (sx0,) = struct.unpack_from("<f", buf, 12)
+    off = 16
+    nodes = []
+    for _ in range(n_nodes):
+        kind, flags, res_from, consumes = struct.unpack_from("<BBii", buf, off)
+        off += 10
+        node = {"kind": kind, "flags": flags, "res_from": res_from, "consumes": consumes}
+        if kind == KIND_CONV:
+            kh, kw, cin, cout, stride, pad = struct.unpack_from("<5IB", buf, off)
+            off += 21
+            sw, sx = struct.unpack_from("<ff", buf, off)
+            off += 8
+            nw = kh * kw * cin * cout
+            node.update(kh=kh, kw=kw, cin=cin, cout=cout, stride=stride, pad=pad, sw=sw, sx=sx)
+            node["w"] = np.frombuffer(buf, np.int8, nw, off).reshape(kh, kw, cin, cout)
+            off += nw
+            if flags & 2:
+                node["bn_scale"] = np.frombuffer(buf, "<f4", cout, off)
+                off += 4 * cout
+                node["bn_shift"] = np.frombuffer(buf, "<f4", cout, off)
+                off += 4 * cout
+        elif kind == KIND_FC:
+            cin, cout = struct.unpack_from("<II", buf, off)
+            off += 8
+            sw, sx = struct.unpack_from("<ff", buf, off)
+            off += 8
+            node.update(cin=cin, cout=cout, sw=sw, sx=sx)
+            node["w"] = np.frombuffer(buf, np.int8, cin * cout, off).reshape(cin, cout)
+            off += cin * cout
+            if flags & 2:
+                node["bn_scale"] = np.frombuffer(buf, "<f4", cout, off)
+                off += 4 * cout
+                node["bn_shift"] = np.frombuffer(buf, "<f4", cout, off)
+                off += 4 * cout
+        elif kind == KIND_MAXPOOL:
+            (node["size"],) = struct.unpack_from("<I", buf, off)
+            off += 4
+        nodes.append(node)
+    assert off == len(buf), (off, len(buf))
+    return nodes

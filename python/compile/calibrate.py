@@ -1,0 +1,216 @@
+"""Offline stage of Mixture-of-Rookies (Section 3.2): self-correlation
+profiling and angle-based clustering.
+
+Outputs, per ReLU compute layer:
+
+* per-neuron Pearson correlation ``c`` between the binary dot product and
+  the base-precision dot product over a calibration subset;
+* per-neuron fitted line ``(m, b)`` mapping binary counts to dequantized
+  base dot products (least squares);
+* clusters: the paper's algorithm — directed graph of each neuron to its
+  closest-by-angle peer, proxies chosen by descending indegree;
+* the closest-neighbour angle distribution (Fig 8).
+
+All of this is exported in ``<model>.predictor.json`` and re-verified by the
+rust implementation (rust/src/cluster) — the clustering is intentionally
+implemented twice and property-tested for agreement of invariants.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+import numpy as np
+
+from . import model as M
+from . import quantize as Q
+
+
+@dataclass
+class LayerCalibration:
+    layer: int
+    c: np.ndarray          # (N,) Pearson correlation
+    m: np.ndarray          # (N,) slope (dequant units per binary count)
+    b: np.ndarray          # (N,) intercept
+    s: np.ndarray          # (N,) regression residual std (margin unit)
+    clusters: List[List[int]]  # each: [proxy, member, member, ...]
+    closest_angle_deg: np.ndarray  # (N,) angle to closest neuron
+
+
+@dataclass
+class Calibration:
+    model: str
+    layers: Dict[int, LayerCalibration] = field(default_factory=dict)
+
+
+# --------------------------------------------------------------------------
+# Self-correlation: Pearson + least squares per neuron
+# --------------------------------------------------------------------------
+
+
+def fit_lines(pbin: np.ndarray, pbase: np.ndarray):
+    """Column-wise linear regression pbase ~ m*pbin + b, Pearson c, and the
+    regression's residual std s (the skip-confidence margin unit used by
+    the online predictor: skip only when the estimate is k*s below zero).
+
+    pbin/pbase: (R, N). Degenerate columns (zero variance) get c=0, m=0,
+    b=mean(pbase): a constant predictor, which the threshold then disables.
+    """
+    r = pbin.shape[0]
+    mx = pbin.mean(axis=0)
+    my = pbase.mean(axis=0)
+    dx = pbin - mx
+    dy = pbase - my
+    sxx = (dx * dx).sum(axis=0)
+    syy = (dy * dy).sum(axis=0)
+    sxy = (dx * dy).sum(axis=0)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        m = np.where(sxx > 0, sxy / np.maximum(sxx, 1e-12), 0.0)
+        denom = np.sqrt(np.maximum(sxx * syy, 1e-24))
+        c = np.where((sxx > 0) & (syy > 0), sxy / denom, 0.0)
+    b = my - m * mx
+    resid = pbase - (pbin * m[None, :] + b[None, :])
+    s_ = np.sqrt((resid * resid).sum(axis=0) / max(r - 2, 1))
+    return (
+        c.astype(np.float32),
+        m.astype(np.float32),
+        b.astype(np.float32),
+        s_.astype(np.float32),
+    )
+
+
+# --------------------------------------------------------------------------
+# Spatial correlation: angle-based clustering (Section 3.2.2)
+# --------------------------------------------------------------------------
+
+
+def weight_angles_deg(wmat: np.ndarray) -> np.ndarray:
+    """Pairwise angles (degrees) between weight columns. wmat: (K, N)."""
+    norms = np.linalg.norm(wmat, axis=0)
+    norms = np.where(norms == 0, 1.0, norms)
+    u = wmat / norms
+    cos = np.clip(u.T @ u, -1.0, 1.0)
+    return np.degrees(np.arccos(cos))
+
+
+def closest_neighbors(angles: np.ndarray):
+    """(closest index, closest angle) per neuron, self excluded."""
+    a = angles.copy()
+    np.fill_diagonal(a, np.inf)
+    idx = a.argmin(axis=1)
+    return idx, a[np.arange(a.shape[0]), idx]
+
+
+def cluster_by_angle(
+    wmat: np.ndarray, max_angle_deg: float = 90.0
+) -> (List[List[int]], np.ndarray):
+    """The paper's clustering algorithm.
+
+    1. directed graph: each neuron -> its closest neuron (edge dropped if the
+       angle exceeds ``max_angle_deg``; at >= 90° the false-positive
+       probability of Eq. 4 reaches its maximum, so such edges carry no
+       signal — with the paper's default this only removes degenerate edges);
+    2. sort nodes by descending indegree;
+    3. repeatedly: take the live node with highest indegree as *proxy*,
+       remove it and all live nodes pointing at it (its cluster members).
+
+    Returns (clusters, closest_angles). Every neuron appears in exactly one
+    cluster; singleton clusters are plain unpredicted neurons.
+    """
+    n = wmat.shape[1]
+    angles = weight_angles_deg(wmat)
+    nearest, near_angle = closest_neighbors(angles)
+    edge_to = np.where(near_angle <= max_angle_deg, nearest, -1)
+
+    indegree = np.zeros(n, dtype=np.int64)
+    for src in range(n):
+        if edge_to[src] >= 0:
+            indegree[edge_to[src]] += 1
+
+    order = sorted(range(n), key=lambda i: (-indegree[i], i))
+    alive = np.ones(n, dtype=bool)
+    clusters: List[List[int]] = []
+    # incoming adjacency
+    incoming: List[List[int]] = [[] for _ in range(n)]
+    for src in range(n):
+        if edge_to[src] >= 0:
+            incoming[edge_to[src]].append(src)
+
+    for node in order:
+        if not alive[node]:
+            continue
+        members = [m for m in incoming[node] if alive[m] and m != node]
+        clusters.append([node] + members)
+        alive[node] = False
+        for m in members:
+            alive[m] = False
+    assert sum(len(c) for c in clusters) == n
+    return clusters, near_angle.astype(np.float32)
+
+
+# --------------------------------------------------------------------------
+# Full offline pass
+# --------------------------------------------------------------------------
+
+
+def calibrate(
+    qm: Q.QuantModel,
+    calib_x,
+    batch: int = 32,
+    max_rows_per_layer: int = 200_000,
+    max_angle_deg: float = 90.0,
+    seed: int = 0,
+) -> Calibration:
+    """Run the calibration subset through the integer forward, fit the
+    per-neuron lines, and cluster each ReLU layer's weight vectors."""
+    import jax.numpy as jnp
+
+    mdef = qm.mdef
+    relu_layers = mdef.relu_layers()
+    acc: Dict[int, List[np.ndarray]] = {i: [] for i in relu_layers}
+
+    n = calib_x.shape[0]
+    for s in range(0, n, batch):
+        _, taps = Q.quant_forward(qm, jnp.asarray(calib_x[s : s + batch]), collect=True)
+        for i in relu_layers:
+            pbin, pbase = taps[i]
+            acc[i].append((np.asarray(pbin), np.asarray(pbase)))
+
+    cal = Calibration(mdef.name)
+    rng = np.random.default_rng(seed)
+    for i in relu_layers:
+        pbin = np.concatenate([p for p, _ in acc[i]], axis=0)
+        pbase = np.concatenate([q for _, q in acc[i]], axis=0)
+        if pbin.shape[0] > max_rows_per_layer:
+            sel = rng.choice(pbin.shape[0], max_rows_per_layer, replace=False)
+            pbin, pbase = pbin[sel], pbase[sel]
+        c, m, b, s_ = fit_lines(pbin, pbase)
+
+        nd = mdef.nodes[i]
+        w = qm.layers[i].w_int8.astype(np.float32)
+        wmat = w.reshape(-1, nd.cout)  # (K, N) — filters flattened as columns
+        clusters, near_angle = cluster_by_angle(wmat, max_angle_deg)
+        cal.layers[i] = LayerCalibration(i, c, m, b, s_, clusters, near_angle)
+    return cal
+
+
+def to_json_dict(cal: Calibration, default_threshold: float = 0.85) -> dict:
+    """Serializable form consumed by rust/src/model/predictor loader."""
+    return {
+        "model": cal.model,
+        "default_threshold": default_threshold,
+        "layers": [
+            {
+                "layer": lc.layer,
+                "neurons": int(lc.c.shape[0]),
+                "c": [round(float(v), 6) for v in lc.c],
+                "m": [round(float(v), 8) for v in lc.m],
+                "b": [round(float(v), 6) for v in lc.b],
+                "s": [round(float(v), 6) for v in lc.s],
+                "clusters": [[int(x) for x in cl] for cl in lc.clusters],
+                "closest_angle_deg": [round(float(v), 3) for v in lc.closest_angle_deg],
+            }
+            for lc in cal.layers.values()
+        ],
+    }

@@ -1,0 +1,7 @@
+"""Pallas kernels (L1) for the Mixture-of-Rookies reproduction.
+
+All kernels lower with interpret=True (CPU PJRT cannot run Mosaic
+custom-calls); `ref.py` holds the pure-jnp oracles the tests check against.
+"""
+
+from . import binary_dot, conv2d, int8_matmul, mor_dense, ref  # noqa: F401

@@ -1,0 +1,93 @@
+"""L1 Pallas kernel: binary (±1) dot products — the paper's binCU array.
+
+The accelerator's Binary Prediction Unit (Section 4.4) computes the 1-bit
+dot product with XNOR + popcount gates. That is an ASIC/CPU idiom; on a
+TPU-class target the natural mapping (DESIGN.md §Hardware-Adaptation) is:
+
+* take the *sign bit* of the int8 activations and weights (zero counts as
+  positive — the literal sign bit of two's complement),
+* map bits to ±1 int8 values in VMEM,
+* feed an MXU-shaped int8 matmul with int32 accumulation.
+
+The ±1 matmul is numerically identical to ``K - 2*popcount(xor)`` and costs
+one MXU pass at 1/1 the int8 rate — the "cheapness" the paper gets from
+XNOR gates we get from skipping the full-precision *weight fetch*: sign bits
+travel as part of the packed weights and the binary pass touches 8x less
+HBM per weight element when packed (the rust engine packs them into u64
+words; here the HLO-level contract is the ±1 matmul itself).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import int8_matmul as mm
+
+
+def _binary_kernel(x_ref, w_ref, o_ref):
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # activations: active/inactive (+1 iff > 0); weights: sign bit (+1 iff >= 0)
+    xs = jnp.where(x_ref[...] > 0, jnp.int8(1), jnp.int8(-1))
+    ws = jnp.where(w_ref[...] >= 0, jnp.int8(1), jnp.int8(-1))
+    o_ref[...] += jax.lax.dot_general(
+        xs, ws, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def binary_dot(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    bm: int = mm.DEFAULT_BM,
+    bn: int = mm.DEFAULT_BN,
+    bk: int = mm.DEFAULT_BK,
+) -> jax.Array:
+    """(M,K) int8 x (K,N) int8 -> (M,N) int32 of sign(x)·sign(w) products.
+
+    NOTE on padding: padded K-lanes must contribute a known constant.
+    We pad activations with +1 (act(+1) = +1) and weights with 0
+    (sign(0) = +1), so each padded lane adds exactly +1·+1 = +1 to every
+    output element; the pad count is subtracted afterwards.
+    """
+    assert x.dtype == jnp.int8 and w.dtype == jnp.int8
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2
+
+    bm_ = min(bm, _ceil(m, 8))
+    bn_ = min(bn, _ceil(n, 8))
+    bk_ = min(bk, _ceil(k, 8))
+    pad_k = (-k) % bk_
+    xp = jnp.pad(x, (((0, (-m) % bm_), (0, pad_k))), constant_values=1)
+    wp = jnp.pad(w, (((0, pad_k), (0, (-n) % bn_))))
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+
+    grid = (mp // bm_, np_ // bn_, kp // bk_)
+    out = pl.pallas_call(
+        _binary_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+        interpret=True,
+    )(xp, wp)
+    # each padded K-lane contributed (+1)*(+1) = +1 to every output element
+    return out[:m, :n] - jnp.int32(pad_k)
+
+
+def _ceil(v: int, m: int) -> int:
+    return ((v + m - 1) // m) * m

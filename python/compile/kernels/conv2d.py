@@ -1,0 +1,57 @@
+"""L1 Pallas kernel: int8 im2col convolution.
+
+CONV layers dominate three of the paper's four benchmarks (Fig 3). On the
+accelerator a CONV output is "a dot product between a filter and an input
+window" — identical to an FC neuron except for input reuse, which the Row
+Controller exploits by loading input blocks with stride awareness
+(Section 4.1). The TPU-shaped equivalent is im2col: patches are gathered
+once (a cheap gather at these sizes) and every output pixel becomes a row
+of a single MXU matmul, so one weight fetch is amortised across the whole
+feature map — the same reuse the input SRAM provides on the ASIC.
+
+The patch gather happens at the jnp level (it lowers to a static gather);
+the hot matmul is the tiled Pallas kernel from ``int8_matmul``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import int8_matmul as mm
+
+
+def im2col(x: jax.Array, kh: int, kw: int, stride: int) -> jax.Array:
+    """(H,W,C) -> (OH*OW, KH*KW*C) int8 patch matrix, VALID padding."""
+    h, w, c = x.shape
+    oh = (h - kh) // stride + 1
+    ow = (w - kw) // stride + 1
+    idx_h = (jnp.arange(oh) * stride)[:, None, None, None]
+    idx_w = (jnp.arange(ow) * stride)[None, :, None, None]
+    off_h = jnp.arange(kh)[None, None, :, None]
+    off_w = jnp.arange(kw)[None, None, None, :]
+    patches = x[idx_h + off_h, idx_w + off_w]
+    return patches.reshape(oh * ow, kh * kw * c)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "bm", "bn", "bk"))
+def conv2d_int8(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    stride: int = 1,
+    bm: int = mm.DEFAULT_BM,
+    bn: int = mm.DEFAULT_BN,
+    bk: int = mm.DEFAULT_BK,
+) -> jax.Array:
+    """int8 VALID conv: x (H,W,C), w (KH,KW,C,F) -> (OH,OW,F) int32."""
+    assert x.dtype == jnp.int8 and w.dtype == jnp.int8
+    kh, kw, c, f = w.shape
+    cols = im2col(x, kh, kw, stride)
+    wmat = w.reshape(kh * kw * c, f)
+    out = mm.int8_matmul(cols, wmat, bm=bm, bn=bn, bk=bk)
+    oh = (x.shape[0] - kh) // stride + 1
+    ow = (x.shape[1] - kw) // stride + 1
+    return out.reshape(oh, ow, f)

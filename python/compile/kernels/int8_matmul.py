@@ -1,0 +1,107 @@
+"""L1 Pallas kernel: tiled int8 x int8 -> int32 matmul.
+
+This is the base-precision dot-product engine of the accelerator's CUs
+(Section 4.3 of the paper), expressed for a TPU-class memory hierarchy:
+
+* the grid walks (M/BM, N/BN, K/BK) tiles;
+* each (BM,BK) activation tile and (BK,BN) weight tile is staged into VMEM
+  by the BlockSpecs (the HBM->VMEM schedule the paper's Row Controller
+  implements with "input blocks" in the input SRAM);
+* partials accumulate in an int32 VMEM scratch-free pattern: the output
+  block is revisited once per K-step and accumulated in place (dimension
+  semantics: K is the innermost, "arbitrary" grid axis).
+
+On a real TPU the inner ``dot_general`` maps onto the MXU with int8 inputs
+and int32 accumulation. We lower with ``interpret=True`` (CPU PJRT cannot
+execute Mosaic custom-calls); the tiling is still the real schedule and is
+what the VMEM/MXU estimates in DESIGN.md §7 are computed from.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes: MXU-friendly multiples of (8,128) that keep
+# BM*BK + BK*BN int8 bytes + BM*BN int32 bytes well under ~128 KiB of VMEM.
+DEFAULT_BM = 32
+DEFAULT_BN = 64
+DEFAULT_BK = 64
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """One (BM,BN) output tile: accumulate the current K-slab."""
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jax.lax.dot_general(
+        x_ref[...],
+        w_ref[...],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def _pad_to(a: jax.Array, m0: int, m1: int) -> jax.Array:
+    p0 = (-a.shape[0]) % m0
+    p1 = (-a.shape[1]) % m1
+    if p0 or p1:
+        a = jnp.pad(a, ((0, p0), (0, p1)))
+    return a
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def int8_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+) -> jax.Array:
+    """(M,K) int8 @ (K,N) int8 -> (M,N) int32, tiled Pallas matmul.
+
+    Shapes need not be tile-aligned; inputs are zero-padded (zeros contribute
+    nothing to integer dot products) and the result is sliced back.
+    """
+    assert x.dtype == jnp.int8 and w.dtype == jnp.int8, (x.dtype, w.dtype)
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+
+    bm_ = min(bm, _ceil_mult(m, 8))
+    bn_ = min(bn, _ceil_mult(n, 8))
+    bk_ = min(bk, _ceil_mult(k, 8))
+    xp = _pad_to(x, bm_, bk_)
+    wp = _pad_to(w, bk_, bn_)
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+
+    grid = (mp // bm_, np_ // bn_, kp // bk_)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def _ceil_mult(v: int, m: int) -> int:
+    return ((v + m - 1) // m) * m
+
+
+def vmem_bytes(bm: int = DEFAULT_BM, bn: int = DEFAULT_BN, bk: int = DEFAULT_BK) -> int:
+    """VMEM working-set estimate for one grid step (int8 in, int32 acc)."""
+    return bm * bk + bk * bn + 4 * bm * bn

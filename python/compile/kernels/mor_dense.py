@@ -1,0 +1,138 @@
+"""L1 Pallas kernel: fused Mixture-of-Rookies predicted dense layer.
+
+This is the paper's *online stage* for one FC layer, fused into a single
+VMEM-resident pipeline so the prediction never round-trips to HBM:
+
+    1. binary (±1) dot product of the activation tile and weight tile,
+    2. per-neuron fitted line  p̂ = m·p_bin + b   (dequant units),
+    3. batch-norm affine + residual on the estimate,
+    4. skip mask = (estimate < 0) AND (predictor enabled for neuron),
+    5. full int8 dot product, BN/residual/ReLU,
+    6. outputs where the mask fired are forced to 0.
+
+On the ASIC, step 5 is *physically skipped* for masked neurons (that is the
+whole point); in a dense-tensor HLO we compute everywhere and mask, which
+keeps the artifact a faithful *functional* model — the cycle-level savings
+are measured by the rust simulator, which interprets the same mask.
+
+Layout: grid walks (M/BM, N/BN); K is kept whole inside the kernel
+(per-layer K in this repo's model zoo is <= 1152, so an int8 (BM,K) slab +
+(K,BN) weights + int32 accumulators fit comfortably in VMEM; see
+``vmem_bytes``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BM = 32
+DEFAULT_BN = 64
+
+
+def _mor_dense_kernel(
+    x_ref, w_ref, m_ref, b_ref, scale_ref, shift_ref, res_ref, en_ref, dq_ref,
+    y_ref, skip_ref,
+):
+    x = x_ref[...]
+    w = w_ref[...]
+
+    # -- predictor path (binCU): ±1 matmul + fitted line ------------------
+    # activations: active/inactive (+1 iff > 0); weights: sign bit (+1 iff >= 0)
+    xs = jnp.where(x > 0, jnp.int8(1), jnp.int8(-1))
+    ws = jnp.where(w >= 0, jnp.int8(1), jnp.int8(-1))
+    p_bin = jax.lax.dot_general(
+        xs, ws, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    ).astype(jnp.float32)
+    est = p_bin * m_ref[...][None, :] + b_ref[...][None, :]
+    est = est * scale_ref[...][None, :] + shift_ref[...][None, :] + res_ref[...]
+    skip = jnp.logical_and(est < 0.0, en_ref[...][None, :])
+
+    # -- base-precision path (CU): int8 matmul + BN + residual + ReLU -----
+    full = jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    ).astype(jnp.float32) * dq_ref[0]
+    relu_in = full * scale_ref[...][None, :] + shift_ref[...][None, :] + res_ref[...]
+    y = jnp.maximum(relu_in, 0.0)
+    y_ref[...] = jnp.where(skip, 0.0, y)
+    skip_ref[...] = skip
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def mor_dense(
+    x: jax.Array,
+    w: jax.Array,
+    m: jax.Array,
+    b: jax.Array,
+    bn_scale: jax.Array,
+    bn_shift: jax.Array,
+    residual: jax.Array,
+    enabled: jax.Array,
+    dq: jax.Array,
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+):
+    """Fused predicted dense layer. See module docstring and ref.mor_dense.
+
+    x (M,K) int8 · w (K,N) int8; m/b/bn_scale/bn_shift/enabled are (N,)
+    per-neuron parameters; residual is (M,N) float32; dq is a scalar
+    dequantization factor (float_value = dq * int32_dot).
+    Returns (y (M,N) float32, skipped (M,N) bool).
+    """
+    mdim, k = x.shape
+    k2, n = w.shape
+    assert k == k2
+    bm_ = min(bm, _ceil(mdim, 8))
+    bn_ = min(bn, _ceil(n, 8))
+    pm, pn = (-mdim) % bm_, (-n) % bn_
+
+    xp = jnp.pad(x, ((0, pm), (0, 0)))
+    wp = jnp.pad(w, ((0, 0), (0, pn)))
+    mp = jnp.pad(m, (0, pn))
+    bp = jnp.pad(b, (0, pn))
+    scp = jnp.pad(bn_scale, (0, pn))
+    shp = jnp.pad(bn_shift, (0, pn))
+    rp = jnp.pad(residual, ((0, pm), (0, pn)))
+    enp = jnp.pad(enabled, (0, pn))  # pads with False: padded neurons never skip
+    dqv = jnp.asarray(dq, jnp.float32).reshape(1)
+
+    grid = (xp.shape[0] // bm_, wp.shape[1] // bn_)
+    y, skip = pl.pallas_call(
+        _mor_dense_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn_), lambda i, j: (0, j)),
+            pl.BlockSpec((bn_,), lambda i, j: (j,)),
+            pl.BlockSpec((bn_,), lambda i, j: (j,)),
+            pl.BlockSpec((bn_,), lambda i, j: (j,)),
+            pl.BlockSpec((bn_,), lambda i, j: (j,)),
+            pl.BlockSpec((bm_, bn_), lambda i, j: (i, j)),
+            pl.BlockSpec((bn_,), lambda i, j: (j,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm_, bn_), lambda i, j: (i, j)),
+            pl.BlockSpec((bm_, bn_), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((xp.shape[0], wp.shape[1]), jnp.float32),
+            jax.ShapeDtypeStruct((xp.shape[0], wp.shape[1]), jnp.bool_),
+        ],
+        interpret=True,
+    )(xp, wp, mp, bp, scp, shp, rp, enp, dqv)
+    return y[:mdim, :n], skip[:mdim, :n]
+
+
+def _ceil(v: int, mult: int) -> int:
+    return ((v + mult - 1) // mult) * mult
+
+
+def vmem_bytes(bm: int, bn: int, k: int) -> int:
+    """Working set: int8 x-slab + int8 w-slab (x2 for ±1 copies), f32 acc x2,
+    (N,) params x5, residual tile."""
+    return 2 * (bm * k + k * bn) + 4 * bm * bn * 3 + 4 * bn * 5

@@ -1,0 +1,120 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the *correctness contracts*: each kernel's pytest sweeps shapes and
+dtypes with hypothesis and asserts exact (integer) or allclose (float)
+agreement against the function of the same name here.
+
+Conventions shared with the rust functional engine (rust/src/engine):
+
+* "base precision" dot product: int8 x int8 accumulated in int32.
+* "binary" dot product: sign(w)·act(x) with
+      sign(w) := +1 if w >= 0 else -1   (the literal sign bit), and
+      act(x)  := +1 if x >  0 else -1   (active / inactive).
+  i.e. p_bin in [-K, K] for K-element vectors. The asymmetric zero handling
+  matters: most layer inputs are post-ReLU and therefore non-negative, so a
+  ">= 0" activation convention would binarize every input to +1 and make
+  p_bin a constant (zero correlation). Treating exact zeros as "inactive"
+  (-1) preserves the information ReLU sparsity carries — this is what makes
+  the paper's self-correlation (Fig 4/5) reproducible on post-ReLU layers.
+* fitted line: p̂_base = m * p_bin + b, in dequantized (float) units.
+* MoR skip rule: a neuron output is forced to zero iff the *estimated* ReLU
+  input (after batch-norm / residual) is negative.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """(M,K) int8 @ (K,N) int8 -> (M,N) int32."""
+    return jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+
+
+def sign_pm1(v: jax.Array) -> jax.Array:
+    """Weight binarization: +1 for v >= 0 else -1 (the literal sign bit)."""
+    return jnp.where(v >= 0, jnp.int8(1), jnp.int8(-1))
+
+
+def act_pm1(v: jax.Array) -> jax.Array:
+    """Activation binarization: +1 for v > 0 else -1 (active/inactive)."""
+    return jnp.where(v > 0, jnp.int8(1), jnp.int8(-1))
+
+
+def binary_dot(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Binary (±1) dot products: (M,K) x (K,N) int8 -> (M,N) int32.
+
+    Equivalent to K - 2*popcount(activebit(x) XOR signbit(w)) per pair.
+    """
+    return int8_matmul(act_pm1(x), sign_pm1(w))
+
+
+def fitted_line(p_bin: jax.Array, m: jax.Array, b: jax.Array) -> jax.Array:
+    """Per-neuron affine map from binary dot product to estimated base dot."""
+    return p_bin.astype(jnp.float32) * m[None, :] + b[None, :]
+
+
+def bn_affine(v: jax.Array, scale: jax.Array, shift: jax.Array) -> jax.Array:
+    """Folded batch-norm: v*scale + shift (scale = gamma/sigma, shift = beta - mu*gamma/sigma)."""
+    return v * scale[None, :] + shift[None, :]
+
+
+def mor_dense(
+    x: jax.Array,          # (M, K) int8 activations
+    w: jax.Array,          # (K, N) int8 weights
+    m: jax.Array,          # (N,) fitted-line slope (dequant units per bin-count)
+    b: jax.Array,          # (N,) fitted-line intercept
+    bn_scale: jax.Array,   # (N,) folded BN scale (ones if no BN)
+    bn_shift: jax.Array,   # (N,) folded BN shift (zeros if no BN)
+    residual: jax.Array,   # (M, N) float residual input (zeros if none)
+    enabled: jax.Array,    # (N,) bool: predictor enabled for this neuron (c >= T)
+    dq: float,             # dequant scale: float_value = dq * int32_dot
+):
+    """Fused MoR-predicted dense layer (the paper's online stage for one layer).
+
+    Returns (y, skipped):
+      y        (M,N) float32 — post-BN, post-residual, post-ReLU outputs, with
+               predicted-zero neurons forced to 0.0
+      skipped  (M,N) bool    — True where the prediction skipped the neuron.
+
+    The oracle computes the full dot product everywhere and then applies the
+    skip mask; hardware (and the rust engine) skips the computation itself.
+    """
+    p_bin = binary_dot(x, w)
+    est_dot = fitted_line(p_bin, m, b)                    # dequant units
+    est_relu_in = bn_affine(est_dot, bn_scale, bn_shift) + residual
+    skip = jnp.logical_and(est_relu_in < 0.0, enabled[None, :])
+
+    full = int8_matmul(x, w).astype(jnp.float32) * dq
+    relu_in = bn_affine(full, bn_scale, bn_shift) + residual
+    y = jnp.maximum(relu_in, 0.0)
+    y = jnp.where(skip, 0.0, y)
+    return y, skip
+
+
+def im2col(x: jax.Array, kh: int, kw: int, stride: int) -> jax.Array:
+    """(H,W,C) -> (OH*OW, KH*KW*C) patches, VALID padding, row-major windows."""
+    h, w, c = x.shape
+    oh = (h - kh) // stride + 1
+    ow = (w - kw) // stride + 1
+    idx_h = (jnp.arange(oh) * stride)[:, None, None, None]
+    idx_w = (jnp.arange(ow) * stride)[None, :, None, None]
+    off_h = jnp.arange(kh)[None, None, :, None]
+    off_w = jnp.arange(kw)[None, None, None, :]
+    patches = x[idx_h + off_h, idx_w + off_w]  # (OH, OW, KH, KW, C)
+    return patches.reshape(oh * ow, kh * kw * c)
+
+
+def conv2d_int8(x: jax.Array, w: jax.Array, stride: int = 1) -> jax.Array:
+    """int8 conv via im2col: x (H,W,C), w (KH,KW,C,F) -> (OH,OW,F) int32."""
+    kh, kw, c, f = w.shape
+    cols = im2col(x, kh, kw, stride)                   # (P, KH*KW*C)
+    wmat = w.reshape(kh * kw * c, f)                   # (KH*KW*C, F)
+    out = int8_matmul(cols, wmat)                      # (P, F)
+    h = x.shape[0]
+    oh = (h - kh) // stride + 1
+    ow = (x.shape[1] - kw) // stride + 1
+    return out.reshape(oh, ow, f)

@@ -1,0 +1,355 @@
+"""L2: the model zoo — architecturally faithful, scaled-down versions of the
+paper's four benchmarks (Section 5.1), expressed as a uniform layer graph.
+
+* ``tds``       — Time-Depth-Separable speech blocks (Fig 2a): 1-D conv +
+                  ReLU, FC + ReLU, FC without ReLU. No batch-norm (exercises
+                  the plain dot-product → ReLU path).
+* ``cnn10``     — ten conv3x3 + BN + ReLU layers (Fig 2b), the paper's CNN10.
+* ``darknet19m``— nineteen conv layers in the Darknet19 3x3/1x1 alternating
+                  pattern with maxpools, BN + ReLU (Fig 2b).
+* ``resnet18m`` — residual basic blocks (Fig 2c): BN *and* residual
+                  connections ahead of ReLU, the hardest case for the
+                  predictor (both can flip the sign of the ReLU input).
+
+Everything is NHWC; sequences are (T, 1, F) so one engine covers both
+domains (the rust engine mirrors this exactly).
+
+Two integer forward implementations share the layer graph (see quantize.py):
+a pure-jnp one (calibration speed) and a Pallas-kernel one (the AOT
+artifact); tests assert they agree bit-exactly in the integer domain.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# --------------------------------------------------------------------------
+# Layer graph
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Conv:
+    """2-D convolution. kw=1 + w-dim-1 input makes it a 1-D (temporal) conv."""
+
+    kh: int
+    kw: int
+    cout: int
+    stride: int = 1
+    pad: str = "same"  # 'same' | 'valid'
+    bn: bool = False
+    relu: bool = True
+    res_from: Optional[int] = None  # node index whose float output is added pre-ReLU
+
+
+@dataclass(frozen=True)
+class FC:
+    cout: int
+    bn: bool = False
+    relu: bool = True
+    res_from: Optional[int] = None
+
+
+@dataclass(frozen=True)
+class MaxPool:
+    size: int = 2
+
+
+@dataclass(frozen=True)
+class GAP:
+    """Global average pool over H and W; output shape (N, 1, 1, C)."""
+
+
+@dataclass(frozen=True)
+class ReLUNode:
+    """Standalone ReLU applied to the previous node's output (post-residual)."""
+
+
+@dataclass(frozen=True)
+class ModelDef:
+    name: str
+    input_shape: Tuple[int, int, int]  # (H, W, C)
+    nodes: List[object] = field(default_factory=list)
+    num_classes: int = 10
+
+    def relu_layers(self) -> List[int]:
+        """Indices of compute nodes whose output feeds a ReLU (predictable).
+
+        A Conv/FC followed immediately by a standalone ReLUNode also counts
+        (resnet blocks put the post-residual ReLU in its own node).
+        """
+        idxs = []
+        for i, nd in enumerate(self.nodes):
+            if not isinstance(nd, (Conv, FC)):
+                continue
+            if nd.relu:
+                idxs.append(i)
+            elif i + 1 < len(self.nodes) and isinstance(self.nodes[i + 1], ReLUNode):
+                idxs.append(i)
+        return idxs
+
+
+# --------------------------------------------------------------------------
+# Model definitions
+# --------------------------------------------------------------------------
+
+
+def tds() -> ModelDef:
+    """3 TDS blocks (C=64) on (32, 1, 40) mel-like frames + classifier."""
+    nodes: List[object] = [Conv(5, 1, 64, pad="same", relu=True)]  # entry conv
+    for _ in range(3):
+        nodes.append(Conv(5, 1, 64, pad="same", relu=True))  # temporal conv
+        nodes.append(FC(64, relu=True))                      # pointwise FC
+        nodes.append(FC(64, relu=False))                     # FC without ReLU
+    nodes.append(GAP())
+    nodes.append(FC(10, relu=False))
+    return ModelDef("tds", (32, 1, 40), nodes)
+
+
+def cnn10() -> ModelDef:
+    """Ten conv3x3 + BN + ReLU (Fig 2b) on 16x16x3, then GAP + FC."""
+    chans = [16, 16, 32, 32, 48, 48, 64, 64, 96, 96]
+    strides = [1, 1, 2, 1, 1, 2, 1, 1, 1, 1]
+    nodes: List[object] = [
+        Conv(3, 3, c, stride=s, bn=True, relu=True) for c, s in zip(chans, strides)
+    ]
+    nodes.append(GAP())
+    nodes.append(FC(10, relu=False))
+    return ModelDef("cnn10", (16, 16, 3), nodes)
+
+
+def darknet19m() -> ModelDef:
+    """Darknet19's 3x3/1x1 alternation, channels scaled /8, 16x16 input."""
+    nodes: List[object] = []
+
+    def c3(c):
+        nodes.append(Conv(3, 3, c, bn=True, relu=True))
+
+    def c1(c):
+        nodes.append(Conv(1, 1, c, bn=True, relu=True))
+
+    c3(16)
+    nodes.append(MaxPool(2))
+    c3(32)
+    nodes.append(MaxPool(2))
+    c3(64), c1(32), c3(64)
+    nodes.append(MaxPool(2))
+    c3(96), c1(48), c3(96)
+    c3(128), c1(64), c3(128), c1(64), c3(128)
+    c3(160), c1(80), c3(160), c1(80), c3(160)
+    nodes.append(Conv(1, 1, 10, bn=False, relu=False))  # darknet-style linear head
+    nodes.append(GAP())
+    return ModelDef("darknet19m", (16, 16, 3), nodes)
+
+
+def resnet18m() -> ModelDef:
+    """ResNet basic blocks (Fig 2c): 4 stages x 2 blocks, channels /4."""
+    nodes: List[object] = [Conv(3, 3, 16, bn=True, relu=True)]  # stem
+
+    def block(cout: int, stride: int):
+        """[projection?] conv-bn-relu, conv-bn (+ residual), relu."""
+        entry = len(nodes) - 1  # node producing the block input
+        if stride != 1 or _node_cout(nodes[entry]) != cout:
+            # projection shortcut: 1x1 conv + BN, no ReLU; consumes the same
+            # input as the conv that follows it (see `consumes`).
+            nodes.append(Conv(1, 1, cout, stride=stride, bn=True, relu=False))
+            shortcut = len(nodes) - 1
+        else:
+            shortcut = entry
+        nodes.append(Conv(3, 3, cout, stride=stride, bn=True, relu=True))
+        nodes.append(Conv(3, 3, cout, bn=True, relu=False, res_from=shortcut))
+        nodes.append(ReLUNode())
+
+    for cout, stride in [(16, 1), (16, 1), (32, 2), (32, 1), (48, 2), (48, 1), (64, 2), (64, 1)]:
+        block(cout, stride)
+    nodes.append(GAP())
+    nodes.append(FC(10, relu=False))
+    return ModelDef("resnet18m", (16, 16, 3), nodes)
+
+
+def _node_cout(nd) -> int:
+    return nd.cout if isinstance(nd, (Conv, FC)) else -1
+
+
+ZOO = {"tds": tds, "cnn10": cnn10, "darknet19m": darknet19m, "resnet18m": resnet18m}
+
+
+# --------------------------------------------------------------------------
+# Graph topology helpers (shared with quantize.py and mirrored in rust)
+# --------------------------------------------------------------------------
+
+
+def is_projection(mdef: ModelDef, i: int) -> bool:
+    """Projection shortcuts: 1x1 Conv, no ReLU, referenced by a later res_from."""
+    nd = mdef.nodes[i]
+    if not (isinstance(nd, Conv) and nd.kh == 1 and nd.kw == 1 and not nd.relu):
+        return False
+    return any(getattr(other, "res_from", None) == i for other in mdef.nodes[i + 1 :])
+
+
+def consumes(mdef: ModelDef, i: int) -> int:
+    """Index of the node whose output node i consumes (-1 = model input).
+
+    A projection shortcut is a *side branch*: it consumes the same input as
+    the conv that follows it, so that conv skips over it in the chain.
+    """
+    if i == 0:
+        return -1
+    prev = i - 1
+    if is_projection(mdef, prev):
+        return prev - 1
+    return prev
+
+
+def input_of(mdef: ModelDef, i: int) -> int:
+    """Like `consumes`, but for the projection node itself (same as next conv)."""
+    if is_projection(mdef, i):
+        return i - 1
+    return consumes(mdef, i)
+
+
+def node_shapes(mdef: ModelDef) -> List[Tuple[int, int, int]]:
+    """Static (H, W, C) output shape of every node."""
+    shapes: List[Tuple[int, int, int]] = []
+    for i, nd in enumerate(mdef.nodes):
+        src = input_of(mdef, i)
+        h, w, c = mdef.input_shape if src == -1 else shapes[src]
+        if isinstance(nd, Conv):
+            if nd.pad == "same":
+                h, w = -(-h // nd.stride), -(-w // nd.stride)
+            else:
+                h = (h - nd.kh) // nd.stride + 1
+                w = (w - nd.kw) // nd.stride + 1
+            c = nd.cout
+        elif isinstance(nd, FC):
+            c = nd.cout
+        elif isinstance(nd, MaxPool):
+            h, w = h // nd.size, max(1, w // nd.size)
+        elif isinstance(nd, GAP):
+            h, w = 1, 1
+        # ReLUNode keeps shape
+        shapes.append((h, w, c))
+    return shapes
+
+
+def mac_counts(mdef: ModelDef) -> List[int]:
+    """MACs per node (0 for non-compute nodes) — drives Fig 1/3 and the sim."""
+    shapes = node_shapes(mdef)
+    counts = []
+    for i, nd in enumerate(mdef.nodes):
+        src = input_of(mdef, i)
+        in_shape = mdef.input_shape if src == -1 else shapes[src]
+        if isinstance(nd, Conv):
+            oh, ow, _ = shapes[i]
+            counts.append(oh * ow * nd.cout * nd.kh * nd.kw * in_shape[2])
+        elif isinstance(nd, FC):
+            oh, ow, _ = shapes[i]
+            counts.append(oh * ow * nd.cout * in_shape[2])
+        else:
+            counts.append(0)
+    return counts
+
+
+# --------------------------------------------------------------------------
+# Parameters & initialisation
+# --------------------------------------------------------------------------
+
+
+def init_params(mdef: ModelDef, seed: int = 0):
+    """He-init weights; BN starts at identity. Returns (params, bn_state)."""
+    key = jax.random.PRNGKey(seed)
+    shapes = node_shapes(mdef)
+    params, state = [], []
+    for i, nd in enumerate(mdef.nodes):
+        src = input_of(mdef, i)
+        cin = (mdef.input_shape if src == -1 else shapes[src])[2]
+        p, s = {}, {}
+        if isinstance(nd, Conv):
+            key, k1 = jax.random.split(key)
+            fan_in = nd.kh * nd.kw * cin
+            p["w"] = jax.random.normal(k1, (nd.kh, nd.kw, cin, nd.cout)) * np.sqrt(
+                2.0 / fan_in
+            )
+            if nd.bn:
+                p["gamma"], p["beta"] = jnp.ones((nd.cout,)), jnp.zeros((nd.cout,))
+                s["mu"], s["var"] = jnp.zeros((nd.cout,)), jnp.ones((nd.cout,))
+        elif isinstance(nd, FC):
+            key, k1 = jax.random.split(key)
+            p["w"] = jax.random.normal(k1, (cin, nd.cout)) * np.sqrt(2.0 / cin)
+            if nd.bn:
+                p["gamma"], p["beta"] = jnp.ones((nd.cout,)), jnp.zeros((nd.cout,))
+                s["mu"], s["var"] = jnp.zeros((nd.cout,)), jnp.ones((nd.cout,))
+        params.append(p)
+        state.append(s)
+    return params, state
+
+
+# --------------------------------------------------------------------------
+# Float forward (training / fp32 eval)
+# --------------------------------------------------------------------------
+
+
+def forward(mdef: ModelDef, params, state, x, train: bool = False, momentum=0.9):
+    """Batched float forward. x: (N,H,W,C). Returns (logits, new_state)."""
+    outs: List[jax.Array] = []
+    new_state = [dict(s) for s in state]
+    for i, nd in enumerate(mdef.nodes):
+        src = input_of(mdef, i)
+        cur = x if src == -1 else outs[src]
+        if isinstance(nd, Conv):
+            pad = "SAME" if nd.pad == "same" else "VALID"
+            v = jax.lax.conv_general_dilated(
+                cur,
+                params[i]["w"],
+                (nd.stride, nd.stride),
+                pad,
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            )
+            v, new_state[i] = _bn(nd, params[i], state[i], v, train, momentum)
+            if nd.res_from is not None:
+                v = v + outs[nd.res_from]
+            if nd.relu:
+                v = jnp.maximum(v, 0.0)
+        elif isinstance(nd, FC):
+            v = jnp.einsum("nhwc,cf->nhwf", cur, params[i]["w"])
+            v, new_state[i] = _bn(nd, params[i], state[i], v, train, momentum)
+            if nd.res_from is not None:
+                v = v + outs[nd.res_from]
+            if nd.relu:
+                v = jnp.maximum(v, 0.0)
+        elif isinstance(nd, ReLUNode):
+            v = jnp.maximum(cur, 0.0)
+        elif isinstance(nd, MaxPool):
+            kw = min(nd.size, cur.shape[2])
+            v = jax.lax.reduce_window(
+                cur, -jnp.inf, jax.lax.max, (1, nd.size, kw, 1), (1, nd.size, kw, 1), "VALID"
+            )
+        elif isinstance(nd, GAP):
+            v = cur.mean(axis=(1, 2), keepdims=True)
+        else:  # pragma: no cover
+            raise TypeError(nd)
+        outs.append(v)
+    return outs[-1].reshape(x.shape[0], -1), new_state
+
+
+def _bn(nd, p, s, v, train, momentum):
+    if not getattr(nd, "bn", False):
+        return v, dict(s)
+    axes = tuple(range(v.ndim - 1))
+    if train:
+        mu = v.mean(axis=axes)
+        var = v.var(axis=axes)
+        new_s = {
+            "mu": momentum * s["mu"] + (1 - momentum) * mu,
+            "var": momentum * s["var"] + (1 - momentum) * var,
+        }
+    else:
+        mu, var = s["mu"], s["var"]
+        new_s = dict(s)
+    vhat = (v - mu) / jnp.sqrt(var + 1e-5)
+    return vhat * p["gamma"] + p["beta"], new_s

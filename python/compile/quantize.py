@@ -1,0 +1,280 @@
+"""Post-training symmetric int8 quantization + the integer deploy forward.
+
+The paper's accelerator uses an 8-bit baseline precision (Table 1: "CU
+precision 8 b") with int32 partial-sum registers. We quantize post-training:
+
+* weights: per-layer symmetric, ``sw = max|w| / 127`` → int8;
+* activations: per-layer-input symmetric, ``sx`` from the 99.9th percentile
+  of |input| over the calibration subset → int8 with saturation.
+* batch-norm folded to an affine (scale, shift) from the running statistics:
+  ``relu_in = (dot * sw * sx) * bn_scale + bn_shift (+ residual)``.
+
+Dataflow contract (mirrored bit-for-bit by rust/src/engine):
+
+* activations travel between nodes as *float32*;
+* every compute node quantizes its own input with its ``sx``;
+* integer dot products are exact (int8 x int8 → int32);
+* everything after the dot product (dequant, BN, residual, ReLU, GAP) is
+  float32 with the same operation order.
+
+``quant_forward`` (pure jnp) is the fast path used for calibration and
+accuracy eval; ``deploy_forward`` routes the dot products through the Pallas
+kernels and is what ``aot.py`` lowers to the HLO artifact. A pytest asserts
+both agree exactly in the integer domain.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from .kernels import conv2d as kconv
+from .kernels import int8_matmul as kmm
+
+
+@dataclass
+class QuantLayer:
+    """Quantized parameters for one compute node (Conv/FC)."""
+
+    w_int8: np.ndarray            # conv: (KH,KW,CIN,COUT); fc: (CIN,COUT)
+    sw: float                     # weight scale
+    sx: float                     # input activation scale
+    bn_scale: Optional[np.ndarray]  # (COUT,) folded, None if no BN
+    bn_shift: Optional[np.ndarray]
+
+
+@dataclass
+class QuantModel:
+    mdef: M.ModelDef
+    layers: Dict[int, QuantLayer]  # keyed by node index
+    sx0: float                     # model-input scale
+
+    def num_neurons(self, i: int) -> int:
+        nd = self.mdef.nodes[i]
+        return nd.cout
+
+
+def quantize(
+    mdef: M.ModelDef, params, state, calib_x: jax.Array, pct: float = 99.9
+) -> QuantModel:
+    """Fold BN, pick scales from the calibration batch, quantize weights."""
+    # 1. collect float activations at every node input to pick sx
+    outs = _float_node_outputs(mdef, params, state, calib_x)
+    layers: Dict[int, QuantLayer] = {}
+    sx0 = _scale_of(calib_x, pct)
+    for i, nd in enumerate(mdef.nodes):
+        if not isinstance(nd, (M.Conv, M.FC)):
+            continue
+        src = M.input_of(mdef, i)
+        x_in = calib_x if src == -1 else outs[src]
+        sx = _scale_of(x_in, pct)
+        w = np.asarray(params[i]["w"])
+        sw = float(np.abs(w).max() / 127.0) or 1.0
+        w_int8 = np.clip(np.round(w / sw), -127, 127).astype(np.int8)
+        bn_scale = bn_shift = None
+        if nd.bn:
+            gamma = np.asarray(params[i]["gamma"])
+            beta = np.asarray(params[i]["beta"])
+            mu = np.asarray(state[i]["mu"])
+            var = np.asarray(state[i]["var"])
+            bn_scale = (gamma / np.sqrt(var + 1e-5)).astype(np.float32)
+            bn_shift = (beta - mu * bn_scale).astype(np.float32)
+        layers[i] = QuantLayer(w_int8, sw, sx, bn_scale, bn_shift)
+    return QuantModel(mdef, layers, sx0)
+
+
+def _scale_of(x, pct: float) -> float:
+    a = np.asarray(jnp.abs(x))
+    v = float(np.percentile(a, pct))
+    return (v / 127.0) or 1.0
+
+
+def _float_node_outputs(mdef, params, state, x) -> List[jax.Array]:
+    # M.forward doesn't expose node outputs; inline a capture version
+    outs: List[jax.Array] = []
+    for i, nd in enumerate(mdef.nodes):
+        src = M.input_of(mdef, i)
+        cur = x if src == -1 else outs[src]
+        if isinstance(nd, M.Conv):
+            pad = "SAME" if nd.pad == "same" else "VALID"
+            v = jax.lax.conv_general_dilated(
+                cur, params[i]["w"], (nd.stride, nd.stride), pad,
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            )
+            v, _ = M._bn(nd, params[i], state[i], v, False, 0.9)
+            if nd.res_from is not None:
+                v = v + outs[nd.res_from]
+            if nd.relu:
+                v = jnp.maximum(v, 0.0)
+        elif isinstance(nd, M.FC):
+            v = jnp.einsum("nhwc,cf->nhwf", cur, params[i]["w"])
+            v, _ = M._bn(nd, params[i], state[i], v, False, 0.9)
+            if nd.res_from is not None:
+                v = v + outs[nd.res_from]
+            if nd.relu:
+                v = jnp.maximum(v, 0.0)
+        elif isinstance(nd, M.ReLUNode):
+            v = jnp.maximum(cur, 0.0)
+        elif isinstance(nd, M.MaxPool):
+            kw = min(nd.size, cur.shape[2])
+            v = jax.lax.reduce_window(
+                cur, -jnp.inf, jax.lax.max, (1, nd.size, kw, 1), (1, nd.size, kw, 1), "VALID"
+            )
+        elif isinstance(nd, M.GAP):
+            v = cur.mean(axis=(1, 2), keepdims=True)
+        outs.append(v)
+    return outs
+
+
+# --------------------------------------------------------------------------
+# Integer forward (pure jnp) — calibration/eval fast path
+# --------------------------------------------------------------------------
+
+
+def quantize_act(x: jax.Array, sx: float) -> jax.Array:
+    return jnp.clip(jnp.round(x / sx), -127, 127).astype(jnp.int8)
+
+
+def quant_forward(
+    qm: QuantModel, x: jax.Array, collect: bool = False
+) -> Tuple[jax.Array, Dict[int, Tuple[jax.Array, jax.Array]]]:
+    """Integer forward on a float batch x (N,H,W,C).
+
+    Returns (logits, taps); when ``collect`` is True, taps[i] holds, for
+    every ReLU compute node i, a pair of (N*OH*OW, COUT) float32 matrices:
+    (binary dot product counts, dequantized base dot products pre-BN) — the
+    raw series the offline regression fits (Section 3.2.1).
+    """
+    mdef = qm.mdef
+    outs: List[jax.Array] = []
+    taps: Dict[int, Tuple[jax.Array, jax.Array]] = {}
+    relu_set = set(mdef.relu_layers())
+    for i, nd in enumerate(mdef.nodes):
+        src = M.input_of(mdef, i)
+        cur = x if src == -1 else outs[src]
+        if isinstance(nd, (M.Conv, M.FC)):
+            ql = qm.layers[i]
+            xq = quantize_act(cur, ql.sx)
+            wq = jnp.asarray(ql.w_int8)
+            if isinstance(nd, M.Conv):
+                pad = "SAME" if nd.pad == "same" else "VALID"
+                dot = jax.lax.conv_general_dilated(
+                    xq, wq, (nd.stride, nd.stride), pad,
+                    dimension_numbers=("NHWC", "HWIO", "NHWC"),
+                    preferred_element_type=jnp.int32,
+                )
+                if collect and i in relu_set:
+                    xs = jnp.where(xq > 0, jnp.int8(1), jnp.int8(-1))
+                    ws = jnp.where(wq >= 0, jnp.int8(1), jnp.int8(-1))
+                    pbin = jax.lax.conv_general_dilated(
+                        xs, ws, (nd.stride, nd.stride), pad,
+                        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+                        preferred_element_type=jnp.int32,
+                    )
+                    # The conv zero-pads the *already binarized* tensor, so
+                    # SAME-padding border lanes contribute 0 to p_bin (they
+                    # also contribute 0 to the base dot). The rust engine
+                    # reproduces this: binarized padding cells are 0, interior
+                    # cells are ±1.
+                    taps[i] = (
+                        pbin.reshape(-1, nd.cout).astype(jnp.float32),
+                        dot.reshape(-1, nd.cout).astype(jnp.float32)
+                        * (ql.sw * ql.sx),
+                    )
+            else:
+                dot = jax.lax.dot_general(
+                    xq, wq, (((3,), (0,)), ((), ())),
+                    preferred_element_type=jnp.int32,
+                )
+                if collect and i in relu_set:
+                    xs = jnp.where(xq > 0, jnp.int8(1), jnp.int8(-1))
+                    ws = jnp.where(wq >= 0, jnp.int8(1), jnp.int8(-1))
+                    pbin = jax.lax.dot_general(
+                        xs, ws, (((3,), (0,)), ((), ())),
+                        preferred_element_type=jnp.int32,
+                    )
+                    taps[i] = (
+                        pbin.reshape(-1, nd.cout).astype(jnp.float32),
+                        dot.reshape(-1, nd.cout).astype(jnp.float32)
+                        * (ql.sw * ql.sx),
+                    )
+            v = dot.astype(jnp.float32) * (ql.sw * ql.sx)
+            if ql.bn_scale is not None:
+                v = v * jnp.asarray(ql.bn_scale) + jnp.asarray(ql.bn_shift)
+            if nd.res_from is not None:
+                v = v + outs[nd.res_from]
+            if nd.relu:
+                v = jnp.maximum(v, 0.0)
+        elif isinstance(nd, M.ReLUNode):
+            v = jnp.maximum(cur, 0.0)
+        elif isinstance(nd, M.MaxPool):
+            kw = min(nd.size, cur.shape[2])
+            v = jax.lax.reduce_window(
+                cur, -jnp.inf, jax.lax.max, (1, nd.size, kw, 1), (1, nd.size, kw, 1), "VALID"
+            )
+        elif isinstance(nd, M.GAP):
+            v = cur.mean(axis=(1, 2), keepdims=True)
+        outs.append(v)
+    return outs[-1].reshape(x.shape[0], -1), taps
+
+
+# --------------------------------------------------------------------------
+# Deploy forward (Pallas kernels) — the function aot.py lowers to HLO
+# --------------------------------------------------------------------------
+
+
+def deploy_forward(qm: QuantModel, x: jax.Array) -> jax.Array:
+    """Single-sample integer forward through the Pallas kernels.
+
+    x: (H, W, C) float32. Returns (num_classes,) float32 logits. The conv
+    dot products run on kernels.conv2d/int8_matmul so that the lowered HLO
+    artifact contains the L1 kernels (interpret=True lowers them to plain
+    HLO ops executable by the rust PJRT CPU client).
+    """
+    mdef = qm.mdef
+    outs: List[jax.Array] = []
+    for i, nd in enumerate(mdef.nodes):
+        src = M.input_of(mdef, i)
+        cur = x if src == -1 else outs[src]
+        if isinstance(nd, (M.Conv, M.FC)):
+            ql = qm.layers[i]
+            xq = quantize_act(cur, ql.sx)
+            wq = jnp.asarray(ql.w_int8)
+            if isinstance(nd, M.Conv):
+                if nd.pad == "same":
+                    ph = _same_pad(cur.shape[0], nd.kh, nd.stride)
+                    pw = _same_pad(cur.shape[1], nd.kw, nd.stride)
+                    xq = jnp.pad(xq, (ph, pw, (0, 0)))
+                dot = kconv.conv2d_int8(xq, wq, stride=nd.stride)
+            else:
+                h, w, c = cur.shape
+                dot = kmm.int8_matmul(xq.reshape(h * w, c), wq).reshape(h, w, nd.cout)
+            v = dot.astype(jnp.float32) * (ql.sw * ql.sx)
+            if ql.bn_scale is not None:
+                v = v * jnp.asarray(ql.bn_scale) + jnp.asarray(ql.bn_shift)
+            if nd.res_from is not None:
+                v = v + outs[nd.res_from]
+            if nd.relu:
+                v = jnp.maximum(v, 0.0)
+        elif isinstance(nd, M.ReLUNode):
+            v = jnp.maximum(cur, 0.0)
+        elif isinstance(nd, M.MaxPool):
+            kw2 = min(nd.size, cur.shape[1])
+            v = jax.lax.reduce_window(
+                cur, -jnp.inf, jax.lax.max, (nd.size, kw2, 1), (nd.size, kw2, 1), "VALID"
+            )
+        elif isinstance(nd, M.GAP):
+            v = cur.mean(axis=(0, 1), keepdims=True)
+        outs.append(v)
+    return outs[-1].reshape(-1)
+
+
+def _same_pad(size: int, k: int, stride: int) -> Tuple[int, int]:
+    out = -(-size // stride)
+    total = max(0, (out - 1) * stride + k - size)
+    return total // 2, total - total // 2

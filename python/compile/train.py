@@ -1,0 +1,125 @@
+"""Build-time training of the model zoo on the synthetic datasets.
+
+The paper evaluates *pre-trained* networks; the predictor never touches
+training. We therefore only need models trained well enough that their
+weight/activation statistics are those of a converged classifier (mixed
+positive/negative dot products, class-selective filters). A few hundred
+Adam steps on the synthetic tasks reach >90% test accuracy for every model.
+
+No optax in the offline vendor set — Adam is implemented inline.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datasets, model as M
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_update(params, grads, opt, lr=2e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = opt["t"] + 1
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, opt["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, opt["v"], grads)
+    mhat_scale = 1.0 / (1 - b1**t)
+    vhat_scale = 1.0 / (1 - b2**t)
+    new_params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params,
+        m,
+        v,
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def train_model(
+    mdef: M.ModelDef,
+    steps: int = 400,
+    batch: int = 64,
+    lr: float = 2e-3,
+    seed: int = 0,
+    log_every: int = 100,
+) -> Tuple[list, list, dict]:
+    """Train; returns (params, bn_state, info). info has loss curve + accuracy."""
+    if mdef.input_shape[1] == 1:  # sequence model
+        xtr, ytr, xte, yte = datasets.sequence_dataset()
+        xtr = xtr[:, :, None, :]  # (N,T,1,F)
+        xte = xte[:, :, None, :]
+    else:
+        xtr, ytr, xte, yte = datasets.image_dataset()
+
+    params, state = M.init_params(mdef, seed)
+    opt = adam_init(params)
+
+    def loss_fn(params, state, xb, yb):
+        logits, new_state = M.forward(mdef, params, state, xb, train=True)
+        return cross_entropy(logits, yb), new_state
+
+    @jax.jit
+    def step_fn(params, state, opt, xb, yb):
+        (loss, new_state), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, state, xb, yb
+        )
+        params, opt = adam_update(params, grads, opt, lr)
+        return params, new_state, opt, loss
+
+    rng = np.random.default_rng(seed)
+    n = xtr.shape[0]
+    losses = []
+    t0 = time.time()
+    for s in range(steps):
+        idx = rng.integers(0, n, size=batch)
+        params, state, opt, loss = step_fn(params, state, opt, xtr[idx], ytr[idx])
+        losses.append(float(loss))
+        if log_every and (s + 1) % log_every == 0:
+            print(f"  [{mdef.name}] step {s+1}/{steps} loss={float(loss):.4f}")
+
+    acc = float(accuracy(mdef, params, state, xte, yte))
+    info = {
+        "losses": losses,
+        "test_accuracy": acc,
+        "train_seconds": time.time() - t0,
+        "steps": steps,
+    }
+    print(f"  [{mdef.name}] test top-1 = {acc*100:.1f}%  ({info['train_seconds']:.0f}s)")
+    return params, state, info
+
+
+def accuracy(mdef, params, state, x, y, batch: int = 256) -> float:
+    hits = 0
+    for i in range(0, x.shape[0], batch):
+        logits, _ = M.forward(mdef, params, state, x[i : i + batch], train=False)
+        hits += int((jnp.argmax(logits, axis=1) == y[i : i + batch]).sum())
+    return hits / x.shape[0]
+
+
+def test_split(mdef: M.ModelDef):
+    """The (x_test, y_test) split a model is evaluated on (4-D inputs)."""
+    if mdef.input_shape[1] == 1:
+        _, _, xte, yte = datasets.sequence_dataset()
+        return xte[:, :, None, :], yte
+    _, _, xte, yte = datasets.image_dataset()
+    return xte, yte
+
+
+def calib_split(mdef: M.ModelDef, n: int = 128):
+    """Calibration subset drawn from *training* data (as the paper does)."""
+    if mdef.input_shape[1] == 1:
+        xtr, ytr, _, _ = datasets.sequence_dataset()
+        return xtr[:n, :, None, :], ytr[:n]
+    xtr, ytr, _, _ = datasets.image_dataset()
+    return xtr[:n], ytr[:n]

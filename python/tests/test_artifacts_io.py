@@ -1,0 +1,99 @@
+"""Binary artifact format round-trips (the rust loaders parse these bytes)."""
+
+from __future__ import annotations
+
+import os
+import struct
+import tempfile
+
+import jax.numpy as jnp
+import numpy as np
+
+import compile.artifacts_io as A
+import compile.model as M
+import compile.quantize as Q
+
+
+def _quantized_toy():
+    mdef = M.ZOO["tds"]()
+    params, state = M.init_params(mdef, seed=7)
+    x = jnp.asarray(
+        np.random.default_rng(7).uniform(-1, 1, (4,) + mdef.input_shape).astype(np.float32)
+    )
+    return mdef, Q.quantize(mdef, params, state, x)
+
+
+def test_weights_roundtrip():
+    mdef, qm = _quantized_toy()
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "toy.w.bin")
+        A.write_weights(path, qm)
+        nodes = A.read_weights_header(path)
+    assert len(nodes) == len(mdef.nodes)
+    for i, nd in enumerate(mdef.nodes):
+        parsed = nodes[i]
+        if isinstance(nd, M.Conv):
+            assert parsed["kind"] == A.KIND_CONV
+            np.testing.assert_array_equal(parsed["w"], qm.layers[i].w_int8)
+            assert parsed["flags"] & 1 == (1 if nd.relu else 0)
+            assert abs(parsed["sw"] - qm.layers[i].sw) < 1e-6
+        elif isinstance(nd, M.FC):
+            assert parsed["kind"] == A.KIND_FC
+            np.testing.assert_array_equal(parsed["w"], qm.layers[i].w_int8)
+        elif isinstance(nd, M.GAP):
+            assert parsed["kind"] == A.KIND_GAP
+        assert parsed["consumes"] == M.input_of(mdef, i)
+
+
+def test_weights_bn_payload():
+    mdef = M.ZOO["cnn10"]()
+    params, state = M.init_params(mdef, seed=3)
+    x = jnp.asarray(
+        np.random.default_rng(3).uniform(-1, 1, (2,) + mdef.input_shape).astype(np.float32)
+    )
+    qm = Q.quantize(mdef, params, state, x)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "toy.w.bin")
+        A.write_weights(path, qm)
+        nodes = A.read_weights_header(path)
+    for i, nd in enumerate(mdef.nodes):
+        if isinstance(nd, M.Conv) and nd.bn:
+            np.testing.assert_allclose(nodes[i]["bn_scale"], qm.layers[i].bn_scale, rtol=1e-6)
+            np.testing.assert_allclose(nodes[i]["bn_shift"], qm.layers[i].bn_shift, rtol=1e-6)
+
+
+def test_data_roundtrip():
+    rng = np.random.default_rng(0)
+    tx = rng.uniform(-1, 1, (6, 4, 1, 3)).astype(np.float32)
+    ty = rng.integers(0, 10, 6).astype(np.uint16)
+    cx = rng.uniform(-1, 1, (3, 4, 1, 3)).astype(np.float32)
+    cy = rng.integers(0, 10, 3).astype(np.uint16)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "toy.data.bin")
+        A.write_data(path, tx, ty, cx, cy)
+        buf = open(path, "rb").read()
+    assert buf[:4] == b"MORD"
+    ver, n_test, n_calib, h, w, c = struct.unpack_from("<IIIIII", buf, 4)
+    assert (ver, n_test, n_calib, h, w, c) == (1, 6, 3, 4, 1, 3)
+    off = 28
+    tx2 = np.frombuffer(buf, "<f4", 6 * 4 * 1 * 3, off).reshape(6, 4, 1, 3)
+    np.testing.assert_array_equal(tx2, tx)
+    off += tx2.nbytes
+    ty2 = np.frombuffer(buf, "<u2", 6, off)
+    np.testing.assert_array_equal(ty2, ty)
+    off += ty2.nbytes
+    cx2 = np.frombuffer(buf, "<f4", 3 * 4 * 1 * 3, off).reshape(3, 4, 1, 3)
+    np.testing.assert_array_equal(cx2, cx)
+    off += cx2.nbytes
+    cy2 = np.frombuffer(buf, "<u2", 3, off)
+    np.testing.assert_array_equal(cy2, cy)
+    assert off + cy2.nbytes == len(buf)
+
+
+def test_file_sizes_are_deterministic():
+    _, qm = _quantized_toy()
+    with tempfile.TemporaryDirectory() as d:
+        p1, p2 = os.path.join(d, "a.bin"), os.path.join(d, "b.bin")
+        A.write_weights(p1, qm)
+        A.write_weights(p2, qm)
+        assert open(p1, "rb").read() == open(p2, "rb").read()

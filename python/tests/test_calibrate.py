@@ -1,0 +1,207 @@
+"""Offline-stage tests: regression fitting, angle clustering, serialization."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+import compile.calibrate as C
+
+FAST = settings(
+    max_examples=25,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+
+
+# ------------------------------------------------------------------ fit_lines
+
+
+def test_fit_lines_exact_recovery():
+    """Noise-free affine data must be recovered exactly (c = ±1)."""
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(200, 5)).astype(np.float32)
+    m_true = np.array([2.0, -1.5, 0.5, 3.0, -0.25], np.float32)
+    b_true = np.array([1.0, 0.0, -2.0, 0.5, 4.0], np.float32)
+    y = x * m_true + b_true
+    c, m, b, sd = C.fit_lines(x, y)
+    np.testing.assert_allclose(sd, 0.0, atol=1e-3)  # noise-free data
+    np.testing.assert_allclose(m, m_true, rtol=1e-4)
+    np.testing.assert_allclose(b, b_true, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.abs(c), 1.0, atol=1e-5)
+
+
+def test_fit_lines_constant_column_degenerate():
+    """Zero-variance binary column → c=0, m=0 (predictor gets disabled)."""
+    x = np.ones((50, 2), np.float32)
+    x[:, 1] = np.linspace(0, 1, 50)
+    y = np.random.default_rng(1).normal(size=(50, 2)).astype(np.float32)
+    c, m, b, sd = C.fit_lines(x, y)
+    assert c[0] == 0.0 and m[0] == 0.0
+    np.testing.assert_allclose(b[0], y[:, 0].mean(), rtol=1e-5)
+
+
+@given(
+    r=st.integers(10, 300),
+    n=st.integers(1, 20),
+    seed=st.integers(0, 2**31 - 1),
+)
+@FAST
+def test_fit_lines_pearson_in_range(r, n, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(r, n)).astype(np.float32)
+    y = rng.normal(size=(r, n)).astype(np.float32)
+    c, m, b, sd = C.fit_lines(x, y)
+    assert np.all(np.abs(c) <= 1.0 + 1e-5)
+    assert np.all(np.isfinite(m)) and np.all(np.isfinite(b))
+
+
+def test_fit_lines_matches_numpy_polyfit():
+    rng = np.random.default_rng(5)
+    x = rng.normal(size=(100, 1)).astype(np.float32)
+    y = (3 * x + rng.normal(scale=0.5, size=(100, 1))).astype(np.float32)
+    c, m, b, sd = C.fit_lines(x, y)
+    mm, bb = np.polyfit(x[:, 0].astype(np.float64), y[:, 0].astype(np.float64), 1)
+    np.testing.assert_allclose(m[0], mm, rtol=1e-3)
+    np.testing.assert_allclose(b[0], bb, rtol=1e-2, atol=1e-2)
+    cc = np.corrcoef(x[:, 0], y[:, 0])[0, 1]
+    np.testing.assert_allclose(c[0], cc, rtol=1e-4)
+
+
+# ------------------------------------------------------------------ angles
+
+
+def test_weight_angles_known_geometry():
+    w = np.array(
+        [[1, 0, -1, 1], [0, 1, 0, 1]], np.float32
+    )  # columns: e1, e2, -e1, (1,1)/√2
+    a = C.weight_angles_deg(w)
+    np.testing.assert_allclose(a[0, 1], 90.0, atol=1e-4)
+    np.testing.assert_allclose(a[0, 2], 180.0, atol=1e-4)
+    np.testing.assert_allclose(a[0, 3], 45.0, atol=1e-4)
+    # float32 cos ≈ 0.99999994 → arccos ≈ 0.02°; self-angle is only ~0
+    np.testing.assert_allclose(np.diag(a), 0.0, atol=0.1)
+
+
+def test_closest_neighbors_excludes_self():
+    w = np.random.default_rng(2).normal(size=(10, 6)).astype(np.float32)
+    idx, ang = C.closest_neighbors(C.weight_angles_deg(w))
+    assert all(idx[i] != i for i in range(6))
+    assert np.all(ang >= 0)
+
+
+# ------------------------------------------------------------------ clusters
+
+
+@given(n=st.integers(2, 60), k=st.integers(2, 30), seed=st.integers(0, 2**31 - 1))
+@FAST
+def test_cluster_partition_invariants(n, k, seed):
+    """Paper's algorithm invariants: exact partition, proxy-first layout."""
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(k, n)).astype(np.float32)
+    clusters, near = C.cluster_by_angle(w)
+    seen = [x for cl in clusters for x in cl]
+    assert sorted(seen) == list(range(n))  # partition: once, exactly
+    for cl in clusters:
+        assert len(cl) >= 1
+        assert cl[0] not in cl[1:]  # proxy is not its own member
+    assert near.shape == (n,)
+
+
+def test_cluster_parallel_vectors_grouped():
+    """Near-parallel columns must land in one cluster with high indegree."""
+    rng = np.random.default_rng(3)
+    base = rng.normal(size=(16,)).astype(np.float32)
+    cols = [base + rng.normal(scale=0.01, size=16) for _ in range(5)]
+    cols += [rng.normal(size=16) for _ in range(5)]
+    w = np.stack(cols, axis=1).astype(np.float32)
+    clusters, _ = C.cluster_by_angle(w)
+    # closest-neighbour graphs don't guarantee ONE cluster for a parallel
+    # bundle (the algorithm deliberately avoids chaining), but clusters
+    # containing bundle vectors must contain ONLY bundle vectors, and at
+    # least one real group must form.
+    grouped = 0
+    for cl in clusters:
+        bundle = set(cl) & set(range(5))
+        if bundle:
+            assert bundle == set(cl), f"bundle mixed with scattered: {clusters}"
+            grouped = max(grouped, len(cl))
+    assert grouped >= 2, f"no grouping happened: {clusters}"
+
+
+def test_cluster_max_angle_gate():
+    """With a 0° gate no edges survive: every neuron is its own proxy."""
+    rng = np.random.default_rng(4)
+    w = rng.normal(size=(8, 12)).astype(np.float32)
+    clusters, _ = C.cluster_by_angle(w, max_angle_deg=0.0)
+    assert len(clusters) == 12
+    assert all(len(cl) == 1 for cl in clusters)
+
+
+# ------------------------------------------------------------------ montecarlo
+# Verifies the paper's Eq. 3-6 (probability of sign agreement as a function
+# of the angle), the analysis behind the clustering — the paper states they
+# verified it with a Monte Carlo simulation; we reproduce that here (and in
+# rust/src/cluster for higher dimensions).
+
+
+@pytest.mark.parametrize("theta_deg", [10, 45, 90, 135, 170])
+def test_montecarlo_sign_agreement_2d(theta_deg):
+    rng = np.random.default_rng(theta_deg)
+    th = np.radians(theta_deg)
+    a = np.array([1.0, 0.0])
+    b = np.array([np.cos(th), np.sin(th)])
+    c = rng.normal(size=(200_000, 2))
+    sa = (c @ a) > 0
+    sb = (c @ b) > 0
+    p_mismatch = float((sa != sb).mean())
+    # Eq. 3+4: p(+-) + p(-+) = 2 * theta/360
+    np.testing.assert_allclose(p_mismatch, 2 * theta_deg / 360.0, atol=5e-3)
+
+
+def test_montecarlo_sign_agreement_high_dim():
+    """The relation is exact in any dimension (rotation invariance)."""
+    rng = np.random.default_rng(99)
+    dim = 64
+    a = rng.normal(size=dim)
+    raw = rng.normal(size=dim)
+    theta = 60.0
+    # construct b at exactly 60° from a
+    a_u = a / np.linalg.norm(a)
+    perp = raw - (raw @ a_u) * a_u
+    perp /= np.linalg.norm(perp)
+    b = np.cos(np.radians(theta)) * a_u + np.sin(np.radians(theta)) * perp
+    c = rng.normal(size=(200_000, dim))
+    p_mismatch = float((((c @ a_u) > 0) != ((c @ b) > 0)).mean())
+    np.testing.assert_allclose(p_mismatch, 2 * theta / 360.0, atol=5e-3)
+
+
+# ------------------------------------------------------------------ json dict
+
+
+def test_to_json_dict_roundtrip():
+    import json
+
+    rng = np.random.default_rng(11)
+    w = rng.normal(size=(12, 8)).astype(np.float32)
+    clusters, near = C.cluster_by_angle(w)
+    lc = C.LayerCalibration(
+        layer=3,
+        c=rng.uniform(-1, 1, 8).astype(np.float32),
+        m=rng.normal(size=8).astype(np.float32),
+        b=rng.normal(size=8).astype(np.float32),
+        s=np.abs(rng.normal(size=8)).astype(np.float32),
+        clusters=clusters,
+        closest_angle_deg=near,
+    )
+    cal = C.Calibration("toy", {3: lc})
+    d = C.to_json_dict(cal, default_threshold=0.9)
+    s = json.dumps(d)
+    back = json.loads(s)
+    assert back["model"] == "toy"
+    assert back["default_threshold"] == 0.9
+    lay = back["layers"][0]
+    assert lay["layer"] == 3 and lay["neurons"] == 8
+    assert sorted(x for cl in lay["clusters"] for x in cl) == list(range(8))

@@ -1,0 +1,212 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes (including non-tile-aligned ones) and value
+distributions; integer kernels must agree *exactly* with the oracle,
+float outputs within float32 tolerance.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import binary_dot as bd
+from compile.kernels import conv2d as cv
+from compile.kernels import int8_matmul as mm
+from compile.kernels import mor_dense as md
+from compile.kernels import ref
+
+FAST = settings(
+    max_examples=20,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+
+
+def _int8(rng, *shape):
+    return jnp.asarray(rng.integers(-128, 128, shape, dtype=np.int8))
+
+
+# ---------------------------------------------------------------- int8_matmul
+
+
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 200),
+    n=st.integers(1, 70),
+    seed=st.integers(0, 2**31 - 1),
+)
+@FAST
+def test_int8_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w = _int8(rng, m, k), _int8(rng, k, n)
+    got = mm.int8_matmul(x, w)
+    want = ref.int8_matmul(x, w)
+    assert got.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(8, 8, 8), (16, 32, 64), (32, 64, 64)])
+def test_int8_matmul_tile_shapes(bm, bn, bk):
+    rng = np.random.default_rng(0)
+    x, w = _int8(rng, 33, 130), _int8(rng, 130, 65)
+    got = mm.int8_matmul(x, w, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref.int8_matmul(x, w)))
+
+
+def test_int8_matmul_extremes():
+    """Saturated inputs: |dot| can reach K*127*127 — must not overflow int32
+    at the sizes the model zoo uses (K <= 1440)."""
+    k = 1440
+    x = jnp.full((2, k), -127, jnp.int8)
+    w = jnp.full((k, 3), 127, jnp.int8)
+    got = mm.int8_matmul(x, w)
+    assert int(got[0, 0]) == -127 * 127 * k
+
+
+def test_vmem_budget():
+    """Default tiles stay under a 128 KiB VMEM-class working set."""
+    assert mm.vmem_bytes() < 128 * 1024
+
+
+# ---------------------------------------------------------------- binary_dot
+
+
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 150),
+    n=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+@FAST
+def test_binary_dot_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w = _int8(rng, m, k), _int8(rng, k, n)
+    got = bd.binary_dot(x, w)
+    want = ref.binary_dot(x, w)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_binary_dot_zero_conventions():
+    """act(0) = -1 (inactive), sign(0) = +1: the asymmetry that keeps
+    post-ReLU layers informative (see ref.py docstring)."""
+    x = jnp.asarray([[0, 5, 0]], jnp.int8)
+    w = jnp.asarray([[0], [0], [-3]], jnp.int8)
+    # acts: -1,+1,-1 ; weights: +1,+1,-1 → -1 + 1 + 1 = 1
+    assert int(bd.binary_dot(x, w)[0, 0]) == 1
+    assert int(ref.binary_dot(x, w)[0, 0]) == 1
+
+
+def test_binary_dot_range():
+    rng = np.random.default_rng(3)
+    x, w = _int8(rng, 9, 77), _int8(rng, 77, 11)
+    got = np.asarray(bd.binary_dot(x, w))
+    assert got.max() <= 77 and got.min() >= -77
+    # parity: p_bin has the same parity as K
+    assert ((got - 77) % 2 == 0).all()
+
+
+# ----------------------------------------------------------------- mor_dense
+
+
+@given(
+    m=st.integers(1, 24),
+    k=st.integers(2, 100),
+    n=st.integers(1, 48),
+    seed=st.integers(0, 2**31 - 1),
+    use_bn=st.booleans(),
+    use_res=st.booleans(),
+)
+@FAST
+def test_mor_dense_matches_ref(m, k, n, seed, use_bn, use_res):
+    rng = np.random.default_rng(seed)
+    x, w = _int8(rng, m, k), _int8(rng, k, n)
+    slope = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    inter = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    if use_bn:
+        sc = jnp.asarray((rng.uniform(0.1, 2, n)).astype(np.float32))
+        sh = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    else:
+        sc, sh = jnp.ones((n,), jnp.float32), jnp.zeros((n,), jnp.float32)
+    res = (
+        jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
+        if use_res
+        else jnp.zeros((m, n), jnp.float32)
+    )
+    en = jnp.asarray(rng.integers(0, 2, n).astype(bool))
+    dq = float(rng.uniform(0.001, 0.1))
+    y1, s1 = md.mor_dense(x, w, slope, inter, sc, sh, res, en, dq)
+    y2, s2 = ref.mor_dense(x, w, slope, inter, sc, sh, res, en, dq)
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5, atol=1e-5)
+
+
+def test_mor_dense_skip_forces_zero():
+    rng = np.random.default_rng(1)
+    x, w = _int8(rng, 16, 64), _int8(rng, 64, 32)
+    n = 32
+    slope = jnp.zeros((n,), jnp.float32)
+    inter = jnp.full((n,), -1.0, jnp.float32)  # estimate always negative
+    en = jnp.ones((n,), bool)
+    y, s = md.mor_dense(
+        x, w, slope, inter,
+        jnp.ones((n,)), jnp.zeros((n,)), jnp.zeros((16, n)), en, 0.01,
+    )
+    assert bool(jnp.all(s)) and float(jnp.abs(y).max()) == 0.0
+
+
+def test_mor_dense_disabled_never_skips():
+    rng = np.random.default_rng(2)
+    x, w = _int8(rng, 8, 32), _int8(rng, 32, 16)
+    nn = 16
+    slope = jnp.zeros((nn,), jnp.float32)
+    inter = jnp.full((nn,), -1.0, jnp.float32)
+    en = jnp.zeros((nn,), bool)
+    _, s = md.mor_dense(
+        x, w, slope, inter,
+        jnp.ones((nn,)), jnp.zeros((nn,)), jnp.zeros((8, nn)), en, 0.01,
+    )
+    assert not bool(jnp.any(s))
+
+
+# -------------------------------------------------------------------- conv2d
+
+
+@given(
+    h=st.integers(4, 14),
+    w=st.integers(1, 14),
+    c=st.integers(1, 8),
+    f=st.integers(1, 12),
+    kh=st.integers(1, 3),
+    kw=st.integers(1, 3),
+    stride=st.integers(1, 2),
+    seed=st.integers(0, 2**31 - 1),
+)
+@FAST
+def test_conv2d_matches_ref(h, w, c, f, kh, kw, stride, seed):
+    if kh > h or kw > w:
+        return
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(-128, 128, (h, w, c), dtype=np.int8))
+    wt = jnp.asarray(rng.integers(-128, 128, (kh, kw, c, f), dtype=np.int8))
+    got = cv.conv2d_int8(x, wt, stride=stride)
+    want = ref.conv2d_int8(x, wt, stride=stride)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_conv2d_matches_lax():
+    """Cross-check the oracle itself against lax.conv (independent impl)."""
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.integers(-128, 128, (10, 10, 3), dtype=np.int8))
+    wt = jnp.asarray(rng.integers(-128, 128, (3, 3, 3, 5), dtype=np.int8))
+    want = jax.lax.conv_general_dilated(
+        x[None], wt, (1, 1), "VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.int32,
+    )[0]
+    got = ref.conv2d_int8(x, wt, stride=1)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

@@ -1,0 +1,139 @@
+"""L2 model-zoo tests: graph topology, shapes, float vs integer forwards."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import compile.model as M
+import compile.quantize as Q
+
+
+@pytest.fixture(scope="module", params=list(M.ZOO))
+def model_name(request):
+    return request.param
+
+
+def small_batch(mdef, n=4, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(
+        rng.uniform(-1, 1, (n,) + mdef.input_shape).astype(np.float32)
+    )
+
+
+def test_forward_shapes(model_name):
+    mdef = M.ZOO[model_name]()
+    params, state = M.init_params(mdef)
+    x = small_batch(mdef)
+    logits, _ = M.forward(mdef, params, state, x, train=False)
+    assert logits.shape == (4, mdef.num_classes)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_node_shapes_consistent_with_forward(model_name):
+    """Static shape inference must match the actual traced shapes."""
+    mdef = M.ZOO[model_name]()
+    params, state = M.init_params(mdef)
+    shapes = M.node_shapes(mdef)
+    x = small_batch(mdef, n=2)
+    outs = Q._float_node_outputs(mdef, params, state, x)
+    for i, (o, s) in enumerate(zip(outs, shapes)):
+        assert o.shape[1:] == s, f"node {i}: {o.shape[1:]} != {s}"
+
+
+def test_mac_counts_positive(model_name):
+    mdef = M.ZOO[model_name]()
+    macs = M.mac_counts(mdef)
+    assert all(m >= 0 for m in macs)
+    compute = [
+        i for i, nd in enumerate(mdef.nodes) if isinstance(nd, (M.Conv, M.FC))
+    ]
+    assert all(macs[i] > 0 for i in compute)
+    assert sum(macs) > 1_000_000  # each model is a real workload
+
+
+def test_relu_layers_are_compute_nodes(model_name):
+    mdef = M.ZOO[model_name]()
+    for i in mdef.relu_layers():
+        assert isinstance(mdef.nodes[i], (M.Conv, M.FC))
+
+
+def test_projection_topology_resnet():
+    """Projection shortcuts consume the same input as the conv they bypass."""
+    mdef = M.ZOO["resnet18m"]()
+    projections = [i for i in range(len(mdef.nodes)) if M.is_projection(mdef, i)]
+    assert projections, "resnet18m must contain projection shortcuts"
+    for p in projections:
+        # the node after the projection consumes the projection's own input
+        assert M.consumes(mdef, p + 1) == M.input_of(mdef, p)
+        # some later node adds the projection output as residual
+        assert any(
+            getattr(nd, "res_from", None) == p for nd in mdef.nodes[p + 1 :]
+        )
+
+
+def test_quant_forward_close_to_float(model_name):
+    """int8 logits must usually preserve the float argmax on random init."""
+    mdef = M.ZOO[model_name]()
+    params, state = M.init_params(mdef)
+    x = small_batch(mdef, n=8)
+    fl, _ = M.forward(mdef, params, state, x, train=False)
+    qm = Q.quantize(mdef, params, state, x)
+    ql, _ = Q.quant_forward(qm, x)
+    # top-1 agreement on most samples (quantization noise tolerated)
+    agree = float((jnp.argmax(fl, 1) == jnp.argmax(ql, 1)).mean())
+    assert agree >= 0.5, f"int8 path diverges from float: agree={agree}"
+
+
+def test_quant_forward_taps_shapes(model_name):
+    mdef = M.ZOO[model_name]()
+    params, state = M.init_params(mdef)
+    x = small_batch(mdef, n=2)
+    qm = Q.quantize(mdef, params, state, x)
+    _, taps = Q.quant_forward(qm, x, collect=True)
+    assert set(taps) == set(mdef.relu_layers())
+    shapes = M.node_shapes(mdef)
+    for i, (pbin, pbase) in taps.items():
+        oh, ow, cout = shapes[i]
+        assert pbin.shape == (2 * oh * ow, cout)
+        assert pbase.shape == pbin.shape
+        # binary counts are integers with |p_bin| <= K
+        nd = mdef.nodes[i]
+        assert float(jnp.max(jnp.abs(pbin))) <= _k_of(mdef, i) + 1e-6
+
+
+def _k_of(mdef, i):
+    nd = mdef.nodes[i]
+    shapes = M.node_shapes(mdef)
+    src = M.input_of(mdef, i)
+    cin = (mdef.input_shape if src == -1 else shapes[src])[2]
+    if isinstance(nd, M.Conv):
+        return nd.kh * nd.kw * cin
+    return cin
+
+
+def test_deploy_forward_matches_quant_forward():
+    """The Pallas deploy path and the jnp fast path agree (tds, small)."""
+    mdef = M.ZOO["tds"]()
+    params, state = M.init_params(mdef)
+    x = small_batch(mdef, n=2)
+    qm = Q.quantize(mdef, params, state, x)
+    ql, _ = Q.quant_forward(qm, x)
+    for s in range(2):
+        dep = Q.deploy_forward(qm, x[s])
+        np.testing.assert_allclose(
+            np.asarray(dep), np.asarray(ql[s]), rtol=1e-4, atol=1e-4
+        )
+
+
+def test_deploy_forward_matches_quant_forward_conv_bn():
+    """Same check for a BN+stride+pool model (cnn10 head is enough)."""
+    mdef = M.ZOO["cnn10"]()
+    params, state = M.init_params(mdef)
+    x = small_batch(mdef, n=1)
+    qm = Q.quantize(mdef, params, state, x)
+    ql, _ = Q.quant_forward(qm, x)
+    dep = Q.deploy_forward(qm, x[0])
+    np.testing.assert_allclose(np.asarray(dep), np.asarray(ql[0]), rtol=1e-4, atol=1e-4)

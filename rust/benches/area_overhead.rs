@@ -1,0 +1,8 @@
+//! Bench for the paper's §6 area claim: MoR hardware adds ~5.3% area.
+mod common;
+use mor::config::Config;
+fn main() {
+    let t = mor::figures::area_table(&Config::default());
+    t.print();
+    t.write_csv(&common::out_dir(), "area_overhead").ok();
+}

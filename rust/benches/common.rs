@@ -1,0 +1,26 @@
+//! Shared scaffolding for the figure benches: artifact discovery + a
+//! skip-gracefully path when `make artifacts` has not run yet (cargo bench
+//! must not hard-fail on a fresh checkout).
+#![allow(dead_code)]
+
+use mor::model::Artifacts;
+
+pub fn artifacts_dir() -> String {
+    std::env::var("MOR_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
+}
+
+/// Load the full model zoo, or None (with a notice) when artifacts are absent.
+pub fn load_zoo() -> Option<Vec<Artifacts>> {
+    let dir = artifacts_dir();
+    match mor::figures::load_all(&dir) {
+        Ok(a) => Some(a),
+        Err(e) => {
+            println!("SKIP: artifacts not available ({e}); run `make artifacts` first");
+            None
+        }
+    }
+}
+
+pub fn out_dir() -> String {
+    std::env::var("MOR_FIGURES_OUT").unwrap_or_else(|_| "figures_out".to_string())
+}

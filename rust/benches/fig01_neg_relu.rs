@@ -1,0 +1,26 @@
+//! Bench for paper Fig 1: % of MACs producing negative ReLU inputs, plus a
+//! wall-clock micro-benchmark of the dense functional forward it uses.
+mod common;
+use mor::util::bench::{bench_with, Table};
+
+fn main() {
+    let Some(zoo) = common::load_zoo() else { return };
+    let t: Table = mor::figures::fig01(&zoo, 32);
+    t.print();
+    t.write_csv(&common::out_dir(), "fig01_neg_relu").ok();
+
+    // micro: dense forward throughput per model (feeds §Perf)
+    println!("\n-- dense forward wall-clock --");
+    for a in &zoo {
+        let x = a.data.test_sample(0).to_vec();
+        let timing = bench_with(&format!("{} dense fwd", a.meta.name), 1, 0.4, &mut || {
+            std::hint::black_box(mor::predictor::exec::run_sample(
+                &a.model,
+                None,
+                &x,
+                mor::predictor::RunOpts { oracle: false, collect_trace: false },
+            ));
+        });
+        timing.report();
+    }
+}

@@ -1,0 +1,8 @@
+//! Bench for paper Fig 3: % of MACs in each layer type.
+mod common;
+fn main() {
+    let Some(zoo) = common::load_zoo() else { return };
+    let t = mor::figures::fig03(&zoo);
+    t.print();
+    t.write_csv(&common::out_dir(), "fig03_mac_breakdown").ok();
+}

@@ -1,0 +1,24 @@
+//! Bench for paper Fig 4: binary-vs-base dot product scatter for one
+//! TDS neuron (the paper's example has r = 0.78).
+mod common;
+fn main() {
+    let Some(zoo) = common::load_zoo() else { return };
+    let tds = zoo.iter().find(|a| a.meta.name == "tds").unwrap_or(&zoo[0]);
+    let t = mor::figures::fig04(tds, 6);
+    println!("=== {} ===", t.title);
+    println!("({} scatter points; CSV written for plotting)", t.rows.len());
+    t.write_csv(&common::out_dir(), "fig04_scatter").ok();
+    // print the correlation the series carries as the headline number
+    let xs: Vec<f64> = t.rows.iter().map(|r| r[0].parse().unwrap()).collect();
+    let ys: Vec<f64> = t.rows.iter().map(|r| r[1].parse().unwrap()).collect();
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let (mut sxx, mut syy, mut sxy) = (0.0, 0.0, 0.0);
+    for i in 0..xs.len() {
+        sxx += (xs[i] - mx) * (xs[i] - mx);
+        syy += (ys[i] - my) * (ys[i] - my);
+        sxy += (xs[i] - mx) * (ys[i] - my);
+    }
+    println!("measured Pearson r over the plotted series: {:.3}", sxy / (sxx * syy).sqrt());
+}

@@ -1,0 +1,8 @@
+//! Bench for paper Fig 5: distribution of per-neuron Pearson correlation.
+mod common;
+fn main() {
+    let Some(zoo) = common::load_zoo() else { return };
+    let t = mor::figures::fig05(&zoo);
+    t.print();
+    t.write_csv(&common::out_dir(), "fig05_corr_hist").ok();
+}

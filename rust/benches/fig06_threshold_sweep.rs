@@ -1,0 +1,9 @@
+//! Bench for paper Fig 6: binary predictor alone — accuracy loss vs %
+//! operations saved across the correlation threshold sweep (1.0 → 0.6).
+mod common;
+fn main() {
+    let Some(zoo) = common::load_zoo() else { return };
+    let t = mor::figures::threshold_sweep(&zoo, 32, false);
+    t.print();
+    t.write_csv(&common::out_dir(), "fig06_threshold_sweep").ok();
+}

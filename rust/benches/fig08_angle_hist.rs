@@ -1,0 +1,8 @@
+//! Bench for paper Fig 8: distribution of closest-neighbour angles.
+mod common;
+fn main() {
+    let Some(zoo) = common::load_zoo() else { return };
+    let t = mor::figures::fig08(&zoo);
+    t.print();
+    t.write_csv(&common::out_dir(), "fig08_angle_hist").ok();
+}

@@ -1,0 +1,9 @@
+//! Bench for paper Fig 12: prediction outcome breakdown at the default
+//! operating point (paper: correct-zero 7-11%, incorrect-zero 0.4-3.6%).
+mod common;
+fn main() {
+    let Some(zoo) = common::load_zoo() else { return };
+    let (t, _) = mor::figures::fig12(&zoo, 32);
+    t.print();
+    t.write_csv(&common::out_dir(), "fig12_pred_breakdown").ok();
+}

@@ -1,0 +1,22 @@
+//! Bench for paper Fig 13 (a+b): speedup and energy savings of the MoR
+//! accelerator vs the baseline (paper: 1.2x / 16.5% on average), plus a
+//! wall-clock micro-benchmark of the cycle simulator itself.
+mod common;
+use mor::config::Config;
+use mor::util::bench::bench_with;
+
+fn main() {
+    let Some(zoo) = common::load_zoo() else { return };
+    let cfg = Config::default();
+    let (t, _) = mor::figures::fig13(&zoo, 4, &cfg);
+    t.print();
+    t.write_csv(&common::out_dir(), "fig13_speedup_energy").ok();
+
+    println!("\n-- simulator wall-clock --");
+    let a = &zoo[0];
+    let sim = mor::sim::Simulator::new(cfg);
+    let timing = bench_with(&format!("{} baseline sim", a.meta.name), 1, 0.4, &mut || {
+        std::hint::black_box(sim.simulate_sample(&a.model, None, None));
+    });
+    timing.report();
+}

@@ -1,0 +1,7 @@
+//! Bench for the paper's §3.2.2 Monte Carlo validation of Eq. 3-6.
+mod common;
+fn main() {
+    let t = mor::figures::montecarlo_table(200_000);
+    t.print();
+    t.write_csv(&common::out_dir(), "montecarlo_angles").ok();
+}

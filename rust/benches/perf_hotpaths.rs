@@ -1,0 +1,44 @@
+//! §Perf micro-benchmarks: the three host hot paths (dot kernel, packed
+//! binary dot, full MoR forward) tracked across the optimization pass.
+mod common;
+use mor::engine::dot::dot_i8;
+use mor::util::bench::bench_with;
+use mor::util::bits::PackedVec;
+use mor::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(7);
+    let k = 576usize;
+    let x: Vec<i8> = (0..k).map(|_| rng.int8()).collect();
+    let w: Vec<i8> = (0..k).map(|_| rng.int8()).collect();
+
+    let t = bench_with("dot_i8 (K=576)", 10, 0.3, &mut || {
+        std::hint::black_box(dot_i8(std::hint::black_box(&x), std::hint::black_box(&w)));
+    });
+    t.report();
+    let gmacs = k as f64 / t.min_ns;
+    println!("    ≈ {gmacs:.2} GMAC/s single-thread (min)");
+
+    let px = PackedVec::from_acts(&x);
+    let pw = PackedVec::from_weights(&w);
+    let t = bench_with("packed binary dot (K=576)", 10, 0.3, &mut || {
+        std::hint::black_box(px.dot(std::hint::black_box(&pw)));
+    });
+    t.report();
+
+    if let Some(zoo) = common::load_zoo() {
+        for a in zoo.iter().filter(|a| a.meta.name == "cnn10") {
+            let pol = mor::predictor::MorPolicy::new(
+                &a.model, &a.predictor, Default::default());
+            let xs = a.data.test_sample(0).to_vec();
+            let t = bench_with("cnn10 MoR fwd (oracle off)", 1, 0.5, &mut || {
+                std::hint::black_box(mor::predictor::exec::run_sample(
+                    &a.model, Some(&pol), &xs,
+                    mor::predictor::RunOpts { oracle: false, collect_trace: false }));
+            });
+            t.report();
+            let macs = a.meta.macs_per_sample as f64;
+            println!("    ≈ {:.2} effective GMAC/s", macs / t.min_ns);
+        }
+    }
+}

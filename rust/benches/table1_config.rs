@@ -1,0 +1,8 @@
+//! Bench for paper Table 1: the simulated accelerator configuration.
+mod common;
+use mor::config::Config;
+fn main() {
+    let t = mor::figures::table1(&Config::default());
+    t.print();
+    t.write_csv(&common::out_dir(), "table1_config").ok();
+}

@@ -1,0 +1,161 @@
+//! Hand-rolled CLI argument parser (clap is not in the offline vendor set).
+//!
+//! Grammar: `mor <command> [--flag] [--key value] [positional...]`.
+//! Flags may appear in any order; `--key=value` is accepted too.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse `std::env::args()`-style input (element 0 = program name).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut it = argv.into_iter().skip(1).peekable();
+        let mut args = Args::default();
+        if let Some(cmd) = it.next() {
+            if cmd.starts_with('-') {
+                bail!("expected a command before options, got '{cmd}'");
+            }
+            args.command = cmd;
+        }
+        while let Some(tok) = it.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                if key.is_empty() {
+                    bail!("bare '--' is not supported");
+                }
+                if let Some((k, v)) = key.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    args.options.insert(key.to_string(), v);
+                } else {
+                    args.flags.push(key.to_string());
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got '{s}'")),
+        }
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{s}'")),
+        }
+    }
+}
+
+pub const USAGE: &str = "\
+mor — Mixture-of-Rookies reproduction (rust coordinator)
+
+USAGE:
+    mor <COMMAND> [OPTIONS]
+
+COMMANDS:
+    run        Run MoR inference on a model's test split, report prediction
+               stats, accuracy and computation savings
+                 --model <name>        tds|cnn10|darknet19m|resnet18m (default: all)
+                 --artifacts <dir>     artifacts directory (default: artifacts)
+                 --threshold <T>       correlation threshold (default: 0.85)
+                 --no-clusters         disable the spatial component
+                 --no-binary           disable the self-correlation component
+                 --samples <n>         cap evaluated samples
+    simulate   Cycle-level accelerator simulation (baseline vs MoR)
+                 --model/--artifacts/--threshold as above
+                 --config <file>       accelerator TOML (default: Table 1)
+                 --samples <n>         samples to simulate (default: 16)
+    figures    Regenerate paper figures/tables
+                 --all | --fig <id>    fig1,fig3,...,fig13,table1,area
+                 --out <dir>           CSV output directory (default: figures_out)
+    serve      Run the serving coordinator on a synthetic request stream
+                 --model <name>        model to serve (default: tds)
+                 --rps <r>             request rate (default: 200)
+                 --duration <s>        seconds of simulated load (default: 5)
+                 --workers <n>         worker threads (default: 4)
+                 --runtime pjrt|engine execution backend (default: engine)
+    info       Print artifact + configuration info
+                 --config              print Table 1
+                 --artifacts <dir>
+    help       Show this help
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        let mut v = vec!["mor".to_string()];
+        v.extend(toks.iter().map(|s| s.to_string()));
+        Args::parse(v).unwrap()
+    }
+
+    #[test]
+    fn basic_command() {
+        let a = parse(&["run", "--model", "tds", "--no-clusters"]);
+        assert_eq!(a.command, "run");
+        assert_eq!(a.opt("model"), Some("tds"));
+        assert!(a.flag("no-clusters"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse(&["run", "--threshold=0.7"]);
+        assert_eq!(a.opt_f64("threshold", 0.0).unwrap(), 0.7);
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse(&["figures", "fig6", "fig9", "--out", "x"]);
+        assert_eq!(a.positional, vec!["fig6", "fig9"]);
+        assert_eq!(a.opt("out"), Some("x"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["run", "--verbose"]);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = parse(&["run", "--threshold", "abc"]);
+        assert!(a.opt_f64("threshold", 0.0).is_err());
+    }
+
+    #[test]
+    fn option_before_command_rejected() {
+        let v = vec!["mor".to_string(), "--x".to_string()];
+        assert!(Args::parse(v).is_err());
+    }
+}

@@ -1,0 +1,309 @@
+//! Configuration system: accelerator (Table 1), predictor, and workload
+//! parameters, loadable from TOML files (configs/*.toml) with CLI
+//! overrides. Defaults are *exactly* the paper's Table 1.
+
+use crate::util::toml::Toml;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Accelerator configuration (paper Table 1).
+#[derive(Clone, Debug, PartialEq)]
+pub struct AcceleratorConfig {
+    /// Core + memory clock (the paper runs both at the same frequency).
+    pub frequency_mhz: u64,
+    /// Input SRAM capacity in bytes (Table 1: 16 KB).
+    pub input_sram_bytes: u64,
+    /// Binary-weight SRAM in bytes (Table 1: 2 KB) — predictor-only.
+    pub binweight_sram_bytes: u64,
+    /// Number of base-precision compute units (Table 1: 8).
+    pub num_cus: usize,
+    /// Parallel MACs per CU per cycle (Table 1: "CU width" 8).
+    pub cu_width: usize,
+    /// Number of binary CUs (Table 1: 8) — predictor-only.
+    pub num_bincus: usize,
+    /// Binary lanes per binCU per cycle (XNOR+popcount width).
+    pub bincu_width: usize,
+    /// Per-CU weight buffer in bytes (Table 1: 1 KB).
+    pub cu_buffer_bytes: u64,
+    /// Per-binCU buffer in bytes (Table 1: 0.56 KB).
+    pub bincu_buffer_bytes: u64,
+    /// Enable the Mixture-of-Rookies predictor datapath.
+    pub predictor: bool,
+}
+
+impl Default for AcceleratorConfig {
+    fn default() -> Self {
+        AcceleratorConfig {
+            frequency_mhz: 1200,
+            input_sram_bytes: 16 * 1024,
+            binweight_sram_bytes: 2 * 1024,
+            num_cus: 8,
+            cu_width: 8,
+            num_bincus: 8,
+            bincu_width: 64,
+            cu_buffer_bytes: 1024,
+            bincu_buffer_bytes: 573, // 0.56 KB
+            predictor: true,
+        }
+    }
+}
+
+impl AcceleratorConfig {
+    /// The baseline the paper compares against: identical accelerator
+    /// without binWeight SRAM / binCUs (Section 6).
+    pub fn baseline() -> Self {
+        AcceleratorConfig {
+            predictor: false,
+            ..Default::default()
+        }
+    }
+
+    /// Peak MAC throughput per cycle (Table 1: 8 CUs x 8 wide = 64).
+    pub fn peak_macs_per_cycle(&self) -> u64 {
+        (self.num_cus * self.cu_width) as u64
+    }
+}
+
+/// External LPDDR4 memory configuration (paper Table 1 + LPDDR4-2400-class
+/// timings expressed in memory-clock cycles).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DramConfig {
+    pub frequency_mhz: u64,
+    pub capacity_bytes: u64,
+    /// Data-port width in bytes per memory cycle (Table 1: 8 B).
+    pub port_bytes: u64,
+    /// Burst length in bytes (Table 1: 64 B).
+    pub burst_bytes: u64,
+    pub num_banks: usize,
+    pub row_bytes: u64,
+    /// Activate-to-read delay (tRCD), cycles.
+    pub t_rcd: u64,
+    /// Precharge (tRP), cycles.
+    pub t_rp: u64,
+    /// CAS latency (tCL), cycles.
+    pub t_cl: u64,
+    /// Minimum row-open time (tRAS), cycles.
+    pub t_ras: u64,
+    /// Column-to-column (tCCD), cycles.
+    pub t_ccd: u64,
+    /// Refresh interval (tREFI), cycles; 0 disables refresh modelling.
+    pub t_refi: u64,
+    /// Refresh duration (tRFC), cycles.
+    pub t_rfc: u64,
+}
+
+impl Default for DramConfig {
+    fn default() -> Self {
+        // LPDDR4-2400-class timings at 1200 MHz I/O clock (Table 1).
+        DramConfig {
+            frequency_mhz: 1200,
+            capacity_bytes: 1 << 30, // 1 GB
+            port_bytes: 8,
+            burst_bytes: 64,
+            num_banks: 8,
+            row_bytes: 2048,
+            t_rcd: 22,
+            t_rp: 22,
+            t_cl: 22,
+            t_ras: 51,
+            t_ccd: 8,
+            t_refi: 4680, // 3.9 us at 1200 MHz
+            t_rfc: 216,   // 180 ns
+        }
+    }
+}
+
+impl DramConfig {
+    /// Cycles the data bus is busy transferring one burst.
+    pub fn burst_cycles(&self) -> u64 {
+        crate::util::ceil_div(self.burst_bytes, self.port_bytes)
+    }
+}
+
+/// MoR predictor configuration (offline parameters live in the artifacts;
+/// this is the online policy).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PredictorConfig {
+    /// Pearson-correlation threshold T (Section 3.2.1). Neurons with
+    /// c < T never use the binary predictor.
+    pub threshold: f32,
+    /// Enable the spatial (cluster/proxy) component.
+    pub use_clusters: bool,
+    /// Enable the self-correlation (binary) component.
+    pub use_binary: bool,
+    /// Optional angle gate for cluster membership (ablation; the paper's
+    /// default keeps every closest-neighbour edge → 90°).
+    pub max_cluster_angle_deg: f32,
+    /// Skip-confidence margin: a neuron is only skipped when the estimated
+    /// ReLU input is at least `margin_sigmas` regression-residual stds
+    /// below zero. 0.0 recovers the paper's raw rule; the default 1.0
+    /// trades a little savings for a large cut in wrong skips (see the
+    /// ablation bench).
+    pub margin_sigmas: f32,
+}
+
+impl Default for PredictorConfig {
+    fn default() -> Self {
+        PredictorConfig {
+            threshold: 0.85,
+            use_clusters: true,
+            use_binary: true,
+            max_cluster_angle_deg: 90.0,
+            margin_sigmas: 1.0,
+        }
+    }
+}
+
+/// Top-level config bundle.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Config {
+    pub accel: AcceleratorConfig,
+    pub dram: DramConfig,
+    pub predictor: PredictorConfig,
+}
+
+impl Config {
+    /// Load from a TOML file; missing keys keep Table 1 defaults.
+    pub fn from_file<P: AsRef<Path>>(path: P) -> Result<Config> {
+        let src = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading config {}", path.as_ref().display()))?;
+        let t = Toml::parse(&src).context("parsing config TOML")?;
+        Ok(Config::from_toml(&t))
+    }
+
+    pub fn from_toml(t: &Toml) -> Config {
+        let d = Config::default();
+        Config {
+            accel: AcceleratorConfig {
+                frequency_mhz: t.i64_or("accelerator.frequency_mhz", d.accel.frequency_mhz as i64) as u64,
+                input_sram_bytes: t.i64_or("accelerator.input_sram_bytes", d.accel.input_sram_bytes as i64) as u64,
+                binweight_sram_bytes: t.i64_or("accelerator.binweight_sram_bytes", d.accel.binweight_sram_bytes as i64) as u64,
+                num_cus: t.i64_or("accelerator.num_cus", d.accel.num_cus as i64) as usize,
+                cu_width: t.i64_or("accelerator.cu_width", d.accel.cu_width as i64) as usize,
+                num_bincus: t.i64_or("accelerator.num_bincus", d.accel.num_bincus as i64) as usize,
+                bincu_width: t.i64_or("accelerator.bincu_width", d.accel.bincu_width as i64) as usize,
+                cu_buffer_bytes: t.i64_or("accelerator.cu_buffer_bytes", d.accel.cu_buffer_bytes as i64) as u64,
+                bincu_buffer_bytes: t.i64_or("accelerator.bincu_buffer_bytes", d.accel.bincu_buffer_bytes as i64) as u64,
+                predictor: t.bool_or("accelerator.predictor", d.accel.predictor),
+            },
+            dram: DramConfig {
+                frequency_mhz: t.i64_or("dram.frequency_mhz", d.dram.frequency_mhz as i64) as u64,
+                capacity_bytes: t.i64_or("dram.capacity_bytes", d.dram.capacity_bytes as i64) as u64,
+                port_bytes: t.i64_or("dram.port_bytes", d.dram.port_bytes as i64) as u64,
+                burst_bytes: t.i64_or("dram.burst_bytes", d.dram.burst_bytes as i64) as u64,
+                num_banks: t.i64_or("dram.num_banks", d.dram.num_banks as i64) as usize,
+                row_bytes: t.i64_or("dram.row_bytes", d.dram.row_bytes as i64) as u64,
+                t_rcd: t.i64_or("dram.t_rcd", d.dram.t_rcd as i64) as u64,
+                t_rp: t.i64_or("dram.t_rp", d.dram.t_rp as i64) as u64,
+                t_cl: t.i64_or("dram.t_cl", d.dram.t_cl as i64) as u64,
+                t_ras: t.i64_or("dram.t_ras", d.dram.t_ras as i64) as u64,
+                t_ccd: t.i64_or("dram.t_ccd", d.dram.t_ccd as i64) as u64,
+                t_refi: t.i64_or("dram.t_refi", d.dram.t_refi as i64) as u64,
+                t_rfc: t.i64_or("dram.t_rfc", d.dram.t_rfc as i64) as u64,
+            },
+            predictor: PredictorConfig {
+                threshold: t.f64_or("predictor.threshold", d.predictor.threshold as f64) as f32,
+                use_clusters: t.bool_or("predictor.use_clusters", d.predictor.use_clusters),
+                use_binary: t.bool_or("predictor.use_binary", d.predictor.use_binary),
+                max_cluster_angle_deg: t.f64_or(
+                    "predictor.max_cluster_angle_deg",
+                    d.predictor.max_cluster_angle_deg as f64,
+                ) as f32,
+                margin_sigmas: t.f64_or(
+                    "predictor.margin_sigmas",
+                    d.predictor.margin_sigmas as f64,
+                ) as f32,
+            },
+        }
+    }
+
+    /// Render Table 1 (used by `mor info --config` and the table1 bench).
+    pub fn table1(&self) -> String {
+        let a = &self.accel;
+        let d = &self.dram;
+        format!(
+            "DNN Accelerator\n\
+             \x20 Frequency        {} MHz\n\
+             \x20 Input SRAM       {} KB\n\
+             \x20 BinWeight SRAM   {} KB\n\
+             \x20 Number binCUs    {}\n\
+             \x20 Number of CUs    {}\n\
+             \x20 CU width         {}\n\
+             \x20 CU precision     8 b\n\
+             \x20 CU Buffer        {} KB\n\
+             \x20 binCU buffer     {:.2} KB\n\
+             External Memory      LPDDR4\n\
+             \x20 Frequency        {} MHz\n\
+             \x20 Capacity         {} GB\n\
+             \x20 Port Width       {} B\n\
+             \x20 Burst Size       {} B",
+            a.frequency_mhz,
+            a.input_sram_bytes / 1024,
+            a.binweight_sram_bytes / 1024,
+            a.num_bincus,
+            a.num_cus,
+            a.cu_width,
+            a.cu_buffer_bytes / 1024,
+            a.bincu_buffer_bytes as f64 / 1024.0,
+            d.frequency_mhz,
+            d.capacity_bytes >> 30,
+            d.port_bytes,
+            d.burst_bytes,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_table1() {
+        let c = Config::default();
+        assert_eq!(c.accel.frequency_mhz, 1200);
+        assert_eq!(c.accel.input_sram_bytes, 16 * 1024);
+        assert_eq!(c.accel.binweight_sram_bytes, 2 * 1024);
+        assert_eq!(c.accel.num_cus, 8);
+        assert_eq!(c.accel.cu_width, 8);
+        assert_eq!(c.accel.num_bincus, 8);
+        assert_eq!(c.accel.peak_macs_per_cycle(), 64);
+        assert_eq!(c.dram.port_bytes, 8);
+        assert_eq!(c.dram.burst_bytes, 64);
+        assert_eq!(c.dram.capacity_bytes, 1 << 30);
+    }
+
+    #[test]
+    fn baseline_disables_predictor_only() {
+        let b = AcceleratorConfig::baseline();
+        let d = AcceleratorConfig::default();
+        assert!(!b.predictor && d.predictor);
+        assert_eq!(b.num_cus, d.num_cus);
+    }
+
+    #[test]
+    fn toml_overrides() {
+        let t = Toml::parse(
+            "[accelerator]\nnum_cus = 16\npredictor = false\n[predictor]\nthreshold = 0.7\n",
+        )
+        .unwrap();
+        let c = Config::from_toml(&t);
+        assert_eq!(c.accel.num_cus, 16);
+        assert!(!c.accel.predictor);
+        assert!((c.predictor.threshold - 0.7).abs() < 1e-6);
+        // untouched keys keep defaults
+        assert_eq!(c.accel.cu_width, 8);
+    }
+
+    #[test]
+    fn burst_cycles() {
+        assert_eq!(DramConfig::default().burst_cycles(), 8);
+    }
+
+    #[test]
+    fn table1_render_contains_key_rows() {
+        let s = Config::default().table1();
+        assert!(s.contains("1200 MHz"));
+        assert!(s.contains("Input SRAM       16 KB"));
+        assert!(s.contains("Burst Size       64 B"));
+    }
+}

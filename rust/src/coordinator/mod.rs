@@ -1,0 +1,273 @@
+//! Serving coordinator: the L3 request path.
+//!
+//! The paper's deployment target is frame-by-frame edge inference; the
+//! coordinator provides the serving shell around the compute engine:
+//!
+//! * a dispatcher replays a [`crate::workload::RequestStream`] in real
+//!   time (arrival-faithful), pushing requests into a shared queue
+//!   (backpressure surfaces as queue depth);
+//! * a worker pool executes requests on one of two backends:
+//!   - `Engine` — the in-process functional int8 engine with the MoR
+//!     predictor (multi-threaded; the model and policy are shared
+//!     read-only), or
+//!   - `Pjrt` — the AOT-compiled HLO artifact on the PJRT CPU client
+//!     (single owner thread; PJRT handles are not `Send`);
+//! * per-request latency (queueing + service) and throughput metrics.
+//!
+//! No async runtime is available offline (no tokio), so the coordinator
+//! uses std threads + channels; the architecture (dispatcher → queue →
+//! workers → collector) is the same shape as an async reactor.
+
+use crate::model::Artifacts;
+use crate::predictor::{exec, MorPolicy, RunOpts};
+use crate::util::percentile;
+use crate::workload::Request;
+use anyhow::Result;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Which execution backend serves requests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Functional int8 engine (+ optional MoR policy), multi-worker.
+    Engine,
+    /// AOT HLO on the PJRT CPU client, single owner thread.
+    Pjrt,
+}
+
+/// One served request's record.
+#[derive(Clone, Copy, Debug)]
+pub struct Served {
+    pub id: u64,
+    pub queue_us: u64,
+    pub service_us: u64,
+    pub correct: bool,
+}
+
+/// Aggregate serving report.
+#[derive(Clone, Debug, Default)]
+pub struct ServeReport {
+    pub completed: usize,
+    pub duration_s: f64,
+    pub throughput_rps: f64,
+    pub accuracy: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub mean_service_ms: f64,
+    pub max_queue_depth: usize,
+}
+
+impl ServeReport {
+    fn from_records(records: &[Served], duration_s: f64, max_depth: usize) -> ServeReport {
+        let lat: Vec<f64> = records
+            .iter()
+            .map(|r| (r.queue_us + r.service_us) as f64 / 1000.0)
+            .collect();
+        let svc: Vec<f64> = records.iter().map(|r| r.service_us as f64 / 1000.0).collect();
+        let correct = records.iter().filter(|r| r.correct).count();
+        ServeReport {
+            completed: records.len(),
+            duration_s,
+            throughput_rps: records.len() as f64 / duration_s.max(1e-9),
+            accuracy: correct as f64 / records.len().max(1) as f64,
+            p50_ms: percentile(&lat, 50.0),
+            p95_ms: percentile(&lat, 95.0),
+            p99_ms: percentile(&lat, 99.0),
+            mean_service_ms: crate::util::mean(&svc),
+            max_queue_depth: max_depth,
+        }
+    }
+
+    pub fn print(&self, label: &str) {
+        println!(
+            "[serve:{label}] {} reqs in {:.2}s → {:.1} rps | acc {:.1}% | \
+             lat p50 {:.2} ms p95 {:.2} ms p99 {:.2} ms | svc {:.2} ms | maxq {}",
+            self.completed,
+            self.duration_s,
+            self.throughput_rps,
+            self.accuracy * 100.0,
+            self.p50_ms,
+            self.p95_ms,
+            self.p99_ms,
+            self.mean_service_ms,
+            self.max_queue_depth
+        );
+    }
+}
+
+/// Serve a pre-generated request list, replaying arrival times.
+///
+/// `time_scale` compresses the virtual arrival clock (e.g. 0.1 replays a
+/// 10 s trace in 1 s) — useful for tests; 1.0 is real time.
+pub fn serve(
+    arts: &Artifacts,
+    policy: Option<MorPolicy>,
+    backend: Backend,
+    workers: usize,
+    requests: Vec<Request>,
+    artifacts_dir: &str,
+    time_scale: f64,
+) -> Result<ServeReport> {
+    if requests.is_empty() {
+        return Ok(ServeReport::default());
+    }
+    let n_req = requests.len();
+
+    let queue: Arc<Mutex<std::collections::VecDeque<(Request, Instant)>>> =
+        Arc::new(Mutex::new(std::collections::VecDeque::new()));
+    let depth_hwm = Arc::new(AtomicUsize::new(0));
+    let (done_tx, done_rx) = mpsc::channel::<Served>();
+    let stop = Arc::new(AtomicUsize::new(0)); // 1 = dispatcher finished
+
+    // shared read-only state for Engine workers
+    let model = Arc::new(arts.model.clone());
+    let policy = Arc::new(policy);
+    let data = Arc::new((
+        arts.data.test_x.clone(),
+        arts.data.test_y.clone(),
+        arts.data.sample_len(),
+    ));
+
+    let t0 = Instant::now();
+
+    // dispatcher: replay arrivals
+    let disp = {
+        let queue = Arc::clone(&queue);
+        let depth_hwm = Arc::clone(&depth_hwm);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            for req in requests {
+                let due = Duration::from_micros((req.arrival_us as f64 * time_scale) as u64);
+                let now = t0.elapsed();
+                if due > now {
+                    std::thread::sleep(due - now);
+                }
+                let mut q = queue.lock().unwrap();
+                q.push_back((req, Instant::now()));
+                let d = q.len();
+                drop(q);
+                depth_hwm.fetch_max(d, Ordering::Relaxed);
+            }
+            stop.store(1, Ordering::SeqCst);
+        })
+    };
+
+    let n_workers = match backend {
+        Backend::Engine => workers.max(1),
+        Backend::Pjrt => 1, // PJRT handles live on one thread
+    };
+    let hlo_path = Artifacts::hlo_path(artifacts_dir, &arts.meta.name);
+    let input_shape = arts.meta.input_shape;
+
+    let mut handles = Vec::new();
+    for _ in 0..n_workers {
+        let queue = Arc::clone(&queue);
+        let stop = Arc::clone(&stop);
+        let done_tx = done_tx.clone();
+        let model = Arc::clone(&model);
+        let policy = Arc::clone(&policy);
+        let data = Arc::clone(&data);
+        let hlo_path = hlo_path.clone();
+        handles.push(std::thread::spawn(move || -> Result<()> {
+            // PJRT backend: compile once inside the owner thread
+            let pjrt_exe = match backend {
+                Backend::Pjrt => {
+                    let rt = crate::runtime::Runtime::cpu()?;
+                    Some(rt.load_hlo(&hlo_path, input_shape)?)
+                }
+                Backend::Engine => None,
+            };
+            loop {
+                let item = queue.lock().unwrap().pop_front();
+                let Some((req, enqueued)) = item else {
+                    if stop.load(Ordering::SeqCst) == 1 && queue.lock().unwrap().is_empty() {
+                        return Ok(());
+                    }
+                    std::thread::sleep(Duration::from_micros(50));
+                    continue;
+                };
+                let queue_us = enqueued.elapsed().as_micros() as u64;
+                let svc_t = Instant::now();
+                let (x, y, sample_len) = (&data.0, &data.1, data.2);
+                let sample = &x[req.sample_idx * sample_len..(req.sample_idx + 1) * sample_len];
+                let logits = match &pjrt_exe {
+                    Some(exe) => exe.forward(sample)?,
+                    None => {
+                        exec::run_sample(
+                            &model,
+                            policy.as_ref().as_ref(),
+                            sample,
+                            RunOpts {
+                                oracle: false,
+                                collect_trace: false,
+                            },
+                        )
+                        .logits
+                    }
+                };
+                let correct =
+                    crate::predictor::argmax(&logits) == y[req.sample_idx] as usize;
+                done_tx
+                    .send(Served {
+                        id: req.id,
+                        queue_us,
+                        service_us: svc_t.elapsed().as_micros() as u64,
+                        correct,
+                    })
+                    .ok();
+            }
+        }));
+    }
+    drop(done_tx);
+
+    let mut records = Vec::with_capacity(n_req);
+    for served in done_rx {
+        records.push(served);
+    }
+    disp.join().expect("dispatcher panicked");
+    for h in handles {
+        h.join().expect("worker panicked")?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    Ok(ServeReport::from_records(
+        &records,
+        wall,
+        depth_hwm.load(Ordering::Relaxed),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Engine-backend serving is exercised end-to-end in rust/tests (needs
+    // artifacts); here we unit-test the report math.
+
+    #[test]
+    fn report_percentiles() {
+        let recs: Vec<Served> = (0..100)
+            .map(|i| Served {
+                id: i,
+                queue_us: 0,
+                service_us: (i + 1) * 1000,
+                correct: i % 2 == 0,
+            })
+            .collect();
+        let r = ServeReport::from_records(&recs, 2.0, 7);
+        assert_eq!(r.completed, 100);
+        assert!((r.throughput_rps - 50.0).abs() < 1e-9);
+        assert!((r.accuracy - 0.5).abs() < 1e-9);
+        assert!(r.p50_ms > 49.0 && r.p50_ms < 52.0);
+        assert!(r.p99_ms > 98.0);
+        assert_eq!(r.max_queue_depth, 7);
+    }
+
+    #[test]
+    fn empty_request_list_gives_empty_report() {
+        let r = ServeReport::default();
+        assert_eq!(r.completed, 0);
+        assert_eq!(r.throughput_rps, 0.0);
+    }
+}

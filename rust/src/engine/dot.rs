@@ -1,0 +1,157 @@
+//! Dot-product hot kernels for the functional engine.
+//!
+//! `dot_i8` is the base-precision CU operation (int8 x int8 → int32);
+//! the binary path lives in [`crate::util::bits`]. Both are written so
+//! LLVM auto-vectorizes the inner loop (verified in the perf pass —
+//! see EXPERIMENTS.md §Perf).
+
+/// int8 dot product with int32 accumulation (never overflows for
+/// K ≤ 2^16: |x·w| ≤ K · 127² < 2^31).
+///
+/// §Perf: products are formed in i16 (i8·i8 fits: |p| ≤ 16384) and widened
+/// to i32 — this is the shape LLVM turns into `pmaddwd`-style SIMD with
+/// `target-cpu=native`; the naive i32-product loop vectorizes much worse
+/// (before/after in EXPERIMENTS.md §Perf).
+#[inline]
+pub fn dot_i8(x: &[i8], w: &[i8]) -> i32 {
+    debug_assert_eq!(x.len(), w.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            // SAFETY: feature checked at runtime; slices have equal length.
+            return unsafe { dot_i8_avx2(x, w) };
+        }
+    }
+    dot_i8_scalar(x, w)
+}
+
+/// Portable fallback.
+#[inline]
+pub fn dot_i8_scalar(x: &[i8], w: &[i8]) -> i32 {
+    let mut acc: i32 = 0;
+    let n = x.len();
+    let chunks = n / 16;
+    for ci in 0..chunks {
+        let base = ci * 16;
+        let mut local: i32 = 0;
+        for j in 0..16 {
+            local += (x[base + j] as i16 * w[base + j] as i16) as i32;
+        }
+        acc += local;
+    }
+    for j in chunks * 16..n {
+        acc += (x[j] as i16 * w[j] as i16) as i32;
+    }
+    acc
+}
+
+/// AVX2 path: sign-extend 16 i8 lanes to i16 (`vpmovsxbw`), multiply-add
+/// pairs into i32 (`vpmaddwd`), accumulate in a 256-bit register.
+/// i8·i8 products fit i16 and pairwise sums fit i32, so this is exact.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot_i8_avx2(x: &[i8], w: &[i8]) -> i32 {
+    use std::arch::x86_64::*;
+    let n = x.len();
+    let mut acc = _mm256_setzero_si256();
+    let mut i = 0;
+    while i + 16 <= n {
+        let xv = _mm256_cvtepi8_epi16(_mm_loadu_si128(x.as_ptr().add(i) as *const __m128i));
+        let wv = _mm256_cvtepi8_epi16(_mm_loadu_si128(w.as_ptr().add(i) as *const __m128i));
+        acc = _mm256_add_epi32(acc, _mm256_madd_epi16(xv, wv));
+        i += 16;
+    }
+    // horizontal sum of 8 i32 lanes
+    let hi = _mm256_extracti128_si256(acc, 1);
+    let lo = _mm256_castsi256_si128(acc);
+    let s = _mm_add_epi32(hi, lo);
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b01_00_11_10));
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b00_00_00_01));
+    let mut total = _mm_cvtsi128_si32(s);
+    while i < n {
+        total += (x[i] as i16 * w[i] as i16) as i32;
+        i += 1;
+    }
+    total
+}
+
+/// Quantize a float slice to int8 with round-half-away and saturation,
+/// matching jnp.clip(jnp.round(x / sx), -127, 127).
+///
+/// NOTE jnp.round is round-half-to-EVEN; we match it exactly because the
+/// calibration taps were produced by the jnp path and bit-equality between
+/// the rust engine and the python artifacts keeps the fitted lines valid.
+#[inline]
+pub fn quantize_i8(x: &[f32], sx: f32, out: &mut Vec<i8>) {
+    out.clear();
+    out.reserve(x.len());
+    let inv = 1.0 / sx;
+    for &v in x {
+        out.push(quantize_one(v, inv));
+    }
+}
+
+#[inline]
+pub fn quantize_one(v: f32, inv_sx: f32) -> i8 {
+    let scaled = v * inv_sx;
+    let r = round_half_even(scaled);
+    r.clamp(-127.0, 127.0) as i8
+}
+
+/// f32 round-half-to-even (banker's rounding), like jnp.round / IEEE 754
+/// roundTiesToEven.
+#[inline]
+pub fn round_half_even(v: f32) -> f32 {
+    // `round_ties_even` stabilized in rust 1.77
+    v.round_ties_even()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::property;
+
+    fn dot_ref(x: &[i8], w: &[i8]) -> i64 {
+        x.iter().zip(w).map(|(&a, &b)| a as i64 * b as i64).sum()
+    }
+
+    #[test]
+    fn dot_matches_reference() {
+        property("dot_i8 == i64 reference", 300, |g| {
+            let n = g.usize(0, 600);
+            let x = g.vec_i8(n);
+            let w = g.vec_i8(n);
+            let got = dot_i8(&x, &w) as i64;
+            let want = dot_ref(&x, &w);
+            crate::prop_assert!(g, got == want, "n={n} got={got} want={want}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dot_extreme_no_overflow() {
+        let k = 1440; // largest K in the model zoo
+        let x = vec![-128i8; k];
+        let w = vec![-128i8; k];
+        assert_eq!(dot_i8(&x, &w), 128 * 128 * k as i32);
+    }
+
+    #[test]
+    fn round_half_even_cases() {
+        assert_eq!(round_half_even(0.5), 0.0);
+        assert_eq!(round_half_even(1.5), 2.0);
+        assert_eq!(round_half_even(2.5), 2.0);
+        assert_eq!(round_half_even(-0.5), 0.0);
+        assert_eq!(round_half_even(-1.5), -2.0);
+        assert_eq!(round_half_even(1.4999), 1.0);
+    }
+
+    #[test]
+    fn quantize_saturates() {
+        let mut out = Vec::new();
+        quantize_i8(&[10.0, -10.0, 0.0, 0.004], 0.01, &mut out);
+        assert_eq!(out, vec![127, -127, 0, 0]); // 0.4 rounds to 0
+        quantize_i8(&[0.015], 0.01, &mut out);
+        assert_eq!(out, vec![2]); // 1.5 → 2? no: half-even(1.5) = 2
+    }
+}

@@ -1,0 +1,340 @@
+//! Functional int8 inference engine — numeric primitives.
+//!
+//! Mirrors python/compile/quantize.py's integer dataflow contract exactly:
+//! activations travel as float32 between nodes, every compute node
+//! quantizes its input with its own `sx`, dot products are exact
+//! int8×int8→int32, everything after the dot is float32 in the same
+//! operation order. The MoR-aware forward lives in [`crate::predictor`];
+//! this module provides tensors, im2col patch gathering, pooling and the
+//! dot kernels.
+
+pub mod dot;
+
+use crate::model::Node;
+use crate::util::bits::PackedVec;
+
+/// A (H, W, C) float32 activation tensor, row-major.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(h: usize, w: usize, c: usize) -> Tensor {
+        Tensor {
+            h,
+            w,
+            c,
+            data: vec![0.0; h * w * c],
+        }
+    }
+
+    pub fn from_slice(h: usize, w: usize, c: usize, data: &[f32]) -> Tensor {
+        assert_eq!(data.len(), h * w * c);
+        Tensor {
+            h,
+            w,
+            c,
+            data: data.to_vec(),
+        }
+    }
+
+    #[inline]
+    pub fn at(&self, y: usize, x: usize, ch: usize) -> f32 {
+        self.data[(y * self.w + x) * self.c + ch]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, y: usize, x: usize, ch: usize) -> &mut f32 {
+        &mut self.data[(y * self.w + x) * self.c + ch]
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+/// Convolution output geometry + SAME padding offsets (matches the python
+/// `_same_pad`: `total = max(0, (out-1)*stride + k - size)`, low = total/2).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ConvGeom {
+    pub oh: usize,
+    pub ow: usize,
+    pub pad_top: usize,
+    pub pad_left: usize,
+}
+
+pub fn conv_geom(
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad_same: bool,
+) -> ConvGeom {
+    if pad_same {
+        let oh = h.div_ceil(stride);
+        let ow = w.div_ceil(stride);
+        let total_h = ((oh - 1) * stride + kh).saturating_sub(h);
+        let total_w = ((ow - 1) * stride + kw).saturating_sub(w);
+        ConvGeom {
+            oh,
+            ow,
+            pad_top: total_h / 2,
+            pad_left: total_w / 2,
+        }
+    } else {
+        ConvGeom {
+            oh: (h - kh) / stride + 1,
+            ow: (w - kw) / stride + 1,
+            pad_top: 0,
+            pad_left: 0,
+        }
+    }
+}
+
+/// Quantized input plus reusable patch buffers for one conv/fc layer.
+pub struct PatchGather {
+    /// quantized input, row-major (h, w, c)
+    pub q: Vec<i8>,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    /// current patch, (kh, kw, cin) order — matches the weight layout
+    pub patch: Vec<i8>,
+    /// packed ±1 activations of the current patch (padding lanes invalid)
+    pub packed: PackedVec,
+}
+
+impl PatchGather {
+    pub fn new(input: &Tensor, sx: f32) -> PatchGather {
+        let mut q = Vec::new();
+        dot::quantize_i8(&input.data, sx, &mut q);
+        PatchGather {
+            q,
+            h: input.h,
+            w: input.w,
+            c: input.c,
+            patch: Vec::new(),
+            packed: PackedVec::zeros(0),
+        }
+    }
+
+    /// Gather the (kh,kw,cin) patch for output position (oy, ox).
+    /// Out-of-bounds (SAME padding) cells are 0 in `patch` and *invalid*
+    /// in `packed` — so they contribute 0 to both dot products, exactly
+    /// like the jnp path (which zero-pads both the int8 and the binarized
+    /// tensor).
+    ///
+    /// §Perf: buffers are reused across calls (no allocation on the row
+    /// loop) and interior channel runs are copied slice-wise.
+    pub fn gather(&mut self, geom: ConvGeom, kh: usize, kw: usize, stride: usize, oy: usize, ox: usize) {
+        let k_len = kh * kw * self.c;
+        self.reset_buffers(k_len);
+        let base_y = (oy * stride) as isize - geom.pad_top as isize;
+        let base_x = (ox * stride) as isize - geom.pad_left as isize;
+        let mut idx = 0;
+        for dy in 0..kh {
+            let y = base_y + dy as isize;
+            for dx in 0..kw {
+                let x = base_x + dx as isize;
+                if y >= 0 && (y as usize) < self.h && x >= 0 && (x as usize) < self.w {
+                    let off = ((y as usize) * self.w + x as usize) * self.c;
+                    self.patch[idx..idx + self.c].copy_from_slice(&self.q[off..off + self.c]);
+                    for ch in 0..self.c {
+                        self.packed.push_lane(idx + ch, self.q[off + ch] > 0);
+                    }
+                    idx += self.c;
+                } else {
+                    idx += self.c; // padding: patch stays 0, lanes invalid
+                }
+            }
+        }
+    }
+
+    /// FC "gather": the patch is simply the (h*w-position) channel vector.
+    pub fn gather_fc(&mut self, pos: usize) {
+        let c = self.c;
+        self.reset_buffers(c);
+        self.patch.copy_from_slice(&self.q[pos * c..(pos + 1) * c]);
+        for i in 0..c {
+            self.packed.push_lane(i, self.patch[i] > 0);
+        }
+    }
+
+    /// Clear + resize the reusable patch/packed buffers without freeing.
+    #[inline]
+    fn reset_buffers(&mut self, k_len: usize) {
+        self.patch.clear();
+        self.patch.resize(k_len, 0);
+        let words = k_len.div_ceil(64);
+        if self.packed.bits.len() != words {
+            self.packed.bits.resize(words, 0);
+            self.packed.valid.resize(words, 0);
+        }
+        self.packed.bits.fill(0);
+        self.packed.valid.fill(0);
+        self.packed.len = k_len;
+    }
+}
+
+/// Float max-pool (size x size, stride = size, VALID), window clamped to
+/// the tensor width for W=1 sequence layouts — matches the jnp path.
+pub fn maxpool(input: &Tensor, size: usize) -> Tensor {
+    let kw = size.min(input.w);
+    let oh = input.h / size;
+    let ow = (input.w / size).max(1);
+    let mut out = Tensor::new(oh, ow, input.c);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            for ch in 0..input.c {
+                let mut m = f32::NEG_INFINITY;
+                for dy in 0..size {
+                    for dx in 0..kw {
+                        m = m.max(input.at(oy * size + dy, ox * size + dx, ch));
+                    }
+                }
+                *out.at_mut(oy, ox, ch) = m;
+            }
+        }
+    }
+    out
+}
+
+/// Global average pool over H and W → (1, 1, C).
+pub fn gap(input: &Tensor) -> Tensor {
+    let mut out = Tensor::new(1, 1, input.c);
+    let n = (input.h * input.w) as f32;
+    for ch in 0..input.c {
+        let mut s = 0.0;
+        for y in 0..input.h {
+            for x in 0..input.w {
+                s += input.at(y, x, ch);
+            }
+        }
+        out.data[ch] = s / n;
+    }
+    out
+}
+
+/// Elementwise ReLU.
+pub fn relu(input: &Tensor) -> Tensor {
+    let mut out = input.clone();
+    for v in &mut out.data {
+        *v = v.max(0.0);
+    }
+    out
+}
+
+/// Per-neuron post-dot transform: dequant → BN affine → (+ residual).
+/// Returns the ReLU *input* (pre-activation) value.
+#[inline]
+pub fn relu_input(
+    dot: i32,
+    dq: f32,
+    bn: Option<&(Vec<f32>, Vec<f32>)>,
+    neuron: usize,
+    residual: f32,
+) -> f32 {
+    let mut v = dot as f32 * dq;
+    if let Some((scale, shift)) = bn {
+        v = v * scale[neuron] + shift[neuron];
+    }
+    v + residual
+}
+
+/// Number of MACs a node performs per output element (= K).
+pub fn macs_per_output(node: &Node) -> u64 {
+    node.k_len() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_geom_same_matches_python() {
+        // python _same_pad(16, 3, 1) = (1, 1); out = 16
+        let g = conv_geom(16, 16, 3, 3, 1, true);
+        assert_eq!((g.oh, g.ow, g.pad_top, g.pad_left), (16, 16, 1, 1));
+        // stride 2: out = ceil(16/2) = 8; total = (8-1)*2+3-16 = 1; lo = 0
+        let g = conv_geom(16, 16, 3, 3, 2, true);
+        assert_eq!((g.oh, g.ow, g.pad_top, g.pad_left), (8, 8, 0, 0));
+        // 1-wide W (sequence models): kw=1 → no pad
+        let g = conv_geom(32, 1, 5, 1, 1, true);
+        assert_eq!((g.oh, g.ow, g.pad_top, g.pad_left), (32, 1, 2, 0));
+    }
+
+    #[test]
+    fn conv_geom_valid() {
+        let g = conv_geom(10, 8, 3, 3, 2, false);
+        assert_eq!((g.oh, g.ow), (4, 3));
+        assert_eq!((g.pad_top, g.pad_left), (0, 0));
+    }
+
+    #[test]
+    fn gather_interior_and_padding() {
+        // 3x3x1 input with values 1..9, k=3 SAME, look at corner (0,0)
+        let t = Tensor::from_slice(3, 3, 1, &[1., 2., 3., 4., 5., 6., 7., 8., 9.]);
+        let mut pg = PatchGather::new(&t, 1.0 / 1.0);
+        let geom = conv_geom(3, 3, 3, 3, 1, true);
+        pg.gather(geom, 3, 3, 1, 0, 0);
+        // top-left corner: first row and column padded
+        assert_eq!(pg.patch, vec![0, 0, 0, 0, 1, 2, 0, 4, 5]);
+        // padding lanes invalid; interior lanes valid
+        let valid: Vec<bool> = (0..9).map(|i| pg.packed.valid[0] >> i & 1 == 1).collect();
+        assert_eq!(
+            valid,
+            vec![false, false, false, false, true, true, false, true, true]
+        );
+        // center position: fully interior
+        pg.gather(geom, 3, 3, 1, 1, 1);
+        assert_eq!(pg.patch, vec![1, 2, 3, 4, 5, 6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn gather_binary_dot_padding_contributes_zero() {
+        let t = Tensor::from_slice(2, 2, 1, &[5., -5., 5., -5.]);
+        let mut pg = PatchGather::new(&t, 1.0);
+        let geom = conv_geom(2, 2, 3, 3, 1, true);
+        pg.gather(geom, 3, 3, 1, 0, 0);
+        let w = vec![1i8; 9];
+        let wp = crate::util::bits::PackedVec::from_weights(&w);
+        // valid lanes: the 2x2 interior = acts (+1,-1,+1,-1) → dot 0
+        assert_eq!(pg.packed.dot(&wp), 0);
+    }
+
+    #[test]
+    fn maxpool_and_gap() {
+        let t = Tensor::from_slice(2, 2, 1, &[1., 2., 3., 4.]);
+        let p = maxpool(&t, 2);
+        assert_eq!((p.h, p.w, p.c), (1, 1, 1));
+        assert_eq!(p.data, vec![4.0]);
+        let g = gap(&t);
+        assert_eq!(g.data, vec![2.5]);
+    }
+
+    #[test]
+    fn maxpool_seq_width1() {
+        let t = Tensor::from_slice(4, 1, 2, &[1., -1., 2., -2., 3., -3., 4., -4.]);
+        let p = maxpool(&t, 2);
+        assert_eq!((p.h, p.w, p.c), (2, 1, 2));
+        assert_eq!(p.data, vec![2., -1., 4., -3.]);
+    }
+
+    #[test]
+    fn relu_input_bn_residual() {
+        let bn = (vec![2.0f32], vec![0.5f32]);
+        let v = relu_input(100, 0.01, Some(&bn), 0, 0.25);
+        assert!((v - (1.0 * 2.0 + 0.5 + 0.25)).abs() < 1e-6);
+        let v2 = relu_input(100, 0.01, None, 0, 0.0);
+        assert!((v2 - 1.0).abs() < 1e-6);
+    }
+}

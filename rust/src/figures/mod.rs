@@ -1,0 +1,532 @@
+//! Figure/table harness: regenerates every table and figure of the paper's
+//! evaluation from the built artifacts (see DESIGN.md §6 for the index).
+//!
+//! Each `figXX` function returns a [`Table`] whose rows are the series the
+//! paper plots; `cargo bench` benches and `mor figures` both call these.
+
+use crate::config::{Config, PredictorConfig};
+use crate::energy::{AreaModel, EnergyModel};
+use crate::engine::{self, PatchGather, Tensor};
+use crate::model::{Artifacts, Node};
+use crate::predictor::{exec, EvalSummary, MorPolicy, MorRun, RunOpts};
+use crate::sim::Simulator;
+use crate::util::bench::Table;
+use anyhow::Result;
+
+/// Default evaluation sample counts (kept modest so `cargo bench` finishes
+/// in minutes; `mor figures --samples N` raises them).
+pub const EVAL_SAMPLES: usize = 64;
+pub const SIM_SAMPLES: usize = 8;
+
+pub fn load_all(dir: &str) -> Result<Vec<Artifacts>> {
+    crate::MODELS
+        .iter()
+        .map(|m| Artifacts::load(dir, m))
+        .collect()
+}
+
+fn policy_with(arts: &Artifacts, cfg: PredictorConfig) -> MorPolicy {
+    MorPolicy::new(&arts.model, &arts.predictor, cfg)
+}
+
+// ---------------------------------------------------------------------------
+// Fig 1 — % of computations producing negative ReLU inputs
+// ---------------------------------------------------------------------------
+
+pub fn fig01(artifacts: &[Artifacts], samples: usize) -> Table {
+    let mut t = Table::new(
+        "Fig 1 — % of MACs producing negative (zeroed) ReLU inputs \
+         [paper: 35–69%, avg 55%]",
+        &["model", "neg_relu_macs_pct", "relu_macs_pct_of_total"],
+    );
+    let mut fracs = Vec::new();
+    for a in artifacts {
+        let s = MorRun::evaluate(a, None, samples, RunOpts::default());
+        let frac = s.ops.neg_relu_macs as f64 / s.ops.macs_total.max(1) as f64;
+        let relu_frac = s.ops.relu_macs as f64 / s.ops.macs_total.max(1) as f64;
+        fracs.push(frac);
+        t.row(&[
+            a.meta.name.clone(),
+            format!("{:.1}", frac * 100.0),
+            format!("{:.1}", relu_frac * 100.0),
+        ]);
+    }
+    t.row(&[
+        "average".into(),
+        format!("{:.1}", crate::util::mean(&fracs) * 100.0),
+        String::new(),
+    ]);
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Fig 3 — % of MACs per layer type
+// ---------------------------------------------------------------------------
+
+pub fn fig03(artifacts: &[Artifacts]) -> Table {
+    let mut t = Table::new(
+        "Fig 3 — MAC breakdown per layer type (%)",
+        &["model", "conv_relu", "fc_relu", "conv_bn_relu", "conv_bn_res_relu", "no_relu"],
+    );
+    for a in artifacts {
+        let macs = a.model.mac_counts();
+        let total: u64 = macs.iter().sum();
+        let relu_set = a.model.relu_layers();
+        let mut cats = [0u64; 5];
+        for (i, nd) in a.model.nodes.iter().enumerate() {
+            if !nd.is_compute() {
+                continue;
+            }
+            let is_relu = relu_set.contains(&i);
+            let idx = match nd {
+                _ if !is_relu => 4,
+                Node::Fc { .. } => 1,
+                Node::Conv { bn, res_from, .. } => {
+                    if bn.is_some() && res_from.is_some() {
+                        3
+                    } else if bn.is_some() {
+                        2
+                    } else {
+                        0
+                    }
+                }
+                _ => 4,
+            };
+            cats[idx] += macs[i];
+        }
+        let pct = |v: u64| format!("{:.1}", v as f64 / total as f64 * 100.0);
+        t.row(&[
+            a.meta.name.clone(),
+            pct(cats[0]),
+            pct(cats[1]),
+            pct(cats[2]),
+            pct(cats[3]),
+            pct(cats[4]),
+        ]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Fig 4 — binary vs base dot products for one neuron (scatter series)
+// ---------------------------------------------------------------------------
+
+/// Plain forward that returns every node's output tensor.
+fn node_outputs(model: &crate::model::Model, input: &[f32]) -> Vec<Tensor> {
+    let (h, w, c) = model.input_shape;
+    let input_t = Tensor::from_slice(h, w, c, input);
+    let mut outs: Vec<Tensor> = Vec::with_capacity(model.nodes.len());
+    for node in &model.nodes {
+        let src = if node.consumes() < 0 {
+            &input_t
+        } else {
+            &outs[node.consumes() as usize]
+        };
+        let out = match node {
+            Node::Conv { .. } | Node::Fc { .. } => {
+                forward_compute_plain(model, node, src, &outs)
+            }
+            Node::MaxPool { size, .. } => engine::maxpool(src, *size),
+            Node::Gap { .. } => engine::gap(src),
+            Node::Relu { .. } => engine::relu(src),
+        };
+        outs.push(out);
+    }
+    outs
+}
+
+fn forward_compute_plain(
+    _model: &crate::model::Model,
+    node: &Node,
+    src: &Tensor,
+    outs: &[Tensor],
+) -> Tensor {
+    let r = exec_single(node, src, outs);
+    r.0
+}
+
+/// Compute one layer densely; also return (p_bin, p_base_dequant) per output.
+fn exec_single(node: &Node, src: &Tensor, outs: &[Tensor]) -> (Tensor, Vec<(i32, f32)>) {
+    let (sx, sw, bn, relu_on, kh, kw, stride, pad_same) = match node {
+        Node::Conv { sx, sw, bn, relu, kh, kw, stride, pad_same, .. } => {
+            (*sx, *sw, bn.as_ref(), *relu, *kh, *kw, *stride, *pad_same)
+        }
+        Node::Fc { sx, sw, bn, relu, .. } => (*sx, *sw, bn.as_ref(), *relu, 0, 0, 1, false),
+        _ => unreachable!(),
+    };
+    let residual = match node {
+        Node::Conv { res_from, .. } | Node::Fc { res_from, .. } => res_from.map(|r| &outs[r]),
+        _ => None,
+    };
+    let cout = node.cout();
+    let geom = if kh > 0 {
+        engine::conv_geom(src.h, src.w, kh, kw, stride, pad_same)
+    } else {
+        engine::ConvGeom { oh: src.h, ow: src.w, pad_top: 0, pad_left: 0 }
+    };
+    let rows = geom.oh * geom.ow;
+    let mut out = Tensor::new(geom.oh, geom.ow, cout);
+    let mut taps = Vec::with_capacity(rows * cout);
+    let mut pg = PatchGather::new(src, sx);
+    let dq = sw * sx;
+    for row in 0..rows {
+        if kh > 0 {
+            pg.gather(geom, kh, kw, stride, row / geom.ow, row % geom.ow);
+        } else {
+            pg.gather_fc(row);
+        }
+        for f in 0..cout {
+            let d = engine::dot::dot_i8(&pg.patch, node.filter(f));
+            let pb = pg.packed.dot(&crate::util::bits::PackedVec::from_weights(node.filter(f)));
+            let ri = engine::relu_input(
+                d,
+                dq,
+                bn,
+                f,
+                residual.map(|r| r.data[row * cout + f]).unwrap_or(0.0),
+            );
+            out.data[row * cout + f] = if relu_on { ri.max(0.0) } else { ri };
+            taps.push((pb, d as f32 * dq));
+        }
+    }
+    (out, taps)
+}
+
+pub fn fig04(arts: &Artifacts, samples: usize) -> Table {
+    // pick the neuron with the median correlation in the first ReLU layer
+    // that has FC-like high correlation — the paper shows a TDS neuron with
+    // r = 0.78; we pick the neuron whose |c| is closest to 0.78.
+    let (&layer, lp) = arts
+        .predictor
+        .layers
+        .iter()
+        .next()
+        .expect("predictor has layers");
+    let mut neuron = 0;
+    let mut best = f32::MAX;
+    for (i, &c) in lp.c.iter().enumerate() {
+        let d = (c - 0.78).abs();
+        if d < best {
+            best = d;
+            neuron = i;
+        }
+    }
+    let mut t = Table::new(
+        &format!(
+            "Fig 4 — binary vs base ReLU inputs, {} layer {layer} neuron {neuron} \
+             (c = {:.2}; paper's example: 0.78)",
+            arts.meta.name, lp.c[neuron]
+        ),
+        &["p_bin", "p_base_dequant"],
+    );
+    let n = samples.min(arts.data.n_calib());
+    for s in 0..n {
+        let input = arts.data.calib_sample(s);
+        let outs = node_outputs(&arts.model, input);
+        // recompute the taps for the target layer only
+        let node = &arts.model.nodes[layer];
+        let src_idx = node.consumes();
+        let src = if src_idx < 0 {
+            let (h, w, c) = arts.model.input_shape;
+            Tensor::from_slice(h, w, c, input)
+        } else {
+            outs[src_idx as usize].clone()
+        };
+        let (_, taps) = exec_single(node, &src, &outs);
+        let cout = node.cout();
+        for row in 0..(taps.len() / cout) {
+            let (pb, pbase) = taps[row * cout + neuron];
+            t.row(&[format!("{pb}"), format!("{pbase:.4}")]);
+        }
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Fig 5 — distribution of per-neuron Pearson correlation
+// ---------------------------------------------------------------------------
+
+pub fn fig05(artifacts: &[Artifacts]) -> Table {
+    let buckets = [0.0, 0.2, 0.4, 0.6, 0.8, 0.9, 1.01];
+    let labels = ["<0.2", "0.2-0.4", "0.4-0.6", "0.6-0.8", "0.8-0.9", ">0.9"];
+    let mut t = Table::new(
+        "Fig 5 — distribution of binary/base Pearson correlation per neuron (%)",
+        &["model", labels[0], labels[1], labels[2], labels[3], labels[4], labels[5]],
+    );
+    for a in artifacts {
+        let mut counts = [0usize; 6];
+        let mut total = 0usize;
+        for lp in a.predictor.layers.values() {
+            for &c in &lp.c {
+                let c = c.max(0.0);
+                for b in 0..6 {
+                    if c >= buckets[b] && c < buckets[b + 1] {
+                        counts[b] += 1;
+                        break;
+                    }
+                }
+                total += 1;
+            }
+        }
+        let mut row = vec![a.meta.name.clone()];
+        for b in 0..6 {
+            row.push(format!("{:.1}", counts[b] as f64 / total.max(1) as f64 * 100.0));
+        }
+        t.row(&row);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Fig 6 / Fig 9 — threshold sweeps (binary-only / hybrid)
+// ---------------------------------------------------------------------------
+
+pub const SWEEP_THRESHOLDS: [f32; 7] = [1.0, 0.95, 0.9, 0.85, 0.8, 0.7, 0.6];
+
+pub fn threshold_sweep(
+    artifacts: &[Artifacts],
+    samples: usize,
+    use_clusters: bool,
+) -> Table {
+    let title = if use_clusters {
+        "Fig 9 — hybrid MoR: accuracy loss vs % computations avoided \
+         (threshold sweep 1.0 → 0.6)"
+    } else {
+        "Fig 6 — binary predictor alone: accuracy loss vs % operations saved \
+         (threshold sweep 1.0 → 0.6)"
+    };
+    let mut t = Table::new(title, &["model", "threshold", "ops_saved_pct", "accuracy_loss_pct"]);
+    for a in artifacts {
+        let base = MorRun::evaluate(a, None, samples, RunOpts::default());
+        for &thr in &SWEEP_THRESHOLDS {
+            let pol = policy_with(
+                a,
+                PredictorConfig {
+                    threshold: thr,
+                    use_clusters,
+                    use_binary: true,
+                    ..Default::default()
+                },
+            );
+            let s = MorRun::evaluate(a, Some(&pol), samples, RunOpts::default());
+            t.row(&[
+                a.meta.name.clone(),
+                format!("{thr:.2}"),
+                format!("{:.2}", s.ops.macs_saved_frac() * 100.0),
+                format!("{:.2}", (base.accuracy - s.accuracy) * 100.0),
+            ]);
+        }
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Fig 8 — distribution of closest-neighbour angles
+// ---------------------------------------------------------------------------
+
+pub fn fig08(artifacts: &[Artifacts]) -> Table {
+    let edges = [0.0f32, 50.0, 60.0, 70.0, 80.0, 90.0, 180.0];
+    let labels = ["<50", "50-60", "60-70", "70-80", "80-90", ">90"];
+    let mut t = Table::new(
+        "Fig 8 — angle to closest neuron (%) [paper: majority in 70–80°]",
+        &["model", labels[0], labels[1], labels[2], labels[3], labels[4], labels[5]],
+    );
+    for a in artifacts {
+        let mut counts = [0usize; 6];
+        let mut total = 0usize;
+        for lp in a.predictor.layers.values() {
+            for &ang in &lp.closest_angle_deg {
+                for b in 0..6 {
+                    if ang >= edges[b] && ang < edges[b + 1] {
+                        counts[b] += 1;
+                        break;
+                    }
+                }
+                total += 1;
+            }
+        }
+        let mut row = vec![a.meta.name.clone()];
+        for b in 0..6 {
+            row.push(format!("{:.1}", counts[b] as f64 / total.max(1) as f64 * 100.0));
+        }
+        t.row(&row);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Fig 12 — prediction outcome breakdown
+// ---------------------------------------------------------------------------
+
+pub fn fig12(artifacts: &[Artifacts], samples: usize) -> (Table, Vec<EvalSummary>) {
+    let mut t = Table::new(
+        "Fig 12 — prediction outcomes (% of ReLU-layer outputs) \
+         [paper: correct-zero 7–11%, incorrect-zero 0.4–3.6%, correct-nonzero 10–13%]",
+        &["model", "correct_zero", "incorrect_zero", "correct_nonzero",
+          "incorrect_nonzero", "not_applied", "accuracy_loss_pct"],
+    );
+    let mut sums = Vec::new();
+    for a in artifacts {
+        let base = MorRun::evaluate(a, None, samples, RunOpts::default());
+        // per-DNN threshold from training data, as in the paper
+        let thr = crate::predictor::choose_threshold(a, &PredictorConfig::default(), 3.2, 32);
+        let pol = policy_with(a, PredictorConfig { threshold: thr, ..Default::default() });
+        let s = MorRun::evaluate(a, Some(&pol), samples, RunOpts::default());
+        let p = &s.pred;
+        t.row(&[
+            format!("{} (T={thr})", a.meta.name),
+            format!("{:.2}", p.frac(p.correct_zero) * 100.0),
+            format!("{:.2}", p.frac(p.incorrect_zero) * 100.0),
+            format!("{:.2}", p.frac(p.correct_nonzero) * 100.0),
+            format!("{:.2}", p.frac(p.incorrect_nonzero) * 100.0),
+            format!("{:.2}", p.frac(p.not_applied) * 100.0),
+            format!("{:.2}", (base.accuracy - s.accuracy) * 100.0),
+        ]);
+        sums.push(s);
+    }
+    (t, sums)
+}
+
+// ---------------------------------------------------------------------------
+// Fig 13 — speedup and energy savings on the accelerator
+// ---------------------------------------------------------------------------
+
+pub struct Fig13Row {
+    pub model: String,
+    pub speedup: f64,
+    pub energy_savings: f64,
+    pub base_cycles: u64,
+    pub mor_cycles: u64,
+}
+
+pub fn fig13(artifacts: &[Artifacts], samples: usize, cfg: &Config) -> (Table, Vec<Fig13Row>) {
+    let mut t = Table::new(
+        "Fig 13 — speedup (a) and energy savings (b) vs baseline accelerator \
+         [paper: 1.2x speedup, 16.5% energy savings on average]",
+        &["model", "speedup", "energy_savings_pct", "base_cycles/sample", "mor_cycles/sample"],
+    );
+    let em = EnergyModel::default();
+    let mut rows = Vec::new();
+    let mut speedups = Vec::new();
+    let mut esavs = Vec::new();
+    for a in artifacts {
+        // per-DNN threshold from training data, as in the paper
+        let thr = crate::predictor::choose_threshold(a, &cfg.predictor, 3.2, 32);
+        let pol = policy_with(a, PredictorConfig { threshold: thr, ..cfg.predictor.clone() });
+        let sim = Simulator::new(cfg.clone());
+        let n = samples.min(a.data.n_test());
+        let mut base_cycles = 0u64;
+        let mut mor_cycles = 0u64;
+        let mut base_nj = 0.0;
+        let mut mor_nj = 0.0;
+        for i in 0..n {
+            let r = exec::run_sample(
+                &a.model,
+                Some(&pol),
+                a.data.test_sample(i),
+                RunOpts { oracle: false, collect_trace: true },
+            );
+            let sb = sim.simulate_sample(&a.model, None, None);
+            let sm = sim.simulate_sample(&a.model, Some(&pol), Some(&r.traces));
+            base_cycles += sb.cycles;
+            mor_cycles += sm.cycles;
+            base_nj += em.price(&sb, cfg.accel.frequency_mhz, false).total_nj();
+            mor_nj += em.price(&sm, cfg.accel.frequency_mhz, true).total_nj();
+        }
+        let speedup = base_cycles as f64 / mor_cycles.max(1) as f64;
+        let esav = 1.0 - mor_nj / base_nj.max(1e-9);
+        speedups.push(speedup);
+        esavs.push(esav);
+        t.row(&[
+            a.meta.name.clone(),
+            format!("{speedup:.3}"),
+            format!("{:.1}", esav * 100.0),
+            format!("{}", base_cycles / n as u64),
+            format!("{}", mor_cycles / n as u64),
+        ]);
+        rows.push(Fig13Row {
+            model: a.meta.name.clone(),
+            speedup,
+            energy_savings: esav,
+            base_cycles,
+            mor_cycles,
+        });
+    }
+    t.row(&[
+        "average".into(),
+        format!("{:.3}", crate::util::geomean(&speedups)),
+        format!("{:.1}", crate::util::mean(&esavs) * 100.0),
+        String::new(),
+        String::new(),
+    ]);
+    (t, rows)
+}
+
+// ---------------------------------------------------------------------------
+// Table 1 + area overhead + Monte Carlo
+// ---------------------------------------------------------------------------
+
+pub fn table1(cfg: &Config) -> Table {
+    let mut t = Table::new("Table 1 — simulation parameters", &["parameter"]);
+    for line in cfg.table1().lines() {
+        t.row(&[line.to_string()]);
+    }
+    t
+}
+
+pub fn area_table(cfg: &Config) -> Table {
+    let rep = AreaModel::default().area(&cfg.accel);
+    let mut t = Table::new(
+        "Area overhead of the MoR predictor [paper: 5.3%]",
+        &["component", "mm2"],
+    );
+    t.row(&["baseline accelerator".into(), format!("{:.4}", rep.base_mm2)]);
+    t.row(&["predictor (binCUs + binWeight SRAM)".into(), format!("{:.4}", rep.predictor_mm2)]);
+    t.row(&["overhead".into(), format!("{:.2}%", rep.overhead_frac() * 100.0)]);
+    t
+}
+
+pub fn montecarlo_table(samples: usize) -> Table {
+    let mut t = Table::new(
+        "Monte Carlo validation of Eq. 3-6: P[sign mismatch] = 2θ/360 in any dimension",
+        &["dim", "theta_deg", "measured", "analytic", "abs_err"],
+    );
+    for &dim in &[2usize, 16, 128, 1024] {
+        for &theta in &[15.0f64, 45.0, 75.0, 90.0] {
+            let p = crate::cluster::montecarlo_mismatch_prob(dim, theta, samples, 1234);
+            let want = 2.0 * theta / 360.0;
+            t.row(&[
+                format!("{dim}"),
+                format!("{theta}"),
+                format!("{p:.4}"),
+                format!("{want:.4}"),
+                format!("{:.4}", (p - want).abs()),
+            ]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_thresholds_descend() {
+        let mut prev = f32::INFINITY;
+        for &t in &SWEEP_THRESHOLDS {
+            assert!(t < prev);
+            prev = t;
+        }
+        assert_eq!(SWEEP_THRESHOLDS[0], 1.0);
+        assert_eq!(*SWEEP_THRESHOLDS.last().unwrap(), 0.6);
+    }
+
+    #[test]
+    fn montecarlo_table_rows() {
+        let t = montecarlo_table(2_000);
+        assert_eq!(t.rows.len(), 16);
+        // spot-check analytic column
+        assert_eq!(t.rows[1][3], "0.2500");
+    }
+}

@@ -1,0 +1,45 @@
+//! # Mixture-of-Rookies (MoR) — full-system reproduction
+//!
+//! Reproduction of *"Mixture-of-Rookies: Saving DNN Computations by
+//! Predicting ReLU Outputs"* (Pinto, Arnau, González — 2022) as a
+//! three-layer rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's evaluation platform: a cycle-level
+//!   accelerator simulator ([`sim`]) with an LPDDR4 DRAM model, an
+//!   energy/area model ([`energy`]), the functional int8 inference engine
+//!   ([`engine`]), the online MoR predictor ([`predictor`]), the offline
+//!   angle clustering re-implementation ([`cluster`]), a PJRT runtime to
+//!   execute the AOT-compiled JAX artifacts ([`runtime`]) and a serving
+//!   coordinator ([`coordinator`]).
+//! * **L2 (python/compile)** — the JAX model zoo lowered once to HLO text.
+//! * **L1 (python/compile/kernels)** — Pallas kernels for the dot-product
+//!   hot spots, verified against pure-jnp oracles.
+//!
+//! Python never runs on the request path: `make artifacts` produces
+//! `artifacts/`, after which the `mor` binary is self-contained.
+//!
+//! Entry points:
+//! * [`model::Artifacts::load`] — load a model + predictor + data bundle.
+//! * [`predictor::MorRun`] — run inference with prediction, collect stats.
+//! * [`sim::Simulator`] — replay a skip-trace on the cycle-level model.
+//! * [`figures`] — regenerate every table/figure of the paper.
+
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod energy;
+pub mod engine;
+pub mod figures;
+pub mod model;
+pub mod predictor;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workload;
+
+/// Default artifacts directory, relative to the repo root.
+pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";
+
+/// The four benchmark models of the paper (Section 5.1).
+pub const MODELS: [&str; 4] = ["tds", "cnn10", "darknet19m", "resnet18m"];

@@ -1,0 +1,249 @@
+//! `mor` — leader binary for the Mixture-of-Rookies reproduction.
+//!
+//! See `mor help` (cli::USAGE) for commands. Python is only needed once,
+//! at `make artifacts`; this binary is self-contained afterwards.
+
+use anyhow::{bail, Result};
+use mor::cli::{Args, USAGE};
+use mor::config::Config;
+use mor::coordinator::{self, Backend};
+use mor::figures;
+use mor::model::Artifacts;
+use mor::predictor::{MorPolicy, MorRun, RunOpts};
+use mor::workload::RequestStream;
+
+fn main() {
+    let args = match Args::parse(std::env::args()) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "run" => cmd_run(args),
+        "simulate" => cmd_simulate(args),
+        "figures" => cmd_figures(args),
+        "serve" => cmd_serve(args),
+        "info" => cmd_info(args),
+        "help" | "" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n\n{USAGE}"),
+    }
+}
+
+fn models_arg(args: &Args) -> Vec<String> {
+    match args.opt("model") {
+        Some(m) => m.split(',').map(|s| s.trim().to_string()).collect(),
+        None => mor::MODELS.iter().map(|s| s.to_string()).collect(),
+    }
+}
+
+fn config_from(args: &Args) -> Result<Config> {
+    let mut cfg = match args.opt("config") {
+        Some(path) => Config::from_file(path)?,
+        None => Config::default(),
+    };
+    cfg.predictor.threshold = args.opt_f64("threshold", cfg.predictor.threshold as f64)? as f32;
+    if args.flag("no-clusters") {
+        cfg.predictor.use_clusters = false;
+    }
+    if args.flag("no-binary") {
+        cfg.predictor.use_binary = false;
+    }
+    Ok(cfg)
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let dir = args.opt_or("artifacts", mor::DEFAULT_ARTIFACTS_DIR);
+    let samples = args.opt_usize("samples", 128)?;
+    let cfg = config_from(args)?;
+    let auto_thr = args.opt("threshold").is_none();
+    for name in models_arg(args) {
+        let arts = Artifacts::load(dir, &name)?;
+        let base = MorRun::evaluate(&arts, None, samples, RunOpts::default());
+        let mut pcfg = cfg.predictor.clone();
+        if auto_thr {
+            // paper (Sec 3.2.1): T is set per DNN using training data
+            pcfg.threshold = mor::predictor::choose_threshold(&arts, &pcfg, 3.2, 32);
+        }
+        let pol = MorPolicy::new(&arts.model, &arts.predictor, pcfg.clone());
+        let s = MorRun::evaluate(&arts, Some(&pol), samples, RunOpts::default());
+        let p = &s.pred;
+        println!(
+            "[{name}] T={:.2}{} | acc {:.2}% (baseline {:.2}%, Δ {:+.2}%) | \
+             MACs saved {:.1}% | DRAM wt saved {:.1}%",
+            pcfg.threshold,
+            if auto_thr { " (auto)" } else { "" },
+            s.accuracy * 100.0,
+            base.accuracy * 100.0,
+            (s.accuracy - base.accuracy) * 100.0,
+            s.ops.macs_saved_frac() * 100.0,
+            s.ops.weight_bytes_saved as f64
+                / (s.ops.weight_bytes_fetched + s.ops.weight_bytes_saved).max(1) as f64
+                * 100.0,
+        );
+        println!(
+            "       outcomes: correct-zero {:.2}% | incorrect-zero {:.2}% | \
+             correct-nonzero {:.2}% | incorrect-nonzero {:.2}% | not-applied {:.2}%",
+            p.frac(p.correct_zero) * 100.0,
+            p.frac(p.incorrect_zero) * 100.0,
+            p.frac(p.correct_nonzero) * 100.0,
+            p.frac(p.incorrect_nonzero) * 100.0,
+            p.frac(p.not_applied) * 100.0,
+        );
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let dir = args.opt_or("artifacts", mor::DEFAULT_ARTIFACTS_DIR);
+    let samples = args.opt_usize("samples", figures::SIM_SAMPLES)?;
+    let cfg = config_from(args)?;
+    let artifacts: Vec<Artifacts> = models_arg(args)
+        .iter()
+        .map(|m| Artifacts::load(dir, m))
+        .collect::<Result<_>>()?;
+    let (table, _) = figures::fig13(&artifacts, samples, &cfg);
+    table.print();
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let dir = args.opt_or("artifacts", mor::DEFAULT_ARTIFACTS_DIR);
+    let out = args.opt_or("out", "figures_out");
+    let samples = args.opt_usize("samples", figures::EVAL_SAMPLES)?;
+    let sim_samples = args.opt_usize("sim-samples", figures::SIM_SAMPLES)?;
+    let cfg = config_from(args)?;
+    let all = args.flag("all") || args.positional.is_empty();
+    let want = |id: &str| all || args.positional.iter().any(|p| p == id);
+
+    let artifacts = figures::load_all(dir)?;
+    let emit = |name: &str, t: mor::util::bench::Table| -> Result<()> {
+        t.print();
+        t.write_csv(out, name)?;
+        Ok(())
+    };
+
+    if want("fig1") {
+        emit("fig01_neg_relu", figures::fig01(&artifacts, samples))?;
+    }
+    if want("fig3") {
+        emit("fig03_mac_breakdown", figures::fig03(&artifacts))?;
+    }
+    if want("fig4") {
+        let tds = artifacts
+            .iter()
+            .find(|a| a.meta.name == "tds")
+            .unwrap_or(&artifacts[0]);
+        emit("fig04_scatter", figures::fig04(tds, 8))?;
+    }
+    if want("fig5") {
+        emit("fig05_corr_hist", figures::fig05(&artifacts))?;
+    }
+    if want("fig6") {
+        emit(
+            "fig06_threshold_sweep",
+            figures::threshold_sweep(&artifacts, samples, false),
+        )?;
+    }
+    if want("fig8") {
+        emit("fig08_angle_hist", figures::fig08(&artifacts))?;
+    }
+    if want("fig9") {
+        emit(
+            "fig09_hybrid_sweep",
+            figures::threshold_sweep(&artifacts, samples, true),
+        )?;
+    }
+    if want("fig12") {
+        let (t, _) = figures::fig12(&artifacts, samples);
+        emit("fig12_pred_breakdown", t)?;
+    }
+    if want("fig13") {
+        let (t, _) = figures::fig13(&artifacts, sim_samples, &cfg);
+        emit("fig13_speedup_energy", t)?;
+    }
+    if want("table1") {
+        emit("table1_config", figures::table1(&cfg))?;
+    }
+    if want("area") {
+        emit("area_overhead", figures::area_table(&cfg))?;
+    }
+    if want("montecarlo") {
+        emit("montecarlo_angles", figures::montecarlo_table(100_000))?;
+    }
+    println!("\nCSV series written to {out}/");
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let dir = args.opt_or("artifacts", mor::DEFAULT_ARTIFACTS_DIR);
+    let model = args.opt_or("model", "tds");
+    let rps = args.opt_f64("rps", 200.0)?;
+    let duration = args.opt_f64("duration", 5.0)?;
+    let workers = args.opt_usize("workers", 4)?;
+    let backend = match args.opt_or("runtime", "engine") {
+        "pjrt" => Backend::Pjrt,
+        "engine" => Backend::Engine,
+        other => bail!("--runtime must be 'engine' or 'pjrt', got '{other}'"),
+    };
+    let cfg = config_from(args)?;
+
+    let arts = Artifacts::load(dir, model)?;
+    let policy = if args.flag("no-predictor") {
+        None
+    } else {
+        Some(MorPolicy::new(
+            &arts.model,
+            &arts.predictor,
+            cfg.predictor.clone(),
+        ))
+    };
+    let mut stream = RequestStream::new(rps, arts.data.n_test(), 42);
+    let requests = stream.generate(duration);
+    println!(
+        "[serve] model={model} backend={backend:?} workers={workers} \
+         rps={rps} duration={duration}s → {} requests",
+        requests.len()
+    );
+    let report = coordinator::serve(&arts, policy, backend, workers, requests, dir, 1.0)?;
+    report.print(model);
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    if args.flag("config") {
+        println!("{}", cfg.table1());
+        return Ok(());
+    }
+    let dir = args.opt_or("artifacts", mor::DEFAULT_ARTIFACTS_DIR);
+    let metas = mor::model::load_meta(dir)?;
+    println!("artifacts in {dir}:");
+    for m in metas {
+        println!(
+            "  {:<12} input {:?} | {:.1}M MACs/sample | fp32 {:.1}% | int8 {:.1}% | {} relu layers",
+            m.name,
+            m.input_shape,
+            m.macs_per_sample as f64 / 1e6,
+            m.fp32_accuracy * 100.0,
+            m.int8_accuracy * 100.0,
+            m.relu_layers.len()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,136 @@
+//! MORD v1 parser — evaluation data written by python/compile/artifacts_io.py.
+
+use anyhow::{ensure, Context, Result};
+use std::path::Path;
+
+/// Test + calibration splits for one model, stored as float32 NHWC.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub shape: (usize, usize, usize), // (H, W, C) per sample
+    pub test_x: Vec<f32>,             // n_test * H*W*C
+    pub test_y: Vec<u16>,
+    pub calib_x: Vec<f32>,
+    pub calib_y: Vec<u16>,
+}
+
+impl Dataset {
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Dataset> {
+        let buf = std::fs::read(&path)
+            .with_context(|| format!("reading {} — run `make artifacts`", path.as_ref().display()))?;
+        ensure!(buf.len() >= 28 && &buf[..4] == b"MORD", "bad MORD magic");
+        let u = |o: usize| u32::from_le_bytes(buf[o..o + 4].try_into().unwrap()) as usize;
+        let version = u(4);
+        ensure!(version == 1, "unsupported MORD version {version}");
+        let (n_test, n_calib, h, w, c) = (u(8), u(12), u(16), u(20), u(24));
+        let sample = h * w * c;
+        let mut off = 28;
+        let take_f32 = |off: &mut usize, n: usize| -> Result<Vec<f32>> {
+            ensure!(*off + 4 * n <= buf.len(), "truncated MORD file");
+            let v = buf[*off..*off + 4 * n]
+                .chunks_exact(4)
+                .map(|ch| f32::from_le_bytes(ch.try_into().unwrap()))
+                .collect();
+            *off += 4 * n;
+            Ok(v)
+        };
+        let take_u16 = |off: &mut usize, n: usize| -> Result<Vec<u16>> {
+            ensure!(*off + 2 * n <= buf.len(), "truncated MORD file");
+            let v = buf[*off..*off + 2 * n]
+                .chunks_exact(2)
+                .map(|ch| u16::from_le_bytes(ch.try_into().unwrap()))
+                .collect();
+            *off += 2 * n;
+            Ok(v)
+        };
+        let test_x = take_f32(&mut off, n_test * sample)?;
+        let test_y = take_u16(&mut off, n_test)?;
+        let calib_x = take_f32(&mut off, n_calib * sample)?;
+        let calib_y = take_u16(&mut off, n_calib)?;
+        ensure!(off == buf.len(), "trailing bytes in MORD file");
+        Ok(Dataset {
+            shape: (h, w, c),
+            test_x,
+            test_y,
+            calib_x,
+            calib_y,
+        })
+    }
+
+    pub fn n_test(&self) -> usize {
+        self.test_y.len()
+    }
+
+    pub fn n_calib(&self) -> usize {
+        self.calib_y.len()
+    }
+
+    pub fn sample_len(&self) -> usize {
+        self.shape.0 * self.shape.1 * self.shape.2
+    }
+
+    /// The i-th test sample as a (H*W*C) float slice.
+    pub fn test_sample(&self, i: usize) -> &[f32] {
+        let n = self.sample_len();
+        &self.test_x[i * n..(i + 1) * n]
+    }
+
+    pub fn calib_sample(&self, i: usize) -> &[f32] {
+        let n = self.sample_len();
+        &self.calib_x[i * n..(i + 1) * n]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_mord(n_test: usize, n_calib: usize, h: usize, w: usize, c: usize) -> Vec<u8> {
+        let mut b: Vec<u8> = Vec::new();
+        b.extend(b"MORD");
+        for v in [1u32, n_test as u32, n_calib as u32, h as u32, w as u32, c as u32] {
+            b.extend(v.to_le_bytes());
+        }
+        let sample = h * w * c;
+        for i in 0..n_test * sample {
+            b.extend((i as f32 * 0.25).to_le_bytes());
+        }
+        for i in 0..n_test {
+            b.extend((i as u16).to_le_bytes());
+        }
+        for i in 0..n_calib * sample {
+            b.extend((-(i as f32)).to_le_bytes());
+        }
+        for _ in 0..n_calib {
+            b.extend(9u16.to_le_bytes());
+        }
+        b
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("mor_d_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.data.bin");
+        std::fs::write(&p, mk_mord(3, 2, 2, 1, 4)).unwrap();
+        let d = Dataset::load(&p).unwrap();
+        assert_eq!(d.shape, (2, 1, 4));
+        assert_eq!(d.n_test(), 3);
+        assert_eq!(d.n_calib(), 2);
+        assert_eq!(d.test_sample(1)[0], 8.0 * 0.25);
+        assert_eq!(d.test_y, vec![0, 1, 2]);
+        assert_eq!(d.calib_y, vec![9, 9]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let dir = std::env::temp_dir().join(format!("mor_dt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.data.bin");
+        let mut bytes = mk_mord(2, 1, 2, 1, 2);
+        bytes.pop();
+        std::fs::write(&p, bytes).unwrap();
+        assert!(Dataset::load(&p).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,235 @@
+//! Artifact loaders: quantized models (MORW), predictor parameters (JSON),
+//! evaluation data (MORD) and the bundle index (meta.json).
+//!
+//! Formats are defined in python/compile/artifacts_io.py; the loaders here
+//! parse the exact bytes that file writes.
+
+mod data;
+mod predictor_params;
+mod weights;
+
+pub use data::Dataset;
+pub use predictor_params::{LayerPredictor, PredictorParams};
+pub use weights::{Model, Node};
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Metadata for one model from meta.json.
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub name: String,
+    pub input_shape: (usize, usize, usize),
+    pub macs_per_sample: u64,
+    pub fp32_accuracy: f64,
+    pub int8_accuracy: f64,
+    pub relu_layers: Vec<usize>,
+}
+
+/// A fully loaded model bundle.
+pub struct Artifacts {
+    pub meta: ModelMeta,
+    pub model: Model,
+    pub predictor: PredictorParams,
+    pub data: Dataset,
+}
+
+impl Artifacts {
+    /// Load `<dir>/<name>.{w.bin,predictor.json,data.bin}` + meta.json.
+    pub fn load<P: AsRef<Path>>(dir: P, name: &str) -> Result<Artifacts> {
+        let dir = dir.as_ref();
+        let meta = load_meta(dir)?
+            .into_iter()
+            .find(|m| m.name == name)
+            .with_context(|| format!("model '{name}' not in {}/meta.json", dir.display()))?;
+        let mut model = Model::load(dir.join(format!("{name}.w.bin")), name)?;
+        model.input_shape = meta.input_shape;
+        let predictor = PredictorParams::load(dir.join(format!("{name}.predictor.json")))?;
+        let data = Dataset::load(dir.join(format!("{name}.data.bin")))?;
+        anyhow::ensure!(
+            data.shape == meta.input_shape,
+            "data shape {:?} != meta input_shape {:?}",
+            data.shape,
+            meta.input_shape
+        );
+        Ok(Artifacts {
+            meta,
+            model,
+            predictor,
+            data,
+        })
+    }
+
+    pub fn hlo_path<P: AsRef<Path>>(dir: P, name: &str) -> PathBuf {
+        dir.as_ref().join(format!("{name}_fwd.hlo.txt"))
+    }
+}
+
+/// Parse meta.json into per-model metadata.
+pub fn load_meta<P: AsRef<Path>>(dir: P) -> Result<Vec<ModelMeta>> {
+    let path = dir.as_ref().join("meta.json");
+    let src = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+    let j = Json::parse(&src).context("parsing meta.json")?;
+    let models = j
+        .get("models")
+        .and_then(|m| m.as_arr())
+        .context("meta.json: missing 'models'")?;
+    models
+        .iter()
+        .map(|m| {
+            let shape = m
+                .get("input_shape")
+                .and_then(|s| s.as_usize_vec())
+                .context("meta.json: input_shape")?;
+            anyhow::ensure!(shape.len() == 3, "input_shape must be rank 3");
+            Ok(ModelMeta {
+                name: m
+                    .get("name")
+                    .and_then(|v| v.as_str())
+                    .context("meta.json: name")?
+                    .to_string(),
+                input_shape: (shape[0], shape[1], shape[2]),
+                macs_per_sample: m
+                    .get("macs_per_sample")
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or(0.0) as u64,
+                fp32_accuracy: m.get("fp32_accuracy").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                int8_accuracy: m.get("int8_accuracy").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                relu_layers: m
+                    .get("relu_layers")
+                    .and_then(|v| v.as_usize_vec())
+                    .unwrap_or_default(),
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    //! Synthetic in-memory models for unit tests that must not depend on
+    //! `make artifacts` having run.
+    use super::weights::{Model, Node};
+    use crate::util::rng::Rng;
+
+    /// Tiny 2-layer FC model: 8 -> 6 (relu) -> 4, no BN.
+    pub fn tiny_fc(seed: u64) -> Model {
+        let mut rng = Rng::new(seed);
+        let mut w1 = vec![0i8; 8 * 6];
+        let mut w2 = vec![0i8; 6 * 4];
+        for v in w1.iter_mut().chain(w2.iter_mut()) {
+            *v = rng.int8();
+        }
+        Model {
+            name: "tiny_fc".into(),
+            sx0: 1.0 / 127.0,
+            input_shape: (1, 1, 8),
+            nodes: vec![
+                Node::Fc {
+                    cin: 8,
+                    cout: 6,
+                    sw: 0.01,
+                    sx: 1.0 / 127.0,
+                    w: w1,
+                    bn: None,
+                    relu: true,
+                    res_from: None,
+                    consumes: -1,
+                },
+                Node::Fc {
+                    cin: 6,
+                    cout: 4,
+                    sw: 0.02,
+                    sx: 0.05,
+                    w: w2,
+                    bn: None,
+                    relu: false,
+                    res_from: None,
+                    consumes: 0,
+                },
+            ],
+        }
+    }
+
+    /// Tiny conv model with BN + residual + pooling, 6x6x2 input.
+    pub fn tiny_conv(seed: u64) -> Model {
+        let mut rng = Rng::new(seed);
+        let mut mk = |n: usize| -> Vec<i8> { (0..n).map(|_| rng.int8()).collect() };
+        let c1 = mk(3 * 3 * 2 * 4);
+        let proj = mk(1 * 1 * 4 * 4);
+        let c2 = mk(3 * 3 * 4 * 4);
+        let c3 = mk(3 * 3 * 4 * 4);
+        Model {
+            name: "tiny_conv".into(),
+            sx0: 1.0 / 127.0,
+            input_shape: (6, 6, 2),
+            nodes: vec![
+                // 0: stem conv + bn + relu
+                Node::Conv {
+                    kh: 3, kw: 3, cin: 2, cout: 4, stride: 1, pad_same: true,
+                    sw: 0.01, sx: 1.0 / 127.0, w: c1,
+                    bn: Some((vec![1.0; 4], vec![0.05; 4])),
+                    relu: true, res_from: None, consumes: -1,
+                },
+                // 1: projection (no relu) — side branch reading node 0
+                Node::Conv {
+                    kh: 1, kw: 1, cin: 4, cout: 4, stride: 1, pad_same: true,
+                    sw: 0.02, sx: 0.04, w: proj,
+                    bn: Some((vec![1.0; 4], vec![0.0; 4])),
+                    relu: false, res_from: None, consumes: 0,
+                },
+                // 2: conv + bn + relu reading node 0
+                Node::Conv {
+                    kh: 3, kw: 3, cin: 4, cout: 4, stride: 1, pad_same: true,
+                    sw: 0.015, sx: 0.04, w: c2,
+                    bn: Some((vec![0.9; 4], vec![-0.02; 4])),
+                    relu: true, res_from: None, consumes: 0,
+                },
+                // 3: conv + bn + residual(node 1), no relu
+                Node::Conv {
+                    kh: 3, kw: 3, cin: 4, cout: 4, stride: 1, pad_same: true,
+                    sw: 0.015, sx: 0.03, w: c3,
+                    bn: Some((vec![1.1; 4], vec![0.01; 4])),
+                    relu: false, res_from: Some(1), consumes: 2,
+                },
+                // 4: standalone relu
+                Node::Relu { consumes: 3 },
+                // 5: maxpool
+                Node::MaxPool { size: 2, consumes: 4 },
+                // 6: gap
+                Node::Gap { consumes: 5 },
+            ],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_parse_minimal() {
+        let dir = std::env::temp_dir().join(format!("mor_meta_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("meta.json"),
+            r#"{"version":1,"models":[{"name":"toy","input_shape":[4,1,3],
+                "macs_per_sample":123,"fp32_accuracy":0.9,"int8_accuracy":0.88,
+                "relu_layers":[0,2]}]}"#,
+        )
+        .unwrap();
+        let metas = load_meta(&dir).unwrap();
+        assert_eq!(metas.len(), 1);
+        assert_eq!(metas[0].name, "toy");
+        assert_eq!(metas[0].input_shape, (4, 1, 3));
+        assert_eq!(metas[0].macs_per_sample, 123);
+        assert_eq!(metas[0].relu_layers, vec![0, 2]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_meta_is_error() {
+        assert!(load_meta("/nonexistent/dir").is_err());
+    }
+}

@@ -1,0 +1,200 @@
+//! Predictor parameter loader — `<model>.predictor.json` written by
+//! python/compile/calibrate.py (offline stage, Section 3.2 of the paper).
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Offline parameters for one predictable (ReLU) layer.
+#[derive(Clone, Debug)]
+pub struct LayerPredictor {
+    pub layer: usize,
+    /// Per-neuron Pearson correlation between binary and base dot products.
+    pub c: Vec<f32>,
+    /// Per-neuron fitted line slope (dequant units per binary count).
+    pub m: Vec<f32>,
+    /// Per-neuron fitted line intercept.
+    pub b: Vec<f32>,
+    /// Per-neuron regression residual std (skip-confidence margin unit);
+    /// zeros when the artifact predates the field.
+    pub s: Vec<f32>,
+    /// Clusters: `[proxy, member, member, ...]`, a partition of all neurons.
+    pub clusters: Vec<Vec<usize>>,
+    /// Angle (degrees) to each neuron's closest peer (Fig 8 data).
+    pub closest_angle_deg: Vec<f32>,
+    /// Derived: for each neuron, its proxy (proxy of a singleton = itself).
+    pub proxy_of: Vec<usize>,
+}
+
+impl LayerPredictor {
+    pub fn neurons(&self) -> usize {
+        self.c.len()
+    }
+
+    pub fn is_proxy(&self, n: usize) -> bool {
+        self.proxy_of[n] == n
+    }
+}
+
+/// All layers' offline parameters for one model.
+#[derive(Clone, Debug)]
+pub struct PredictorParams {
+    pub model: String,
+    pub default_threshold: f32,
+    pub layers: BTreeMap<usize, LayerPredictor>,
+}
+
+impl PredictorParams {
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<PredictorParams> {
+        let src = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts`", path.as_ref().display()))?;
+        let j = Json::parse(&src).context("parsing predictor.json")?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<PredictorParams> {
+        let model = j
+            .get("model")
+            .and_then(|v| v.as_str())
+            .context("predictor.json: model")?
+            .to_string();
+        let default_threshold = j
+            .get("default_threshold")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.85) as f32;
+        let mut layers = BTreeMap::new();
+        for l in j
+            .get("layers")
+            .and_then(|v| v.as_arr())
+            .context("predictor.json: layers")?
+        {
+            let layer = l
+                .get("layer")
+                .and_then(|v| v.as_usize())
+                .context("layer id")?;
+            let c = l.get("c").and_then(|v| v.as_f32_vec()).context("c")?;
+            let m = l.get("m").and_then(|v| v.as_f32_vec()).context("m")?;
+            let b = l.get("b").and_then(|v| v.as_f32_vec()).context("b")?;
+            let s = l
+                .get("s")
+                .and_then(|v| v.as_f32_vec())
+                .unwrap_or_else(|| vec![0.0; c.len()]);
+            let closest_angle_deg = l
+                .get("closest_angle_deg")
+                .and_then(|v| v.as_f32_vec())
+                .unwrap_or_default();
+            let clusters: Vec<Vec<usize>> = l
+                .get("clusters")
+                .and_then(|v| v.as_arr())
+                .context("clusters")?
+                .iter()
+                .map(|cl| cl.as_usize_vec().context("cluster entry"))
+                .collect::<Result<_>>()?;
+            let n = c.len();
+            anyhow::ensure!(
+                m.len() == n && b.len() == n,
+                "predictor layer {layer}: c/m/b length mismatch"
+            );
+            let mut proxy_of = vec![usize::MAX; n];
+            for cl in &clusters {
+                anyhow::ensure!(!cl.is_empty(), "empty cluster in layer {layer}");
+                let proxy = cl[0];
+                for &member in cl {
+                    anyhow::ensure!(
+                        member < n,
+                        "cluster member {member} out of range in layer {layer}"
+                    );
+                    anyhow::ensure!(
+                        proxy_of[member] == usize::MAX,
+                        "neuron {member} appears in two clusters (layer {layer})"
+                    );
+                    proxy_of[member] = proxy;
+                }
+            }
+            anyhow::ensure!(
+                proxy_of.iter().all(|&p| p != usize::MAX),
+                "clusters do not cover all neurons in layer {layer}"
+            );
+            layers.insert(
+                layer,
+                LayerPredictor {
+                    layer,
+                    c,
+                    m,
+                    b,
+                    s,
+                    clusters,
+                    closest_angle_deg,
+                    proxy_of,
+                },
+            );
+        }
+        Ok(PredictorParams {
+            model,
+            default_threshold,
+            layers,
+        })
+    }
+}
+
+#[cfg(test)]
+pub(crate) fn toy_layer(n: usize, clusters: Vec<Vec<usize>>) -> LayerPredictor {
+    let mut proxy_of = vec![usize::MAX; n];
+    for cl in &clusters {
+        for &m in cl {
+            proxy_of[m] = cl[0];
+        }
+    }
+    LayerPredictor {
+        layer: 0,
+        c: vec![1.0; n],
+        m: vec![1.0; n],
+        b: vec![0.0; n],
+        s: vec![0.0; n],
+        clusters,
+        closest_angle_deg: vec![45.0; n],
+        proxy_of,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "model": "toy", "default_threshold": 0.8,
+      "layers": [{
+         "layer": 2, "neurons": 4,
+         "c": [0.9, 0.2, 0.95, 0.5],
+         "m": [1.5, 0.0, 2.0, 1.0],
+         "b": [0.1, 0.0, -0.2, 0.0],
+         "clusters": [[2, 0, 3], [1]],
+         "closest_angle_deg": [70.0, 85.0, 70.0, 76.0]
+      }]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let p = PredictorParams::from_json(&Json::parse(SAMPLE).unwrap()).unwrap();
+        assert_eq!(p.model, "toy");
+        assert_eq!(p.default_threshold, 0.8);
+        let l = &p.layers[&2];
+        assert_eq!(l.neurons(), 4);
+        assert_eq!(l.proxy_of, vec![2, 1, 2, 2]);
+        assert!(l.is_proxy(2) && l.is_proxy(1));
+        assert!(!l.is_proxy(0) && !l.is_proxy(3));
+    }
+
+    #[test]
+    fn rejects_overlapping_clusters() {
+        let bad = SAMPLE.replace("[[2, 0, 3], [1]]", "[[2, 0, 3], [1, 0]]");
+        assert!(PredictorParams::from_json(&Json::parse(&bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn rejects_partial_cover() {
+        let bad = SAMPLE.replace("[[2, 0, 3], [1]]", "[[2, 0], [1]]");
+        assert!(PredictorParams::from_json(&Json::parse(&bad).unwrap()).is_err());
+    }
+}

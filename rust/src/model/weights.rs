@@ -1,0 +1,426 @@
+//! MORW v1 parser — the quantized model format written by
+//! python/compile/artifacts_io.py (see its docstring for the byte layout).
+
+use anyhow::{bail, ensure, Context, Result};
+use std::path::Path;
+
+/// One node of the layer graph. Conv weights are re-laid-out at load time
+/// to filter-major `[cout][kh*kw*cin]` (the dot-product hot path wants each
+/// filter contiguous); FC weights to `[cout][cin]`.
+#[derive(Clone, Debug)]
+pub enum Node {
+    Conv {
+        kh: usize,
+        kw: usize,
+        cin: usize,
+        cout: usize,
+        stride: usize,
+        pad_same: bool,
+        sw: f32,
+        sx: f32,
+        /// filter-major: w[f * k_len + k], k in (kh,kw,cin) row-major order
+        w: Vec<i8>,
+        /// folded batch-norm (scale, shift), if present
+        bn: Option<(Vec<f32>, Vec<f32>)>,
+        relu: bool,
+        res_from: Option<usize>,
+        /// index of the node whose output this consumes (-1 = model input)
+        consumes: i32,
+    },
+    Fc {
+        cin: usize,
+        cout: usize,
+        sw: f32,
+        sx: f32,
+        /// filter-major: w[f * cin + k]
+        w: Vec<i8>,
+        bn: Option<(Vec<f32>, Vec<f32>)>,
+        relu: bool,
+        res_from: Option<usize>,
+        consumes: i32,
+    },
+    MaxPool {
+        size: usize,
+        consumes: i32,
+    },
+    Gap {
+        consumes: i32,
+    },
+    Relu {
+        consumes: i32,
+    },
+}
+
+impl Node {
+    pub fn consumes(&self) -> i32 {
+        match self {
+            Node::Conv { consumes, .. }
+            | Node::Fc { consumes, .. }
+            | Node::MaxPool { consumes, .. }
+            | Node::Gap { consumes }
+            | Node::Relu { consumes } => *consumes,
+        }
+    }
+
+    pub fn is_compute(&self) -> bool {
+        matches!(self, Node::Conv { .. } | Node::Fc { .. })
+    }
+
+    /// Dot-product length (weights per neuron).
+    pub fn k_len(&self) -> usize {
+        match self {
+            Node::Conv { kh, kw, cin, .. } => kh * kw * cin,
+            Node::Fc { cin, .. } => *cin,
+            _ => 0,
+        }
+    }
+
+    pub fn cout(&self) -> usize {
+        match self {
+            Node::Conv { cout, .. } | Node::Fc { cout, .. } => *cout,
+            _ => 0,
+        }
+    }
+
+    pub fn relu(&self) -> bool {
+        match self {
+            Node::Conv { relu, .. } | Node::Fc { relu, .. } => *relu,
+            _ => false,
+        }
+    }
+
+    /// Weight slice for filter `f` (compute nodes only).
+    pub fn filter(&self, f: usize) -> &[i8] {
+        let (w, k) = match self {
+            Node::Conv { w, .. } => (w, self.k_len()),
+            Node::Fc { w, cin, .. } => (w, *cin),
+            _ => panic!("filter() on non-compute node"),
+        };
+        &w[f * k..(f + 1) * k]
+    }
+}
+
+/// A loaded quantized model.
+#[derive(Clone, Debug)]
+pub struct Model {
+    pub name: String,
+    pub sx0: f32,
+    /// (H, W, C) — provided by meta/data (MORW itself carries no shape).
+    pub input_shape: (usize, usize, usize),
+    pub nodes: Vec<Node>,
+}
+
+impl Model {
+    pub fn load<P: AsRef<Path>>(path: P, name: &str) -> Result<Model> {
+        let buf = std::fs::read(&path)
+            .with_context(|| format!("reading {} — run `make artifacts`", path.as_ref().display()))?;
+        let mut r = Reader { buf: &buf, pos: 0 };
+        ensure!(r.bytes(4)? == b"MORW", "bad magic in {}", path.as_ref().display());
+        let version = r.u32()?;
+        ensure!(version == 1, "unsupported MORW version {version}");
+        let n_nodes = r.u32()? as usize;
+        let sx0 = r.f32()?;
+        let mut nodes = Vec::with_capacity(n_nodes);
+        for _ in 0..n_nodes {
+            nodes.push(parse_node(&mut r)?);
+        }
+        ensure!(r.pos == buf.len(), "trailing bytes in MORW file");
+        Ok(Model {
+            name: name.to_string(),
+            sx0,
+            input_shape: (0, 0, 0), // filled by Artifacts::load via Dataset
+            nodes,
+        })
+    }
+
+    /// Node output (H,W,C) shapes, given the input shape.
+    pub fn node_shapes(&self) -> Vec<(usize, usize, usize)> {
+        let mut shapes: Vec<(usize, usize, usize)> = Vec::with_capacity(self.nodes.len());
+        for nd in &self.nodes {
+            let (h, w, c) = self.input_shape_of(nd.consumes(), &shapes);
+            let s = match nd {
+                Node::Conv {
+                    kh,
+                    kw,
+                    cout,
+                    stride,
+                    pad_same,
+                    ..
+                } => {
+                    if *pad_same {
+                        (h.div_ceil(*stride), w.div_ceil(*stride), *cout)
+                    } else {
+                        ((h - kh) / stride + 1, (w - kw) / stride + 1, *cout)
+                    }
+                }
+                Node::Fc { cout, .. } => (h, w, *cout),
+                Node::MaxPool { size, .. } => (h / size, (w / size).max(1), c),
+                Node::Gap { .. } => (1, 1, c),
+                Node::Relu { .. } => (h, w, c),
+            };
+            shapes.push(s);
+        }
+        shapes
+    }
+
+    fn input_shape_of(
+        &self,
+        consumes: i32,
+        shapes: &[(usize, usize, usize)],
+    ) -> (usize, usize, usize) {
+        if consumes < 0 {
+            self.input_shape
+        } else {
+            shapes[consumes as usize]
+        }
+    }
+
+    /// MACs per node for one sample (Fig 1 / Fig 3 / simulator workloads).
+    pub fn mac_counts(&self) -> Vec<u64> {
+        let shapes = self.node_shapes();
+        self.nodes
+            .iter()
+            .enumerate()
+            .map(|(i, nd)| match nd {
+                Node::Conv { .. } | Node::Fc { .. } => {
+                    let (oh, ow, _) = shapes[i];
+                    (oh * ow * nd.cout() * nd.k_len()) as u64
+                }
+                _ => 0,
+            })
+            .collect()
+    }
+
+    /// Indices of compute nodes whose output feeds a ReLU (directly or via
+    /// a standalone Relu node) — the predictable layers.
+    pub fn relu_layers(&self) -> Vec<usize> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter(|(i, nd)| {
+                nd.is_compute()
+                    && (nd.relu()
+                        || matches!(self.nodes.get(i + 1), Some(Node::Relu { .. })))
+            })
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Total weight bytes a full evaluation must fetch (8-bit weights).
+    pub fn weight_bytes(&self) -> u64 {
+        self.nodes
+            .iter()
+            .map(|nd| match nd {
+                Node::Conv { w, .. } | Node::Fc { w, .. } => w.len() as u64,
+                _ => 0,
+            })
+            .sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(self.pos + n <= self.buf.len(), "truncated MORW file");
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn i32(&mut self) -> Result<i32> {
+        Ok(i32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn f32_vec(&mut self, n: usize) -> Result<Vec<f32>> {
+        let raw = self.bytes(4 * n)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn i8_vec(&mut self, n: usize) -> Result<Vec<i8>> {
+        let raw = self.bytes(n)?;
+        Ok(raw.iter().map(|&b| b as i8).collect())
+    }
+}
+
+fn parse_node(r: &mut Reader) -> Result<Node> {
+    let kind = r.u8()?;
+    let flags = r.u8()?;
+    let res_from_raw = r.i32()?;
+    let consumes = r.i32()?;
+    let relu = flags & 1 != 0;
+    let has_bn = flags & 2 != 0;
+    let res_from = if res_from_raw < 0 {
+        None
+    } else {
+        Some(res_from_raw as usize)
+    };
+    match kind {
+        0 => {
+            let kh = r.u32()? as usize;
+            let kw = r.u32()? as usize;
+            let cin = r.u32()? as usize;
+            let cout = r.u32()? as usize;
+            let stride = r.u32()? as usize;
+            let pad_same = r.u8()? == 1;
+            let sw = r.f32()?;
+            let sx = r.f32()?;
+            // file order: (KH, KW, CIN, COUT) row-major → filter-major
+            let raw = r.i8_vec(kh * kw * cin * cout)?;
+            let k_len = kh * kw * cin;
+            let mut w = vec![0i8; cout * k_len];
+            for k in 0..k_len {
+                for f in 0..cout {
+                    w[f * k_len + k] = raw[k * cout + f];
+                }
+            }
+            let bn = if has_bn {
+                Some((r.f32_vec(cout)?, r.f32_vec(cout)?))
+            } else {
+                None
+            };
+            Ok(Node::Conv {
+                kh, kw, cin, cout, stride, pad_same, sw, sx, w, bn, relu, res_from, consumes,
+            })
+        }
+        1 => {
+            let cin = r.u32()? as usize;
+            let cout = r.u32()? as usize;
+            let sw = r.f32()?;
+            let sx = r.f32()?;
+            let raw = r.i8_vec(cin * cout)?; // (CIN, COUT) row-major
+            let mut w = vec![0i8; cout * cin];
+            for k in 0..cin {
+                for f in 0..cout {
+                    w[f * cin + k] = raw[k * cout + f];
+                }
+            }
+            let bn = if has_bn {
+                Some((r.f32_vec(cout)?, r.f32_vec(cout)?))
+            } else {
+                None
+            };
+            Ok(Node::Fc {
+                cin, cout, sw, sx, w, bn, relu, res_from, consumes,
+            })
+        }
+        2 => Ok(Node::MaxPool {
+            size: r.u32()? as usize,
+            consumes,
+        }),
+        3 => Ok(Node::Gap { consumes }),
+        4 => Ok(Node::Relu { consumes }),
+        k => bail!("unknown node kind {k}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Hand-build a MORW byte stream and parse it back.
+    fn tiny_morw() -> Vec<u8> {
+        let mut b: Vec<u8> = Vec::new();
+        b.extend(b"MORW");
+        b.extend(1u32.to_le_bytes());
+        b.extend(2u32.to_le_bytes()); // 2 nodes
+        b.extend(0.5f32.to_le_bytes()); // sx0
+        // node 0: fc 3 -> 2, relu, no bn
+        b.push(1); // kind fc
+        b.push(1); // flags: relu
+        b.extend((-1i32).to_le_bytes()); // res_from
+        b.extend((-1i32).to_le_bytes()); // consumes
+        b.extend(3u32.to_le_bytes());
+        b.extend(2u32.to_le_bytes());
+        b.extend(0.1f32.to_le_bytes());
+        b.extend(0.2f32.to_le_bytes());
+        // weights (CIN=3, COUT=2) row-major: [[1,2],[3,4],[5,-6]]
+        for v in [1i8, 2, 3, 4, 5, -6] {
+            b.push(v as u8);
+        }
+        // node 1: gap
+        b.push(3);
+        b.push(0);
+        b.extend((-1i32).to_le_bytes());
+        b.extend(0i32.to_le_bytes());
+        b
+    }
+
+    #[test]
+    fn parses_tiny_morw() {
+        let dir = std::env::temp_dir().join(format!("mor_w_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.w.bin");
+        std::fs::write(&p, tiny_morw()).unwrap();
+        let m = Model::load(&p, "t").unwrap();
+        assert_eq!(m.sx0, 0.5);
+        assert_eq!(m.nodes.len(), 2);
+        match &m.nodes[0] {
+            Node::Fc { cin, cout, w, relu, .. } => {
+                assert_eq!((*cin, *cout), (3, 2));
+                assert!(relu);
+                // filter-major: filter 0 = [1,3,5], filter 1 = [2,4,-6]
+                assert_eq!(&w[0..3], &[1, 3, 5]);
+                assert_eq!(&w[3..6], &[2, 4, -6]);
+            }
+            _ => panic!("expected fc"),
+        }
+        assert!(matches!(m.nodes[1], Node::Gap { consumes: 0 }));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn truncated_file_errors() {
+        let dir = std::env::temp_dir().join(format!("mor_wt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.w.bin");
+        let mut bytes = tiny_morw();
+        bytes.truncate(bytes.len() - 3);
+        std::fs::write(&p, bytes).unwrap();
+        assert!(Model::load(&p, "bad").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shapes_and_macs_tiny_conv() {
+        let mut m = super::super::testutil::tiny_conv(1);
+        m.input_shape = (6, 6, 2);
+        let shapes = m.node_shapes();
+        assert_eq!(shapes[0], (6, 6, 4)); // SAME conv
+        assert_eq!(shapes[1], (6, 6, 4)); // projection
+        assert_eq!(shapes[4], (6, 6, 4)); // relu keeps shape
+        assert_eq!(shapes[5], (3, 3, 4)); // maxpool 2
+        assert_eq!(shapes[6], (1, 1, 4)); // gap
+        let macs = m.mac_counts();
+        assert_eq!(macs[0], 6 * 6 * 4 * (3 * 3 * 2));
+        assert_eq!(macs[4], 0);
+    }
+
+    #[test]
+    fn relu_layers_include_standalone_relu() {
+        let mut m = super::super::testutil::tiny_conv(2);
+        m.input_shape = (6, 6, 2);
+        // node 0 (relu=true), node 2 (relu=true), node 3 (followed by Relu)
+        assert_eq!(m.relu_layers(), vec![0, 2, 3]);
+    }
+}

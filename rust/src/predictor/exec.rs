@@ -1,0 +1,513 @@
+//! The MoR-aware forward pass: evaluates a model on one sample, skipping
+//! neuron evaluations the hybrid predictor declares zero (Section 3.2).
+//!
+//! Execution order per output position mirrors the accelerator's Neurons
+//! Controller (Section 4.1): proxies first (they are always evaluated and
+//! "unlock" their cluster members), then members — each member whose proxy
+//! produced a zero ReLU output is checked with the binary predictor, and
+//! skipped only when *both* components agree on zero.
+
+use super::{LayerTrace, MorPolicy, OpsStats, PredStats, RunOpts, RunResult};
+use crate::engine::{self, dot::dot_i8, relu_input, ConvGeom, PatchGather, Tensor};
+use crate::model::{Model, Node};
+
+/// Run one sample (H*W*C float input) through the model.
+pub fn run_sample(
+    model: &Model,
+    policy: Option<&MorPolicy>,
+    input: &[f32],
+    opts: RunOpts,
+) -> RunResult {
+    let (h, w, c) = model.input_shape;
+    let input_t = Tensor::from_slice(h, w, c, input);
+    let relu_layers = model.relu_layers();
+
+    let mut outs: Vec<Tensor> = Vec::with_capacity(model.nodes.len());
+    let mut pred = PredStats::default();
+    let mut ops = OpsStats::default();
+    let mut traces = Vec::new();
+
+    for (i, node) in model.nodes.iter().enumerate() {
+        let src: &Tensor = if node.consumes() < 0 {
+            &input_t
+        } else {
+            &outs[node.consumes() as usize]
+        };
+        let out = match node {
+            Node::Conv { .. } | Node::Fc { .. } => {
+                let residual = res_tensor(node, &outs);
+                let lp = policy.and_then(|p| p.layers.get(&i));
+                let is_relu_layer = relu_layers.contains(&i);
+                compute_layer(
+                    node,
+                    src,
+                    residual,
+                    lp.map(|l| (l, policy.unwrap())),
+                    is_relu_layer,
+                    i,
+                    opts,
+                    &mut pred,
+                    &mut ops,
+                    &mut traces,
+                )
+            }
+            Node::MaxPool { size, .. } => engine::maxpool(src, *size),
+            Node::Gap { .. } => engine::gap(src),
+            Node::Relu { .. } => engine::relu(src),
+        };
+        outs.push(out);
+    }
+
+    RunResult {
+        logits: outs.last().map(|t| t.data.clone()).unwrap_or_default(),
+        pred,
+        ops,
+        traces,
+    }
+}
+
+fn res_tensor<'a>(node: &Node, outs: &'a [Tensor]) -> Option<&'a Tensor> {
+    match node {
+        Node::Conv { res_from, .. } | Node::Fc { res_from, .. } => {
+            res_from.map(|r| &outs[r])
+        }
+        _ => None,
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn compute_layer(
+    node: &Node,
+    src: &Tensor,
+    residual: Option<&Tensor>,
+    policy: Option<(&super::LayerPolicy, &MorPolicy)>,
+    is_relu_layer: bool,
+    node_idx: usize,
+    opts: RunOpts,
+    pred: &mut PredStats,
+    ops: &mut OpsStats,
+    traces: &mut Vec<LayerTrace>,
+) -> Tensor {
+    let (sx, sw, bn, node_relu) = layer_params(node);
+    let dq = sw * sx;
+    let cout = node.cout();
+    let k = node.k_len() as u64;
+
+    let (geom, kh, kw, stride) = match node {
+        Node::Conv {
+            kh, kw, stride, pad_same, ..
+        } => (
+            engine::conv_geom(src.h, src.w, *kh, *kw, *stride, *pad_same),
+            *kh,
+            *kw,
+            *stride,
+        ),
+        _ => (
+            ConvGeom {
+                oh: src.h,
+                ow: src.w,
+                pad_top: 0,
+                pad_left: 0,
+            },
+            0,
+            0,
+            1,
+        ),
+    };
+    let rows = geom.oh * geom.ow;
+    let mut out = Tensor::new(geom.oh, geom.ow, cout);
+
+    let mut pg = PatchGather::new(src, sx);
+    let mut trace = if opts.collect_trace {
+        Some(LayerTrace {
+            node: node_idx,
+            rows,
+            cout,
+            skipped: vec![false; rows * cout],
+            bin_eval: vec![false; rows * cout],
+        })
+    } else {
+        None
+    };
+
+    // scratch for proxy ReLU inputs (hybrid / clusters mode)
+    let mut relu_in_cache: Vec<f32> = vec![0.0; cout];
+
+    for row in 0..rows {
+        match node {
+            Node::Conv { .. } => {
+                pg.gather(geom, kh, kw, stride, row / geom.ow, row % geom.ow)
+            }
+            _ => pg.gather_fc(row),
+        }
+        ops.macs_total += k * cout as u64;
+        if is_relu_layer {
+            ops.relu_macs += k * cout as u64;
+            pred.relu_outputs += cout as u64;
+        }
+
+        let res_at = |f: usize| residual.map(|r| r.data[row * cout + f]).unwrap_or(0.0);
+
+        // closure-free full evaluation to keep borrows simple
+        macro_rules! full_eval {
+            ($f:expr) => {{
+                let f = $f;
+                let d = dot_i8(&pg.patch, node.filter(f));
+                let ri = relu_input(d, dq, bn, f, res_at(f));
+                out.data[row * cout + f] = if node_relu { ri.max(0.0) } else { ri };
+                ops.macs_done += k;
+                ops.weight_bytes_fetched += k;
+                if is_relu_layer && ri <= 0.0 {
+                    ops.neg_relu_macs += k;
+                    ops.true_zero_outputs += 1;
+                }
+                ri
+            }};
+        }
+
+        match policy {
+            None => {
+                for f in 0..cout {
+                    full_eval!(f);
+                    if is_relu_layer {
+                        pred.not_applied += 1;
+                    }
+                }
+            }
+            Some((lp, mp)) if !mp.cfg.use_clusters => {
+                // binary-only mode (Fig 6): every enabled neuron predicted
+                for f in 0..cout {
+                    let mut skip = false;
+                    let applied = mp.cfg.use_binary && lp.enabled[f];
+                    if applied {
+                        let p_bin = pg.packed.dot(&lp.packed_w[f]);
+                        ops.bin_ops += k;
+                        if let Some(t) = trace.as_mut() {
+                            t.bin_eval[row * cout + f] = true;
+                        }
+                        let est = lp.m[f] * p_bin as f32 + lp.b[f];
+                        let est_ri = bn_affine(est, bn, f) + res_at(f);
+                        skip = est_ri < -margin_of(lp, bn, f, mp.cfg.margin_sigmas);
+                    }
+                    finish_neuron(
+                        f, skip, applied, row, cout, k, node, &pg, dq, bn, res_at(f),
+                        node_relu, is_relu_layer, opts, &mut out, pred, ops, &mut trace,
+                    );
+                }
+            }
+            Some((lp, mp)) => {
+                // proxies first (always fully evaluated)
+                for cl in &lp.clusters {
+                    let ri = full_eval!(cl[0]);
+                    relu_in_cache[cl[0]] = ri;
+                    if is_relu_layer {
+                        pred.not_applied += 1;
+                    }
+                }
+                // members, cluster by cluster
+                for cl in &lp.clusters {
+                    let proxy_zero = relu_in_cache[cl[0]] <= 0.0;
+                    for &f in &cl[1..] {
+                        let mut skip;
+                        let applied;
+                        if mp.cfg.use_binary {
+                            // hybrid: both components must agree; binary is
+                            // only consulted when the proxy says zero
+                            applied = lp.enabled[f];
+                            skip = false;
+                            if applied && proxy_zero {
+                                let p_bin = pg.packed.dot(&lp.packed_w[f]);
+                                ops.bin_ops += k;
+                                if let Some(t) = trace.as_mut() {
+                                    t.bin_eval[row * cout + f] = true;
+                                }
+                                let est = lp.m[f] * p_bin as f32 + lp.b[f];
+                                let est_ri = bn_affine(est, bn, f) + res_at(f);
+                                skip = est_ri < -margin_of(lp, bn, f, mp.cfg.margin_sigmas);
+                            }
+                        } else {
+                            // clusters-only ablation: proxy alone decides
+                            applied = true;
+                            skip = proxy_zero;
+                        }
+                        finish_neuron(
+                            f, skip, applied, row, cout, k, node, &pg, dq, bn, res_at(f),
+                            node_relu, is_relu_layer, opts, &mut out, pred, ops, &mut trace,
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    if let Some(t) = trace {
+        traces.push(t);
+    }
+    out
+}
+
+/// Apply the skip/evaluate decision for one member neuron and account it.
+#[allow(clippy::too_many_arguments)]
+fn finish_neuron(
+    f: usize,
+    skip: bool,
+    applied: bool,
+    row: usize,
+    cout: usize,
+    k: u64,
+    node: &Node,
+    pg: &PatchGather,
+    dq: f32,
+    bn: Option<&(Vec<f32>, Vec<f32>)>,
+    res: f32,
+    node_relu: bool,
+    is_relu_layer: bool,
+    opts: RunOpts,
+    out: &mut Tensor,
+    pred: &mut PredStats,
+    ops: &mut OpsStats,
+    trace: &mut Option<LayerTrace>,
+) {
+    if skip {
+        out.data[row * cout + f] = 0.0;
+        ops.weight_bytes_saved += k;
+        if let Some(t) = trace.as_mut() {
+            t.skipped[row * cout + f] = true;
+        }
+        if opts.oracle {
+            // ground truth for Fig 12 / accuracy accounting
+            let d = dot_i8(&pg.patch, node.filter(f));
+            let ri = relu_input(d, dq, bn, f, res);
+            if is_relu_layer {
+                if ri <= 0.0 {
+                    pred.correct_zero += 1;
+                    ops.neg_relu_macs += k;
+                    ops.true_zero_outputs += 1;
+                } else {
+                    pred.incorrect_zero += 1;
+                }
+            }
+        }
+    } else {
+        let d = dot_i8(&pg.patch, node.filter(f));
+        let ri = relu_input(d, dq, bn, f, res);
+        out.data[row * cout + f] = if node_relu { ri.max(0.0) } else { ri };
+        ops.macs_done += k;
+        ops.weight_bytes_fetched += k;
+        if is_relu_layer {
+            if ri <= 0.0 {
+                ops.neg_relu_macs += k;
+                ops.true_zero_outputs += 1;
+            }
+            if applied {
+                if ri <= 0.0 {
+                    pred.incorrect_nonzero += 1;
+                } else {
+                    pred.correct_nonzero += 1;
+                }
+            } else {
+                pred.not_applied += 1;
+            }
+        }
+    }
+}
+
+/// Skip-confidence margin for neuron `f`: `margin_sigmas` regression
+/// residual stds, propagated through the (multiplicative) BN scale. The
+/// raw paper rule (skip iff estimate < 0) is `margin_sigmas = 0`.
+#[inline]
+fn margin_of(
+    lp: &super::LayerPolicy,
+    bn: Option<&(Vec<f32>, Vec<f32>)>,
+    f: usize,
+    margin_sigmas: f32,
+) -> f32 {
+    if margin_sigmas == 0.0 {
+        return 0.0;
+    }
+    let scale = bn.map(|(sc, _)| sc[f].abs()).unwrap_or(1.0);
+    margin_sigmas * lp.s[f] * scale
+}
+
+#[inline]
+fn bn_affine(v: f32, bn: Option<&(Vec<f32>, Vec<f32>)>, f: usize) -> f32 {
+    match bn {
+        Some((scale, shift)) => v * scale[f] + shift[f],
+        None => v,
+    }
+}
+
+fn layer_params(node: &Node) -> (f32, f32, Option<&(Vec<f32>, Vec<f32>)>, bool) {
+    match node {
+        Node::Conv { sx, sw, bn, relu, .. } | Node::Fc { sx, sw, bn, relu, .. } => {
+            (*sx, *sw, bn.as_ref(), *relu)
+        }
+        _ => unreachable!("layer_params on non-compute node"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PredictorConfig;
+    use crate::model::testutil::{tiny_conv, tiny_fc};
+    use crate::model::PredictorParams;
+    use crate::util::json::Json;
+    use crate::util::rng::Rng;
+
+    fn rand_input(len: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..len).map(|_| rng.uniform(-1.0, 1.0) as f32).collect()
+    }
+
+    #[test]
+    fn plain_forward_shapes_fc() {
+        let m = tiny_fc(1);
+        let x = rand_input(8, 2);
+        let r = run_sample(&m, None, &x, RunOpts::default());
+        assert_eq!(r.logits.len(), 4);
+        assert_eq!(r.ops.macs_total, 8 * 6 + 6 * 4);
+        assert_eq!(r.ops.macs_done, r.ops.macs_total);
+        assert_eq!(r.pred.relu_outputs, 6); // only the first layer has ReLU
+    }
+
+    #[test]
+    fn plain_forward_shapes_conv() {
+        let m = tiny_conv(1);
+        let x = rand_input(6 * 6 * 2, 3);
+        let r = run_sample(&m, None, &x, RunOpts::default());
+        assert_eq!(r.logits.len(), 4); // gap output (1,1,4)
+        let expect_total: u64 = m.mac_counts().iter().sum();
+        assert_eq!(r.ops.macs_total, expect_total);
+        assert!(r.ops.neg_relu_macs > 0, "some ReLU inputs should be negative");
+        assert!(r.ops.neg_relu_macs <= r.ops.relu_macs);
+    }
+
+    /// A policy whose fitted lines make the binary estimate always negative
+    /// and clusters grouping everything under neuron 0 — then MoR skips a
+    /// member iff its proxy is zero, and skipped outputs are exactly 0.
+    fn always_zero_policy(m: &crate::model::Model, layer: usize, n: usize) -> MorPolicy {
+        let clusters: Vec<Vec<usize>> = vec![(0..n).collect()];
+        let js = format!(
+            r#"{{"model":"t","default_threshold":0.0,"layers":[
+                {{"layer":{layer},"neurons":{n},
+                  "c":{c:?},"m":{m_:?},"b":{b:?},
+                  "clusters":{cl},
+                  "closest_angle_deg":{ang:?}}}]}}"#,
+            c = vec![1.0f32; n],
+            m_ = vec![0.0f32; n],
+            b = vec![-1.0f32; n],
+            cl = format!(
+                "[{}]",
+                clusters
+                    .iter()
+                    .map(|cl| format!("{cl:?}"))
+                    .collect::<Vec<_>>()
+                    .join(",")
+            ),
+            ang = vec![10.0f32; n],
+        );
+        let params = PredictorParams::from_json(&Json::parse(&js).unwrap()).unwrap();
+        MorPolicy::new(m, &params, PredictorConfig { threshold: 0.5, ..Default::default() })
+    }
+
+    #[test]
+    fn skipped_outputs_are_zero_and_accounted() {
+        let m = tiny_fc(5);
+        let x = rand_input(8, 7);
+        let pol = always_zero_policy(&m, 0, 6);
+        let r = run_sample(&m, Some(&pol), &x, RunOpts { oracle: true, collect_trace: true });
+
+        // baseline for comparison
+        let base = run_sample(&m, None, &x, RunOpts::default());
+
+        // whenever the proxy (neuron 0) is zero, every member must be
+        // skipped (binary estimate is forced negative), so outputs are 0
+        let t = &r.traces[0];
+        assert_eq!(t.rows, 1);
+        for f in 1..6 {
+            if t.skipped[f] {
+                // predicted zero → output literally 0, and it saved MACs
+                assert!(r.ops.macs_done < base.ops.macs_done);
+            }
+        }
+        // categories partition applied outputs
+        assert_eq!(
+            r.pred.applied() + r.pred.not_applied,
+            r.pred.relu_outputs
+        );
+        // conservation: done + saved == total (in MAC units)
+        let saved_macs = r.ops.macs_total - r.ops.macs_done;
+        assert_eq!(saved_macs / 8, r.ops.weight_bytes_saved / 8);
+    }
+
+    #[test]
+    fn oracle_categories_consistent_with_baseline_zeros() {
+        let m = tiny_conv(11);
+        let x = rand_input(6 * 6 * 2, 13);
+        let n = m.nodes[0].cout();
+        let pol = always_zero_policy(&m, 0, n);
+        let r = run_sample(&m, Some(&pol), &x, RunOpts::default());
+        // correct_zero + incorrect_nonzero + ... all bounded by relu outputs
+        assert!(r.pred.applied() <= r.pred.relu_outputs);
+        // skipping can only reduce MACs
+        let base = run_sample(&m, None, &x, RunOpts::default());
+        assert!(r.ops.macs_done <= base.ops.macs_done);
+        assert_eq!(r.ops.macs_total, base.ops.macs_total);
+    }
+
+    #[test]
+    fn disabled_components_never_skip() {
+        let m = tiny_fc(5);
+        let x = rand_input(8, 7);
+        let mut pol = always_zero_policy(&m, 0, 6);
+        pol.cfg.use_binary = false;
+        pol.cfg.use_clusters = false;
+        // with both components off the policy must behave like None
+        let r = run_sample(&m, Some(&pol), &x, RunOpts::default());
+        let base = run_sample(&m, None, &x, RunOpts::default());
+        assert_eq!(r.ops.macs_done, base.ops.macs_done);
+        assert_eq!(r.logits, base.logits);
+    }
+
+    #[test]
+    fn residual_and_projection_path_exact() {
+        // tiny_conv has a projection + residual; check the residual is
+        // actually added: zero the main-path weights of node 3 and the
+        // output before ReLU must equal bn(0) + residual.
+        let mut m = tiny_conv(21);
+        if let Node::Conv { w, .. } = &mut m.nodes[3] {
+            for v in w.iter_mut() {
+                *v = 0;
+            }
+        }
+        let x = rand_input(6 * 6 * 2, 17);
+        let r = run_sample(&m, None, &x, RunOpts::default());
+        // recompute expectation: node 3 out = 0*dq*scale + shift + res(node1)
+        // spot-check one element via an independent partial forward
+        assert_eq!(r.logits.len(), 4);
+        // (numerical check is covered by the python cross-validation test;
+        // here we only assert the graph wiring executed without panic and
+        // produced finite values)
+        assert!(r.logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn trace_dimensions() {
+        let m = tiny_conv(31);
+        let x = rand_input(6 * 6 * 2, 19);
+        let n = m.nodes[0].cout();
+        let pol = always_zero_policy(&m, 0, n);
+        let r = run_sample(&m, Some(&pol), &x, RunOpts { oracle: false, collect_trace: true });
+        // every compute node gets a trace (the simulator replays them all);
+        // only the policied layer (node 0) can contain skips
+        assert_eq!(r.traces.len(), 4);
+        let t = r.traces.iter().find(|t| t.node == 0).unwrap();
+        assert_eq!(t.rows, 6 * 6);
+        assert_eq!(t.cout, n);
+        assert_eq!(t.skipped.len(), t.rows * t.cout);
+        for other in r.traces.iter().filter(|t| t.node != 0) {
+            assert!(other.skipped.iter().all(|&s| !s), "non-policied layer skipped");
+        }
+    }
+}

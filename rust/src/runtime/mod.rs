@@ -1,0 +1,92 @@
+//! PJRT runtime: load the AOT-compiled HLO artifacts and execute them from
+//! rust (the pattern of /opt/xla-example/load_hlo).
+//!
+//! The interchange format is HLO **text**: jax ≥ 0.5 serializes protos
+//! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md). aot.py lowers
+//! with `return_tuple=True`, so results unwrap with `to_tuple1`.
+//!
+//! One [`Executable`] is compiled per model and reused for every request —
+//! compilation happens once at coordinator startup, never on the hot path.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A compiled model executable on the PJRT CPU client.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub input_len: usize,
+    pub input_shape: (usize, usize, usize),
+}
+
+/// PJRT client wrapper; create once, load many executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text artifact.
+    pub fn load_hlo<P: AsRef<Path>>(
+        &self,
+        path: P,
+        input_shape: (usize, usize, usize),
+    ) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable {
+            exe,
+            input_len: input_shape.0 * input_shape.1 * input_shape.2,
+            input_shape,
+        })
+    }
+}
+
+impl Executable {
+    /// Run the forward pass on one sample (H*W*C floats) → logits.
+    pub fn forward(&self, sample: &[f32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            sample.len() == self.input_len,
+            "input length {} != expected {}",
+            sample.len(),
+            self.input_len
+        );
+        let (h, w, c) = self.input_shape;
+        let lit = xla::Literal::vec1(sample).reshape(&[h as i64, w as i64, c as i64])?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → 1-tuple
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Full round-trip tests need `make artifacts` and live in rust/tests/;
+    // here we only check error paths that need no artifacts.
+
+    #[test]
+    fn missing_hlo_is_error() {
+        let rt = match Runtime::cpu() {
+            Ok(rt) => rt,
+            Err(_) => return, // PJRT unavailable: skip
+        };
+        assert!(rt.load_hlo("/nonexistent.hlo.txt", (1, 1, 1)).is_err());
+    }
+}

@@ -1,0 +1,384 @@
+//! Cycle-level simulator of the paper's accelerator (Fig 10) — Layer/Row/
+//! Neuron controllers, CUs, binCUs, input SRAM, binWeight SRAM, LPDDR4.
+//!
+//! The simulator replays a *skip trace* produced by the functional engine
+//! ([`crate::predictor::exec`]) on the hardware model, so numerics and
+//! timing are decoupled exactly as in the paper's methodology (their
+//! simulator consumed DNN execution profiles; ours consumes traces).
+//!
+//! Modelled structure per layer (Section 4.1):
+//! * the Row Controller loads input windows block-by-block (sliding-window
+//!   reuse: `stride` new input rows per output row) and double-buffers, so
+//!   input loads overlap compute;
+//! * the Neuron Controller schedules **proxies first**; a member's binCU
+//!   check may only start once its proxy finished (dependency), and
+//!   surviving members go to any free CU (non-proxy priority is implicit
+//!   in list order);
+//! * each CU evaluation streams its weights from DRAM (Fig 11 layout:
+//!   sequential per neuron) and computes `ceil(K / cu_width)` MAC cycles,
+//!   whichever is slower;
+//! * binCU evaluations read packed sign bits from the binWeight SRAM
+//!   (modelled as a cache — reload traffic appears when a layer's bin
+//!   weights exceed its 2 KB);
+//! * outputs are written back to DRAM at row granularity.
+
+pub mod dram;
+
+use crate::config::Config;
+use crate::model::{Model, Node};
+use crate::predictor::{LayerTrace, MorPolicy};
+use crate::util::ceil_div;
+use dram::Dram;
+
+/// Aggregate counters from one simulated sample (plus energy inputs).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SimStats {
+    pub cycles: u64,
+    pub macs: u64,
+    pub bin_ops: u64,
+    pub neurons_computed: u64,
+    pub neurons_skipped: u64,
+    pub dram_bytes: u64,
+    pub dram_weight_bytes: u64,
+    pub dram_input_bytes: u64,
+    pub dram_output_bytes: u64,
+    pub dram_binweight_bytes: u64,
+    pub input_sram_read_bytes: u64,
+    pub binw_sram_read_bytes: u64,
+    pub dram_row_hits: u64,
+    pub dram_row_misses: u64,
+}
+
+impl SimStats {
+    pub fn time_us(&self, freq_mhz: u64) -> f64 {
+        self.cycles as f64 / freq_mhz as f64
+    }
+}
+
+/// The accelerator simulator.
+pub struct Simulator {
+    pub cfg: Config,
+}
+
+impl Simulator {
+    pub fn new(cfg: Config) -> Simulator {
+        Simulator { cfg }
+    }
+
+    /// Simulate one sample. `traces`/`policy` are None for the baseline
+    /// accelerator (every neuron computed, no binary datapath).
+    pub fn simulate_sample(
+        &self,
+        model: &Model,
+        policy: Option<&MorPolicy>,
+        traces: Option<&[LayerTrace]>,
+    ) -> SimStats {
+        let mut dram = Dram::new(self.cfg.dram.clone());
+        let mut st = SimStats::default();
+        let shapes = model.node_shapes();
+        let a = &self.cfg.accel;
+
+        let mut cu_free = vec![0u64; a.num_cus];
+        let mut bincu_free = vec![0u64; a.num_bincus];
+        let mut now: u64 = 0;
+
+        // DRAM address map: weights | activations ping-pong | bin weights
+        let mut weight_base: u64 = 0;
+        let act_a: u64 = 1 << 28;
+        let act_b: u64 = act_a + (1 << 27);
+        let bin_base: u64 = 1 << 29;
+
+        for (i, node) in model.nodes.iter().enumerate() {
+            if !node.is_compute() {
+                // pooling / gap / relu happen on the write-back path of the
+                // producing layer (negligible — elementwise at SRAM speed);
+                // model as a pass.
+                continue;
+            }
+            let (oh, ow, _) = shapes[i];
+            let rows = oh * ow;
+            let cout = node.cout();
+            let k = node.k_len() as u64;
+            let src = node.consumes();
+            let (ih, iw, ic) = if src < 0 {
+                model.input_shape
+            } else {
+                shapes[src as usize]
+            };
+            let (kh, stride) = match node {
+                Node::Conv { kh, stride, .. } => (*kh, *stride),
+                _ => (1, 1),
+            };
+
+            let trace = traces.and_then(|ts| ts.iter().find(|t| t.node == i));
+            let lpol = policy.and_then(|p| p.layers.get(&i));
+
+            // --- per-layer bin-weight fill (binWeight SRAM) ----------------
+            // Members' packed sign bits stream from DRAM into the 2 KB
+            // binWeight SRAM once per layer; a layer whose working set
+            // exceeds the SRAM pays a 2x thrash penalty (row-block reloads)
+            // but binCU *reads* always hit on-chip, as in Section 4.4.
+            let mut bin_bytes_per_eval = 0u64;
+            if let Some(lp) = lpol {
+                let members: u64 = lp
+                    .clusters
+                    .iter()
+                    .map(|c| (c.len() - 1) as u64)
+                    .sum();
+                let total_bin_bytes = members * ceil_div(k, 8);
+                bin_bytes_per_eval = ceil_div(k, 8);
+                if total_bin_bytes > 0 {
+                    let reload = if total_bin_bytes > a.binweight_sram_bytes { 2 } else { 1 };
+                    let fill = total_bin_bytes * reload;
+                    now = dram.access(now, bin_base, fill, false);
+                    st.dram_binweight_bytes += fill;
+                }
+            }
+
+            // --- input loading (sliding window) --------------------------
+            let first_block = (kh.min(ih) * iw * ic) as u64;
+            let row_block = (stride * iw * ic) as u64;
+            let input_region = if i % 2 == 0 { act_a } else { act_b };
+            let out_region = if i % 2 == 0 { act_b } else { act_a };
+
+            let mut input_ready = dram.access(now, input_region, first_block, false);
+            st.dram_input_bytes += first_block;
+
+            let mut out_write_addr = out_region;
+
+            for row in 0..rows {
+                // double-buffered load of the next output row's new inputs
+                if row + 1 < rows && row % ow == ow - 1 {
+                    let t = dram.access(
+                        input_ready,
+                        input_region + (row as u64 + 1) * row_block,
+                        row_block,
+                        false,
+                    );
+                    st.dram_input_bytes += row_block;
+                    input_ready = t;
+                }
+                let row_start = now.max(input_ready.saturating_sub(first_block.min(1)));
+
+                let mut row_last_end = row_start;
+
+                // job scheduler: returns end time of a CU evaluation
+                let run_cu = |ready: u64,
+                                  dram: &mut Dram,
+                                  st: &mut SimStats,
+                                  cu_free: &mut Vec<u64>,
+                                  f: usize|
+                 -> u64 {
+                    let slot = argmin(cu_free);
+                    let start = cu_free[slot].max(ready);
+                    let w_addr = weight_base + (f as u64) * k;
+                    let w_done = dram.access(start, w_addr, k, false);
+                    st.dram_weight_bytes += k;
+                    let compute = ceil_div(k, a.cu_width as u64);
+                    let end = start + compute.max(w_done - start);
+                    cu_free[slot] = end;
+                    st.macs += k;
+                    st.input_sram_read_bytes += k;
+                    st.neurons_computed += 1;
+                    end
+                };
+
+                match (lpol, trace) {
+                    (Some(lp), Some(tr)) if policy.map(|p| p.cfg.use_clusters).unwrap_or(false) => {
+                        // proxies first
+                        let mut proxy_end = vec![row_start; cout];
+                        for cl in &lp.clusters {
+                            let e = run_cu(row_start, &mut dram, &mut st, &mut cu_free, cl[0]);
+                            proxy_end[cl[0]] = e;
+                            row_last_end = row_last_end.max(e);
+                        }
+                        for cl in &lp.clusters {
+                            let p_end = proxy_end[cl[0]];
+                            for &f in &cl[1..] {
+                                let idx = row * cout + f;
+                                let mut gate = p_end;
+                                if tr.bin_eval[idx] {
+                                    let slot = argmin(&bincu_free);
+                                    let bstart = bincu_free[slot].max(p_end);
+                                    let bdur = ceil_div(k, a.bincu_width as u64);
+                                    let bend = bstart + bdur;
+                                    bincu_free[slot] = bend;
+                                    st.bin_ops += k;
+                                    st.binw_sram_read_bytes += bin_bytes_per_eval;
+                                    gate = gate.max(bend);
+                                    row_last_end = row_last_end.max(bend);
+                                }
+                                if tr.skipped[idx] {
+                                    st.neurons_skipped += 1;
+                                } else {
+                                    let e = run_cu(gate, &mut dram, &mut st, &mut cu_free, f);
+                                    row_last_end = row_last_end.max(e);
+                                }
+                            }
+                        }
+                    }
+                    (Some(_lp), Some(tr)) => {
+                        // binary-only mode: no proxy dependencies
+                        for f in 0..cout {
+                            let idx = row * cout + f;
+                            let mut gate = row_start;
+                            if tr.bin_eval[idx] {
+                                let slot = argmin(&bincu_free);
+                                let bstart = bincu_free[slot].max(row_start);
+                                let bend = bstart + ceil_div(k, a.bincu_width as u64);
+                                bincu_free[slot] = bend;
+                                st.bin_ops += k;
+                                st.binw_sram_read_bytes += bin_bytes_per_eval;
+                                gate = bend;
+                                row_last_end = row_last_end.max(bend);
+                            }
+                            if tr.skipped[idx] {
+                                st.neurons_skipped += 1;
+                            } else {
+                                let e = run_cu(gate, &mut dram, &mut st, &mut cu_free, f);
+                                row_last_end = row_last_end.max(e);
+                            }
+                        }
+                    }
+                    _ => {
+                        // baseline: every neuron on the CUs
+                        for f in 0..cout {
+                            let e = run_cu(row_start, &mut dram, &mut st, &mut cu_free, f);
+                            row_last_end = row_last_end.max(e);
+                        }
+                    }
+                }
+
+                // write the row's outputs back (1 byte per output)
+                let t = dram.access(row_last_end, out_write_addr, cout as u64, true);
+                st.dram_output_bytes += cout as u64;
+                out_write_addr += cout as u64;
+                now = now.max(row_last_end);
+                let _ = t; // writes are posted; they only occupy the bus
+            }
+
+            weight_base += cout as u64 * k;
+            // layer barrier: all compute + the bus drain
+            let drain = cu_free.iter().chain(bincu_free.iter()).copied().max().unwrap_or(now);
+            now = now.max(drain);
+        }
+
+        st.cycles = now;
+        st.dram_bytes = dram.stats.bytes;
+        st.dram_row_hits = dram.stats.row_hits;
+        st.dram_row_misses = dram.stats.row_misses;
+        st
+    }
+}
+
+fn argmin(xs: &[u64]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v < xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Config, PredictorConfig};
+    use crate::model::testutil::tiny_conv;
+    use crate::model::PredictorParams;
+    use crate::predictor::{exec, MorPolicy, RunOpts};
+    use crate::util::json::Json;
+    use crate::util::rng::Rng;
+
+    fn input(len: usize, seed: u64) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..len).map(|_| r.uniform(-1.0, 1.0) as f32).collect()
+    }
+
+    fn zero_policy(m: &crate::model::Model, layer: usize) -> MorPolicy {
+        let n = m.nodes[layer].cout();
+        let js = format!(
+            r#"{{"model":"t","default_threshold":0.0,"layers":[
+                {{"layer":{layer},"neurons":{n},
+                  "c":{c:?},"m":{mm:?},"b":{b:?},
+                  "clusters":[{cl}],
+                  "closest_angle_deg":{ang:?}}}]}}"#,
+            c = vec![1.0f32; n],
+            mm = vec![0.0f32; n],
+            b = vec![-1.0f32; n],
+            cl = format!("{:?}", (0..n).collect::<Vec<_>>()),
+            ang = vec![10.0f32; n],
+        );
+        let params = PredictorParams::from_json(&Json::parse(&js).unwrap()).unwrap();
+        MorPolicy::new(m, &params, PredictorConfig::default())
+    }
+
+    #[test]
+    fn baseline_vs_predictor_cycles() {
+        let m = tiny_conv(3);
+        let x = input(6 * 6 * 2, 5);
+        let pol = zero_policy(&m, 0);
+        let r = exec::run_sample(&m, Some(&pol), &x, RunOpts { oracle: false, collect_trace: true });
+
+        let sim = Simulator::new(Config::default());
+        let base = sim.simulate_sample(&m, None, None);
+        let mor = sim.simulate_sample(&m, Some(&pol), Some(&r.traces));
+
+        assert!(base.cycles > 0);
+        assert!(base.neurons_skipped == 0);
+        // On this toy model the savings are small and the predictor's fixed
+        // costs (binWeight fill, proxy→member dependency) are visible, so
+        // allow a few % of slack; real-model speedup (>1x) is asserted by
+        // the integration tests over the artifacts (fig13).
+        assert!(
+            mor.cycles <= base.cycles + base.cycles / 20,
+            "mor={} base={}",
+            mor.cycles,
+            base.cycles
+        );
+        // MoR computed fewer MACs iff anything was skipped
+        if mor.neurons_skipped > 0 {
+            assert!(mor.macs < base.macs);
+            assert!(mor.dram_weight_bytes < base.dram_weight_bytes);
+        }
+        // baseline has no binary datapath
+        assert_eq!(base.bin_ops, 0);
+        assert_eq!(base.dram_binweight_bytes, 0);
+    }
+
+    #[test]
+    fn all_computed_matches_total_macs() {
+        let m = tiny_conv(7);
+        let sim = Simulator::new(Config::default());
+        let st = sim.simulate_sample(&m, None, None);
+        let want: u64 = m.mac_counts().iter().sum();
+        assert_eq!(st.macs, want);
+        assert_eq!(st.neurons_computed as u64 * 0 + st.neurons_skipped, 0);
+    }
+
+    #[test]
+    fn cycles_at_least_compute_bound() {
+        let m = tiny_conv(9);
+        let sim = Simulator::new(Config::default());
+        let st = sim.simulate_sample(&m, None, None);
+        let peak = Config::default().accel.peak_macs_per_cycle();
+        assert!(
+            st.cycles >= st.macs / peak,
+            "cycles {} below compute roofline {}",
+            st.cycles,
+            st.macs / peak
+        );
+    }
+
+    #[test]
+    fn weight_traffic_accounting() {
+        let m = tiny_conv(13);
+        let sim = Simulator::new(Config::default());
+        let st = sim.simulate_sample(&m, None, None);
+        // every computed neuron fetched exactly K weight bytes
+        assert_eq!(st.dram_weight_bytes, st.macs);
+        assert!(st.dram_input_bytes > 0);
+        assert!(st.dram_output_bytes > 0);
+    }
+}

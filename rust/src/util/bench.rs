@@ -1,0 +1,164 @@
+//! Bench harness (criterion is not in the offline vendor set).
+//!
+//! Each `rust/benches/*.rs` is a `harness = false` binary that uses this
+//! module for (a) wall-clock micro-benchmarks with warmup + robust stats,
+//! and (b) table printing in the paper's row format. `cargo bench` runs
+//! them all; each prints the figure/table it regenerates.
+
+use std::time::Instant;
+
+/// Result of a timed benchmark.
+#[derive(Clone, Debug)]
+pub struct Timing {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub min_ns: f64,
+    pub stddev_ns: f64,
+}
+
+impl Timing {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    pub fn report(&self) {
+        println!(
+            "  {:<42} {:>12.3} ms/iter (median {:.3}, min {:.3}, sd {:.3}, n={})",
+            self.name,
+            self.mean_ns / 1e6,
+            self.median_ns / 1e6,
+            self.min_ns / 1e6,
+            self.stddev_ns / 1e6,
+            self.iters
+        );
+    }
+}
+
+/// Time `f` with warmup; chooses iteration count so total time ≈ budget.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> Timing {
+    bench_with(name, 3, 0.5, &mut f)
+}
+
+/// Like [`bench`] but with explicit warmup iterations and time budget (s).
+pub fn bench_with<F: FnMut()>(name: &str, warmup: usize, budget_s: f64, f: &mut F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    // estimate single-iteration cost
+    let t0 = Instant::now();
+    f();
+    let est = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((budget_s / est) as usize).clamp(5, 10_000);
+
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let median = samples[samples.len() / 2];
+    let min = samples[0];
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>()
+        / samples.len() as f64;
+    Timing {
+        name: name.to_string(),
+        iters,
+        mean_ns: mean,
+        median_ns: median,
+        min_ns: min,
+        stddev_ns: var.sqrt(),
+    }
+}
+
+/// Pretty table printer used by the figure benches.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                if i < widths.len() {
+                    widths[i] = widths[i].max(c.len());
+                }
+            }
+        }
+        println!("\n=== {} ===", self.title);
+        let header: Vec<String> = self
+            .headers
+            .iter()
+            .enumerate()
+            .map(|(i, h)| format!("{:<w$}", h, w = widths[i]))
+            .collect();
+        println!("{}", header.join("  "));
+        println!("{}", "-".repeat(header.join("  ").len()));
+        for row in &self.rows {
+            let cells: Vec<String> = row
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths.get(i).copied().unwrap_or(0)))
+                .collect();
+            println!("{}", cells.join("  "));
+        }
+    }
+
+    /// CSV dump (figures_out/*.csv) so plots can be made outside.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&self.headers.join(","));
+        s.push('\n');
+        for row in &self.rows {
+            s.push_str(&row.join(","));
+            s.push('\n');
+        }
+        s
+    }
+
+    pub fn write_csv(&self, dir: &str, name: &str) -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(format!("{dir}/{name}.csv"), self.to_csv())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_stats() {
+        let t = bench_with("noop-ish", 1, 0.02, &mut || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(t.iters >= 5);
+        assert!(t.min_ns <= t.mean_ns * 1.01);
+        assert!(t.median_ns > 0.0);
+    }
+
+    #[test]
+    fn table_formats() {
+        let mut t = Table::new("t", &["a", "bb"]);
+        t.row(&["1".into(), "2".into()]);
+        let csv = t.to_csv();
+        assert_eq!(csv, "a,bb\n1,2\n");
+    }
+}

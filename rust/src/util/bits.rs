@@ -1,0 +1,160 @@
+//! Bit-packed binary vectors for the binCU fast path.
+//!
+//! The paper's Binary Prediction Unit computes ±1 dot products with XNOR +
+//! popcount gates. On the host, the same trick makes the functional engine
+//! fast: pack "activation bits" (x > 0) and "weight sign bits" (w >= 0)
+//! into u64 words and compute
+//!
+//! ```text
+//! p_bin = matches - mismatches = K_valid - 2 * popcount(a XOR b)   (valid lanes)
+//! ```
+//!
+//! with a per-word validity mask so SAME-padding lanes contribute 0
+//! (matching the jnp calibration path, which zero-pads the *binarized*
+//! tensor — see python/compile/quantize.py).
+
+/// A packed ±1/invalid vector: `bits[i]` = 1 for +1 lanes, 0 for -1 lanes;
+/// `valid[i]` = 1 where the lane participates (0 ⇒ contributes nothing).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedVec {
+    pub bits: Vec<u64>,
+    pub valid: Vec<u64>,
+    pub len: usize,
+}
+
+impl PackedVec {
+    pub fn zeros(len: usize) -> Self {
+        let words = len.div_ceil(64);
+        PackedVec {
+            bits: vec![0; words],
+            valid: vec![0; words],
+            len,
+        }
+    }
+
+    /// Pack weight signs: +1 iff w >= 0; every lane valid.
+    pub fn from_weights(w: &[i8]) -> Self {
+        let mut p = PackedVec::zeros(w.len());
+        for (i, &v) in w.iter().enumerate() {
+            if v >= 0 {
+                p.set_bit(i);
+            }
+            p.set_valid(i);
+        }
+        p
+    }
+
+    /// Pack activation bits: +1 iff x > 0; every lane valid.
+    pub fn from_acts(x: &[i8]) -> Self {
+        let mut p = PackedVec::zeros(x.len());
+        for (i, &v) in x.iter().enumerate() {
+            if v > 0 {
+                p.set_bit(i);
+            }
+            p.set_valid(i);
+        }
+        p
+    }
+
+    #[inline]
+    pub fn set_bit(&mut self, i: usize) {
+        self.bits[i / 64] |= 1 << (i % 64);
+    }
+
+    #[inline]
+    pub fn set_valid(&mut self, i: usize) {
+        self.valid[i / 64] |= 1 << (i % 64);
+    }
+
+    /// Mark lane i as +1 (bit set) or -1 (clear), valid either way.
+    #[inline]
+    pub fn push_lane(&mut self, i: usize, plus_one: bool) {
+        if plus_one {
+            self.set_bit(i);
+        }
+        self.set_valid(i);
+    }
+
+    /// Binary dot product over jointly-valid lanes:
+    /// sum over lanes of (+1 if bits agree else -1), invalid lanes add 0.
+    pub fn dot(&self, other: &PackedVec) -> i32 {
+        debug_assert_eq!(self.len, other.len);
+        let mut valid_count = 0i32;
+        let mut mismatches = 0i32;
+        for w in 0..self.bits.len() {
+            let valid = self.valid[w] & other.valid[w];
+            valid_count += valid.count_ones() as i32;
+            mismatches += ((self.bits[w] ^ other.bits[w]) & valid).count_ones() as i32;
+        }
+        valid_count - 2 * mismatches
+    }
+}
+
+/// Reference (unpacked) binary dot used by tests: act(x) in {-1,+1,0-pad},
+/// sign(w) in {-1,+1}.
+pub fn binary_dot_ref(x: &[i8], w: &[i8]) -> i32 {
+    debug_assert_eq!(x.len(), w.len());
+    x.iter()
+        .zip(w)
+        .map(|(&xv, &wv)| {
+            let a: i32 = if xv > 0 { 1 } else { -1 };
+            let s: i32 = if wv >= 0 { 1 } else { -1 };
+            a * s
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::property;
+
+    #[test]
+    fn packed_matches_reference() {
+        property("packed binary dot == reference", 200, |g| {
+            let n = g.usize(1, 300);
+            let x = g.vec_i8(n);
+            let w = g.vec_i8(n);
+            let got = PackedVec::from_acts(&x).dot(&PackedVec::from_weights(&w));
+            let want = binary_dot_ref(&x, &w);
+            crate::prop_assert!(g, got == want, "n={n} got={got} want={want}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn invalid_lanes_contribute_zero() {
+        let mut a = PackedVec::zeros(128);
+        let mut b = PackedVec::zeros(128);
+        // all lanes valid on a; only first 10 valid on b, all agreeing (+1)
+        for i in 0..128 {
+            a.push_lane(i, true);
+        }
+        for i in 0..10 {
+            b.push_lane(i, true);
+        }
+        assert_eq!(a.dot(&b), 10);
+    }
+
+    #[test]
+    fn zero_conventions() {
+        // act(0) = -1, sign(0) = +1
+        let x = [0i8, 5, 0];
+        let w = [0i8, 0, -3];
+        // lanes: (-1)(+1) + (+1)(+1) + (-1)(-1) = -1 + 1 + 1 = 1
+        assert_eq!(binary_dot_ref(&x, &w), 1);
+        assert_eq!(
+            PackedVec::from_acts(&x).dot(&PackedVec::from_weights(&w)),
+            1
+        );
+    }
+
+    #[test]
+    fn bounds() {
+        let x = vec![1i8; 130];
+        let w = vec![1i8; 130];
+        assert_eq!(PackedVec::from_acts(&x).dot(&PackedVec::from_weights(&w)), 130);
+        let w2 = vec![-1i8; 130];
+        assert_eq!(PackedVec::from_acts(&x).dot(&PackedVec::from_weights(&w2)), -130);
+    }
+}

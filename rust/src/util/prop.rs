@@ -1,0 +1,147 @@
+//! Tiny property-testing harness (proptest is not in the offline vendor
+//! set; see DESIGN.md §3). Deterministic by default, shrink-free: on
+//! failure it reports the seed + case index so the exact case replays.
+//!
+//! ```no_run
+//! use mor::util::prop::{property, Gen};
+//! use mor::prop_assert;
+//! property("sum is commutative", 200, |g: &mut Gen| {
+//!     let a = g.i64(-100, 100);
+//!     let b = g.i64(-100, 100);
+//!     prop_assert!(g, a + b == b + a, "a={a} b={b}");
+//!     Ok(())
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Per-case generator handle; wraps the RNG and carries case metadata.
+pub struct Gen {
+    rng: Rng,
+    pub case: usize,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn i64(&mut self, lo: i64, hi: i64) -> i64 {
+        self.rng.int_in(lo, hi)
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.int_in(lo as i64, hi as i64) as usize
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    pub fn normal(&mut self) -> f64 {
+        self.rng.normal()
+    }
+
+    pub fn int8(&mut self) -> i8 {
+        self.rng.int8()
+    }
+
+    pub fn vec_i8(&mut self, n: usize) -> Vec<i8> {
+        (0..n).map(|_| self.int8()).collect()
+    }
+
+    pub fn vec_f32(&mut self, n: usize, lo: f64, hi: f64) -> Vec<f32> {
+        (0..n).map(|_| self.f64(lo, hi) as f32).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.index(xs.len())]
+    }
+
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        self.rng.shuffle(xs)
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` random cases of `f`. Panics (failing the enclosing test)
+/// with the seed and case index on the first failed case.
+///
+/// Override the base seed with `MOR_PROP_SEED` to replay a failure.
+pub fn property<F>(name: &str, cases: usize, mut f: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let base_seed: u64 = std::env::var("MOR_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE);
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen {
+            rng: Rng::new(seed),
+            case,
+            seed,
+        };
+        if let Err(msg) = f(&mut g) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}, \
+                 set MOR_PROP_SEED={base_seed} to replay): {msg}"
+            );
+        }
+    }
+}
+
+/// assert-like helper that returns Err instead of panicking, so `property`
+/// can attach case/seed context.
+#[macro_export]
+macro_rules! prop_assert {
+    ($g:expr, $cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        property("trivial", 50, |_g| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_context() {
+        property("fails", 10, |g| {
+            let v = g.i64(0, 100);
+            if v >= 0 {
+                Err(format!("v={v}"))
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        property("bounds", 100, |g| {
+            let v = g.usize(3, 9);
+            prop_assert!(g, (3..=9).contains(&v), "usize out of bounds: {v}");
+            let f = g.f64(-1.0, 1.0);
+            prop_assert!(g, (-1.0..1.0).contains(&f), "f64 out of bounds: {f}");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,216 @@
+//! Minimal TOML-subset parser for the config system (`configs/*.toml`).
+//!
+//! Supported grammar (what our configs use — see configs/table1.toml):
+//! `[section]` headers, `key = value` with integer / float / bool / string
+//! values, `#` comments, blank lines. Keys are addressed as
+//! `"section.key"` (or bare `"key"` before any section header).
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+}
+
+impl TomlValue {
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error on line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Toml {
+    pub entries: BTreeMap<String, TomlValue>,
+}
+
+impl Toml {
+    pub fn parse(src: &str) -> Result<Toml, TomlError> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (ln, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or(TomlError {
+                    line: ln + 1,
+                    msg: "unterminated section header".into(),
+                })?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or(TomlError {
+                line: ln + 1,
+                msg: "expected 'key = value'".into(),
+            })?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let value = parse_value(v.trim()).ok_or(TomlError {
+                line: ln + 1,
+                msg: format!("cannot parse value '{}'", v.trim()),
+            })?;
+            entries.insert(key, value);
+        }
+        Ok(Toml { entries })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.entries.get(key)
+    }
+
+    pub fn i64_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(|v| v.as_i64()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(|v| v.as_str()).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside a quoted string is respected
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Option<TomlValue> {
+    if s == "true" {
+        return Some(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Some(TomlValue::Bool(false));
+    }
+    if let Some(q) = s.strip_prefix('"') {
+        return q.strip_suffix('"').map(|v| TomlValue::Str(v.to_string()));
+    }
+    // underscores as digit separators, like real TOML
+    let cleaned: String = s.chars().filter(|&c| c != '_').collect();
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Some(TomlValue::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Some(TomlValue::Float(f));
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# accelerator configuration (Table 1)
+name = "table1"
+
+[accelerator]
+frequency_mhz = 1200
+num_cus = 8
+cu_width = 8          # MACs per cycle per CU
+input_sram_kb = 16.0
+predictor = true
+
+[dram]
+capacity_gb = 1
+port_bytes = 8
+burst_bytes = 64
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let t = Toml::parse(SAMPLE).unwrap();
+        assert_eq!(t.str_or("name", ""), "table1");
+        assert_eq!(t.i64_or("accelerator.frequency_mhz", 0), 1200);
+        assert_eq!(t.i64_or("accelerator.cu_width", 0), 8);
+        assert_eq!(t.f64_or("accelerator.input_sram_kb", 0.0), 16.0);
+        assert!(t.bool_or("accelerator.predictor", false));
+        assert_eq!(t.i64_or("dram.burst_bytes", 0), 64);
+    }
+
+    #[test]
+    fn defaults_for_missing_keys() {
+        let t = Toml::parse("").unwrap();
+        assert_eq!(t.i64_or("nope", 7), 7);
+        assert_eq!(t.str_or("nope", "x"), "x");
+    }
+
+    #[test]
+    fn comments_and_underscores() {
+        let t = Toml::parse("big = 1_000_000 # one million").unwrap();
+        assert_eq!(t.i64_or("big", 0), 1_000_000);
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let t = Toml::parse("s = \"a#b\"").unwrap();
+        assert_eq!(t.str_or("s", ""), "a#b");
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = Toml::parse("a = 1\nbroken line\n").unwrap_err();
+        assert_eq!(err.line, 2);
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let t = Toml::parse("a = 2\nb = 2.5").unwrap();
+        assert_eq!(t.get("a").unwrap().as_i64(), Some(2));
+        assert_eq!(t.get("b").unwrap().as_i64(), None);
+        assert_eq!(t.f64_or("a", 0.0), 2.0);
+        assert_eq!(t.f64_or("b", 0.0), 2.5);
+    }
+}
