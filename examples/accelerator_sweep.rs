@@ -16,7 +16,7 @@ fn main() -> Result<()> {
         &arts.model,
         Some(&pol),
         arts.data.test_sample(0),
-        RunOpts { oracle: false, collect_trace: true },
+        RunOpts { oracle: false, collect_trace: true, ..Default::default() }.parallel(),
     )
     .traces;
 

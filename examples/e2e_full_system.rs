@@ -33,7 +33,12 @@ fn main() -> Result<()> {
     for i in 0..n_check {
         let sample = arts.data.test_sample(i);
         let pjrt_logits = exe.forward(sample)?;
-        let eng = exec::run_sample(&arts.model, None, sample, RunOpts { oracle: false, collect_trace: false });
+        let eng = exec::run_sample(
+            &arts.model,
+            None,
+            sample,
+            RunOpts { oracle: false, collect_trace: false, ..Default::default() },
+        );
         if argmax(&pjrt_logits) == argmax(&eng.logits) {
             agree += 1;
         }
@@ -83,7 +88,7 @@ fn main() -> Result<()> {
     );
     let sim = Simulator::new(cfg.clone());
     let tr = exec::run_sample(&a.model, Some(&pol), a.data.test_sample(0),
-        RunOpts { oracle: false, collect_trace: true }).traces;
+        RunOpts { oracle: false, collect_trace: true, ..Default::default() }).traces;
     let b = sim.simulate_sample(&a.model, None, None);
     let m = sim.simulate_sample(&a.model, Some(&pol), Some(&tr));
     println!(
@@ -100,7 +105,7 @@ fn main() -> Result<()> {
     let mut stream = RequestStream::new(200.0, arts.data.n_test(), 11);
     let requests = stream.generate(2.0);
     let n_req = requests.len();
-    let rep = serve(&arts, Some(policy), Backend::Engine, 4, requests, &dir, 1.0)?;
+    let rep = serve(&arts, Some(policy), Backend::Engine, 4, requests, &dir, 1.0, 1)?;
     rep.print("e2e");
     ensure!(rep.completed == n_req, "dropped requests");
 

@@ -23,10 +23,12 @@ fn main() -> Result<()> {
     println!("speech serving: {} requests at {rps} rps over {duration}s, {workers} workers", requests.len());
 
     let policy = MorPolicy::new(&arts.model, &arts.predictor, PredictorConfig::default());
-    let rep = serve(&arts, Some(policy), Backend::Engine, workers, requests.clone(), &dir, 1.0)?;
+    let rep = serve(
+        &arts, Some(policy), Backend::Engine, workers, requests.clone(), &dir, 1.0, 1,
+    )?;
     rep.print("tds+MoR");
 
-    let rep0 = serve(&arts, None, Backend::Engine, workers, requests, &dir, 1.0)?;
+    let rep0 = serve(&arts, None, Backend::Engine, workers, requests, &dir, 1.0, 1)?;
     rep0.print("tds baseline");
 
     println!(

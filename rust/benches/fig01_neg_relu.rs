@@ -18,7 +18,11 @@ fn main() {
                 &a.model,
                 None,
                 &x,
-                mor::predictor::RunOpts { oracle: false, collect_trace: false },
+                mor::predictor::RunOpts {
+                    oracle: false,
+                    collect_trace: false,
+                    ..Default::default()
+                },
             ));
         });
         timing.report();

@@ -1,44 +1,204 @@
-//! §Perf micro-benchmarks: the three host hot paths (dot kernel, packed
-//! binary dot, full MoR forward) tracked across the optimization pass.
+//! §Perf micro-benchmarks: the host hot paths tracked across the
+//! optimization passes — dot kernels, the scalar GEMV vs tiled GEMM
+//! engine, and the full MoR forward at 1/2/4/8 row-tile threads.
+//!
+//! Besides the human-readable report, emits `BENCH_hotpaths.json`
+//! (override the path with `MOR_BENCH_OUT`) so the perf trajectory is
+//! machine-diffable across PRs. Falls back to a synthetic cnn10-scale
+//! model when `make artifacts` has not run, so the JSON is always
+//! complete.
 mod common;
+
 use mor::engine::dot::dot_i8;
-use mor::util::bench::bench_with;
+use mor::engine::gemm::{self, PrepackedFilters, NR};
+use mor::model::synth;
+use mor::predictor::{exec, EngineSel, MorPolicy, RunOpts};
+use mor::util::bench::{bench_with, Timing};
 use mor::util::bits::PackedVec;
 use mor::util::rng::Rng;
+use std::hint::black_box;
+
+const FWD_THREADS: [usize; 4] = [1, 2, 4, 8];
 
 fn main() {
     let mut rng = Rng::new(7);
-    let k = 576usize;
+    let k = 576usize; // largest K in the model zoo (3x3x64)
+    let cout = 64usize;
+    let rows = 64usize;
     let x: Vec<i8> = (0..k).map(|_| rng.int8()).collect();
     let w: Vec<i8> = (0..k).map(|_| rng.int8()).collect();
 
-    let t = bench_with("dot_i8 (K=576)", 10, 0.3, &mut || {
-        std::hint::black_box(dot_i8(std::hint::black_box(&x), std::hint::black_box(&w)));
+    // ---- single-dot kernels ---------------------------------------------
+    let t_dot = bench_with("dot_i8 (K=576)", 10, 0.2, &mut || {
+        black_box(dot_i8(black_box(&x), black_box(&w)));
     });
-    t.report();
-    let gmacs = k as f64 / t.min_ns;
-    println!("    ≈ {gmacs:.2} GMAC/s single-thread (min)");
+    t_dot.report();
+    let dot_gmacs = k as f64 / t_dot.min_ns;
+    println!("    ≈ {dot_gmacs:.2} GMAC/s single-thread (min)");
 
     let px = PackedVec::from_acts(&x);
     let pw = PackedVec::from_weights(&w);
-    let t = bench_with("packed binary dot (K=576)", 10, 0.3, &mut || {
-        std::hint::black_box(px.dot(std::hint::black_box(&pw)));
+    let t_bin = bench_with("packed binary dot (K=576)", 10, 0.2, &mut || {
+        black_box(px.dot(black_box(&pw)));
     });
-    t.report();
+    t_bin.report();
+    let bin_gops = k as f64 / t_bin.min_ns;
 
+    // ---- scalar GEMV vs tiled GEMM on one dense layer -------------------
+    let node = synth::dense_node(k, cout, 11);
+    let pf = PrepackedFilters::new(&node);
+    let patches: Vec<Vec<i8>> = (0..rows)
+        .map(|_| (0..k).map(|_| rng.int8()).collect())
+        .collect();
+    let mut padded = vec![0i8; rows * pf.k_pad];
+    for (r, p) in patches.iter().enumerate() {
+        padded[r * pf.k_pad..r * pf.k_pad + k].copy_from_slice(p);
+    }
+    let work_macs = (rows * cout * k) as f64;
+
+    let mut sink = 0i64;
+    let t_gemv = bench_with("per-neuron GEMV (64 rows x 64 filters)", 3, 0.3, &mut || {
+        let mut acc = 0i64;
+        for p in &patches {
+            for f in 0..cout {
+                acc += dot_i8(p, node.filter(f)) as i64;
+            }
+        }
+        sink ^= black_box(acc);
+    });
+    t_gemv.report();
+    let gemv_gmacs = work_macs / t_gemv.min_ns;
+    println!("    ≈ {gemv_gmacs:.2} GMAC/s");
+
+    let t_gemm = bench_with("tiled GEMM micro-kernel (same work)", 3, 0.3, &mut || {
+        let mut acc = 0i64;
+        let mut blk = [0i32; NR];
+        let mut f0 = 0;
+        while f0 < cout {
+            let nf = NR.min(cout - f0);
+            for r in 0..rows {
+                gemm::dot_block(&padded[r * pf.k_pad..(r + 1) * pf.k_pad], &pf, f0, nf, &mut blk);
+                for &d in &blk[..nf] {
+                    acc += d as i64;
+                }
+            }
+            f0 += NR;
+        }
+        sink ^= black_box(acc);
+    });
+    t_gemm.report();
+    let gemm_gmacs = work_macs / t_gemm.min_ns;
+    println!(
+        "    ≈ {gemm_gmacs:.2} GMAC/s ({:.2}x over per-neuron GEMV)",
+        t_gemv.min_ns / t_gemm.min_ns
+    );
+    black_box(sink);
+
+    // ---- full MoR forward: scalar reference vs tiled at 1/2/4/8 threads -
+    let (model, pol, xs, model_label) = forward_workload();
+    println!("\nfull MoR forward on {model_label}:");
+    let scalar_opts = RunOpts {
+        oracle: false,
+        collect_trace: false,
+        threads: 1,
+        engine: EngineSel::ScalarRef,
+    };
+    let t_scalar = bench_with(
+        &format!("{model_label} MoR fwd, per-neuron baseline"),
+        1,
+        0.5,
+        &mut || {
+            black_box(exec::run_sample(&model, Some(&pol), &xs, scalar_opts));
+        },
+    );
+    t_scalar.report();
+
+    let mut tiled: Vec<(usize, Timing)> = Vec::new();
+    for threads in FWD_THREADS {
+        let opts = RunOpts { threads, engine: EngineSel::Tiled, ..scalar_opts };
+        let t = bench_with(
+            &format!("{model_label} MoR fwd, tiled GEMM, {threads} thread(s)"),
+            1,
+            0.5,
+            &mut || {
+                black_box(exec::run_sample(&model, Some(&pol), &xs, opts));
+            },
+        );
+        t.report();
+        tiled.push((threads, t));
+    }
+    let t1 = tiled[0].1.min_ns;
+    println!(
+        "    single-thread speedup vs per-neuron: {:.2}x | 4-thread scaling: {:.2}x over 1-thread",
+        t_scalar.min_ns / t1,
+        t1 / tiled.iter().find(|(n, _)| *n == 4).map(|(_, t)| t.min_ns).unwrap_or(t1)
+    );
+
+    // ---- machine-readable trajectory ------------------------------------
+    let out_path =
+        std::env::var("MOR_BENCH_OUT").unwrap_or_else(|_| "BENCH_hotpaths.json".to_string());
+    let mut js = String::new();
+    js.push_str("{\n");
+    js.push_str("  \"bench\": \"perf_hotpaths\",\n");
+    js.push_str(&format!(
+        "  \"threads_available\": {},\n",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    ));
+    js.push_str(&format!("  \"dot_i8_gmacs\": {dot_gmacs:.4},\n"));
+    js.push_str(&format!("  \"packed_bin_dot_gops\": {bin_gops:.4},\n"));
+    js.push_str(&format!("  \"gemv_scalar_gmacs\": {gemv_gmacs:.4},\n"));
+    js.push_str(&format!("  \"gemm_tiled_gmacs\": {gemm_gmacs:.4},\n"));
+    js.push_str(&format!(
+        "  \"gemm_vs_gemv_speedup\": {:.4},\n",
+        t_gemv.min_ns / t_gemm.min_ns
+    ));
+    js.push_str("  \"forward\": {\n");
+    js.push_str(&format!("    \"model\": \"{model_label}\",\n"));
+    js.push_str(&format!("    \"scalar_ref_ms\": {:.4},\n", t_scalar.min_ns / 1e6));
+    js.push_str("    \"tiled_ms\": {");
+    for (i, (threads, t)) in tiled.iter().enumerate() {
+        if i > 0 {
+            js.push_str(", ");
+        }
+        js.push_str(&format!("\"{threads}\": {:.4}", t.min_ns / 1e6));
+    }
+    js.push_str("},\n");
+    js.push_str(&format!(
+        "    \"speedup_1t_vs_scalar\": {:.4},\n",
+        t_scalar.min_ns / t1
+    ));
+    let t4 = tiled
+        .iter()
+        .find(|(n, _)| *n == 4)
+        .map(|(_, t)| t.min_ns)
+        .unwrap_or(t1);
+    js.push_str(&format!("    \"scaling_4t_vs_1t\": {:.4}\n", t1 / t4));
+    js.push_str("  }\n}\n");
+    match std::fs::write(&out_path, &js) {
+        Ok(()) => println!("\nwrote {out_path}"),
+        Err(e) => eprintln!("\nfailed to write {out_path}: {e}"),
+    }
+}
+
+/// The forward-pass workload: real cnn10 artifacts when available,
+/// otherwise a synthetic cnn10-scale stack with a synthetic policy.
+fn forward_workload() -> (mor::model::Model, MorPolicy, Vec<f32>, String) {
     if let Some(zoo) = common::load_zoo() {
-        for a in zoo.iter().filter(|a| a.meta.name == "cnn10") {
-            let pol = mor::predictor::MorPolicy::new(
-                &a.model, &a.predictor, Default::default());
+        if let Some(a) = zoo.into_iter().find(|a| a.meta.name == "cnn10") {
+            let pol = MorPolicy::new(&a.model, &a.predictor, Default::default());
             let xs = a.data.test_sample(0).to_vec();
-            let t = bench_with("cnn10 MoR fwd (oracle off)", 1, 0.5, &mut || {
-                std::hint::black_box(mor::predictor::exec::run_sample(
-                    &a.model, Some(&pol), &xs,
-                    mor::predictor::RunOpts { oracle: false, collect_trace: false }));
-            });
-            t.report();
-            let macs = a.meta.macs_per_sample as f64;
-            println!("    ≈ {:.2} effective GMAC/s", macs / t.min_ns);
+            return (a.model, pol, xs, "cnn10".to_string());
         }
     }
+    let model = synth::cnn10_like(21);
+    let params = synth::predictor_for(&model, 22);
+    let pol = MorPolicy::new(
+        &model,
+        &params,
+        mor::config::PredictorConfig { threshold: 0.5, ..Default::default() },
+    );
+    let (h, w, c) = model.input_shape;
+    let mut rng = Rng::new(23);
+    let xs: Vec<f32> = (0..h * w * c).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+    (model, pol, xs, "cnn10-synth".to_string())
 }

@@ -103,7 +103,9 @@ COMMANDS:
                  --rps <r>             request rate (default: 200)
                  --duration <s>        seconds of simulated load (default: 5)
                  --workers <n>         worker threads (default: 4)
-                 --runtime pjrt|engine execution backend (default: engine)
+                 --intra-threads <n>   row-tile threads per sample (default: 1)
+                 --runtime pjrt|engine execution backend (default: engine;
+                                       pjrt needs --features pjrt at build)
     info       Print artifact + configuration info
                  --config              print Table 1
                  --artifacts <dir>

@@ -101,6 +101,11 @@ impl ServeReport {
 ///
 /// `time_scale` compresses the virtual arrival clock (e.g. 0.1 replays a
 /// 10 s trace in 1 s) — useful for tests; 1.0 is real time.
+///
+/// `intra_threads` is the per-sample row-tile parallelism of the tiled
+/// engine (see [`RunOpts::threads`]): keep it at 1 when `workers` already
+/// saturates the machine (throughput serving), raise it for
+/// latency-critical low-concurrency streams.
 pub fn serve(
     arts: &Artifacts,
     policy: Option<MorPolicy>,
@@ -109,7 +114,16 @@ pub fn serve(
     requests: Vec<Request>,
     artifacts_dir: &str,
     time_scale: f64,
+    intra_threads: usize,
 ) -> Result<ServeReport> {
+    #[cfg(not(feature = "pjrt"))]
+    {
+        anyhow::ensure!(
+            backend != Backend::Pjrt,
+            "the Pjrt backend needs a build with `--features pjrt`"
+        );
+        let _ = artifacts_dir;
+    }
     if requests.is_empty() {
         return Ok(ServeReport::default());
     }
@@ -158,8 +172,16 @@ pub fn serve(
         Backend::Engine => workers.max(1),
         Backend::Pjrt => 1, // PJRT handles live on one thread
     };
+    #[cfg(feature = "pjrt")]
     let hlo_path = Artifacts::hlo_path(artifacts_dir, &arts.meta.name);
+    #[cfg(feature = "pjrt")]
     let input_shape = arts.meta.input_shape;
+    let run_opts = RunOpts {
+        oracle: false,
+        collect_trace: false,
+        threads: intra_threads.max(1),
+        ..Default::default()
+    };
 
     let mut handles = Vec::new();
     for _ in 0..n_workers {
@@ -169,9 +191,11 @@ pub fn serve(
         let model = Arc::clone(&model);
         let policy = Arc::clone(&policy);
         let data = Arc::clone(&data);
+        #[cfg(feature = "pjrt")]
         let hlo_path = hlo_path.clone();
         handles.push(std::thread::spawn(move || -> Result<()> {
             // PJRT backend: compile once inside the owner thread
+            #[cfg(feature = "pjrt")]
             let pjrt_exe = match backend {
                 Backend::Pjrt => {
                     let rt = crate::runtime::Runtime::cpu()?;
@@ -192,21 +216,17 @@ pub fn serve(
                 let svc_t = Instant::now();
                 let (x, y, sample_len) = (&data.0, &data.1, data.2);
                 let sample = &x[req.sample_idx * sample_len..(req.sample_idx + 1) * sample_len];
+                #[cfg(feature = "pjrt")]
                 let logits = match &pjrt_exe {
                     Some(exe) => exe.forward(sample)?,
                     None => {
-                        exec::run_sample(
-                            &model,
-                            policy.as_ref().as_ref(),
-                            sample,
-                            RunOpts {
-                                oracle: false,
-                                collect_trace: false,
-                            },
-                        )
-                        .logits
+                        exec::run_sample(&model, policy.as_ref().as_ref(), sample, run_opts)
+                            .logits
                     }
                 };
+                #[cfg(not(feature = "pjrt"))]
+                let logits =
+                    exec::run_sample(&model, policy.as_ref().as_ref(), sample, run_opts).logits;
                 let correct =
                     crate::predictor::argmax(&logits) == y[req.sample_idx] as usize;
                 done_tx

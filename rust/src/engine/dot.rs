@@ -17,12 +17,23 @@ pub fn dot_i8(x: &[i8], w: &[i8]) -> i32 {
     debug_assert_eq!(x.len(), w.len());
     #[cfg(target_arch = "x86_64")]
     {
-        if std::arch::is_x86_feature_detected!("avx2") {
+        if avx2_enabled() {
             // SAFETY: feature checked at runtime; slices have equal length.
             return unsafe { dot_i8_avx2(x, w) };
         }
     }
     dot_i8_scalar(x, w)
+}
+
+/// Cached CPU-feature dispatch: the `is_x86_feature_detected!` check is
+/// hoisted out of the hot path into a `OnceLock` so per-dot calls pay one
+/// relaxed atomic load instead of the detection macro's lookup.
+#[cfg(target_arch = "x86_64")]
+#[inline]
+pub fn avx2_enabled() -> bool {
+    use std::sync::OnceLock;
+    static AVX2: OnceLock<bool> = OnceLock::new();
+    *AVX2.get_or_init(|| std::arch::is_x86_feature_detected!("avx2"))
 }
 
 /// Portable fallback.

@@ -1,0 +1,338 @@
+//! Cache-blocked, row-batched int8 GEMM micro-kernels for the tiled engine.
+//!
+//! The per-neuron GEMV path (one `dot_i8` per output position) re-reads the
+//! patch once per filter and re-slices the weight tensor on every call. The
+//! kernels here restructure that dataflow the way SparseNN/Cnvlutin-class
+//! accelerators do: weights are prepacked **once per model** into
+//! filter-major, zero-padded, contiguous blocks ([`PrepackedFilters`]),
+//! patches are gathered into row tiles of [`TILE_ROWS`] ([`PatchTile`]),
+//! and the micro-kernel evaluates up to [`NR`] filters per patch load
+//! (AVX2 `vpmovsxbw` + `vpmaddwd`, with a portable fallback).
+//!
+//! All kernels are exact int8×int8→int32 sums, so the tiled engine is
+//! bit-identical to the scalar reference path by construction — the
+//! property suite in `rust/tests/engine_equivalence.rs` proves it.
+
+use crate::engine::dot;
+use crate::model::{Model, Node};
+use crate::util::bits::PackedVec;
+
+/// Filters evaluated per micro-kernel invocation (accumulator registers).
+pub const NR: usize = 8;
+/// Patches per row tile: a filter block loaded once serves this many rows.
+pub const TILE_ROWS: usize = 16;
+/// Dot-length alignment of prepacked filters and tile rows (one 128-bit
+/// int8 load, sign-extended to a 256-bit i16 vector).
+pub const K_ALIGN: usize = 16;
+
+/// Round a dot length up to the kernel alignment.
+#[inline]
+pub fn pad_k(k_len: usize) -> usize {
+    k_len.max(1).div_ceil(K_ALIGN) * K_ALIGN
+}
+
+/// One layer's weights, repacked filter-major with each filter zero-padded
+/// to [`K_ALIGN`] so the micro-kernel needs no tail handling. Padding lanes
+/// multiply against zero patch lanes and contribute nothing, keeping every
+/// dot product exactly equal to the unpadded `dot_i8`.
+#[derive(Clone, Debug)]
+pub struct PrepackedFilters {
+    pub cout: usize,
+    pub k_len: usize,
+    pub k_pad: usize,
+    data: Vec<i8>,
+}
+
+impl PrepackedFilters {
+    pub fn new(node: &Node) -> PrepackedFilters {
+        let k_len = node.k_len();
+        let cout = node.cout();
+        let k_pad = pad_k(k_len);
+        let mut data = vec![0i8; cout * k_pad];
+        for f in 0..cout {
+            data[f * k_pad..f * k_pad + k_len].copy_from_slice(node.filter(f));
+        }
+        PrepackedFilters {
+            cout,
+            k_len,
+            k_pad,
+            data,
+        }
+    }
+
+    /// Padded weight row for filter `f` (length `k_pad`).
+    #[inline]
+    pub fn filter(&self, f: usize) -> &[i8] {
+        &self.data[f * self.k_pad..(f + 1) * self.k_pad]
+    }
+}
+
+/// Prepacked weight blocks for every compute node of a model, built once
+/// (see [`crate::model::Model::prepacked`]) and shared read-only across
+/// forward passes and worker threads.
+#[derive(Clone, Debug, Default)]
+pub struct PrepackedModel {
+    pub layers: Vec<Option<PrepackedFilters>>,
+}
+
+impl PrepackedModel {
+    pub fn new(model: &Model) -> PrepackedModel {
+        PrepackedModel {
+            layers: model
+                .nodes
+                .iter()
+                .map(|n| n.is_compute().then(|| PrepackedFilters::new(n)))
+                .collect(),
+        }
+    }
+
+    /// Prepacked filters of compute node `i`.
+    #[inline]
+    pub fn layer(&self, i: usize) -> &PrepackedFilters {
+        self.layers[i]
+            .as_ref()
+            .expect("prepacked filters requested for a non-compute node")
+    }
+}
+
+/// A tile of up to [`TILE_ROWS`] im2col patches, each zero-padded to the
+/// prepack alignment, plus the packed ±1 activation planes the binary
+/// predictor consumes. Buffers are allocated once per worker and reused
+/// for every tile.
+pub struct PatchTile {
+    pub k_len: usize,
+    pub k_pad: usize,
+    data: Vec<i8>,
+    packed: Vec<PackedVec>,
+}
+
+impl PatchTile {
+    pub fn new(k_len: usize) -> PatchTile {
+        let k_pad = pad_k(k_len);
+        PatchTile {
+            k_len,
+            k_pad,
+            // padding lanes are written once here and never overwritten:
+            // set_row only touches the first k_len bytes of each row
+            data: vec![0i8; TILE_ROWS * k_pad],
+            packed: vec![PackedVec::zeros(k_len); TILE_ROWS],
+        }
+    }
+
+    /// Store one gathered patch (and its packed sign plane) as tile row `r`.
+    #[inline]
+    pub fn set_row(&mut self, r: usize, patch: &[i8], packed: &PackedVec) {
+        debug_assert_eq!(patch.len(), self.k_len);
+        self.data[r * self.k_pad..r * self.k_pad + self.k_len].copy_from_slice(patch);
+        let p = &mut self.packed[r];
+        p.bits.copy_from_slice(&packed.bits);
+        p.valid.copy_from_slice(&packed.valid);
+        p.len = packed.len;
+    }
+
+    /// Padded patch for tile row `r` (length `k_pad`).
+    #[inline]
+    pub fn patch(&self, r: usize) -> &[i8] {
+        &self.data[r * self.k_pad..(r + 1) * self.k_pad]
+    }
+
+    /// Packed ±1 activation plane for tile row `r`.
+    #[inline]
+    pub fn packed(&self, r: usize) -> &PackedVec {
+        &self.packed[r]
+    }
+}
+
+/// Evaluate a contiguous block of `nf <= NR` filters (`f0..f0+nf`) against
+/// one padded patch. `out[j]` receives the exact int32 dot of the patch
+/// with filter `f0 + j`.
+pub fn dot_block(patch: &[i8], pf: &PrepackedFilters, f0: usize, nf: usize, out: &mut [i32; NR]) {
+    debug_assert!(nf <= NR && f0 + nf <= pf.cout);
+    debug_assert_eq!(patch.len(), pf.k_pad);
+    #[cfg(target_arch = "x86_64")]
+    {
+        if dot::avx2_enabled() {
+            let mut ptrs = [std::ptr::null::<i8>(); NR];
+            for (j, p) in ptrs.iter_mut().enumerate().take(nf) {
+                *p = pf.filter(f0 + j).as_ptr();
+            }
+            // SAFETY: feature checked; every pointer addresses k_pad bytes
+            // and patch.len() == k_pad (both multiples of K_ALIGN).
+            unsafe { dot_block_avx2(patch.as_ptr(), &ptrs, nf, pf.k_pad, out) };
+            return;
+        }
+    }
+    for (j, o) in out.iter_mut().enumerate().take(nf) {
+        *o = dot::dot_i8_scalar(patch, pf.filter(f0 + j));
+    }
+}
+
+/// Like [`dot_block`] but over an arbitrary set of filter indices — the
+/// shape the predict-then-evaluate dataflow needs (cluster proxies and
+/// surviving (row, filter) pairs are scattered).
+pub fn dot_block_indexed(patch: &[i8], pf: &PrepackedFilters, idx: &[usize], out: &mut [i32; NR]) {
+    debug_assert!(idx.len() <= NR);
+    debug_assert_eq!(patch.len(), pf.k_pad);
+    #[cfg(target_arch = "x86_64")]
+    {
+        if dot::avx2_enabled() {
+            let mut ptrs = [std::ptr::null::<i8>(); NR];
+            for (p, &f) in ptrs.iter_mut().zip(idx) {
+                *p = pf.filter(f).as_ptr();
+            }
+            // SAFETY: as in dot_block.
+            unsafe { dot_block_avx2(patch.as_ptr(), &ptrs, idx.len(), pf.k_pad, out) };
+            return;
+        }
+    }
+    for (o, &f) in out.iter_mut().zip(idx) {
+        *o = dot::dot_i8_scalar(patch, pf.filter(f));
+    }
+}
+
+/// AVX2 multi-filter micro-kernel: one sign-extended patch load feeds up
+/// to NR `vpmaddwd` accumulator chains. Exact: i8·i8 products fit i16 and
+/// pairwise sums fit i32 (see `dot_i8_avx2`).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot_block_avx2(
+    patch: *const i8,
+    filt: &[*const i8; NR],
+    nf: usize,
+    k_pad: usize,
+    out: &mut [i32; NR],
+) {
+    use std::arch::x86_64::*;
+    let mut acc = [_mm256_setzero_si256(); NR];
+    let mut k = 0usize;
+    while k + K_ALIGN <= k_pad {
+        let xv = _mm256_cvtepi8_epi16(_mm_loadu_si128(patch.add(k) as *const __m128i));
+        for j in 0..nf {
+            let wv = _mm256_cvtepi8_epi16(_mm_loadu_si128(filt[j].add(k) as *const __m128i));
+            acc[j] = _mm256_add_epi32(acc[j], _mm256_madd_epi16(xv, wv));
+        }
+        k += K_ALIGN;
+    }
+    for j in 0..nf {
+        out[j] = hsum_epi32(acc[j]);
+    }
+}
+
+/// Horizontal sum of 8 i32 lanes.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn hsum_epi32(v: std::arch::x86_64::__m256i) -> i32 {
+    use std::arch::x86_64::*;
+    let hi = _mm256_extracti128_si256(v, 1);
+    let lo = _mm256_castsi256_si128(v);
+    let s = _mm_add_epi32(hi, lo);
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b01_00_11_10));
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b00_00_00_01));
+    _mm_cvtsi128_si32(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::dot::dot_i8;
+    use crate::util::prop::property;
+    use crate::util::rng::Rng;
+
+    fn fc_node(cin: usize, cout: usize, seed: u64) -> Node {
+        let mut rng = Rng::new(seed);
+        Node::Fc {
+            cin,
+            cout,
+            sw: 0.01,
+            sx: 0.01,
+            w: (0..cin * cout).map(|_| rng.int8()).collect(),
+            bn: None,
+            relu: false,
+            res_from: None,
+            consumes: -1,
+        }
+    }
+
+    #[test]
+    fn prepack_pads_with_zeros() {
+        let node = fc_node(13, 3, 1);
+        let pf = PrepackedFilters::new(&node);
+        assert_eq!(pf.k_len, 13);
+        assert_eq!(pf.k_pad, 16);
+        for f in 0..3 {
+            let row = pf.filter(f);
+            assert_eq!(&row[..13], node.filter(f));
+            assert!(row[13..].iter().all(|&v| v == 0));
+        }
+    }
+
+    #[test]
+    fn dot_block_matches_dot_i8() {
+        property("dot_block == per-filter dot_i8", 100, |g| {
+            let k = g.usize(1, 200);
+            let cout = g.usize(1, 20);
+            let node = fc_node(k, cout, g.seed);
+            let pf = PrepackedFilters::new(&node);
+            let x = g.vec_i8(k);
+            let mut patch = vec![0i8; pf.k_pad];
+            patch[..k].copy_from_slice(&x);
+            let mut out = [0i32; NR];
+            let mut f0 = 0;
+            while f0 < cout {
+                let nf = NR.min(cout - f0);
+                dot_block(&patch, &pf, f0, nf, &mut out);
+                for j in 0..nf {
+                    let want = dot_i8(&x, node.filter(f0 + j));
+                    crate::prop_assert!(
+                        g,
+                        out[j] == want,
+                        "k={k} cout={cout} f={} got={} want={want}",
+                        f0 + j,
+                        out[j]
+                    );
+                }
+                f0 += NR;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dot_block_indexed_scattered() {
+        property("dot_block_indexed == per-filter dot_i8", 60, |g| {
+            let k = g.usize(1, 120);
+            let cout = g.usize(1, 24);
+            let node = fc_node(k, cout, g.seed ^ 1);
+            let pf = PrepackedFilters::new(&node);
+            let x = g.vec_i8(k);
+            let mut patch = vec![0i8; pf.k_pad];
+            patch[..k].copy_from_slice(&x);
+            // random subset of filters, shuffled
+            let mut idx: Vec<usize> = (0..cout).filter(|_| g.bool()).collect();
+            g.shuffle(&mut idx);
+            let mut out = [0i32; NR];
+            for chunk in idx.chunks(NR) {
+                dot_block_indexed(&patch, &pf, chunk, &mut out);
+                for (j, &f) in chunk.iter().enumerate() {
+                    let want = dot_i8(&x, node.filter(f));
+                    crate::prop_assert!(g, out[j] == want, "f={f} got={} want={want}", out[j]);
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn patch_tile_roundtrip() {
+        let mut tile = PatchTile::new(10);
+        assert_eq!(tile.k_pad, 16);
+        let patch: Vec<i8> = (0..10).map(|v| v as i8 - 5).collect();
+        let packed = PackedVec::from_acts(&patch);
+        tile.set_row(3, &patch, &packed);
+        assert_eq!(&tile.patch(3)[..10], &patch[..]);
+        assert!(tile.patch(3)[10..].iter().all(|&v| v == 0));
+        assert_eq!(tile.packed(3), &packed);
+        // untouched rows stay zero-padded
+        assert!(tile.patch(2).iter().all(|&v| v == 0));
+    }
+}

@@ -9,6 +9,7 @@
 //! dot kernels.
 
 pub mod dot;
+pub mod gemm;
 
 use crate::model::Node;
 use crate::util::bits::PackedVec;
@@ -100,28 +101,43 @@ pub fn conv_geom(
     }
 }
 
-/// Quantized input plus reusable patch buffers for one conv/fc layer.
-pub struct PatchGather {
+/// A layer input quantized once with the layer's `sx`; shared read-only by
+/// every [`PatchGather`] (one per row-tile worker thread).
+pub struct QuantizedTensor {
     /// quantized input, row-major (h, w, c)
     pub q: Vec<i8>,
     pub h: usize,
     pub w: usize,
     pub c: usize,
+}
+
+impl QuantizedTensor {
+    pub fn new(input: &Tensor, sx: f32) -> QuantizedTensor {
+        let mut q = Vec::new();
+        dot::quantize_i8(&input.data, sx, &mut q);
+        QuantizedTensor {
+            q,
+            h: input.h,
+            w: input.w,
+            c: input.c,
+        }
+    }
+}
+
+/// Reusable patch buffers for one conv/fc layer over a shared
+/// [`QuantizedTensor`].
+pub struct PatchGather<'a> {
+    src: &'a QuantizedTensor,
     /// current patch, (kh, kw, cin) order — matches the weight layout
     pub patch: Vec<i8>,
     /// packed ±1 activations of the current patch (padding lanes invalid)
     pub packed: PackedVec,
 }
 
-impl PatchGather {
-    pub fn new(input: &Tensor, sx: f32) -> PatchGather {
-        let mut q = Vec::new();
-        dot::quantize_i8(&input.data, sx, &mut q);
+impl<'a> PatchGather<'a> {
+    pub fn new(src: &'a QuantizedTensor) -> PatchGather<'a> {
         PatchGather {
-            q,
-            h: input.h,
-            w: input.w,
-            c: input.c,
+            src,
             patch: Vec::new(),
             packed: PackedVec::zeros(0),
         }
@@ -135,8 +151,17 @@ impl PatchGather {
     ///
     /// §Perf: buffers are reused across calls (no allocation on the row
     /// loop) and interior channel runs are copied slice-wise.
-    pub fn gather(&mut self, geom: ConvGeom, kh: usize, kw: usize, stride: usize, oy: usize, ox: usize) {
-        let k_len = kh * kw * self.c;
+    pub fn gather(
+        &mut self,
+        geom: ConvGeom,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        oy: usize,
+        ox: usize,
+    ) {
+        let (h, w, c) = (self.src.h, self.src.w, self.src.c);
+        let k_len = kh * kw * c;
         self.reset_buffers(k_len);
         let base_y = (oy * stride) as isize - geom.pad_top as isize;
         let base_x = (ox * stride) as isize - geom.pad_left as isize;
@@ -145,15 +170,15 @@ impl PatchGather {
             let y = base_y + dy as isize;
             for dx in 0..kw {
                 let x = base_x + dx as isize;
-                if y >= 0 && (y as usize) < self.h && x >= 0 && (x as usize) < self.w {
-                    let off = ((y as usize) * self.w + x as usize) * self.c;
-                    self.patch[idx..idx + self.c].copy_from_slice(&self.q[off..off + self.c]);
-                    for ch in 0..self.c {
-                        self.packed.push_lane(idx + ch, self.q[off + ch] > 0);
+                if y >= 0 && (y as usize) < h && x >= 0 && (x as usize) < w {
+                    let off = ((y as usize) * w + x as usize) * c;
+                    self.patch[idx..idx + c].copy_from_slice(&self.src.q[off..off + c]);
+                    for ch in 0..c {
+                        self.packed.push_lane(idx + ch, self.src.q[off + ch] > 0);
                     }
-                    idx += self.c;
+                    idx += c;
                 } else {
-                    idx += self.c; // padding: patch stays 0, lanes invalid
+                    idx += c; // padding: patch stays 0, lanes invalid
                 }
             }
         }
@@ -161,9 +186,9 @@ impl PatchGather {
 
     /// FC "gather": the patch is simply the (h*w-position) channel vector.
     pub fn gather_fc(&mut self, pos: usize) {
-        let c = self.c;
+        let c = self.src.c;
         self.reset_buffers(c);
-        self.patch.copy_from_slice(&self.q[pos * c..(pos + 1) * c]);
+        self.patch.copy_from_slice(&self.src.q[pos * c..(pos + 1) * c]);
         for i in 0..c {
             self.packed.push_lane(i, self.patch[i] > 0);
         }
@@ -280,10 +305,39 @@ mod tests {
     }
 
     #[test]
+    fn conv_geom_stride_exceeds_kernel() {
+        // SAME, stride 3 > kernel 2: oh = ceil(10/3) = 4,
+        // total_h = (4-1)*3 + 2 - 10 = 1 → pad_top = 0 (low half)
+        let g = conv_geom(10, 7, 2, 2, 3, true);
+        assert_eq!((g.oh, g.ow, g.pad_top, g.pad_left), (4, 3, 0, 0));
+        // VALID, stride 3 > kernel 2: oh = (10-2)/3 + 1 = 3
+        let g = conv_geom(10, 7, 2, 2, 3, false);
+        assert_eq!((g.oh, g.ow), (3, 2));
+    }
+
+    #[test]
+    fn conv_geom_one_by_one_same() {
+        // pointwise conv never pads
+        let g = conv_geom(5, 9, 1, 1, 1, true);
+        assert_eq!((g.oh, g.ow, g.pad_top, g.pad_left), (5, 9, 0, 0));
+        let g = conv_geom(5, 9, 1, 1, 2, true);
+        assert_eq!((g.oh, g.ow, g.pad_top, g.pad_left), (3, 5, 0, 0));
+    }
+
+    #[test]
+    fn conv_geom_non_square_input() {
+        // H != W with asymmetric padding needs
+        let g = conv_geom(7, 4, 3, 3, 2, true);
+        // oh = 4: total_h = 3*2+3-7 = 2 → pad_top 1; ow = 2: total_w = 2+3-4 = 1 → pad_left 0
+        assert_eq!((g.oh, g.ow, g.pad_top, g.pad_left), (4, 2, 1, 0));
+    }
+
+    #[test]
     fn gather_interior_and_padding() {
         // 3x3x1 input with values 1..9, k=3 SAME, look at corner (0,0)
         let t = Tensor::from_slice(3, 3, 1, &[1., 2., 3., 4., 5., 6., 7., 8., 9.]);
-        let mut pg = PatchGather::new(&t, 1.0 / 1.0);
+        let qt = QuantizedTensor::new(&t, 1.0 / 1.0);
+        let mut pg = PatchGather::new(&qt);
         let geom = conv_geom(3, 3, 3, 3, 1, true);
         pg.gather(geom, 3, 3, 1, 0, 0);
         // top-left corner: first row and column padded
@@ -302,7 +356,8 @@ mod tests {
     #[test]
     fn gather_binary_dot_padding_contributes_zero() {
         let t = Tensor::from_slice(2, 2, 1, &[5., -5., 5., -5.]);
-        let mut pg = PatchGather::new(&t, 1.0);
+        let qt = QuantizedTensor::new(&t, 1.0);
+        let mut pg = PatchGather::new(&qt);
         let geom = conv_geom(2, 2, 3, 3, 1, true);
         pg.gather(geom, 3, 3, 1, 0, 0);
         let w = vec![1i8; 9];

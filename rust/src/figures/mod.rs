@@ -167,7 +167,8 @@ fn exec_single(node: &Node, src: &Tensor, outs: &[Tensor]) -> (Tensor, Vec<(i32,
     let rows = geom.oh * geom.ow;
     let mut out = Tensor::new(geom.oh, geom.ow, cout);
     let mut taps = Vec::with_capacity(rows * cout);
-    let mut pg = PatchGather::new(src, sx);
+    let qt = engine::QuantizedTensor::new(src, sx);
+    let mut pg = PatchGather::new(&qt);
     let dq = sw * sx;
     for row in 0..rows {
         if kh > 0 {
@@ -415,22 +416,24 @@ pub fn fig13(artifacts: &[Artifacts], samples: usize, cfg: &Config) -> (Table, V
         let pol = policy_with(a, PredictorConfig { threshold: thr, ..cfg.predictor.clone() });
         let sim = Simulator::new(cfg.clone());
         let n = samples.min(a.data.n_test());
-        let mut base_cycles = 0u64;
+        // the baseline simulation consumes no trace, so it is identical
+        // for every sample: run it once and scale
+        let sb = sim.simulate_sample(&a.model, None, None);
+        let base_cycles = sb.cycles * n as u64;
+        let base_nj = em.price(&sb, cfg.accel.frequency_mhz, false).total_nj() * n as f64;
         let mut mor_cycles = 0u64;
-        let mut base_nj = 0.0;
         let mut mor_nj = 0.0;
         for i in 0..n {
             let r = exec::run_sample(
                 &a.model,
                 Some(&pol),
                 a.data.test_sample(i),
-                RunOpts { oracle: false, collect_trace: true },
+                // trace generation is the host-side bottleneck of fig13:
+                // use every core for the tiled forward
+                RunOpts { oracle: false, collect_trace: true, ..Default::default() }.parallel(),
             );
-            let sb = sim.simulate_sample(&a.model, None, None);
             let sm = sim.simulate_sample(&a.model, Some(&pol), Some(&r.traces));
-            base_cycles += sb.cycles;
             mor_cycles += sm.cycles;
-            base_nj += em.price(&sb, cfg.accel.frequency_mhz, false).total_nj();
             mor_nj += em.price(&sm, cfg.accel.frequency_mhz, true).total_nj();
         }
         let speedup = base_cycles as f64 / mor_cycles.max(1) as f64;

@@ -33,6 +33,7 @@ pub mod engine;
 pub mod figures;
 pub mod model;
 pub mod predictor;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sim;
 pub mod util;

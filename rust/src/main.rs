@@ -196,6 +196,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let rps = args.opt_f64("rps", 200.0)?;
     let duration = args.opt_f64("duration", 5.0)?;
     let workers = args.opt_usize("workers", 4)?;
+    let intra_threads = args.opt_usize("intra-threads", 1)?;
     let backend = match args.opt_or("runtime", "engine") {
         "pjrt" => Backend::Pjrt,
         "engine" => Backend::Engine,
@@ -220,7 +221,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
          rps={rps} duration={duration}s → {} requests",
         requests.len()
     );
-    let report = coordinator::serve(&arts, policy, backend, workers, requests, dir, 1.0)?;
+    let report =
+        coordinator::serve(&arts, policy, backend, workers, requests, dir, 1.0, intra_threads)?;
     report.print(model);
     Ok(())
 }

@@ -6,6 +6,7 @@
 
 mod data;
 mod predictor_params;
+pub mod synth;
 mod weights;
 
 pub use data::Dataset;
@@ -121,11 +122,11 @@ pub(crate) mod testutil {
         for v in w1.iter_mut().chain(w2.iter_mut()) {
             *v = rng.int8();
         }
-        Model {
-            name: "tiny_fc".into(),
-            sx0: 1.0 / 127.0,
-            input_shape: (1, 1, 8),
-            nodes: vec![
+        Model::new(
+            "tiny_fc".into(),
+            1.0 / 127.0,
+            (1, 1, 8),
+            vec![
                 Node::Fc {
                     cin: 8,
                     cout: 6,
@@ -149,7 +150,7 @@ pub(crate) mod testutil {
                     consumes: 0,
                 },
             ],
-        }
+        )
     }
 
     /// Tiny conv model with BN + residual + pooling, 6x6x2 input.
@@ -160,11 +161,11 @@ pub(crate) mod testutil {
         let proj = mk(1 * 1 * 4 * 4);
         let c2 = mk(3 * 3 * 4 * 4);
         let c3 = mk(3 * 3 * 4 * 4);
-        Model {
-            name: "tiny_conv".into(),
-            sx0: 1.0 / 127.0,
-            input_shape: (6, 6, 2),
-            nodes: vec![
+        Model::new(
+            "tiny_conv".into(),
+            1.0 / 127.0,
+            (6, 6, 2),
+            vec![
                 // 0: stem conv + bn + relu
                 Node::Conv {
                     kh: 3, kw: 3, cin: 2, cout: 4, stride: 1, pad_same: true,
@@ -200,7 +201,7 @@ pub(crate) mod testutil {
                 // 6: gap
                 Node::Gap { consumes: 5 },
             ],
-        }
+        )
     }
 }
 

@@ -1,0 +1,240 @@
+//! Synthetic model / predictor-parameter generators.
+//!
+//! Benches and the engine-equivalence property suite need models without
+//! `make artifacts` having run: the perf benches need a cnn10-scale conv
+//! stack with a plausible MoR policy, and the property tests need random
+//! graphs that cover the geometry corners (stride > kernel, 1×1 SAME,
+//! non-square inputs, VALID/SAME, BN on/off, FC heads).
+
+use super::{LayerPredictor, Model, Node, PredictorParams};
+use crate::util::rng::Rng;
+use std::collections::BTreeMap;
+
+/// Uniform random int8 weights.
+pub fn rand_weights(rng: &mut Rng, n: usize) -> Vec<i8> {
+    (0..n).map(|_| rng.int8()).collect()
+}
+
+/// A single FC node with random weights — the unit the GEMV-vs-GEMM
+/// micro-bench operates on.
+pub fn dense_node(cin: usize, cout: usize, seed: u64) -> Node {
+    let mut rng = Rng::new(seed);
+    Node::Fc {
+        cin,
+        cout,
+        sw: 0.01,
+        sx: 1.0 / 127.0,
+        w: rand_weights(&mut rng, cin * cout),
+        bn: None,
+        relu: false,
+        res_from: None,
+        consumes: -1,
+    }
+}
+
+fn rand_bn(rng: &mut Rng, cout: usize) -> (Vec<f32>, Vec<f32>) {
+    (
+        (0..cout).map(|_| rng.uniform(0.6, 1.4) as f32).collect(),
+        (0..cout).map(|_| rng.uniform(-0.1, 0.1) as f32).collect(),
+    )
+}
+
+/// A cnn10-like stack (8 convs + GAP + FC head, 16×16×16 input) for the
+/// forward-pass benches when the real artifacts are absent. Deterministic
+/// for a given seed.
+pub fn cnn10_like(seed: u64) -> Model {
+    let mut rng = Rng::new(seed);
+    let mut nodes: Vec<Node> = Vec::new();
+    let conv = |rng: &mut Rng, cin: usize, cout: usize, stride: usize, consumes: i32, sx: f32| {
+        Node::Conv {
+            kh: 3,
+            kw: 3,
+            cin,
+            cout,
+            stride,
+            pad_same: true,
+            sw: 0.01,
+            sx,
+            w: rand_weights(rng, 3 * 3 * cin * cout),
+            bn: Some(rand_bn(rng, cout)),
+            relu: true,
+            res_from: None,
+            consumes,
+        }
+    };
+    nodes.push(conv(&mut rng, 16, 32, 1, -1, 1.0 / 127.0));
+    nodes.push(conv(&mut rng, 32, 32, 1, 0, 0.05));
+    nodes.push(conv(&mut rng, 32, 64, 2, 1, 0.05));
+    for i in 0..5 {
+        nodes.push(conv(&mut rng, 64, 64, 1, 2 + i, 0.05));
+    }
+    nodes.push(Node::Gap { consumes: 7 });
+    nodes.push(Node::Fc {
+        cin: 64,
+        cout: 10,
+        sw: 0.02,
+        sx: 0.05,
+        w: rand_weights(&mut rng, 64 * 10),
+        bn: None,
+        relu: false,
+        res_from: None,
+        consumes: 8,
+    });
+    Model::new(format!("cnn10_synth_{seed}"), 1.0 / 127.0, (16, 16, 16), nodes)
+}
+
+/// A random small model: 1–3 conv layers with random kernel/stride
+/// (including stride > kernel), SAME or VALID padding, optional BN and
+/// ReLU, on a random (possibly non-square, possibly W=1) input; optionally
+/// a 2×2 max-pool; and an FC head. Shapes are kept consistent so every
+/// generated graph runs.
+pub fn random_model(rng: &mut Rng) -> Model {
+    let mut h = rng.int_in(3, 10) as usize;
+    let mut w = rng.int_in(1, 9) as usize;
+    let mut c = rng.int_in(1, 6) as usize;
+    let input_shape = (h, w, c);
+    let mut nodes: Vec<Node> = Vec::new();
+
+    let n_conv = rng.int_in(1, 3);
+    for li in 0..n_conv {
+        let kh = rng.int_in(1, 3.min(h as i64)) as usize;
+        let kw = rng.int_in(1, 3.min(w as i64)) as usize;
+        let stride = rng.int_in(1, 4) as usize; // may exceed the kernel
+        let pad_same = rng.chance(0.5);
+        let cout = rng.int_in(1, 12) as usize;
+        let relu = rng.chance(0.7);
+        let bn = rng.chance(0.5).then(|| rand_bn(rng, cout));
+        nodes.push(Node::Conv {
+            kh,
+            kw,
+            cin: c,
+            cout,
+            stride,
+            pad_same,
+            sw: rng.uniform(0.005, 0.03) as f32,
+            sx: if li == 0 { 1.0 / 127.0 } else { rng.uniform(0.02, 0.1) as f32 },
+            w: rand_weights(rng, kh * kw * c * cout),
+            bn,
+            relu,
+            res_from: None,
+            consumes: li as i32 - 1,
+        });
+        if pad_same {
+            h = h.div_ceil(stride);
+            w = w.div_ceil(stride);
+        } else {
+            h = (h - kh) / stride + 1;
+            w = (w - kw) / stride + 1;
+        }
+        c = cout;
+    }
+
+    if rng.chance(0.3) && h >= 2 {
+        nodes.push(Node::MaxPool {
+            size: 2,
+            consumes: nodes.len() as i32 - 1,
+        });
+        h /= 2;
+        w = (w / 2).max(1);
+    }
+
+    let classes = rng.int_in(2, 6) as usize;
+    nodes.push(Node::Fc {
+        cin: c,
+        cout: classes,
+        sw: 0.02,
+        sx: rng.uniform(0.02, 0.1) as f32,
+        w: rand_weights(rng, c * classes),
+        bn: None,
+        relu: false,
+        res_from: None,
+        consumes: nodes.len() as i32 - 1,
+    });
+
+    Model::new("synth_random".into(), 1.0 / 127.0, input_shape, nodes)
+}
+
+/// Random-but-plausible offline predictor parameters for every predictable
+/// (ReLU) layer of `model`: shuffled clusters of 1–4 neurons, fitted lines
+/// with small slopes and mixed-sign intercepts, correlations spanning the
+/// whole [0, 1) range so thresholding enables a random subset.
+pub fn predictor_for(model: &Model, seed: u64) -> PredictorParams {
+    let mut rng = Rng::new(seed ^ 0x5EED_CAFE);
+    let mut layers = BTreeMap::new();
+    for &li in &model.relu_layers() {
+        let n = model.nodes[li].cout();
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        let mut clusters: Vec<Vec<usize>> = Vec::new();
+        let mut i = 0;
+        while i < n {
+            let sz = (rng.int_in(1, 4) as usize).min(n - i);
+            clusters.push(order[i..i + sz].to_vec());
+            i += sz;
+        }
+        let mut proxy_of = vec![0usize; n];
+        for cl in &clusters {
+            for &m in cl {
+                proxy_of[m] = cl[0];
+            }
+        }
+        layers.insert(
+            li,
+            LayerPredictor {
+                layer: li,
+                c: (0..n).map(|_| rng.uniform(0.0, 1.0) as f32).collect(),
+                m: (0..n).map(|_| rng.uniform(0.0, 0.02) as f32).collect(),
+                b: (0..n).map(|_| rng.uniform(-0.5, 0.5) as f32).collect(),
+                s: (0..n).map(|_| rng.uniform(0.0, 0.3) as f32).collect(),
+                clusters,
+                closest_angle_deg: (0..n).map(|_| rng.uniform(0.0, 90.0) as f32).collect(),
+                proxy_of,
+            },
+        );
+    }
+    PredictorParams {
+        model: model.name.clone(),
+        default_threshold: 0.85,
+        layers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cnn10_like_is_well_formed() {
+        let m = cnn10_like(3);
+        assert_eq!(m.input_shape, (16, 16, 16));
+        let shapes = m.node_shapes();
+        assert_eq!(shapes[0], (16, 16, 32));
+        assert_eq!(shapes[2], (8, 8, 64));
+        assert_eq!(*shapes.last().unwrap(), (1, 1, 10));
+        assert!(m.mac_counts().iter().sum::<u64>() > 10_000_000);
+        // every conv is predictable (relu), so the synthetic predictor
+        // covers them all
+        let p = predictor_for(&m, 4);
+        assert_eq!(p.layers.len(), m.relu_layers().len());
+    }
+
+    #[test]
+    fn random_models_run_shape_math() {
+        let mut rng = Rng::new(99);
+        for _ in 0..50 {
+            let m = random_model(&mut rng);
+            // node_shapes must not panic and every dim stays positive
+            for (h, w, c) in m.node_shapes() {
+                assert!(h >= 1 && w >= 1 && c >= 1);
+            }
+            let p = predictor_for(&m, 7);
+            for (&l, lp) in &p.layers {
+                assert_eq!(lp.neurons(), m.nodes[l].cout());
+                // clusters partition the neurons
+                let mut seen: Vec<usize> = lp.clusters.iter().flatten().copied().collect();
+                seen.sort();
+                assert_eq!(seen, (0..lp.neurons()).collect::<Vec<_>>());
+            }
+        }
+    }
+}

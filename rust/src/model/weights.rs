@@ -3,6 +3,7 @@
 
 use anyhow::{bail, ensure, Context, Result};
 use std::path::Path;
+use std::sync::OnceLock;
 
 /// One node of the layer graph. Conv weights are re-laid-out at load time
 /// to filter-major `[cout][kh*kw*cin]` (the dot-product hot path wants each
@@ -108,9 +109,35 @@ pub struct Model {
     /// (H, W, C) — provided by meta/data (MORW itself carries no shape).
     pub input_shape: (usize, usize, usize),
     pub nodes: Vec<Node>,
+    /// Lazily-built prepacked weight blocks for the tiled GEMM engine —
+    /// built once per model on first forward, shared read-only by every
+    /// worker thread (cloning a Model clones the cache).
+    pub(crate) prepacked: OnceLock<crate::engine::gemm::PrepackedModel>,
 }
 
 impl Model {
+    /// Assemble a model from parts (artifact loading uses [`Model::load`];
+    /// this is for synthetic models — benches, property tests).
+    pub fn new(
+        name: String,
+        sx0: f32,
+        input_shape: (usize, usize, usize),
+        nodes: Vec<Node>,
+    ) -> Model {
+        Model {
+            name,
+            sx0,
+            input_shape,
+            nodes,
+            prepacked: OnceLock::new(),
+        }
+    }
+
+    /// Filter-major, alignment-padded weight blocks for the tiled engine.
+    pub fn prepacked(&self) -> &crate::engine::gemm::PrepackedModel {
+        self.prepacked
+            .get_or_init(|| crate::engine::gemm::PrepackedModel::new(self))
+    }
     pub fn load<P: AsRef<Path>>(path: P, name: &str) -> Result<Model> {
         let buf = std::fs::read(&path)
             .with_context(|| format!("reading {} — run `make artifacts`", path.as_ref().display()))?;
@@ -125,12 +152,12 @@ impl Model {
             nodes.push(parse_node(&mut r)?);
         }
         ensure!(r.pos == buf.len(), "trailing bytes in MORW file");
-        Ok(Model {
-            name: name.to_string(),
+        Ok(Model::new(
+            name.to_string(),
             sx0,
-            input_shape: (0, 0, 0), // filled by Artifacts::load via Dataset
+            (0, 0, 0), // input_shape filled by Artifacts::load via Dataset
             nodes,
-        })
+        ))
     }
 
     /// Node output (H,W,C) shapes, given the input shape.

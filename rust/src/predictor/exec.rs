@@ -1,14 +1,34 @@
 //! The MoR-aware forward pass: evaluates a model on one sample, skipping
 //! neuron evaluations the hybrid predictor declares zero (Section 3.2).
 //!
+//! Two interchangeable engines implement each compute layer:
+//!
+//! * **Tiled** (default) — a cache-blocked, row-batched im2col GEMM with a
+//!   two-phase predict-then-evaluate dataflow. Per tile of
+//!   [`TILE_ROWS`] patches: (1) gather the patches, (2) run the packed
+//!   binary predictor + cluster-proxy logic over the whole tile to produce
+//!   a skip mask, (3) run the dense multi-filter micro-kernel
+//!   ([`crate::engine::gemm`]) only over surviving (row, filter) pairs.
+//!   Row tiles are optionally parallelized across `std::thread::scope`
+//!   workers ([`RunOpts::threads`]); stats and traces merge
+//!   deterministically.
+//! * **ScalarRef** — the original per-neuron GEMV path, retained as the
+//!   bit-exact test oracle and perf baseline. Logits, [`OpsStats`],
+//!   [`PredStats`] and traces are identical between the two (all dot
+//!   products are exact integer sums and the per-output float tail is the
+//!   same code), which `rust/tests/engine_equivalence.rs` asserts.
+//!
 //! Execution order per output position mirrors the accelerator's Neurons
 //! Controller (Section 4.1): proxies first (they are always evaluated and
 //! "unlock" their cluster members), then members — each member whose proxy
 //! produced a zero ReLU output is checked with the binary predictor, and
 //! skipped only when *both* components agree on zero.
 
-use super::{LayerTrace, MorPolicy, OpsStats, PredStats, RunOpts, RunResult};
-use crate::engine::{self, dot::dot_i8, relu_input, ConvGeom, PatchGather, Tensor};
+use super::{EngineSel, LayerTrace, MorPolicy, OpsStats, PredStats, RunOpts, RunResult};
+use crate::engine::gemm::{self, PatchTile, PrepackedFilters, NR, TILE_ROWS};
+use crate::engine::{
+    self, dot::dot_i8, relu_input, ConvGeom, PatchGather, QuantizedTensor, Tensor,
+};
 use crate::model::{Model, Node};
 
 /// Run one sample (H*W*C float input) through the model.
@@ -37,19 +57,27 @@ pub fn run_sample(
             Node::Conv { .. } | Node::Fc { .. } => {
                 let residual = res_tensor(node, &outs);
                 let lp = policy.and_then(|p| p.layers.get(&i));
+                let pol = lp.map(|l| (l, policy.unwrap()));
                 let is_relu_layer = relu_layers.contains(&i);
-                compute_layer(
-                    node,
-                    src,
-                    residual,
-                    lp.map(|l| (l, policy.unwrap())),
-                    is_relu_layer,
-                    i,
-                    opts,
-                    &mut pred,
-                    &mut ops,
-                    &mut traces,
-                )
+                match opts.engine {
+                    EngineSel::ScalarRef => compute_layer_scalar(
+                        node, src, residual, pol, is_relu_layer, i, opts, &mut pred, &mut ops,
+                        &mut traces,
+                    ),
+                    EngineSel::Tiled => compute_layer_tiled(
+                        model.prepacked().layer(i),
+                        node,
+                        src,
+                        residual,
+                        pol,
+                        is_relu_layer,
+                        i,
+                        opts,
+                        &mut pred,
+                        &mut ops,
+                        &mut traces,
+                    ),
+                }
             }
             Node::MaxPool { size, .. } => engine::maxpool(src, *size),
             Node::Gap { .. } => engine::gap(src),
@@ -75,25 +103,10 @@ fn res_tensor<'a>(node: &Node, outs: &'a [Tensor]) -> Option<&'a Tensor> {
     }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn compute_layer(
-    node: &Node,
-    src: &Tensor,
-    residual: Option<&Tensor>,
-    policy: Option<(&super::LayerPolicy, &MorPolicy)>,
-    is_relu_layer: bool,
-    node_idx: usize,
-    opts: RunOpts,
-    pred: &mut PredStats,
-    ops: &mut OpsStats,
-    traces: &mut Vec<LayerTrace>,
-) -> Tensor {
-    let (sx, sw, bn, node_relu) = layer_params(node);
-    let dq = sw * sx;
-    let cout = node.cout();
-    let k = node.k_len() as u64;
-
-    let (geom, kh, kw, stride) = match node {
+/// Output geometry + kernel parameters of a compute node (FC layers are
+/// 1×1 "convolutions" over the h*w positions).
+fn geom_of(node: &Node, src: &Tensor) -> (ConvGeom, usize, usize, usize) {
+    match node {
         Node::Conv {
             kh, kw, stride, pad_same, ..
         } => (
@@ -113,11 +126,499 @@ fn compute_layer(
             0,
             1,
         ),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tiled engine
+// ---------------------------------------------------------------------------
+
+/// Shared read-only context for one layer's tile workers.
+struct TiledCtx<'a> {
+    node: &'a Node,
+    pf: &'a PrepackedFilters,
+    qt: &'a QuantizedTensor,
+    residual: Option<&'a Tensor>,
+    policy: Option<(&'a super::LayerPolicy, &'a MorPolicy)>,
+    geom: ConvGeom,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    cout: usize,
+    k: u64,
+    dq: f32,
+    bn: Option<&'a (Vec<f32>, Vec<f32>)>,
+    node_relu: bool,
+    is_relu_layer: bool,
+    is_conv: bool,
+    oracle: bool,
+}
+
+impl TiledCtx<'_> {
+    #[inline]
+    fn res_at(&self, row: usize, f: usize) -> f32 {
+        self.residual
+            .map(|r| r.data[row * self.cout + f])
+            .unwrap_or(0.0)
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn compute_layer_tiled(
+    pf: &PrepackedFilters,
+    node: &Node,
+    src: &Tensor,
+    residual: Option<&Tensor>,
+    policy: Option<(&super::LayerPolicy, &MorPolicy)>,
+    is_relu_layer: bool,
+    node_idx: usize,
+    opts: RunOpts,
+    pred: &mut PredStats,
+    ops: &mut OpsStats,
+    traces: &mut Vec<LayerTrace>,
+) -> Tensor {
+    let (sx, sw, bn, node_relu) = layer_params(node);
+    let (geom, kh, kw, stride) = geom_of(node, src);
+    let rows = geom.oh * geom.ow;
+    let cout = node.cout();
+    let mut out = Tensor::new(geom.oh, geom.ow, cout);
+    let qt = QuantizedTensor::new(src, sx);
+    let ctx = TiledCtx {
+        node,
+        pf,
+        qt: &qt,
+        residual,
+        policy,
+        geom,
+        kh,
+        kw,
+        stride,
+        cout,
+        k: node.k_len() as u64,
+        dq: sw * sx,
+        bn,
+        node_relu,
+        is_relu_layer,
+        is_conv: matches!(node, Node::Conv { .. }),
+        oracle: opts.oracle,
     };
+
+    let mut skipped = if opts.collect_trace { vec![false; rows * cout] } else { Vec::new() };
+    let mut bin_eval = if opts.collect_trace { vec![false; rows * cout] } else { Vec::new() };
+
+    let n_tiles = rows.div_ceil(TILE_ROWS).max(1);
+    let workers = opts.threads.max(1).min(n_tiles);
+    if workers <= 1 {
+        let trace = opts
+            .collect_trace
+            .then(|| (&mut skipped[..], &mut bin_eval[..]));
+        let (p, o) = process_row_range(&ctx, 0, rows, &mut out.data, trace);
+        pred.add(&p);
+        ops.add(&o);
+    } else {
+        // contiguous tile-aligned row ranges, one per worker; every buffer
+        // is split into disjoint per-range slices so workers never share
+        // mutable state, and stats merge in range order (deterministic)
+        let tiles_per = n_tiles.div_ceil(workers);
+        let mut ranges: Vec<(usize, usize)> = Vec::new();
+        let mut start = 0usize;
+        while start < rows {
+            let end = rows.min(start + tiles_per * TILE_ROWS);
+            ranges.push((start, end));
+            start = end;
+        }
+        let mut out_parts: Vec<&mut [f32]> = Vec::with_capacity(ranges.len());
+        let mut sk_parts: Vec<&mut [bool]> = Vec::with_capacity(ranges.len());
+        let mut be_parts: Vec<&mut [bool]> = Vec::with_capacity(ranges.len());
+        let mut out_rest: &mut [f32] = &mut out.data;
+        let mut sk_rest: &mut [bool] = &mut skipped;
+        let mut be_rest: &mut [bool] = &mut bin_eval;
+        for &(r0, r1) in &ranges {
+            let n = (r1 - r0) * cout;
+            let (head, tail) = std::mem::take(&mut out_rest).split_at_mut(n);
+            out_parts.push(head);
+            out_rest = tail;
+            if opts.collect_trace {
+                let (head, tail) = std::mem::take(&mut sk_rest).split_at_mut(n);
+                sk_parts.push(head);
+                sk_rest = tail;
+                let (head, tail) = std::mem::take(&mut be_rest).split_at_mut(n);
+                be_parts.push(head);
+                be_rest = tail;
+            }
+        }
+        let mut trace_parts: Vec<Option<(&mut [bool], &mut [bool])>> = if opts.collect_trace {
+            sk_parts
+                .into_iter()
+                .zip(be_parts)
+                .map(|(s, b)| Some((s, b)))
+                .collect()
+        } else {
+            ranges.iter().map(|_| None).collect()
+        };
+
+        let stats: Vec<(PredStats, OpsStats)> = std::thread::scope(|s| {
+            let ctx = &ctx;
+            let handles: Vec<_> = ranges
+                .iter()
+                .zip(out_parts)
+                .zip(trace_parts.drain(..))
+                .map(|((&(r0, r1), out_part), trace_part)| {
+                    s.spawn(move || process_row_range(ctx, r0, r1, out_part, trace_part))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("tile worker panicked"))
+                .collect()
+        });
+        for (p, o) in stats {
+            pred.add(&p);
+            ops.add(&o);
+        }
+    }
+
+    if opts.collect_trace {
+        traces.push(LayerTrace {
+            node: node_idx,
+            rows,
+            cout,
+            skipped,
+            bin_eval,
+        });
+    }
+    out
+}
+
+/// Process rows `row0..row1` tile by tile. `out` and the optional trace
+/// slices cover exactly those rows; returned stats are this range's share.
+fn process_row_range(
+    ctx: &TiledCtx,
+    row0: usize,
+    row1: usize,
+    out: &mut [f32],
+    trace: Option<(&mut [bool], &mut [bool])>,
+) -> (PredStats, OpsStats) {
+    let mut pred = PredStats::default();
+    let mut ops = OpsStats::default();
+    let cout = ctx.cout;
+    let k = ctx.k;
+    let (mut tr_skip, mut tr_bin) = match trace {
+        Some((s, b)) => (Some(s), Some(b)),
+        None => (None, None),
+    };
+
+    let mut pg = PatchGather::new(ctx.qt);
+    let mut tile = PatchTile::new(ctx.node.k_len());
+    let mut dots = vec![0i32; TILE_ROWS * cout];
+    let mut ri_cache = vec![0.0f32; cout]; // current row's proxy ReLU inputs
+    let mut skip = vec![false; cout];
+    let mut applied = vec![false; cout];
+    let mut survivors: Vec<usize> = Vec::with_capacity(cout);
+    let mut blk = [0i32; NR];
+
+    // cluster proxies are row-invariant: hoist once per range
+    let proxies: Vec<usize> = match ctx.policy {
+        Some((lp, mp)) if mp.cfg.use_clusters => lp.clusters.iter().map(|cl| cl[0]).collect(),
+        _ => Vec::new(),
+    };
+
+    let mut t0 = row0;
+    while t0 < row1 {
+        let trows = TILE_ROWS.min(row1 - t0);
+
+        // ---- phase 1: gather a tile of im2col patches -------------------
+        for r in 0..trows {
+            let row = t0 + r;
+            if ctx.is_conv {
+                let (oy, ox) = (row / ctx.geom.ow, row % ctx.geom.ow);
+                pg.gather(ctx.geom, ctx.kh, ctx.kw, ctx.stride, oy, ox);
+            } else {
+                pg.gather_fc(row);
+            }
+            tile.set_row(r, &pg.patch, &pg.packed);
+            ops.macs_total += k * cout as u64;
+            if ctx.is_relu_layer {
+                ops.relu_macs += k * cout as u64;
+                pred.relu_outputs += cout as u64;
+            }
+        }
+
+        match ctx.policy {
+            // ---- dense layer: every (row, filter) pair survives. Filter
+            // blocks run outermost so each weight block is loaded once per
+            // tile and reused across all TILE_ROWS patches. ---------------
+            None => {
+                let mut f0 = 0;
+                while f0 < cout {
+                    let nf = NR.min(cout - f0);
+                    for r in 0..trows {
+                        gemm::dot_block(tile.patch(r), ctx.pf, f0, nf, &mut blk);
+                        dots[r * cout + f0..r * cout + f0 + nf].copy_from_slice(&blk[..nf]);
+                    }
+                    f0 += NR;
+                }
+                for r in 0..trows {
+                    let row = t0 + r;
+                    let out_row = &mut out[(row - row0) * cout..(row - row0 + 1) * cout];
+                    for (f, o) in out_row.iter_mut().enumerate() {
+                        let d = dots[r * cout + f];
+                        account_eval(ctx, d, row, f, false, o, &mut pred, &mut ops);
+                    }
+                }
+            }
+
+            Some((lp, mp)) => {
+                let use_clusters = mp.cfg.use_clusters;
+
+                // ---- phase 2a: proxies — always fully evaluated, filter
+                // blocks outer for weight reuse across the tile -----------
+                if use_clusters {
+                    for chunk in proxies.chunks(NR) {
+                        for r in 0..trows {
+                            gemm::dot_block_indexed(tile.patch(r), ctx.pf, chunk, &mut blk);
+                            for (j, &f) in chunk.iter().enumerate() {
+                                dots[r * cout + f] = blk[j];
+                            }
+                        }
+                    }
+                }
+
+                for r in 0..trows {
+                    let row = t0 + r;
+                    let local = (row - row0) * cout;
+                    let out_row = &mut out[local..local + cout];
+
+                    if use_clusters {
+                        for &p in &proxies {
+                            let ri = account_eval(
+                                ctx, dots[r * cout + p], row, p, false, &mut out_row[p],
+                                &mut pred, &mut ops,
+                            );
+                            ri_cache[p] = ri;
+                        }
+                    }
+
+                    // ---- phase 2b: skip decisions (binary / proxy gate) --
+                    survivors.clear();
+                    if use_clusters {
+                        for cl in &lp.clusters {
+                            let proxy_zero = ri_cache[cl[0]] <= 0.0;
+                            for &f in &cl[1..] {
+                                let (sk, ap) = if mp.cfg.use_binary {
+                                    // hybrid: both components must agree;
+                                    // binary is only consulted when the
+                                    // proxy says zero
+                                    let ap = lp.enabled[f];
+                                    let sk = ap
+                                        && proxy_zero
+                                        && binary_says_skip(
+                                            ctx, lp, mp, &tile, r, local, row, f,
+                                            &mut tr_bin, &mut ops,
+                                        );
+                                    (sk, ap)
+                                } else {
+                                    // clusters-only ablation: proxy decides
+                                    (proxy_zero, true)
+                                };
+                                skip[f] = sk;
+                                applied[f] = ap;
+                                if !sk {
+                                    survivors.push(f);
+                                }
+                            }
+                        }
+                    } else {
+                        // binary-only mode (Fig 6): every enabled neuron
+                        // predicted
+                        for f in 0..cout {
+                            let ap = mp.cfg.use_binary && lp.enabled[f];
+                            let sk = ap
+                                && binary_says_skip(
+                                    ctx, lp, mp, &tile, r, local, row, f, &mut tr_bin,
+                                    &mut ops,
+                                );
+                            skip[f] = sk;
+                            applied[f] = ap;
+                            if !sk {
+                                survivors.push(f);
+                            }
+                        }
+                    }
+
+                    // ---- phase 3: dense GEMM over surviving pairs only ---
+                    for chunk in survivors.chunks(NR) {
+                        gemm::dot_block_indexed(tile.patch(r), ctx.pf, chunk, &mut blk);
+                        for (j, &f) in chunk.iter().enumerate() {
+                            account_eval(
+                                ctx, blk[j], row, f, applied[f], &mut out_row[f], &mut pred,
+                                &mut ops,
+                            );
+                        }
+                    }
+
+                    // ---- skipped outputs: zero + optional oracle truth ---
+                    if use_clusters {
+                        for cl in &lp.clusters {
+                            for &f in &cl[1..] {
+                                if skip[f] {
+                                    account_skip(
+                                        ctx, tile.patch(r), local, row, f, &mut out_row[f],
+                                        tr_skip.as_deref_mut(), &mut pred, &mut ops,
+                                    );
+                                }
+                            }
+                        }
+                    } else {
+                        for f in 0..cout {
+                            if skip[f] {
+                                account_skip(
+                                    ctx, tile.patch(r), local, row, f, &mut out_row[f],
+                                    tr_skip.as_deref_mut(), &mut pred, &mut ops,
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        t0 += trows;
+    }
+    (pred, ops)
+}
+
+/// The binary component's skip verdict for one (row, filter) pair, with
+/// its side accounting (bin op count, trace bit). One definition serves
+/// both the hybrid and binary-only tiled branches; callers gate the call
+/// on "binary consulted" (enabled + proxy-zero in hybrid mode), so the
+/// accounting only happens when the predictor actually ran. The scalar
+/// path keeps its own copies on purpose — it is the independent
+/// bit-exactness oracle.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn binary_says_skip(
+    ctx: &TiledCtx,
+    lp: &super::LayerPolicy,
+    mp: &MorPolicy,
+    tile: &PatchTile,
+    r: usize,
+    local: usize,
+    row: usize,
+    f: usize,
+    tr_bin: &mut Option<&mut [bool]>,
+    ops: &mut OpsStats,
+) -> bool {
+    let p_bin = tile.packed(r).dot(&lp.packed_w[f]);
+    ops.bin_ops += ctx.k;
+    if let Some(be) = tr_bin.as_deref_mut() {
+        be[local + f] = true;
+    }
+    let est = lp.m[f] * p_bin as f32 + lp.b[f];
+    let est_ri = bn_affine(est, ctx.bn, f) + ctx.res_at(row, f);
+    est_ri < -margin_of(lp, ctx.bn, f, mp.cfg.margin_sigmas)
+}
+
+/// Account one fully-evaluated output (dot already computed). Matches the
+/// scalar path's `full_eval!` (with `applied = false`) and the non-skip
+/// branch of `finish_neuron` exactly. Returns the ReLU input.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn account_eval(
+    ctx: &TiledCtx,
+    d: i32,
+    row: usize,
+    f: usize,
+    applied: bool,
+    out_val: &mut f32,
+    pred: &mut PredStats,
+    ops: &mut OpsStats,
+) -> f32 {
+    let ri = relu_input(d, ctx.dq, ctx.bn, f, ctx.res_at(row, f));
+    *out_val = if ctx.node_relu { ri.max(0.0) } else { ri };
+    ops.macs_done += ctx.k;
+    ops.weight_bytes_fetched += ctx.k;
+    if ctx.is_relu_layer {
+        if ri <= 0.0 {
+            ops.neg_relu_macs += ctx.k;
+            ops.true_zero_outputs += 1;
+        }
+        if applied {
+            if ri <= 0.0 {
+                pred.incorrect_nonzero += 1;
+            } else {
+                pred.correct_nonzero += 1;
+            }
+        } else {
+            pred.not_applied += 1;
+        }
+    }
+    ri
+}
+
+/// Account one skipped output. Matches the skip branch of the scalar
+/// path's `finish_neuron` exactly (`local` = row offset within this
+/// worker's trace slice).
+#[allow(clippy::too_many_arguments)]
+fn account_skip(
+    ctx: &TiledCtx,
+    patch: &[i8],
+    local: usize,
+    row: usize,
+    f: usize,
+    out_val: &mut f32,
+    tr_skip: Option<&mut [bool]>,
+    pred: &mut PredStats,
+    ops: &mut OpsStats,
+) {
+    *out_val = 0.0;
+    ops.weight_bytes_saved += ctx.k;
+    if let Some(s) = tr_skip {
+        s[local + f] = true;
+    }
+    if ctx.oracle {
+        // ground truth for Fig 12 / accuracy accounting
+        let d = dot_i8(patch, ctx.pf.filter(f));
+        let ri = relu_input(d, ctx.dq, ctx.bn, f, ctx.res_at(row, f));
+        if ctx.is_relu_layer {
+            if ri <= 0.0 {
+                pred.correct_zero += 1;
+                ops.neg_relu_macs += ctx.k;
+                ops.true_zero_outputs += 1;
+            } else {
+                pred.incorrect_zero += 1;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar reference engine (the original per-neuron GEMV path)
+// ---------------------------------------------------------------------------
+
+#[allow(clippy::too_many_arguments)]
+fn compute_layer_scalar(
+    node: &Node,
+    src: &Tensor,
+    residual: Option<&Tensor>,
+    policy: Option<(&super::LayerPolicy, &MorPolicy)>,
+    is_relu_layer: bool,
+    node_idx: usize,
+    opts: RunOpts,
+    pred: &mut PredStats,
+    ops: &mut OpsStats,
+    traces: &mut Vec<LayerTrace>,
+) -> Tensor {
+    let (sx, sw, bn, node_relu) = layer_params(node);
+    let dq = sw * sx;
+    let cout = node.cout();
+    let k = node.k_len() as u64;
+
+    let (geom, kh, kw, stride) = geom_of(node, src);
     let rows = geom.oh * geom.ow;
     let mut out = Tensor::new(geom.oh, geom.ow, cout);
 
-    let mut pg = PatchGather::new(src, sx);
+    let qt = QuantizedTensor::new(src, sx);
+    let mut pg = PatchGather::new(&qt);
     let mut trace = if opts.collect_trace {
         Some(LayerTrace {
             node: node_idx,
@@ -352,6 +853,7 @@ mod tests {
     use crate::config::PredictorConfig;
     use crate::model::testutil::{tiny_conv, tiny_fc};
     use crate::model::PredictorParams;
+    use crate::predictor::EngineSel;
     use crate::util::json::Json;
     use crate::util::rng::Rng;
 
@@ -416,7 +918,12 @@ mod tests {
         let m = tiny_fc(5);
         let x = rand_input(8, 7);
         let pol = always_zero_policy(&m, 0, 6);
-        let r = run_sample(&m, Some(&pol), &x, RunOpts { oracle: true, collect_trace: true });
+        let r = run_sample(
+            &m,
+            Some(&pol),
+            &x,
+            RunOpts { oracle: true, collect_trace: true, ..Default::default() },
+        );
 
         // baseline for comparison
         let base = run_sample(&m, None, &x, RunOpts::default());
@@ -498,7 +1005,12 @@ mod tests {
         let x = rand_input(6 * 6 * 2, 19);
         let n = m.nodes[0].cout();
         let pol = always_zero_policy(&m, 0, n);
-        let r = run_sample(&m, Some(&pol), &x, RunOpts { oracle: false, collect_trace: true });
+        let r = run_sample(
+            &m,
+            Some(&pol),
+            &x,
+            RunOpts { oracle: false, collect_trace: true, ..Default::default() },
+        );
         // every compute node gets a trace (the simulator replays them all);
         // only the policied layer (node 0) can contain skips
         assert_eq!(r.traces.len(), 4);
@@ -508,6 +1020,79 @@ mod tests {
         assert_eq!(t.skipped.len(), t.rows * t.cout);
         for other in r.traces.iter().filter(|t| t.node != 0) {
             assert!(other.skipped.iter().all(|&s| !s), "non-policied layer skipped");
+        }
+    }
+
+    /// The tiled engine must be bit-identical to the scalar reference on
+    /// the in-tree models, for every (policy, oracle, trace, threads)
+    /// combination. Random-model coverage lives in
+    /// rust/tests/engine_equivalence.rs.
+    #[test]
+    fn tiled_matches_scalar_reference() {
+        for seed in [1u64, 9, 33] {
+            let models = [tiny_fc(seed), tiny_conv(seed)];
+            for m in &models {
+                let (h, w, c) = m.input_shape;
+                let x = rand_input(h * w * c, seed ^ 0xA5);
+                let n = m.nodes[0].cout();
+                let pol = always_zero_policy(m, 0, n);
+                for policy in [None, Some(&pol)] {
+                    for oracle in [false, true] {
+                        for threads in [1usize, 3] {
+                            let base = RunOpts {
+                                oracle,
+                                collect_trace: true,
+                                threads: 1,
+                                engine: EngineSel::ScalarRef,
+                            };
+                            let want = run_sample(m, policy, &x, base);
+                            let got = run_sample(
+                                m,
+                                policy,
+                                &x,
+                                RunOpts { threads, engine: EngineSel::Tiled, ..base },
+                            );
+                            assert_eq!(want.logits, got.logits, "{} logits", m.name);
+                            assert_eq!(want.pred, got.pred, "{} pred stats", m.name);
+                            assert_eq!(want.ops, got.ops, "{} ops stats", m.name);
+                            assert_eq!(want.traces, got.traces, "{} traces", m.name);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Ablation toggles (binary-only, clusters-only) must agree between
+    /// engines too — they exercise the other decision branches.
+    #[test]
+    fn tiled_matches_scalar_on_ablation_modes() {
+        let m = tiny_conv(47);
+        let x = rand_input(6 * 6 * 2, 51);
+        let n = m.nodes[0].cout();
+        for (use_clusters, use_binary) in [(false, true), (true, false), (false, false)] {
+            let mut pol = always_zero_policy(&m, 0, n);
+            pol.cfg.use_clusters = use_clusters;
+            pol.cfg.use_binary = use_binary;
+            let base = RunOpts {
+                oracle: true,
+                collect_trace: true,
+                threads: 1,
+                engine: EngineSel::ScalarRef,
+            };
+            let want = run_sample(&m, Some(&pol), &x, base);
+            for threads in [1usize, 2] {
+                let got = run_sample(
+                    &m,
+                    Some(&pol),
+                    &x,
+                    RunOpts { threads, engine: EngineSel::Tiled, ..base },
+                );
+                assert_eq!(want.logits, got.logits, "clusters={use_clusters} binary={use_binary}");
+                assert_eq!(want.pred, got.pred);
+                assert_eq!(want.ops, got.ops);
+                assert_eq!(want.traces, got.traces);
+            }
         }
     }
 }

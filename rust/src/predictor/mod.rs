@@ -104,7 +104,7 @@ impl MorPolicy {
 }
 
 /// Prediction-outcome counters (paper Fig 12 categories).
-#[derive(Clone, Copy, Debug, Default, PartialEq)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct PredStats {
     /// Predicted zero, truly zero — savings, no accuracy impact.
     pub correct_zero: u64,
@@ -145,7 +145,7 @@ impl PredStats {
 }
 
 /// Operation/traffic accounting for one run.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct OpsStats {
     /// MACs a dense evaluation would perform.
     pub macs_total: u64,
@@ -188,7 +188,7 @@ impl OpsStats {
 }
 
 /// Per-layer skip trace consumed by the cycle-level simulator.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct LayerTrace {
     pub node: usize,
     pub rows: usize,
@@ -208,6 +208,17 @@ pub struct RunResult {
     pub traces: Vec<LayerTrace>,
 }
 
+/// Which compute-layer implementation [`exec::run_sample`] uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineSel {
+    /// Tiled row-batched GEMM with prepacked weights (the default).
+    Tiled,
+    /// The original per-neuron GEMV path, retained as the bit-exact
+    /// reference oracle (see `rust/tests/engine_equivalence.rs`) and as
+    /// the baseline the perf benches compare against.
+    ScalarRef,
+}
+
 /// Options for [`exec::run_sample`].
 #[derive(Clone, Copy, Debug)]
 pub struct RunOpts {
@@ -217,6 +228,12 @@ pub struct RunOpts {
     pub oracle: bool,
     /// Collect per-layer skip traces for the simulator.
     pub collect_trace: bool,
+    /// Worker threads for row-tile parallelism within one sample
+    /// (`<= 1` runs inline). Stats and traces merge deterministically,
+    /// so results are identical for any thread count.
+    pub threads: usize,
+    /// Engine implementation (tiled GEMM vs scalar reference).
+    pub engine: EngineSel,
 }
 
 impl Default for RunOpts {
@@ -224,6 +241,28 @@ impl Default for RunOpts {
         RunOpts {
             oracle: true,
             collect_trace: false,
+            threads: 1,
+            engine: EngineSel::Tiled,
+        }
+    }
+}
+
+impl RunOpts {
+    /// Use every available core for one sample (latency-optimal forward).
+    pub fn parallel(self) -> RunOpts {
+        RunOpts {
+            threads: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+            ..self
+        }
+    }
+
+    /// Select the per-neuron scalar reference engine.
+    pub fn scalar_ref(self) -> RunOpts {
+        RunOpts {
+            engine: EngineSel::ScalarRef,
+            ..self
         }
     }
 }

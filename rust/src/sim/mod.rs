@@ -319,7 +319,12 @@ mod tests {
         let m = tiny_conv(3);
         let x = input(6 * 6 * 2, 5);
         let pol = zero_policy(&m, 0);
-        let r = exec::run_sample(&m, Some(&pol), &x, RunOpts { oracle: false, collect_trace: true });
+        let r = exec::run_sample(
+            &m,
+            Some(&pol),
+            &x,
+            RunOpts { oracle: false, collect_trace: true, ..Default::default() },
+        );
 
         let sim = Simulator::new(Config::default());
         let base = sim.simulate_sample(&m, None, None);

@@ -163,7 +163,7 @@ fn simulator_speedup_on_real_models() {
             &a.model,
             Some(&pol),
             a.data.test_sample(0),
-            RunOpts { oracle: false, collect_trace: true },
+            RunOpts { oracle: false, collect_trace: true, ..Default::default() },
         );
         let sim = Simulator::new(cfg.clone());
         let b = sim.simulate_sample(&a.model, None, None);
@@ -193,7 +193,7 @@ fn trace_consistency_with_ops() {
         &a.model,
         Some(&pol),
         a.data.test_sample(3),
-        RunOpts { oracle: true, collect_trace: true },
+        RunOpts { oracle: true, collect_trace: true, ..Default::default() },
     );
     let skipped_in_trace: u64 = r
         .traces
@@ -204,6 +204,36 @@ fn trace_consistency_with_ops() {
     assert_eq!(skipped_in_trace, skipped_in_stats);
 }
 
+#[test]
+fn tiled_engine_matches_scalar_on_artifacts() {
+    // Bit-identity of the tiled GEMM engine vs the per-neuron reference on
+    // real models and real samples, across thread counts.
+    let Some(a) = load("tds") else { return };
+    let pol = MorPolicy::new(
+        &a.model,
+        &a.predictor,
+        PredictorConfig { threshold: 0.6, ..Default::default() },
+    );
+    for i in 0..4 {
+        let sample = a.data.test_sample(i);
+        let base = RunOpts { oracle: true, collect_trace: true, ..Default::default() };
+        let want = exec::run_sample(&a.model, Some(&pol), sample, base.scalar_ref());
+        for threads in [1usize, 4] {
+            let got = exec::run_sample(
+                &a.model,
+                Some(&pol),
+                sample,
+                RunOpts { threads, ..base },
+            );
+            assert_eq!(want.logits, got.logits, "sample {i}, {threads} threads");
+            assert_eq!(want.pred, got.pred, "sample {i}");
+            assert_eq!(want.ops, got.ops, "sample {i}");
+            assert_eq!(want.traces, got.traces, "sample {i}");
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_runtime_matches_engine() {
     // The AOT HLO artifact (L1 Pallas kernels inside an L2 JAX graph) must
@@ -226,7 +256,12 @@ fn pjrt_runtime_matches_engine() {
     for i in 0..8 {
         let sample = a.data.test_sample(i);
         let pjrt = exe.forward(sample).expect("pjrt forward");
-        let eng = exec::run_sample(&a.model, None, sample, RunOpts { oracle: false, collect_trace: false });
+        let eng = exec::run_sample(
+            &a.model,
+            None,
+            sample,
+            RunOpts { oracle: false, collect_trace: false, ..Default::default() },
+        );
         let max_diff = pjrt
             .iter()
             .zip(&eng.logits)
@@ -255,6 +290,7 @@ fn serving_coordinator_end_to_end() {
         requests,
         &artifacts_dir(),
         1.0,
+        1,
     )
     .expect("serve");
     assert_eq!(rep.completed, n, "requests dropped");
