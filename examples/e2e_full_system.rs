@@ -12,7 +12,7 @@
 //!      predictor enabled.
 use anyhow::{ensure, Result};
 use mor::config::{Config, PredictorConfig};
-use mor::coordinator::{serve, Backend};
+use mor::coordinator::{serve, Backend, ServeOpts};
 use mor::model::Artifacts;
 use mor::predictor::{argmax, exec, MorPolicy, MorRun, RunOpts};
 use mor::runtime::Runtime;
@@ -105,9 +105,16 @@ fn main() -> Result<()> {
     let mut stream = RequestStream::new(200.0, arts.data.n_test(), 11);
     let requests = stream.generate(2.0);
     let n_req = requests.len();
-    let rep = serve(&arts, Some(policy), Backend::Engine, 4, requests, &dir, 1.0, 1)?;
+    let rep = serve(
+        &arts,
+        Some(policy),
+        Backend::Engine,
+        requests,
+        &dir,
+        ServeOpts { workers: 4, max_batch: 8, ..Default::default() },
+    )?;
     rep.print("e2e");
-    ensure!(rep.completed == n_req, "dropped requests");
+    ensure!(rep.completed == n_req && rep.dropped == 0, "dropped requests");
 
     println!("=== E2E OK: all layers compose ===");
     Ok(())

@@ -1,39 +1,55 @@
 //! Domain example: low-latency speech recognition serving (the paper's
 //! motivating workload — TDS frame-by-frame inference on-edge).
 //!
-//! Streams Poisson-arriving utterance requests through the coordinator on
+//! Streams bursty utterance-shaped requests through the coordinator on
 //! the functional engine backend with the MoR predictor enabled, then
-//! compares against the no-predictor baseline.
+//! compares against the no-predictor baseline and shows what micro-
+//! batching does to throughput and tail latency.
 use anyhow::Result;
 use mor::config::PredictorConfig;
-use mor::coordinator::{serve, Backend};
+use mor::coordinator::{serve, Backend, ServeOpts};
 use mor::model::Artifacts;
 use mor::predictor::MorPolicy;
-use mor::workload::RequestStream;
+use mor::workload::{Arrival, RequestStream};
 
 fn main() -> Result<()> {
     let dir = std::env::var("MOR_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
     let arts = Artifacts::load(&dir, "tds")?;
     let rps = 300.0;
     let duration = 3.0;
-    let workers = 4;
+    let opts = ServeOpts { workers: 4, ..Default::default() };
 
-    let mut stream = RequestStream::new(rps, arts.data.n_test(), 7);
+    // speech traffic is bursty: utterances arrive in clumps, not as a
+    // memoryless stream — exactly the shape micro-batching absorbs
+    let arrival = Arrival::from_cli("bursty", rps)?;
+    let mut stream = RequestStream::with_arrival(arrival, arts.data.n_test(), 7);
     let requests = stream.generate(duration);
-    println!("speech serving: {} requests at {rps} rps over {duration}s, {workers} workers", requests.len());
+    println!(
+        "speech serving: {} bursty requests (avg {rps} rps) over {duration}s, {} workers",
+        requests.len(),
+        opts.workers
+    );
 
-    let policy = MorPolicy::new(&arts.model, &arts.predictor, PredictorConfig::default());
-    let rep = serve(
-        &arts, Some(policy), Backend::Engine, workers, requests.clone(), &dir, 1.0, 1,
-    )?;
+    let policy = || MorPolicy::new(&arts.model, &arts.predictor, PredictorConfig::default());
+    let rep = serve(&arts, Some(policy()), Backend::Engine, requests.clone(), &dir, opts)?;
     rep.print("tds+MoR");
 
-    let rep0 = serve(&arts, None, Backend::Engine, workers, requests, &dir, 1.0, 1)?;
+    let rep0 = serve(&arts, None, Backend::Engine, requests.clone(), &dir, opts)?;
     rep0.print("tds baseline");
 
     println!(
         "service-time speedup from skipping: {:.2}x",
         rep0.mean_service_ms / rep.mean_service_ms.max(1e-9)
+    );
+
+    // batching: same trace, micro-batches of up to 8 requests share one
+    // predict-then-evaluate pass per row tile
+    let batched = ServeOpts { max_batch: 8, batch_wait_us: 2_000, ..opts };
+    let repb = serve(&arts, Some(policy()), Backend::Engine, requests, &dir, batched)?;
+    repb.print("tds+MoR, batch<=8");
+    println!(
+        "batching: occupancy {:.2} | p99 {:.2} → {:.2} ms | {:.0} → {:.0} rps",
+        repb.batch_occupancy, rep.p99_ms, repb.p99_ms, rep.throughput_rps, repb.throughput_rps
     );
     Ok(())
 }

@@ -1,0 +1,110 @@
+//! §Perf serving bench: capacity and tail latency of the coordinator as a
+//! function of micro-batch size and worker count.
+//!
+//! Drives the serving pipeline **closed-loop** (issue-on-completion, a
+//! full pipeline of `2 * workers * max_batch` outstanding requests) so
+//! the measured rps is service capacity, not arrival-rate replay. Uses
+//! the real cnn10 artifacts when `make artifacts` has run, otherwise a
+//! synthetic cnn10-scale bundle — the emitted `BENCH_serving.json`
+//! (override the path with `MOR_BENCH_SERVING_OUT`) is always complete
+//! and machine-diffable across PRs.
+mod common;
+
+use mor::config::PredictorConfig;
+use mor::coordinator::{serve, Backend, ServeOpts};
+use mor::model::{synth, Artifacts};
+use mor::predictor::MorPolicy;
+use mor::workload::RequestStream;
+
+const WORKERS: [usize; 2] = [1, 4];
+const BATCHES: [usize; 4] = [1, 4, 8, 16];
+const REQUESTS_PER_CONFIG: usize = 192;
+
+fn workload() -> (Artifacts, String) {
+    if let Some(zoo) = common::load_zoo() {
+        if let Some(a) = zoo.into_iter().find(|a| a.meta.name == "cnn10") {
+            return (a, "cnn10".to_string());
+        }
+    }
+    // synthetic fallback: cnn10-scale model, self-consistent labels
+    (
+        synth::artifacts_for(synth::cnn10_like(21), 22, 64, 4),
+        "cnn10-synth".to_string(),
+    )
+}
+
+fn main() {
+    let (arts, label) = workload();
+    println!("serving bench on {label}: closed loop, {REQUESTS_PER_CONFIG} requests per config");
+
+    let mut rows: Vec<String> = Vec::new();
+    for &workers in &WORKERS {
+        for &max_batch in &BATCHES {
+            let pol = MorPolicy::new(
+                &arts.model,
+                &arts.predictor,
+                PredictorConfig { threshold: 0.5, ..Default::default() },
+            );
+            // arrival times are ignored in closed loop; the stream only
+            // supplies ids + sample indices
+            let mut stream = RequestStream::new(1000.0, arts.data.n_test(), 42);
+            let mut requests = stream.generate(10.0);
+            requests.truncate(REQUESTS_PER_CONFIG);
+            let n = requests.len();
+            let rep = serve(
+                &arts,
+                Some(pol),
+                Backend::Engine,
+                requests,
+                "unused",
+                ServeOpts {
+                    workers,
+                    max_batch,
+                    batch_wait_us: 500,
+                    closed_loop: true,
+                    concurrency: 2 * workers * max_batch,
+                    ..Default::default()
+                },
+            )
+            .expect("serve");
+            assert_eq!(rep.completed, n, "bench dropped requests");
+            println!(
+                "  workers={workers} batch<={max_batch:<2} → {:>7.1} rps | occupancy {:>5.2} | \
+                 p50 {:>7.2} ms p99 {:>7.2} ms",
+                rep.throughput_rps, rep.batch_occupancy, rep.p50_ms, rep.p99_ms
+            );
+            rows.push(format!(
+                "    {{\"workers\": {workers}, \"max_batch\": {max_batch}, \
+                 \"rps\": {:.2}, \"p50_ms\": {:.3}, \"p99_ms\": {:.3}, \
+                 \"mean_service_ms\": {:.3}, \"batch_occupancy\": {:.3}, \
+                 \"dropped\": {}}}",
+                rep.throughput_rps,
+                rep.p50_ms,
+                rep.p99_ms,
+                rep.mean_service_ms,
+                rep.batch_occupancy,
+                rep.dropped
+            ));
+        }
+    }
+
+    let out_path = std::env::var("MOR_BENCH_SERVING_OUT")
+        .unwrap_or_else(|_| "BENCH_serving.json".to_string());
+    let mut js = String::new();
+    js.push_str("{\n");
+    js.push_str("  \"bench\": \"perf_serving\",\n");
+    js.push_str(&format!("  \"model\": \"{label}\",\n"));
+    js.push_str(&format!("  \"requests_per_config\": {REQUESTS_PER_CONFIG},\n"));
+    js.push_str(&format!(
+        "  \"threads_available\": {},\n",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    ));
+    js.push_str("  \"mode\": \"closed_loop\",\n");
+    js.push_str("  \"configs\": [\n");
+    js.push_str(&rows.join(",\n"));
+    js.push_str("\n  ]\n}\n");
+    match std::fs::write(&out_path, &js) {
+        Ok(()) => println!("\nwrote {out_path}"),
+        Err(e) => eprintln!("\nfailed to write {out_path}: {e}"),
+    }
+}

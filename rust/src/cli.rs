@@ -1,10 +1,30 @@
 //! Hand-rolled CLI argument parser (clap is not in the offline vendor set).
 //!
 //! Grammar: `mor <command> [--flag] [--key value] [positional...]`.
-//! Flags may appear in any order; `--key=value` is accepted too.
+//! Flags may appear in any order; `--key=value` is accepted too, and a
+//! bare `--` ends option parsing (everything after is positional).
+//!
+//! Boolean flags are a known set ([`BOOLEAN_FLAGS`]): a bare token after
+//! one of them is a positional, never the flag's value — so
+//! `mor serve --no-predictor model.toml` does not swallow the positional.
+//! Unknown `--keys` keep the historical lookahead rule (a following
+//! non-`--` token is their value), which also accepts negative numbers:
+//! `--threshold -0.5`.
 
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
+
+/// Flags that never take a value. Keep this in sync with USAGE; `--config`
+/// is *not* here because `simulate --config <file>` takes a value (the
+/// valueless `info --config` form still parses via lookahead).
+pub const BOOLEAN_FLAGS: &[&str] = &[
+    "all",
+    "no-binary",
+    "no-clusters",
+    "no-predictor",
+    "oracle",
+    "verbose",
+];
 
 #[derive(Clone, Debug, Default)]
 pub struct Args {
@@ -25,13 +45,21 @@ impl Args {
             }
             args.command = cmd;
         }
+        let mut options_done = false;
         while let Some(tok) = it.next() {
+            if options_done {
+                args.positional.push(tok);
+                continue;
+            }
+            if tok == "--" {
+                options_done = true;
+                continue;
+            }
             if let Some(key) = tok.strip_prefix("--") {
-                if key.is_empty() {
-                    bail!("bare '--' is not supported");
-                }
                 if let Some((k, v)) = key.split_once('=') {
                     args.options.insert(k.to_string(), v.to_string());
+                } else if BOOLEAN_FLAGS.contains(&key) {
+                    args.flags.push(key.to_string());
                 } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
                     let v = it.next().unwrap();
                     args.options.insert(key.to_string(), v);
@@ -104,6 +132,17 @@ COMMANDS:
                  --duration <s>        seconds of simulated load (default: 5)
                  --workers <n>         worker threads (default: 4)
                  --intra-threads <n>   row-tile threads per sample (default: 1)
+                 --max-batch <n>       requests per engine micro-batch
+                                       (default: 1 = no batching)
+                 --batch-wait-us <t>   max linger for a partial batch
+                                       (default: 200)
+                 --arrival <kind>      poisson|steady|bursty|closed
+                                       (default: poisson; closed ignores
+                                       arrival times and keeps --concurrency
+                                       requests outstanding)
+                 --concurrency <n>     closed-loop outstanding requests
+                                       (default: workers * max-batch)
+                 --no-predictor        serve the dense baseline (no MoR)
                  --runtime pjrt|engine execution backend (default: engine;
                                        pjrt needs --features pjrt at build)
     info       Print artifact + configuration info
@@ -159,5 +198,43 @@ mod tests {
     fn option_before_command_rejected() {
         let v = vec!["mor".to_string(), "--x".to_string()];
         assert!(Args::parse(v).is_err());
+    }
+
+    #[test]
+    fn boolean_flag_does_not_swallow_positional() {
+        // the old lookahead rule parsed this as oracle=model.toml
+        let a = parse(&["serve", "--oracle", "model.toml"]);
+        assert!(a.flag("oracle"));
+        assert_eq!(a.opt("oracle"), None);
+        assert_eq!(a.positional, vec!["model.toml"]);
+
+        let a = parse(&["run", "--no-predictor", "extra", "--model", "tds"]);
+        assert!(a.flag("no-predictor"));
+        assert_eq!(a.positional, vec!["extra"]);
+        assert_eq!(a.opt("model"), Some("tds"));
+    }
+
+    #[test]
+    fn negative_number_values() {
+        let a = parse(&["run", "--threshold", "-0.5"]);
+        assert_eq!(a.opt_f64("threshold", 0.0).unwrap(), -0.5);
+        let a = parse(&["run", "--threshold=-1.5"]);
+        assert_eq!(a.opt_f64("threshold", 0.0).unwrap(), -1.5);
+    }
+
+    #[test]
+    fn double_dash_terminates_options() {
+        let a = parse(&["figures", "--out", "x", "--", "--fig6", "plain"]);
+        assert_eq!(a.opt("out"), Some("x"));
+        assert_eq!(a.positional, vec!["--fig6", "plain"]);
+        assert!(a.flags.is_empty());
+    }
+
+    #[test]
+    fn equals_form_on_boolean_named_key_still_works() {
+        // --key=value always wins over the flag set
+        let a = parse(&["run", "--oracle=yes"]);
+        assert_eq!(a.opt("oracle"), Some("yes"));
+        assert!(!a.flag("oracle"));
     }
 }

@@ -4,15 +4,23 @@
 //! coordinator provides the serving shell around the compute engine:
 //!
 //! * a dispatcher replays a [`crate::workload::RequestStream`] in real
-//!   time (arrival-faithful), pushing requests into a shared queue
-//!   (backpressure surfaces as queue depth);
-//! * a worker pool executes requests on one of two backends:
+//!   time (arrival-faithful), pushing requests into a condvar-backed
+//!   queue (backpressure surfaces as queue depth) — or, in closed-loop
+//!   mode, keeps a fixed number of requests outstanding and issues the
+//!   next one as each completes;
+//! * a worker pool pops **micro-batches** (up to [`ServeOpts::max_batch`]
+//!   requests, lingering at most [`ServeOpts::batch_wait_us`] for the
+//!   batch to fill) and executes them on one of two backends:
 //!   - `Engine` — the in-process functional int8 engine with the MoR
-//!     predictor (multi-threaded; the model and policy are shared
-//!     read-only), or
+//!     predictor via [`exec::run_batch`], which advances the whole batch
+//!     layer-by-layer so im2col row tiles mix patches from several
+//!     requests (the model and policy are shared read-only), or
 //!   - `Pjrt` — the AOT-compiled HLO artifact on the PJRT CPU client
 //!     (single owner thread; PJRT handles are not `Send`);
-//! * per-request latency (queueing + service) and throughput metrics.
+//! * per-request latency (queueing + service) and throughput metrics,
+//!   plus drop accounting: a request whose execution fails is *counted*
+//!   ([`ServeReport::dropped`]) and the first error is surfaced in the
+//!   report — the worker keeps serving the rest of the trace.
 //!
 //! No async runtime is available offline (no tokio), so the coordinator
 //! uses std threads + channels; the architecture (dispatcher → queue →
@@ -20,11 +28,11 @@
 
 use crate::model::Artifacts;
 use crate::predictor::{exec, MorPolicy, RunOpts};
-use crate::util::percentile;
+use crate::util::{mean, percentile_sorted};
 use crate::workload::Request;
 use anyhow::Result;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::collections::VecDeque;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// Which execution backend serves requests.
@@ -36,6 +44,47 @@ pub enum Backend {
     Pjrt,
 }
 
+/// Serving knobs (everything except the workload itself).
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOpts {
+    /// Worker threads (Pjrt forces 1: handles live on one thread).
+    pub workers: usize,
+    /// Compresses the virtual arrival clock (e.g. 0.1 replays a 10 s
+    /// trace in 1 s) — useful for tests; 1.0 is real time.
+    pub time_scale: f64,
+    /// Row-tile threads per forward pass (see [`RunOpts::threads`]): keep
+    /// at 1 when `workers` already saturates the machine, raise it for
+    /// latency-critical low-concurrency streams.
+    pub intra_threads: usize,
+    /// Requests coalesced into one [`exec::run_batch`] call (1 = no
+    /// batching).
+    pub max_batch: usize,
+    /// How long a worker lingers for a partial batch to fill, in µs of
+    /// real time (ignored when `max_batch` is 1).
+    pub batch_wait_us: u64,
+    /// Closed-loop mode: ignore arrival times and keep `concurrency`
+    /// requests outstanding, issuing the next as each completes —
+    /// measures service capacity directly.
+    pub closed_loop: bool,
+    /// Outstanding requests in closed-loop mode (0 → `workers *
+    /// max_batch`).
+    pub concurrency: usize,
+}
+
+impl Default for ServeOpts {
+    fn default() -> ServeOpts {
+        ServeOpts {
+            workers: 4,
+            time_scale: 1.0,
+            intra_threads: 1,
+            max_batch: 1,
+            batch_wait_us: 200,
+            closed_loop: false,
+            concurrency: 0,
+        }
+    }
+}
+
 /// One served request's record.
 #[derive(Clone, Copy, Debug)]
 pub struct Served {
@@ -45,11 +94,24 @@ pub struct Served {
     pub correct: bool,
 }
 
+/// What a worker reports to the collector.
+enum Event {
+    Done(Served),
+    /// Requests lost to an execution error (first error text attached).
+    Dropped { n: usize, error: String },
+}
+
 /// Aggregate serving report.
 #[derive(Clone, Debug, Default)]
 pub struct ServeReport {
     pub completed: usize,
+    /// Requests lost to worker/backend errors (0 in the happy path).
+    pub dropped: usize,
+    /// Wall time of the whole serve call (includes arrival-replay tail).
     pub duration_s: f64,
+    /// First arrival → last completion: the window the system was
+    /// actually busy; the basis for `throughput_rps`.
+    pub busy_s: f64,
     pub throughput_rps: f64,
     pub accuracy: f64,
     pub p50_ms: f64,
@@ -57,34 +119,54 @@ pub struct ServeReport {
     pub p99_ms: f64,
     pub mean_service_ms: f64,
     pub max_queue_depth: usize,
+    /// Mean requests per executed micro-batch (1.0 when batching is off).
+    pub batch_occupancy: f64,
+    /// First execution error, if any request was dropped.
+    pub first_error: Option<String>,
 }
 
 impl ServeReport {
-    fn from_records(records: &[Served], duration_s: f64, max_depth: usize) -> ServeReport {
-        let lat: Vec<f64> = records
+    fn from_records(
+        records: &[Served],
+        wall_s: f64,
+        busy_s: f64,
+        max_depth: usize,
+        batches: usize,
+        dropped: usize,
+        first_error: Option<String>,
+    ) -> ServeReport {
+        // sort once; every percentile below reads the sorted vector
+        let mut lat: Vec<f64> = records
             .iter()
             .map(|r| (r.queue_us + r.service_us) as f64 / 1000.0)
             .collect();
+        lat.sort_by(f64::total_cmp);
         let svc: Vec<f64> = records.iter().map(|r| r.service_us as f64 / 1000.0).collect();
         let correct = records.iter().filter(|r| r.correct).count();
         ServeReport {
             completed: records.len(),
-            duration_s,
-            throughput_rps: records.len() as f64 / duration_s.max(1e-9),
+            dropped,
+            duration_s: wall_s,
+            busy_s,
+            throughput_rps: records.len() as f64 / busy_s.max(1e-9),
             accuracy: correct as f64 / records.len().max(1) as f64,
-            p50_ms: percentile(&lat, 50.0),
-            p95_ms: percentile(&lat, 95.0),
-            p99_ms: percentile(&lat, 99.0),
-            mean_service_ms: crate::util::mean(&svc),
+            p50_ms: percentile_sorted(&lat, 50.0),
+            p95_ms: percentile_sorted(&lat, 95.0),
+            p99_ms: percentile_sorted(&lat, 99.0),
+            mean_service_ms: mean(&svc),
             max_queue_depth: max_depth,
+            batch_occupancy: records.len() as f64 / batches.max(1) as f64,
+            first_error,
         }
     }
 
     pub fn print(&self, label: &str) {
         println!(
-            "[serve:{label}] {} reqs in {:.2}s → {:.1} rps | acc {:.1}% | \
-             lat p50 {:.2} ms p95 {:.2} ms p99 {:.2} ms | svc {:.2} ms | maxq {}",
+            "[serve:{label}] {} reqs in {:.2}s busy ({:.2}s wall) → {:.1} rps | acc {:.1}% | \
+             lat p50 {:.2} ms p95 {:.2} ms p99 {:.2} ms | svc {:.2} ms | maxq {} | \
+             batch {:.2}",
             self.completed,
+            self.busy_s,
             self.duration_s,
             self.throughput_rps,
             self.accuracy * 100.0,
@@ -92,29 +174,110 @@ impl ServeReport {
             self.p95_ms,
             self.p99_ms,
             self.mean_service_ms,
-            self.max_queue_depth
+            self.max_queue_depth,
+            self.batch_occupancy,
         );
+        if self.dropped > 0 {
+            println!(
+                "[serve:{label}] DROPPED {} request(s); first error: {}",
+                self.dropped,
+                self.first_error.as_deref().unwrap_or("unknown")
+            );
+        }
     }
 }
 
-/// Serve a pre-generated request list, replaying arrival times.
+/// Request queue shared between dispatcher and workers. The condvar
+/// replaces the previous 50 µs pop-and-sleep busy-poll: workers sleep
+/// until a push (or shutdown) actually happens, and the batcher's linger
+/// wait is a timed wait on the same condvar.
+struct SharedQueue {
+    state: Mutex<QueueState>,
+    cv: Condvar,
+}
+
+struct QueueState {
+    q: VecDeque<(Request, Instant)>,
+    /// Dispatcher finished: no more pushes will ever happen.
+    closed: bool,
+    depth_hwm: usize,
+    first_arrival: Option<Instant>,
+}
+
+impl SharedQueue {
+    fn new() -> SharedQueue {
+        SharedQueue {
+            state: Mutex::new(QueueState {
+                q: VecDeque::new(),
+                closed: false,
+                depth_hwm: 0,
+                first_arrival: None,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn push(&self, req: Request) {
+        let now = Instant::now();
+        let mut st = self.state.lock().unwrap();
+        st.q.push_back((req, now));
+        st.depth_hwm = st.depth_hwm.max(st.q.len());
+        st.first_arrival.get_or_insert(now);
+        drop(st);
+        self.cv.notify_one();
+    }
+
+    fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Pop the next micro-batch: blocks for the first request, then
+    /// lingers up to `batch_wait` for up to `max_batch` requests. Returns
+    /// None when the queue is closed and drained (worker shutdown).
+    fn next_batch(
+        &self,
+        max_batch: usize,
+        batch_wait: Duration,
+    ) -> Option<Vec<(Request, Instant)>> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if !st.q.is_empty() {
+                break;
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+        if max_batch > 1 && !batch_wait.is_zero() {
+            let deadline = Instant::now() + batch_wait;
+            while st.q.len() < max_batch && !st.closed {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (guard, _timeout) = self.cv.wait_timeout(st, deadline - now).unwrap();
+                st = guard;
+            }
+        }
+        let n = st.q.len().min(max_batch.max(1));
+        Some(st.q.drain(..n).collect())
+    }
+}
+
+/// Serve a pre-generated request list.
 ///
-/// `time_scale` compresses the virtual arrival clock (e.g. 0.1 replays a
-/// 10 s trace in 1 s) — useful for tests; 1.0 is real time.
-///
-/// `intra_threads` is the per-sample row-tile parallelism of the tiled
-/// engine (see [`RunOpts::threads`]): keep it at 1 when `workers` already
-/// saturates the machine (throughput serving), raise it for
-/// latency-critical low-concurrency streams.
+/// Open loop (default): arrival times are replayed faithfully (scaled by
+/// [`ServeOpts::time_scale`]). Closed loop: arrival times are ignored and
+/// [`ServeOpts::concurrency`] requests stay outstanding.
 pub fn serve(
     arts: &Artifacts,
     policy: Option<MorPolicy>,
     backend: Backend,
-    workers: usize,
     requests: Vec<Request>,
     artifacts_dir: &str,
-    time_scale: f64,
-    intra_threads: usize,
+    opts: ServeOpts,
 ) -> Result<ServeReport> {
     #[cfg(not(feature = "pjrt"))]
     {
@@ -128,12 +291,14 @@ pub fn serve(
         return Ok(ServeReport::default());
     }
     let n_req = requests.len();
+    let max_batch = opts.max_batch.max(1);
+    let batch_wait = Duration::from_micros(opts.batch_wait_us);
 
-    let queue: Arc<Mutex<std::collections::VecDeque<(Request, Instant)>>> =
-        Arc::new(Mutex::new(std::collections::VecDeque::new()));
-    let depth_hwm = Arc::new(AtomicUsize::new(0));
-    let (done_tx, done_rx) = mpsc::channel::<Served>();
-    let stop = Arc::new(AtomicUsize::new(0)); // 1 = dispatcher finished
+    let queue = Arc::new(SharedQueue::new());
+    let (event_tx, event_rx) = mpsc::channel::<Event>();
+    // closed loop: the collector returns one token per finished request
+    // (completed or dropped) and the dispatcher issues the next on each
+    let (token_tx, token_rx) = mpsc::channel::<()>();
 
     // shared read-only state for Engine workers
     let model = Arc::new(arts.model.clone());
@@ -146,30 +311,46 @@ pub fn serve(
 
     let t0 = Instant::now();
 
-    // dispatcher: replay arrivals
+    // dispatcher: replay arrivals (open loop) or refill on completion
+    // (closed loop)
     let disp = {
         let queue = Arc::clone(&queue);
-        let depth_hwm = Arc::clone(&depth_hwm);
-        let stop = Arc::clone(&stop);
+        let time_scale = opts.time_scale;
+        let closed_loop = opts.closed_loop;
+        let concurrency = if opts.concurrency > 0 {
+            opts.concurrency
+        } else {
+            opts.workers.max(1) * max_batch
+        };
         std::thread::spawn(move || {
-            for req in requests {
-                let due = Duration::from_micros((req.arrival_us as f64 * time_scale) as u64);
-                let now = t0.elapsed();
-                if due > now {
-                    std::thread::sleep(due - now);
+            if closed_loop {
+                let mut it = requests.into_iter();
+                for req in it.by_ref().take(concurrency) {
+                    queue.push(req);
                 }
-                let mut q = queue.lock().unwrap();
-                q.push_back((req, Instant::now()));
-                let d = q.len();
-                drop(q);
-                depth_hwm.fetch_max(d, Ordering::Relaxed);
+                while let Ok(()) = token_rx.recv() {
+                    match it.next() {
+                        Some(req) => queue.push(req),
+                        None => break,
+                    }
+                }
+            } else {
+                for req in requests {
+                    let due =
+                        Duration::from_micros((req.arrival_us as f64 * time_scale) as u64);
+                    let now = t0.elapsed();
+                    if due > now {
+                        std::thread::sleep(due - now);
+                    }
+                    queue.push(req);
+                }
             }
-            stop.store(1, Ordering::SeqCst);
+            queue.close();
         })
     };
 
     let n_workers = match backend {
-        Backend::Engine => workers.max(1),
+        Backend::Engine => opts.workers.max(1),
         Backend::Pjrt => 1, // PJRT handles live on one thread
     };
     #[cfg(feature = "pjrt")]
@@ -179,82 +360,158 @@ pub fn serve(
     let run_opts = RunOpts {
         oracle: false,
         collect_trace: false,
-        threads: intra_threads.max(1),
+        threads: opts.intra_threads.max(1),
         ..Default::default()
     };
+    let batches = Arc::new(std::sync::atomic::AtomicUsize::new(0));
 
     let mut handles = Vec::new();
     for _ in 0..n_workers {
         let queue = Arc::clone(&queue);
-        let stop = Arc::clone(&stop);
-        let done_tx = done_tx.clone();
+        let event_tx = event_tx.clone();
         let model = Arc::clone(&model);
         let policy = Arc::clone(&policy);
         let data = Arc::clone(&data);
+        let batches = Arc::clone(&batches);
         #[cfg(feature = "pjrt")]
         let hlo_path = hlo_path.clone();
-        handles.push(std::thread::spawn(move || -> Result<()> {
-            // PJRT backend: compile once inside the owner thread
+        handles.push(std::thread::spawn(move || {
+            // PJRT backend: compile once inside the owner thread; a
+            // failure here drops every request this worker would serve,
+            // which the drained-queue accounting below reports
             #[cfg(feature = "pjrt")]
             let pjrt_exe = match backend {
                 Backend::Pjrt => {
-                    let rt = crate::runtime::Runtime::cpu()?;
-                    Some(rt.load_hlo(&hlo_path, input_shape)?)
+                    let built = crate::runtime::Runtime::cpu()
+                        .and_then(|rt| rt.load_hlo(&hlo_path, input_shape));
+                    match built {
+                        Ok(exe) => Some(exe),
+                        Err(e) => {
+                            // drain everything: with a dead backend the
+                            // queue would never empty. Report batch by
+                            // batch — in closed-loop mode the dispatcher
+                            // only issues (and eventually closes) as drop
+                            // tokens flow back, so one send-at-the-end
+                            // would deadlock.
+                            let msg = format!("pjrt setup: {e:#}");
+                            while let Some(batch) =
+                                queue.next_batch(usize::MAX, Duration::ZERO)
+                            {
+                                event_tx
+                                    .send(Event::Dropped {
+                                        n: batch.len(),
+                                        error: msg.clone(),
+                                    })
+                                    .ok();
+                            }
+                            return;
+                        }
+                    }
                 }
                 Backend::Engine => None,
             };
-            loop {
-                let item = queue.lock().unwrap().pop_front();
-                let Some((req, enqueued)) = item else {
-                    if stop.load(Ordering::SeqCst) == 1 && queue.lock().unwrap().is_empty() {
-                        return Ok(());
-                    }
-                    std::thread::sleep(Duration::from_micros(50));
-                    continue;
-                };
-                let queue_us = enqueued.elapsed().as_micros() as u64;
+            let (x, y, sample_len) = (&data.0, &data.1, data.2);
+            while let Some(batch) = queue.next_batch(max_batch, batch_wait) {
+                batches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                 let svc_t = Instant::now();
-                let (x, y, sample_len) = (&data.0, &data.1, data.2);
-                let sample = &x[req.sample_idx * sample_len..(req.sample_idx + 1) * sample_len];
-                #[cfg(feature = "pjrt")]
-                let logits = match &pjrt_exe {
-                    Some(exe) => exe.forward(sample)?,
-                    None => {
-                        exec::run_sample(&model, policy.as_ref().as_ref(), sample, run_opts)
-                            .logits
-                    }
-                };
-                #[cfg(not(feature = "pjrt"))]
-                let logits =
-                    exec::run_sample(&model, policy.as_ref().as_ref(), sample, run_opts).logits;
-                let correct =
-                    crate::predictor::argmax(&logits) == y[req.sample_idx] as usize;
-                done_tx
-                    .send(Served {
-                        id: req.id,
-                        queue_us,
-                        service_us: svc_t.elapsed().as_micros() as u64,
-                        correct,
+                let samples: Vec<&[f32]> = batch
+                    .iter()
+                    .map(|(req, _)| {
+                        &x[req.sample_idx * sample_len..(req.sample_idx + 1) * sample_len]
                     })
-                    .ok();
+                    .collect();
+                // per-request logits: a poisoned request drops only
+                // itself, never its batch-mates or the rest of the trace
+                let per_req: Vec<Result<Vec<f32>>> = match backend {
+                    Backend::Engine => exec::run_batch(
+                        &model,
+                        policy.as_ref().as_ref(),
+                        &samples,
+                        run_opts,
+                    )
+                    .into_iter()
+                    .map(|r| Ok(r.logits))
+                    .collect(),
+                    #[cfg(feature = "pjrt")]
+                    Backend::Pjrt => {
+                        let exe = pjrt_exe.as_ref().expect("pjrt exe built above");
+                        samples.iter().map(|&s| exe.forward(s)).collect()
+                    }
+                    #[cfg(not(feature = "pjrt"))]
+                    Backend::Pjrt => unreachable!("rejected at serve() entry"),
+                };
+                let service_us = svc_t.elapsed().as_micros() as u64;
+                for ((req, enqueued), res) in batch.iter().zip(per_req) {
+                    match res {
+                        Ok(lg) => {
+                            let correct = crate::predictor::argmax(&lg)
+                                == y[req.sample_idx] as usize;
+                            event_tx
+                                .send(Event::Done(Served {
+                                    id: req.id,
+                                    queue_us: svc_t.duration_since(*enqueued).as_micros()
+                                        as u64,
+                                    service_us,
+                                    correct,
+                                }))
+                                .ok();
+                        }
+                        Err(e) => {
+                            event_tx
+                                .send(Event::Dropped {
+                                    n: 1,
+                                    error: format!("request {}: {e:#}", req.id),
+                                })
+                                .ok();
+                        }
+                    }
+                }
             }
         }));
     }
-    drop(done_tx);
+    drop(event_tx);
 
+    // collector: aggregate events, feed closed-loop tokens back
     let mut records = Vec::with_capacity(n_req);
-    for served in done_rx {
-        records.push(served);
+    let mut dropped = 0usize;
+    let mut first_error: Option<String> = None;
+    let mut last_done: Option<Instant> = None;
+    for ev in event_rx {
+        match ev {
+            Event::Done(served) => {
+                records.push(served);
+                last_done = Some(Instant::now());
+                token_tx.send(()).ok();
+            }
+            Event::Dropped { n, error } => {
+                dropped += n;
+                first_error.get_or_insert(error);
+                for _ in 0..n {
+                    token_tx.send(()).ok();
+                }
+            }
+        }
     }
+    drop(token_tx);
     disp.join().expect("dispatcher panicked");
     for h in handles {
-        h.join().expect("worker panicked")?;
+        h.join().expect("worker panicked");
     }
     let wall = t0.elapsed().as_secs_f64();
+    let first_arrival = queue.state.lock().unwrap().first_arrival;
+    let busy = match (first_arrival, last_done) {
+        (Some(a), Some(d)) => d.duration_since(a).as_secs_f64(),
+        _ => 0.0,
+    };
+    let max_depth = queue.state.lock().unwrap().depth_hwm;
     Ok(ServeReport::from_records(
         &records,
         wall,
-        depth_hwm.load(Ordering::Relaxed),
+        busy,
+        max_depth,
+        batches.load(std::sync::atomic::Ordering::Relaxed),
+        dropped,
+        first_error,
     ))
 }
 
@@ -262,8 +519,9 @@ pub fn serve(
 mod tests {
     use super::*;
 
-    // Engine-backend serving is exercised end-to-end in rust/tests (needs
-    // artifacts); here we unit-test the report math.
+    // Engine-backend serving is exercised end-to-end in
+    // rust/tests/serving_pipeline.rs (synthetic artifacts); here we
+    // unit-test the report math and the queue/batcher mechanics.
 
     #[test]
     fn report_percentiles() {
@@ -275,19 +533,97 @@ mod tests {
                 correct: i % 2 == 0,
             })
             .collect();
-        let r = ServeReport::from_records(&recs, 2.0, 7);
+        let r = ServeReport::from_records(&recs, 3.0, 2.0, 7, 100, 0, None);
         assert_eq!(r.completed, 100);
+        assert_eq!(r.dropped, 0);
+        assert!((r.duration_s - 3.0).abs() < 1e-9);
+        assert!((r.busy_s - 2.0).abs() < 1e-9);
+        // throughput is measured over the busy window, not the wall
         assert!((r.throughput_rps - 50.0).abs() < 1e-9);
         assert!((r.accuracy - 0.5).abs() < 1e-9);
         assert!(r.p50_ms > 49.0 && r.p50_ms < 52.0);
         assert!(r.p99_ms > 98.0);
         assert_eq!(r.max_queue_depth, 7);
+        assert!((r.batch_occupancy - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn report_counts_drops_and_surfaces_error() {
+        let recs: Vec<Served> = (0..4)
+            .map(|i| Served { id: i, queue_us: 10, service_us: 100, correct: true })
+            .collect();
+        let r = ServeReport::from_records(
+            &recs,
+            1.0,
+            0.5,
+            2,
+            2,
+            3,
+            Some("backend exploded".into()),
+        );
+        assert_eq!(r.completed, 4);
+        assert_eq!(r.dropped, 3);
+        assert_eq!(r.first_error.as_deref(), Some("backend exploded"));
+        assert!((r.batch_occupancy - 2.0).abs() < 1e-9);
     }
 
     #[test]
     fn empty_request_list_gives_empty_report() {
         let r = ServeReport::default();
         assert_eq!(r.completed, 0);
+        assert_eq!(r.dropped, 0);
         assert_eq!(r.throughput_rps, 0.0);
+    }
+
+    fn req(id: u64) -> Request {
+        Request { id, sample_idx: 0, arrival_us: 0 }
+    }
+
+    #[test]
+    fn batcher_coalesces_and_drains_on_close() {
+        let q = SharedQueue::new();
+        for i in 0..5 {
+            q.push(req(i));
+        }
+        let b = q.next_batch(4, Duration::ZERO).unwrap();
+        assert_eq!(b.len(), 4);
+        assert_eq!(b[0].0.id, 0);
+        q.close();
+        // remainder drains even after close
+        let b = q.next_batch(4, Duration::from_micros(500)).unwrap();
+        assert_eq!(b.len(), 1);
+        assert_eq!(b[0].0.id, 4);
+        // then shutdown
+        assert!(q.next_batch(4, Duration::ZERO).is_none());
+    }
+
+    #[test]
+    fn batcher_lingers_for_late_arrivals() {
+        let q = Arc::new(SharedQueue::new());
+        q.push(req(0));
+        let pusher = {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(2));
+                q.push(req(1));
+                q.close();
+            })
+        };
+        // linger long enough for the second request to join the batch
+        let b = q.next_batch(2, Duration::from_millis(200)).unwrap();
+        pusher.join().unwrap();
+        assert_eq!(b.len(), 2, "linger should have picked up the late request");
+    }
+
+    #[test]
+    fn blocked_worker_wakes_on_close() {
+        let q = Arc::new(SharedQueue::new());
+        let waiter = {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || q.next_batch(8, Duration::from_millis(50)))
+        };
+        std::thread::sleep(Duration::from_millis(2));
+        q.close();
+        assert!(waiter.join().unwrap().is_none());
     }
 }

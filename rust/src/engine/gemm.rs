@@ -9,6 +9,12 @@
 //! and the micro-kernel evaluates up to [`NR`] filters per patch load
 //! (AVX2 `vpmovsxbw` + `vpmaddwd`, with a portable fallback).
 //!
+//! A tile's rows need not come from one sample: the batch-native forward
+//! ([`crate::predictor::exec::run_batch`]) fills tiles across request
+//! boundaries, so the serving coordinator's micro-batches keep these
+//! kernels running at full occupancy even when each request contributes
+//! only a handful of rows (e.g. an FC layer's single row per request).
+//!
 //! All kernels are exact int8×int8→int32 sums, so the tiled engine is
 //! bit-identical to the scalar reference path by construction — the
 //! property suite in `rust/tests/engine_equivalence.rs` proves it.

@@ -6,11 +6,11 @@
 use anyhow::{bail, Result};
 use mor::cli::{Args, USAGE};
 use mor::config::Config;
-use mor::coordinator::{self, Backend};
+use mor::coordinator::{self, Backend, ServeOpts};
 use mor::figures;
 use mor::model::Artifacts;
 use mor::predictor::{MorPolicy, MorRun, RunOpts};
-use mor::workload::RequestStream;
+use mor::workload::{Arrival, RequestStream};
 
 fn main() {
     let args = match Args::parse(std::env::args()) {
@@ -197,6 +197,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let duration = args.opt_f64("duration", 5.0)?;
     let workers = args.opt_usize("workers", 4)?;
     let intra_threads = args.opt_usize("intra-threads", 1)?;
+    let max_batch = args.opt_usize("max-batch", 1)?;
+    let batch_wait_us = args.opt_usize("batch-wait-us", 200)? as u64;
+    let arrival_kind = args.opt_or("arrival", "poisson");
+    let concurrency = args.opt_usize("concurrency", 0)?;
     let backend = match args.opt_or("runtime", "engine") {
         "pjrt" => Backend::Pjrt,
         "engine" => Backend::Engine,
@@ -214,15 +218,31 @@ fn cmd_serve(args: &Args) -> Result<()> {
             cfg.predictor.clone(),
         ))
     };
-    let mut stream = RequestStream::new(rps, arts.data.n_test(), 42);
+    let arrival = Arrival::from_cli(arrival_kind, rps)?;
+    let mut stream = RequestStream::with_arrival(arrival, arts.data.n_test(), 42);
     let requests = stream.generate(duration);
     println!(
         "[serve] model={model} backend={backend:?} workers={workers} \
-         rps={rps} duration={duration}s → {} requests",
+         arrival={arrival_kind} rps={rps} duration={duration}s \
+         max_batch={max_batch} → {} requests",
         requests.len()
     );
-    let report =
-        coordinator::serve(&arts, policy, backend, workers, requests, dir, 1.0, intra_threads)?;
+    let report = coordinator::serve(
+        &arts,
+        policy,
+        backend,
+        requests,
+        dir,
+        ServeOpts {
+            workers,
+            time_scale: 1.0,
+            intra_threads,
+            max_batch,
+            batch_wait_us,
+            closed_loop: arrival_kind == "closed",
+            concurrency,
+        },
+    )?;
     report.print(model);
     Ok(())
 }

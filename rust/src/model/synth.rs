@@ -6,7 +6,7 @@
 //! graphs that cover the geometry corners (stride > kernel, 1×1 SAME,
 //! non-square inputs, VALID/SAME, BN on/off, FC heads).
 
-use super::{LayerPredictor, Model, Node, PredictorParams};
+use super::{Artifacts, Dataset, LayerPredictor, Model, ModelMeta, Node, PredictorParams};
 use crate::util::rng::Rng;
 use std::collections::BTreeMap;
 
@@ -199,9 +199,121 @@ pub fn predictor_for(model: &Model, seed: u64) -> PredictorParams {
     }
 }
 
+/// A small conv+fc stack (8×8×4 input, two ReLU convs, GAP, 4-class head)
+/// — fast enough that serving tests can push hundreds of requests through
+/// it without `make artifacts`.
+pub fn tiny_serving_model(seed: u64) -> Model {
+    let mut rng = Rng::new(seed);
+    let conv = |rng: &mut Rng, cin: usize, cout: usize, stride: usize, consumes: i32, sx: f32| {
+        Node::Conv {
+            kh: 3,
+            kw: 3,
+            cin,
+            cout,
+            stride,
+            pad_same: true,
+            sw: 0.01,
+            sx,
+            w: rand_weights(rng, 3 * 3 * cin * cout),
+            bn: Some(rand_bn(rng, cout)),
+            relu: true,
+            res_from: None,
+            consumes,
+        }
+    };
+    let nodes = vec![
+        conv(&mut rng, 4, 8, 1, -1, 1.0 / 127.0),
+        conv(&mut rng, 8, 8, 2, 0, 0.05),
+        Node::Gap { consumes: 1 },
+        Node::Fc {
+            cin: 8,
+            cout: 4,
+            sw: 0.02,
+            sx: 0.05,
+            w: rand_weights(&mut rng, 8 * 4),
+            bn: None,
+            relu: false,
+            res_from: None,
+            consumes: 2,
+        },
+    ];
+    Model::new(format!("tiny_serve_{seed}"), 1.0 / 127.0, (8, 8, 4), nodes)
+}
+
+/// Wrap a synthetic model into a full [`Artifacts`] bundle (predictor
+/// params, random evaluation data, meta) so the serving coordinator and
+/// its benches/tests run without `make artifacts`.
+///
+/// Test labels are **self-consistent**: the dense forward's own argmax,
+/// so serving accuracy measures predictor-induced divergence (1.0 without
+/// a policy), not label noise.
+pub fn artifacts_for(model: Model, seed: u64, n_test: usize, n_calib: usize) -> Artifacts {
+    let predictor = predictor_for(&model, seed ^ 0x0517);
+    let (h, w, c) = model.input_shape;
+    let sample = h * w * c;
+    let mut rng = Rng::new(seed ^ 0xDA7A);
+    let test_x: Vec<f32> = (0..n_test * sample)
+        .map(|_| rng.uniform(-1.0, 1.0) as f32)
+        .collect();
+    let label_of = |x: &[f32]| {
+        let opts = crate::predictor::RunOpts {
+            oracle: false,
+            ..Default::default()
+        };
+        let r = crate::predictor::exec::run_sample(&model, None, x, opts);
+        crate::predictor::argmax(&r.logits) as u16
+    };
+    let test_y: Vec<u16> = (0..n_test)
+        .map(|i| label_of(&test_x[i * sample..(i + 1) * sample]))
+        .collect();
+    let calib_x: Vec<f32> = (0..n_calib * sample)
+        .map(|_| rng.uniform(-1.0, 1.0) as f32)
+        .collect();
+    let calib_y: Vec<u16> = (0..n_calib)
+        .map(|i| label_of(&calib_x[i * sample..(i + 1) * sample]))
+        .collect();
+    let meta = ModelMeta {
+        name: model.name.clone(),
+        input_shape: model.input_shape,
+        macs_per_sample: model.mac_counts().iter().sum(),
+        fp32_accuracy: 1.0,
+        int8_accuracy: 1.0,
+        relu_layers: model.relu_layers(),
+    };
+    Artifacts {
+        meta,
+        model,
+        predictor,
+        data: Dataset {
+            shape: (h, w, c),
+            test_x,
+            test_y,
+            calib_x,
+            calib_y,
+        },
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn tiny_serving_artifacts_are_consistent() {
+        let arts = artifacts_for(tiny_serving_model(3), 4, 6, 2);
+        assert_eq!(arts.data.n_test(), 6);
+        assert_eq!(arts.data.n_calib(), 2);
+        assert_eq!(arts.data.shape, arts.meta.input_shape);
+        assert!(!arts.predictor.layers.is_empty());
+        // labels are the dense forward's argmax → dense accuracy is 1.0
+        let s = crate::predictor::MorRun::evaluate(
+            &arts,
+            None,
+            6,
+            crate::predictor::RunOpts::default(),
+        );
+        assert_eq!(s.accuracy, 1.0);
+    }
 
     #[test]
     fn cnn10_like_is_well_formed() {

@@ -1,22 +1,32 @@
-//! The MoR-aware forward pass: evaluates a model on one sample, skipping
-//! neuron evaluations the hybrid predictor declares zero (Section 3.2).
+//! The MoR-aware forward pass: evaluates a *batch* of samples layer by
+//! layer, skipping neuron evaluations the hybrid predictor declares zero
+//! (Section 3.2).
 //!
 //! Two interchangeable engines implement each compute layer:
 //!
 //! * **Tiled** (default) — a cache-blocked, row-batched im2col GEMM with a
-//!   two-phase predict-then-evaluate dataflow. Per tile of
-//!   [`TILE_ROWS`] patches: (1) gather the patches, (2) run the packed
-//!   binary predictor + cluster-proxy logic over the whole tile to produce
-//!   a skip mask, (3) run the dense multi-filter micro-kernel
-//!   ([`crate::engine::gemm`]) only over surviving (row, filter) pairs.
-//!   Row tiles are optionally parallelized across `std::thread::scope`
-//!   workers ([`RunOpts::threads`]); stats and traces merge
-//!   deterministically.
+//!   two-phase predict-then-evaluate dataflow. The batch's output rows
+//!   form one sample-major row space, so a tile of [`TILE_ROWS`] patches
+//!   is filled across request boundaries — the serving coordinator's
+//!   micro-batches keep the micro-kernel's weight blocks hot even when a
+//!   single request contributes only a handful of rows. Per tile:
+//!   (1) gather the patches (each from its own sample's quantized input),
+//!   (2) run the packed binary predictor + cluster-proxy logic over the
+//!   whole tile to produce a skip mask, (3) run the dense multi-filter
+//!   micro-kernel ([`crate::engine::gemm`]) only over surviving
+//!   (row, filter) pairs. Row tiles are optionally parallelized across
+//!   `std::thread::scope` workers ([`RunOpts::threads`]); stats and
+//!   traces are accounted per sample and merge deterministically.
 //! * **ScalarRef** — the original per-neuron GEMV path, retained as the
 //!   bit-exact test oracle and perf baseline. Logits, [`OpsStats`],
 //!   [`PredStats`] and traces are identical between the two (all dot
 //!   products are exact integer sums and the per-output float tail is the
 //!   same code), which `rust/tests/engine_equivalence.rs` asserts.
+//!
+//! [`run_batch`] is bit-identical to mapping [`run_sample`] over the batch
+//! (every output depends only on its own patch and filter, and per-row
+//! accounting lands in its sample's counters) — asserted for batch sizes
+//! 1..16 by `rust/tests/batch_equivalence.rs`.
 //!
 //! Execution order per output position mirrors the accelerator's Neurons
 //! Controller (Section 4.1): proxies first (they are always evaluated and
@@ -38,37 +48,74 @@ pub fn run_sample(
     input: &[f32],
     opts: RunOpts,
 ) -> RunResult {
+    run_batch(model, policy, &[input], opts)
+        .pop()
+        .expect("run_batch returns one result per input")
+}
+
+/// Run a batch of samples through the model, layer-synchronously: every
+/// compute layer advances all `inputs.len()` samples at once, so im2col
+/// row tiles are filled with patches from multiple samples and each
+/// prepacked weight block is streamed once per tile for the whole batch.
+///
+/// Results are **bit-identical** to calling [`run_sample`] per input —
+/// logits, [`OpsStats`], [`PredStats`] and traces — for any batch size,
+/// thread count, or tile alignment (ragged final tiles included).
+pub fn run_batch(
+    model: &Model,
+    policy: Option<&MorPolicy>,
+    inputs: &[&[f32]],
+    opts: RunOpts,
+) -> Vec<RunResult> {
+    let b = inputs.len();
+    if b == 0 {
+        return Vec::new();
+    }
     let (h, w, c) = model.input_shape;
-    let input_t = Tensor::from_slice(h, w, c, input);
+    let input_ts: Vec<Tensor> = inputs
+        .iter()
+        .map(|x| Tensor::from_slice(h, w, c, x))
+        .collect();
     let relu_layers = model.relu_layers();
 
-    let mut outs: Vec<Tensor> = Vec::with_capacity(model.nodes.len());
-    let mut pred = PredStats::default();
-    let mut ops = OpsStats::default();
-    let mut traces = Vec::new();
+    let mut outs: Vec<Vec<Tensor>> = (0..b)
+        .map(|_| Vec::with_capacity(model.nodes.len()))
+        .collect();
+    let mut pred = vec![PredStats::default(); b];
+    let mut ops = vec![OpsStats::default(); b];
+    let mut traces: Vec<Vec<LayerTrace>> = (0..b).map(|_| Vec::new()).collect();
 
     for (i, node) in model.nodes.iter().enumerate() {
-        let src: &Tensor = if node.consumes() < 0 {
-            &input_t
-        } else {
-            &outs[node.consumes() as usize]
-        };
-        let out = match node {
+        match node {
             Node::Conv { .. } | Node::Fc { .. } => {
-                let residual = res_tensor(node, &outs);
                 let lp = policy.and_then(|p| p.layers.get(&i));
                 let pol = lp.map(|l| (l, policy.unwrap()));
                 let is_relu_layer = relu_layers.contains(&i);
                 match opts.engine {
-                    EngineSel::ScalarRef => compute_layer_scalar(
-                        node, src, residual, pol, is_relu_layer, i, opts, &mut pred, &mut ops,
-                        &mut traces,
-                    ),
+                    EngineSel::ScalarRef => {
+                        for s in 0..b {
+                            let src = src_of(&input_ts[s], &outs[s], node);
+                            let residual = res_tensor(node, &outs[s]);
+                            let out = compute_layer_scalar(
+                                node,
+                                src,
+                                residual,
+                                pol,
+                                is_relu_layer,
+                                i,
+                                opts,
+                                &mut pred[s],
+                                &mut ops[s],
+                                &mut traces[s],
+                            );
+                            outs[s].push(out);
+                        }
+                    }
                     EngineSel::Tiled => compute_layer_tiled(
                         model.prepacked().layer(i),
                         node,
-                        src,
-                        residual,
+                        &input_ts,
+                        &mut outs,
                         pol,
                         is_relu_layer,
                         i,
@@ -79,18 +126,48 @@ pub fn run_sample(
                     ),
                 }
             }
-            Node::MaxPool { size, .. } => engine::maxpool(src, *size),
-            Node::Gap { .. } => engine::gap(src),
-            Node::Relu { .. } => engine::relu(src),
-        };
-        outs.push(out);
+            Node::MaxPool { size, .. } => {
+                for s in 0..b {
+                    let src = src_of(&input_ts[s], &outs[s], node);
+                    let out = engine::maxpool(src, *size);
+                    outs[s].push(out);
+                }
+            }
+            Node::Gap { .. } => {
+                for s in 0..b {
+                    let src = src_of(&input_ts[s], &outs[s], node);
+                    let out = engine::gap(src);
+                    outs[s].push(out);
+                }
+            }
+            Node::Relu { .. } => {
+                for s in 0..b {
+                    let src = src_of(&input_ts[s], &outs[s], node);
+                    let out = engine::relu(src);
+                    outs[s].push(out);
+                }
+            }
+        }
     }
 
-    RunResult {
-        logits: outs.last().map(|t| t.data.clone()).unwrap_or_default(),
-        pred,
-        ops,
-        traces,
+    let mut results = Vec::with_capacity(b);
+    for s in 0..b {
+        results.push(RunResult {
+            logits: outs[s].last().map(|t| t.data.clone()).unwrap_or_default(),
+            pred: pred[s],
+            ops: ops[s],
+            traces: std::mem::take(&mut traces[s]),
+        });
+    }
+    results
+}
+
+/// The input tensor a node reads: the model input or a prior node's output.
+fn src_of<'a>(input: &'a Tensor, outs: &'a [Tensor], node: &Node) -> &'a Tensor {
+    if node.consumes() < 0 {
+        input
+    } else {
+        &outs[node.consumes() as usize]
     }
 }
 
@@ -130,20 +207,31 @@ fn geom_of(node: &Node, src: &Tensor) -> (ConvGeom, usize, usize, usize) {
 }
 
 // ---------------------------------------------------------------------------
-// Tiled engine
+// Tiled engine (batch-native)
 // ---------------------------------------------------------------------------
+//
+// The batch's output rows form one sample-major global row space of
+// `b * rows` rows (global row g → sample g / rows, sample-local row
+// g % rows). Tiles and worker ranges are carved from the global space, so
+// a tile may hold patches from several samples; every per-row accounting
+// lands in that row's sample's counters, which keeps the batch bit-exact
+// with the per-sample path.
 
 /// Shared read-only context for one layer's tile workers.
 struct TiledCtx<'a> {
     node: &'a Node,
     pf: &'a PrepackedFilters,
-    qt: &'a QuantizedTensor,
-    residual: Option<&'a Tensor>,
+    /// One quantized input per sample of the batch.
+    qts: &'a [QuantizedTensor],
+    /// One optional residual tensor per sample of the batch.
+    residuals: &'a [Option<&'a Tensor>],
     policy: Option<(&'a super::LayerPolicy, &'a MorPolicy)>,
     geom: ConvGeom,
     kh: usize,
     kw: usize,
     stride: usize,
+    /// Output rows per sample (`geom.oh * geom.ow`).
+    rows: usize,
     cout: usize,
     k: u64,
     dq: f32,
@@ -156,8 +244,8 @@ struct TiledCtx<'a> {
 
 impl TiledCtx<'_> {
     #[inline]
-    fn res_at(&self, row: usize, f: usize) -> f32 {
-        self.residual
+    fn res_at(&self, s: usize, row: usize, f: usize) -> f32 {
+        self.residuals[s]
             .map(|r| r.data[row * self.cout + f])
             .unwrap_or(0.0)
     }
@@ -167,149 +255,180 @@ impl TiledCtx<'_> {
 fn compute_layer_tiled(
     pf: &PrepackedFilters,
     node: &Node,
-    src: &Tensor,
-    residual: Option<&Tensor>,
+    inputs: &[Tensor],
+    outs: &mut [Vec<Tensor>],
     policy: Option<(&super::LayerPolicy, &MorPolicy)>,
     is_relu_layer: bool,
     node_idx: usize,
     opts: RunOpts,
-    pred: &mut PredStats,
-    ops: &mut OpsStats,
-    traces: &mut Vec<LayerTrace>,
-) -> Tensor {
+    pred: &mut [PredStats],
+    ops: &mut [OpsStats],
+    traces: &mut [Vec<LayerTrace>],
+) {
+    let b = inputs.len();
     let (sx, sw, bn, node_relu) = layer_params(node);
-    let (geom, kh, kw, stride) = geom_of(node, src);
+    // all samples share one geometry: same model, same input shape
+    let (geom, kh, kw, stride) = geom_of(node, src_of(&inputs[0], &outs[0], node));
     let rows = geom.oh * geom.ow;
+    let total_rows = rows * b;
     let cout = node.cout();
-    let mut out = Tensor::new(geom.oh, geom.ow, cout);
-    let qt = QuantizedTensor::new(src, sx);
-    let ctx = TiledCtx {
-        node,
-        pf,
-        qt: &qt,
-        residual,
-        policy,
-        geom,
-        kh,
-        kw,
-        stride,
-        cout,
-        k: node.k_len() as u64,
-        dq: sw * sx,
-        bn,
-        node_relu,
-        is_relu_layer,
-        is_conv: matches!(node, Node::Conv { .. }),
-        oracle: opts.oracle,
-    };
 
-    let mut skipped = if opts.collect_trace { vec![false; rows * cout] } else { Vec::new() };
-    let mut bin_eval = if opts.collect_trace { vec![false; rows * cout] } else { Vec::new() };
+    // global sample-major buffers; split per sample after the compute
+    let mut out = vec![0.0f32; total_rows * cout];
+    let mut skipped =
+        if opts.collect_trace { vec![false; total_rows * cout] } else { Vec::new() };
+    let mut bin_eval =
+        if opts.collect_trace { vec![false; total_rows * cout] } else { Vec::new() };
 
-    let n_tiles = rows.div_ceil(TILE_ROWS).max(1);
-    let workers = opts.threads.max(1).min(n_tiles);
-    if workers <= 1 {
-        let trace = opts
-            .collect_trace
-            .then(|| (&mut skipped[..], &mut bin_eval[..]));
-        let (p, o) = process_row_range(&ctx, 0, rows, &mut out.data, trace);
-        pred.add(&p);
-        ops.add(&o);
-    } else {
-        // contiguous tile-aligned row ranges, one per worker; every buffer
-        // is split into disjoint per-range slices so workers never share
-        // mutable state, and stats merge in range order (deterministic)
-        let tiles_per = n_tiles.div_ceil(workers);
-        let mut ranges: Vec<(usize, usize)> = Vec::new();
-        let mut start = 0usize;
-        while start < rows {
-            let end = rows.min(start + tiles_per * TILE_ROWS);
-            ranges.push((start, end));
-            start = end;
-        }
-        let mut out_parts: Vec<&mut [f32]> = Vec::with_capacity(ranges.len());
-        let mut sk_parts: Vec<&mut [bool]> = Vec::with_capacity(ranges.len());
-        let mut be_parts: Vec<&mut [bool]> = Vec::with_capacity(ranges.len());
-        let mut out_rest: &mut [f32] = &mut out.data;
-        let mut sk_rest: &mut [bool] = &mut skipped;
-        let mut be_rest: &mut [bool] = &mut bin_eval;
-        for &(r0, r1) in &ranges {
-            let n = (r1 - r0) * cout;
-            let (head, tail) = std::mem::take(&mut out_rest).split_at_mut(n);
-            out_parts.push(head);
-            out_rest = tail;
-            if opts.collect_trace {
-                let (head, tail) = std::mem::take(&mut sk_rest).split_at_mut(n);
-                sk_parts.push(head);
-                sk_rest = tail;
-                let (head, tail) = std::mem::take(&mut be_rest).split_at_mut(n);
-                be_parts.push(head);
-                be_rest = tail;
-            }
-        }
-        let mut trace_parts: Vec<Option<(&mut [bool], &mut [bool])>> = if opts.collect_trace {
-            sk_parts
-                .into_iter()
-                .zip(be_parts)
-                .map(|(s, b)| Some((s, b)))
-                .collect()
-        } else {
-            ranges.iter().map(|_| None).collect()
-        };
-
-        let stats: Vec<(PredStats, OpsStats)> = std::thread::scope(|s| {
-            let ctx = &ctx;
-            let handles: Vec<_> = ranges
-                .iter()
-                .zip(out_parts)
-                .zip(trace_parts.drain(..))
-                .map(|((&(r0, r1), out_part), trace_part)| {
-                    s.spawn(move || process_row_range(ctx, r0, r1, out_part, trace_part))
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("tile worker panicked"))
-                .collect()
-        });
-        for (p, o) in stats {
-            pred.add(&p);
-            ops.add(&o);
-        }
-    }
-
-    if opts.collect_trace {
-        traces.push(LayerTrace {
-            node: node_idx,
+    {
+        // the residual refs borrow `outs` for the duration of the compute;
+        // the new tensors are pushed only after this scope releases them
+        let qts: Vec<QuantizedTensor> = (0..b)
+            .map(|s| QuantizedTensor::new(src_of(&inputs[s], &outs[s], node), sx))
+            .collect();
+        let residuals: Vec<Option<&Tensor>> =
+            (0..b).map(|s| res_tensor(node, &outs[s])).collect();
+        let ctx = TiledCtx {
+            node,
+            pf,
+            qts: &qts,
+            residuals: &residuals,
+            policy,
+            geom,
+            kh,
+            kw,
+            stride,
             rows,
             cout,
-            skipped,
-            bin_eval,
-        });
+            k: node.k_len() as u64,
+            dq: sw * sx,
+            bn,
+            node_relu,
+            is_relu_layer,
+            is_conv: matches!(node, Node::Conv { .. }),
+            oracle: opts.oracle,
+        };
+
+        let n_tiles = total_rows.div_ceil(TILE_ROWS).max(1);
+        let workers = opts.threads.max(1).min(n_tiles);
+        if workers <= 1 {
+            let trace = opts
+                .collect_trace
+                .then(|| (&mut skipped[..], &mut bin_eval[..]));
+            let (p, o) = process_row_range(&ctx, 0, total_rows, &mut out, trace);
+            for s in 0..b {
+                pred[s].add(&p[s]);
+                ops[s].add(&o[s]);
+            }
+        } else {
+            // contiguous tile-aligned global row ranges, one per worker;
+            // every buffer is split into disjoint per-range slices so
+            // workers never share mutable state, and per-sample stats
+            // merge in range order (deterministic)
+            let tiles_per = n_tiles.div_ceil(workers);
+            let mut ranges: Vec<(usize, usize)> = Vec::new();
+            let mut start = 0usize;
+            while start < total_rows {
+                let end = total_rows.min(start + tiles_per * TILE_ROWS);
+                ranges.push((start, end));
+                start = end;
+            }
+            let mut out_parts: Vec<&mut [f32]> = Vec::with_capacity(ranges.len());
+            let mut sk_parts: Vec<&mut [bool]> = Vec::with_capacity(ranges.len());
+            let mut be_parts: Vec<&mut [bool]> = Vec::with_capacity(ranges.len());
+            let mut out_rest: &mut [f32] = &mut out;
+            let mut sk_rest: &mut [bool] = &mut skipped;
+            let mut be_rest: &mut [bool] = &mut bin_eval;
+            for &(r0, r1) in &ranges {
+                let n = (r1 - r0) * cout;
+                let (head, tail) = std::mem::take(&mut out_rest).split_at_mut(n);
+                out_parts.push(head);
+                out_rest = tail;
+                if opts.collect_trace {
+                    let (head, tail) = std::mem::take(&mut sk_rest).split_at_mut(n);
+                    sk_parts.push(head);
+                    sk_rest = tail;
+                    let (head, tail) = std::mem::take(&mut be_rest).split_at_mut(n);
+                    be_parts.push(head);
+                    be_rest = tail;
+                }
+            }
+            let mut trace_parts: Vec<Option<(&mut [bool], &mut [bool])>> = if opts.collect_trace
+            {
+                sk_parts
+                    .into_iter()
+                    .zip(be_parts)
+                    .map(|(s, b)| Some((s, b)))
+                    .collect()
+            } else {
+                ranges.iter().map(|_| None).collect()
+            };
+
+            let stats: Vec<(Vec<PredStats>, Vec<OpsStats>)> = std::thread::scope(|s| {
+                let ctx = &ctx;
+                let handles: Vec<_> = ranges
+                    .iter()
+                    .zip(out_parts)
+                    .zip(trace_parts.drain(..))
+                    .map(|((&(r0, r1), out_part), trace_part)| {
+                        s.spawn(move || process_row_range(ctx, r0, r1, out_part, trace_part))
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("tile worker panicked"))
+                    .collect()
+            });
+            for (p, o) in stats {
+                for s in 0..b {
+                    pred[s].add(&p[s]);
+                    ops[s].add(&o[s]);
+                }
+            }
+        }
     }
-    out
+
+    // scatter the global buffers back into per-sample tensors/traces
+    for s in 0..b {
+        let span = s * rows * cout..(s + 1) * rows * cout;
+        if opts.collect_trace {
+            traces[s].push(LayerTrace {
+                node: node_idx,
+                rows,
+                cout,
+                skipped: skipped[span.clone()].to_vec(),
+                bin_eval: bin_eval[span.clone()].to_vec(),
+            });
+        }
+        let mut t = Tensor::new(geom.oh, geom.ow, cout);
+        t.data.copy_from_slice(&out[span]);
+        outs[s].push(t);
+    }
 }
 
-/// Process rows `row0..row1` tile by tile. `out` and the optional trace
-/// slices cover exactly those rows; returned stats are this range's share.
+/// Process global rows `row0..row1` tile by tile. `out` and the optional
+/// trace slices cover exactly those rows; returned stats are this range's
+/// per-sample share (indexed by sample, length = batch size).
 fn process_row_range(
     ctx: &TiledCtx,
     row0: usize,
     row1: usize,
     out: &mut [f32],
     trace: Option<(&mut [bool], &mut [bool])>,
-) -> (PredStats, OpsStats) {
-    let mut pred = PredStats::default();
-    let mut ops = OpsStats::default();
+) -> (Vec<PredStats>, Vec<OpsStats>) {
+    let b = ctx.qts.len();
+    let mut pred = vec![PredStats::default(); b];
+    let mut ops = vec![OpsStats::default(); b];
     let cout = ctx.cout;
     let k = ctx.k;
     let (mut tr_skip, mut tr_bin) = match trace {
-        Some((s, b)) => (Some(s), Some(b)),
+        Some((sk, be)) => (Some(sk), Some(be)),
         None => (None, None),
     };
 
-    let mut pg = PatchGather::new(ctx.qt);
+    let mut pgs: Vec<PatchGather> = ctx.qts.iter().map(PatchGather::new).collect();
     let mut tile = PatchTile::new(ctx.node.k_len());
+    let mut tile_sample = [0usize; TILE_ROWS]; // sample of each tile row
     let mut dots = vec![0i32; TILE_ROWS * cout];
     let mut ri_cache = vec![0.0f32; cout]; // current row's proxy ReLU inputs
     let mut skip = vec![false; cout];
@@ -327,9 +446,12 @@ fn process_row_range(
     while t0 < row1 {
         let trows = TILE_ROWS.min(row1 - t0);
 
-        // ---- phase 1: gather a tile of im2col patches -------------------
+        // ---- phase 1: gather a tile of im2col patches (cross-sample) ----
         for r in 0..trows {
-            let row = t0 + r;
+            let g = t0 + r;
+            let (s, row) = (g / ctx.rows, g % ctx.rows);
+            tile_sample[r] = s;
+            let pg = &mut pgs[s];
             if ctx.is_conv {
                 let (oy, ox) = (row / ctx.geom.ow, row % ctx.geom.ow);
                 pg.gather(ctx.geom, ctx.kh, ctx.kw, ctx.stride, oy, ox);
@@ -337,10 +459,10 @@ fn process_row_range(
                 pg.gather_fc(row);
             }
             tile.set_row(r, &pg.patch, &pg.packed);
-            ops.macs_total += k * cout as u64;
+            ops[s].macs_total += k * cout as u64;
             if ctx.is_relu_layer {
-                ops.relu_macs += k * cout as u64;
-                pred.relu_outputs += cout as u64;
+                ops[s].relu_macs += k * cout as u64;
+                pred[s].relu_outputs += cout as u64;
             }
         }
 
@@ -359,11 +481,12 @@ fn process_row_range(
                     f0 += NR;
                 }
                 for r in 0..trows {
-                    let row = t0 + r;
-                    let out_row = &mut out[(row - row0) * cout..(row - row0 + 1) * cout];
+                    let g = t0 + r;
+                    let (s, row) = (tile_sample[r], g % ctx.rows);
+                    let out_row = &mut out[(g - row0) * cout..(g - row0 + 1) * cout];
                     for (f, o) in out_row.iter_mut().enumerate() {
                         let d = dots[r * cout + f];
-                        account_eval(ctx, d, row, f, false, o, &mut pred, &mut ops);
+                        account_eval(ctx, d, s, row, f, false, o, &mut pred[s], &mut ops[s]);
                     }
                 }
             }
@@ -385,15 +508,16 @@ fn process_row_range(
                 }
 
                 for r in 0..trows {
-                    let row = t0 + r;
-                    let local = (row - row0) * cout;
+                    let g = t0 + r;
+                    let (s, row) = (tile_sample[r], g % ctx.rows);
+                    let local = (g - row0) * cout;
                     let out_row = &mut out[local..local + cout];
 
                     if use_clusters {
                         for &p in &proxies {
                             let ri = account_eval(
-                                ctx, dots[r * cout + p], row, p, false, &mut out_row[p],
-                                &mut pred, &mut ops,
+                                ctx, dots[r * cout + p], s, row, p, false, &mut out_row[p],
+                                &mut pred[s], &mut ops[s],
                             );
                             ri_cache[p] = ri;
                         }
@@ -413,8 +537,8 @@ fn process_row_range(
                                     let sk = ap
                                         && proxy_zero
                                         && binary_says_skip(
-                                            ctx, lp, mp, &tile, r, local, row, f,
-                                            &mut tr_bin, &mut ops,
+                                            ctx, lp, mp, &tile, r, local, s, row, f,
+                                            &mut tr_bin, &mut ops[s],
                                         );
                                     (sk, ap)
                                 } else {
@@ -435,8 +559,8 @@ fn process_row_range(
                             let ap = mp.cfg.use_binary && lp.enabled[f];
                             let sk = ap
                                 && binary_says_skip(
-                                    ctx, lp, mp, &tile, r, local, row, f, &mut tr_bin,
-                                    &mut ops,
+                                    ctx, lp, mp, &tile, r, local, s, row, f, &mut tr_bin,
+                                    &mut ops[s],
                                 );
                             skip[f] = sk;
                             applied[f] = ap;
@@ -451,8 +575,8 @@ fn process_row_range(
                         gemm::dot_block_indexed(tile.patch(r), ctx.pf, chunk, &mut blk);
                         for (j, &f) in chunk.iter().enumerate() {
                             account_eval(
-                                ctx, blk[j], row, f, applied[f], &mut out_row[f], &mut pred,
-                                &mut ops,
+                                ctx, blk[j], s, row, f, applied[f], &mut out_row[f],
+                                &mut pred[s], &mut ops[s],
                             );
                         }
                     }
@@ -463,8 +587,8 @@ fn process_row_range(
                             for &f in &cl[1..] {
                                 if skip[f] {
                                     account_skip(
-                                        ctx, tile.patch(r), local, row, f, &mut out_row[f],
-                                        tr_skip.as_deref_mut(), &mut pred, &mut ops,
+                                        ctx, tile.patch(r), local, s, row, f, &mut out_row[f],
+                                        tr_skip.as_deref_mut(), &mut pred[s], &mut ops[s],
                                     );
                                 }
                             }
@@ -473,8 +597,8 @@ fn process_row_range(
                         for f in 0..cout {
                             if skip[f] {
                                 account_skip(
-                                    ctx, tile.patch(r), local, row, f, &mut out_row[f],
-                                    tr_skip.as_deref_mut(), &mut pred, &mut ops,
+                                    ctx, tile.patch(r), local, s, row, f, &mut out_row[f],
+                                    tr_skip.as_deref_mut(), &mut pred[s], &mut ops[s],
                                 );
                             }
                         }
@@ -503,6 +627,7 @@ fn binary_says_skip(
     tile: &PatchTile,
     r: usize,
     local: usize,
+    s: usize,
     row: usize,
     f: usize,
     tr_bin: &mut Option<&mut [bool]>,
@@ -514,7 +639,7 @@ fn binary_says_skip(
         be[local + f] = true;
     }
     let est = lp.m[f] * p_bin as f32 + lp.b[f];
-    let est_ri = bn_affine(est, ctx.bn, f) + ctx.res_at(row, f);
+    let est_ri = bn_affine(est, ctx.bn, f) + ctx.res_at(s, row, f);
     est_ri < -margin_of(lp, ctx.bn, f, mp.cfg.margin_sigmas)
 }
 
@@ -526,6 +651,7 @@ fn binary_says_skip(
 fn account_eval(
     ctx: &TiledCtx,
     d: i32,
+    s: usize,
     row: usize,
     f: usize,
     applied: bool,
@@ -533,7 +659,7 @@ fn account_eval(
     pred: &mut PredStats,
     ops: &mut OpsStats,
 ) -> f32 {
-    let ri = relu_input(d, ctx.dq, ctx.bn, f, ctx.res_at(row, f));
+    let ri = relu_input(d, ctx.dq, ctx.bn, f, ctx.res_at(s, row, f));
     *out_val = if ctx.node_relu { ri.max(0.0) } else { ri };
     ops.macs_done += ctx.k;
     ops.weight_bytes_fetched += ctx.k;
@@ -563,6 +689,7 @@ fn account_skip(
     ctx: &TiledCtx,
     patch: &[i8],
     local: usize,
+    s: usize,
     row: usize,
     f: usize,
     out_val: &mut f32,
@@ -572,13 +699,13 @@ fn account_skip(
 ) {
     *out_val = 0.0;
     ops.weight_bytes_saved += ctx.k;
-    if let Some(s) = tr_skip {
-        s[local + f] = true;
+    if let Some(sk) = tr_skip {
+        sk[local + f] = true;
     }
     if ctx.oracle {
         // ground truth for Fig 12 / accuracy accounting
         let d = dot_i8(patch, ctx.pf.filter(f));
-        let ri = relu_input(d, ctx.dq, ctx.bn, f, ctx.res_at(row, f));
+        let ri = relu_input(d, ctx.dq, ctx.bn, f, ctx.res_at(s, row, f));
         if ctx.is_relu_layer {
             if ri <= 0.0 {
                 pred.correct_zero += 1;

@@ -8,6 +8,10 @@
 //!   producing logits, prediction-outcome stats (Fig 12), operation
 //!   accounting (Fig 1/6/9/13) and an optional skip trace for the
 //!   cycle-level simulator.
+//! * [`exec::run_batch`] — the batch-native form: advances B samples
+//!   layer-by-layer so GEMM row tiles fill across request boundaries
+//!   (the serving coordinator's micro-batch path); bit-identical to
+//!   per-sample execution.
 //! * [`MorRun`] — dataset-level evaluation driver.
 
 pub mod exec;

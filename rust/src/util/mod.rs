@@ -34,19 +34,28 @@ pub fn geomean(xs: &[f64]) -> f64 {
 }
 
 /// p-th percentile with linear interpolation (p in [0,100]).
+///
+/// Clones and sorts the input; when taking several percentiles of the same
+/// data, sort once yourself and use [`percentile_sorted`].
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    let mut v: Vec<f64> = xs.to_vec();
+    // total_cmp: NaN sorts after +inf instead of panicking mid-report
+    v.sort_by(f64::total_cmp);
+    percentile_sorted(&v, p)
+}
+
+/// p-th percentile of an already-sorted slice (no clone, no re-sort).
+pub fn percentile_sorted(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
-    let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let rank = (p / 100.0) * (xs.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
     if lo == hi {
-        v[lo]
+        xs[lo]
     } else {
-        v[lo] + (v[hi] - v[lo]) * (rank - lo as f64)
+        xs[lo] + (xs[hi] - xs[lo]) * (rank - lo as f64)
     }
 }
 
@@ -84,5 +93,36 @@ mod tests {
     #[test]
     fn mean_empty_is_zero() {
         assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn percentile_single_element() {
+        let xs = [7.5];
+        assert_eq!(percentile(&xs, 0.0), 7.5);
+        assert_eq!(percentile(&xs, 50.0), 7.5);
+        assert_eq!(percentile(&xs, 100.0), 7.5);
+        assert_eq!(percentile_sorted(&xs, 99.0), 7.5);
+    }
+
+    #[test]
+    fn percentile_nan_does_not_panic() {
+        // total_cmp orders NaN after +inf: low percentiles stay finite and
+        // no comparison panics (partial_cmp().unwrap() used to)
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        let p0 = percentile(&xs, 0.0);
+        assert_eq!(p0, 1.0);
+        let p100 = percentile(&xs, 100.0);
+        assert!(p100.is_nan());
+    }
+
+    #[test]
+    fn percentile_sorted_matches_percentile() {
+        let xs = [4.0, 1.0, 3.0, 2.0];
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(f64::total_cmp);
+        for p in [0.0, 25.0, 50.0, 90.0, 100.0] {
+            assert_eq!(percentile(&xs, p), percentile_sorted(&sorted, p));
+        }
+        assert_eq!(percentile_sorted(&[], 50.0), 0.0);
     }
 }

@@ -2,11 +2,17 @@
 //!
 //! The paper's deployment scenario is frame-by-frame, low-latency edge
 //! inference (Section 4: "the input will be processed frame-by-frame ...
-//! to minimize word-to-transcription latency"). The generator produces a
-//! Poisson arrival stream of inference requests over a model's test
-//! split, which the coordinator serves.
+//! to minimize word-to-transcription latency"). The generator produces an
+//! arrival stream of inference requests over a model's test split, which
+//! the coordinator serves. Three open-loop arrival shapes are supported —
+//! Poisson (memoryless), Steady (fixed interval, e.g. a camera's frame
+//! clock) and Bursty (on/off modulated Poisson, the utterance-shaped
+//! traffic the batcher must absorb). Closed-loop issue-on-completion is a
+//! coordinator mode ([`crate::coordinator::ServeOpts::closed_loop`]) —
+//! there the arrival times generated here are ignored.
 
 use crate::util::rng::Rng;
+use anyhow::{bail, Result};
 
 /// One inference request.
 #[derive(Clone, Debug)]
@@ -18,38 +24,92 @@ pub struct Request {
     pub arrival_us: u64,
 }
 
-/// Poisson arrival process over `n_samples` test samples.
+/// Open-loop arrival process shape.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Arrival {
+    /// Poisson process: exponential inter-arrival gaps at `rate_per_s`.
+    Poisson { rate_per_s: f64 },
+    /// Fixed-interval arrivals at `rate_per_s` (frame-clock traffic).
+    Steady { rate_per_s: f64 },
+    /// On/off modulated Poisson (2-state MMPP): exponential ON/OFF dwell
+    /// times; arrivals only during ON periods, at `rate_on_per_s`. The
+    /// long-run average rate is `rate_on_per_s * on / (on + off)`.
+    Bursty {
+        rate_on_per_s: f64,
+        mean_on_s: f64,
+        mean_off_s: f64,
+    },
+}
+
+impl Arrival {
+    /// Build an [`Arrival`] from a CLI name and a target *average* rate.
+    /// `bursty` uses a 25% duty cycle (0.1 s ON / 0.3 s OFF), so its ON
+    /// rate is 4x the average. `closed` is not an open-loop shape — the
+    /// coordinator handles it — but maps to Poisson so the request list
+    /// (sample indices, count) is still generated.
+    pub fn from_cli(kind: &str, rate_per_s: f64) -> Result<Arrival> {
+        Ok(match kind {
+            "poisson" | "closed" => Arrival::Poisson { rate_per_s },
+            "steady" => Arrival::Steady { rate_per_s },
+            "bursty" => Arrival::Bursty {
+                rate_on_per_s: rate_per_s * 4.0,
+                mean_on_s: 0.1,
+                mean_off_s: 0.3,
+            },
+            other => bail!("--arrival must be poisson|steady|bursty|closed, got '{other}'"),
+        })
+    }
+}
+
+/// Arrival process over `n_samples` test samples.
 pub struct RequestStream {
     rng: Rng,
-    rate_per_s: f64,
+    arrival: Arrival,
     n_samples: usize,
     next_id: u64,
     clock_us: f64,
+    /// Bursty state: currently in an ON period, and when it flips.
+    burst_on: bool,
+    burst_end_us: f64,
 }
 
 impl RequestStream {
+    /// Poisson stream (the historical default shape).
     pub fn new(rate_per_s: f64, n_samples: usize, seed: u64) -> RequestStream {
-        assert!(rate_per_s > 0.0 && n_samples > 0);
+        assert!(rate_per_s > 0.0);
+        Self::with_arrival(Arrival::Poisson { rate_per_s }, n_samples, seed)
+    }
+
+    pub fn with_arrival(arrival: Arrival, n_samples: usize, seed: u64) -> RequestStream {
+        assert!(n_samples > 0);
+        match arrival {
+            Arrival::Poisson { rate_per_s } | Arrival::Steady { rate_per_s } => {
+                assert!(rate_per_s > 0.0)
+            }
+            Arrival::Bursty {
+                rate_on_per_s,
+                mean_on_s,
+                mean_off_s,
+            } => assert!(rate_on_per_s > 0.0 && mean_on_s > 0.0 && mean_off_s >= 0.0),
+        }
         RequestStream {
             rng: Rng::new(seed),
-            rate_per_s,
+            arrival,
             n_samples,
             next_id: 0,
             clock_us: 0.0,
+            burst_on: false,
+            burst_end_us: 0.0,
         }
     }
 
     /// Generate requests arriving within the next `duration_s` seconds.
+    /// The stream keeps its clock (and burst state) across calls, so ids
+    /// stay unique and arrivals stay monotonic.
     pub fn generate(&mut self, duration_s: f64) -> Vec<Request> {
         let end_us = self.clock_us + duration_s * 1e6;
         let mut out = Vec::new();
-        loop {
-            let gap_s = self.rng.exponential(self.rate_per_s);
-            let t = self.clock_us + gap_s * 1e6;
-            if t >= end_us {
-                self.clock_us = end_us;
-                break;
-            }
+        while let Some(t) = self.next_arrival(end_us) {
             self.clock_us = t;
             out.push(Request {
                 id: self.next_id,
@@ -58,7 +118,62 @@ impl RequestStream {
             });
             self.next_id += 1;
         }
+        self.clock_us = end_us;
         out
+    }
+
+    /// Next arrival strictly before `end_us`, or None (window exhausted).
+    fn next_arrival(&mut self, end_us: f64) -> Option<f64> {
+        match self.arrival {
+            Arrival::Poisson { rate_per_s } => {
+                let t = self.clock_us + self.rng.exponential(rate_per_s) * 1e6;
+                (t < end_us).then_some(t)
+            }
+            Arrival::Steady { rate_per_s } => {
+                let t = self.clock_us + 1e6 / rate_per_s;
+                (t < end_us).then_some(t)
+            }
+            Arrival::Bursty {
+                rate_on_per_s,
+                mean_on_s,
+                mean_off_s,
+            } => {
+                let mut now = self.clock_us;
+                loop {
+                    if now >= self.burst_end_us {
+                        // dwell expired: flip state, draw the next dwell
+                        self.burst_on = !self.burst_on;
+                        let mean = if self.burst_on { mean_on_s } else { mean_off_s };
+                        self.burst_end_us = now + self.rng.exponential(1.0 / mean.max(1e-9)) * 1e6;
+                    }
+                    if !self.burst_on {
+                        // silent period: jump to its end
+                        now = self.burst_end_us;
+                        if now >= end_us {
+                            return None;
+                        }
+                        continue;
+                    }
+                    let t = now + self.rng.exponential(rate_on_per_s) * 1e6;
+                    if t >= self.burst_end_us {
+                        // the gap crossed into the OFF state: advance and
+                        // let the state machine flip. Checked *before* the
+                        // window bound — an overshooting gap must not end
+                        // the window while later bursts still fit in it
+                        // (the dwell state persists across windows).
+                        now = self.burst_end_us;
+                        if now >= end_us {
+                            return None;
+                        }
+                        continue;
+                    }
+                    if t >= end_us {
+                        return None;
+                    }
+                    return Some(t);
+                }
+            }
+        }
     }
 }
 
@@ -96,5 +211,74 @@ mod tests {
         let b = s.generate(0.5);
         let max_a = a.iter().map(|r| r.id).max().unwrap_or(0);
         assert!(b.iter().all(|r| r.id > max_a));
+    }
+
+    #[test]
+    fn steady_is_exactly_periodic() {
+        let mut s = RequestStream::with_arrival(Arrival::Steady { rate_per_s: 100.0 }, 8, 4);
+        let reqs = s.generate(1.0);
+        // arrivals at 10ms, 20ms, ..., 90ms... strictly before 1s: 99
+        assert_eq!(reqs.len(), 99);
+        for w in reqs.windows(2) {
+            let gap = w[1].arrival_us - w[0].arrival_us;
+            assert!((9_999..=10_001).contains(&gap), "gap {gap}");
+        }
+        // phase survives across generate() windows
+        let next = s.generate(0.05);
+        assert!(!next.is_empty());
+        assert!(next[0].arrival_us >= 1_000_000);
+    }
+
+    #[test]
+    fn bursty_alternates_silence_and_bursts() {
+        let arr = Arrival::Bursty {
+            rate_on_per_s: 2000.0,
+            mean_on_s: 0.05,
+            mean_off_s: 0.15,
+        };
+        let mut s = RequestStream::with_arrival(arr, 8, 5);
+        let reqs = s.generate(10.0);
+        // average rate ≈ 2000 * 0.25 = 500/s → ~5000 over 10 s (loose band:
+        // dwell-time variance is high)
+        assert!(
+            (1500..9000).contains(&reqs.len()),
+            "got {} requests",
+            reqs.len()
+        );
+        for w in reqs.windows(2) {
+            assert!(w[0].arrival_us <= w[1].arrival_us);
+        }
+        // silence gaps must show up (OFF periods ≫ ON inter-arrival gaps)
+        let max_gap = reqs
+            .windows(2)
+            .map(|w| w[1].arrival_us - w[0].arrival_us)
+            .max()
+            .unwrap();
+        assert!(max_gap > 20_000, "no silent period found (max gap {max_gap} µs)");
+        // bursts must keep coming for the whole window: an overshooting
+        // ON-gap crossing a dwell boundary must not truncate the stream
+        let last = reqs.last().unwrap().arrival_us;
+        assert!(last > 8_000_000, "stream truncated at {last} µs of a 10 s window");
+    }
+
+    #[test]
+    fn arrival_from_cli_names() {
+        assert!(matches!(
+            Arrival::from_cli("poisson", 10.0),
+            Ok(Arrival::Poisson { .. })
+        ));
+        assert!(matches!(
+            Arrival::from_cli("steady", 10.0),
+            Ok(Arrival::Steady { .. })
+        ));
+        assert!(matches!(
+            Arrival::from_cli("bursty", 10.0),
+            Ok(Arrival::Bursty { .. })
+        ));
+        assert!(matches!(
+            Arrival::from_cli("closed", 10.0),
+            Ok(Arrival::Poisson { .. })
+        ));
+        assert!(Arrival::from_cli("nope", 10.0).is_err());
     }
 }

@@ -1,0 +1,139 @@
+//! Batch-equivalence property suite: [`mor::predictor::exec::run_batch`]
+//! must be **bit-identical** to mapping `run_sample` over the batch —
+//! logits, `OpsStats`, `PredStats` and skip traces, per sample — for
+//! batch sizes 1..16 (ragged final tiles included), every policy toggle,
+//! and any thread count. This is the correctness contract that lets the
+//! serving coordinator coalesce cross-request micro-batches without
+//! changing a single served answer.
+//!
+//! Runs fully offline — models come from `mor::model::synth`, no
+//! `make artifacts` needed.
+
+use mor::config::PredictorConfig;
+use mor::model::synth;
+use mor::predictor::{exec::run_batch, exec::run_sample, EngineSel, MorPolicy, RunOpts, RunResult};
+use mor::util::prop::property;
+use mor::util::rng::Rng;
+
+fn rand_input(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.uniform(-1.0, 1.0) as f32).collect()
+}
+
+fn diff(want: &RunResult, got: &RunResult) -> Option<String> {
+    if want.logits != got.logits {
+        return Some(format!(
+            "logits differ: want {:?} got {:?}",
+            want.logits, got.logits
+        ));
+    }
+    if want.pred != got.pred {
+        return Some(format!("pred stats differ: want {:?} got {:?}", want.pred, got.pred));
+    }
+    if want.ops != got.ops {
+        return Some(format!("ops stats differ: want {:?} got {:?}", want.ops, got.ops));
+    }
+    if want.traces != got.traces {
+        return Some("skip traces differ".to_string());
+    }
+    None
+}
+
+#[test]
+fn run_batch_bit_identical_to_per_sample_run() {
+    property("run_batch == per-sample run_sample", 30, |g| {
+        let model = synth::random_model(g.rng());
+        let params = synth::predictor_for(&model, g.seed);
+        let (h, w, c) = model.input_shape;
+        let b = g.usize(1, 16);
+        let xs: Vec<Vec<f32>> = (0..b).map(|_| rand_input(g.rng(), h * w * c)).collect();
+        let inputs: Vec<&[f32]> = xs.iter().map(|x| x.as_slice()).collect();
+        let cfg = PredictorConfig {
+            threshold: *g.pick(&[0.0f32, 0.5, 0.9]),
+            use_clusters: g.bool(),
+            use_binary: g.bool(),
+            margin_sigmas: *g.pick(&[0.0f32, 1.0]),
+            ..Default::default()
+        };
+        let pol = MorPolicy::new(&model, &params, cfg);
+        let policy = g.bool().then_some(&pol);
+        let opts = RunOpts {
+            oracle: g.bool(),
+            collect_trace: true,
+            threads: *g.pick(&[1usize, 3]),
+            engine: EngineSel::Tiled,
+        };
+        let got = run_batch(&model, policy, &inputs, opts);
+        if got.len() != b {
+            return Err(format!("expected {b} results, got {}", got.len()));
+        }
+        for (s, x) in inputs.iter().enumerate() {
+            let want = run_sample(&model, policy, x, opts);
+            if let Some(msg) = diff(&want, &got[s]) {
+                return Err(format!("sample {s}/{b} threads={}: {msg}", opts.threads));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn run_batch_every_size_1_to_16() {
+    // The acceptance sweep: one fixed model, every batch size 1..=16 —
+    // covers tiles that end exactly on a sample boundary, tiles that
+    // straddle several samples, and the ragged final tile.
+    let mut rng = Rng::new(0xBA7C);
+    let model = synth::tiny_serving_model(31);
+    let params = synth::predictor_for(&model, 32);
+    let (h, w, c) = model.input_shape;
+    let pol = MorPolicy::new(
+        &model,
+        &params,
+        PredictorConfig { threshold: 0.5, ..Default::default() },
+    );
+    let opts = RunOpts { oracle: true, collect_trace: true, ..Default::default() };
+    for b in 1..=16usize {
+        let xs: Vec<Vec<f32>> = (0..b).map(|_| rand_input(&mut rng, h * w * c)).collect();
+        let inputs: Vec<&[f32]> = xs.iter().map(|x| x.as_slice()).collect();
+        let got = run_batch(&model, Some(&pol), &inputs, opts);
+        assert_eq!(got.len(), b);
+        for (s, x) in inputs.iter().enumerate() {
+            let want = run_sample(&model, Some(&pol), x, opts);
+            assert!(
+                diff(&want, &got[s]).is_none(),
+                "b={b} sample {s}: {}",
+                diff(&want, &got[s]).unwrap()
+            );
+        }
+    }
+}
+
+#[test]
+fn run_batch_scalar_ref_engine_matches_too() {
+    // The scalar reference engine takes the per-sample path inside
+    // run_batch; results must still line up one-to-one.
+    let mut rng = Rng::new(0x5CA1);
+    let model = synth::random_model(&mut rng);
+    let params = synth::predictor_for(&model, 77);
+    let (h, w, c) = model.input_shape;
+    let pol = MorPolicy::new(&model, &params, PredictorConfig::default());
+    let xs: Vec<Vec<f32>> = (0..5).map(|_| rand_input(&mut rng, h * w * c)).collect();
+    let inputs: Vec<&[f32]> = xs.iter().map(|x| x.as_slice()).collect();
+    let opts = RunOpts {
+        oracle: true,
+        collect_trace: true,
+        threads: 1,
+        engine: EngineSel::ScalarRef,
+    };
+    let got = run_batch(&model, Some(&pol), &inputs, opts);
+    for (s, x) in inputs.iter().enumerate() {
+        let want = run_sample(&model, Some(&pol), x, opts);
+        assert!(diff(&want, &got[s]).is_none(), "sample {s}");
+    }
+}
+
+#[test]
+fn run_batch_empty_input_is_empty() {
+    let model = synth::tiny_serving_model(1);
+    let out = run_batch(&model, None, &[], RunOpts::default());
+    assert!(out.is_empty());
+}

@@ -276,6 +276,8 @@ fn pjrt_runtime_matches_engine() {
 
 #[test]
 fn serving_coordinator_end_to_end() {
+    // Offline (synthetic-artifact) coverage lives in
+    // rust/tests/serving_pipeline.rs; this exercises the real tds bundle.
     let Some(a) = load("tds") else { return };
     let pol = MorPolicy::new(&a.model, &a.predictor, PredictorConfig::default());
     let mut stream = mor::workload::RequestStream::new(400.0, a.data.n_test(), 5);
@@ -286,14 +288,13 @@ fn serving_coordinator_end_to_end() {
         &a,
         Some(pol),
         mor::coordinator::Backend::Engine,
-        4,
         requests,
         &artifacts_dir(),
-        1.0,
-        1,
+        mor::coordinator::ServeOpts { workers: 4, ..Default::default() },
     )
     .expect("serve");
     assert_eq!(rep.completed, n, "requests dropped");
+    assert_eq!(rep.dropped, 0);
     assert!(rep.accuracy > 0.5);
     assert!(rep.p99_ms < 5_000.0, "p99 {} ms", rep.p99_ms);
 }

@@ -1,0 +1,179 @@
+//! End-to-end serving smoke tests over **synthetic** artifacts — unlike
+//! `integration.rs`, these never skip: `mor::model::synth::artifacts_for`
+//! builds a full bundle in memory, so CI exercises the coordinator
+//! (queue, batcher, drop accounting, closed loop) on every run.
+
+use mor::config::PredictorConfig;
+use mor::coordinator::{serve, Backend, ServeOpts};
+use mor::model::synth;
+use mor::model::Artifacts;
+use mor::predictor::MorPolicy;
+use mor::workload::{Arrival, RequestStream};
+
+fn synth_arts() -> Artifacts {
+    synth::artifacts_for(synth::tiny_serving_model(9), 10, 32, 4)
+}
+
+fn policy(arts: &Artifacts) -> MorPolicy {
+    MorPolicy::new(
+        &arts.model,
+        &arts.predictor,
+        PredictorConfig { threshold: 0.5, ..Default::default() },
+    )
+}
+
+/// A compressed Poisson trace: ~`n`-ish requests whose arrivals replay in
+/// a few tens of milliseconds (time_scale applied at serve time).
+fn trace(arts: &Artifacts, seed: u64) -> Vec<mor::workload::Request> {
+    let mut s = RequestStream::new(800.0, arts.data.n_test(), seed);
+    s.generate(0.25)
+}
+
+#[test]
+fn serve_smoke_unbatched() {
+    let arts = synth_arts();
+    let requests = trace(&arts, 1);
+    let n = requests.len();
+    assert!(n > 50, "trace too short: {n}");
+    let rep = serve(
+        &arts,
+        Some(policy(&arts)),
+        Backend::Engine,
+        requests,
+        "unused",
+        ServeOpts { workers: 2, time_scale: 0.1, ..Default::default() },
+    )
+    .expect("serve");
+    assert_eq!(rep.completed, n, "requests lost without batching");
+    assert_eq!(rep.dropped, 0);
+    assert!(rep.first_error.is_none());
+    assert!((rep.batch_occupancy - 1.0).abs() < 1e-9, "max_batch=1 must not batch");
+    assert!(rep.busy_s > 0.0 && rep.busy_s <= rep.duration_s + 1e-9);
+    assert!(rep.throughput_rps > 0.0);
+}
+
+#[test]
+fn serve_smoke_batched_matches_unbatched_answers() {
+    let arts = synth_arts();
+    let requests = trace(&arts, 2);
+    let n = requests.len();
+    let run = |max_batch: usize| {
+        serve(
+            &arts,
+            Some(policy(&arts)),
+            Backend::Engine,
+            requests.clone(),
+            "unused",
+            ServeOpts {
+                workers: 2,
+                time_scale: 0.1,
+                max_batch,
+                batch_wait_us: 500,
+                ..Default::default()
+            },
+        )
+        .expect("serve")
+    };
+    let unbatched = run(1);
+    let batched = run(8);
+    assert_eq!(unbatched.completed, n);
+    assert_eq!(batched.completed, n, "requests lost with batching");
+    assert_eq!(batched.dropped, 0);
+    // run_batch is bit-exact with run_sample, so per-request correctness
+    // — and therefore accuracy — must be identical batched or not
+    assert_eq!(unbatched.accuracy, batched.accuracy);
+    assert!(batched.batch_occupancy >= 1.0);
+}
+
+#[test]
+fn serve_closed_loop_completes_all() {
+    let arts = synth_arts();
+    let requests = trace(&arts, 3);
+    let n = requests.len();
+    let rep = serve(
+        &arts,
+        Some(policy(&arts)),
+        Backend::Engine,
+        requests,
+        "unused",
+        ServeOpts {
+            workers: 2,
+            max_batch: 4,
+            batch_wait_us: 200,
+            closed_loop: true,
+            concurrency: 8,
+            ..Default::default()
+        },
+    )
+    .expect("serve");
+    assert_eq!(rep.completed, n, "closed loop lost requests");
+    assert_eq!(rep.dropped, 0);
+    // with 8 outstanding and batches of up to 4, real coalescing happens
+    assert!(rep.batch_occupancy >= 1.0);
+}
+
+#[test]
+fn serve_bursty_arrivals_complete() {
+    let arts = synth_arts();
+    let mut s = RequestStream::with_arrival(
+        Arrival::Bursty { rate_on_per_s: 3000.0, mean_on_s: 0.05, mean_off_s: 0.1 },
+        arts.data.n_test(),
+        4,
+    );
+    let requests = s.generate(0.5);
+    let n = requests.len();
+    assert!(n > 20, "burst trace too short: {n}");
+    let rep = serve(
+        &arts,
+        None, // dense baseline: accuracy vs self-consistent labels is 1.0
+        Backend::Engine,
+        requests,
+        "unused",
+        ServeOpts {
+            workers: 2,
+            time_scale: 0.1,
+            max_batch: 8,
+            batch_wait_us: 500,
+            ..Default::default()
+        },
+    )
+    .expect("serve");
+    assert_eq!(rep.completed, n);
+    assert_eq!(rep.dropped, 0);
+    assert_eq!(rep.accuracy, 1.0, "dense forward must reproduce its own labels");
+}
+
+#[test]
+fn serve_dense_batched_accuracy_is_exact() {
+    // Batched dense serving over self-consistent labels: every answer
+    // must match the per-sample forward that produced the labels.
+    let arts = synth_arts();
+    let requests = trace(&arts, 5);
+    let n = requests.len();
+    let rep = serve(
+        &arts,
+        None,
+        Backend::Engine,
+        requests,
+        "unused",
+        ServeOpts {
+            workers: 1,
+            time_scale: 0.02,
+            max_batch: 16,
+            // generous linger: even with coarse scheduler sleep granularity
+            // stretching the compressed replay, batches must still form
+            batch_wait_us: 5_000,
+            ..Default::default()
+        },
+    )
+    .expect("serve");
+    assert_eq!(rep.completed, n);
+    assert_eq!(rep.accuracy, 1.0);
+    // everything arrives almost at once with a 16-deep batcher: real
+    // cross-request tiles must have formed
+    assert!(
+        rep.batch_occupancy > 1.0,
+        "expected coalescing, occupancy {}",
+        rep.batch_occupancy
+    );
+}
