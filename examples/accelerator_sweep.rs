@@ -4,21 +4,18 @@
 use anyhow::Result;
 use mor::config::Config;
 use mor::model::Artifacts;
-use mor::predictor::{exec, MorPolicy, RunOpts};
+use mor::predictor::RunOpts;
+use mor::session::Session;
 use mor::sim::Simulator;
 use mor::util::bench::Table;
 
 fn main() -> Result<()> {
     let dir = std::env::var("MOR_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
     let arts = Artifacts::load(&dir, "cnn10")?;
-    let pol = MorPolicy::new(&arts.model, &arts.predictor, Default::default());
-    let trace = exec::run_sample(
-        &arts.model,
-        Some(&pol),
-        arts.data.test_sample(0),
+    let session = Session::from_artifacts(&arts, Default::default()).with_opts(
         RunOpts { oracle: false, collect_trace: true, ..Default::default() }.parallel(),
-    )
-    .traces;
+    );
+    let trace = session.run_sample(arts.data.test_sample(0)).traces;
 
     let mut t = Table::new(
         "design-space sweep (cnn10): MoR speedup across CU count x DRAM port",
@@ -31,7 +28,7 @@ fn main() -> Result<()> {
             cfg.dram.port_bytes = port;
             let sim = Simulator::new(cfg);
             let b = sim.simulate_sample(&arts.model, None, None);
-            let m = sim.simulate_sample(&arts.model, Some(&pol), Some(&trace));
+            let m = sim.simulate_sample(&arts.model, session.policy(), Some(&trace));
             t.row(&[
                 num_cus.to_string(),
                 port.to_string(),

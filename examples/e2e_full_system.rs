@@ -14,8 +14,9 @@ use anyhow::{ensure, Result};
 use mor::config::{Config, PredictorConfig};
 use mor::coordinator::{serve, Backend, ServeOpts};
 use mor::model::Artifacts;
-use mor::predictor::{argmax, exec, MorPolicy, MorRun, RunOpts};
+use mor::predictor::{argmax, exec, MorRun, RunOpts};
 use mor::runtime::Runtime;
+use mor::session::Session;
 use mor::sim::Simulator;
 use mor::workload::RequestStream;
 
@@ -55,15 +56,14 @@ fn main() -> Result<()> {
     let mut total_saved = 0.0;
     for name in mor::MODELS {
         let a = Artifacts::load(&dir, name)?;
-        let base = MorRun::evaluate(&a, None, 96, RunOpts::default());
         // per-DNN threshold from training data, as in the paper (Sec 3.2.1)
         let thr = mor::predictor::choose_threshold(&a, &PredictorConfig::default(), 3.2, 32);
-        let pol = MorPolicy::new(
-            &a.model,
-            &a.predictor,
+        let sess = Session::from_artifacts(
+            &a,
             PredictorConfig { threshold: thr, ..Default::default() },
         );
-        let s = MorRun::evaluate(&a, Some(&pol), 96, RunOpts::default());
+        let base = MorRun::evaluate(&a, &sess.with_policy(None), 96);
+        let s = MorRun::evaluate(&a, &sess, 96);
         let loss_pp = (base.accuracy - s.accuracy) * 100.0;
         let saved = s.ops.macs_saved_frac() * 100.0;
         total_saved += saved;
@@ -81,16 +81,15 @@ fn main() -> Result<()> {
     let cfg = Config::default();
     let a = Artifacts::load(&dir, "cnn10")?;
     let thr = mor::predictor::choose_threshold(&a, &cfg.predictor, 3.2, 32);
-    let pol = MorPolicy::new(
-        &a.model,
-        &a.predictor,
+    let sess = Session::from_artifacts(
+        &a,
         PredictorConfig { threshold: thr, ..cfg.predictor.clone() },
-    );
+    )
+    .with_opts(RunOpts { oracle: false, collect_trace: true, ..Default::default() });
     let sim = Simulator::new(cfg.clone());
-    let tr = exec::run_sample(&a.model, Some(&pol), a.data.test_sample(0),
-        RunOpts { oracle: false, collect_trace: true, ..Default::default() }).traces;
+    let tr = sess.run_sample(a.data.test_sample(0)).traces;
     let b = sim.simulate_sample(&a.model, None, None);
-    let m = sim.simulate_sample(&a.model, Some(&pol), Some(&tr));
+    let m = sim.simulate_sample(&a.model, sess.policy(), Some(&tr));
     println!(
         "[4] cnn10 accelerator: {} → {} cycles (speedup {:.3}x) | DRAM {} → {} KB",
         b.cycles, m.cycles,
@@ -101,13 +100,13 @@ fn main() -> Result<()> {
 
     // -- stage 5: serving ---------------------------------------------------
     let arts = Artifacts::load(&dir, "tds")?;
-    let policy = MorPolicy::new(&arts.model, &arts.predictor, PredictorConfig::default());
+    let session = Session::from_artifacts(&arts, PredictorConfig::default());
     let mut stream = RequestStream::new(200.0, arts.data.n_test(), 11);
     let requests = stream.generate(2.0);
     let n_req = requests.len();
     let rep = serve(
         &arts,
-        Some(policy),
+        &session,
         Backend::Engine,
         requests,
         &dir,

@@ -2,7 +2,8 @@
 //! extension over the paper's raw rule) x the auto-chosen correlation
 //! threshold, reporting the savings/accuracy frontier per model.
 use mor::config::PredictorConfig;
-use mor::predictor::{choose_threshold, MorPolicy, MorRun, RunOpts};
+use mor::predictor::{choose_threshold, MorRun};
+use mor::session::Session;
 use mor::util::bench::Table;
 
 fn main() -> anyhow::Result<()> {
@@ -13,12 +14,13 @@ fn main() -> anyhow::Result<()> {
     );
     for name in mor::MODELS {
         let a = mor::model::Artifacts::load(&dir, name)?;
-        let base = MorRun::evaluate(&a, None, 256, RunOpts::default());
+        let base = MorRun::evaluate(&a, &Session::build(&a.model).finish(), 256);
         for margin in [0.0f32, 0.25, 0.5, 1.0, 2.0] {
             let cfg0 = PredictorConfig { margin_sigmas: margin, ..Default::default() };
             let thr = choose_threshold(&a, &cfg0, 3.2, 32);
-            let pol = MorPolicy::new(&a.model, &a.predictor, PredictorConfig { threshold: thr, ..cfg0 });
-            let s = MorRun::evaluate(&a, Some(&pol), 256, RunOpts::default());
+            let sess =
+                Session::from_artifacts(&a, PredictorConfig { threshold: thr, ..cfg0 });
+            let s = MorRun::evaluate(&a, &sess, 256);
             t.row(&[
                 name.to_string(),
                 format!("{margin}"),

@@ -3,9 +3,9 @@
 //!
 //!     make artifacts && cargo run --release --example quickstart
 use anyhow::Result;
-use mor::config::PredictorConfig;
 use mor::model::Artifacts;
-use mor::predictor::{MorPolicy, MorRun, RunOpts};
+use mor::predictor::MorRun;
+use mor::session::Session;
 
 fn main() -> Result<()> {
     let dir = std::env::var("MOR_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
@@ -18,10 +18,14 @@ fn main() -> Result<()> {
         arts.meta.int8_accuracy * 100.0
     );
 
-    // baseline (no predictor) vs Mixture-of-Rookies
-    let base = MorRun::evaluate(&arts, None, 64, RunOpts::default());
-    let policy = MorPolicy::new(&arts.model, &arts.predictor, PredictorConfig::default());
-    let mor = MorRun::evaluate(&arts, Some(&policy), 64, RunOpts::default());
+    // baseline (no predictor) vs Mixture-of-Rookies: one Session facade,
+    // the dense variant shares the model and prepacked weights
+    let session = Session::build(&arts.model)
+        .params(&arts.predictor)
+        .predictor("mor")?
+        .finish();
+    let base = MorRun::evaluate(&arts, &session.with_policy(None), 64);
+    let mor = MorRun::evaluate(&arts, &session, 64);
 
     println!("baseline accuracy: {:.1}%", base.accuracy * 100.0);
     println!(

@@ -6,10 +6,9 @@
 //! compares against the no-predictor baseline and shows what micro-
 //! batching does to throughput and tail latency.
 use anyhow::Result;
-use mor::config::PredictorConfig;
 use mor::coordinator::{serve, Backend, ServeOpts};
 use mor::model::Artifacts;
-use mor::predictor::MorPolicy;
+use mor::session::Session;
 use mor::workload::{Arrival, RequestStream};
 
 fn main() -> Result<()> {
@@ -30,11 +29,15 @@ fn main() -> Result<()> {
         opts.workers
     );
 
-    let policy = || MorPolicy::new(&arts.model, &arts.predictor, PredictorConfig::default());
-    let rep = serve(&arts, Some(policy()), Backend::Engine, requests.clone(), &dir, opts)?;
+    let session = Session::build(&arts.model)
+        .params(&arts.predictor)
+        .predictor("mor")?
+        .finish();
+    let rep = serve(&arts, &session, Backend::Engine, requests.clone(), &dir, opts)?;
     rep.print("tds+MoR");
 
-    let rep0 = serve(&arts, None, Backend::Engine, requests.clone(), &dir, opts)?;
+    let dense = session.with_policy(None);
+    let rep0 = serve(&arts, &dense, Backend::Engine, requests.clone(), &dir, opts)?;
     rep0.print("tds baseline");
 
     println!(
@@ -45,7 +48,7 @@ fn main() -> Result<()> {
     // batching: same trace, micro-batches of up to 8 requests share one
     // predict-then-evaluate pass per row tile
     let batched = ServeOpts { max_batch: 8, batch_wait_us: 2_000, ..opts };
-    let repb = serve(&arts, Some(policy()), Backend::Engine, requests, &dir, batched)?;
+    let repb = serve(&arts, &session, Backend::Engine, requests, &dir, batched)?;
     repb.print("tds+MoR, batch<=8");
     println!(
         "batching: occupancy {:.2} | p99 {:.2} → {:.2} ms | {:.0} → {:.0} rps",

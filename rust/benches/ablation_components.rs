@@ -1,46 +1,12 @@
-//! Ablation (DESIGN.md §6): each MoR component in isolation vs the hybrid,
-//! at the default threshold — quantifies the paper's claim that the hybrid
-//! "yields much better results than any of its two components in isolation".
+//! Ablation (DESIGN.md §6): every named skip strategy on equal footing —
+//! quantifies the paper's claim that the hybrid "yields much better
+//! results than any of its two components in isolation", now bracketed
+//! by the `oracle` upper bound and the `none` baseline.
 mod common;
-use mor::config::PredictorConfig;
-use mor::predictor::{MorPolicy, MorRun, RunOpts};
-use mor::util::bench::Table;
 
 fn main() {
     let Some(zoo) = common::load_zoo() else { return };
-    let samples = 32;
-    let mut t = Table::new(
-        "Ablation — components in isolation vs hybrid (default T)",
-        &["model", "variant", "ops_saved_pct", "accuracy_loss_pct", "incorrect_zero_pct"],
-    );
-    for a in &zoo {
-        let base = MorRun::evaluate(a, None, samples, RunOpts::default());
-        for (label, use_bin, use_cl, gate) in [
-            ("binary-only", true, false, 90.0f32),
-            ("clusters-only", false, true, 90.0),
-            ("hybrid", true, true, 90.0),
-            ("hybrid+tight-angle-gate(80)", true, true, 80.0),
-        ] {
-            let pol = MorPolicy::new(
-                &a.model,
-                &a.predictor,
-                PredictorConfig {
-                    use_binary: use_bin,
-                    use_clusters: use_cl,
-                    max_cluster_angle_deg: gate,
-                    ..Default::default()
-                },
-            );
-            let s = MorRun::evaluate(a, Some(&pol), samples, RunOpts::default());
-            t.row(&[
-                a.meta.name.clone(),
-                label.into(),
-                format!("{:.2}", s.ops.macs_saved_frac() * 100.0),
-                format!("{:.2}", (base.accuracy - s.accuracy) * 100.0),
-                format!("{:.2}", s.pred.frac(s.pred.incorrect_zero) * 100.0),
-            ]);
-        }
-    }
+    let t = mor::figures::strategy_ablation(&zoo, 32);
     t.print();
     t.write_csv(&common::out_dir(), "ablation_components").ok();
 }

@@ -1,9 +1,10 @@
 //! Bench for paper Fig 6: binary predictor alone — accuracy loss vs %
 //! operations saved across the correlation threshold sweep (1.0 → 0.6).
 mod common;
+use mor::predictor::strategies::Strategy;
 fn main() {
     let Some(zoo) = common::load_zoo() else { return };
-    let t = mor::figures::threshold_sweep(&zoo, 32, false);
+    let t = mor::figures::threshold_sweep(&zoo, 32, Strategy::Binary);
     t.print();
     t.write_csv(&common::out_dir(), "fig06_threshold_sweep").ok();
 }

@@ -1,9 +1,10 @@
 //! Bench for paper Fig 9: hybrid Mixture-of-Rookies — accuracy loss vs %
 //! computations avoided (must dominate the binary-only Fig 6 curves).
 mod common;
+use mor::predictor::strategies::Strategy;
 fn main() {
     let Some(zoo) = common::load_zoo() else { return };
-    let t = mor::figures::threshold_sweep(&zoo, 32, true);
+    let t = mor::figures::threshold_sweep(&zoo, 32, Strategy::Mor);
     t.print();
     t.write_csv(&common::out_dir(), "fig09_hybrid_sweep").ok();
 }

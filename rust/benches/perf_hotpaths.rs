@@ -9,16 +9,26 @@
 //! complete.
 mod common;
 
+use mor::config::PredictorConfig;
 use mor::engine::dot::dot_i8;
 use mor::engine::gemm::{self, PrepackedFilters, NR};
 use mor::model::synth;
-use mor::predictor::{exec, EngineSel, MorPolicy, RunOpts};
+use mor::predictor::strategies::{Strategy, ZeroPredictor};
+use mor::predictor::{EngineSel, RunOpts};
+use mor::session::Session;
 use mor::util::bench::{bench_with, Timing};
 use mor::util::bits::PackedVec;
 use mor::util::rng::Rng;
 use std::hint::black_box;
 
 const FWD_THREADS: [usize; 4] = [1, 2, 4, 8];
+/// Thread counts for the per-strategy predict-overhead matrix.
+const STRATEGY_THREADS: [usize; 3] = [1, 4, 8];
+/// Strategies compared in `BENCH_predictors.json` (`oracle` is excluded:
+/// its host-side decision cost models no hardware). `none` runs first —
+/// it is the denominator the others' overhead is measured against.
+const STRATEGIES: [Strategy; 4] =
+    [Strategy::None, Strategy::Mor, Strategy::Binary, Strategy::Cluster];
 
 fn main() {
     let mut rng = Rng::new(7);
@@ -95,7 +105,11 @@ fn main() {
     black_box(sink);
 
     // ---- full MoR forward: scalar reference vs tiled at 1/2/4/8 threads -
-    let (model, pol, xs, model_label) = forward_workload();
+    let (arts, xs, thr, model_label) = forward_workload();
+    let session = Session::from_artifacts(
+        &arts,
+        PredictorConfig { threshold: thr, ..Default::default() },
+    );
     println!("\nfull MoR forward on {model_label}:");
     let scalar_opts = RunOpts {
         oracle: false,
@@ -103,25 +117,27 @@ fn main() {
         threads: 1,
         engine: EngineSel::ScalarRef,
     };
+    let scalar_sess = session.with_opts(scalar_opts);
     let t_scalar = bench_with(
         &format!("{model_label} MoR fwd, per-neuron baseline"),
         1,
         0.5,
         &mut || {
-            black_box(exec::run_sample(&model, Some(&pol), &xs, scalar_opts));
+            black_box(scalar_sess.run_sample(&xs));
         },
     );
     t_scalar.report();
 
     let mut tiled: Vec<(usize, Timing)> = Vec::new();
     for threads in FWD_THREADS {
-        let opts = RunOpts { threads, engine: EngineSel::Tiled, ..scalar_opts };
+        let sess =
+            session.with_opts(RunOpts { threads, engine: EngineSel::Tiled, ..scalar_opts });
         let t = bench_with(
             &format!("{model_label} MoR fwd, tiled GEMM, {threads} thread(s)"),
             1,
             0.5,
             &mut || {
-                black_box(exec::run_sample(&model, Some(&pol), &xs, opts));
+                black_box(sess.run_sample(&xs));
             },
         );
         t.report();
@@ -178,27 +194,111 @@ fn main() {
         Ok(()) => println!("\nwrote {out_path}"),
         Err(e) => eprintln!("\nfailed to write {out_path}: {e}"),
     }
+
+    strategy_overhead_bench(&arts, &xs, thr, &model_label);
 }
 
 /// The forward-pass workload: real cnn10 artifacts when available,
-/// otherwise a synthetic cnn10-scale stack with a synthetic policy.
-fn forward_workload() -> (mor::model::Model, MorPolicy, Vec<f32>, String) {
+/// otherwise a synthetic cnn10-scale bundle (one throwaway data sample —
+/// the bench input is generated separately below). The threshold keeps
+/// each workload's historical BENCH series comparable: the default T
+/// on real artifacts, 0.5 on the synthetic policy (whose correlations
+/// are uniform in [0, 1)).
+fn forward_workload() -> (mor::model::Artifacts, Vec<f32>, f32, String) {
     if let Some(zoo) = common::load_zoo() {
         if let Some(a) = zoo.into_iter().find(|a| a.meta.name == "cnn10") {
-            let pol = MorPolicy::new(&a.model, &a.predictor, Default::default());
             let xs = a.data.test_sample(0).to_vec();
-            return (a.model, pol, xs, "cnn10".to_string());
+            let thr = PredictorConfig::default().threshold;
+            return (a, xs, thr, "cnn10".to_string());
         }
     }
-    let model = synth::cnn10_like(21);
-    let params = synth::predictor_for(&model, 22);
-    let pol = MorPolicy::new(
-        &model,
-        &params,
-        mor::config::PredictorConfig { threshold: 0.5, ..Default::default() },
-    );
-    let (h, w, c) = model.input_shape;
+    let arts = synth::artifacts_for(synth::cnn10_like(21), 22, 1, 1);
+    let (h, w, c) = arts.model.input_shape;
     let mut rng = Rng::new(23);
     let xs: Vec<f32> = (0..h * w * c).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
-    (model, pol, xs, "cnn10-synth".to_string())
+    (arts, xs, 0.5, "cnn10-synth".to_string())
+}
+
+/// §Strategies: predict-phase cost of each named strategy relative to
+/// the dense `none` baseline, at 1/4/8 row-tile threads — the
+/// machine-readable trajectory of "what does the skip decision cost vs
+/// what does it save". Emits `BENCH_predictors.json` (override with
+/// `MOR_BENCH_PREDICTORS_OUT`).
+fn strategy_overhead_bench(
+    arts: &mor::model::Artifacts,
+    xs: &[f32],
+    thr: f32,
+    model_label: &str,
+) {
+    println!("\nper-strategy forward (tiled engine):");
+    // prepare each strategy once (model clone + prepack + policy); the
+    // thread sweep below derives cheap with_opts variants
+    let sessions: Vec<(Strategy, Session)> = STRATEGIES
+        .iter()
+        .map(|&strategy| {
+            let sess = Session::from_artifacts(
+                arts,
+                PredictorConfig { strategy, threshold: thr, ..Default::default() },
+            );
+            (strategy, sess)
+        })
+        .collect();
+    let mut rows: Vec<String> = Vec::new();
+    for threads in STRATEGY_THREADS {
+        // `none` first: the denominator the others are measured against
+        let mut none_ns = f64::NAN;
+        for (strategy, base) in &sessions {
+            let strategy = *strategy;
+            let sess = base.with_opts(RunOpts {
+                oracle: false,
+                collect_trace: false,
+                threads,
+                engine: EngineSel::Tiled,
+            });
+            let r = sess.run_sample(xs);
+            let t = bench_with(
+                &format!("{model_label} fwd, --predictor {:<7}, {threads} thread(s)", strategy.name()),
+                1,
+                0.3,
+                &mut || {
+                    black_box(sess.run_sample(black_box(xs)));
+                },
+            );
+            t.report();
+            if strategy == Strategy::None {
+                none_ns = t.min_ns;
+            }
+            let overhead_pct = (t.min_ns / none_ns - 1.0) * 100.0;
+            println!(
+                "    macs saved {:.1}% | net vs none {overhead_pct:+.1}%",
+                r.ops.macs_saved_frac() * 100.0
+            );
+            rows.push(format!(
+                "    {{\"predictor\": \"{}\", \"threads\": {threads}, \
+                 \"forward_ms\": {:.4}, \"overhead_vs_none_pct\": {overhead_pct:.2}, \
+                 \"macs_saved_pct\": {:.2}, \"bin_ops_per_sample\": {}}}",
+                strategy.name(),
+                t.min_ns / 1e6,
+                r.ops.macs_saved_frac() * 100.0,
+                r.ops.bin_ops
+            ));
+        }
+    }
+    let out_path = std::env::var("MOR_BENCH_PREDICTORS_OUT")
+        .unwrap_or_else(|_| "BENCH_predictors.json".to_string());
+    let mut js = String::new();
+    js.push_str("{\n");
+    js.push_str("  \"bench\": \"perf_predictors\",\n");
+    js.push_str(&format!("  \"model\": \"{model_label}\",\n"));
+    js.push_str(&format!(
+        "  \"threads_available\": {},\n",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    ));
+    js.push_str("  \"strategies\": [\n");
+    js.push_str(&rows.join(",\n"));
+    js.push_str("\n  ]\n}\n");
+    match std::fs::write(&out_path, &js) {
+        Ok(()) => println!("\nwrote {out_path}"),
+        Err(e) => eprintln!("\nfailed to write {out_path}: {e}"),
+    }
 }

@@ -13,7 +13,7 @@ mod common;
 use mor::config::PredictorConfig;
 use mor::coordinator::{serve, Backend, ServeOpts};
 use mor::model::{synth, Artifacts};
-use mor::predictor::MorPolicy;
+use mor::session::Session;
 use mor::workload::RequestStream;
 
 const WORKERS: [usize; 2] = [1, 4];
@@ -37,14 +37,15 @@ fn main() {
     let (arts, label) = workload();
     println!("serving bench on {label}: closed loop, {REQUESTS_PER_CONFIG} requests per config");
 
+    // one session for the whole sweep: model cloned and prepacked once,
+    // policy prepared once, shared read-only by every worker config
+    let session = Session::from_artifacts(
+        &arts,
+        PredictorConfig { threshold: 0.5, ..Default::default() },
+    );
     let mut rows: Vec<String> = Vec::new();
     for &workers in &WORKERS {
         for &max_batch in &BATCHES {
-            let pol = MorPolicy::new(
-                &arts.model,
-                &arts.predictor,
-                PredictorConfig { threshold: 0.5, ..Default::default() },
-            );
             // arrival times are ignored in closed loop; the stream only
             // supplies ids + sample indices
             let mut stream = RequestStream::new(1000.0, arts.data.n_test(), 42);
@@ -53,7 +54,7 @@ fn main() {
             let n = requests.len();
             let rep = serve(
                 &arts,
-                Some(pol),
+                &session,
                 Backend::Engine,
                 requests,
                 "unused",
@@ -75,9 +76,11 @@ fn main() {
             );
             rows.push(format!(
                 "    {{\"workers\": {workers}, \"max_batch\": {max_batch}, \
+                 \"predictor\": \"{}\", \
                  \"rps\": {:.2}, \"p50_ms\": {:.3}, \"p99_ms\": {:.3}, \
                  \"mean_service_ms\": {:.3}, \"batch_occupancy\": {:.3}, \
                  \"dropped\": {}}}",
+                rep.predictor,
                 rep.throughput_rps,
                 rep.p50_ms,
                 rep.p99_ms,
@@ -94,6 +97,7 @@ fn main() {
     js.push_str("{\n");
     js.push_str("  \"bench\": \"perf_serving\",\n");
     js.push_str(&format!("  \"model\": \"{label}\",\n"));
+    js.push_str(&format!("  \"predictor\": \"{}\",\n", session.predictor_name()));
     js.push_str(&format!("  \"requests_per_config\": {REQUESTS_PER_CONFIG},\n"));
     js.push_str(&format!(
         "  \"threads_available\": {},\n",

@@ -115,17 +115,20 @@ COMMANDS:
                stats, accuracy and computation savings
                  --model <name>        tds|cnn10|darknet19m|resnet18m (default: all)
                  --artifacts <dir>     artifacts directory (default: artifacts)
+                 --predictor <name>    skip strategy: mor|binary|cluster|oracle|none
+                                       (default: mor; see `mor predictors`)
                  --threshold <T>       correlation threshold (default: 0.85)
-                 --no-clusters         disable the spatial component
-                 --no-binary           disable the self-correlation component
+                 --no-clusters         legacy alias for --predictor binary
+                 --no-binary           legacy alias for --predictor cluster
                  --samples <n>         cap evaluated samples
     simulate   Cycle-level accelerator simulation (baseline vs MoR)
-                 --model/--artifacts/--threshold as above
+                 --model/--artifacts/--predictor/--threshold as above
                  --config <file>       accelerator TOML (default: Table 1)
                  --samples <n>         samples to simulate (default: 16)
     figures    Regenerate paper figures/tables
-                 --all | --fig <id>    fig1,fig3,...,fig13,table1,area
+                 --all | --fig <id>    fig1,fig3,...,fig13,ablation,table1,area
                  --out <dir>           CSV output directory (default: figures_out)
+                 --predictor <name>    strategy for fig13/simulate paths
     serve      Run the serving coordinator on a synthetic request stream
                  --model <name>        model to serve (default: tds)
                  --rps <r>             request rate (default: 200)
@@ -142,9 +145,12 @@ COMMANDS:
                                        requests outstanding)
                  --concurrency <n>     closed-loop outstanding requests
                                        (default: workers * max-batch)
-                 --no-predictor        serve the dense baseline (no MoR)
+                 --predictor <name>    skip strategy (default: mor)
+                 --no-predictor        serve the dense baseline (alias for
+                                       --predictor none)
                  --runtime pjrt|engine execution backend (default: engine;
                                        pjrt needs --features pjrt at build)
+    predictors List the available zero-predictor strategies
     info       Print artifact + configuration info
                  --config              print Table 1
                  --artifacts <dir>

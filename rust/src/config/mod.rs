@@ -2,6 +2,7 @@
 //! parameters, loadable from TOML files (configs/*.toml) with CLI
 //! overrides. Defaults are *exactly* the paper's Table 1.
 
+use crate::predictor::strategies::Strategy;
 use crate::util::toml::Toml;
 use anyhow::{Context, Result};
 use std::path::Path;
@@ -120,17 +121,17 @@ impl DramConfig {
     }
 }
 
-/// MoR predictor configuration (offline parameters live in the artifacts;
-/// this is the online policy).
+/// Zero-predictor configuration (offline parameters live in the
+/// artifacts; this selects and tunes the online policy).
 #[derive(Clone, Debug, PartialEq)]
 pub struct PredictorConfig {
+    /// Which skip strategy runs: `mor` (hybrid, the paper default),
+    /// `binary`, `cluster`, `oracle`, or `none`. TOML key
+    /// `predictor.strategy`, CLI `--predictor`.
+    pub strategy: Strategy,
     /// Pearson-correlation threshold T (Section 3.2.1). Neurons with
     /// c < T never use the binary predictor.
     pub threshold: f32,
-    /// Enable the spatial (cluster/proxy) component.
-    pub use_clusters: bool,
-    /// Enable the self-correlation (binary) component.
-    pub use_binary: bool,
     /// Optional angle gate for cluster membership (ablation; the paper's
     /// default keeps every closest-neighbour edge → 90°).
     pub max_cluster_angle_deg: f32,
@@ -145,9 +146,8 @@ pub struct PredictorConfig {
 impl Default for PredictorConfig {
     fn default() -> Self {
         PredictorConfig {
+            strategy: Strategy::Mor,
             threshold: 0.85,
-            use_clusters: true,
-            use_binary: true,
             max_cluster_angle_deg: 90.0,
             margin_sigmas: 1.0,
         }
@@ -168,12 +168,27 @@ impl Config {
         let src = std::fs::read_to_string(&path)
             .with_context(|| format!("reading config {}", path.as_ref().display()))?;
         let t = Toml::parse(&src).context("parsing config TOML")?;
-        Ok(Config::from_toml(&t))
+        Config::from_toml(&t)
     }
 
-    pub fn from_toml(t: &Toml) -> Config {
+    pub fn from_toml(t: &Toml) -> Result<Config> {
         let d = Config::default();
-        Config {
+        // strategy selection: the named `predictor.strategy` key wins;
+        // the legacy `use_clusters` / `use_binary` component toggles are
+        // still honoured when it is absent
+        let strategy = match t.get("predictor.strategy") {
+            Some(v) => {
+                let name = v
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("predictor.strategy must be a string"))?;
+                Strategy::parse(name)?
+            }
+            None => Strategy::from_components(
+                t.bool_or("predictor.use_clusters", true),
+                t.bool_or("predictor.use_binary", true),
+            ),
+        };
+        Ok(Config {
             accel: AcceleratorConfig {
                 frequency_mhz: t.i64_or("accelerator.frequency_mhz", d.accel.frequency_mhz as i64) as u64,
                 input_sram_bytes: t.i64_or("accelerator.input_sram_bytes", d.accel.input_sram_bytes as i64) as u64,
@@ -202,9 +217,8 @@ impl Config {
                 t_rfc: t.i64_or("dram.t_rfc", d.dram.t_rfc as i64) as u64,
             },
             predictor: PredictorConfig {
+                strategy,
                 threshold: t.f64_or("predictor.threshold", d.predictor.threshold as f64) as f32,
-                use_clusters: t.bool_or("predictor.use_clusters", d.predictor.use_clusters),
-                use_binary: t.bool_or("predictor.use_binary", d.predictor.use_binary),
                 max_cluster_angle_deg: t.f64_or(
                     "predictor.max_cluster_angle_deg",
                     d.predictor.max_cluster_angle_deg as f64,
@@ -214,7 +228,7 @@ impl Config {
                     d.predictor.margin_sigmas as f64,
                 ) as f32,
             },
-        }
+        })
     }
 
     /// Render Table 1 (used by `mor info --config` and the table1 bench).
@@ -286,12 +300,37 @@ mod tests {
             "[accelerator]\nnum_cus = 16\npredictor = false\n[predictor]\nthreshold = 0.7\n",
         )
         .unwrap();
-        let c = Config::from_toml(&t);
+        let c = Config::from_toml(&t).unwrap();
         assert_eq!(c.accel.num_cus, 16);
         assert!(!c.accel.predictor);
         assert!((c.predictor.threshold - 0.7).abs() < 1e-6);
         // untouched keys keep defaults
         assert_eq!(c.accel.cu_width, 8);
+        assert_eq!(c.predictor.strategy, Strategy::Mor);
+    }
+
+    #[test]
+    fn toml_strategy_key() {
+        let t = Toml::parse("[predictor]\nstrategy = \"oracle\"\n").unwrap();
+        assert_eq!(Config::from_toml(&t).unwrap().predictor.strategy, Strategy::Oracle);
+        let bad = Toml::parse("[predictor]\nstrategy = \"learned\"\n").unwrap();
+        assert!(Config::from_toml(&bad).is_err());
+    }
+
+    #[test]
+    fn toml_legacy_component_toggles_map_to_strategies() {
+        let cases = [
+            ("use_clusters = false\n", Strategy::Binary),
+            ("use_binary = false\n", Strategy::Cluster),
+            ("use_clusters = false\nuse_binary = false\n", Strategy::None),
+        ];
+        for (body, want) in cases {
+            let t = Toml::parse(&format!("[predictor]\n{body}")).unwrap();
+            assert_eq!(Config::from_toml(&t).unwrap().predictor.strategy, want);
+        }
+        // the named key wins over legacy toggles
+        let t = Toml::parse("[predictor]\nstrategy = \"mor\"\nuse_binary = false\n").unwrap();
+        assert_eq!(Config::from_toml(&t).unwrap().predictor.strategy, Strategy::Mor);
     }
 
     #[test]

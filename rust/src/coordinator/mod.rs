@@ -27,7 +27,8 @@
 //! workers → collector) is the same shape as an async reactor.
 
 use crate::model::Artifacts;
-use crate::predictor::{exec, MorPolicy, RunOpts};
+use crate::predictor::{exec, RunOpts};
+use crate::session::Session;
 use crate::util::{mean, percentile_sorted};
 use crate::workload::Request;
 use anyhow::Result;
@@ -52,10 +53,6 @@ pub struct ServeOpts {
     /// Compresses the virtual arrival clock (e.g. 0.1 replays a 10 s
     /// trace in 1 s) — useful for tests; 1.0 is real time.
     pub time_scale: f64,
-    /// Row-tile threads per forward pass (see [`RunOpts::threads`]): keep
-    /// at 1 when `workers` already saturates the machine, raise it for
-    /// latency-critical low-concurrency streams.
-    pub intra_threads: usize,
     /// Requests coalesced into one [`exec::run_batch`] call (1 = no
     /// batching).
     pub max_batch: usize,
@@ -76,7 +73,6 @@ impl Default for ServeOpts {
         ServeOpts {
             workers: 4,
             time_scale: 1.0,
-            intra_threads: 1,
             max_batch: 1,
             batch_wait_us: 200,
             closed_loop: false,
@@ -104,6 +100,9 @@ enum Event {
 /// Aggregate serving report.
 #[derive(Clone, Debug, Default)]
 pub struct ServeReport {
+    /// Name of the skip strategy the engine served with (`mor`,
+    /// `binary`, ..., `none`) — makes BENCH artifacts self-describing.
+    pub predictor: String,
     pub completed: usize,
     /// Requests lost to worker/backend errors (0 in the happy path).
     pub dropped: usize,
@@ -126,7 +125,9 @@ pub struct ServeReport {
 }
 
 impl ServeReport {
+    #[allow(clippy::too_many_arguments)]
     fn from_records(
+        predictor: String,
         records: &[Served],
         wall_s: f64,
         busy_s: f64,
@@ -144,6 +145,7 @@ impl ServeReport {
         let svc: Vec<f64> = records.iter().map(|r| r.service_us as f64 / 1000.0).collect();
         let correct = records.iter().filter(|r| r.correct).count();
         ServeReport {
+            predictor,
             completed: records.len(),
             dropped,
             duration_s: wall_s,
@@ -162,9 +164,10 @@ impl ServeReport {
 
     pub fn print(&self, label: &str) {
         println!(
-            "[serve:{label}] {} reqs in {:.2}s busy ({:.2}s wall) → {:.1} rps | acc {:.1}% | \
-             lat p50 {:.2} ms p95 {:.2} ms p99 {:.2} ms | svc {:.2} ms | maxq {} | \
-             batch {:.2}",
+            "[serve:{label}] pred={} | {} reqs in {:.2}s busy ({:.2}s wall) → {:.1} rps | \
+             acc {:.1}% | lat p50 {:.2} ms p95 {:.2} ms p99 {:.2} ms | svc {:.2} ms | \
+             maxq {} | batch {:.2}",
+            if self.predictor.is_empty() { "?" } else { &self.predictor },
             self.completed,
             self.busy_s,
             self.duration_s,
@@ -266,14 +269,16 @@ impl SharedQueue {
     }
 }
 
-/// Serve a pre-generated request list.
+/// Serve a pre-generated request list through a prepared [`Session`]
+/// (which owns the model, its prepacked weights, the skip strategy and
+/// the per-forward execution options — workers share them read-only).
 ///
 /// Open loop (default): arrival times are replayed faithfully (scaled by
 /// [`ServeOpts::time_scale`]). Closed loop: arrival times are ignored and
 /// [`ServeOpts::concurrency`] requests stay outstanding.
 pub fn serve(
     arts: &Artifacts,
-    policy: Option<MorPolicy>,
+    session: &Session,
     backend: Backend,
     requests: Vec<Request>,
     artifacts_dir: &str,
@@ -287,8 +292,13 @@ pub fn serve(
         );
         let _ = artifacts_dir;
     }
+    let predictor_name = match backend {
+        // the PJRT artifact is the dense AOT graph; no skip strategy runs
+        Backend::Pjrt => "none".to_string(),
+        Backend::Engine => session.predictor_name().to_string(),
+    };
     if requests.is_empty() {
-        return Ok(ServeReport::default());
+        return Ok(ServeReport { predictor: predictor_name, ..Default::default() });
     }
     let n_req = requests.len();
     let max_batch = opts.max_batch.max(1);
@@ -300,9 +310,10 @@ pub fn serve(
     // (completed or dropped) and the dispatcher issues the next on each
     let (token_tx, token_rx) = mpsc::channel::<()>();
 
-    // shared read-only state for Engine workers
-    let model = Arc::new(arts.model.clone());
-    let policy = Arc::new(policy);
+    // shared read-only state for Engine workers: the session's model
+    // (prepacked weights warmed once) and prepared policy
+    let model = session.model_arc();
+    let policy = session.policy_arc();
     let data = Arc::new((
         arts.data.test_x.clone(),
         arts.data.test_y.clone(),
@@ -357,11 +368,13 @@ pub fn serve(
     let hlo_path = Artifacts::hlo_path(artifacts_dir, &arts.meta.name);
     #[cfg(feature = "pjrt")]
     let input_shape = arts.meta.input_shape;
+    // serving never collects traces or oracle ground truth; engine and
+    // row-tile threads come from the session
     let run_opts = RunOpts {
         oracle: false,
         collect_trace: false,
-        threads: opts.intra_threads.max(1),
-        ..Default::default()
+        threads: session.opts().threads.max(1),
+        engine: session.opts().engine,
     };
     let batches = Arc::new(std::sync::atomic::AtomicUsize::new(0));
 
@@ -370,7 +383,7 @@ pub fn serve(
         let queue = Arc::clone(&queue);
         let event_tx = event_tx.clone();
         let model = Arc::clone(&model);
-        let policy = Arc::clone(&policy);
+        let policy = policy.clone();
         let data = Arc::clone(&data);
         let batches = Arc::clone(&batches);
         #[cfg(feature = "pjrt")]
@@ -425,7 +438,7 @@ pub fn serve(
                 let per_req: Vec<Result<Vec<f32>>> = match backend {
                     Backend::Engine => exec::run_batch(
                         &model,
-                        policy.as_ref().as_ref(),
+                        policy.as_deref(),
                         &samples,
                         run_opts,
                     )
@@ -505,6 +518,7 @@ pub fn serve(
     };
     let max_depth = queue.state.lock().unwrap().depth_hwm;
     Ok(ServeReport::from_records(
+        predictor_name,
         &records,
         wall,
         busy,
@@ -533,7 +547,8 @@ mod tests {
                 correct: i % 2 == 0,
             })
             .collect();
-        let r = ServeReport::from_records(&recs, 3.0, 2.0, 7, 100, 0, None);
+        let r = ServeReport::from_records("mor".into(), &recs, 3.0, 2.0, 7, 100, 0, None);
+        assert_eq!(r.predictor, "mor");
         assert_eq!(r.completed, 100);
         assert_eq!(r.dropped, 0);
         assert!((r.duration_s - 3.0).abs() < 1e-9);
@@ -553,6 +568,7 @@ mod tests {
             .map(|i| Served { id: i, queue_us: 10, service_us: 100, correct: true })
             .collect();
         let r = ServeReport::from_records(
+            "none".into(),
             &recs,
             1.0,
             0.5,

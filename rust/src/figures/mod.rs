@@ -8,7 +8,9 @@ use crate::config::{Config, PredictorConfig};
 use crate::energy::{AreaModel, EnergyModel};
 use crate::engine::{self, PatchGather, Tensor};
 use crate::model::{Artifacts, Node};
-use crate::predictor::{exec, EvalSummary, MorPolicy, MorRun, RunOpts};
+use crate::predictor::strategies::{Strategy, ZeroPredictor};
+use crate::predictor::{EvalSummary, MorRun, RunOpts};
+use crate::session::Session;
 use crate::sim::Simulator;
 use crate::util::bench::Table;
 use anyhow::Result;
@@ -25,8 +27,12 @@ pub fn load_all(dir: &str) -> Result<Vec<Artifacts>> {
         .collect()
 }
 
-fn policy_with(arts: &Artifacts, cfg: PredictorConfig) -> MorPolicy {
-    MorPolicy::new(&arts.model, &arts.predictor, cfg)
+/// A session over an artifact bundle with the given predictor config —
+/// the unit every evaluation below runs through. Derive the dense
+/// baseline with [`Session::with_policy`]`(None)` so the model (and its
+/// prepacked weights) is cloned once per figure, not once per run.
+fn session_with(arts: &Artifacts, cfg: PredictorConfig) -> Session {
+    Session::from_artifacts(arts, cfg)
 }
 
 // ---------------------------------------------------------------------------
@@ -41,7 +47,8 @@ pub fn fig01(artifacts: &[Artifacts], samples: usize) -> Table {
     );
     let mut fracs = Vec::new();
     for a in artifacts {
-        let s = MorRun::evaluate(a, None, samples, RunOpts::default());
+        let dense = Session::build(&a.model).finish();
+        let s = MorRun::evaluate(a, &dense, samples);
         let frac = s.ops.neg_relu_macs as f64 / s.ops.macs_total.max(1) as f64;
         let relu_frac = s.ops.relu_macs as f64 / s.ops.macs_total.max(1) as f64;
         fracs.push(frac);
@@ -284,37 +291,71 @@ pub fn fig05(artifacts: &[Artifacts]) -> Table {
 
 pub const SWEEP_THRESHOLDS: [f32; 7] = [1.0, 0.95, 0.9, 0.85, 0.8, 0.7, 0.6];
 
-pub fn threshold_sweep(
-    artifacts: &[Artifacts],
-    samples: usize,
-    use_clusters: bool,
-) -> Table {
-    let title = if use_clusters {
-        "Fig 9 — hybrid MoR: accuracy loss vs % computations avoided \
-         (threshold sweep 1.0 → 0.6)"
-    } else {
-        "Fig 6 — binary predictor alone: accuracy loss vs % operations saved \
-         (threshold sweep 1.0 → 0.6)"
+/// Threshold sweep for a named strategy: Fig 6 is `binary`, Fig 9 is
+/// `mor`. The policy is prepared once per model and re-thresholded per
+/// candidate (sign bits packed once).
+pub fn threshold_sweep(artifacts: &[Artifacts], samples: usize, strategy: Strategy) -> Table {
+    let title = match strategy {
+        Strategy::Mor => {
+            "Fig 9 — hybrid MoR: accuracy loss vs % computations avoided \
+             (threshold sweep 1.0 → 0.6)"
+        }
+        Strategy::Binary => {
+            "Fig 6 — binary predictor alone: accuracy loss vs % operations saved \
+             (threshold sweep 1.0 → 0.6)"
+        }
+        _ => "threshold sweep",
     };
-    let mut t = Table::new(title, &["model", "threshold", "ops_saved_pct", "accuracy_loss_pct"]);
+    let mut t = Table::new(title, &["model", "predictor", "threshold", "ops_saved_pct", "accuracy_loss_pct"]);
     for a in artifacts {
-        let base = MorRun::evaluate(a, None, samples, RunOpts::default());
+        let sess = session_with(a, PredictorConfig { strategy, ..Default::default() });
+        let base = MorRun::evaluate(a, &sess.with_policy(None), samples);
         for &thr in &SWEEP_THRESHOLDS {
-            let pol = policy_with(
-                a,
-                PredictorConfig {
-                    threshold: thr,
-                    use_clusters,
-                    use_binary: true,
-                    ..Default::default()
-                },
-            );
-            let s = MorRun::evaluate(a, Some(&pol), samples, RunOpts::default());
+            let s = MorRun::evaluate(a, &sess.with_threshold(thr), samples);
             t.row(&[
                 a.meta.name.clone(),
+                strategy.name().to_string(),
                 format!("{thr:.2}"),
                 format!("{:.2}", s.ops.macs_saved_frac() * 100.0),
                 format!("{:.2}", (base.accuracy - s.accuracy) * 100.0),
+            ]);
+        }
+    }
+    t
+}
+
+/// Strategy ablation: every named strategy on the same samples, plus the
+/// tight-angle-gate hybrid variant — replaces the old hand-rolled
+/// component-toggle matrix (the paper's "the hybrid yields much better
+/// results than any of its two components in isolation").
+pub fn strategy_ablation(artifacts: &[Artifacts], samples: usize) -> Table {
+    let mut t = Table::new(
+        "Ablation — named strategies on equal footing (default T)",
+        &["model", "predictor", "ops_saved_pct", "accuracy_loss_pct", "incorrect_zero_pct"],
+    );
+    for a in artifacts {
+        // one model clone + prepack per model; every variant swaps only
+        // the policy on the shared session
+        let dense = Session::build(&a.model).finish();
+        let base = MorRun::evaluate(a, &dense, samples);
+        let variants: Vec<(String, PredictorConfig)> = Strategy::ALL
+            .iter()
+            .map(|&s| (s.name().to_string(), PredictorConfig { strategy: s, ..Default::default() }))
+            .chain(std::iter::once((
+                "mor+tight-angle-gate(80)".to_string(),
+                PredictorConfig { max_cluster_angle_deg: 80.0, ..Default::default() },
+            )))
+            .collect();
+        for (label, cfg) in variants {
+            let pol = (cfg.strategy != Strategy::None)
+                .then(|| crate::predictor::MorPolicy::new(&a.model, &a.predictor, cfg));
+            let s = MorRun::evaluate(a, &dense.with_policy(pol), samples);
+            t.row(&[
+                a.meta.name.clone(),
+                label,
+                format!("{:.2}", s.ops.macs_saved_frac() * 100.0),
+                format!("{:.2}", (base.accuracy - s.accuracy) * 100.0),
+                format!("{:.2}", s.pred.frac(s.pred.incorrect_zero) * 100.0),
             ]);
         }
     }
@@ -368,11 +409,11 @@ pub fn fig12(artifacts: &[Artifacts], samples: usize) -> (Table, Vec<EvalSummary
     );
     let mut sums = Vec::new();
     for a in artifacts {
-        let base = MorRun::evaluate(a, None, samples, RunOpts::default());
         // per-DNN threshold from training data, as in the paper
         let thr = crate::predictor::choose_threshold(a, &PredictorConfig::default(), 3.2, 32);
-        let pol = policy_with(a, PredictorConfig { threshold: thr, ..Default::default() });
-        let s = MorRun::evaluate(a, Some(&pol), samples, RunOpts::default());
+        let sess = session_with(a, PredictorConfig { threshold: thr, ..Default::default() });
+        let base = MorRun::evaluate(a, &sess.with_policy(None), samples);
+        let s = MorRun::evaluate(a, &sess, samples);
         let p = &s.pred;
         t.row(&[
             format!("{} (T={thr})", a.meta.name),
@@ -411,9 +452,19 @@ pub fn fig13(artifacts: &[Artifacts], samples: usize, cfg: &Config) -> (Table, V
     let mut speedups = Vec::new();
     let mut esavs = Vec::new();
     for a in artifacts {
-        // per-DNN threshold from training data, as in the paper
+        // per-DNN threshold from training data, as in the paper; the
+        // session's strategy comes from the config (--predictor)
         let thr = crate::predictor::choose_threshold(a, &cfg.predictor, 3.2, 32);
-        let pol = policy_with(a, PredictorConfig { threshold: thr, ..cfg.predictor.clone() });
+        let sess = session_with(
+            a,
+            PredictorConfig { threshold: thr, ..cfg.predictor.clone() },
+        )
+        .with_opts(
+            // trace generation is the host-side bottleneck of fig13:
+            // use every core for the tiled forward
+            RunOpts { oracle: false, collect_trace: true, ..Default::default() }.parallel(),
+        );
+        let pol = sess.policy();
         let sim = Simulator::new(cfg.clone());
         let n = samples.min(a.data.n_test());
         // the baseline simulation consumes no trace, so it is identical
@@ -424,15 +475,8 @@ pub fn fig13(artifacts: &[Artifacts], samples: usize, cfg: &Config) -> (Table, V
         let mut mor_cycles = 0u64;
         let mut mor_nj = 0.0;
         for i in 0..n {
-            let r = exec::run_sample(
-                &a.model,
-                Some(&pol),
-                a.data.test_sample(i),
-                // trace generation is the host-side bottleneck of fig13:
-                // use every core for the tiled forward
-                RunOpts { oracle: false, collect_trace: true, ..Default::default() }.parallel(),
-            );
-            let sm = sim.simulate_sample(&a.model, Some(&pol), Some(&r.traces));
+            let r = sess.run_sample(a.data.test_sample(i));
+            let sm = sim.simulate_sample(&a.model, pol, Some(&r.traces));
             mor_cycles += sm.cycles;
             mor_nj += em.price(&sm, cfg.accel.frequency_mhz, true).total_nj();
         }

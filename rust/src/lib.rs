@@ -9,8 +9,8 @@
 //!   energy/area model ([`energy`]), the functional int8 inference engine
 //!   ([`engine`]), the online MoR predictor ([`predictor`]), the offline
 //!   angle clustering re-implementation ([`cluster`]), a PJRT runtime to
-//!   execute the AOT-compiled JAX artifacts ([`runtime`]) and a serving
-//!   coordinator ([`coordinator`]).
+//!   execute the AOT-compiled JAX artifacts (`runtime`, behind the
+//!   `pjrt` feature) and a serving coordinator ([`coordinator`]).
 //! * **L2 (python/compile)** — the JAX model zoo lowered once to HLO text.
 //! * **L1 (python/compile/kernels)** — Pallas kernels for the dot-product
 //!   hot spots, verified against pure-jnp oracles.
@@ -20,6 +20,11 @@
 //!
 //! Entry points:
 //! * [`model::Artifacts::load`] — load a model + predictor + data bundle.
+//! * [`session::Session`] — build an inference context (model + skip
+//!   strategy + engine options); the single entry point evaluation,
+//!   serving and the figure harness go through.
+//! * [`predictor::strategies`] — the pluggable `ZeroPredictor` API
+//!   (`mor`, `binary`, `cluster`, `oracle`, `none`).
 //! * [`predictor::MorRun`] — run inference with prediction, collect stats.
 //! * [`sim::Simulator`] — replay a skip-trace on the cycle-level model.
 //! * [`figures`] — regenerate every table/figure of the paper.
@@ -35,6 +40,7 @@ pub mod model;
 pub mod predictor;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod session;
 pub mod sim;
 pub mod util;
 pub mod workload;

@@ -9,7 +9,9 @@ use mor::config::Config;
 use mor::coordinator::{self, Backend, ServeOpts};
 use mor::figures;
 use mor::model::Artifacts;
-use mor::predictor::{MorPolicy, MorRun, RunOpts};
+use mor::predictor::strategies::{Strategy, ZeroPredictor};
+use mor::predictor::MorRun;
+use mor::session::Session;
 use mor::workload::{Arrival, RequestStream};
 
 fn main() {
@@ -37,6 +39,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "figures" => cmd_figures(args),
         "serve" => cmd_serve(args),
         "info" => cmd_info(args),
+        "predictors" => cmd_predictors(),
         "help" | "" => {
             println!("{USAGE}");
             Ok(())
@@ -58,11 +61,16 @@ fn config_from(args: &Args) -> Result<Config> {
         None => Config::default(),
     };
     cfg.predictor.threshold = args.opt_f64("threshold", cfg.predictor.threshold as f64)? as f32;
-    if args.flag("no-clusters") {
-        cfg.predictor.use_clusters = false;
-    }
-    if args.flag("no-binary") {
-        cfg.predictor.use_binary = false;
+    if let Some(name) = args.opt("predictor") {
+        cfg.predictor.strategy = Strategy::parse(name)?;
+    } else if args.flag("no-clusters") || args.flag("no-binary") {
+        // legacy component toggles, kept as aliases for the strategies
+        // they used to describe
+        let s = cfg.predictor.strategy;
+        cfg.predictor.strategy = Strategy::from_components(
+            s.uses_clusters() && !args.flag("no-clusters"),
+            s.uses_binary() && !args.flag("no-binary"),
+        );
     }
     Ok(cfg)
 }
@@ -71,21 +79,24 @@ fn cmd_run(args: &Args) -> Result<()> {
     let dir = args.opt_or("artifacts", mor::DEFAULT_ARTIFACTS_DIR);
     let samples = args.opt_usize("samples", 128)?;
     let cfg = config_from(args)?;
-    let auto_thr = args.opt("threshold").is_none();
+    let auto_thr = args.opt("threshold").is_none() && cfg.predictor.strategy.uses_binary();
     for name in models_arg(args) {
         let arts = Artifacts::load(dir, &name)?;
-        let base = MorRun::evaluate(&arts, None, samples, RunOpts::default());
         let mut pcfg = cfg.predictor.clone();
         if auto_thr {
             // paper (Sec 3.2.1): T is set per DNN using training data
             pcfg.threshold = mor::predictor::choose_threshold(&arts, &pcfg, 3.2, 32);
         }
-        let pol = MorPolicy::new(&arts.model, &arts.predictor, pcfg.clone());
-        let s = MorRun::evaluate(&arts, Some(&pol), samples, RunOpts::default());
+        // one session carries both runs: the dense baseline shares the
+        // model (and prepacked weights) with the policied evaluation
+        let session = Session::from_artifacts(&arts, pcfg.clone());
+        let base = MorRun::evaluate(&arts, &session.with_policy(None), samples);
+        let s = MorRun::evaluate(&arts, &session, samples);
         let p = &s.pred;
         println!(
-            "[{name}] T={:.2}{} | acc {:.2}% (baseline {:.2}%, Δ {:+.2}%) | \
+            "[{name}] predictor={} T={:.2}{} | acc {:.2}% (baseline {:.2}%, Δ {:+.2}%) | \
              MACs saved {:.1}% | DRAM wt saved {:.1}%",
+            session.predictor_name(),
             pcfg.threshold,
             if auto_thr { " (auto)" } else { "" },
             s.accuracy * 100.0,
@@ -157,7 +168,7 @@ fn cmd_figures(args: &Args) -> Result<()> {
     if want("fig6") {
         emit(
             "fig06_threshold_sweep",
-            figures::threshold_sweep(&artifacts, samples, false),
+            figures::threshold_sweep(&artifacts, samples, Strategy::Binary),
         )?;
     }
     if want("fig8") {
@@ -166,8 +177,11 @@ fn cmd_figures(args: &Args) -> Result<()> {
     if want("fig9") {
         emit(
             "fig09_hybrid_sweep",
-            figures::threshold_sweep(&artifacts, samples, true),
+            figures::threshold_sweep(&artifacts, samples, Strategy::Mor),
         )?;
+    }
+    if want("ablation") {
+        emit("ablation_strategies", figures::strategy_ablation(&artifacts, samples))?;
     }
     if want("fig12") {
         let (t, _) = figures::fig12(&artifacts, samples);
@@ -206,37 +220,36 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "engine" => Backend::Engine,
         other => bail!("--runtime must be 'engine' or 'pjrt', got '{other}'"),
     };
-    let cfg = config_from(args)?;
+    let mut cfg = config_from(args)?;
+    if args.flag("no-predictor") {
+        cfg.predictor.strategy = Strategy::None;
+    }
 
     let arts = Artifacts::load(dir, model)?;
-    let policy = if args.flag("no-predictor") {
-        None
-    } else {
-        Some(MorPolicy::new(
-            &arts.model,
-            &arts.predictor,
-            cfg.predictor.clone(),
-        ))
-    };
+    let session = Session::build(&arts.model)
+        .params(&arts.predictor)
+        .config(cfg.predictor.clone())
+        .threads(intra_threads)
+        .finish();
     let arrival = Arrival::from_cli(arrival_kind, rps)?;
     let mut stream = RequestStream::with_arrival(arrival, arts.data.n_test(), 42);
     let requests = stream.generate(duration);
     println!(
-        "[serve] model={model} backend={backend:?} workers={workers} \
+        "[serve] model={model} predictor={} backend={backend:?} workers={workers} \
          arrival={arrival_kind} rps={rps} duration={duration}s \
          max_batch={max_batch} → {} requests",
+        session.predictor_name(),
         requests.len()
     );
     let report = coordinator::serve(
         &arts,
-        policy,
+        &session,
         backend,
         requests,
         dir,
         ServeOpts {
             workers,
             time_scale: 1.0,
-            intra_threads,
             max_batch,
             batch_wait_us,
             closed_loop: arrival_kind == "closed",
@@ -244,6 +257,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
         },
     )?;
     report.print(model);
+    Ok(())
+}
+
+fn cmd_predictors() -> Result<()> {
+    println!("available zero-predictor strategies (--predictor <name>):\n");
+    for s in Strategy::ALL {
+        println!("  {:<8} {}", s.name(), s.describe());
+    }
+    println!(
+        "\nselect via `--predictor <name>` (run/simulate/figures/serve), the\n\
+         `[predictor] strategy = \"<name>\"` config key, or Session::predictor(name)\n\
+         in code. See EXPERIMENTS.md §Predictor API for the contract."
+    );
     Ok(())
 }
 

@@ -306,12 +306,8 @@ mod tests {
         assert_eq!(arts.data.shape, arts.meta.input_shape);
         assert!(!arts.predictor.layers.is_empty());
         // labels are the dense forward's argmax → dense accuracy is 1.0
-        let s = crate::predictor::MorRun::evaluate(
-            &arts,
-            None,
-            6,
-            crate::predictor::RunOpts::default(),
-        );
+        let dense = crate::session::Session::build(&arts.model).finish();
+        let s = crate::predictor::MorRun::evaluate(&arts, &dense, 6);
         assert_eq!(s.accuracy, 1.0);
     }
 

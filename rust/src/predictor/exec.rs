@@ -34,6 +34,9 @@
 //! produced a zero ReLU output is checked with the binary predictor, and
 //! skipped only when *both* components agree on zero.
 
+use super::strategies::{
+    bn_affine, margin_of, LayerState, RowCtx, SkipMask, Strategy, ZeroPredictor,
+};
 use super::{EngineSel, LayerTrace, MorPolicy, OpsStats, PredStats, RunOpts, RunResult};
 use crate::engine::gemm::{self, PatchTile, PrepackedFilters, NR, TILE_ROWS};
 use crate::engine::{
@@ -225,7 +228,7 @@ struct TiledCtx<'a> {
     qts: &'a [QuantizedTensor],
     /// One optional residual tensor per sample of the batch.
     residuals: &'a [Option<&'a Tensor>],
-    policy: Option<(&'a super::LayerPolicy, &'a MorPolicy)>,
+    policy: Option<(&'a LayerState, &'a MorPolicy)>,
     geom: ConvGeom,
     kh: usize,
     kw: usize,
@@ -257,7 +260,7 @@ fn compute_layer_tiled(
     node: &Node,
     inputs: &[Tensor],
     outs: &mut [Vec<Tensor>],
-    policy: Option<(&super::LayerPolicy, &MorPolicy)>,
+    policy: Option<(&LayerState, &MorPolicy)>,
     is_relu_layer: bool,
     node_idx: usize,
     opts: RunOpts,
@@ -306,7 +309,10 @@ fn compute_layer_tiled(
             node_relu,
             is_relu_layer,
             is_conv: matches!(node, Node::Conv { .. }),
-            oracle: opts.oracle,
+            // the oracle strategy's skip accounting IS the ground truth:
+            // force it on so its Fig-12 categories are always populated
+            oracle: opts.oracle
+                || policy.is_some_and(|(_, mp)| mp.cfg.strategy == Strategy::Oracle),
         };
 
         let n_tiles = total_rows.div_ceil(TILE_ROWS).max(1);
@@ -436,11 +442,9 @@ fn process_row_range(
     let mut survivors: Vec<usize> = Vec::with_capacity(cout);
     let mut blk = [0i32; NR];
 
-    // cluster proxies are row-invariant: hoist once per range
-    let proxies: Vec<usize> = match ctx.policy {
-        Some((lp, mp)) if mp.cfg.use_clusters => lp.clusters.iter().map(|cl| cl[0]).collect(),
-        _ => Vec::new(),
-    };
+    // cluster proxies are row-invariant (prepared by the strategy):
+    // empty for strategies without a spatial component
+    let proxies: &[usize] = ctx.policy.map(|(lp, _)| lp.proxies.as_slice()).unwrap_or(&[]);
 
     let mut t0 = row0;
     while t0 < row1 {
@@ -492,17 +496,15 @@ fn process_row_range(
             }
 
             Some((lp, mp)) => {
-                let use_clusters = mp.cfg.use_clusters;
+                let strategy = mp.cfg.strategy;
 
                 // ---- phase 2a: proxies — always fully evaluated, filter
                 // blocks outer for weight reuse across the tile -----------
-                if use_clusters {
-                    for chunk in proxies.chunks(NR) {
-                        for r in 0..trows {
-                            gemm::dot_block_indexed(tile.patch(r), ctx.pf, chunk, &mut blk);
-                            for (j, &f) in chunk.iter().enumerate() {
-                                dots[r * cout + f] = blk[j];
-                            }
+                for chunk in proxies.chunks(NR) {
+                    for r in 0..trows {
+                        gemm::dot_block_indexed(tile.patch(r), ctx.pf, chunk, &mut blk);
+                        for (j, &f) in chunk.iter().enumerate() {
+                            dots[r * cout + f] = blk[j];
                         }
                     }
                 }
@@ -513,62 +515,42 @@ fn process_row_range(
                     let local = (g - row0) * cout;
                     let out_row = &mut out[local..local + cout];
 
-                    if use_clusters {
-                        for &p in &proxies {
-                            let ri = account_eval(
-                                ctx, dots[r * cout + p], s, row, p, false, &mut out_row[p],
-                                &mut pred[s], &mut ops[s],
-                            );
-                            ri_cache[p] = ri;
-                        }
+                    for &p in proxies {
+                        let ri = account_eval(
+                            ctx, dots[r * cout + p], s, row, p, false, &mut out_row[p],
+                            &mut pred[s], &mut ops[s],
+                        );
+                        ri_cache[p] = ri;
                     }
 
-                    // ---- phase 2b: skip decisions (binary / proxy gate) --
+                    // ---- phase 2b: skip decisions (strategy dispatch) ----
                     survivors.clear();
-                    if use_clusters {
-                        for cl in &lp.clusters {
-                            let proxy_zero = ri_cache[cl[0]] <= 0.0;
-                            for &f in &cl[1..] {
-                                let (sk, ap) = if mp.cfg.use_binary {
-                                    // hybrid: both components must agree;
-                                    // binary is only consulted when the
-                                    // proxy says zero
-                                    let ap = lp.enabled[f];
-                                    let sk = ap
-                                        && proxy_zero
-                                        && binary_says_skip(
-                                            ctx, lp, mp, &tile, r, local, s, row, f,
-                                            &mut tr_bin, &mut ops[s],
-                                        );
-                                    (sk, ap)
-                                } else {
-                                    // clusters-only ablation: proxy decides
-                                    (proxy_zero, true)
-                                };
-                                skip[f] = sk;
-                                applied[f] = ap;
-                                if !sk {
-                                    survivors.push(f);
-                                }
-                            }
-                        }
-                    } else {
-                        // binary-only mode (Fig 6): every enabled neuron
-                        // predicted
-                        for f in 0..cout {
-                            let ap = mp.cfg.use_binary && lp.enabled[f];
-                            let sk = ap
-                                && binary_says_skip(
-                                    ctx, lp, mp, &tile, r, local, s, row, f, &mut tr_bin,
-                                    &mut ops[s],
-                                );
-                            skip[f] = sk;
-                            applied[f] = ap;
-                            if !sk {
-                                survivors.push(f);
-                            }
-                        }
-                    }
+                    let rctx = RowCtx {
+                        lp,
+                        cfg: &mp.cfg,
+                        packed: tile.packed(r),
+                        patch: tile.patch(r),
+                        pf: ctx.pf,
+                        proxy_ri: &ri_cache,
+                        res_row: ctx.residuals[s]
+                            .map(|t| &t.data[row * cout..(row + 1) * cout]),
+                        bn: ctx.bn,
+                        dq: ctx.dq,
+                        k: ctx.k,
+                        cout,
+                    };
+                    let mut be_row =
+                        tr_bin.as_deref_mut().map(|be| &mut be[local..local + cout]);
+                    strategy.fill_skip_mask(
+                        &rctx,
+                        &mut SkipMask {
+                            skip: &mut skip,
+                            applied: &mut applied,
+                            survivors: &mut survivors,
+                        },
+                        &mut be_row,
+                        &mut ops[s],
+                    );
 
                     // ---- phase 3: dense GEMM over surviving pairs only ---
                     for chunk in survivors.chunks(NR) {
@@ -582,25 +564,14 @@ fn process_row_range(
                     }
 
                     // ---- skipped outputs: zero + optional oracle truth ---
-                    if use_clusters {
-                        for cl in &lp.clusters {
-                            for &f in &cl[1..] {
-                                if skip[f] {
-                                    account_skip(
-                                        ctx, tile.patch(r), local, s, row, f, &mut out_row[f],
-                                        tr_skip.as_deref_mut(), &mut pred[s], &mut ops[s],
-                                    );
-                                }
-                            }
-                        }
-                    } else {
-                        for f in 0..cout {
-                            if skip[f] {
-                                account_skip(
-                                    ctx, tile.patch(r), local, s, row, f, &mut out_row[f],
-                                    tr_skip.as_deref_mut(), &mut pred[s], &mut ops[s],
-                                );
-                            }
+                    // (proxies never set `skip`, so a full scan equals the
+                    // strategy-shaped iteration)
+                    for f in 0..cout {
+                        if skip[f] {
+                            account_skip(
+                                ctx, tile.patch(r), local, s, row, f, &mut out_row[f],
+                                tr_skip.as_deref_mut(), &mut pred[s], &mut ops[s],
+                            );
                         }
                     }
                 }
@@ -609,38 +580,6 @@ fn process_row_range(
         t0 += trows;
     }
     (pred, ops)
-}
-
-/// The binary component's skip verdict for one (row, filter) pair, with
-/// its side accounting (bin op count, trace bit). One definition serves
-/// both the hybrid and binary-only tiled branches; callers gate the call
-/// on "binary consulted" (enabled + proxy-zero in hybrid mode), so the
-/// accounting only happens when the predictor actually ran. The scalar
-/// path keeps its own copies on purpose — it is the independent
-/// bit-exactness oracle.
-#[allow(clippy::too_many_arguments)]
-#[inline]
-fn binary_says_skip(
-    ctx: &TiledCtx,
-    lp: &super::LayerPolicy,
-    mp: &MorPolicy,
-    tile: &PatchTile,
-    r: usize,
-    local: usize,
-    s: usize,
-    row: usize,
-    f: usize,
-    tr_bin: &mut Option<&mut [bool]>,
-    ops: &mut OpsStats,
-) -> bool {
-    let p_bin = tile.packed(r).dot(&lp.packed_w[f]);
-    ops.bin_ops += ctx.k;
-    if let Some(be) = tr_bin.as_deref_mut() {
-        be[local + f] = true;
-    }
-    let est = lp.m[f] * p_bin as f32 + lp.b[f];
-    let est_ri = bn_affine(est, ctx.bn, f) + ctx.res_at(s, row, f);
-    est_ri < -margin_of(lp, ctx.bn, f, mp.cfg.margin_sigmas)
 }
 
 /// Account one fully-evaluated output (dot already computed). Matches the
@@ -727,7 +666,7 @@ fn compute_layer_scalar(
     node: &Node,
     src: &Tensor,
     residual: Option<&Tensor>,
-    policy: Option<(&super::LayerPolicy, &MorPolicy)>,
+    policy: Option<(&LayerState, &MorPolicy)>,
     is_relu_layer: bool,
     node_idx: usize,
     opts: RunOpts,
@@ -735,6 +674,13 @@ fn compute_layer_scalar(
     ops: &mut OpsStats,
     traces: &mut Vec<LayerTrace>,
 ) -> Tensor {
+    // the oracle strategy's skip accounting IS the ground truth: force
+    // it on (mirrors the tiled engine) so both engines stay bit-exact
+    let opts = RunOpts {
+        oracle: opts.oracle
+            || policy.is_some_and(|(_, mp)| mp.cfg.strategy == Strategy::Oracle),
+        ..opts
+    };
     let (sx, sw, bn, node_relu) = layer_params(node);
     let dq = sw * sx;
     let cout = node.cout();
@@ -802,11 +748,24 @@ fn compute_layer_scalar(
                     }
                 }
             }
-            Some((lp, mp)) if !mp.cfg.use_clusters => {
-                // binary-only mode (Fig 6): every enabled neuron predicted
+            Some((_lp, mp)) if mp.cfg.strategy == Strategy::Oracle => {
+                // oracle: the true pre-activation decides; skipped
+                // outputs are exactly the true zeros
+                for f in 0..cout {
+                    let d = dot_i8(&pg.patch, node.filter(f));
+                    let ri = relu_input(d, dq, bn, f, res_at(f));
+                    finish_neuron(
+                        f, ri <= 0.0, true, row, cout, k, node, &pg, dq, bn, res_at(f),
+                        node_relu, is_relu_layer, opts, &mut out, pred, ops, &mut trace,
+                    );
+                }
+            }
+            Some((lp, mp)) if !mp.cfg.strategy.uses_clusters() => {
+                // binary-only mode (Fig 6) — and the `none` strategy,
+                // whose rookie is never consulted so nothing is applied
                 for f in 0..cout {
                     let mut skip = false;
-                    let applied = mp.cfg.use_binary && lp.enabled[f];
+                    let applied = mp.cfg.strategy.uses_binary() && lp.enabled[f];
                     if applied {
                         let p_bin = pg.packed.dot(&lp.packed_w[f]);
                         ops.bin_ops += k;
@@ -838,7 +797,7 @@ fn compute_layer_scalar(
                     for &f in &cl[1..] {
                         let mut skip;
                         let applied;
-                        if mp.cfg.use_binary {
+                        if mp.cfg.strategy.uses_binary() {
                             // hybrid: both components must agree; binary is
                             // only consulted when the proxy says zero
                             applied = lp.enabled[f];
@@ -940,31 +899,6 @@ fn finish_neuron(
     }
 }
 
-/// Skip-confidence margin for neuron `f`: `margin_sigmas` regression
-/// residual stds, propagated through the (multiplicative) BN scale. The
-/// raw paper rule (skip iff estimate < 0) is `margin_sigmas = 0`.
-#[inline]
-fn margin_of(
-    lp: &super::LayerPolicy,
-    bn: Option<&(Vec<f32>, Vec<f32>)>,
-    f: usize,
-    margin_sigmas: f32,
-) -> f32 {
-    if margin_sigmas == 0.0 {
-        return 0.0;
-    }
-    let scale = bn.map(|(sc, _)| sc[f].abs()).unwrap_or(1.0);
-    margin_sigmas * lp.s[f] * scale
-}
-
-#[inline]
-fn bn_affine(v: f32, bn: Option<&(Vec<f32>, Vec<f32>)>, f: usize) -> f32 {
-    match bn {
-        Some((scale, shift)) => v * scale[f] + shift[f],
-        None => v,
-    }
-}
-
 fn layer_params(node: &Node) -> (f32, f32, Option<&(Vec<f32>, Vec<f32>)>, bool) {
     match node {
         Node::Conv { sx, sw, bn, relu, .. } | Node::Fc { sx, sw, bn, relu, .. } => {
@@ -1012,10 +946,9 @@ mod tests {
         assert!(r.ops.neg_relu_macs <= r.ops.relu_macs);
     }
 
-    /// A policy whose fitted lines make the binary estimate always negative
-    /// and clusters grouping everything under neuron 0 — then MoR skips a
-    /// member iff its proxy is zero, and skipped outputs are exactly 0.
-    fn always_zero_policy(m: &crate::model::Model, layer: usize, n: usize) -> MorPolicy {
+    /// Offline params whose fitted lines make the binary estimate always
+    /// negative, with one cluster grouping everything under neuron 0.
+    fn always_zero_params(layer: usize, n: usize) -> PredictorParams {
         let clusters: Vec<Vec<usize>> = vec![(0..n).collect()];
         let js = format!(
             r#"{{"model":"t","default_threshold":0.0,"layers":[
@@ -1036,8 +969,26 @@ mod tests {
             ),
             ang = vec![10.0f32; n],
         );
-        let params = PredictorParams::from_json(&Json::parse(&js).unwrap()).unwrap();
-        MorPolicy::new(m, &params, PredictorConfig { threshold: 0.5, ..Default::default() })
+        PredictorParams::from_json(&Json::parse(&js).unwrap()).unwrap()
+    }
+
+    /// With these params MoR skips a member iff its proxy is zero, and
+    /// skipped outputs are exactly 0.
+    fn always_zero_policy(m: &crate::model::Model, layer: usize, n: usize) -> MorPolicy {
+        always_zero_policy_with(m, layer, n, Strategy::Mor)
+    }
+
+    fn always_zero_policy_with(
+        m: &crate::model::Model,
+        layer: usize,
+        n: usize,
+        strategy: Strategy,
+    ) -> MorPolicy {
+        MorPolicy::new(
+            m,
+            &always_zero_params(layer, n),
+            PredictorConfig { threshold: 0.5, strategy, ..Default::default() },
+        )
     }
 
     #[test]
@@ -1091,17 +1042,37 @@ mod tests {
     }
 
     #[test]
-    fn disabled_components_never_skip() {
+    fn none_strategy_never_skips() {
         let m = tiny_fc(5);
         let x = rand_input(8, 7);
-        let mut pol = always_zero_policy(&m, 0, 6);
-        pol.cfg.use_binary = false;
-        pol.cfg.use_clusters = false;
-        // with both components off the policy must behave like None
+        let pol = always_zero_policy_with(&m, 0, 6, Strategy::None);
+        // the `none` strategy must behave exactly like running unpoliced
         let r = run_sample(&m, Some(&pol), &x, RunOpts::default());
         let base = run_sample(&m, None, &x, RunOpts::default());
         assert_eq!(r.ops.macs_done, base.ops.macs_done);
         assert_eq!(r.logits, base.logits);
+        assert_eq!(r.pred, base.pred);
+    }
+
+    #[test]
+    fn oracle_strategy_skips_exactly_true_zeros() {
+        let m = tiny_conv(13);
+        let x = rand_input(6 * 6 * 2, 29);
+        let n = m.nodes[0].cout();
+        let pol = always_zero_policy_with(&m, 0, n, Strategy::Oracle);
+        let r = run_sample(&m, Some(&pol), &x, RunOpts::default());
+        let base = run_sample(&m, None, &x, RunOpts::default());
+        // perfect prediction: no wrong skips, no missed zeros, and the
+        // logits match the dense forward bit for bit
+        assert_eq!(r.pred.incorrect_zero, 0);
+        assert_eq!(r.pred.incorrect_nonzero, 0);
+        assert_eq!(r.logits, base.logits);
+        assert!(r.pred.correct_zero > 0, "conv layer should have true zeros");
+        // exactly the policied layer's true zeros were skipped
+        assert_eq!(
+            r.ops.macs_done,
+            base.ops.macs_done - r.pred.correct_zero * m.nodes[0].k_len() as u64
+        );
     }
 
     #[test]
@@ -1190,17 +1161,15 @@ mod tests {
         }
     }
 
-    /// Ablation toggles (binary-only, clusters-only) must agree between
-    /// engines too — they exercise the other decision branches.
+    /// Every non-default strategy must agree between engines too — they
+    /// exercise the other decision branches.
     #[test]
-    fn tiled_matches_scalar_on_ablation_modes() {
+    fn tiled_matches_scalar_on_every_strategy() {
         let m = tiny_conv(47);
         let x = rand_input(6 * 6 * 2, 51);
         let n = m.nodes[0].cout();
-        for (use_clusters, use_binary) in [(false, true), (true, false), (false, false)] {
-            let mut pol = always_zero_policy(&m, 0, n);
-            pol.cfg.use_clusters = use_clusters;
-            pol.cfg.use_binary = use_binary;
+        for strategy in Strategy::ALL {
+            let pol = always_zero_policy_with(&m, 0, n, strategy);
             let base = RunOpts {
                 oracle: true,
                 collect_trace: true,
@@ -1215,10 +1184,10 @@ mod tests {
                     &x,
                     RunOpts { threads, engine: EngineSel::Tiled, ..base },
                 );
-                assert_eq!(want.logits, got.logits, "clusters={use_clusters} binary={use_binary}");
-                assert_eq!(want.pred, got.pred);
-                assert_eq!(want.ops, got.ops);
-                assert_eq!(want.traces, got.traces);
+                assert_eq!(want.logits, got.logits, "strategy={strategy:?}");
+                assert_eq!(want.pred, got.pred, "strategy={strategy:?}");
+                assert_eq!(want.ops, got.ops, "strategy={strategy:?}");
+                assert_eq!(want.traces, got.traces, "strategy={strategy:?}");
             }
         }
     }

@@ -1,9 +1,13 @@
-//! Online Mixture-of-Rookies predictor (paper Section 3.2) and the
-//! MoR-aware forward pass.
+//! Online zero-output prediction (paper Section 3.2) and the
+//! prediction-aware forward pass.
 //!
-//! * [`MorPolicy`] — the per-layer online decision structure derived from
-//!   the offline artifacts (fitted lines, clusters) and a
-//!   [`crate::config::PredictorConfig`] (threshold T, component toggles).
+//! * [`strategies`] — the pluggable [`strategies::ZeroPredictor`] API:
+//!   named skip strategies (`mor`, `binary`, `cluster`, `oracle`,
+//!   `none`) behind one trait with enum-based static dispatch.
+//! * [`MorPolicy`] — the prepared per-layer decision state: one
+//!   [`strategies::LayerState`] per predictable layer, built by the
+//!   configured strategy from the offline artifacts (fitted lines,
+//!   clusters) and a [`crate::config::PredictorConfig`].
 //! * [`exec::run_sample`] — one forward pass with optional prediction,
 //!   producing logits, prediction-outcome stats (Fig 12), operation
 //!   accounting (Fig 1/6/9/13) and an optional skip trace for the
@@ -12,87 +16,25 @@
 //!   layer-by-layer so GEMM row tiles fill across request boundaries
 //!   (the serving coordinator's micro-batch path); bit-identical to
 //!   per-sample execution.
-//! * [`MorRun`] — dataset-level evaluation driver.
+//! * [`MorRun`] — dataset-level evaluation driver over a
+//!   [`crate::session::Session`].
 
 pub mod exec;
+pub mod strategies;
 
 use crate::config::PredictorConfig;
-use crate::model::{LayerPredictor, Model, PredictorParams};
-use crate::util::bits::PackedVec;
+use crate::model::{Model, PredictorParams};
+use crate::session::Session;
 use std::collections::BTreeMap;
+use strategies::{LayerState, Strategy, ZeroPredictor};
 
-/// Per-layer online policy, precomputed once per (model, config).
-pub struct LayerPolicy {
-    /// Binary component enabled per neuron: c >= T.
-    pub enabled: Vec<bool>,
-    /// Proxy of each neuron (proxy of a singleton = itself).
-    pub proxy_of: Vec<usize>,
-    /// Clusters `[proxy, members...]` after the angle gate.
-    pub clusters: Vec<Vec<usize>>,
-    /// Fitted line per neuron.
-    pub m: Vec<f32>,
-    pub b: Vec<f32>,
-    /// Regression residual std per neuron (margin unit).
-    pub s: Vec<f32>,
-    /// Packed weight sign bits per filter (binCU operands).
-    pub packed_w: Vec<PackedVec>,
-}
-
-impl LayerPolicy {
-    fn new(lp: &LayerPredictor, node: &crate::model::Node, cfg: &PredictorConfig) -> LayerPolicy {
-        let n = lp.neurons();
-        let enabled: Vec<bool> = (0..n).map(|i| lp.c[i] >= cfg.threshold).collect();
-        // angle gate (ablation knob): members whose closest-neighbour angle
-        // exceeds the gate fall out of their cluster and become singletons.
-        let mut clusters: Vec<Vec<usize>> = Vec::new();
-        let mut singled: Vec<usize> = Vec::new();
-        for cl in &lp.clusters {
-            let proxy = cl[0];
-            let mut kept = vec![proxy];
-            for &m in &cl[1..] {
-                let ang = lp.closest_angle_deg.get(m).copied().unwrap_or(90.0);
-                if ang <= cfg.max_cluster_angle_deg {
-                    kept.push(m);
-                } else {
-                    singled.push(m);
-                }
-            }
-            clusters.push(kept);
-        }
-        for s in singled {
-            clusters.push(vec![s]);
-        }
-        let mut proxy_of = vec![0usize; n];
-        for cl in &clusters {
-            for &m in cl {
-                proxy_of[m] = cl[0];
-            }
-        }
-        let packed_w = (0..n).map(|f| PackedVec::from_weights(node.filter(f))).collect();
-        LayerPolicy {
-            enabled,
-            proxy_of,
-            clusters,
-            m: lp.m.clone(),
-            b: lp.b.clone(),
-            s: lp.s.clone(),
-            packed_w,
-        }
-    }
-
-    pub fn neurons(&self) -> usize {
-        self.enabled.len()
-    }
-
-    pub fn is_proxy(&self, f: usize) -> bool {
-        self.proxy_of[f] == f
-    }
-}
-
-/// The full online policy for a model.
+/// The full prepared policy for a model: the configured strategy plus
+/// the per-layer state it built. Shared read-only across worker
+/// threads; re-threshold a cached policy with [`MorPolicy::with_threshold`]
+/// instead of rebuilding it (the packed sign bits are shared).
 pub struct MorPolicy {
     pub cfg: PredictorConfig,
-    pub layers: BTreeMap<usize, LayerPolicy>,
+    pub layers: BTreeMap<usize, LayerState>,
 }
 
 impl MorPolicy {
@@ -101,9 +43,29 @@ impl MorPolicy {
         for (&layer, lp) in &params.layers {
             let node = &model.nodes[layer];
             debug_assert_eq!(node.cout(), lp.neurons());
-            layers.insert(layer, LayerPolicy::new(lp, node, &cfg));
+            layers.insert(layer, cfg.strategy.prepare(lp, node, &cfg));
         }
         MorPolicy { cfg, layers }
+    }
+
+    /// The active strategy.
+    pub fn strategy(&self) -> Strategy {
+        self.cfg.strategy
+    }
+
+    /// A candidate-threshold variant of this policy. Only the per-layer
+    /// `enabled` sets are recomputed; clusters and packed rookie
+    /// operands are shared with `self` — this is what makes
+    /// [`choose_threshold`]'s sweep cheap.
+    pub fn with_threshold(&self, t: f32) -> MorPolicy {
+        MorPolicy {
+            cfg: PredictorConfig { threshold: t, ..self.cfg.clone() },
+            layers: self
+                .layers
+                .iter()
+                .map(|(&l, st)| (l, st.with_threshold(t)))
+                .collect(),
+        }
     }
 }
 
@@ -280,37 +242,30 @@ pub struct EvalSummary {
     pub ops: OpsStats,
 }
 
-/// Evaluate `n` test samples with (or without) the predictor.
+/// Evaluate `n` test samples through a prepared [`Session`].
 pub struct MorRun;
 
 impl MorRun {
-    pub fn evaluate(
-        arts: &crate::model::Artifacts,
-        policy: Option<&MorPolicy>,
-        n: usize,
-        opts: RunOpts,
-    ) -> EvalSummary {
-        Self::eval_split(arts, policy, n, opts, false)
+    pub fn evaluate(arts: &crate::model::Artifacts, session: &Session, n: usize) -> EvalSummary {
+        Self::eval_split(arts, session, n, false)
     }
 
-    /// Like [`evaluate`] but over the *calibration* split (training data) —
-    /// used by [`choose_threshold`], exactly as the paper sets T "using the
-    /// training data ... and verify its correctness using the unseen test
-    /// data set" (Section 3.2.1).
+    /// Like [`MorRun::evaluate`] but over the *calibration* split
+    /// (training data) — used by [`choose_threshold`], exactly as the
+    /// paper sets T "using the training data ... and verify its
+    /// correctness using the unseen test data set" (Section 3.2.1).
     pub fn evaluate_calib(
         arts: &crate::model::Artifacts,
-        policy: Option<&MorPolicy>,
+        session: &Session,
         n: usize,
-        opts: RunOpts,
     ) -> EvalSummary {
-        Self::eval_split(arts, policy, n, opts, true)
+        Self::eval_split(arts, session, n, true)
     }
 
     fn eval_split(
         arts: &crate::model::Artifacts,
-        policy: Option<&MorPolicy>,
+        session: &Session,
         n: usize,
-        opts: RunOpts,
         calib: bool,
     ) -> EvalSummary {
         let avail = if calib {
@@ -332,7 +287,7 @@ impl MorRun {
             } else {
                 (arts.data.test_sample(i), arts.data.test_y[i])
             };
-            let r = exec::run_sample(&arts.model, policy, sample, opts);
+            let r = session.run_sample(sample);
             if argmax(&r.logits) == label as usize {
                 hits += 1;
             }
@@ -362,16 +317,24 @@ pub fn choose_threshold(
     max_loss_pp: f64,
     samples: usize,
 ) -> f32 {
+    // strategies that never consult the rookie ignore the T gate — the
+    // sweep would measure noise
+    if !cfg_base.strategy.uses_binary() {
+        return cfg_base.threshold;
+    }
     let samples = samples.min(THRESHOLD_HOLDOUT);
-    let base = MorRun::evaluate_calib(arts, None, samples, RunOpts::default());
+    // one Session carries the whole sweep: the model (and its prepacked
+    // weights) is cloned once, the policy is prepared once, and each
+    // candidate T only recomputes the per-layer enabled sets — the
+    // packed filter sign bits are shared, never re-packed
+    let sess = Session::build(&arts.model)
+        .params(&arts.predictor)
+        .config(cfg_base.clone())
+        .finish();
+    let base = MorRun::evaluate_calib(arts, &sess.with_policy(None), samples);
     let mut best = 1.0f32;
     for &t in &[0.9f32, 0.8, 0.7, 0.6, 0.5, 0.4, 0.3, 0.2] {
-        let cfg = crate::config::PredictorConfig {
-            threshold: t,
-            ..cfg_base.clone()
-        };
-        let pol = MorPolicy::new(&arts.model, &arts.predictor, cfg);
-        let s = MorRun::evaluate_calib(arts, Some(&pol), samples, RunOpts::default());
+        let s = MorRun::evaluate_calib(arts, &sess.with_threshold(t), samples);
         // two gates: holdout accuracy loss AND the (much smoother) wrong-skip
         // rate per output — the latter transfers almost exactly to the test
         // split, the former catches model-specific fragility

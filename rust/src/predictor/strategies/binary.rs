@@ -1,0 +1,44 @@
+//! `binary` — the binarized dot-product rookie in isolation (paper
+//! Fig 6): every neuron whose correlation passes the T gate is
+//! predicted from the 1-bit dot product alone; no cluster structure,
+//! no proxies.
+
+use super::{binary_says_skip, LayerState, RowCtx, SkipMask, ZeroPredictor};
+use crate::config::PredictorConfig;
+use crate::model::{LayerPredictor, Node};
+use crate::predictor::OpsStats;
+
+pub struct BinaryStrategy;
+
+impl ZeroPredictor for BinaryStrategy {
+    fn name(&self) -> &'static str {
+        "binary"
+    }
+
+    fn describe(&self) -> &'static str {
+        "binarized dot-product rookie alone (paper Fig 6 ablation)"
+    }
+
+    fn prepare(&self, lp: &LayerPredictor, node: &Node, cfg: &PredictorConfig) -> LayerState {
+        LayerState::build(lp, node, cfg, false, true)
+    }
+
+    #[inline]
+    fn fill_skip_mask(
+        &self,
+        ctx: &RowCtx,
+        mask: &mut SkipMask,
+        bin_eval: &mut Option<&mut [bool]>,
+        ops: &mut OpsStats,
+    ) {
+        for f in 0..ctx.cout {
+            let ap = ctx.lp.enabled[f];
+            let sk = ap && binary_says_skip(ctx, f, bin_eval, ops);
+            mask.skip[f] = sk;
+            mask.applied[f] = ap;
+            if !sk {
+                mask.survivors.push(f);
+            }
+        }
+    }
+}

@@ -1,0 +1,45 @@
+//! `cluster` — the angle-cluster proxy in isolation (paper Fig 9
+//! ablation): a member is skipped whenever its cluster proxy produced a
+//! zero ReLU output, with no binary confirmation. Aggressive: highest
+//! savings of the realizable strategies, highest wrong-skip rate.
+
+use super::{LayerState, RowCtx, SkipMask, ZeroPredictor};
+use crate::config::PredictorConfig;
+use crate::model::{LayerPredictor, Node};
+use crate::predictor::OpsStats;
+
+pub struct ClusterStrategy;
+
+impl ZeroPredictor for ClusterStrategy {
+    fn name(&self) -> &'static str {
+        "cluster"
+    }
+
+    fn describe(&self) -> &'static str {
+        "angle-cluster proxy alone: skip whenever the proxy output is zero (paper Fig 9 ablation)"
+    }
+
+    fn prepare(&self, lp: &LayerPredictor, node: &Node, cfg: &PredictorConfig) -> LayerState {
+        LayerState::build(lp, node, cfg, true, false)
+    }
+
+    #[inline]
+    fn fill_skip_mask(
+        &self,
+        ctx: &RowCtx,
+        mask: &mut SkipMask,
+        _bin_eval: &mut Option<&mut [bool]>,
+        _ops: &mut OpsStats,
+    ) {
+        for cl in &ctx.lp.clusters {
+            let proxy_zero = ctx.proxy_ri[cl[0]] <= 0.0;
+            for &f in &cl[1..] {
+                mask.skip[f] = proxy_zero;
+                mask.applied[f] = true;
+                if !proxy_zero {
+                    mask.survivors.push(f);
+                }
+            }
+        }
+    }
+}

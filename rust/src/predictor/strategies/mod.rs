@@ -1,0 +1,460 @@
+//! Pluggable zero-output predictors ([`ZeroPredictor`]).
+//!
+//! The paper's contribution is a *predictor* — a policy that declares,
+//! per (output row, filter) pair, "this ReLU output will be zero, skip
+//! the dot product". This module turns that decision into a strategy
+//! interface so alternative predictors (the paper's hybrid, its two
+//! components in isolation, a perfect oracle, related work such as
+//! Shomron et al.'s *Thanks for Nothing* or Zhu et al.'s *SparseNN*)
+//! plug into the same execution engine without touching the tile loop.
+//!
+//! The contract has two halves:
+//!
+//! * [`ZeroPredictor::prepare`] — run once per (model layer, offline
+//!   params, config); produces the [`LayerState`] the online decision
+//!   reads (enabled set, clusters, fitted lines, packed sign bits).
+//! * [`ZeroPredictor::fill_skip_mask`] — the hot-path half: called by
+//!   both engines for every output row of a predictable layer, fills a
+//!   [`SkipMask`] (skip / applied / survivors) from a read-only
+//!   [`RowCtx`]. Side accounting (binCU op counts, `bin_eval` trace
+//!   bits) goes through the `bin_eval`/`ops` out-params so the engine's
+//!   stats stay bit-exact with the pre-strategy implementation.
+//!
+//! Dispatch is **enum-based and static** ([`Strategy`] implements the
+//! trait by delegating to the per-strategy unit structs): the tile loop
+//! never pays a vtable indirection, and the optimizer sees through the
+//! match.
+//!
+//! ## Named strategies
+//!
+//! | name      | decision rule                                                | accuracy risk |
+//! |-----------|--------------------------------------------------------------|---------------|
+//! | `mor`     | hybrid (paper §3.2): proxy zero **and** binary rookie agree  | bounded, low  |
+//! | `binary`  | binarized dot-product rookie alone (paper Fig 6)             | medium        |
+//! | `cluster` | angle-cluster proxy alone (paper Fig 9 ablation)             | high          |
+//! | `oracle`  | skips exactly the true zeros (upper bound, not realizable)   | none          |
+//! | `none`    | never skips (dense baseline)                                 | none          |
+//!
+//! `oracle` reports `incorrect_zero == 0` by construction; `none`
+//! reports `applied() == 0`. Both bracket the realizable strategies.
+//!
+//! ## Adding a strategy
+//!
+//! 1. Add a unit struct + `ZeroPredictor` impl in a new file here.
+//! 2. Add a [`Strategy`] variant and extend [`Strategy::ALL`], the
+//!    delegation match arms, and [`Strategy::parse`].
+//! 3. `rust/tests/strategy_contracts.rs` picks it up via
+//!    `Strategy::ALL`; add a contract test asserting its invariant.
+
+mod binary;
+mod cluster;
+mod mor;
+mod none;
+mod oracle;
+
+pub use binary::BinaryStrategy;
+pub use cluster::ClusterStrategy;
+pub use mor::MorStrategy;
+pub use none::NoneStrategy;
+pub use oracle::OracleStrategy;
+
+use crate::config::PredictorConfig;
+use crate::engine::gemm::PrepackedFilters;
+use crate::model::{LayerPredictor, Node};
+use crate::predictor::OpsStats;
+use crate::util::bits::PackedVec;
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// Per-layer online decision state, built by [`ZeroPredictor::prepare`]
+/// once per (model, params, config) and shared read-only by every
+/// worker thread afterwards.
+#[derive(Clone)]
+pub struct LayerState {
+    /// Pearson correlation per neuron (kept so a cached policy can be
+    /// re-thresholded without re-reading the offline params).
+    pub c: Vec<f32>,
+    /// Binary component enabled per neuron: `c >= T`.
+    pub enabled: Vec<bool>,
+    /// Proxy of each neuron (proxy of a singleton = itself).
+    pub proxy_of: Vec<usize>,
+    /// Clusters `[proxy, members...]` after the angle gate.
+    pub clusters: Vec<Vec<usize>>,
+    /// Cluster heads, hoisted for the engines' always-evaluate phase.
+    /// Empty for strategies that do not use the spatial component.
+    pub proxies: Vec<usize>,
+    /// Fitted line per neuron.
+    pub m: Vec<f32>,
+    pub b: Vec<f32>,
+    /// Regression residual std per neuron (margin unit).
+    pub s: Vec<f32>,
+    /// Packed weight sign bits per filter (binCU operands). Behind an
+    /// `Arc` so threshold sweeps share one packing across candidate
+    /// policies; empty for strategies that never consult the rookie.
+    pub packed_w: Arc<Vec<PackedVec>>,
+}
+
+impl LayerState {
+    /// Shared constructor: strategies opt in to the cluster structure
+    /// (`with_proxies`) and the packed rookie operands (`with_packed`).
+    pub(crate) fn build(
+        lp: &LayerPredictor,
+        node: &Node,
+        cfg: &PredictorConfig,
+        with_proxies: bool,
+        with_packed: bool,
+    ) -> LayerState {
+        let n = lp.neurons();
+        let enabled: Vec<bool> = (0..n).map(|i| lp.c[i] >= cfg.threshold).collect();
+        // angle gate (ablation knob): members whose closest-neighbour angle
+        // exceeds the gate fall out of their cluster and become singletons.
+        let mut clusters: Vec<Vec<usize>> = Vec::new();
+        let mut singled: Vec<usize> = Vec::new();
+        for cl in &lp.clusters {
+            let proxy = cl[0];
+            let mut kept = vec![proxy];
+            for &m in &cl[1..] {
+                let ang = lp.closest_angle_deg.get(m).copied().unwrap_or(90.0);
+                if ang <= cfg.max_cluster_angle_deg {
+                    kept.push(m);
+                } else {
+                    singled.push(m);
+                }
+            }
+            clusters.push(kept);
+        }
+        for s in singled {
+            clusters.push(vec![s]);
+        }
+        let mut proxy_of = vec![0usize; n];
+        for cl in &clusters {
+            for &m in cl {
+                proxy_of[m] = cl[0];
+            }
+        }
+        let proxies: Vec<usize> = if with_proxies {
+            clusters.iter().map(|cl| cl[0]).collect()
+        } else {
+            Vec::new()
+        };
+        let packed_w: Vec<PackedVec> = if with_packed {
+            (0..n).map(|f| PackedVec::from_weights(node.filter(f))).collect()
+        } else {
+            Vec::new()
+        };
+        LayerState {
+            c: lp.c.clone(),
+            enabled,
+            proxy_of,
+            clusters,
+            proxies,
+            m: lp.m.clone(),
+            b: lp.b.clone(),
+            s: lp.s.clone(),
+            packed_w: Arc::new(packed_w),
+        }
+    }
+
+    /// A candidate-threshold variant of this state: only the `enabled`
+    /// set depends on T, so everything expensive (clusters, packed sign
+    /// bits) is shared — the unit of work `choose_threshold` sweeps.
+    pub fn with_threshold(&self, t: f32) -> LayerState {
+        LayerState {
+            enabled: self.c.iter().map(|&c| c >= t).collect(),
+            ..self.clone()
+        }
+    }
+
+    pub fn neurons(&self) -> usize {
+        self.enabled.len()
+    }
+
+    pub fn is_proxy(&self, f: usize) -> bool {
+        self.proxy_of[f] == f
+    }
+}
+
+/// Read-only view of one output row, everything a strategy may consult
+/// while deciding which filters to skip.
+pub struct RowCtx<'a> {
+    pub lp: &'a LayerState,
+    pub cfg: &'a PredictorConfig,
+    /// Packed activation sign bits of this row's patch (rookie operand).
+    pub packed: &'a PackedVec,
+    /// The im2col patch itself (alignment-padded) — ground truth for
+    /// the oracle strategy.
+    pub patch: &'a [i8],
+    /// Prepacked filters of the layer (ground-truth dots).
+    pub pf: &'a PrepackedFilters,
+    /// ReLU inputs of the already-evaluated cluster proxies; indexed by
+    /// neuron, only proxy slots are meaningful.
+    pub proxy_ri: &'a [f32],
+    /// This output row's residual values, if the node has a residual.
+    pub res_row: Option<&'a [f32]>,
+    /// BatchNorm (scale, shift) of the layer, if any.
+    pub bn: Option<&'a (Vec<f32>, Vec<f32>)>,
+    /// Dequantization factor `sw * sx`.
+    pub dq: f32,
+    /// Dot length (MAC/bit-op accounting unit).
+    pub k: u64,
+    /// Filters in the layer.
+    pub cout: usize,
+}
+
+impl RowCtx<'_> {
+    #[inline]
+    pub fn res(&self, f: usize) -> f32 {
+        self.res_row.map(|r| r[f]).unwrap_or(0.0)
+    }
+}
+
+/// The strategy's verdict for one row, written by
+/// [`ZeroPredictor::fill_skip_mask`]. All three views cover the layer's
+/// `cout` filters; `survivors` lists the filters the engine must still
+/// evaluate, in evaluation order.
+pub struct SkipMask<'a> {
+    pub skip: &'a mut [bool],
+    pub applied: &'a mut [bool],
+    pub survivors: &'a mut Vec<usize>,
+}
+
+/// A pluggable zero-output predictor. See the module docs for the
+/// contract; implementations must be pure per-row functions of
+/// [`RowCtx`] (the engines call them from multiple worker threads).
+pub trait ZeroPredictor {
+    /// Stable CLI / config identifier.
+    fn name(&self) -> &'static str;
+
+    /// One-line description (`mor predictors`).
+    fn describe(&self) -> &'static str;
+
+    /// Build the per-layer decision state, once per (layer, params,
+    /// config).
+    fn prepare(&self, lp: &LayerPredictor, node: &Node, cfg: &PredictorConfig) -> LayerState;
+
+    /// Decide skip/applied for every member output of one row.
+    ///
+    /// `bin_eval` (when tracing) and `ops` receive the decision's side
+    /// accounting: a strategy that consults the binary rookie for
+    /// filter `f` must set `bin_eval[f]` and add the dot length to
+    /// `ops.bin_ops` — exactly once per consultation — so traces and
+    /// stats agree with the cycle-level simulator's replay.
+    fn fill_skip_mask(
+        &self,
+        ctx: &RowCtx,
+        mask: &mut SkipMask,
+        bin_eval: &mut Option<&mut [bool]>,
+        ops: &mut OpsStats,
+    );
+}
+
+/// The built-in strategy registry: enum-based static dispatch over the
+/// [`ZeroPredictor`] implementations (no `dyn` on the hot path).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// Hybrid Mixture-of-Rookies (paper default; bit-exact with the
+    /// pre-strategy implementation).
+    Mor,
+    /// Binarized dot-product rookie alone.
+    Binary,
+    /// Angle-cluster proxy alone.
+    Cluster,
+    /// Perfect predictor: skips exactly the true zeros.
+    Oracle,
+    /// Dense baseline: never skips.
+    None,
+}
+
+impl Strategy {
+    /// Every built-in strategy, in presentation order.
+    pub const ALL: [Strategy; 5] = [
+        Strategy::Mor,
+        Strategy::Binary,
+        Strategy::Cluster,
+        Strategy::Oracle,
+        Strategy::None,
+    ];
+
+    /// Parse a CLI / TOML strategy name.
+    pub fn parse(name: &str) -> Result<Strategy> {
+        for s in Strategy::ALL {
+            if s.name() == name {
+                return Ok(s);
+            }
+        }
+        bail!(
+            "unknown predictor strategy '{name}' (expected one of: {})",
+            Strategy::ALL.map(|s| s.name()).join(", ")
+        )
+    }
+
+    /// The strategy the legacy `use_clusters` / `use_binary` component
+    /// toggles described (kept so old TOML files and CLI flags keep
+    /// working).
+    pub fn from_components(use_clusters: bool, use_binary: bool) -> Strategy {
+        match (use_clusters, use_binary) {
+            (true, true) => Strategy::Mor,
+            (true, false) => Strategy::Cluster,
+            (false, true) => Strategy::Binary,
+            (false, false) => Strategy::None,
+        }
+    }
+
+    /// Does the decision involve the spatial (cluster/proxy) component?
+    /// Gates the engines' proxy-first evaluation order and the cycle
+    /// simulator's proxy→member dependency modelling.
+    pub fn uses_clusters(self) -> bool {
+        matches!(self, Strategy::Mor | Strategy::Cluster)
+    }
+
+    /// Does the decision consult the binary rookie (binCU datapath)?
+    pub fn uses_binary(self) -> bool {
+        matches!(self, Strategy::Mor | Strategy::Binary)
+    }
+}
+
+/// Delegation: `Strategy` is itself a [`ZeroPredictor`]; the engines
+/// hold the enum and the match compiles to direct calls.
+impl ZeroPredictor for Strategy {
+    fn name(&self) -> &'static str {
+        match self {
+            Strategy::Mor => MorStrategy.name(),
+            Strategy::Binary => BinaryStrategy.name(),
+            Strategy::Cluster => ClusterStrategy.name(),
+            Strategy::Oracle => OracleStrategy.name(),
+            Strategy::None => NoneStrategy.name(),
+        }
+    }
+
+    fn describe(&self) -> &'static str {
+        match self {
+            Strategy::Mor => MorStrategy.describe(),
+            Strategy::Binary => BinaryStrategy.describe(),
+            Strategy::Cluster => ClusterStrategy.describe(),
+            Strategy::Oracle => OracleStrategy.describe(),
+            Strategy::None => NoneStrategy.describe(),
+        }
+    }
+
+    fn prepare(&self, lp: &LayerPredictor, node: &Node, cfg: &PredictorConfig) -> LayerState {
+        match self {
+            Strategy::Mor => MorStrategy.prepare(lp, node, cfg),
+            Strategy::Binary => BinaryStrategy.prepare(lp, node, cfg),
+            Strategy::Cluster => ClusterStrategy.prepare(lp, node, cfg),
+            Strategy::Oracle => OracleStrategy.prepare(lp, node, cfg),
+            Strategy::None => NoneStrategy.prepare(lp, node, cfg),
+        }
+    }
+
+    #[inline]
+    fn fill_skip_mask(
+        &self,
+        ctx: &RowCtx,
+        mask: &mut SkipMask,
+        bin_eval: &mut Option<&mut [bool]>,
+        ops: &mut OpsStats,
+    ) {
+        match self {
+            Strategy::Mor => MorStrategy.fill_skip_mask(ctx, mask, bin_eval, ops),
+            Strategy::Binary => BinaryStrategy.fill_skip_mask(ctx, mask, bin_eval, ops),
+            Strategy::Cluster => ClusterStrategy.fill_skip_mask(ctx, mask, bin_eval, ops),
+            Strategy::Oracle => OracleStrategy.fill_skip_mask(ctx, mask, bin_eval, ops),
+            Strategy::None => NoneStrategy.fill_skip_mask(ctx, mask, bin_eval, ops),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared decision arithmetic (used by the strategies *and* by the
+// scalar reference engine, which keeps an independent copy of the
+// decision structure as the bit-exactness oracle)
+// ---------------------------------------------------------------------------
+
+/// Apply the layer's BatchNorm affine to an estimated pre-activation.
+#[inline]
+pub fn bn_affine(v: f32, bn: Option<&(Vec<f32>, Vec<f32>)>, f: usize) -> f32 {
+    match bn {
+        Some((scale, shift)) => v * scale[f] + shift[f],
+        None => v,
+    }
+}
+
+/// Skip-confidence margin for neuron `f`: `margin_sigmas` regression
+/// residual stds, propagated through the (multiplicative) BN scale. The
+/// raw paper rule (skip iff estimate < 0) is `margin_sigmas = 0`.
+#[inline]
+pub fn margin_of(
+    lp: &LayerState,
+    bn: Option<&(Vec<f32>, Vec<f32>)>,
+    f: usize,
+    margin_sigmas: f32,
+) -> f32 {
+    if margin_sigmas == 0.0 {
+        return 0.0;
+    }
+    let scale = bn.map(|(sc, _)| sc[f].abs()).unwrap_or(1.0);
+    margin_sigmas * lp.s[f] * scale
+}
+
+/// The binary rookie's skip verdict for one (row, filter) pair, with
+/// its side accounting (binCU op count, `bin_eval` trace bit). Callers
+/// gate the call on "rookie consulted" (enabled + proxy-zero in hybrid
+/// mode), so the accounting only happens when the predictor ran.
+#[inline]
+pub(crate) fn binary_says_skip(
+    ctx: &RowCtx,
+    f: usize,
+    bin_eval: &mut Option<&mut [bool]>,
+    ops: &mut OpsStats,
+) -> bool {
+    let p_bin = ctx.packed.dot(&ctx.lp.packed_w[f]);
+    ops.bin_ops += ctx.k;
+    if let Some(be) = bin_eval.as_deref_mut() {
+        be[f] = true;
+    }
+    let est = ctx.lp.m[f] * p_bin as f32 + ctx.lp.b[f];
+    let est_ri = bn_affine(est, ctx.bn, f) + ctx.res(f);
+    est_ri < -margin_of(ctx.lp, ctx.bn, f, ctx.cfg.margin_sigmas)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_every_strategy() {
+        for s in Strategy::ALL {
+            assert_eq!(Strategy::parse(s.name()).unwrap(), s);
+        }
+        assert!(Strategy::parse("learned").is_err());
+    }
+
+    #[test]
+    fn component_mapping_matches_legacy_toggles() {
+        assert_eq!(Strategy::from_components(true, true), Strategy::Mor);
+        assert_eq!(Strategy::from_components(true, false), Strategy::Cluster);
+        assert_eq!(Strategy::from_components(false, true), Strategy::Binary);
+        assert_eq!(Strategy::from_components(false, false), Strategy::None);
+    }
+
+    #[test]
+    fn component_flags_consistent() {
+        assert!(Strategy::Mor.uses_clusters() && Strategy::Mor.uses_binary());
+        assert!(!Strategy::Binary.uses_clusters() && Strategy::Binary.uses_binary());
+        assert!(Strategy::Cluster.uses_clusters() && !Strategy::Cluster.uses_binary());
+        assert!(!Strategy::Oracle.uses_clusters() && !Strategy::Oracle.uses_binary());
+        assert!(!Strategy::None.uses_clusters() && !Strategy::None.uses_binary());
+    }
+
+    #[test]
+    fn names_are_unique_and_lowercase() {
+        let names: Vec<&str> = Strategy::ALL.iter().map(|s| s.name()).collect();
+        let mut dedup = names.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), names.len());
+        for n in names {
+            assert_eq!(n, n.to_lowercase());
+        }
+    }
+}

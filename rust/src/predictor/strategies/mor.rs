@@ -1,0 +1,58 @@
+//! `mor` — the paper's hybrid Mixture-of-Rookies predictor (§3.2).
+//!
+//! A member neuron is skipped only when **both** components agree on a
+//! zero output: its cluster proxy produced a zero ReLU output (spatial
+//! correlation, Eq. 7) *and* the binarized dot-product rookie estimates
+//! a negative pre-activation (self correlation, Eq. 1–2). Cluster
+//! proxies themselves are always evaluated by the engine before this
+//! mask fills — their ReLU inputs arrive via [`RowCtx::proxy_ri`].
+//!
+//! This strategy is bit-exact with the pre-strategy implementation:
+//! same decision order (enabled gate → proxy gate → rookie consult),
+//! same accounting (the rookie is only charged when actually consulted).
+
+use super::{binary_says_skip, LayerState, RowCtx, SkipMask, ZeroPredictor};
+use crate::config::PredictorConfig;
+use crate::model::{LayerPredictor, Node};
+use crate::predictor::OpsStats;
+
+pub struct MorStrategy;
+
+impl ZeroPredictor for MorStrategy {
+    fn name(&self) -> &'static str {
+        "mor"
+    }
+
+    fn describe(&self) -> &'static str {
+        "hybrid: skip when the cluster proxy is zero AND the binary rookie agrees (paper default)"
+    }
+
+    fn prepare(&self, lp: &LayerPredictor, node: &Node, cfg: &PredictorConfig) -> LayerState {
+        LayerState::build(lp, node, cfg, true, true)
+    }
+
+    #[inline]
+    fn fill_skip_mask(
+        &self,
+        ctx: &RowCtx,
+        mask: &mut SkipMask,
+        bin_eval: &mut Option<&mut [bool]>,
+        ops: &mut OpsStats,
+    ) {
+        for cl in &ctx.lp.clusters {
+            let proxy_zero = ctx.proxy_ri[cl[0]] <= 0.0;
+            for &f in &cl[1..] {
+                // both components must agree; the rookie is only
+                // consulted (and only accounted) when the proxy says
+                // zero and the neuron's correlation passed the T gate
+                let ap = ctx.lp.enabled[f];
+                let sk = ap && proxy_zero && binary_says_skip(ctx, f, bin_eval, ops);
+                mask.skip[f] = sk;
+                mask.applied[f] = ap;
+                if !sk {
+                    mask.survivors.push(f);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,40 @@
+//! `none` — the dense baseline: never skips, never consults a
+//! predictor component. Every output survives, every output is counted
+//! `not_applied`; identical results (and identical accounting) to
+//! running with no policy at all.
+
+use super::{LayerState, RowCtx, SkipMask, ZeroPredictor};
+use crate::config::PredictorConfig;
+use crate::model::{LayerPredictor, Node};
+use crate::predictor::OpsStats;
+
+pub struct NoneStrategy;
+
+impl ZeroPredictor for NoneStrategy {
+    fn name(&self) -> &'static str {
+        "none"
+    }
+
+    fn describe(&self) -> &'static str {
+        "dense baseline: never skip (no predictor datapath)"
+    }
+
+    fn prepare(&self, lp: &LayerPredictor, node: &Node, cfg: &PredictorConfig) -> LayerState {
+        LayerState::build(lp, node, cfg, false, false)
+    }
+
+    #[inline]
+    fn fill_skip_mask(
+        &self,
+        ctx: &RowCtx,
+        mask: &mut SkipMask,
+        _bin_eval: &mut Option<&mut [bool]>,
+        _ops: &mut OpsStats,
+    ) {
+        for f in 0..ctx.cout {
+            mask.skip[f] = false;
+            mask.applied[f] = false;
+            mask.survivors.push(f);
+        }
+    }
+}

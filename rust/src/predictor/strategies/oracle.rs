@@ -1,0 +1,58 @@
+//! `oracle` — the perfect zero predictor: computes every true
+//! pre-activation and skips exactly the outputs whose ReLU input is
+//! non-positive. Not realizable in hardware (the decision *is* the
+//! computation it saves), but the upper bound every realizable
+//! strategy is measured against: maximal savings on predictable
+//! layers, `incorrect_zero == 0` by construction, and logits that are
+//! bit-identical to the dense forward (a skipped output's true ReLU
+//! value is 0).
+//!
+//! The engines force ground-truth accounting for this strategy
+//! regardless of `RunOpts::oracle`, so its Fig-12 categories are always
+//! populated.
+
+use super::{LayerState, RowCtx, SkipMask, ZeroPredictor};
+use crate::config::PredictorConfig;
+use crate::engine::{dot::dot_i8, relu_input};
+use crate::model::{LayerPredictor, Node};
+use crate::predictor::OpsStats;
+
+pub struct OracleStrategy;
+
+impl ZeroPredictor for OracleStrategy {
+    fn name(&self) -> &'static str {
+        "oracle"
+    }
+
+    fn describe(&self) -> &'static str {
+        "perfect predictor: skips exactly the true zeros (upper bound; incorrect_zero == 0)"
+    }
+
+    fn prepare(&self, lp: &LayerPredictor, node: &Node, cfg: &PredictorConfig) -> LayerState {
+        // needs neither the cluster structure nor the packed rookie
+        // operands — the ground truth is the patch itself
+        LayerState::build(lp, node, cfg, false, false)
+    }
+
+    #[inline]
+    fn fill_skip_mask(
+        &self,
+        ctx: &RowCtx,
+        mask: &mut SkipMask,
+        _bin_eval: &mut Option<&mut [bool]>,
+        _ops: &mut OpsStats,
+    ) {
+        for f in 0..ctx.cout {
+            // the true dot product decides; this host-side work models
+            // no hardware and is charged to no counter
+            let d = dot_i8(ctx.patch, ctx.pf.filter(f));
+            let ri = relu_input(d, ctx.dq, ctx.bn, f, ctx.res(f));
+            let sk = ri <= 0.0;
+            mask.skip[f] = sk;
+            mask.applied[f] = true;
+            if !sk {
+                mask.survivors.push(f);
+            }
+        }
+    }
+}

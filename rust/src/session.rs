@@ -1,0 +1,305 @@
+//! [`Session`] — the single entry point for running inference.
+//!
+//! A session owns everything a forward pass needs: the model (with its
+//! prepacked GEMM weight blocks warmed), the prepared predictor policy
+//! (one [`crate::predictor::strategies::LayerState`] per predictable
+//! layer), and the execution options (engine, row-tile threads, trace
+//! collection). Callers that used to hand-thread
+//! `(Model, PredictorParams, MorPolicy, RunOpts)` through evaluation,
+//! serving and the figure harness build one of these instead:
+//!
+//! ```no_run
+//! # use mor::model::Artifacts;
+//! # use mor::session::Session;
+//! # let arts = Artifacts::load("artifacts", "tds").unwrap();
+//! let session = Session::build(&arts.model)
+//!     .params(&arts.predictor)
+//!     .predictor("mor").unwrap()
+//!     .threads(4)
+//!     .finish();
+//! let result = session.run_sample(arts.data.test_sample(0));
+//! ```
+//!
+//! Sessions are cheap to derive from: [`Session::with_threshold`]
+//! re-thresholds the cached policy without re-packing filter sign bits,
+//! and [`Session::with_policy`] swaps the policy while sharing the
+//! model (and its prepacked weights) — the units of work behind
+//! [`crate::predictor::choose_threshold`]'s sweep and the figure
+//! harness's ablations.
+//!
+//! Internally the model and policy live behind `Arc`s, so the serving
+//! coordinator's worker threads share one prepacked copy.
+
+use crate::config::PredictorConfig;
+use crate::model::{Artifacts, Model, PredictorParams};
+use crate::predictor::strategies::{Strategy, ZeroPredictor};
+use crate::predictor::{exec, EngineSel, MorPolicy, RunOpts, RunResult};
+use anyhow::Result;
+use std::sync::Arc;
+
+/// A prepared inference context: model + policy + execution options.
+#[derive(Clone)]
+pub struct Session {
+    model: Arc<Model>,
+    policy: Option<Arc<MorPolicy>>,
+    opts: RunOpts,
+}
+
+impl Session {
+    /// Start building a session for `model`. The model is cloned once
+    /// at [`SessionBuilder::finish`]; the original stays usable.
+    pub fn build(model: &Model) -> SessionBuilder<'_> {
+        SessionBuilder {
+            model,
+            params: None,
+            cfg: PredictorConfig::default(),
+            opts: RunOpts::default(),
+        }
+    }
+
+    /// Convenience: a session over an artifact bundle's model and
+    /// offline predictor params with the given config.
+    pub fn from_artifacts(arts: &Artifacts, cfg: PredictorConfig) -> Session {
+        Session::build(&arts.model)
+            .params(&arts.predictor)
+            .config(cfg)
+            .finish()
+    }
+
+    /// Run one sample through the session.
+    pub fn run_sample(&self, input: &[f32]) -> RunResult {
+        exec::run_sample(&self.model, self.policy.as_deref(), input, self.opts)
+    }
+
+    /// Run a micro-batch; bit-identical to mapping [`Session::run_sample`]
+    /// over the inputs (see `rust/tests/batch_equivalence.rs`).
+    pub fn run_batch(&self, inputs: &[&[f32]]) -> Vec<RunResult> {
+        exec::run_batch(&self.model, self.policy.as_deref(), inputs, self.opts)
+    }
+
+    pub fn model(&self) -> &Model {
+        &self.model
+    }
+
+    /// The shared model handle (serving workers clone this).
+    pub fn model_arc(&self) -> Arc<Model> {
+        Arc::clone(&self.model)
+    }
+
+    pub fn policy(&self) -> Option<&MorPolicy> {
+        self.policy.as_deref()
+    }
+
+    /// The shared policy handle (serving workers clone this).
+    pub fn policy_arc(&self) -> Option<Arc<MorPolicy>> {
+        self.policy.clone()
+    }
+
+    pub fn opts(&self) -> RunOpts {
+        self.opts
+    }
+
+    /// The strategy that actually executes: the prepared policy's, or
+    /// `none` when the session runs dense (no offline params supplied,
+    /// or the `none` strategy requested). A requested strategy that
+    /// could not be prepared is deliberately *not* reported — reports
+    /// describe what ran.
+    pub fn strategy(&self) -> Strategy {
+        self.policy
+            .as_deref()
+            .map(|p| p.strategy())
+            .unwrap_or(Strategy::None)
+    }
+
+    /// Stable name of the active strategy, for reports and bench JSON.
+    pub fn predictor_name(&self) -> &'static str {
+        self.strategy().name()
+    }
+
+    /// A derived session with a different (or no) policy, sharing the
+    /// model and its prepacked weights.
+    pub fn with_policy(&self, policy: Option<MorPolicy>) -> Session {
+        Session {
+            model: Arc::clone(&self.model),
+            policy: policy.map(Arc::new),
+            opts: self.opts,
+        }
+    }
+
+    /// A derived session at candidate threshold `t`: the cached policy
+    /// is re-thresholded (enabled sets only), packed filter sign bits
+    /// and the model are shared. Dense sessions stay dense.
+    pub fn with_threshold(&self, t: f32) -> Session {
+        self.with_policy(self.policy.as_deref().map(|p| p.with_threshold(t)))
+    }
+
+    /// A derived session with different execution options (same model,
+    /// same policy).
+    pub fn with_opts(&self, opts: RunOpts) -> Session {
+        Session { opts, ..self.clone() }
+    }
+}
+
+/// Builder for [`Session`]; every knob has the same default as the
+/// loose-argument API it replaces.
+pub struct SessionBuilder<'a> {
+    model: &'a Model,
+    params: Option<&'a PredictorParams>,
+    cfg: PredictorConfig,
+    opts: RunOpts,
+}
+
+impl<'a> SessionBuilder<'a> {
+    /// Offline predictor parameters (fitted lines, clusters). Without
+    /// them the session runs dense regardless of strategy.
+    pub fn params(mut self, params: &'a PredictorParams) -> Self {
+        self.params = Some(params);
+        self
+    }
+
+    /// Select the skip strategy by name (`mor`, `binary`, `cluster`,
+    /// `oracle`, `none`) — the `--predictor` CLI surface.
+    pub fn predictor(mut self, name: &str) -> Result<Self> {
+        self.cfg.strategy = Strategy::parse(name)?;
+        Ok(self)
+    }
+
+    /// Select the skip strategy directly.
+    pub fn strategy(mut self, strategy: Strategy) -> Self {
+        self.cfg.strategy = strategy;
+        self
+    }
+
+    /// Replace the whole predictor config (strategy, threshold, margin,
+    /// angle gate).
+    pub fn config(mut self, cfg: PredictorConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Correlation threshold T.
+    pub fn threshold(mut self, t: f32) -> Self {
+        self.cfg.threshold = t;
+        self
+    }
+
+    /// Row-tile worker threads per forward pass.
+    pub fn threads(mut self, n: usize) -> Self {
+        self.opts.threads = n;
+        self
+    }
+
+    /// Compute-engine implementation (tiled GEMM vs scalar reference).
+    pub fn engine(mut self, engine: EngineSel) -> Self {
+        self.opts.engine = engine;
+        self
+    }
+
+    /// Compute the true value of skipped outputs (Fig-12 categories).
+    pub fn oracle(mut self, on: bool) -> Self {
+        self.opts.oracle = on;
+        self
+    }
+
+    /// Collect per-layer skip traces for the cycle-level simulator.
+    pub fn collect_trace(mut self, on: bool) -> Self {
+        self.opts.collect_trace = on;
+        self
+    }
+
+    /// Build the session: clone the model behind an `Arc`, warm its
+    /// prepacked weight blocks (tiled engine), and prepare the policy
+    /// through the configured strategy.
+    pub fn finish(self) -> Session {
+        let model = Arc::new(self.model.clone());
+        if self.opts.engine == EngineSel::Tiled {
+            model.prepacked();
+        }
+        let policy = match (self.params, self.cfg.strategy) {
+            // dense execution needs no per-layer state at all
+            (_, Strategy::None) | (None, _) => None,
+            (Some(p), _) => Some(Arc::new(MorPolicy::new(&model, p, self.cfg))),
+        };
+        Session { model, policy, opts: self.opts }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::synth;
+    use crate::util::rng::Rng;
+
+    fn input(model: &Model, seed: u64) -> Vec<f32> {
+        let (h, w, c) = model.input_shape;
+        let mut rng = Rng::new(seed);
+        (0..h * w * c).map(|_| rng.uniform(-1.0, 1.0) as f32).collect()
+    }
+
+    #[test]
+    fn dense_session_matches_exec() {
+        let m = synth::tiny_serving_model(3);
+        let x = input(&m, 4);
+        let s = Session::build(&m).finish();
+        assert_eq!(s.predictor_name(), "none");
+        let want = exec::run_sample(&m, None, &x, RunOpts::default());
+        let got = s.run_sample(&x);
+        assert_eq!(want.logits, got.logits);
+        assert_eq!(want.ops, got.ops);
+    }
+
+    #[test]
+    fn predictor_by_name_builds_policy() {
+        let m = synth::tiny_serving_model(5);
+        let params = synth::predictor_for(&m, 6);
+        let s = Session::build(&m)
+            .params(&params)
+            .predictor("mor")
+            .unwrap()
+            .threshold(0.5)
+            .finish();
+        assert_eq!(s.predictor_name(), "mor");
+        assert!(s.policy().is_some());
+        assert!(Session::build(&m).predictor("bogus").is_err());
+    }
+
+    #[test]
+    fn none_strategy_is_dense_even_with_params() {
+        let m = synth::tiny_serving_model(7);
+        let params = synth::predictor_for(&m, 8);
+        let s = Session::build(&m)
+            .params(&params)
+            .strategy(Strategy::None)
+            .finish();
+        assert!(s.policy().is_none());
+        assert_eq!(s.predictor_name(), "none");
+    }
+
+    #[test]
+    fn with_threshold_shares_packed_weights() {
+        let m = synth::tiny_serving_model(9);
+        let s = Session::from_artifacts(
+            &synth::artifacts_for(m, 11, 2, 2),
+            PredictorConfig { threshold: 0.9, ..Default::default() },
+        );
+        let t = s.with_threshold(0.2);
+        let (a, b) = (s.policy().unwrap(), t.policy().unwrap());
+        assert_eq!(b.cfg.threshold, 0.2);
+        for (l, st) in &a.layers {
+            // same Arc — the sign bits were not re-packed
+            assert!(Arc::ptr_eq(&st.packed_w, &b.layers[l].packed_w));
+            // lower T enables at least as many neurons
+            let on_a = st.enabled.iter().filter(|&&e| e).count();
+            let on_b = b.layers[l].enabled.iter().filter(|&&e| e).count();
+            assert!(on_b >= on_a);
+        }
+    }
+
+    #[test]
+    fn with_policy_shares_model() {
+        let m = synth::tiny_serving_model(13);
+        let s = Session::build(&m).finish();
+        let d = s.with_policy(None);
+        assert!(Arc::ptr_eq(&s.model_arc(), &d.model_arc()));
+    }
+}

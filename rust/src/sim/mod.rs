@@ -184,7 +184,9 @@ impl Simulator {
                 };
 
                 match (lpol, trace) {
-                    (Some(lp), Some(tr)) if policy.map(|p| p.cfg.use_clusters).unwrap_or(false) => {
+                    (Some(lp), Some(tr))
+                        if policy.map(|p| p.strategy().uses_clusters()).unwrap_or(false) =>
+                    {
                         // proxies first
                         let mut proxy_end = vec![row_start; cout];
                         for cl in &lp.clusters {

@@ -11,6 +11,7 @@
 
 use mor::config::PredictorConfig;
 use mor::model::synth;
+use mor::predictor::strategies::Strategy;
 use mor::predictor::{exec::run_batch, exec::run_sample, EngineSel, MorPolicy, RunOpts, RunResult};
 use mor::util::prop::property;
 use mor::util::rng::Rng;
@@ -49,8 +50,7 @@ fn run_batch_bit_identical_to_per_sample_run() {
         let inputs: Vec<&[f32]> = xs.iter().map(|x| x.as_slice()).collect();
         let cfg = PredictorConfig {
             threshold: *g.pick(&[0.0f32, 0.5, 0.9]),
-            use_clusters: g.bool(),
-            use_binary: g.bool(),
+            strategy: *g.pick(&Strategy::ALL),
             margin_sigmas: *g.pick(&[0.0f32, 1.0]),
             ..Default::default()
         };

@@ -9,6 +9,7 @@
 
 use mor::config::PredictorConfig;
 use mor::model::synth;
+use mor::predictor::strategies::Strategy;
 use mor::predictor::{exec::run_sample, EngineSel, MorPolicy, RunOpts, RunResult};
 use mor::util::prop::property;
 use mor::util::rng::Rng;
@@ -46,8 +47,7 @@ fn tiled_engine_bit_identical_to_scalar_reference() {
         let x = rand_input(g.rng(), h * w * c);
         let cfg = PredictorConfig {
             threshold: *g.pick(&[0.0f32, 0.5, 0.9]),
-            use_clusters: g.bool(),
-            use_binary: g.bool(),
+            strategy: *g.pick(&Strategy::ALL),
             margin_sigmas: *g.pick(&[0.0f32, 1.0]),
             ..Default::default()
         };
@@ -72,8 +72,8 @@ fn tiled_engine_bit_identical_to_scalar_reference() {
                 if let Some(msg) = diff(&want, &got) {
                     return Err(format!(
                         "policy_on={policy_on} threads={threads} oracle={oracle} \
-                         clusters={} binary={} T={}: {msg}",
-                        cfg.use_clusters, cfg.use_binary, cfg.threshold
+                         strategy={:?} T={}: {msg}",
+                        cfg.strategy, cfg.threshold
                     ));
                 }
             }

@@ -6,7 +6,9 @@
 
 use mor::config::{Config, PredictorConfig};
 use mor::model::Artifacts;
+use mor::predictor::strategies::Strategy;
 use mor::predictor::{choose_threshold, exec, MorPolicy, MorRun, RunOpts};
+use mor::session::Session;
 use mor::sim::Simulator;
 
 fn artifacts_dir() -> String {
@@ -49,7 +51,8 @@ fn engine_accuracy_matches_python_int8() {
     // on the full test split (same integer dataflow contract).
     for name in mor::MODELS {
         let Some(a) = load(name) else { return };
-        let s = MorRun::evaluate(&a, None, a.data.n_test(), RunOpts::default());
+        let dense = Session::build(&a.model).finish();
+        let s = MorRun::evaluate(&a, &dense, a.data.n_test());
         let diff = (s.accuracy - a.meta.int8_accuracy).abs();
         assert!(
             diff < 0.02,
@@ -98,14 +101,13 @@ fn predictor_accuracy_loss_within_budget() {
     for name in mor::MODELS {
         let Some(a) = load(name) else { return };
         let n = 256.min(a.data.n_test());
-        let base = MorRun::evaluate(&a, None, n, RunOpts::default());
         let thr = choose_threshold(&a, &PredictorConfig::default(), 3.2, 32);
-        let pol = MorPolicy::new(
-            &a.model,
-            &a.predictor,
+        let sess = Session::from_artifacts(
+            &a,
             PredictorConfig { threshold: thr, ..Default::default() },
         );
-        let s = MorRun::evaluate(&a, Some(&pol), n, RunOpts::default());
+        let base = MorRun::evaluate(&a, &sess.with_policy(None), n);
+        let s = MorRun::evaluate(&a, &sess, n);
         let loss_pp = (base.accuracy - s.accuracy) * 100.0;
         assert!(
             loss_pp < 1.5,
@@ -123,19 +125,14 @@ fn hybrid_dominates_binary_alone() {
     // aggressively (both must agree) and therefore make FEWER wrong skips.
     let Some(a) = load("tds") else { return };
     let n = 128.min(a.data.n_test());
-    let mk = |use_clusters: bool| {
-        MorPolicy::new(
-            &a.model,
-            &a.predictor,
-            PredictorConfig {
-                threshold: 0.6,
-                use_clusters,
-                ..Default::default()
-            },
+    let mk = |strategy: Strategy| {
+        Session::from_artifacts(
+            &a,
+            PredictorConfig { threshold: 0.6, strategy, ..Default::default() },
         )
     };
-    let bin = MorRun::evaluate(&a, Some(&mk(false)), n, RunOpts::default());
-    let hyb = MorRun::evaluate(&a, Some(&mk(true)), n, RunOpts::default());
+    let bin = MorRun::evaluate(&a, &mk(Strategy::Binary), n);
+    let hyb = MorRun::evaluate(&a, &mk(Strategy::Mor), n);
     let bin_wrong = bin.pred.frac(bin.pred.incorrect_zero);
     let hyb_wrong = hyb.pred.frac(hyb.pred.incorrect_zero);
     assert!(
@@ -279,14 +276,14 @@ fn serving_coordinator_end_to_end() {
     // Offline (synthetic-artifact) coverage lives in
     // rust/tests/serving_pipeline.rs; this exercises the real tds bundle.
     let Some(a) = load("tds") else { return };
-    let pol = MorPolicy::new(&a.model, &a.predictor, PredictorConfig::default());
+    let session = Session::from_artifacts(&a, PredictorConfig::default());
     let mut stream = mor::workload::RequestStream::new(400.0, a.data.n_test(), 5);
     let requests = stream.generate(0.5);
     let n = requests.len();
     assert!(n > 100);
     let rep = mor::coordinator::serve(
         &a,
-        Some(pol),
+        &session,
         mor::coordinator::Backend::Engine,
         requests,
         &artifacts_dir(),
@@ -295,6 +292,7 @@ fn serving_coordinator_end_to_end() {
     .expect("serve");
     assert_eq!(rep.completed, n, "requests dropped");
     assert_eq!(rep.dropped, 0);
+    assert_eq!(rep.predictor, "mor");
     assert!(rep.accuracy > 0.5);
     assert!(rep.p99_ms < 5_000.0, "p99 {} ms", rep.p99_ms);
 }
@@ -306,7 +304,7 @@ fn fig1_band_matches_paper_shape() {
     let mut fracs = Vec::new();
     for name in mor::MODELS {
         let Some(a) = load(name) else { return };
-        let s = MorRun::evaluate(&a, None, 64, RunOpts::default());
+        let s = MorRun::evaluate(&a, &Session::build(&a.model).finish(), 64);
         let f = s.ops.neg_relu_macs as f64 / s.ops.macs_total as f64;
         assert!(
             (0.05..0.90).contains(&f),
@@ -316,4 +314,35 @@ fn fig1_band_matches_paper_shape() {
     }
     let avg = fracs.iter().sum::<f64>() / fracs.len() as f64;
     assert!((0.15..0.80).contains(&avg), "average {avg:.2} out of band");
+}
+
+#[test]
+fn strategies_end_to_end_on_artifacts() {
+    // `--predictor <name>` semantics over the real tds bundle: `none`
+    // reproduces the dense baseline exactly, `oracle` skips with zero
+    // wrong skips and dense-identical logits, and the realizable
+    // strategies stay within their contracts.
+    let Some(a) = load("tds") else { return };
+    let n = 32.min(a.data.n_test());
+    let mk = |strategy: Strategy| {
+        Session::from_artifacts(
+            &a,
+            PredictorConfig { threshold: 0.6, strategy, ..Default::default() },
+        )
+    };
+    let dense = MorRun::evaluate(&a, &mk(Strategy::None), n);
+    let oracle = MorRun::evaluate(&a, &mk(Strategy::Oracle), n);
+    assert_eq!(oracle.pred.incorrect_zero, 0, "oracle made a wrong skip");
+    assert_eq!(oracle.pred.incorrect_nonzero, 0);
+    assert_eq!(oracle.accuracy, dense.accuracy, "oracle changed answers");
+    assert!(oracle.ops.macs_saved_frac() > 0.0);
+    for strategy in [Strategy::Mor, Strategy::Binary, Strategy::Cluster] {
+        let s = MorRun::evaluate(&a, &mk(strategy), n);
+        // no realizable strategy can skip more true zeros than the oracle
+        assert!(
+            s.pred.correct_zero <= oracle.pred.correct_zero,
+            "{strategy:?} skipped more than the oracle"
+        );
+        assert!(s.ops.macs_done <= dense.ops.macs_done);
+    }
 }

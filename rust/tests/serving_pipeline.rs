@@ -7,17 +7,16 @@ use mor::config::PredictorConfig;
 use mor::coordinator::{serve, Backend, ServeOpts};
 use mor::model::synth;
 use mor::model::Artifacts;
-use mor::predictor::MorPolicy;
+use mor::session::Session;
 use mor::workload::{Arrival, RequestStream};
 
 fn synth_arts() -> Artifacts {
     synth::artifacts_for(synth::tiny_serving_model(9), 10, 32, 4)
 }
 
-fn policy(arts: &Artifacts) -> MorPolicy {
-    MorPolicy::new(
-        &arts.model,
-        &arts.predictor,
+fn session(arts: &Artifacts) -> Session {
+    Session::from_artifacts(
+        arts,
         PredictorConfig { threshold: 0.5, ..Default::default() },
     )
 }
@@ -37,7 +36,7 @@ fn serve_smoke_unbatched() {
     assert!(n > 50, "trace too short: {n}");
     let rep = serve(
         &arts,
-        Some(policy(&arts)),
+        &session(&arts),
         Backend::Engine,
         requests,
         "unused",
@@ -45,6 +44,7 @@ fn serve_smoke_unbatched() {
     )
     .expect("serve");
     assert_eq!(rep.completed, n, "requests lost without batching");
+    assert_eq!(rep.predictor, "mor", "report must name the active strategy");
     assert_eq!(rep.dropped, 0);
     assert!(rep.first_error.is_none());
     assert!((rep.batch_occupancy - 1.0).abs() < 1e-9, "max_batch=1 must not batch");
@@ -57,10 +57,11 @@ fn serve_smoke_batched_matches_unbatched_answers() {
     let arts = synth_arts();
     let requests = trace(&arts, 2);
     let n = requests.len();
+    let sess = session(&arts);
     let run = |max_batch: usize| {
         serve(
             &arts,
-            Some(policy(&arts)),
+            &sess,
             Backend::Engine,
             requests.clone(),
             "unused",
@@ -92,7 +93,7 @@ fn serve_closed_loop_completes_all() {
     let n = requests.len();
     let rep = serve(
         &arts,
-        Some(policy(&arts)),
+        &session(&arts),
         Backend::Engine,
         requests,
         "unused",
@@ -125,7 +126,8 @@ fn serve_bursty_arrivals_complete() {
     assert!(n > 20, "burst trace too short: {n}");
     let rep = serve(
         &arts,
-        None, // dense baseline: accuracy vs self-consistent labels is 1.0
+        // dense baseline: accuracy vs self-consistent labels is 1.0
+        &session(&arts).with_policy(None),
         Backend::Engine,
         requests,
         "unused",
@@ -141,6 +143,7 @@ fn serve_bursty_arrivals_complete() {
     assert_eq!(rep.completed, n);
     assert_eq!(rep.dropped, 0);
     assert_eq!(rep.accuracy, 1.0, "dense forward must reproduce its own labels");
+    assert_eq!(rep.predictor, "none");
 }
 
 #[test]
@@ -152,7 +155,7 @@ fn serve_dense_batched_accuracy_is_exact() {
     let n = requests.len();
     let rep = serve(
         &arts,
-        None,
+        &session(&arts).with_policy(None),
         Backend::Engine,
         requests,
         "unused",

@@ -1,0 +1,313 @@
+//! Strategy-contract property suite: every named [`Strategy`] must obey
+//! its documented contract on random `synth` models, across both
+//! engines, thread counts and batch sizes.
+//!
+//! * `none` — skips nothing; bit-identical to running with no policy.
+//! * `oracle` — `incorrect_zero == 0` and `incorrect_nonzero == 0` by
+//!   construction; logits bit-identical to the dense forward; skips
+//!   exactly the predictable layers' true zeros.
+//! * `mor` — bit-identical across `EngineSel` variants and batch sizes
+//!   1..16 (the scalar per-neuron path is the retained pre-refactor
+//!   decision code, so scalar-vs-tiled identity pins the strategy
+//!   implementation to the golden behaviour).
+//! * `binary` — only T-enabled neurons are ever skipped.
+//! * `cluster` — proxies are never skipped; the hybrid's skip set is a
+//!   subset of the cluster strategy's (both components must agree).
+//!
+//! Runs fully offline — models come from `mor::model::synth`, no
+//! `make artifacts` needed. CI runs one `contract_<name>` filter per
+//! matrix leg.
+
+use mor::config::PredictorConfig;
+use mor::model::synth;
+use mor::predictor::strategies::Strategy;
+use mor::predictor::{EngineSel, MorPolicy, RunOpts, RunResult};
+use mor::session::Session;
+use mor::util::prop::property;
+use mor::util::rng::Rng;
+
+fn rand_input(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.uniform(-1.0, 1.0) as f32).collect()
+}
+
+fn diff(want: &RunResult, got: &RunResult) -> Option<String> {
+    if want.logits != got.logits {
+        return Some("logits differ".into());
+    }
+    if want.pred != got.pred {
+        return Some(format!("pred stats differ: want {:?} got {:?}", want.pred, got.pred));
+    }
+    if want.ops != got.ops {
+        return Some(format!("ops stats differ: want {:?} got {:?}", want.ops, got.ops));
+    }
+    if want.traces != got.traces {
+        return Some("skip traces differ".into());
+    }
+    None
+}
+
+/// A session over a random model with the given strategy; always traces
+/// and computes oracle ground truth so every stat is populated.
+fn session_for(
+    model: &mor::model::Model,
+    seed: u64,
+    strategy: Strategy,
+    threshold: f32,
+) -> Session {
+    let params = synth::predictor_for(model, seed);
+    Session::build(model)
+        .params(&params)
+        .strategy(strategy)
+        .threshold(threshold)
+        .oracle(true)
+        .collect_trace(true)
+        .finish()
+}
+
+/// Stats identities every strategy must maintain.
+fn assert_identities(r: &RunResult, label: &str) {
+    assert_eq!(
+        r.pred.applied() + r.pred.not_applied,
+        r.pred.relu_outputs,
+        "{label}: outcome categories must partition ReLU outputs"
+    );
+    assert!(r.ops.macs_done <= r.ops.macs_total, "{label}: did more MACs than dense");
+    let saved = r.ops.macs_total - r.ops.macs_done;
+    assert_eq!(
+        saved, r.ops.weight_bytes_saved,
+        "{label}: MAC savings and weight-byte savings must agree (1 B/weight)"
+    );
+}
+
+#[test]
+fn contract_none() {
+    property("`none` skips nothing and equals the unpoliced run", 25, |g| {
+        let model = synth::random_model(g.rng());
+        let (h, w, c) = model.input_shape;
+        let x = rand_input(g.rng(), h * w * c);
+        // Session::finish shortcuts the `none` strategy to "no policy";
+        // force the policied path too, so the NoneStrategy mask fill
+        // itself (not just the shortcut) is under test
+        let params = synth::predictor_for(&model, g.seed);
+        let pol = MorPolicy::new(
+            &model,
+            &params,
+            PredictorConfig { strategy: Strategy::None, threshold: 0.5, ..Default::default() },
+        );
+        let sess = session_for(&model, g.seed, Strategy::None, 0.5);
+        if sess.policy().is_some() {
+            return Err("`none` session must run dense".into());
+        }
+        let dense = sess.run_sample(&x);
+        let r = sess.with_policy(Some(pol)).run_sample(&x);
+        if let Some(msg) = diff(&dense, &r) {
+            return Err(format!("policied `none` differs from unpoliced: {msg}"));
+        }
+        if r.pred.applied() != 0 {
+            return Err("`none` applied a prediction".into());
+        }
+        if r.traces.iter().any(|t| t.skipped.iter().any(|&s| s)) {
+            return Err("`none` skipped an output".into());
+        }
+        assert_identities(&r, "none");
+        Ok(())
+    });
+}
+
+#[test]
+fn contract_oracle() {
+    property("`oracle` skips exactly the true zeros", 25, |g| {
+        let model = synth::random_model(g.rng());
+        let (h, w, c) = model.input_shape;
+        let x = rand_input(g.rng(), h * w * c);
+        let sess = session_for(&model, g.seed, Strategy::Oracle, 0.5);
+        let r = sess.run_sample(&x);
+        let dense = sess.with_policy(None).run_sample(&x);
+        if r.pred.incorrect_zero != 0 {
+            return Err(format!("oracle made {} wrong skips", r.pred.incorrect_zero));
+        }
+        if r.pred.incorrect_nonzero != 0 {
+            return Err(format!("oracle missed {} true zeros", r.pred.incorrect_nonzero));
+        }
+        // a skipped output's true ReLU value is 0, so logits are dense-exact
+        if r.logits != dense.logits {
+            return Err("oracle changed the logits".into());
+        }
+        assert_identities(&r, "oracle");
+        // engines agree on the oracle too
+        let scalar = sess.with_opts(sess.opts().scalar_ref()).run_sample(&x);
+        if let Some(msg) = diff(&scalar, &r) {
+            return Err(format!("oracle tiled != scalar: {msg}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn contract_binary() {
+    property("`binary` only skips T-enabled neurons", 25, |g| {
+        let model = synth::random_model(g.rng());
+        let (h, w, c) = model.input_shape;
+        let x = rand_input(g.rng(), h * w * c);
+        let threshold = *g.pick(&[0.0f32, 0.5, 0.9]);
+        let sess = session_for(&model, g.seed, Strategy::Binary, threshold);
+        let r = sess.run_sample(&x);
+        let pol = sess.policy().expect("binary builds a policy");
+        for t in &r.traces {
+            let Some(lp) = pol.layers.get(&t.node) else {
+                if t.skipped.iter().any(|&s| s) {
+                    return Err(format!("layer {} skipped without a policy", t.node));
+                }
+                continue;
+            };
+            for row in 0..t.rows {
+                for f in 0..t.cout {
+                    if t.skipped[row * t.cout + f] && !lp.enabled[f] {
+                        return Err(format!(
+                            "layer {} neuron {f} skipped below threshold {threshold}",
+                            t.node
+                        ));
+                    }
+                }
+            }
+        }
+        assert_identities(&r, "binary");
+        let scalar = sess.with_opts(sess.opts().scalar_ref()).run_sample(&x);
+        if let Some(msg) = diff(&scalar, &r) {
+            return Err(format!("binary tiled != scalar: {msg}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn contract_cluster() {
+    property("`cluster` never skips proxies; `mor` skips ⊆ `cluster` skips", 25, |g| {
+        let model = synth::random_model(g.rng());
+        let (h, w, c) = model.input_shape;
+        let x = rand_input(g.rng(), h * w * c);
+        let cl_sess = session_for(&model, g.seed, Strategy::Cluster, 0.0);
+        let mor_sess = session_for(&model, g.seed, Strategy::Mor, 0.0);
+        let rc = cl_sess.run_sample(&x);
+        let rm = mor_sess.run_sample(&x);
+        let pol = cl_sess.policy().expect("cluster builds a policy");
+        for (tc, tm) in rc.traces.iter().zip(&rm.traces) {
+            if let Some(lp) = pol.layers.get(&tc.node) {
+                for row in 0..tc.rows {
+                    for f in 0..tc.cout {
+                        let i = row * tc.cout + f;
+                        if tc.skipped[i] && lp.is_proxy(f) {
+                            return Err(format!("layer {} proxy {f} was skipped", tc.node));
+                        }
+                        // hybrid requires the proxy verdict AND the rookie:
+                        // it can never skip where the proxy said non-zero
+                        if tm.skipped[i] && !tc.skipped[i] {
+                            return Err(format!(
+                                "layer {} neuron {f}: mor skipped where cluster did not",
+                                tc.node
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        assert_identities(&rc, "cluster");
+        let scalar = cl_sess.with_opts(cl_sess.opts().scalar_ref()).run_sample(&x);
+        if let Some(msg) = diff(&scalar, &rc) {
+            return Err(format!("cluster tiled != scalar: {msg}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn contract_mor() {
+    // The acceptance sweep: `mor` must be bit-identical between the
+    // tiled engine and the retained pre-refactor per-neuron path, and
+    // between run_batch and per-sample runs, for batch sizes 1..16.
+    let mut rng = Rng::new(0x5717A7);
+    let model = synth::tiny_serving_model(41);
+    let params = synth::predictor_for(&model, 42);
+    let (h, w, c) = model.input_shape;
+    let sess = Session::build(&model)
+        .params(&params)
+        .predictor("mor")
+        .expect("mor is a registered strategy")
+        .threshold(0.5)
+        .oracle(true)
+        .collect_trace(true)
+        .finish();
+    let scalar = sess.with_opts(sess.opts().scalar_ref());
+    for b in 1..=16usize {
+        let xs: Vec<Vec<f32>> = (0..b).map(|_| rand_input(&mut rng, h * w * c)).collect();
+        let inputs: Vec<&[f32]> = xs.iter().map(|x| x.as_slice()).collect();
+        let batch = sess.run_batch(&inputs);
+        assert_eq!(batch.len(), b);
+        for (s, x) in inputs.iter().enumerate() {
+            let golden = scalar.run_sample(x);
+            if let Some(msg) = diff(&golden, &batch[s]) {
+                panic!("b={b} sample {s}: tiled batch != scalar golden: {msg}");
+            }
+            assert_identities(&batch[s], "mor");
+        }
+    }
+}
+
+#[test]
+fn contract_mor_random_models() {
+    property("`mor` bit-identical across engines and thread counts", 20, |g| {
+        let model = synth::random_model(g.rng());
+        let (h, w, c) = model.input_shape;
+        let x = rand_input(g.rng(), h * w * c);
+        let sess = session_for(&model, g.seed, Strategy::Mor, *g.pick(&[0.0f32, 0.5, 0.9]));
+        let golden = sess.with_opts(sess.opts().scalar_ref()).run_sample(&x);
+        for threads in [1usize, 3] {
+            let mut opts = sess.opts();
+            opts.threads = threads;
+            opts.engine = EngineSel::Tiled;
+            let got = sess.with_opts(opts).run_sample(&x);
+            if let Some(msg) = diff(&golden, &got) {
+                return Err(format!("threads={threads}: {msg}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn strategies_are_ordered_by_aggressiveness() {
+    // On one fixed model: none saves nothing, every realizable strategy
+    // saves no more than the oracle, and the hybrid's wrong skips are
+    // bounded by the cluster strategy's (binary gating only removes
+    // skips).
+    let model = synth::tiny_serving_model(77);
+    let mut rng = Rng::new(78);
+    let (h, w, c) = model.input_shape;
+    let x = rand_input(&mut rng, h * w * c);
+    let run = |strategy| session_for(&model, 79, strategy, 0.0).run_sample(&x);
+    let none = run(Strategy::None);
+    let oracle = run(Strategy::Oracle);
+    assert_eq!(none.ops.macs_done, none.ops.macs_total);
+    for s in [Strategy::Mor, Strategy::Binary, Strategy::Cluster] {
+        let r = run(s);
+        assert!(
+            r.pred.correct_zero <= oracle.pred.correct_zero,
+            "{s:?} out-skipped the oracle"
+        );
+        assert!(r.ops.macs_done <= none.ops.macs_done);
+    }
+    let mor = run(Strategy::Mor);
+    let cluster = run(Strategy::Cluster);
+    assert!(mor.pred.incorrect_zero <= cluster.pred.incorrect_zero);
+}
+
+#[test]
+fn run_opts_default_unchanged() {
+    // choose_threshold's wrong-skip gate depends on oracle accounting
+    // being on by default; pin it so a future default change is loud.
+    let d = RunOpts::default();
+    assert!(d.oracle);
+    assert!(!d.collect_trace);
+    assert_eq!(d.threads, 1);
+    assert_eq!(d.engine, EngineSel::Tiled);
+}
