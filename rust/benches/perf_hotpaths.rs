@@ -1,6 +1,7 @@
 //! §Perf micro-benchmarks: the host hot paths tracked across the
-//! optimization passes — dot kernels, the scalar GEMV vs tiled GEMM
-//! engine, and the full MoR forward at 1/2/4/8 row-tile threads.
+//! optimization passes — dot kernels (dense and input-sparse), the
+//! scalar GEMV vs tiled GEMM engine, the full MoR forward at 1/2/4/8
+//! row-tile threads, and the dual-sided input-sparsity modes (§Sparse).
 //!
 //! Besides the human-readable report, emits `BENCH_hotpaths.json`
 //! (override the path with `MOR_BENCH_OUT`) so the perf trajectory is
@@ -10,11 +11,11 @@
 mod common;
 
 use mor::config::PredictorConfig;
-use mor::engine::dot::dot_i8;
+use mor::engine::dot::{dot_i8, dot_i8_sparse};
 use mor::engine::gemm::{self, PrepackedFilters, NR};
 use mor::model::synth;
 use mor::predictor::strategies::{Strategy, ZeroPredictor};
-use mor::predictor::{EngineSel, RunOpts};
+use mor::predictor::{EngineSel, InputSparsity, OpsStats, RunOpts};
 use mor::session::Session;
 use mor::util::bench::{bench_with, Timing};
 use mor::util::bits::PackedVec;
@@ -53,6 +54,38 @@ fn main() {
     });
     t_bin.report();
     let bin_gops = k as f64 / t_bin.min_ns;
+
+    // ---- sparse dot kernel at a few input densities ---------------------
+    // effective GMAC/s counts the full K: the sparse kernel's win is doing
+    // the same logical dot while touching only the nonzero lanes
+    for density_pct in [10usize, 25, 50] {
+        let xs_sparse: Vec<i8> = x
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| if (i * 97) % 100 < density_pct { v } else { 0 })
+            .collect();
+        let (mut idx, mut val) = (Vec::new(), Vec::new());
+        for (i, &v) in xs_sparse.iter().enumerate() {
+            if v != 0 {
+                idx.push(i as u16);
+                val.push(v);
+            }
+        }
+        let t_sp = bench_with(
+            &format!("dot_i8_sparse (K=576, {density_pct}% dense)"),
+            10,
+            0.2,
+            &mut || {
+                black_box(dot_i8_sparse(black_box(&idx), black_box(&val), black_box(&w)));
+            },
+        );
+        t_sp.report();
+        println!(
+            "    ≈ {:.2} effective GMAC/s ({:.2}x vs dense dot)",
+            k as f64 / t_sp.min_ns,
+            t_dot.min_ns / t_sp.min_ns
+        );
+    }
 
     // ---- scalar GEMV vs tiled GEMM on one dense layer -------------------
     let node = synth::dense_node(k, cout, 11);
@@ -116,6 +149,7 @@ fn main() {
         collect_trace: false,
         threads: 1,
         engine: EngineSel::ScalarRef,
+        ..Default::default()
     };
     let scalar_sess = session.with_opts(scalar_opts);
     let t_scalar = bench_with(
@@ -150,6 +184,46 @@ fn main() {
         t1 / tiled.iter().find(|(n, _)| *n == 4).map(|(_, t)| t.min_ns).unwrap_or(t1)
     );
 
+    // ---- dual-sided input sparsity (§Sparse) ----------------------------
+    // same forward, three kernel modes; results are bit-identical, so the
+    // stats come from one run and only wall-clock differs
+    println!("\ninput sparsity (dual-sided) on {model_label}:");
+    let sp_base = RunOpts {
+        oracle: false,
+        collect_trace: false,
+        threads: 1,
+        engine: EngineSel::Tiled,
+        input_sparsity: InputSparsity::Off,
+    };
+    let sp_ops: OpsStats = session.with_opts(sp_base).run_sample(&xs).ops;
+    let mut sparse_ms: Vec<(&str, f64)> = Vec::new();
+    for (label, mode) in [
+        ("off", InputSparsity::Off),
+        ("auto", InputSparsity::Auto),
+        ("on", InputSparsity::On),
+    ] {
+        let sess = session.with_opts(RunOpts { input_sparsity: mode, ..sp_base });
+        let r = sess.run_sample(&xs);
+        assert_eq!(r.ops, sp_ops, "input-sparsity mode changed OpsStats");
+        let t = bench_with(
+            &format!("{model_label} MoR fwd, --input-sparsity {label}"),
+            1,
+            0.3,
+            &mut || {
+                black_box(sess.run_sample(black_box(&xs)));
+            },
+        );
+        t.report();
+        sparse_ms.push((label, t.min_ns / 1e6));
+    }
+    println!(
+        "    output-pred saved {:.1}% of total MACs | input-zero {:.1}% of done MACs \
+         | auto cutoff {:.2}",
+        sp_ops.macs_saved_frac() * 100.0,
+        sp_ops.input_zero_frac() * 100.0,
+        gemm::sparse_auto_cutoff()
+    );
+
     // ---- machine-readable trajectory ------------------------------------
     let out_path =
         std::env::var("MOR_BENCH_OUT").unwrap_or_else(|_| "BENCH_hotpaths.json".to_string());
@@ -168,6 +242,36 @@ fn main() {
         "  \"gemm_vs_gemv_speedup\": {:.4},\n",
         t_gemv.min_ns / t_gemm.min_ns
     ));
+    // dual-sided accounting: output-prediction savings vs input-zero
+    // (ineffectual) MACs, plus per-mode forward wall-clock
+    js.push_str("  \"input_sparsity\": {\n");
+    js.push_str(&format!(
+        "    \"auto_cutoff\": {:.2},\n",
+        gemm::sparse_auto_cutoff()
+    ));
+    js.push_str(&format!("    \"macs_total\": {},\n", sp_ops.macs_total));
+    js.push_str(&format!("    \"macs_done\": {},\n", sp_ops.macs_done));
+    js.push_str(&format!(
+        "    \"macs_saved_output_pred\": {},\n",
+        sp_ops.macs_total - sp_ops.macs_done
+    ));
+    js.push_str(&format!(
+        "    \"macs_skipped_input_zero\": {},\n",
+        sp_ops.macs_skipped_input_zero
+    ));
+    js.push_str(&format!(
+        "    \"input_zero_frac_of_done\": {:.4},\n",
+        sp_ops.input_zero_frac()
+    ));
+    js.push_str(&format!("    \"effectual_macs\": {},\n", sp_ops.effectual_macs()));
+    js.push_str("    \"forward_ms\": {");
+    for (i, (label, ms)) in sparse_ms.iter().enumerate() {
+        if i > 0 {
+            js.push_str(", ");
+        }
+        js.push_str(&format!("\"{label}\": {ms:.4}"));
+    }
+    js.push_str("}\n  },\n");
     js.push_str("  \"forward\": {\n");
     js.push_str(&format!("    \"model\": \"{model_label}\",\n"));
     js.push_str(&format!("    \"scalar_ref_ms\": {:.4},\n", t_scalar.min_ns / 1e6));
@@ -254,6 +358,7 @@ fn strategy_overhead_bench(
                 collect_trace: false,
                 threads,
                 engine: EngineSel::Tiled,
+                ..Default::default()
             });
             let r = sess.run_sample(xs);
             let t = bench_with(

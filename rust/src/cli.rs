@@ -120,15 +120,22 @@ COMMANDS:
                  --threshold <T>       correlation threshold (default: 0.85)
                  --no-clusters         legacy alias for --predictor binary
                  --no-binary           legacy alias for --predictor cluster
+                 --input-sparsity <m>  input-zero lane skipping: auto|on|off
+                                       (default: auto; bit-identical either way,
+                                       see EXPERIMENTS.md §Sparse)
                  --samples <n>         cap evaluated samples
     simulate   Cycle-level accelerator simulation (baseline vs MoR)
                  --model/--artifacts/--predictor/--threshold as above
+                 --input-sparsity <m>  as above
                  --config <file>       accelerator TOML (default: Table 1)
                  --samples <n>         samples to simulate (default: 16)
     figures    Regenerate paper figures/tables
-                 --all | --fig <id>    fig1,fig3,...,fig13,ablation,table1,area
+                 --all | <id>...       positional ids: fig1,fig3,...,fig13,
+                                       ablation,sparsity,table1,area
+                                       (no ids and no --all = everything)
                  --out <dir>           CSV output directory (default: figures_out)
                  --predictor <name>    strategy for fig13/simulate paths
+                 --input-sparsity <m>  input-zero lane skipping: auto|on|off
     serve      Run the serving coordinator on a synthetic request stream
                  --model <name>        model to serve (default: tds)
                  --rps <r>             request rate (default: 200)
@@ -146,6 +153,7 @@ COMMANDS:
                  --concurrency <n>     closed-loop outstanding requests
                                        (default: workers * max-batch)
                  --predictor <name>    skip strategy (default: mor)
+                 --input-sparsity <m>  input-zero lane skipping: auto|on|off
                  --no-predictor        serve the dense baseline (alias for
                                        --predictor none)
                  --runtime pjrt|engine execution backend (default: engine;

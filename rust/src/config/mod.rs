@@ -1,7 +1,10 @@
-//! Configuration system: accelerator (Table 1), predictor, and workload
-//! parameters, loadable from TOML files (configs/*.toml) with CLI
-//! overrides. Defaults are *exactly* the paper's Table 1.
+//! Configuration system: accelerator (Table 1), predictor, host-engine
+//! and workload parameters, loadable from TOML files (configs/*.toml)
+//! with CLI overrides. Accelerator/DRAM defaults are *exactly* the
+//! paper's Table 1; `[engine]` holds host-side kernel knobs (input
+//! sparsity) that never change results.
 
+use crate::engine::InputSparsity;
 use crate::predictor::strategies::Strategy;
 use crate::util::toml::Toml;
 use anyhow::{Context, Result};
@@ -154,12 +157,24 @@ impl Default for PredictorConfig {
     }
 }
 
+/// Host engine configuration (kernel selection knobs — never affects
+/// results, only how the functional engine executes them).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EngineConfig {
+    /// Input-side sparsity mode for the tiled engine: skip zero-valued
+    /// input activation lanes via the compressed-lane kernels. TOML key
+    /// `engine.input_sparsity` (`"auto"`/`"on"`/`"off"`), CLI
+    /// `--input-sparsity`. All modes are bit-identical.
+    pub input_sparsity: InputSparsity,
+}
+
 /// Top-level config bundle.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Config {
     pub accel: AcceleratorConfig,
     pub dram: DramConfig,
     pub predictor: PredictorConfig,
+    pub engine: EngineConfig,
 }
 
 impl Config {
@@ -187,6 +202,15 @@ impl Config {
                 t.bool_or("predictor.use_clusters", true),
                 t.bool_or("predictor.use_binary", true),
             ),
+        };
+        let input_sparsity = match t.get("engine.input_sparsity") {
+            Some(v) => {
+                let name = v
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("engine.input_sparsity must be a string"))?;
+                InputSparsity::parse(name)?
+            }
+            None => d.engine.input_sparsity,
         };
         Ok(Config {
             accel: AcceleratorConfig {
@@ -228,6 +252,7 @@ impl Config {
                     d.predictor.margin_sigmas as f64,
                 ) as f32,
             },
+            engine: EngineConfig { input_sparsity },
         })
     }
 
@@ -314,6 +339,24 @@ mod tests {
         let t = Toml::parse("[predictor]\nstrategy = \"oracle\"\n").unwrap();
         assert_eq!(Config::from_toml(&t).unwrap().predictor.strategy, Strategy::Oracle);
         let bad = Toml::parse("[predictor]\nstrategy = \"learned\"\n").unwrap();
+        assert!(Config::from_toml(&bad).is_err());
+    }
+
+    #[test]
+    fn toml_engine_input_sparsity_key() {
+        // default is auto
+        assert_eq!(Config::default().engine.input_sparsity, InputSparsity::Auto);
+        let t = Toml::parse("[engine]\ninput_sparsity = \"off\"\n").unwrap();
+        assert_eq!(
+            Config::from_toml(&t).unwrap().engine.input_sparsity,
+            InputSparsity::Off
+        );
+        let t = Toml::parse("[engine]\ninput_sparsity = \"on\"\n").unwrap();
+        assert_eq!(
+            Config::from_toml(&t).unwrap().engine.input_sparsity,
+            InputSparsity::On
+        );
+        let bad = Toml::parse("[engine]\ninput_sparsity = \"dense\"\n").unwrap();
         assert!(Config::from_toml(&bad).is_err());
     }
 

@@ -375,6 +375,7 @@ pub fn serve(
         collect_trace: false,
         threads: session.opts().threads.max(1),
         engine: session.opts().engine,
+        input_sparsity: session.opts().input_sparsity,
     };
     let batches = Arc::new(std::sync::atomic::AtomicUsize::new(0));
 

@@ -4,6 +4,11 @@
 //! the binary path lives in [`crate::util::bits`]. Both are written so
 //! LLVM auto-vectorizes the inner loop (verified in the perf pass —
 //! see EXPERIMENTS.md §Perf).
+//!
+//! [`dot_i8_sparse`] is the input-zero-skipping variant (EXPERIMENTS.md
+//! §Sparse): it consumes a compressed nonzero-lane list instead of the
+//! dense activation vector and is **exact** — the lanes it elides are
+//! zero, and integer addition of zero products changes nothing.
 
 /// int8 dot product with int32 accumulation (never overflows for
 /// K ≤ 2^16: |x·w| ≤ K · 127² < 2^31).
@@ -86,6 +91,34 @@ unsafe fn dot_i8_avx2(x: &[i8], w: &[i8]) -> i32 {
     total
 }
 
+/// Sparse int8 dot product over a compressed nonzero-lane list:
+/// `sum(val[j] * w[idx[j]])`. Bit-identical to `dot_i8(x, w)` when
+/// `(idx, val)` lists exactly the nonzero lanes of `x` — the skipped
+/// lanes are zero and contribute exactly 0 to the integer sum.
+///
+/// §Sparse: four independent accumulator streams so the gather-multiply
+/// chains pipeline; products form in i16 (exact for i8·i8) and widen to
+/// i32, which never overflows for K ≤ 2^16 (same bound as `dot_i8`).
+#[inline]
+pub fn dot_i8_sparse(idx: &[u16], val: &[i8], w: &[i8]) -> i32 {
+    debug_assert_eq!(idx.len(), val.len());
+    let n = idx.len();
+    let chunks = n / 4;
+    let (mut a0, mut a1, mut a2, mut a3) = (0i32, 0i32, 0i32, 0i32);
+    for ci in 0..chunks {
+        let b = ci * 4;
+        a0 += (val[b] as i16 * w[idx[b] as usize] as i16) as i32;
+        a1 += (val[b + 1] as i16 * w[idx[b + 1] as usize] as i16) as i32;
+        a2 += (val[b + 2] as i16 * w[idx[b + 2] as usize] as i16) as i32;
+        a3 += (val[b + 3] as i16 * w[idx[b + 3] as usize] as i16) as i32;
+    }
+    let mut acc = a0 + a1 + a2 + a3;
+    for j in chunks * 4..n {
+        acc += (val[j] as i16 * w[idx[j] as usize] as i16) as i32;
+    }
+    acc
+}
+
 /// Quantize a float slice to int8 with round-half-away and saturation,
 /// matching jnp.clip(jnp.round(x / sx), -127, 127).
 ///
@@ -145,6 +178,64 @@ mod tests {
         let x = vec![-128i8; k];
         let w = vec![-128i8; k];
         assert_eq!(dot_i8(&x, &w), 128 * 128 * k as i32);
+    }
+
+    /// Compress `x` into the (idx, val) nonzero-lane lists the sparse
+    /// kernel consumes.
+    fn compress(x: &[i8]) -> (Vec<u16>, Vec<i8>) {
+        let mut idx = Vec::new();
+        let mut val = Vec::new();
+        for (i, &v) in x.iter().enumerate() {
+            if v != 0 {
+                idx.push(i as u16);
+                val.push(v);
+            }
+        }
+        (idx, val)
+    }
+
+    #[test]
+    fn sparse_dot_matches_dense_at_every_density() {
+        property("dot_i8_sparse == dot_i8 on compressed lanes", 300, |g| {
+            let n = g.usize(0, 600);
+            // density spans dense → empty, including the all-zero patch
+            let keep_pct = g.usize(0, 100);
+            let x: Vec<i8> = (0..n)
+                .map(|_| {
+                    if g.usize(0, 99) < keep_pct {
+                        g.rng().int8()
+                    } else {
+                        0
+                    }
+                })
+                .collect();
+            let w = g.vec_i8(n);
+            let (idx, val) = compress(&x);
+            let got = dot_i8_sparse(&idx, &val, &w);
+            let want = dot_i8(&x, &w);
+            crate::prop_assert!(
+                g,
+                got == want,
+                "n={n} nnz={} got={got} want={want}",
+                idx.len()
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sparse_dot_empty_lanes_is_zero() {
+        assert_eq!(dot_i8_sparse(&[], &[], &[1, 2, 3]), 0);
+    }
+
+    #[test]
+    fn sparse_dot_extreme_no_overflow() {
+        // same worst-case bound as the dense kernel
+        let k = 1440usize;
+        let idx: Vec<u16> = (0..k as u16).collect();
+        let val = vec![-128i8; k];
+        let w = vec![-128i8; k];
+        assert_eq!(dot_i8_sparse(&idx, &val, &w), 128 * 128 * k as i32);
     }
 
     #[test]

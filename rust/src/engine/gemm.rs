@@ -15,9 +15,17 @@
 //! kernels running at full occupancy even when each request contributes
 //! only a handful of rows (e.g. an FC layer's single row per request).
 //!
+//! The engine is dual-sided sparse: besides the predictor's output-side
+//! skipping, [`PatchTile`] optionally carries a compressed nonzero-lane
+//! list per patch, and the `*_sparse` kernel variants iterate only those
+//! lanes — Cnvlutin2/SparseNN-style ineffectual-input elision, selected
+//! per tile row by a density crossover ([`sparse_auto_cutoff`]).
+//!
 //! All kernels are exact int8×int8→int32 sums, so the tiled engine is
 //! bit-identical to the scalar reference path by construction — the
-//! property suite in `rust/tests/engine_equivalence.rs` proves it.
+//! property suite in `rust/tests/engine_equivalence.rs` proves it, and
+//! `rust/tests/input_sparsity.rs` proves the sparse/dense kernel choice
+//! is invisible in logits, stats and traces.
 
 use crate::engine::dot;
 use crate::model::{Model, Node};
@@ -103,18 +111,38 @@ impl PrepackedModel {
 
 /// A tile of up to [`TILE_ROWS`] im2col patches, each zero-padded to the
 /// prepack alignment, plus the packed ±1 activation planes the binary
-/// predictor consumes. Buffers are allocated once per worker and reused
-/// for every tile.
+/// predictor consumes and (optionally) a compressed nonzero-lane
+/// representation per patch for the input-sparsity kernels. Buffers are
+/// allocated once per worker and reused for every tile.
 pub struct PatchTile {
     pub k_len: usize,
     pub k_pad: usize,
     data: Vec<i8>,
     packed: Vec<PackedVec>,
+    /// Nonzero lanes per row (always tracked — it feeds the
+    /// `macs_skipped_input_zero` accounting even when the sparse
+    /// kernels are disabled).
+    nnz: [usize; TILE_ROWS],
+    /// Compressed nonzero-lane lists, row-major with stride `k_len`
+    /// (`nz_idx[r*k_len..r*k_len+nnz[r]]` are the lane indices,
+    /// `nz_val` the matching activation values). Empty when the builder
+    /// is off or `k_len` exceeds the u16 index range.
+    nz_idx: Vec<u16>,
+    nz_val: Vec<i8>,
 }
 
+/// Largest dot length the compressed u16 lane indices can address.
+pub const SPARSE_K_MAX: usize = u16::MAX as usize + 1;
+
 impl PatchTile {
-    pub fn new(k_len: usize) -> PatchTile {
+    /// `build_sparse` allocates the compressed-lane buffers; whether a
+    /// given row actually pays the compression pass is decided per row
+    /// at [`PatchTile::set_row`] time (`InputSparsity::Off` passes
+    /// false here and skips the allocation too). Dot lengths beyond
+    /// [`SPARSE_K_MAX`] silently fall back to dense-only.
+    pub fn new(k_len: usize, build_sparse: bool) -> PatchTile {
         let k_pad = pad_k(k_len);
+        let sparse = build_sparse && k_len <= SPARSE_K_MAX;
         PatchTile {
             k_len,
             k_pad,
@@ -122,18 +150,50 @@ impl PatchTile {
             // set_row only touches the first k_len bytes of each row
             data: vec![0i8; TILE_ROWS * k_pad],
             packed: vec![PackedVec::zeros(k_len); TILE_ROWS],
+            nnz: [0; TILE_ROWS],
+            nz_idx: if sparse { vec![0u16; TILE_ROWS * k_len] } else { Vec::new() },
+            nz_val: if sparse { vec![0i8; TILE_ROWS * k_len] } else { Vec::new() },
         }
     }
 
-    /// Store one gathered patch (and its packed sign plane) as tile row `r`.
+    /// Store one gathered patch (its packed sign plane, nonzero count
+    /// and — when `build_lanes` is set — compressed lane lists) as tile
+    /// row `r`. `nnz` is the patch's nonzero-lane count, tracked by
+    /// [`crate::engine::PatchGather`] during the gather.
+    ///
+    /// `build_lanes` is the caller's per-row kernel decision: the
+    /// O(k_len) compression pass only runs for rows that will actually
+    /// use the sparse kernel, so dense rows under `InputSparsity::Auto`
+    /// pay nothing beyond the one density compare. [`PatchTile::lanes`]
+    /// is only valid for rows stored with `build_lanes = true`.
     #[inline]
-    pub fn set_row(&mut self, r: usize, patch: &[i8], packed: &PackedVec) {
+    pub fn set_row(
+        &mut self,
+        r: usize,
+        patch: &[i8],
+        packed: &PackedVec,
+        nnz: usize,
+        build_lanes: bool,
+    ) {
         debug_assert_eq!(patch.len(), self.k_len);
         self.data[r * self.k_pad..r * self.k_pad + self.k_len].copy_from_slice(patch);
         let p = &mut self.packed[r];
         p.bits.copy_from_slice(&packed.bits);
         p.valid.copy_from_slice(&packed.valid);
         p.len = packed.len;
+        self.nnz[r] = nnz;
+        if build_lanes && self.has_sparse() {
+            let base = r * self.k_len;
+            let mut n = 0usize;
+            for (i, &v) in patch.iter().enumerate() {
+                if v != 0 {
+                    self.nz_idx[base + n] = i as u16;
+                    self.nz_val[base + n] = v;
+                    n += 1;
+                }
+            }
+            debug_assert_eq!(n, nnz, "gather nnz disagrees with the patch content");
+        }
     }
 
     /// Padded patch for tile row `r` (length `k_pad`).
@@ -146,6 +206,30 @@ impl PatchTile {
     #[inline]
     pub fn packed(&self, r: usize) -> &PackedVec {
         &self.packed[r]
+    }
+
+    /// Nonzero lanes of tile row `r`'s patch.
+    #[inline]
+    pub fn nnz(&self, r: usize) -> usize {
+        self.nnz[r]
+    }
+
+    /// Whether the compressed-lane lists are being built for this tile.
+    #[inline]
+    pub fn has_sparse(&self) -> bool {
+        !self.nz_idx.is_empty()
+    }
+
+    /// Compressed nonzero lanes of tile row `r`: `(indices, values)`,
+    /// both of length [`PatchTile::nnz`]`(r)`. Only valid when
+    /// [`PatchTile::has_sparse`] is true.
+    #[inline]
+    pub fn lanes(&self, r: usize) -> (&[u16], &[i8]) {
+        let base = r * self.k_len;
+        (
+            &self.nz_idx[base..base + self.nnz[r]],
+            &self.nz_val[base..base + self.nnz[r]],
+        )
     }
 }
 
@@ -194,6 +278,64 @@ pub fn dot_block_indexed(patch: &[i8], pf: &PrepackedFilters, idx: &[usize], out
     for (o, &f) in out.iter_mut().zip(idx) {
         *o = dot::dot_i8_scalar(patch, pf.filter(f));
     }
+}
+
+/// Like [`dot_block`] but iterating only the patch's nonzero input
+/// lanes (`(idx, val)` from [`PatchTile::lanes`]). Exact: the elided
+/// lanes are zero and contribute 0 to every integer dot, so `out`
+/// is bit-identical to the dense kernel's.
+pub fn dot_block_sparse(
+    idx: &[u16],
+    val: &[i8],
+    pf: &PrepackedFilters,
+    f0: usize,
+    nf: usize,
+    out: &mut [i32; NR],
+) {
+    debug_assert!(nf <= NR && f0 + nf <= pf.cout);
+    for (j, o) in out.iter_mut().enumerate().take(nf) {
+        *o = dot::dot_i8_sparse(idx, val, pf.filter(f0 + j));
+    }
+}
+
+/// Like [`dot_block_indexed`] but over the compressed nonzero lanes —
+/// the shape the predict-then-evaluate dataflow needs for proxies and
+/// surviving (row, filter) pairs when the row is sparse.
+pub fn dot_block_indexed_sparse(
+    idx: &[u16],
+    val: &[i8],
+    pf: &PrepackedFilters,
+    filters: &[usize],
+    out: &mut [i32; NR],
+) {
+    debug_assert!(filters.len() <= NR);
+    for (o, &f) in out.iter_mut().zip(filters) {
+        *o = dot::dot_i8_sparse(idx, val, pf.filter(f));
+    }
+}
+
+/// Density below which the compressed-lane kernel beats the dense block
+/// kernel on this host (`InputSparsity::Auto`'s crossover). The dense
+/// AVX2 kernel retires 16 lanes per instruction pair, so the scalar
+/// gather-multiply loop only wins at low density; against the portable
+/// scalar fallback the crossover sits much higher. Any choice is
+/// correctness-neutral — both kernels are exact — so this is purely a
+/// host-throughput heuristic (EXPERIMENTS.md §Sparse).
+pub fn sparse_auto_cutoff() -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if dot::avx2_enabled() {
+            return 0.20;
+        }
+    }
+    0.75
+}
+
+/// `InputSparsity::Auto`'s per-row decision: use the sparse kernel when
+/// the measured density `nnz / k_len` is below [`sparse_auto_cutoff`].
+#[inline]
+pub fn sparse_wins(nnz: usize, k_len: usize) -> bool {
+    (nnz as f32) < sparse_auto_cutoff() * k_len.max(1) as f32
 }
 
 /// AVX2 multi-filter micro-kernel: one sign-extended patch load feeds up
@@ -330,15 +472,136 @@ mod tests {
 
     #[test]
     fn patch_tile_roundtrip() {
-        let mut tile = PatchTile::new(10);
+        let mut tile = PatchTile::new(10, false);
         assert_eq!(tile.k_pad, 16);
+        assert!(!tile.has_sparse());
         let patch: Vec<i8> = (0..10).map(|v| v as i8 - 5).collect();
         let packed = PackedVec::from_acts(&patch);
-        tile.set_row(3, &patch, &packed);
+        tile.set_row(3, &patch, &packed, 9, false);
         assert_eq!(&tile.patch(3)[..10], &patch[..]);
         assert!(tile.patch(3)[10..].iter().all(|&v| v == 0));
         assert_eq!(tile.packed(3), &packed);
+        assert_eq!(tile.nnz(3), 9); // lane 5 holds value 0
         // untouched rows stay zero-padded
         assert!(tile.patch(2).iter().all(|&v| v == 0));
+    }
+
+    fn nnz_of(patch: &[i8]) -> usize {
+        patch.iter().filter(|&&v| v != 0).count()
+    }
+
+    #[test]
+    fn compressed_builder_all_zero_patch() {
+        // all-zero patch: empty lane list, and the sparse kernel
+        // produces the same (zero) dots as the dense one
+        let mut tile = PatchTile::new(13, true);
+        let patch = vec![0i8; 13];
+        tile.set_row(0, &patch, &PackedVec::from_acts(&patch), 0, true);
+        assert_eq!(tile.nnz(0), 0);
+        let (idx, val) = tile.lanes(0);
+        assert!(idx.is_empty() && val.is_empty());
+        let node = fc_node(13, 5, 3);
+        let pf = PrepackedFilters::new(&node);
+        let (mut sp, mut de) = ([0i32; NR], [0i32; NR]);
+        dot_block_sparse(idx, val, &pf, 0, 5, &mut sp);
+        dot_block(tile.patch(0), &pf, 0, 5, &mut de);
+        assert_eq!(sp, de);
+        assert!(sp[..5].iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn compressed_builder_fully_dense_patch() {
+        // no zero lane at all: the list is the identity mapping and the
+        // kernels still agree
+        let mut tile = PatchTile::new(9, true);
+        let patch: Vec<i8> = (0..9).map(|v| v as i8 + 1).collect();
+        tile.set_row(2, &patch, &PackedVec::from_acts(&patch), 9, true);
+        let (idx, val) = tile.lanes(2);
+        assert_eq!(idx, (0..9u16).collect::<Vec<_>>().as_slice());
+        assert_eq!(val, &patch[..]);
+        let node = fc_node(9, 3, 5);
+        let pf = PrepackedFilters::new(&node);
+        let (mut sp, mut de) = ([0i32; NR], [0i32; NR]);
+        dot_block_sparse(idx, val, &pf, 0, 3, &mut sp);
+        dot_block(tile.patch(2), &pf, 0, 3, &mut de);
+        assert_eq!(sp, de);
+    }
+
+    #[test]
+    fn compressed_builder_skips_padding_lanes() {
+        // interior zeros and the k_len → k_pad alignment padding both
+        // stay out of the lane list; the sparse dot still matches the
+        // padded dense dot exactly
+        property("sparse block == dense block on random sparse rows", 80, |g| {
+            let k = g.usize(1, 150);
+            let cout = g.usize(1, 20);
+            let node = fc_node(k, cout, g.seed ^ 3);
+            let pf = PrepackedFilters::new(&node);
+            // force plenty of zero lanes
+            let patch: Vec<i8> = (0..k)
+                .map(|_| if g.bool() { 0 } else { g.rng().int8() })
+                .collect();
+            let nnz = nnz_of(&patch);
+            let mut tile = PatchTile::new(k, true);
+            tile.set_row(1, &patch, &PackedVec::from_acts(&patch), nnz, true);
+            let (idx, val) = tile.lanes(1);
+            crate::prop_assert!(g, idx.len() == nnz, "list len {} != nnz {nnz}", idx.len());
+            crate::prop_assert!(
+                g,
+                idx.iter().all(|&i| (i as usize) < k),
+                "padding lane leaked into the list"
+            );
+            let (mut sp, mut de) = ([0i32; NR], [0i32; NR]);
+            let mut filters: Vec<usize> = (0..cout).filter(|_| g.bool()).collect();
+            g.shuffle(&mut filters);
+            for chunk in filters.chunks(NR) {
+                dot_block_indexed_sparse(idx, val, &pf, chunk, &mut sp);
+                dot_block_indexed(tile.patch(1), &pf, chunk, &mut de);
+                for j in 0..chunk.len() {
+                    crate::prop_assert!(
+                        g,
+                        sp[j] == de[j],
+                        "k={k} f={} sparse={} dense={}",
+                        chunk[j],
+                        sp[j],
+                        de[j]
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn auto_threshold_crossover_picks_dense_kernel() {
+        // rows denser than the crossover go dense, sparser rows go
+        // sparse; the boundary is exclusive (nnz == cutoff*k is dense)
+        let k = 100usize;
+        let cut = sparse_auto_cutoff();
+        let below = (cut * k as f32).ceil() as usize - 1;
+        let above = (cut * k as f32).floor() as usize + 1;
+        assert!(sparse_wins(below, k), "density {below}/{k} should pick sparse");
+        assert!(!sparse_wins(above, k), "density {above}/{k} should pick dense");
+        assert!(!sparse_wins(k, k), "fully dense row must pick the dense kernel");
+        assert!(sparse_wins(0, k), "all-zero row must pick the sparse kernel");
+        // k_len beyond the u16 index range: builder silently disabled
+        let big = PatchTile::new(SPARSE_K_MAX + 1, true);
+        assert!(!big.has_sparse());
+    }
+
+    #[test]
+    fn lane_build_is_gated_per_row_and_refreshes_on_reuse() {
+        // a dense-decided row skips the compression pass entirely; when
+        // the reused tile row later stores a sparse-decided patch, the
+        // lists reflect the new patch, not the stale one
+        let mut tile = PatchTile::new(8, true);
+        let dense: Vec<i8> = (1i8..=8).collect();
+        tile.set_row(0, &dense, &PackedVec::from_acts(&dense), 8, false);
+        assert_eq!(tile.nnz(0), 8); // nnz tracked even without lists
+        let sparse = vec![0i8, 7, 0, 0, -3, 0, 0, 0];
+        tile.set_row(0, &sparse, &PackedVec::from_acts(&sparse), 2, true);
+        let (idx, val) = tile.lanes(0);
+        assert_eq!(idx, &[1u16, 4][..]);
+        assert_eq!(val, &[7i8, -3][..]);
     }
 }

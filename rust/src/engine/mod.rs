@@ -7,12 +7,74 @@
 //! operation order. The MoR-aware forward lives in [`crate::predictor`];
 //! this module provides tensors, im2col patch gathering, pooling and the
 //! dot kernels.
+//!
+//! The engine is **dual-sided sparse**: besides the MoR predictor's
+//! output-side skipping, zero-valued *input* activation lanes (ReLU
+//! guarantees the previous layer's output is highly sparse) can be
+//! elided per tile row through a compressed nonzero-lane representation
+//! ([`gemm::PatchTile`]) and sparse kernels ([`dot::dot_i8_sparse`],
+//! [`gemm::dot_block_sparse`]). Zero lanes contribute exactly zero to
+//! the integer dot, so the sparse path is bit-identical to the dense
+//! one — [`InputSparsity`] is purely a host-performance knob (see
+//! EXPERIMENTS.md §Sparse).
 
 pub mod dot;
 pub mod gemm;
 
 use crate::model::Node;
 use crate::util::bits::PackedVec;
+use anyhow::{bail, Result};
+
+/// Input-side sparsity mode: whether the tiled engine skips zero-valued
+/// input activation lanes (Cnvlutin2/SparseNN-style "ineffectual input"
+/// elision, complementary to the MoR output predictor).
+///
+/// All three modes produce **bit-identical** results — logits,
+/// `OpsStats` (including `macs_skipped_input_zero`, which is a property
+/// of the data, not of the kernel that ran), `PredStats` and traces —
+/// because a zero int8 lane contributes exactly 0 to the integer dot.
+/// The mode only selects which kernel executes on the host.
+///
+/// Surface: `RunOpts::input_sparsity`, TOML `[engine] input_sparsity =
+/// "auto"|"on"|"off"`, CLI `--input-sparsity`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum InputSparsity {
+    /// Per tile row, use the compressed-lane kernel only when the
+    /// measured nonzero density is below the crossover
+    /// ([`gemm::sparse_auto_cutoff`]) — the default.
+    #[default]
+    Auto,
+    /// Always use the compressed-lane kernel (when the layer's dot
+    /// length fits the u16 lane index; falls back to dense otherwise).
+    On,
+    /// Never build or use the compressed representation.
+    Off,
+}
+
+impl InputSparsity {
+    /// Every mode, in presentation order.
+    pub const ALL: [InputSparsity; 3] =
+        [InputSparsity::Auto, InputSparsity::On, InputSparsity::Off];
+
+    /// Parse a CLI / TOML mode name (`auto`, `on`, `off`).
+    pub fn parse(name: &str) -> Result<InputSparsity> {
+        match name {
+            "auto" => Ok(InputSparsity::Auto),
+            "on" => Ok(InputSparsity::On),
+            "off" => Ok(InputSparsity::Off),
+            other => bail!("unknown input-sparsity mode '{other}' (expected auto, on or off)"),
+        }
+    }
+
+    /// Stable CLI / config identifier.
+    pub fn name(self) -> &'static str {
+        match self {
+            InputSparsity::Auto => "auto",
+            InputSparsity::On => "on",
+            InputSparsity::Off => "off",
+        }
+    }
+}
 
 /// A (H, W, C) float32 activation tensor, row-major.
 #[derive(Clone, Debug)]
@@ -132,6 +194,11 @@ pub struct PatchGather<'a> {
     pub patch: Vec<i8>,
     /// packed ±1 activations of the current patch (padding lanes invalid)
     pub packed: PackedVec,
+    /// nonzero lanes in the current patch (padding lanes are zero and
+    /// never counted) — feeds the dual-sided sparsity accounting
+    /// (`OpsStats::macs_skipped_input_zero`) and the compressed-lane
+    /// kernel selection.
+    pub nnz: usize,
 }
 
 impl<'a> PatchGather<'a> {
@@ -140,6 +207,7 @@ impl<'a> PatchGather<'a> {
             src,
             patch: Vec::new(),
             packed: PackedVec::zeros(0),
+            nnz: 0,
         }
     }
 
@@ -174,7 +242,9 @@ impl<'a> PatchGather<'a> {
                     let off = ((y as usize) * w + x as usize) * c;
                     self.patch[idx..idx + c].copy_from_slice(&self.src.q[off..off + c]);
                     for ch in 0..c {
-                        self.packed.push_lane(idx + ch, self.src.q[off + ch] > 0);
+                        let v = self.src.q[off + ch];
+                        self.packed.push_lane(idx + ch, v > 0);
+                        self.nnz += (v != 0) as usize;
                     }
                     idx += c;
                 } else {
@@ -190,7 +260,9 @@ impl<'a> PatchGather<'a> {
         self.reset_buffers(c);
         self.patch.copy_from_slice(&self.src.q[pos * c..(pos + 1) * c]);
         for i in 0..c {
-            self.packed.push_lane(i, self.patch[i] > 0);
+            let v = self.patch[i];
+            self.packed.push_lane(i, v > 0);
+            self.nnz += (v != 0) as usize;
         }
     }
 
@@ -207,6 +279,7 @@ impl<'a> PatchGather<'a> {
         self.packed.bits.fill(0);
         self.packed.valid.fill(0);
         self.packed.len = k_len;
+        self.nnz = 0;
     }
 }
 
@@ -348,9 +421,36 @@ mod tests {
             valid,
             vec![false, false, false, false, true, true, false, true, true]
         );
+        // nonzero-lane count excludes the padding lanes
+        assert_eq!(pg.nnz, 4);
         // center position: fully interior
         pg.gather(geom, 3, 3, 1, 1, 1);
         assert_eq!(pg.patch, vec![1, 2, 3, 4, 5, 6, 7, 8, 9]);
+        assert_eq!(pg.nnz, 9);
+    }
+
+    #[test]
+    fn gather_counts_true_zero_activations() {
+        // interior zeros (quantized-to-zero activations) count as zero
+        // lanes too, not just SAME-padding cells
+        let t = Tensor::from_slice(2, 2, 1, &[3., 0., 0., -2.]);
+        let qt = QuantizedTensor::new(&t, 1.0);
+        let mut pg = PatchGather::new(&qt);
+        pg.gather_fc(0);
+        assert_eq!(pg.nnz, 1);
+        pg.gather_fc(1);
+        assert_eq!(pg.nnz, 0);
+        pg.gather_fc(3);
+        assert_eq!(pg.nnz, 1);
+    }
+
+    #[test]
+    fn input_sparsity_parse_round_trips() {
+        for m in InputSparsity::ALL {
+            assert_eq!(InputSparsity::parse(m.name()).unwrap(), m);
+        }
+        assert!(InputSparsity::parse("dense").is_err());
+        assert_eq!(InputSparsity::default(), InputSparsity::Auto);
     }
 
     #[test]

@@ -362,6 +362,43 @@ pub fn strategy_ablation(artifacts: &[Artifacts], samples: usize) -> Table {
     t
 }
 
+/// Dual-sided MAC accounting (§Sparse): for each model, how the dense
+/// MAC budget splits between output-prediction savings (MoR skips),
+/// ineffectual input-zero MACs among the work that remained, and the
+/// effectual rest — the Cnvlutin2/SparseNN observation that input-side
+/// and output-side sparsity compound.
+pub fn sparsity_table(artifacts: &[Artifacts], samples: usize) -> Table {
+    let mut t = Table::new(
+        "Dual-sided sparsity — output-prediction vs input-zero MAC savings (%)",
+        &["model", "predictor", "output_pred_saved_pct", "input_zero_of_done_pct",
+          "effectual_macs_pct", "combined_elidable_pct"],
+    );
+    for a in artifacts {
+        let sess = session_with(a, PredictorConfig::default());
+        for policied in [false, true] {
+            let s = if policied {
+                MorRun::evaluate(a, &sess, samples)
+            } else {
+                MorRun::evaluate(a, &sess.with_policy(None), samples)
+            };
+            let o = &s.ops;
+            let total = o.macs_total.max(1) as f64;
+            t.row(&[
+                a.meta.name.clone(),
+                if policied { sess.predictor_name().to_string() } else { "none".into() },
+                format!("{:.2}", o.macs_saved_frac() * 100.0),
+                format!("{:.2}", o.input_zero_frac() * 100.0),
+                format!("{:.2}", o.effectual_macs() as f64 / total * 100.0),
+                format!(
+                    "{:.2}",
+                    (o.macs_total - o.effectual_macs()) as f64 / total * 100.0
+                ),
+            ]);
+        }
+    }
+    t
+}
+
 // ---------------------------------------------------------------------------
 // Fig 8 — distribution of closest-neighbour angles
 // ---------------------------------------------------------------------------
@@ -461,8 +498,15 @@ pub fn fig13(artifacts: &[Artifacts], samples: usize, cfg: &Config) -> (Table, V
         )
         .with_opts(
             // trace generation is the host-side bottleneck of fig13:
-            // use every core for the tiled forward
-            RunOpts { oracle: false, collect_trace: true, ..Default::default() }.parallel(),
+            // use every core for the tiled forward, and honour the
+            // configured input-sparsity kernel mode (results identical)
+            RunOpts {
+                oracle: false,
+                collect_trace: true,
+                input_sparsity: cfg.engine.input_sparsity,
+                ..Default::default()
+            }
+            .parallel(),
         );
         let pol = sess.policy();
         let sim = Simulator::new(cfg.clone());

@@ -7,6 +7,7 @@ use anyhow::{bail, Result};
 use mor::cli::{Args, USAGE};
 use mor::config::Config;
 use mor::coordinator::{self, Backend, ServeOpts};
+use mor::engine::InputSparsity;
 use mor::figures;
 use mor::model::Artifacts;
 use mor::predictor::strategies::{Strategy, ZeroPredictor};
@@ -61,6 +62,9 @@ fn config_from(args: &Args) -> Result<Config> {
         None => Config::default(),
     };
     cfg.predictor.threshold = args.opt_f64("threshold", cfg.predictor.threshold as f64)? as f32;
+    if let Some(mode) = args.opt("input-sparsity") {
+        cfg.engine.input_sparsity = InputSparsity::parse(mode)?;
+    }
     if let Some(name) = args.opt("predictor") {
         cfg.predictor.strategy = Strategy::parse(name)?;
     } else if args.flag("no-clusters") || args.flag("no-binary") {
@@ -89,13 +93,17 @@ fn cmd_run(args: &Args) -> Result<()> {
         }
         // one session carries both runs: the dense baseline shares the
         // model (and prepacked weights) with the policied evaluation
-        let session = Session::from_artifacts(&arts, pcfg.clone());
+        let session = Session::build(&arts.model)
+            .params(&arts.predictor)
+            .config(pcfg.clone())
+            .input_sparsity(cfg.engine.input_sparsity)
+            .finish();
         let base = MorRun::evaluate(&arts, &session.with_policy(None), samples);
         let s = MorRun::evaluate(&arts, &session, samples);
         let p = &s.pred;
         println!(
             "[{name}] predictor={} T={:.2}{} | acc {:.2}% (baseline {:.2}%, Δ {:+.2}%) | \
-             MACs saved {:.1}% | DRAM wt saved {:.1}%",
+             MACs saved {:.1}% | input-zero MACs {:.1}% of done | DRAM wt saved {:.1}%",
             session.predictor_name(),
             pcfg.threshold,
             if auto_thr { " (auto)" } else { "" },
@@ -103,6 +111,7 @@ fn cmd_run(args: &Args) -> Result<()> {
             base.accuracy * 100.0,
             (s.accuracy - base.accuracy) * 100.0,
             s.ops.macs_saved_frac() * 100.0,
+            s.ops.input_zero_frac() * 100.0,
             s.ops.weight_bytes_saved as f64
                 / (s.ops.weight_bytes_fetched + s.ops.weight_bytes_saved).max(1) as f64
                 * 100.0,
@@ -183,6 +192,9 @@ fn cmd_figures(args: &Args) -> Result<()> {
     if want("ablation") {
         emit("ablation_strategies", figures::strategy_ablation(&artifacts, samples))?;
     }
+    if want("sparsity") {
+        emit("sparsity_dual_sided", figures::sparsity_table(&artifacts, samples))?;
+    }
     if want("fig12") {
         let (t, _) = figures::fig12(&artifacts, samples);
         emit("fig12_pred_breakdown", t)?;
@@ -230,6 +242,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .params(&arts.predictor)
         .config(cfg.predictor.clone())
         .threads(intra_threads)
+        .input_sparsity(cfg.engine.input_sparsity)
         .finish();
     let arrival = Arrival::from_cli(arrival_kind, rps)?;
     let mut stream = RequestStream::with_arrival(arrival, arts.data.n_test(), 42);

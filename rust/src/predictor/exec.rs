@@ -12,11 +12,17 @@
 //!   single request contributes only a handful of rows. Per tile:
 //!   (1) gather the patches (each from its own sample's quantized input),
 //!   (2) run the packed binary predictor + cluster-proxy logic over the
-//!   whole tile to produce a skip mask, (3) run the dense multi-filter
+//!   whole tile to produce a skip mask, (3) run the multi-filter
 //!   micro-kernel ([`crate::engine::gemm`]) only over surviving
-//!   (row, filter) pairs. Row tiles are optionally parallelized across
-//!   `std::thread::scope` workers ([`RunOpts::threads`]); stats and
-//!   traces are accounted per sample and merge deterministically.
+//!   (row, filter) pairs. The engine is **dual-sided sparse**: each tile
+//!   row additionally carries a compressed nonzero-lane list of its
+//!   patch, and [`RunOpts::input_sparsity`] selects (per row, on a
+//!   density crossover in `Auto` mode) whether the surviving dots run
+//!   on the dense block kernel or the input-zero-skipping sparse one —
+//!   a pure kernel choice, bit-identical either way. Row tiles are
+//!   optionally parallelized across `std::thread::scope` workers
+//!   ([`RunOpts::threads`]); stats and traces are accounted per sample
+//!   and merge deterministically.
 //! * **ScalarRef** — the original per-neuron GEMV path, retained as the
 //!   bit-exact test oracle and perf baseline. Logits, [`OpsStats`],
 //!   [`PredStats`] and traces are identical between the two (all dot
@@ -40,7 +46,8 @@ use super::strategies::{
 use super::{EngineSel, LayerTrace, MorPolicy, OpsStats, PredStats, RunOpts, RunResult};
 use crate::engine::gemm::{self, PatchTile, PrepackedFilters, NR, TILE_ROWS};
 use crate::engine::{
-    self, dot::dot_i8, relu_input, ConvGeom, PatchGather, QuantizedTensor, Tensor,
+    self, dot::dot_i8, relu_input, ConvGeom, InputSparsity, PatchGather, QuantizedTensor,
+    Tensor,
 };
 use crate::model::{Model, Node};
 
@@ -63,7 +70,21 @@ pub fn run_sample(
 ///
 /// Results are **bit-identical** to calling [`run_sample`] per input —
 /// logits, [`OpsStats`], [`PredStats`] and traces — for any batch size,
-/// thread count, or tile alignment (ragged final tiles included).
+/// thread count, tile alignment (ragged final tiles included), or
+/// [`InputSparsity`] mode.
+///
+/// ```
+/// use mor::model::synth;
+/// use mor::predictor::{exec, RunOpts};
+///
+/// let model = synth::tiny_serving_model(7);
+/// let (h, w, c) = model.input_shape;
+/// let xs: Vec<Vec<f32>> = (0..3).map(|i| vec![0.1 * i as f32; h * w * c]).collect();
+/// let inputs: Vec<&[f32]> = xs.iter().map(|x| x.as_slice()).collect();
+/// let results = exec::run_batch(&model, None, &inputs, RunOpts::default());
+/// assert_eq!(results.len(), 3);
+/// assert_eq!(results[0].logits.len(), 4); // tiny_serving_model has 4 classes
+/// ```
 pub fn run_batch(
     model: &Model,
     policy: Option<&MorPolicy>,
@@ -243,6 +264,9 @@ struct TiledCtx<'a> {
     is_relu_layer: bool,
     is_conv: bool,
     oracle: bool,
+    /// Input-side sparsity mode (kernel selection only — results are
+    /// bit-identical in every mode).
+    sparsity: InputSparsity,
 }
 
 impl TiledCtx<'_> {
@@ -313,6 +337,7 @@ fn compute_layer_tiled(
             // force it on so its Fig-12 categories are always populated
             oracle: opts.oracle
                 || policy.is_some_and(|(_, mp)| mp.cfg.strategy == Strategy::Oracle),
+            sparsity: opts.input_sparsity,
         };
 
         let n_tiles = total_rows.div_ceil(TILE_ROWS).max(1);
@@ -433,8 +458,12 @@ fn process_row_range(
     };
 
     let mut pgs: Vec<PatchGather> = ctx.qts.iter().map(PatchGather::new).collect();
-    let mut tile = PatchTile::new(ctx.node.k_len());
+    let mut tile = PatchTile::new(ctx.node.k_len(), ctx.sparsity != InputSparsity::Off);
     let mut tile_sample = [0usize; TILE_ROWS]; // sample of each tile row
+    // per-row kernel choice: iterate only nonzero input lanes when the
+    // mode (and, in Auto, the measured density) says so — either kernel
+    // yields the exact same integer dots
+    let mut row_sparse = [false; TILE_ROWS];
     let mut dots = vec![0i32; TILE_ROWS * cout];
     let mut ri_cache = vec![0.0f32; cout]; // current row's proxy ReLU inputs
     let mut skip = vec![false; cout];
@@ -462,7 +491,16 @@ fn process_row_range(
             } else {
                 pg.gather_fc(row);
             }
-            tile.set_row(r, &pg.patch, &pg.packed);
+            row_sparse[r] = match ctx.sparsity {
+                InputSparsity::Off => false,
+                InputSparsity::On => tile.has_sparse(),
+                InputSparsity::Auto => {
+                    tile.has_sparse() && gemm::sparse_wins(pg.nnz, ctx.node.k_len())
+                }
+            };
+            // the compression pass only runs for rows that will use the
+            // sparse kernel — dense rows pay one compare, nothing more
+            tile.set_row(r, &pg.patch, &pg.packed, pg.nnz, row_sparse[r]);
             ops[s].macs_total += k * cout as u64;
             if ctx.is_relu_layer {
                 ops[s].relu_macs += k * cout as u64;
@@ -479,7 +517,12 @@ fn process_row_range(
                 while f0 < cout {
                     let nf = NR.min(cout - f0);
                     for r in 0..trows {
-                        gemm::dot_block(tile.patch(r), ctx.pf, f0, nf, &mut blk);
+                        if row_sparse[r] {
+                            let (li, lv) = tile.lanes(r);
+                            gemm::dot_block_sparse(li, lv, ctx.pf, f0, nf, &mut blk);
+                        } else {
+                            gemm::dot_block(tile.patch(r), ctx.pf, f0, nf, &mut blk);
+                        }
                         dots[r * cout + f0..r * cout + f0 + nf].copy_from_slice(&blk[..nf]);
                     }
                     f0 += NR;
@@ -487,10 +530,13 @@ fn process_row_range(
                 for r in 0..trows {
                     let g = t0 + r;
                     let (s, row) = (tile_sample[r], g % ctx.rows);
+                    let zeros = k - tile.nnz(r) as u64;
                     let out_row = &mut out[(g - row0) * cout..(g - row0 + 1) * cout];
                     for (f, o) in out_row.iter_mut().enumerate() {
                         let d = dots[r * cout + f];
-                        account_eval(ctx, d, s, row, f, false, o, &mut pred[s], &mut ops[s]);
+                        account_eval(
+                            ctx, d, s, row, f, false, zeros, o, &mut pred[s], &mut ops[s],
+                        );
                     }
                 }
             }
@@ -502,7 +548,12 @@ fn process_row_range(
                 // blocks outer for weight reuse across the tile -----------
                 for chunk in proxies.chunks(NR) {
                     for r in 0..trows {
-                        gemm::dot_block_indexed(tile.patch(r), ctx.pf, chunk, &mut blk);
+                        if row_sparse[r] {
+                            let (li, lv) = tile.lanes(r);
+                            gemm::dot_block_indexed_sparse(li, lv, ctx.pf, chunk, &mut blk);
+                        } else {
+                            gemm::dot_block_indexed(tile.patch(r), ctx.pf, chunk, &mut blk);
+                        }
                         for (j, &f) in chunk.iter().enumerate() {
                             dots[r * cout + f] = blk[j];
                         }
@@ -512,13 +563,14 @@ fn process_row_range(
                 for r in 0..trows {
                     let g = t0 + r;
                     let (s, row) = (tile_sample[r], g % ctx.rows);
+                    let zeros = k - tile.nnz(r) as u64;
                     let local = (g - row0) * cout;
                     let out_row = &mut out[local..local + cout];
 
                     for &p in proxies {
                         let ri = account_eval(
-                            ctx, dots[r * cout + p], s, row, p, false, &mut out_row[p],
-                            &mut pred[s], &mut ops[s],
+                            ctx, dots[r * cout + p], s, row, p, false, zeros,
+                            &mut out_row[p], &mut pred[s], &mut ops[s],
                         );
                         ri_cache[p] = ri;
                     }
@@ -552,12 +604,18 @@ fn process_row_range(
                         &mut ops[s],
                     );
 
-                    // ---- phase 3: dense GEMM over surviving pairs only ---
+                    // ---- phase 3: GEMM over surviving pairs only (the
+                    // row's kernel flavour follows its input density) --
                     for chunk in survivors.chunks(NR) {
-                        gemm::dot_block_indexed(tile.patch(r), ctx.pf, chunk, &mut blk);
+                        if row_sparse[r] {
+                            let (li, lv) = tile.lanes(r);
+                            gemm::dot_block_indexed_sparse(li, lv, ctx.pf, chunk, &mut blk);
+                        } else {
+                            gemm::dot_block_indexed(tile.patch(r), ctx.pf, chunk, &mut blk);
+                        }
                         for (j, &f) in chunk.iter().enumerate() {
                             account_eval(
-                                ctx, blk[j], s, row, f, applied[f], &mut out_row[f],
+                                ctx, blk[j], s, row, f, applied[f], zeros, &mut out_row[f],
                                 &mut pred[s], &mut ops[s],
                             );
                         }
@@ -584,7 +642,9 @@ fn process_row_range(
 
 /// Account one fully-evaluated output (dot already computed). Matches the
 /// scalar path's `full_eval!` (with `applied = false`) and the non-skip
-/// branch of `finish_neuron` exactly. Returns the ReLU input.
+/// branch of `finish_neuron` exactly. `zeros` is the patch's zero-lane
+/// count (`k - nnz`) — the ineffectual share of this output's MACs.
+/// Returns the ReLU input.
 #[allow(clippy::too_many_arguments)]
 #[inline]
 fn account_eval(
@@ -594,6 +654,7 @@ fn account_eval(
     row: usize,
     f: usize,
     applied: bool,
+    zeros: u64,
     out_val: &mut f32,
     pred: &mut PredStats,
     ops: &mut OpsStats,
@@ -601,6 +662,7 @@ fn account_eval(
     let ri = relu_input(d, ctx.dq, ctx.bn, f, ctx.res_at(s, row, f));
     *out_val = if ctx.node_relu { ri.max(0.0) } else { ri };
     ops.macs_done += ctx.k;
+    ops.macs_skipped_input_zero += zeros;
     ops.weight_bytes_fetched += ctx.k;
     if ctx.is_relu_layer {
         if ri <= 0.0 {
@@ -730,6 +792,7 @@ fn compute_layer_scalar(
                 let ri = relu_input(d, dq, bn, f, res_at(f));
                 out.data[row * cout + f] = if node_relu { ri.max(0.0) } else { ri };
                 ops.macs_done += k;
+                ops.macs_skipped_input_zero += k - pg.nnz as u64;
                 ops.weight_bytes_fetched += k;
                 if is_relu_layer && ri <= 0.0 {
                     ops.neg_relu_macs += k;
@@ -880,6 +943,7 @@ fn finish_neuron(
         let ri = relu_input(d, dq, bn, f, res);
         out.data[row * cout + f] = if node_relu { ri.max(0.0) } else { ri };
         ops.macs_done += k;
+        ops.macs_skipped_input_zero += k - pg.nnz as u64;
         ops.weight_bytes_fetched += k;
         if is_relu_layer {
             if ri <= 0.0 {
@@ -1142,6 +1206,7 @@ mod tests {
                                 collect_trace: true,
                                 threads: 1,
                                 engine: EngineSel::ScalarRef,
+                                ..Default::default()
                             };
                             let want = run_sample(m, policy, &x, base);
                             let got = run_sample(
@@ -1161,6 +1226,53 @@ mod tests {
         }
     }
 
+    /// Every input-sparsity mode must be invisible: logits, OpsStats
+    /// (incl. the macs_skipped_input_zero counter), PredStats and traces
+    /// identical whether the sparse kernels ran, the dense ones, or the
+    /// auto crossover mixed them per row. The deep model's post-ReLU
+    /// layers guarantee genuinely sparse inputs (and some all-zero
+    /// patches under the always-zero policy).
+    #[test]
+    fn input_sparsity_modes_bit_identical() {
+        let m = tiny_conv(61);
+        let x = rand_input(6 * 6 * 2, 67);
+        let n = m.nodes[0].cout();
+        let pol = always_zero_policy(&m, 0, n);
+        for policy in [None, Some(&pol)] {
+            let base = RunOpts {
+                oracle: true,
+                collect_trace: true,
+                input_sparsity: InputSparsity::Off,
+                ..Default::default()
+            };
+            let want = run_sample(&m, policy, &x, base);
+            // post-ReLU layers make the ineffectual-input pool non-empty
+            assert!(want.ops.macs_skipped_input_zero > 0);
+            assert!(want.ops.effectual_macs() <= want.ops.macs_done);
+            for mode in [InputSparsity::On, InputSparsity::Auto] {
+                for threads in [1usize, 3] {
+                    let got = run_sample(
+                        &m,
+                        policy,
+                        &x,
+                        RunOpts { input_sparsity: mode, threads, ..base },
+                    );
+                    assert_eq!(want.logits, got.logits, "mode={mode:?}");
+                    assert_eq!(want.ops, got.ops, "mode={mode:?}");
+                    assert_eq!(want.pred, got.pred, "mode={mode:?}");
+                    assert_eq!(want.traces, got.traces, "mode={mode:?}");
+                }
+            }
+            // the scalar reference path never runs sparse kernels but
+            // must report the same data-derived counter
+            let scalar = run_sample(&m, policy, &x, base.scalar_ref());
+            assert_eq!(
+                scalar.ops.macs_skipped_input_zero,
+                want.ops.macs_skipped_input_zero
+            );
+        }
+    }
+
     /// Every non-default strategy must agree between engines too — they
     /// exercise the other decision branches.
     #[test]
@@ -1175,6 +1287,7 @@ mod tests {
                 collect_trace: true,
                 threads: 1,
                 engine: EngineSel::ScalarRef,
+                ..Default::default()
             };
             let want = run_sample(&m, Some(&pol), &x, base);
             for threads in [1usize, 2] {

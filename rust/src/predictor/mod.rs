@@ -28,6 +28,8 @@ use crate::session::Session;
 use std::collections::BTreeMap;
 use strategies::{LayerState, Strategy, ZeroPredictor};
 
+pub use crate::engine::InputSparsity;
+
 /// The full prepared policy for a model: the configured strategy plus
 /// the per-layer state it built. Shared read-only across worker
 /// threads; re-threshold a cached policy with [`MorPolicy::with_threshold`]
@@ -129,6 +131,17 @@ pub struct OpsStats {
     pub relu_macs: u64,
     /// True zero outputs among ReLU-layer outputs.
     pub true_zero_outputs: u64,
+    /// Among [`OpsStats::macs_done`]: MACs whose *input* activation lane
+    /// is exactly zero (ineffectual — they contribute nothing to the
+    /// integer dot). This is the input-side savings pool the dual-sided
+    /// engine elides via the compressed-lane kernels, complementary to
+    /// the output-prediction savings (`macs_total - macs_done`).
+    ///
+    /// A property of the data, not of the kernel that ran: it is
+    /// counted identically whatever [`InputSparsity`] mode executes, so
+    /// the equivalence suites can demand `OpsStats` bit-equality across
+    /// sparse/dense runs.
+    pub macs_skipped_input_zero: u64,
 }
 
 impl OpsStats {
@@ -141,6 +154,7 @@ impl OpsStats {
         self.neg_relu_macs += o.neg_relu_macs;
         self.relu_macs += o.relu_macs;
         self.true_zero_outputs += o.true_zero_outputs;
+        self.macs_skipped_input_zero += o.macs_skipped_input_zero;
     }
 
     /// Fraction of all MACs avoided (the paper's "computations avoided").
@@ -150,6 +164,23 @@ impl OpsStats {
         } else {
             (self.macs_total - self.macs_done) as f64 / self.macs_total as f64
         }
+    }
+
+    /// Fraction of the *performed* MACs that were ineffectual
+    /// (zero-valued input lane) — the dual-sided engine's input-side
+    /// savings pool.
+    pub fn input_zero_frac(&self) -> f64 {
+        if self.macs_done == 0 {
+            0.0
+        } else {
+            self.macs_skipped_input_zero as f64 / self.macs_done as f64
+        }
+    }
+
+    /// MACs that both survived output prediction *and* had a nonzero
+    /// input lane — the work a dual-sided accelerator actually performs.
+    pub fn effectual_macs(&self) -> u64 {
+        self.macs_done - self.macs_skipped_input_zero
     }
 }
 
@@ -200,6 +231,11 @@ pub struct RunOpts {
     pub threads: usize,
     /// Engine implementation (tiled GEMM vs scalar reference).
     pub engine: EngineSel,
+    /// Input-side sparsity mode for the tiled engine: skip zero-valued
+    /// input activation lanes via the compressed-lane kernels. All
+    /// modes are bit-identical (see [`InputSparsity`]); `Auto` picks
+    /// sparse vs dense per tile row on a density crossover.
+    pub input_sparsity: InputSparsity,
 }
 
 impl Default for RunOpts {
@@ -209,6 +245,7 @@ impl Default for RunOpts {
             collect_trace: false,
             threads: 1,
             engine: EngineSel::Tiled,
+            input_sparsity: InputSparsity::Auto,
         }
     }
 }

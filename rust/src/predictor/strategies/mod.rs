@@ -250,6 +250,17 @@ pub trait ZeroPredictor {
 
 /// The built-in strategy registry: enum-based static dispatch over the
 /// [`ZeroPredictor`] implementations (no `dyn` on the hot path).
+///
+/// ```
+/// use mor::predictor::strategies::{Strategy, ZeroPredictor};
+///
+/// let s = Strategy::parse("oracle").unwrap();
+/// assert_eq!(s.name(), "oracle");
+/// assert!(Strategy::parse("learned").is_err());
+/// // the legacy component toggles map onto named strategies
+/// assert_eq!(Strategy::from_components(true, true), Strategy::Mor);
+/// assert_eq!(Strategy::ALL.len(), 5);
+/// ```
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Strategy {
     /// Hybrid Mixture-of-Rookies (paper default; bit-exact with the

@@ -33,7 +33,7 @@
 use crate::config::PredictorConfig;
 use crate::model::{Artifacts, Model, PredictorParams};
 use crate::predictor::strategies::{Strategy, ZeroPredictor};
-use crate::predictor::{exec, EngineSel, MorPolicy, RunOpts, RunResult};
+use crate::predictor::{exec, EngineSel, InputSparsity, MorPolicy, RunOpts, RunResult};
 use anyhow::Result;
 use std::sync::Arc;
 
@@ -48,6 +48,26 @@ pub struct Session {
 impl Session {
     /// Start building a session for `model`. The model is cloned once
     /// at [`SessionBuilder::finish`]; the original stays usable.
+    ///
+    /// ```
+    /// use mor::model::synth;
+    /// use mor::session::Session;
+    ///
+    /// let model = synth::tiny_serving_model(1);
+    /// let params = synth::predictor_for(&model, 2);
+    /// let session = Session::build(&model)
+    ///     .params(&params)
+    ///     .predictor("mor").unwrap()
+    ///     .threshold(0.5)
+    ///     .threads(2)
+    ///     .finish();
+    /// assert_eq!(session.predictor_name(), "mor");
+    ///
+    /// let (h, w, c) = model.input_shape;
+    /// let x = vec![0.25f32; h * w * c];
+    /// let r = session.run_sample(&x);
+    /// assert_eq!(r.logits.len(), 4); // tiny_serving_model has 4 classes
+    /// ```
     pub fn build(model: &Model) -> SessionBuilder<'_> {
         SessionBuilder {
             model,
@@ -195,6 +215,14 @@ impl<'a> SessionBuilder<'a> {
         self
     }
 
+    /// Input-side sparsity mode (`auto`/`on`/`off`): whether the tiled
+    /// engine skips zero-valued input activation lanes. Bit-identical
+    /// in every mode — the `--input-sparsity` CLI surface.
+    pub fn input_sparsity(mut self, mode: InputSparsity) -> Self {
+        self.opts.input_sparsity = mode;
+        self
+    }
+
     /// Compute the true value of skipped outputs (Fig-12 categories).
     pub fn oracle(mut self, on: bool) -> Self {
         self.opts.oracle = on;
@@ -293,6 +321,17 @@ mod tests {
             let on_b = b.layers[l].enabled.iter().filter(|&&e| e).count();
             assert!(on_b >= on_a);
         }
+    }
+
+    #[test]
+    fn input_sparsity_knob_threads_through() {
+        let m = synth::tiny_serving_model(15);
+        let s = Session::build(&m).input_sparsity(InputSparsity::Off).finish();
+        assert_eq!(s.opts().input_sparsity, InputSparsity::Off);
+        assert_eq!(
+            Session::build(&m).finish().opts().input_sparsity,
+            InputSparsity::Auto
+        );
     }
 
     #[test]

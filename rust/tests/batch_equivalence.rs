@@ -2,7 +2,8 @@
 //! must be **bit-identical** to mapping `run_sample` over the batch —
 //! logits, `OpsStats`, `PredStats` and skip traces, per sample — for
 //! batch sizes 1..16 (ragged final tiles included), every policy toggle,
-//! and any thread count. This is the correctness contract that lets the
+//! any thread count, and every input-sparsity kernel mode. This is the
+//! correctness contract that lets the
 //! serving coordinator coalesce cross-request micro-batches without
 //! changing a single served answer.
 //!
@@ -12,7 +13,9 @@
 use mor::config::PredictorConfig;
 use mor::model::synth;
 use mor::predictor::strategies::Strategy;
-use mor::predictor::{exec::run_batch, exec::run_sample, EngineSel, MorPolicy, RunOpts, RunResult};
+use mor::predictor::{
+    exec::run_batch, exec::run_sample, EngineSel, InputSparsity, MorPolicy, RunOpts, RunResult,
+};
 use mor::util::prop::property;
 use mor::util::rng::Rng;
 
@@ -61,6 +64,8 @@ fn run_batch_bit_identical_to_per_sample_run() {
             collect_trace: true,
             threads: *g.pick(&[1usize, 3]),
             engine: EngineSel::Tiled,
+            // batching must stay invisible whatever kernel flavour runs
+            input_sparsity: *g.pick(&InputSparsity::ALL),
         };
         let got = run_batch(&model, policy, &inputs, opts);
         if got.len() != b {
@@ -123,6 +128,7 @@ fn run_batch_scalar_ref_engine_matches_too() {
         collect_trace: true,
         threads: 1,
         engine: EngineSel::ScalarRef,
+        ..Default::default()
     };
     let got = run_batch(&model, Some(&pol), &inputs, opts);
     for (s, x) in inputs.iter().enumerate() {

@@ -1,8 +1,10 @@
 //! Engine-equivalence property suite: the tiled row-batched GEMM engine
 //! (prepacked weights, predict-then-evaluate tiles, optional row-tile
-//! threading) must produce **bit-identical** logits, `OpsStats`,
-//! `PredStats` and skip traces to the retained per-neuron scalar reference
-//! path, across random models, random policies and every component toggle.
+//! threading, dense or input-zero-skipping kernels) must produce
+//! **bit-identical** logits, `OpsStats`, `PredStats` and skip traces to
+//! the retained per-neuron scalar reference path, across random models,
+//! random policies, every component toggle and every input-sparsity
+//! mode.
 //!
 //! Runs fully offline — models come from `mor::model::synth`, no
 //! `make artifacts` needed.
@@ -10,7 +12,9 @@
 use mor::config::PredictorConfig;
 use mor::model::synth;
 use mor::predictor::strategies::Strategy;
-use mor::predictor::{exec::run_sample, EngineSel, MorPolicy, RunOpts, RunResult};
+use mor::predictor::{
+    exec::run_sample, EngineSel, InputSparsity, MorPolicy, RunOpts, RunResult,
+};
 use mor::util::prop::property;
 use mor::util::rng::Rng;
 
@@ -60,21 +64,31 @@ fn tiled_engine_bit_identical_to_scalar_reference() {
                 collect_trace: true,
                 threads: 1,
                 engine: EngineSel::ScalarRef,
+                ..Default::default()
             };
             let want = run_sample(&model, policy, &x, base);
             for threads in [1usize, 3] {
-                let got = run_sample(
-                    &model,
-                    policy,
-                    &x,
-                    RunOpts { threads, engine: EngineSel::Tiled, ..base },
-                );
-                if let Some(msg) = diff(&want, &got) {
-                    return Err(format!(
-                        "policy_on={policy_on} threads={threads} oracle={oracle} \
-                         strategy={:?} T={}: {msg}",
-                        cfg.strategy, cfg.threshold
-                    ));
+                // the scalar reference ignores the input-sparsity mode,
+                // so this also proves sparse == dense on the tiled side
+                for mode in InputSparsity::ALL {
+                    let got = run_sample(
+                        &model,
+                        policy,
+                        &x,
+                        RunOpts {
+                            threads,
+                            engine: EngineSel::Tiled,
+                            input_sparsity: mode,
+                            ..base
+                        },
+                    );
+                    if let Some(msg) = diff(&want, &got) {
+                        return Err(format!(
+                            "policy_on={policy_on} threads={threads} oracle={oracle} \
+                             strategy={:?} T={} input_sparsity={mode:?}: {msg}",
+                            cfg.strategy, cfg.threshold
+                        ));
+                    }
                 }
             }
         }

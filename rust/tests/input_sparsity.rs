@@ -1,0 +1,200 @@
+//! Input-sparsity property suite: the dual-sided engine's
+//! input-zero-skipping kernels (`--input-sparsity on|auto`) must be
+//! **bit-identical** to the dense kernels (`off`) — logits, `OpsStats`
+//! (including the data-derived `macs_skipped_input_zero` counter),
+//! `PredStats` and skip traces — across random models, strategies,
+//! controlled input densities, batch sizes and thread counts. A zero
+//! int8 lane contributes exactly 0 to the integer dot, so the kernel
+//! choice can never be observable; these tests pin that contract.
+//!
+//! Runs fully offline — models come from `mor::model::synth`, no
+//! `make artifacts` needed.
+
+use mor::config::PredictorConfig;
+use mor::model::synth;
+use mor::predictor::strategies::Strategy;
+use mor::predictor::{
+    exec::run_batch, exec::run_sample, EngineSel, InputSparsity, MorPolicy, RunOpts, RunResult,
+};
+use mor::util::prop::property;
+use mor::util::rng::Rng;
+
+/// Random input with a controlled zero fraction: quantized-to-zero
+/// lanes appear in the very first layer's patches, not only after ReLU.
+fn sparse_input(rng: &mut Rng, n: usize, zero_pct: usize) -> Vec<f32> {
+    (0..n)
+        .map(|_| {
+            if (rng.int_in(0, 99) as usize) < zero_pct {
+                0.0
+            } else {
+                rng.uniform(-1.0, 1.0) as f32
+            }
+        })
+        .collect()
+}
+
+fn diff(want: &RunResult, got: &RunResult) -> Option<String> {
+    if want.logits != got.logits {
+        return Some(format!(
+            "logits differ: want {:?} got {:?}",
+            want.logits, got.logits
+        ));
+    }
+    if want.pred != got.pred {
+        return Some(format!("pred stats differ: want {:?} got {:?}", want.pred, got.pred));
+    }
+    if want.ops != got.ops {
+        return Some(format!("ops stats differ: want {:?} got {:?}", want.ops, got.ops));
+    }
+    if want.traces != got.traces {
+        return Some("skip traces differ".to_string());
+    }
+    None
+}
+
+#[test]
+fn sparse_kernels_bit_identical_across_densities() {
+    property("input-sparsity on/auto == off", 40, |g| {
+        let model = synth::random_model(g.rng());
+        let params = synth::predictor_for(&model, g.seed);
+        let (h, w, c) = model.input_shape;
+        // 0% zeros (fully dense) through 100% zeros (all-zero input)
+        let zero_pct = *g.pick(&[0usize, 30, 60, 90, 100]);
+        let x = sparse_input(g.rng(), h * w * c, zero_pct);
+        let cfg = PredictorConfig {
+            threshold: *g.pick(&[0.0f32, 0.5, 0.9]),
+            strategy: *g.pick(&Strategy::ALL),
+            ..Default::default()
+        };
+        let pol = MorPolicy::new(&model, &params, cfg.clone());
+        let policy = g.bool().then_some(&pol);
+        let base = RunOpts {
+            oracle: g.bool(),
+            collect_trace: true,
+            threads: 1,
+            engine: EngineSel::Tiled,
+            input_sparsity: InputSparsity::Off,
+        };
+        let want = run_sample(&model, policy, &x, base);
+        for mode in [InputSparsity::On, InputSparsity::Auto] {
+            for threads in [1usize, 3] {
+                let got = run_sample(
+                    &model,
+                    policy,
+                    &x,
+                    RunOpts { input_sparsity: mode, threads, ..base },
+                );
+                if let Some(msg) = diff(&want, &got) {
+                    return Err(format!(
+                        "zero_pct={zero_pct} mode={mode:?} threads={threads} \
+                         strategy={:?}: {msg}",
+                        cfg.strategy
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sparse_batches_bit_identical_to_per_sample() {
+    // mixed-density batches: tiles hold dense and near-empty patches
+    // side by side, so the per-row kernel choice (Auto) flips within
+    // one tile — batching must still be invisible
+    let mut rng = Rng::new(0x5Aa5);
+    let model = synth::tiny_serving_model(21);
+    let params = synth::predictor_for(&model, 22);
+    let (h, w, c) = model.input_shape;
+    let pol = MorPolicy::new(
+        &model,
+        &params,
+        PredictorConfig { threshold: 0.5, ..Default::default() },
+    );
+    for b in [1usize, 5, 16] {
+        let xs: Vec<Vec<f32>> = (0..b)
+            .map(|i| sparse_input(&mut rng, h * w * c, (i * 25) % 125))
+            .collect();
+        let inputs: Vec<&[f32]> = xs.iter().map(|x| x.as_slice()).collect();
+        for mode in InputSparsity::ALL {
+            let opts = RunOpts {
+                oracle: true,
+                collect_trace: true,
+                input_sparsity: mode,
+                ..Default::default()
+            };
+            let got = run_batch(&model, Some(&pol), &inputs, opts);
+            for (s, x) in inputs.iter().enumerate() {
+                let want = run_sample(&model, Some(&pol), x, opts);
+                assert!(
+                    diff(&want, &got[s]).is_none(),
+                    "b={b} sample={s} mode={mode:?}: {}",
+                    diff(&want, &got[s]).unwrap()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn input_zero_counter_is_mode_and_engine_independent() {
+    // macs_skipped_input_zero is a property of the data: identical
+    // whichever kernel ran, and the scalar reference reports it too
+    let mut rng = Rng::new(0xF00D);
+    let model = synth::cnn10_like(41);
+    let params = synth::predictor_for(&model, 42);
+    let (h, w, c) = model.input_shape;
+    let x = sparse_input(&mut rng, h * w * c, 50);
+    let pol = MorPolicy::new(
+        &model,
+        &params,
+        PredictorConfig { threshold: 0.5, ..Default::default() },
+    );
+    let base = RunOpts {
+        oracle: false,
+        collect_trace: false,
+        input_sparsity: InputSparsity::Off,
+        ..Default::default()
+    };
+    let want = run_sample(&model, Some(&pol), &x, base);
+    // deep post-ReLU stack: the ineffectual-input pool must be visible
+    assert!(want.ops.macs_skipped_input_zero > 0);
+    assert!(want.ops.macs_skipped_input_zero <= want.ops.macs_done);
+    for opts in [
+        RunOpts { input_sparsity: InputSparsity::On, ..base },
+        RunOpts { input_sparsity: InputSparsity::Auto, ..base },
+        base.scalar_ref(),
+    ] {
+        let got = run_sample(&model, Some(&pol), &x, opts);
+        assert_eq!(got.ops, want.ops);
+        assert_eq!(got.logits, want.logits);
+    }
+}
+
+#[test]
+fn all_zero_input_runs_and_skips_everything_ineffectual() {
+    // the degenerate case: every patch of the first layer is all-zero,
+    // so in `on` mode the whole layer runs on empty lane lists
+    let model = synth::tiny_serving_model(33);
+    let (h, w, c) = model.input_shape;
+    let x = vec![0.0f32; h * w * c];
+    let off = run_sample(
+        &model,
+        None,
+        &x,
+        RunOpts { input_sparsity: InputSparsity::Off, ..Default::default() },
+    );
+    let on = run_sample(
+        &model,
+        None,
+        &x,
+        RunOpts { input_sparsity: InputSparsity::On, ..Default::default() },
+    );
+    assert_eq!(off.logits, on.logits);
+    assert_eq!(off.ops, on.ops);
+    // layer-0 MACs are all ineffectual (zero input lanes)
+    let k0 = model.nodes[0].k_len() as u64;
+    let rows0 = (h * w) as u64; // stride-1 SAME conv: one row per position
+    let cout0 = model.nodes[0].cout() as u64;
+    assert!(off.ops.macs_skipped_input_zero >= k0 * rows0 * cout0);
+}

@@ -1,0 +1,38 @@
+#!/usr/bin/env bash
+# Markdown link check: every relative link in the given files must point
+# at an existing file or directory (resolved against the markdown file's
+# own directory). External links (http/https/mailto) and same-document
+# anchors are skipped. Exits non-zero listing every rotten link, so doc
+# rot fails CI fast.
+#
+# Usage: tools/linkcheck.sh README.md EXPERIMENTS.md ROADMAP.md
+set -u
+status=0
+for f in "$@"; do
+  if [ ! -f "$f" ]; then
+    echo "linkcheck: no such file: $f" >&2
+    status=1
+    continue
+  fi
+  dir=$(dirname "$f")
+  while IFS= read -r link; do
+    case "$link" in
+      http://* | https://* | mailto:* | '#'*) continue ;;
+    esac
+    path="${link%%#*}"
+    # drop an optional markdown title: [text](FILE.md "Title")
+    path="${path%% \"*}"
+    # and angle-bracketed targets: [text](<FILE.md>)
+    path="${path#<}"
+    path="${path%>}"
+    [ -z "$path" ] && continue
+    if [ ! -e "$dir/$path" ]; then
+      echo "rotten link in $f: ($link) -> $dir/$path does not exist" >&2
+      status=1
+    fi
+  done < <(grep -o '\[[^]]*\]([^)]*)' "$f" | sed 's/^.*(\(.*\))$/\1/')
+done
+if [ "$status" -eq 0 ]; then
+  echo "linkcheck: all relative links resolve in: $*"
+fi
+exit "$status"
