@@ -1,7 +1,10 @@
 //! §Perf micro-benchmarks: the host hot paths tracked across the
 //! optimization passes — dot kernels (dense and input-sparse), the
 //! scalar GEMV vs tiled GEMM engine, the full MoR forward at 1/2/4/8
-//! row-tile threads, and the dual-sided input-sparsity modes (§Sparse).
+//! row-tile threads, the dual-sided input-sparsity modes (§Sparse),
+//! and the plan/workspace steady-state path (§Plan): cached-plan
+//! forward vs per-call compile + fresh workspace, with an asserted
+//! zero-allocations-per-request count and the workspace footprint.
 //!
 //! Besides the human-readable report, emits `BENCH_hotpaths.json`
 //! (override the path with `MOR_BENCH_OUT`) so the perf trajectory is
@@ -15,12 +18,18 @@ use mor::engine::dot::{dot_i8, dot_i8_sparse};
 use mor::engine::gemm::{self, PrepackedFilters, NR};
 use mor::model::synth;
 use mor::predictor::strategies::{Strategy, ZeroPredictor};
-use mor::predictor::{EngineSel, InputSparsity, OpsStats, RunOpts};
+use mor::predictor::{exec, EngineSel, InputSparsity, OpsStats, RunOpts};
 use mor::session::Session;
+use mor::util::alloc_count::{allocs_on_this_thread, CountingAlloc};
 use mor::util::bench::{bench_with, Timing};
 use mor::util::bits::PackedVec;
 use mor::util::rng::Rng;
 use std::hint::black_box;
+
+// Per-thread allocation counter (mor::util::alloc_count): the §Plan
+// section asserts the planned forward's steady state allocates nothing.
+#[global_allocator]
+static COUNTING: CountingAlloc = CountingAlloc;
 
 const FWD_THREADS: [usize; 4] = [1, 2, 4, 8];
 /// Thread counts for the per-strategy predict-overhead matrix.
@@ -224,6 +233,87 @@ fn main() {
         gemm::sparse_auto_cutoff()
     );
 
+    // ---- plan & workspace steady state (§Plan) --------------------------
+    // cached-plan + pooled-workspace forward (what a Session serves with)
+    // vs the per-call path (plan compiled and workspace allocated per
+    // request — what the free exec::run_batch functions do)
+    println!("\nplan & workspace on {model_label}:");
+    let mut plan_ms: Vec<(usize, f64, f64)> = Vec::new();
+    for threads in [1usize, 4, 8] {
+        let sess = session.with_opts(RunOpts {
+            oracle: false,
+            collect_trace: false,
+            threads,
+            engine: EngineSel::Tiled,
+            ..Default::default()
+        });
+        let mut ws = sess.checkout_workspace();
+        let mut results = Vec::new();
+        sess.run_batch_into(&mut ws, &[xs.as_slice()], &mut results); // warmup
+        let t_planned = bench_with(
+            &format!("{model_label} planned fwd (cached plan + workspace), {threads} thread(s)"),
+            1,
+            0.3,
+            &mut || {
+                sess.run_batch_into(&mut ws, &[xs.as_slice()], &mut results);
+                black_box(&results);
+            },
+        );
+        t_planned.report();
+        let t_percall = bench_with(
+            &format!("{model_label} per-call fwd (compile + fresh workspace), {threads} thread(s)"),
+            1,
+            0.3,
+            &mut || {
+                black_box(exec::run_batch(
+                    sess.model(),
+                    sess.policy(),
+                    &[xs.as_slice()],
+                    sess.opts(),
+                ));
+            },
+        );
+        t_percall.report();
+        println!(
+            "    per-request setup overhead removed: {:.2}x",
+            t_percall.min_ns / t_planned.min_ns
+        );
+        plan_ms.push((threads, t_planned.min_ns / 1e6, t_percall.min_ns / 1e6));
+    }
+    // allocations per request after warmup (serving worker config:
+    // 1 thread, no tracing) — the steady state must allocate NOTHING.
+    // A fresh (non-pooled) workspace, so the reported footprint is one
+    // 1-thread worker's, not a pool-recycled 8-thread workspace's
+    let (allocs_per_request, ws_bytes_per_worker) = {
+        let sess = session.with_opts(RunOpts {
+            oracle: false,
+            collect_trace: false,
+            threads: 1,
+            engine: EngineSel::Tiled,
+            ..Default::default()
+        });
+        let mut ws = mor::plan::Workspace::new();
+        let mut results = Vec::new();
+        sess.run_batch_into(&mut ws, &[xs.as_slice()], &mut results);
+        sess.run_batch_into(&mut ws, &[xs.as_slice()], &mut results);
+        let n_reqs = 32u64;
+        let before = allocs_on_this_thread();
+        for _ in 0..n_reqs {
+            sess.run_batch_into(&mut ws, &[xs.as_slice()], &mut results);
+        }
+        let per_req = (allocs_on_this_thread() - before) as f64 / n_reqs as f64;
+        assert_eq!(
+            per_req, 0.0,
+            "steady-state planned forward must make zero heap allocations"
+        );
+        (per_req, ws.heap_bytes())
+    };
+    println!(
+        "    allocations/request after warmup: {allocs_per_request:.1} | \
+         workspace {:.1} KiB per worker",
+        ws_bytes_per_worker as f64 / 1024.0
+    );
+
     // ---- machine-readable trajectory ------------------------------------
     let out_path =
         std::env::var("MOR_BENCH_OUT").unwrap_or_else(|_| "BENCH_hotpaths.json".to_string());
@@ -270,6 +360,31 @@ fn main() {
             js.push_str(", ");
         }
         js.push_str(&format!("\"{label}\": {ms:.4}"));
+    }
+    js.push_str("}\n  },\n");
+    // plan/workspace steady state: cached-plan vs per-call forward,
+    // allocation count per request, workspace footprint per worker
+    js.push_str("  \"plan\": {\n");
+    js.push_str(&format!(
+        "    \"allocs_per_request\": {allocs_per_request:.1},\n"
+    ));
+    js.push_str(&format!(
+        "    \"workspace_bytes_per_worker\": {ws_bytes_per_worker},\n"
+    ));
+    js.push_str("    \"planned_ms\": {");
+    for (i, (threads, planned, _)) in plan_ms.iter().enumerate() {
+        if i > 0 {
+            js.push_str(", ");
+        }
+        js.push_str(&format!("\"{threads}\": {planned:.4}"));
+    }
+    js.push_str("},\n");
+    js.push_str("    \"legacy_percall_ms\": {");
+    for (i, (threads, _, percall)) in plan_ms.iter().enumerate() {
+        if i > 0 {
+            js.push_str(", ");
+        }
+        js.push_str(&format!("\"{threads}\": {percall:.4}"));
     }
     js.push_str("}\n  },\n");
     js.push_str("  \"forward\": {\n");

@@ -12,9 +12,14 @@
 //!   requests, lingering at most [`ServeOpts::batch_wait_us`] for the
 //!   batch to fill) and executes them on one of two backends:
 //!   - `Engine` — the in-process functional int8 engine with the MoR
-//!     predictor via [`exec::run_batch`], which advances the whole batch
+//!     predictor via the session's compiled plan
+//!     ([`Session::run_batch_into`]), which advances the whole batch
 //!     layer-by-layer so im2col row tiles mix patches from several
-//!     requests (the model and policy are shared read-only), or
+//!     requests. Each worker checks **one reusable
+//!     [`crate::plan::Workspace`] out of the session's pool for its
+//!     whole lifetime** (the model, plan and policy are shared
+//!     read-only), so the steady-state serve loop allocates nothing per
+//!     request beyond queue bookkeeping, or
 //!   - `Pjrt` — the AOT-compiled HLO artifact on the PJRT CPU client
 //!     (single owner thread; PJRT handles are not `Send`);
 //! * per-request latency (queueing + service) and throughput metrics,
@@ -27,7 +32,7 @@
 //! workers → collector) is the same shape as an async reactor.
 
 use crate::model::Artifacts;
-use crate::predictor::{exec, RunOpts};
+use crate::predictor::RunOpts;
 use crate::session::Session;
 use crate::util::{mean, percentile_sorted};
 use crate::workload::Request;
@@ -53,8 +58,8 @@ pub struct ServeOpts {
     /// Compresses the virtual arrival clock (e.g. 0.1 replays a 10 s
     /// trace in 1 s) — useful for tests; 1.0 is real time.
     pub time_scale: f64,
-    /// Requests coalesced into one [`exec::run_batch`] call (1 = no
-    /// batching).
+    /// Requests coalesced into one [`Session::run_batch_into`] call
+    /// (1 = no batching).
     pub max_batch: usize,
     /// How long a worker lingers for a partial batch to fill, in µs of
     /// real time (ignored when `max_batch` is 1).
@@ -310,10 +315,17 @@ pub fn serve(
     // (completed or dropped) and the dispatcher issues the next on each
     let (token_tx, token_rx) = mpsc::channel::<()>();
 
-    // shared read-only state for Engine workers: the session's model
-    // (prepacked weights warmed once) and prepared policy
-    let model = session.model_arc();
-    let policy = session.policy_arc();
+    // shared read-only state for Engine workers: a serve-configured
+    // derivation of the session (no oracle ground truth, no traces) —
+    // its compiled plan, prepared policy and workspace pool are what
+    // every worker clones and shares
+    let serve_sess = session.with_opts(RunOpts {
+        oracle: false,
+        collect_trace: false,
+        threads: session.opts().threads.max(1),
+        engine: session.opts().engine,
+        input_sparsity: session.opts().input_sparsity,
+    });
     let data = Arc::new((
         arts.data.test_x.clone(),
         arts.data.test_y.clone(),
@@ -368,23 +380,13 @@ pub fn serve(
     let hlo_path = Artifacts::hlo_path(artifacts_dir, &arts.meta.name);
     #[cfg(feature = "pjrt")]
     let input_shape = arts.meta.input_shape;
-    // serving never collects traces or oracle ground truth; engine and
-    // row-tile threads come from the session
-    let run_opts = RunOpts {
-        oracle: false,
-        collect_trace: false,
-        threads: session.opts().threads.max(1),
-        engine: session.opts().engine,
-        input_sparsity: session.opts().input_sparsity,
-    };
     let batches = Arc::new(std::sync::atomic::AtomicUsize::new(0));
 
     let mut handles = Vec::new();
     for _ in 0..n_workers {
         let queue = Arc::clone(&queue);
         let event_tx = event_tx.clone();
-        let model = Arc::clone(&model);
-        let policy = policy.clone();
+        let sess = serve_sess.clone();
         let data = Arc::clone(&data);
         let batches = Arc::clone(&batches);
         #[cfg(feature = "pjrt")]
@@ -425,41 +427,50 @@ pub fn serve(
                 Backend::Engine => None,
             };
             let (x, y, sample_len) = (&data.0, &data.1, data.2);
+            // one workspace + reusable batch buffers per worker lifetime:
+            // everything grows to the model's (and max_batch's)
+            // high-water marks on the first batches and every later
+            // request reuses them
+            let mut ws = sess.checkout_workspace();
+            let mut results = Vec::new();
+            let mut samples: Vec<&[f32]> = Vec::new();
+            let mut per_req: Vec<Result<usize>> = Vec::new();
             while let Some(batch) = queue.next_batch(max_batch, batch_wait) {
                 batches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                 let svc_t = Instant::now();
-                let samples: Vec<&[f32]> = batch
-                    .iter()
-                    .map(|(req, _)| {
-                        &x[req.sample_idx * sample_len..(req.sample_idx + 1) * sample_len]
-                    })
-                    .collect();
-                // per-request logits: a poisoned request drops only
+                samples.clear();
+                samples.extend(batch.iter().map(|(req, _)| {
+                    &x[req.sample_idx * sample_len..(req.sample_idx + 1) * sample_len]
+                }));
+                // per-request predictions: a poisoned request drops only
                 // itself, never its batch-mates or the rest of the trace
-                let per_req: Vec<Result<Vec<f32>>> = match backend {
-                    Backend::Engine => exec::run_batch(
-                        &model,
-                        policy.as_deref(),
-                        &samples,
-                        run_opts,
-                    )
-                    .into_iter()
-                    .map(|r| Ok(r.logits))
-                    .collect(),
+                per_req.clear();
+                match backend {
+                    Backend::Engine => {
+                        sess.run_batch_into(&mut ws, &samples, &mut results);
+                        per_req.extend(
+                            results
+                                .iter()
+                                .map(|r| Ok(crate::predictor::argmax(&r.logits))),
+                        );
+                    }
                     #[cfg(feature = "pjrt")]
                     Backend::Pjrt => {
                         let exe = pjrt_exe.as_ref().expect("pjrt exe built above");
-                        samples.iter().map(|&s| exe.forward(s)).collect()
+                        per_req.extend(
+                            samples
+                                .iter()
+                                .map(|&s| exe.forward(s).map(|lg| crate::predictor::argmax(&lg))),
+                        );
                     }
                     #[cfg(not(feature = "pjrt"))]
                     Backend::Pjrt => unreachable!("rejected at serve() entry"),
                 };
                 let service_us = svc_t.elapsed().as_micros() as u64;
-                for ((req, enqueued), res) in batch.iter().zip(per_req) {
+                for ((req, enqueued), res) in batch.iter().zip(per_req.drain(..)) {
                     match res {
-                        Ok(lg) => {
-                            let correct = crate::predictor::argmax(&lg)
-                                == y[req.sample_idx] as usize;
+                        Ok(pred_class) => {
+                            let correct = pred_class == y[req.sample_idx] as usize;
                             event_tx
                                 .send(Event::Done(Served {
                                     id: req.id,

@@ -30,6 +30,7 @@
 use crate::engine::dot;
 use crate::model::{Model, Node};
 use crate::util::bits::PackedVec;
+use crate::util::reserve_capacity;
 
 /// Filters evaluated per micro-kernel invocation (accumulator registers).
 pub const NR: usize = 8;
@@ -112,8 +113,11 @@ impl PrepackedModel {
 /// A tile of up to [`TILE_ROWS`] im2col patches, each zero-padded to the
 /// prepack alignment, plus the packed ±1 activation planes the binary
 /// predictor consumes and (optionally) a compressed nonzero-lane
-/// representation per patch for the input-sparsity kernels. Buffers are
-/// allocated once per worker and reused for every tile.
+/// representation per patch for the input-sparsity kernels. The buffers
+/// live in a [`crate::plan::Workspace`] (one tile per row-tile worker)
+/// and are re-dimensioned per layer with [`PatchTile::reset`], which
+/// never shrinks capacity — steady-state forwards re-use one high-water
+/// allocation across every layer.
 pub struct PatchTile {
     pub k_len: usize,
     pub k_pad: usize,
@@ -125,35 +129,96 @@ pub struct PatchTile {
     nnz: [usize; TILE_ROWS],
     /// Compressed nonzero-lane lists, row-major with stride `k_len`
     /// (`nz_idx[r*k_len..r*k_len+nnz[r]]` are the lane indices,
-    /// `nz_val` the matching activation values). Empty when the builder
-    /// is off or `k_len` exceeds the u16 index range.
+    /// `nz_val` the matching activation values). Only valid while
+    /// `sparse` is set (builder on and `k_len` within the u16 range).
     nz_idx: Vec<u16>,
     nz_val: Vec<i8>,
+    /// Whether the compressed-lane builder is active for this layer.
+    sparse: bool,
 }
 
 /// Largest dot length the compressed u16 lane indices can address.
 pub const SPARSE_K_MAX: usize = u16::MAX as usize + 1;
 
 impl PatchTile {
-    /// `build_sparse` allocates the compressed-lane buffers; whether a
+    /// `build_sparse` enables the compressed-lane builder; whether a
     /// given row actually pays the compression pass is decided per row
     /// at [`PatchTile::set_row`] time (`InputSparsity::Off` passes
-    /// false here and skips the allocation too). Dot lengths beyond
-    /// [`SPARSE_K_MAX`] silently fall back to dense-only.
+    /// false here). Dot lengths beyond [`SPARSE_K_MAX`] silently fall
+    /// back to dense-only.
     pub fn new(k_len: usize, build_sparse: bool) -> PatchTile {
-        let k_pad = pad_k(k_len);
-        let sparse = build_sparse && k_len <= SPARSE_K_MAX;
+        let mut t = PatchTile::empty();
+        t.reset(k_len, build_sparse);
+        t
+    }
+
+    /// An unsized tile (no heap allocation) — [`PatchTile::reset`]
+    /// dimensions it before first use.
+    pub fn empty() -> PatchTile {
         PatchTile {
-            k_len,
-            k_pad,
-            // padding lanes are written once here and never overwritten:
-            // set_row only touches the first k_len bytes of each row
-            data: vec![0i8; TILE_ROWS * k_pad],
-            packed: vec![PackedVec::zeros(k_len); TILE_ROWS],
+            k_len: 0,
+            k_pad: 0,
+            data: Vec::new(),
+            packed: Vec::new(),
             nnz: [0; TILE_ROWS],
-            nz_idx: if sparse { vec![0u16; TILE_ROWS * k_len] } else { Vec::new() },
-            nz_val: if sparse { vec![0i8; TILE_ROWS * k_len] } else { Vec::new() },
+            nz_idx: Vec::new(),
+            nz_val: Vec::new(),
+            sparse: false,
         }
+    }
+
+    /// Re-dimension the tile for a layer with dot length `k_len`,
+    /// reusing the existing buffers (capacity never shrinks, so after
+    /// the largest layer has been seen this allocates nothing). The
+    /// patch storage is re-zeroed so the alignment-padding lanes of
+    /// every row are 0 regardless of what a previous layer left behind
+    /// — `set_row` only writes the first `k_len` bytes of a row and the
+    /// dense kernels rely on zero padding for exactness.
+    pub fn reset(&mut self, k_len: usize, build_sparse: bool) {
+        self.k_len = k_len;
+        self.k_pad = pad_k(k_len);
+        self.sparse = build_sparse && k_len <= SPARSE_K_MAX;
+        self.data.clear();
+        self.data.resize(TILE_ROWS * self.k_pad, 0);
+        let words = k_len.div_ceil(64);
+        if self.packed.len() < TILE_ROWS {
+            self.packed.resize_with(TILE_ROWS, || PackedVec::zeros(0));
+        }
+        for p in &mut self.packed {
+            p.bits.clear();
+            p.bits.resize(words, 0);
+            p.valid.clear();
+            p.valid.resize(words, 0);
+            p.len = k_len;
+        }
+        self.nnz = [0; TILE_ROWS];
+        if self.sparse {
+            // no clear: `lanes(r)` only ever reads the prefix `set_row`
+            // wrote for row r, so stale tails need no re-zeroing — this
+            // avoids a per-layer memset of up to TILE_ROWS * k_len lanes
+            self.nz_idx.resize(TILE_ROWS * k_len, 0);
+            self.nz_val.resize(TILE_ROWS * k_len, 0);
+        }
+    }
+
+    /// Grow the tile's buffers so a later [`PatchTile::reset`] at any
+    /// dot length up to `k_len` (with compressed lanes up to
+    /// `lanes_k_len`; pass 0 when the lane builder never runs) is
+    /// allocation-free — warmup presizing for workspaces. Contents and
+    /// current dimensions are untouched.
+    pub fn reserve(&mut self, k_len: usize, lanes_k_len: usize) {
+        reserve_capacity(&mut self.data, TILE_ROWS * pad_k(k_len));
+        if self.packed.len() < TILE_ROWS {
+            self.packed.resize_with(TILE_ROWS, || PackedVec::zeros(0));
+        }
+        let words = k_len.div_ceil(64);
+        for p in &mut self.packed {
+            reserve_capacity(&mut p.bits, words);
+            reserve_capacity(&mut p.valid, words);
+        }
+        let lk = lanes_k_len.min(SPARSE_K_MAX);
+        reserve_capacity(&mut self.nz_idx, TILE_ROWS * lk);
+        reserve_capacity(&mut self.nz_val, TILE_ROWS * lk);
     }
 
     /// Store one gathered patch (its packed sign plane, nonzero count
@@ -182,7 +247,7 @@ impl PatchTile {
         p.valid.copy_from_slice(&packed.valid);
         p.len = packed.len;
         self.nnz[r] = nnz;
-        if build_lanes && self.has_sparse() {
+        if build_lanes && self.sparse {
             let base = r * self.k_len;
             let mut n = 0usize;
             for (i, &v) in patch.iter().enumerate() {
@@ -217,7 +282,19 @@ impl PatchTile {
     /// Whether the compressed-lane lists are being built for this tile.
     #[inline]
     pub fn has_sparse(&self) -> bool {
-        !self.nz_idx.is_empty()
+        self.sparse
+    }
+
+    /// Heap bytes currently held (workspace accounting).
+    pub fn heap_bytes(&self) -> usize {
+        self.data.capacity()
+            + self
+                .packed
+                .iter()
+                .map(|p| (p.bits.capacity() + p.valid.capacity()) * 8)
+                .sum::<usize>()
+            + self.nz_idx.capacity() * 2
+            + self.nz_val.capacity()
     }
 
     /// Compressed nonzero lanes of tile row `r`: `(indices, values)`,

@@ -122,6 +122,30 @@ impl Tensor {
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
+
+    /// Re-dimension this tensor to `(h, w, c)` with zeroed contents,
+    /// reusing the existing heap buffer — the workspace path's
+    /// allocation-free replacement for [`Tensor::new`].
+    #[inline]
+    pub fn reset(&mut self, h: usize, w: usize, c: usize) {
+        self.h = h;
+        self.w = w;
+        self.c = c;
+        self.data.clear();
+        self.data.resize(h * w * c, 0.0);
+    }
+
+    /// Re-dimension and fill from a slice, reusing the heap buffer
+    /// (allocation-free once the buffer has reached its high-water size).
+    #[inline]
+    pub fn assign(&mut self, h: usize, w: usize, c: usize, data: &[f32]) {
+        assert_eq!(data.len(), h * w * c);
+        self.h = h;
+        self.w = w;
+        self.c = c;
+        self.data.clear();
+        self.data.extend_from_slice(data);
+    }
 }
 
 /// Convolution output geometry + SAME padding offsets (matches the python
@@ -175,21 +199,34 @@ pub struct QuantizedTensor {
 
 impl QuantizedTensor {
     pub fn new(input: &Tensor, sx: f32) -> QuantizedTensor {
-        let mut q = Vec::new();
-        dot::quantize_i8(&input.data, sx, &mut q);
-        QuantizedTensor {
-            q,
-            h: input.h,
-            w: input.w,
-            c: input.c,
-        }
+        let mut qt = QuantizedTensor::empty();
+        qt.requantize(input, sx);
+        qt
+    }
+
+    /// An empty quantized buffer (no heap allocation) — workspace slots
+    /// start here and grow to their high-water size on first use.
+    pub fn empty() -> QuantizedTensor {
+        QuantizedTensor { q: Vec::new(), h: 0, w: 0, c: 0 }
+    }
+
+    /// Quantize `input` into this buffer, reusing its capacity
+    /// (allocation-free once the buffer has seen the largest layer
+    /// input). Bit-identical to [`QuantizedTensor::new`].
+    pub fn requantize(&mut self, input: &Tensor, sx: f32) {
+        dot::quantize_i8(&input.data, sx, &mut self.q);
+        self.h = input.h;
+        self.w = input.w;
+        self.c = input.c;
     }
 }
 
-/// Reusable patch buffers for one conv/fc layer over a shared
-/// [`QuantizedTensor`].
-pub struct PatchGather<'a> {
-    src: &'a QuantizedTensor,
+/// Reusable im2col patch scratch. Owns no source: the
+/// [`QuantizedTensor`] to gather from is passed per call, so one
+/// `PatchGather` (held in a [`crate::plan::Workspace`], one per row-tile
+/// worker) serves every layer and every sample of a batch without
+/// reallocating.
+pub struct PatchGather {
     /// current patch, (kh, kw, cin) order — matches the weight layout
     pub patch: Vec<i8>,
     /// packed ±1 activations of the current patch (padding lanes invalid)
@@ -201,10 +238,15 @@ pub struct PatchGather<'a> {
     pub nnz: usize,
 }
 
-impl<'a> PatchGather<'a> {
-    pub fn new(src: &'a QuantizedTensor) -> PatchGather<'a> {
+impl Default for PatchGather {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PatchGather {
+    pub fn new() -> PatchGather {
         PatchGather {
-            src,
             patch: Vec::new(),
             packed: PackedVec::zeros(0),
             nnz: 0,
@@ -219,8 +261,10 @@ impl<'a> PatchGather<'a> {
     ///
     /// §Perf: buffers are reused across calls (no allocation on the row
     /// loop) and interior channel runs are copied slice-wise.
+    #[allow(clippy::too_many_arguments)]
     pub fn gather(
         &mut self,
+        src: &QuantizedTensor,
         geom: ConvGeom,
         kh: usize,
         kw: usize,
@@ -228,7 +272,7 @@ impl<'a> PatchGather<'a> {
         oy: usize,
         ox: usize,
     ) {
-        let (h, w, c) = (self.src.h, self.src.w, self.src.c);
+        let (h, w, c) = (src.h, src.w, src.c);
         let k_len = kh * kw * c;
         self.reset_buffers(k_len);
         let base_y = (oy * stride) as isize - geom.pad_top as isize;
@@ -240,9 +284,9 @@ impl<'a> PatchGather<'a> {
                 let x = base_x + dx as isize;
                 if y >= 0 && (y as usize) < h && x >= 0 && (x as usize) < w {
                     let off = ((y as usize) * w + x as usize) * c;
-                    self.patch[idx..idx + c].copy_from_slice(&self.src.q[off..off + c]);
+                    self.patch[idx..idx + c].copy_from_slice(&src.q[off..off + c]);
                     for ch in 0..c {
-                        let v = self.src.q[off + ch];
+                        let v = src.q[off + ch];
                         self.packed.push_lane(idx + ch, v > 0);
                         self.nnz += (v != 0) as usize;
                     }
@@ -254,11 +298,22 @@ impl<'a> PatchGather<'a> {
         }
     }
 
+    /// Grow the gather buffers for dot lengths up to `k_len` without
+    /// touching their contents — warmup presizing, so the per-row
+    /// [`PatchGather::gather`] calls never allocate (mirrors
+    /// [`gemm::PatchTile::reserve`]).
+    pub fn reserve(&mut self, k_len: usize) {
+        crate::util::reserve_capacity(&mut self.patch, k_len);
+        let words = k_len.div_ceil(64);
+        crate::util::reserve_capacity(&mut self.packed.bits, words);
+        crate::util::reserve_capacity(&mut self.packed.valid, words);
+    }
+
     /// FC "gather": the patch is simply the (h*w-position) channel vector.
-    pub fn gather_fc(&mut self, pos: usize) {
-        let c = self.src.c;
+    pub fn gather_fc(&mut self, src: &QuantizedTensor, pos: usize) {
+        let c = src.c;
         self.reset_buffers(c);
-        self.patch.copy_from_slice(&self.src.q[pos * c..(pos + 1) * c]);
+        self.patch.copy_from_slice(&src.q[pos * c..(pos + 1) * c]);
         for i in 0..c {
             let v = self.patch[i];
             self.packed.push_lane(i, v > 0);
@@ -286,10 +341,18 @@ impl<'a> PatchGather<'a> {
 /// Float max-pool (size x size, stride = size, VALID), window clamped to
 /// the tensor width for W=1 sequence layouts — matches the jnp path.
 pub fn maxpool(input: &Tensor, size: usize) -> Tensor {
+    let mut out = Tensor::new(0, 0, 0);
+    maxpool_into(input, size, &mut out);
+    out
+}
+
+/// [`maxpool`] into a reusable output tensor (allocation-free once the
+/// buffer has reached its high-water size) — the workspace path.
+pub fn maxpool_into(input: &Tensor, size: usize, out: &mut Tensor) {
     let kw = size.min(input.w);
     let oh = input.h / size;
     let ow = (input.w / size).max(1);
-    let mut out = Tensor::new(oh, ow, input.c);
+    out.reset(oh, ow, input.c);
     for oy in 0..oh {
         for ox in 0..ow {
             for ch in 0..input.c {
@@ -303,12 +366,18 @@ pub fn maxpool(input: &Tensor, size: usize) -> Tensor {
             }
         }
     }
-    out
 }
 
 /// Global average pool over H and W → (1, 1, C).
 pub fn gap(input: &Tensor) -> Tensor {
-    let mut out = Tensor::new(1, 1, input.c);
+    let mut out = Tensor::new(0, 0, 0);
+    gap_into(input, &mut out);
+    out
+}
+
+/// [`gap`] into a reusable output tensor — the workspace path.
+pub fn gap_into(input: &Tensor, out: &mut Tensor) {
+    out.reset(1, 1, input.c);
     let n = (input.h * input.w) as f32;
     for ch in 0..input.c {
         let mut s = 0.0;
@@ -319,16 +388,22 @@ pub fn gap(input: &Tensor) -> Tensor {
         }
         out.data[ch] = s / n;
     }
-    out
 }
 
 /// Elementwise ReLU.
 pub fn relu(input: &Tensor) -> Tensor {
-    let mut out = input.clone();
-    for v in &mut out.data {
-        *v = v.max(0.0);
-    }
+    let mut out = Tensor::new(0, 0, 0);
+    relu_into(input, &mut out);
     out
+}
+
+/// [`relu`] into a reusable output tensor — the workspace path.
+pub fn relu_into(input: &Tensor, out: &mut Tensor) {
+    out.h = input.h;
+    out.w = input.w;
+    out.c = input.c;
+    out.data.clear();
+    out.data.extend(input.data.iter().map(|v| v.max(0.0)));
 }
 
 /// Per-neuron post-dot transform: dequant → BN affine → (+ residual).
@@ -410,9 +485,9 @@ mod tests {
         // 3x3x1 input with values 1..9, k=3 SAME, look at corner (0,0)
         let t = Tensor::from_slice(3, 3, 1, &[1., 2., 3., 4., 5., 6., 7., 8., 9.]);
         let qt = QuantizedTensor::new(&t, 1.0 / 1.0);
-        let mut pg = PatchGather::new(&qt);
+        let mut pg = PatchGather::new();
         let geom = conv_geom(3, 3, 3, 3, 1, true);
-        pg.gather(geom, 3, 3, 1, 0, 0);
+        pg.gather(&qt, geom, 3, 3, 1, 0, 0);
         // top-left corner: first row and column padded
         assert_eq!(pg.patch, vec![0, 0, 0, 0, 1, 2, 0, 4, 5]);
         // padding lanes invalid; interior lanes valid
@@ -424,7 +499,7 @@ mod tests {
         // nonzero-lane count excludes the padding lanes
         assert_eq!(pg.nnz, 4);
         // center position: fully interior
-        pg.gather(geom, 3, 3, 1, 1, 1);
+        pg.gather(&qt, geom, 3, 3, 1, 1, 1);
         assert_eq!(pg.patch, vec![1, 2, 3, 4, 5, 6, 7, 8, 9]);
         assert_eq!(pg.nnz, 9);
     }
@@ -435,12 +510,12 @@ mod tests {
         // lanes too, not just SAME-padding cells
         let t = Tensor::from_slice(2, 2, 1, &[3., 0., 0., -2.]);
         let qt = QuantizedTensor::new(&t, 1.0);
-        let mut pg = PatchGather::new(&qt);
-        pg.gather_fc(0);
+        let mut pg = PatchGather::new();
+        pg.gather_fc(&qt, 0);
         assert_eq!(pg.nnz, 1);
-        pg.gather_fc(1);
+        pg.gather_fc(&qt, 1);
         assert_eq!(pg.nnz, 0);
-        pg.gather_fc(3);
+        pg.gather_fc(&qt, 3);
         assert_eq!(pg.nnz, 1);
     }
 
@@ -457,9 +532,9 @@ mod tests {
     fn gather_binary_dot_padding_contributes_zero() {
         let t = Tensor::from_slice(2, 2, 1, &[5., -5., 5., -5.]);
         let qt = QuantizedTensor::new(&t, 1.0);
-        let mut pg = PatchGather::new(&qt);
+        let mut pg = PatchGather::new();
         let geom = conv_geom(2, 2, 3, 3, 1, true);
-        pg.gather(geom, 3, 3, 1, 0, 0);
+        pg.gather(&qt, geom, 3, 3, 1, 0, 0);
         let w = vec![1i8; 9];
         let wp = crate::util::bits::PackedVec::from_weights(&w);
         // valid lanes: the 2x2 interior = acts (+1,-1,+1,-1) → dot 0

@@ -175,13 +175,13 @@ fn exec_single(node: &Node, src: &Tensor, outs: &[Tensor]) -> (Tensor, Vec<(i32,
     let mut out = Tensor::new(geom.oh, geom.ow, cout);
     let mut taps = Vec::with_capacity(rows * cout);
     let qt = engine::QuantizedTensor::new(src, sx);
-    let mut pg = PatchGather::new(&qt);
+    let mut pg = PatchGather::new();
     let dq = sw * sx;
     for row in 0..rows {
         if kh > 0 {
-            pg.gather(geom, kh, kw, stride, row / geom.ow, row % geom.ow);
+            pg.gather(&qt, geom, kh, kw, stride, row / geom.ow, row % geom.ow);
         } else {
-            pg.gather_fc(row);
+            pg.gather_fc(&qt, row);
         }
         for f in 0..cout {
             let d = engine::dot::dot_i8(&pg.patch, node.filter(f));

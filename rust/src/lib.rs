@@ -24,7 +24,11 @@
 //! * [`model::Artifacts::load`] — load a model + predictor + data bundle.
 //! * [`session::Session`] — build an inference context (model + skip
 //!   strategy + engine options); the single entry point evaluation,
-//!   serving and the figure harness go through.
+//!   serving and the figure harness go through. `finish()` compiles the
+//!   model into a [`plan::ModelPlan`] and owns a [`plan::WorkspacePool`],
+//!   so the steady-state forward is allocation-free.
+//! * [`plan`] — the compile/execute split itself: frozen per-layer
+//!   execution plans, reusable workspaces, and the tile-loop executor.
 //! * [`predictor::strategies`] — the pluggable `ZeroPredictor` API
 //!   (`mor`, `binary`, `cluster`, `oracle`, `none`).
 //! * [`predictor::MorRun`] — run inference with prediction, collect stats.
@@ -39,6 +43,7 @@ pub mod energy;
 pub mod engine;
 pub mod figures;
 pub mod model;
+pub mod plan;
 pub mod predictor;
 #[cfg(feature = "pjrt")]
 pub mod runtime;

@@ -1,0 +1,427 @@
+//! Plan compilation: freeze everything the forward pass used to
+//! re-derive per request into a [`ModelPlan`].
+//!
+//! [`compile`] walks the model graph once and resolves, per layer:
+//!
+//! * conv/FC **geometry** (output shape, SAME-padding offsets, row
+//!   count, dot length and its kernel-aligned padding);
+//! * the **input-sparsity decision** — whether the compressed-lane
+//!   builder runs at all for the layer (`Off`, or a dot length beyond
+//!   the u16 index range, disables it) and the `Auto` mode's density
+//!   crossover, pre-multiplied into an absolute nonzero-lane cutoff so
+//!   the per-row check is a single compare;
+//! * **residual / graph wiring** as activation-slot indices: a
+//!   liveness analysis (classic linear-scan register allocation over
+//!   the node outputs) maps every node's output onto a small set of
+//!   ping-pong slots, so the steady-state forward keeps O(1) tensors
+//!   live per sample instead of one per layer;
+//! * whether the layer is **policied** (has a prepared
+//!   [`crate::predictor::strategies::LayerState`]) and whether skipped
+//!   outputs need ground-truth (oracle) accounting;
+//! * the exact **scratch high-water marks** a [`super::Workspace`]
+//!   needs (max filters, max dot length, max output rows, max
+//!   quantized input size), so workspaces can be pre-grown and the
+//!   steady-state loop never allocates.
+//!
+//! The plan stores plain data and node *indices* — the bulk payloads
+//! (prepacked weight blocks, strategy layer states) stay shared behind
+//! the `Arc`s a [`crate::session::Session`] owns, which is what makes
+//! threshold re-planning ([`crate::session::Session::with_threshold`])
+//! free: the plan is reusable as long as the set of policied layers and
+//! the execution options are unchanged.
+
+use crate::engine::gemm::{self, pad_k, SPARSE_K_MAX};
+use crate::engine::{conv_geom, ConvGeom, InputSparsity};
+use crate::model::{Model, Node};
+use crate::predictor::strategies::Strategy;
+use crate::predictor::{MorPolicy, RunOpts};
+
+/// Where a step reads its input tensor from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Src {
+    /// The model input (`consumes: -1`), held per sample in the
+    /// workspace.
+    Input,
+    /// Activation slot `k` of the same sample.
+    Slot(usize),
+}
+
+/// One frozen execution step; `Compute` covers conv and FC layers, the
+/// rest are the shape-only graph nodes.
+#[derive(Clone, Debug)]
+pub enum StepPlan {
+    Compute(ComputeStep),
+    MaxPool { node: usize, size: usize, src: Src, dst: usize },
+    Gap { node: usize, src: Src, dst: usize },
+    Relu { node: usize, src: Src, dst: usize },
+}
+
+/// Everything a conv/FC layer's tile loop needs, resolved once at
+/// compile time. See the field docs; `sparse_cutoff` encodes the whole
+/// input-sparsity mode decision (`lanes == false` → dense-only,
+/// `+inf` → always sparse, finite → `Auto`'s pre-multiplied density
+/// crossover in absolute nonzero lanes).
+#[derive(Clone, Debug)]
+pub struct ComputeStep {
+    /// Model node index (prepacked weights, BN, filters live there).
+    pub node: usize,
+    pub is_conv: bool,
+    /// Output geometry incl. SAME-padding offsets.
+    pub geom: ConvGeom,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    /// Output rows per sample (`geom.oh * geom.ow`).
+    pub rows: usize,
+    pub cout: usize,
+    /// Dot length and its kernel-aligned padding.
+    pub k_len: usize,
+    pub k_pad: usize,
+    /// Input quantization scale and dequantization factor `sw * sx`.
+    pub sx: f32,
+    pub dq: f32,
+    /// The node applies ReLU to its own output.
+    pub node_relu: bool,
+    /// The node's output feeds a ReLU (predictable layer).
+    pub is_relu_layer: bool,
+    /// A prepared `LayerState` exists for this layer.
+    pub policied: bool,
+    /// Skipped outputs get ground-truth accounting (RunOpts::oracle, or
+    /// the oracle strategy which *is* its own ground truth).
+    pub oracle: bool,
+    /// The compressed-lane builder runs for this layer.
+    pub lanes: bool,
+    /// A row uses the sparse kernels iff `lanes && (nnz as f32) <
+    /// sparse_cutoff` — bit-identical to the unplanned `Auto`/`On`
+    /// decision (`sparse_auto_cutoff() * k_len` resp. `+inf`).
+    pub sparse_cutoff: f32,
+    pub src: Src,
+    /// Residual source's activation slot, if the node has one.
+    pub res: Option<usize>,
+    /// Output activation slot.
+    pub dst: usize,
+}
+
+/// A compiled model: the frozen per-layer steps plus the activation
+/// slot map and scratch high-water marks a [`super::Workspace`] is
+/// sized from. Built by [`compile`], owned by a
+/// [`crate::session::Session`], executed by [`super::execute()`].
+///
+/// ```
+/// use mor::model::synth;
+/// use mor::plan::{self, Workspace};
+/// use mor::predictor::RunOpts;
+///
+/// let model = synth::cnn10_like(3);
+/// let plan = plan::compile(&model, None, RunOpts::default());
+/// // a 10-node chain needs only 2 live activation slots per sample
+/// assert_eq!(plan.n_slots, 2);
+/// assert_eq!(plan.steps.len(), model.nodes.len());
+/// # let _ = Workspace::for_plan(&plan, 1);
+/// ```
+#[derive(Clone, Debug)]
+pub struct ModelPlan {
+    pub steps: Vec<StepPlan>,
+    /// Activation slots per sample — the peak number of simultaneously
+    /// live tensors (O(1) for chains, +1 per concurrently-live residual
+    /// branch), NOT the layer count.
+    pub n_slots: usize,
+    /// Max f32 elements each slot ever holds (workspace presizing).
+    pub slot_elems: Vec<usize>,
+    /// Slot holding the final node's output (the logits); `usize::MAX`
+    /// for an empty model.
+    pub logits_slot: usize,
+    /// Node count of the model this plan was compiled for.
+    pub n_nodes: usize,
+    /// Sorted node indices that carry a prepared `LayerState` — a plan
+    /// is valid for any policy with this exact layer set (threshold
+    /// re-plans reuse it).
+    pub policied: Vec<usize>,
+    /// Execution options the plan was compiled for (engine, threads,
+    /// sparsity mode, oracle, tracing).
+    pub opts: RunOpts,
+    /// Model input elements (`h * w * c`).
+    pub input_elems: usize,
+    // ---- scratch high-water marks -------------------------------------
+    /// Max filters over compute layers.
+    pub max_cout: usize,
+    /// Max dot length over compute layers (per-worker tile/gather
+    /// buffers are presized from it; the kernel-aligned padding is
+    /// derived via `pad_k` where needed).
+    pub max_k_len: usize,
+    /// Max `rows * cout` per sample over compute layers (global output
+    /// buffer sizing).
+    pub max_row_elems: usize,
+    /// Max elements any compute layer quantizes (its input tensor).
+    pub max_qt_elems: usize,
+    /// Max dot length over *lane-enabled* layers (0 when the compressed
+    /// lane builder never runs) — sizes the tile lane buffers without
+    /// letting a dense-only giant layer inflate them, and without a
+    /// lane-enabled layer being missed when a larger dense layer drives
+    /// `max_k_len`.
+    pub max_lanes_k_len: usize,
+}
+
+/// Compile `model` (+ the prepared `policy`, if any) into a
+/// [`ModelPlan`] under `opts`. Cheap — one O(nodes²) walk over graph
+/// metadata, no weight or activation data is touched — so the
+/// unplanned entry points ([`crate::predictor::exec::run_batch`])
+/// compile per call; a [`crate::session::Session`] compiles once at
+/// `finish()` and reuses the plan for every request.
+pub fn compile(model: &Model, policy: Option<&MorPolicy>, opts: RunOpts) -> ModelPlan {
+    let n = model.nodes.len();
+    let shapes = model.node_shapes();
+    let relu_layers = model.relu_layers();
+
+    // ---- liveness: last step that reads each node's output ------------
+    let mut last_use: Vec<usize> = (0..n).collect();
+    for (i, nd) in model.nodes.iter().enumerate() {
+        if nd.consumes() >= 0 {
+            let v = nd.consumes() as usize;
+            last_use[v] = last_use[v].max(i);
+        }
+        if let Node::Conv { res_from: Some(r), .. } | Node::Fc { res_from: Some(r), .. } = nd {
+            last_use[*r] = last_use[*r].max(i);
+        }
+    }
+    if n > 0 {
+        last_use[n - 1] = usize::MAX; // the logits are read after the walk
+    }
+
+    // ---- linear-scan slot assignment -----------------------------------
+    let mut slot_of = vec![usize::MAX; n];
+    let mut slot_elems: Vec<usize> = Vec::new();
+    let mut free: Vec<usize> = Vec::new();
+    for i in 0..n {
+        let dst = free.pop().unwrap_or_else(|| {
+            slot_elems.push(0);
+            slot_elems.len() - 1
+        });
+        slot_of[i] = dst;
+        let (h, w, c) = shapes[i];
+        slot_elems[dst] = slot_elems[dst].max(h * w * c);
+        // outputs whose last reader is step i die here; their slots are
+        // reusable from step i+1 on (the output slot was taken first, so
+        // a step never writes over its own still-live inputs)
+        for v in 0..=i {
+            if last_use[v] == i {
+                free.push(slot_of[v]);
+            }
+        }
+    }
+
+    // ---- per-step freezing ---------------------------------------------
+    let strategy = policy.map(|p| p.cfg.strategy);
+    let mut steps = Vec::with_capacity(n);
+    let mut max_cout = 0usize;
+    let mut max_k_len = 0usize;
+    let mut max_row_elems = 0usize;
+    let mut max_qt_elems = 0usize;
+    let mut max_lanes_k_len = 0usize;
+    for (i, nd) in model.nodes.iter().enumerate() {
+        let src = if nd.consumes() < 0 {
+            Src::Input
+        } else {
+            Src::Slot(slot_of[nd.consumes() as usize])
+        };
+        let dst = slot_of[i];
+        let step = match nd {
+            Node::Conv { .. } | Node::Fc { .. } => {
+                let (sh, sw2, sc) = if nd.consumes() < 0 {
+                    model.input_shape
+                } else {
+                    shapes[nd.consumes() as usize]
+                };
+                let (geom, kh, kw, stride) = match nd {
+                    Node::Conv { kh, kw, stride, pad_same, .. } => (
+                        conv_geom(sh, sw2, *kh, *kw, *stride, *pad_same),
+                        *kh,
+                        *kw,
+                        *stride,
+                    ),
+                    _ => (
+                        ConvGeom { oh: sh, ow: sw2, pad_top: 0, pad_left: 0 },
+                        0,
+                        0,
+                        1,
+                    ),
+                };
+                let (sx, sw) = match nd {
+                    Node::Conv { sx, sw, .. } | Node::Fc { sx, sw, .. } => (*sx, *sw),
+                    _ => unreachable!(),
+                };
+                let res = match nd {
+                    Node::Conv { res_from, .. } | Node::Fc { res_from, .. } => {
+                        res_from.map(|r| slot_of[r])
+                    }
+                    _ => None,
+                };
+                let k_len = nd.k_len();
+                let cout = nd.cout();
+                let rows = geom.oh * geom.ow;
+                let policied = policy.is_some_and(|p| p.layers.contains_key(&i));
+                let lanes = opts.input_sparsity != InputSparsity::Off && k_len <= SPARSE_K_MAX;
+                // pre-resolved per-row kernel decision (see field docs):
+                // identical float compare to the unplanned path's
+                // `sparse_wins(nnz, k_len)`
+                let sparse_cutoff = match opts.input_sparsity {
+                    InputSparsity::Off => 0.0,
+                    InputSparsity::On => f32::INFINITY,
+                    InputSparsity::Auto => {
+                        gemm::sparse_auto_cutoff() * k_len.max(1) as f32
+                    }
+                };
+                max_cout = max_cout.max(cout);
+                max_k_len = max_k_len.max(k_len);
+                max_row_elems = max_row_elems.max(rows * cout);
+                max_qt_elems = max_qt_elems.max(sh * sw2 * sc);
+                if lanes {
+                    max_lanes_k_len = max_lanes_k_len.max(k_len);
+                }
+                StepPlan::Compute(ComputeStep {
+                    node: i,
+                    is_conv: matches!(nd, Node::Conv { .. }),
+                    geom,
+                    kh,
+                    kw,
+                    stride,
+                    rows,
+                    cout,
+                    k_len,
+                    k_pad: pad_k(k_len),
+                    sx,
+                    dq: sw * sx,
+                    node_relu: nd.relu(),
+                    is_relu_layer: relu_layers.contains(&i),
+                    policied,
+                    // the oracle strategy's skip accounting IS the ground
+                    // truth: force it on so Fig-12 categories populate
+                    oracle: opts.oracle || (policied && strategy == Some(Strategy::Oracle)),
+                    lanes,
+                    sparse_cutoff,
+                    src,
+                    res,
+                    dst,
+                })
+            }
+            Node::MaxPool { size, .. } => StepPlan::MaxPool { node: i, size: *size, src, dst },
+            Node::Gap { .. } => StepPlan::Gap { node: i, src, dst },
+            Node::Relu { .. } => StepPlan::Relu { node: i, src, dst },
+        };
+        steps.push(step);
+    }
+
+    let (h, w, c) = model.input_shape;
+    ModelPlan {
+        steps,
+        n_slots: slot_elems.len(),
+        slot_elems,
+        logits_slot: if n > 0 { slot_of[n - 1] } else { usize::MAX },
+        n_nodes: n,
+        policied: policy
+            .map(|p| p.layers.keys().copied().collect())
+            .unwrap_or_default(),
+        opts,
+        input_elems: h * w * c,
+        max_cout,
+        max_k_len,
+        max_row_elems,
+        max_qt_elems,
+        max_lanes_k_len,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::synth;
+
+    #[test]
+    fn chain_model_uses_two_slots() {
+        // 10 sequential nodes ping-pong between exactly two slots
+        let m = synth::cnn10_like(5);
+        let plan = compile(&m, None, RunOpts::default());
+        assert_eq!(plan.steps.len(), m.nodes.len());
+        assert_eq!(plan.n_slots, 2);
+        assert!(plan.logits_slot < plan.n_slots);
+        // slots are sized to the largest tensor they ever host
+        let shapes = m.node_shapes();
+        let biggest = shapes.iter().map(|&(h, w, c)| h * w * c).max().unwrap();
+        assert_eq!(plan.slot_elems.iter().copied().max().unwrap(), biggest);
+    }
+
+    #[test]
+    fn residual_branch_needs_a_third_slot() {
+        // tiny_conv: node 1 (projection) stays live until node 3 reads it
+        // as a residual while nodes 2..3 produce outputs — 3 live max
+        let m = crate::model::testutil::tiny_conv(1);
+        let plan = compile(&m, None, RunOpts::default());
+        assert_eq!(plan.n_slots, 3);
+        // the residual wiring resolves to node 1's slot
+        let res = plan.steps.iter().find_map(|s| match s {
+            StepPlan::Compute(c) if c.node == 3 => c.res,
+            _ => None,
+        });
+        let slot1 = match &plan.steps[1] {
+            StepPlan::Compute(c) => c.dst,
+            _ => panic!("node 1 is a conv"),
+        };
+        assert_eq!(res, Some(slot1));
+    }
+
+    #[test]
+    fn no_step_writes_over_a_live_input() {
+        // every step's dst differs from its src and residual slots
+        let mut rng = crate::util::rng::Rng::new(17);
+        for _ in 0..30 {
+            let m = synth::random_model(&mut rng);
+            let plan = compile(&m, None, RunOpts::default());
+            for step in &plan.steps {
+                let (src, dst, res) = match step {
+                    StepPlan::Compute(c) => (c.src, c.dst, c.res),
+                    StepPlan::MaxPool { src, dst, .. }
+                    | StepPlan::Gap { src, dst, .. }
+                    | StepPlan::Relu { src, dst, .. } => (*src, *dst, None),
+                };
+                if let Src::Slot(k) = src {
+                    assert_ne!(k, dst, "step would overwrite its own input");
+                }
+                if let Some(r) = res {
+                    assert_ne!(r, dst, "step would overwrite its residual");
+                }
+                assert!(dst < plan.n_slots);
+            }
+        }
+    }
+
+    #[test]
+    fn sparsity_decision_is_frozen_per_mode() {
+        use crate::engine::InputSparsity;
+        let m = synth::tiny_serving_model(2);
+        for (mode, want_lanes) in [
+            (InputSparsity::Off, false),
+            (InputSparsity::On, true),
+            (InputSparsity::Auto, true),
+        ] {
+            let plan = compile(
+                &m,
+                None,
+                RunOpts { input_sparsity: mode, ..Default::default() },
+            );
+            for step in &plan.steps {
+                if let StepPlan::Compute(c) = step {
+                    assert_eq!(c.lanes, want_lanes, "mode {mode:?}");
+                    match mode {
+                        InputSparsity::Off => assert_eq!(c.sparse_cutoff, 0.0),
+                        InputSparsity::On => assert_eq!(c.sparse_cutoff, f32::INFINITY),
+                        InputSparsity::Auto => assert_eq!(
+                            c.sparse_cutoff,
+                            gemm::sparse_auto_cutoff() * c.k_len as f32
+                        ),
+                    }
+                }
+            }
+            assert_eq!(plan.max_lanes_k_len > 0, want_lanes);
+        }
+    }
+}

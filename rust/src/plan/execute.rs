@@ -1,0 +1,753 @@
+//! Plan execution: the steady-state forward loop.
+//!
+//! [`execute`] / [`execute_into`] walk a [`ModelPlan`]'s frozen steps
+//! over a [`Workspace`], running the batch-native tiled engine exactly
+//! as the pre-plan `exec::run_batch` did — the tile loop, the
+//! predict-then-evaluate phases, the dual-sided sparse kernel choice
+//! and every stats/trace accounting line are ported verbatim, so the
+//! planned path stays **bit-identical** to the `EngineSel::ScalarRef`
+//! oracle (the `engine_equivalence` / `batch_equivalence` /
+//! `strategy_contracts` / `input_sparsity` suites all run through this
+//! code).
+//!
+//! What changed is *where state lives*: geometry, slot wiring, sparsity
+//! cutoffs and scratch sizes come from the plan; activations ping-pong
+//! through the workspace's slot tensors (O(1) live per sample); im2col
+//! tiles, dot/skip/survivor scratch and per-sample stats live in
+//! per-worker [`super::workspace::WorkerScratch`]es. After warmup,
+//! [`execute_into`] performs zero heap allocations in the
+//! single-threaded non-tracing configuration (the serving default) —
+//! proven by `rust/tests/plan_contracts.rs` with a counting allocator.
+//! The row-tile-threaded path additionally allocates only the O(workers)
+//! spawn bookkeeping, and trace collection allocates the traces it
+//! returns.
+
+use super::compile::{ComputeStep, ModelPlan, Src, StepPlan};
+use super::workspace::{WorkerScratch, Workspace};
+use crate::engine::gemm::{self, PrepackedFilters, NR, TILE_ROWS};
+use crate::engine::{self, dot::dot_i8, relu_input, ConvGeom, QuantizedTensor, Tensor};
+use crate::model::Model;
+use crate::predictor::exec::layer_params;
+use crate::predictor::strategies::{LayerState, RowCtx, SkipMask, ZeroPredictor};
+use crate::predictor::{LayerTrace, MorPolicy, OpsStats, PredStats, RunResult};
+
+/// Run a batch through a compiled plan, allocating fresh results. See
+/// [`execute_into`] for the allocation-free form.
+///
+/// ```
+/// use mor::model::synth;
+/// use mor::plan::{self, Workspace};
+/// use mor::predictor::{exec, RunOpts};
+///
+/// let model = synth::tiny_serving_model(9);
+/// let plan = plan::compile(&model, None, RunOpts::default());
+/// let mut ws = Workspace::new();
+/// let (h, w, c) = model.input_shape;
+/// let x = vec![0.3f32; h * w * c];
+/// let planned = plan::execute(&plan, &model, None, &mut ws, &[x.as_slice()]);
+/// let legacy = exec::run_sample(&model, None, &x, RunOpts::default());
+/// assert_eq!(planned[0].logits, legacy.logits);
+/// ```
+pub fn execute(
+    plan: &ModelPlan,
+    model: &Model,
+    policy: Option<&MorPolicy>,
+    ws: &mut Workspace,
+    inputs: &[&[f32]],
+) -> Vec<RunResult> {
+    let mut results = Vec::new();
+    execute_into(plan, model, policy, ws, inputs, &mut results);
+    results
+}
+
+/// Like [`execute`], but reuses the caller's `results` vector (and the
+/// logits buffers inside it) — the zero-allocation steady-state entry
+/// point the serving workers drive.
+///
+/// `model` and `policy` must be the ones the plan was compiled against
+/// (same node list, same set of policied layers) — the session
+/// guarantees this; debug builds assert it.
+pub fn execute_into(
+    plan: &ModelPlan,
+    model: &Model,
+    policy: Option<&MorPolicy>,
+    ws: &mut Workspace,
+    inputs: &[&[f32]],
+    results: &mut Vec<RunResult>,
+) {
+    let b = inputs.len();
+    // batch shrank: park the warmed envelopes in the workspace; batch
+    // grew: take them back — a serve loop with fluctuating micro-batch
+    // sizes never reallocates result envelopes once it has seen its
+    // largest batch
+    while results.len() > b {
+        ws.spare_results.push(results.pop().expect("len > b"));
+    }
+    while results.len() < b {
+        results.push(ws.spare_results.pop().unwrap_or_else(|| RunResult {
+            logits: Vec::new(),
+            pred: PredStats::default(),
+            ops: OpsStats::default(),
+            traces: Vec::new(),
+        }));
+    }
+    if b == 0 {
+        return;
+    }
+    debug_assert_eq!(plan.n_nodes, model.nodes.len(), "plan compiled for another model");
+    // allocation-free even in debug builds (the zero-alloc contract is
+    // asserted under a counting allocator in debug test runs)
+    debug_assert!(
+        policy.map_or(plan.policied.is_empty(), |p| {
+            p.layers.keys().copied().eq(plan.policied.iter().copied())
+        }),
+        "plan compiled against a different policied-layer set"
+    );
+    let opts = plan.opts;
+    ws.prepare(plan, b);
+    // field-level split borrows: slots/qts are read-only while the
+    // global out buffer and worker scratches are written
+    let Workspace {
+        input,
+        slots,
+        qts,
+        out,
+        skipped,
+        bin_eval,
+        pred,
+        ops,
+        ranges,
+        workers,
+        spare_results: _, // consumed by the envelope parking above
+    } = ws;
+
+    let (h, w, c) = model.input_shape;
+    for (s, x) in inputs.iter().enumerate() {
+        input[s].assign(h, w, c, x);
+    }
+    pred.clear();
+    pred.resize(b, PredStats::default());
+    ops.clear();
+    ops.resize(b, OpsStats::default());
+    let mut traces: Vec<Vec<LayerTrace>> = if opts.collect_trace {
+        (0..b).map(|_| Vec::new()).collect()
+    } else {
+        Vec::new()
+    };
+
+    let n_slots = plan.n_slots;
+    for step in &plan.steps {
+        match step {
+            StepPlan::Compute(cs) => {
+                let lp = policy.and_then(|p| p.layers.get(&cs.node));
+                let pol = lp.map(|l| (l, policy.unwrap()));
+                compute_step(
+                    cs,
+                    model,
+                    model.prepacked().layer(cs.node),
+                    pol,
+                    plan,
+                    b,
+                    input,
+                    slots,
+                    qts,
+                    out,
+                    skipped,
+                    bin_eval,
+                    pred,
+                    ops,
+                    &mut traces,
+                    ranges,
+                    workers,
+                );
+            }
+            StepPlan::MaxPool { size, src, dst, .. } => {
+                for s in 0..b {
+                    let di = s * n_slots + dst;
+                    match src {
+                        Src::Input => engine::maxpool_into(&input[s], *size, &mut slots[di]),
+                        Src::Slot(k) => {
+                            let (t_src, t_dst) = split_two(slots, s * n_slots + k, di);
+                            engine::maxpool_into(t_src, *size, t_dst);
+                        }
+                    }
+                }
+            }
+            StepPlan::Gap { src, dst, .. } => {
+                for s in 0..b {
+                    let di = s * n_slots + dst;
+                    match src {
+                        Src::Input => engine::gap_into(&input[s], &mut slots[di]),
+                        Src::Slot(k) => {
+                            let (t_src, t_dst) = split_two(slots, s * n_slots + k, di);
+                            engine::gap_into(t_src, t_dst);
+                        }
+                    }
+                }
+            }
+            StepPlan::Relu { src, dst, .. } => {
+                for s in 0..b {
+                    let di = s * n_slots + dst;
+                    match src {
+                        Src::Input => engine::relu_into(&input[s], &mut slots[di]),
+                        Src::Slot(k) => {
+                            let (t_src, t_dst) = split_two(slots, s * n_slots + k, di);
+                            engine::relu_into(t_src, t_dst);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    for (s, r) in results.iter_mut().enumerate() {
+        r.logits.clear();
+        if plan.logits_slot != usize::MAX {
+            r.logits
+                .extend_from_slice(&slots[s * n_slots + plan.logits_slot].data);
+        }
+        r.pred = pred[s];
+        r.ops = ops[s];
+        if opts.collect_trace {
+            r.traces = std::mem::take(&mut traces[s]);
+        } else {
+            r.traces.clear();
+        }
+    }
+}
+
+/// Disjoint (src, dst) tensor refs out of the slot arena.
+fn split_two(slots: &mut [Tensor], si: usize, di: usize) -> (&Tensor, &mut Tensor) {
+    debug_assert_ne!(si, di, "plan aliased a step's input and output slots");
+    if si < di {
+        let (l, r) = slots.split_at_mut(di);
+        (&l[si], &mut r[0])
+    } else {
+        let (l, r) = slots.split_at_mut(si);
+        (&r[0], &mut l[di])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tiled engine (batch-native) — ported from the pre-plan exec.rs
+// ---------------------------------------------------------------------------
+//
+// The batch's output rows form one sample-major global row space of
+// `b * rows` rows (global row g → sample g / rows, sample-local row
+// g % rows). Tiles and worker ranges are carved from the global space, so
+// a tile may hold patches from several samples; every per-row accounting
+// lands in that row's sample's counters, which keeps the batch bit-exact
+// with the per-sample path.
+
+/// Shared read-only context for one layer's tile workers.
+struct TiledCtx<'a> {
+    pf: &'a PrepackedFilters,
+    /// One quantized input per sample of the batch.
+    qts: &'a [QuantizedTensor],
+    /// The activation slot arena (residual reads go through it).
+    slots: &'a [Tensor],
+    n_slots: usize,
+    /// Residual source slot, if the node has one.
+    res_slot: Option<usize>,
+    policy: Option<(&'a LayerState, &'a MorPolicy)>,
+    geom: ConvGeom,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    /// Output rows per sample (`geom.oh * geom.ow`).
+    rows: usize,
+    cout: usize,
+    k_len: usize,
+    k: u64,
+    dq: f32,
+    bn: Option<&'a (Vec<f32>, Vec<f32>)>,
+    node_relu: bool,
+    is_relu_layer: bool,
+    is_conv: bool,
+    oracle: bool,
+    /// Frozen input-sparsity decision (kernel selection only — results
+    /// are bit-identical either way).
+    lanes: bool,
+    sparse_cutoff: f32,
+}
+
+impl TiledCtx<'_> {
+    #[inline]
+    fn res_at(&self, s: usize, row: usize, f: usize) -> f32 {
+        self.res_slot
+            .map(|k| self.slots[s * self.n_slots + k].data[row * self.cout + f])
+            .unwrap_or(0.0)
+    }
+
+    #[inline]
+    fn res_row(&self, s: usize, row: usize) -> Option<&[f32]> {
+        self.res_slot.map(|k| {
+            &self.slots[s * self.n_slots + k].data[row * self.cout..(row + 1) * self.cout]
+        })
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn compute_step(
+    cs: &ComputeStep,
+    model: &Model,
+    pf: &PrepackedFilters,
+    pol: Option<(&LayerState, &MorPolicy)>,
+    plan: &ModelPlan,
+    b: usize,
+    input: &[Tensor],
+    slots: &mut [Tensor],
+    qts: &mut [QuantizedTensor],
+    out: &mut Vec<f32>,
+    skipped: &mut Vec<bool>,
+    bin_eval: &mut Vec<bool>,
+    pred: &mut [PredStats],
+    ops: &mut [OpsStats],
+    traces: &mut [Vec<LayerTrace>],
+    ranges: &mut Vec<(usize, usize)>,
+    workers: &mut [WorkerScratch],
+) {
+    let opts = plan.opts;
+    let n_slots = plan.n_slots;
+    let rows = cs.rows;
+    let cout = cs.cout;
+    let total_rows = rows * b;
+    let (_, _, bn, _) = layer_params(&model.nodes[cs.node]);
+
+    // quantize each sample's layer input once (reused buffers)
+    for s in 0..b {
+        let src: &Tensor = match cs.src {
+            Src::Input => &input[s],
+            Src::Slot(k) => &slots[s * n_slots + k],
+        };
+        qts[s].requantize(src, cs.sx);
+    }
+
+    // global sample-major buffers; split per sample after the compute
+    out.clear();
+    out.resize(total_rows * cout, 0.0);
+    if opts.collect_trace {
+        skipped.clear();
+        skipped.resize(total_rows * cout, false);
+        bin_eval.clear();
+        bin_eval.resize(total_rows * cout, false);
+    }
+
+    let n_used_workers;
+    {
+        let ctx = TiledCtx {
+            pf,
+            qts: &qts[..b],
+            slots,
+            n_slots,
+            res_slot: cs.res,
+            policy: pol,
+            geom: cs.geom,
+            kh: cs.kh,
+            kw: cs.kw,
+            stride: cs.stride,
+            rows,
+            cout,
+            k_len: cs.k_len,
+            k: cs.k_len as u64,
+            dq: cs.dq,
+            bn,
+            node_relu: cs.node_relu,
+            is_relu_layer: cs.is_relu_layer,
+            is_conv: cs.is_conv,
+            oracle: cs.oracle,
+            lanes: cs.lanes,
+            sparse_cutoff: cs.sparse_cutoff,
+        };
+
+        let n_tiles = total_rows.div_ceil(TILE_ROWS).max(1);
+        let nw = opts.threads.max(1).min(n_tiles);
+        if nw <= 1 {
+            let trace = opts
+                .collect_trace
+                .then(|| (&mut skipped[..], &mut bin_eval[..]));
+            process_row_range(&ctx, 0, total_rows, out, trace, &mut workers[0]);
+            n_used_workers = 1;
+        } else {
+            // contiguous tile-aligned global row ranges, one per worker;
+            // every buffer is split into disjoint per-range slices so
+            // workers never share mutable state, and per-sample stats
+            // merge in range order (deterministic)
+            let tiles_per = n_tiles.div_ceil(nw);
+            ranges.clear();
+            let mut start = 0usize;
+            while start < total_rows {
+                let end = total_rows.min(start + tiles_per * TILE_ROWS);
+                ranges.push((start, end));
+                start = end;
+            }
+            let mut out_parts: Vec<&mut [f32]> = Vec::with_capacity(ranges.len());
+            let mut sk_parts: Vec<&mut [bool]> = Vec::with_capacity(ranges.len());
+            let mut be_parts: Vec<&mut [bool]> = Vec::with_capacity(ranges.len());
+            let mut out_rest: &mut [f32] = out;
+            let mut sk_rest: &mut [bool] = skipped;
+            let mut be_rest: &mut [bool] = bin_eval;
+            for &(r0, r1) in ranges.iter() {
+                let n = (r1 - r0) * cout;
+                let (head, tail) = std::mem::take(&mut out_rest).split_at_mut(n);
+                out_parts.push(head);
+                out_rest = tail;
+                if opts.collect_trace {
+                    let (head, tail) = std::mem::take(&mut sk_rest).split_at_mut(n);
+                    sk_parts.push(head);
+                    sk_rest = tail;
+                    let (head, tail) = std::mem::take(&mut be_rest).split_at_mut(n);
+                    be_parts.push(head);
+                    be_rest = tail;
+                }
+            }
+            let mut trace_parts: Vec<Option<(&mut [bool], &mut [bool])>> =
+                if opts.collect_trace {
+                    sk_parts
+                        .into_iter()
+                        .zip(be_parts)
+                        .map(|(s, b)| Some((s, b)))
+                        .collect()
+                } else {
+                    ranges.iter().map(|_| None).collect()
+                };
+
+            n_used_workers = ranges.len();
+            let scratches = &mut workers[..n_used_workers];
+            std::thread::scope(|sc| {
+                let ctx = &ctx;
+                let handles: Vec<_> = ranges
+                    .iter()
+                    .zip(out_parts)
+                    .zip(trace_parts.drain(..))
+                    .zip(scratches.iter_mut())
+                    .map(|(((&(r0, r1), out_part), trace_part), scratch)| {
+                        sc.spawn(move || {
+                            process_row_range(ctx, r0, r1, out_part, trace_part, scratch)
+                        })
+                    })
+                    .collect();
+                for h in handles {
+                    h.join().expect("tile worker panicked");
+                }
+            });
+        }
+    }
+    // merge per-sample stats in deterministic range order
+    for scratch in workers[..n_used_workers].iter() {
+        for s in 0..b {
+            pred[s].add(&scratch.pred[s]);
+            ops[s].add(&scratch.ops[s]);
+        }
+    }
+
+    // scatter the global buffers back into per-sample slot tensors/traces
+    for s in 0..b {
+        let span = s * rows * cout..(s + 1) * rows * cout;
+        if opts.collect_trace {
+            traces[s].push(LayerTrace {
+                node: cs.node,
+                rows,
+                cout,
+                skipped: skipped[span.clone()].to_vec(),
+                bin_eval: bin_eval[span.clone()].to_vec(),
+            });
+        }
+        slots[s * n_slots + cs.dst].assign(cs.geom.oh, cs.geom.ow, cout, &out[span]);
+    }
+}
+
+/// Process global rows `row0..row1` tile by tile. `out` and the optional
+/// trace slices cover exactly those rows; this range's per-sample stats
+/// share lands in `scratch.pred` / `scratch.ops` (indexed by sample,
+/// length = batch size), merged by the caller in range order.
+fn process_row_range(
+    ctx: &TiledCtx,
+    row0: usize,
+    row1: usize,
+    out: &mut [f32],
+    trace: Option<(&mut [bool], &mut [bool])>,
+    scratch: &mut WorkerScratch,
+) {
+    let b = ctx.qts.len();
+    let cout = ctx.cout;
+    let k = ctx.k;
+    let WorkerScratch {
+        gather,
+        tile,
+        dots,
+        ri_cache,
+        skip,
+        applied,
+        survivors,
+        pred,
+        ops,
+    } = scratch;
+    // re-dimension the reusable scratch for this layer — identical
+    // starting state to the old per-call allocations, zero new heap
+    pred.clear();
+    pred.resize(b, PredStats::default());
+    ops.clear();
+    ops.resize(b, OpsStats::default());
+    tile.reset(ctx.k_len, ctx.lanes);
+    dots.clear();
+    dots.resize(TILE_ROWS * cout, 0);
+    ri_cache.clear();
+    ri_cache.resize(cout, 0.0);
+    skip.clear();
+    skip.resize(cout, false);
+    applied.clear();
+    applied.resize(cout, false);
+    survivors.clear();
+
+    let (mut tr_skip, mut tr_bin) = match trace {
+        Some((sk, be)) => (Some(sk), Some(be)),
+        None => (None, None),
+    };
+    let mut tile_sample = [0usize; TILE_ROWS]; // sample of each tile row
+    // per-row kernel choice: iterate only nonzero input lanes when the
+    // plan's frozen mode (and, in Auto, the measured density vs the
+    // pre-multiplied cutoff) says so — either kernel yields the exact
+    // same integer dots
+    let mut row_sparse = [false; TILE_ROWS];
+    let mut blk = [0i32; NR];
+
+    // cluster proxies are row-invariant (prepared by the strategy):
+    // empty for strategies without a spatial component
+    let proxies: &[usize] = ctx.policy.map(|(lp, _)| lp.proxies.as_slice()).unwrap_or(&[]);
+
+    let mut t0 = row0;
+    while t0 < row1 {
+        let trows = TILE_ROWS.min(row1 - t0);
+
+        // ---- phase 1: gather a tile of im2col patches (cross-sample) ----
+        for r in 0..trows {
+            let g = t0 + r;
+            let (s, row) = (g / ctx.rows, g % ctx.rows);
+            tile_sample[r] = s;
+            let src = &ctx.qts[s];
+            if ctx.is_conv {
+                let (oy, ox) = (row / ctx.geom.ow, row % ctx.geom.ow);
+                gather.gather(src, ctx.geom, ctx.kh, ctx.kw, ctx.stride, oy, ox);
+            } else {
+                gather.gather_fc(src, row);
+            }
+            row_sparse[r] = ctx.lanes && (gather.nnz as f32) < ctx.sparse_cutoff;
+            // the compression pass only runs for rows that will use the
+            // sparse kernel — dense rows pay one compare, nothing more
+            tile.set_row(r, &gather.patch, &gather.packed, gather.nnz, row_sparse[r]);
+            ops[s].macs_total += k * cout as u64;
+            if ctx.is_relu_layer {
+                ops[s].relu_macs += k * cout as u64;
+                pred[s].relu_outputs += cout as u64;
+            }
+        }
+
+        match ctx.policy {
+            // ---- dense layer: every (row, filter) pair survives. Filter
+            // blocks run outermost so each weight block is loaded once per
+            // tile and reused across all TILE_ROWS patches. ---------------
+            None => {
+                let mut f0 = 0;
+                while f0 < cout {
+                    let nf = NR.min(cout - f0);
+                    for r in 0..trows {
+                        if row_sparse[r] {
+                            let (li, lv) = tile.lanes(r);
+                            gemm::dot_block_sparse(li, lv, ctx.pf, f0, nf, &mut blk);
+                        } else {
+                            gemm::dot_block(tile.patch(r), ctx.pf, f0, nf, &mut blk);
+                        }
+                        dots[r * cout + f0..r * cout + f0 + nf].copy_from_slice(&blk[..nf]);
+                    }
+                    f0 += NR;
+                }
+                for r in 0..trows {
+                    let g = t0 + r;
+                    let (s, row) = (tile_sample[r], g % ctx.rows);
+                    let zeros = k - tile.nnz(r) as u64;
+                    let out_row = &mut out[(g - row0) * cout..(g - row0 + 1) * cout];
+                    for (f, o) in out_row.iter_mut().enumerate() {
+                        let d = dots[r * cout + f];
+                        account_eval(
+                            ctx, d, s, row, f, false, zeros, o, &mut pred[s], &mut ops[s],
+                        );
+                    }
+                }
+            }
+
+            Some((lp, mp)) => {
+                let strategy = mp.cfg.strategy;
+
+                // ---- phase 2a: proxies — always fully evaluated, filter
+                // blocks outer for weight reuse across the tile -----------
+                for chunk in proxies.chunks(NR) {
+                    for r in 0..trows {
+                        if row_sparse[r] {
+                            let (li, lv) = tile.lanes(r);
+                            gemm::dot_block_indexed_sparse(li, lv, ctx.pf, chunk, &mut blk);
+                        } else {
+                            gemm::dot_block_indexed(tile.patch(r), ctx.pf, chunk, &mut blk);
+                        }
+                        for (j, &f) in chunk.iter().enumerate() {
+                            dots[r * cout + f] = blk[j];
+                        }
+                    }
+                }
+
+                for r in 0..trows {
+                    let g = t0 + r;
+                    let (s, row) = (tile_sample[r], g % ctx.rows);
+                    let zeros = k - tile.nnz(r) as u64;
+                    let local = (g - row0) * cout;
+                    let out_row = &mut out[local..local + cout];
+
+                    for &p in proxies {
+                        let ri = account_eval(
+                            ctx, dots[r * cout + p], s, row, p, false, zeros,
+                            &mut out_row[p], &mut pred[s], &mut ops[s],
+                        );
+                        ri_cache[p] = ri;
+                    }
+
+                    // ---- phase 2b: skip decisions (strategy dispatch) ----
+                    survivors.clear();
+                    let rctx = RowCtx {
+                        lp,
+                        cfg: &mp.cfg,
+                        packed: tile.packed(r),
+                        patch: tile.patch(r),
+                        pf: ctx.pf,
+                        proxy_ri: ri_cache,
+                        res_row: ctx.res_row(s, row),
+                        bn: ctx.bn,
+                        dq: ctx.dq,
+                        k: ctx.k,
+                        cout,
+                    };
+                    let mut be_row =
+                        tr_bin.as_deref_mut().map(|be| &mut be[local..local + cout]);
+                    strategy.fill_skip_mask(
+                        &rctx,
+                        &mut SkipMask {
+                            skip: &mut skip[..],
+                            applied: &mut applied[..],
+                            survivors: &mut *survivors,
+                        },
+                        &mut be_row,
+                        &mut ops[s],
+                    );
+
+                    // ---- phase 3: GEMM over surviving pairs only (the
+                    // row's kernel flavour follows its input density) --
+                    for chunk in survivors.chunks(NR) {
+                        if row_sparse[r] {
+                            let (li, lv) = tile.lanes(r);
+                            gemm::dot_block_indexed_sparse(li, lv, ctx.pf, chunk, &mut blk);
+                        } else {
+                            gemm::dot_block_indexed(tile.patch(r), ctx.pf, chunk, &mut blk);
+                        }
+                        for (j, &f) in chunk.iter().enumerate() {
+                            account_eval(
+                                ctx, blk[j], s, row, f, applied[f], zeros, &mut out_row[f],
+                                &mut pred[s], &mut ops[s],
+                            );
+                        }
+                    }
+
+                    // ---- skipped outputs: zero + optional oracle truth ---
+                    // (proxies never set `skip`, so a full scan equals the
+                    // strategy-shaped iteration)
+                    for f in 0..cout {
+                        if skip[f] {
+                            account_skip(
+                                ctx, tile.patch(r), local, s, row, f, &mut out_row[f],
+                                tr_skip.as_deref_mut(), &mut pred[s], &mut ops[s],
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        t0 += trows;
+    }
+}
+
+/// Account one fully-evaluated output (dot already computed). Matches the
+/// scalar path's `full_eval!` (with `applied = false`) and the non-skip
+/// branch of `finish_neuron` exactly. `zeros` is the patch's zero-lane
+/// count (`k - nnz`) — the ineffectual share of this output's MACs.
+/// Returns the ReLU input.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn account_eval(
+    ctx: &TiledCtx,
+    d: i32,
+    s: usize,
+    row: usize,
+    f: usize,
+    applied: bool,
+    zeros: u64,
+    out_val: &mut f32,
+    pred: &mut PredStats,
+    ops: &mut OpsStats,
+) -> f32 {
+    let ri = relu_input(d, ctx.dq, ctx.bn, f, ctx.res_at(s, row, f));
+    *out_val = if ctx.node_relu { ri.max(0.0) } else { ri };
+    ops.macs_done += ctx.k;
+    ops.macs_skipped_input_zero += zeros;
+    ops.weight_bytes_fetched += ctx.k;
+    if ctx.is_relu_layer {
+        if ri <= 0.0 {
+            ops.neg_relu_macs += ctx.k;
+            ops.true_zero_outputs += 1;
+        }
+        if applied {
+            if ri <= 0.0 {
+                pred.incorrect_nonzero += 1;
+            } else {
+                pred.correct_nonzero += 1;
+            }
+        } else {
+            pred.not_applied += 1;
+        }
+    }
+    ri
+}
+
+/// Account one skipped output. Matches the skip branch of the scalar
+/// path's `finish_neuron` exactly (`local` = row offset within this
+/// worker's trace slice).
+#[allow(clippy::too_many_arguments)]
+fn account_skip(
+    ctx: &TiledCtx,
+    patch: &[i8],
+    local: usize,
+    s: usize,
+    row: usize,
+    f: usize,
+    out_val: &mut f32,
+    tr_skip: Option<&mut [bool]>,
+    pred: &mut PredStats,
+    ops: &mut OpsStats,
+) {
+    *out_val = 0.0;
+    ops.weight_bytes_saved += ctx.k;
+    if let Some(sk) = tr_skip {
+        sk[local + f] = true;
+    }
+    if ctx.oracle {
+        // ground truth for Fig 12 / accuracy accounting
+        let d = dot_i8(patch, ctx.pf.filter(f));
+        let ri = relu_input(d, ctx.dq, ctx.bn, f, ctx.res_at(s, row, f));
+        if ctx.is_relu_layer {
+            if ri <= 0.0 {
+                pred.correct_zero += 1;
+                ops.neg_relu_macs += ctx.k;
+                ops.true_zero_outputs += 1;
+            } else {
+                pred.incorrect_zero += 1;
+            }
+        }
+    }
+}

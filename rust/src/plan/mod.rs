@@ -1,0 +1,44 @@
+//! Compiled layer plans + reusable workspaces: the zero-allocation
+//! steady-state forward path.
+//!
+//! The tiled engine used to re-derive per-layer decisions and
+//! re-allocate its working memory on every request: output tensors,
+//! quantized activations, im2col tiles, dot/skip/survivor scratch and
+//! trace buffers were rebuilt per `run_batch` call, and each layer
+//! re-resolved geometry, strategy state and the sparse-vs-dense kernel
+//! choice at runtime. Hardware proposals like Mixture-of-Rookies fix
+//! the dataflow up front so the per-inference work is only the
+//! effectual math; this module is the software analogue — a
+//! plan/execute split:
+//!
+//! * [`compile()`] freezes the model into a [`ModelPlan`]: per-layer
+//!   [`ComputeStep`]s with resolved geometry, residual/graph wiring
+//!   (as ping-pong activation-slot indices from a liveness analysis,
+//!   so peak live tensors per sample is O(1), not O(layers)), the
+//!   input-sparsity decision with `auto`'s cutoff pre-resolved per
+//!   layer, and exact scratch high-water marks.
+//! * [`Workspace`] owns every buffer the forward writes, grown once to
+//!   the plan's marks and reused forever; [`WorkspacePool`] hands
+//!   workspaces to serve workers (one checkout per worker lifetime,
+//!   grows under contention, no aliasing).
+//! * [`execute()`] / [`execute_into`] run the batch-native tile loop over
+//!   (plan, workspace) — bit-identical to the `EngineSel::ScalarRef`
+//!   oracle, and **zero heap allocations** after warmup in the
+//!   single-threaded non-tracing serving configuration.
+//!
+//! [`crate::predictor::exec::run_batch`] compiles a throwaway plan per
+//! call (the correctness path the equivalence suites drive);
+//! [`crate::session::Session`] compiles once at `finish()`, owns the
+//! pool, and re-uses the plan across requests — and across threshold
+//! sweeps, since a re-thresholded policy keeps the same layer set.
+//!
+//! See EXPERIMENTS.md §Plan for the sizing rules and how a new layer
+//! kind registers a step.
+
+pub mod compile;
+pub mod execute;
+pub mod workspace;
+
+pub use compile::{compile, ComputeStep, ModelPlan, Src, StepPlan};
+pub use execute::{execute, execute_into};
+pub use workspace::{PooledWorkspace, WorkerScratch, Workspace, WorkspacePool};

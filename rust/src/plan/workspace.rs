@@ -1,0 +1,329 @@
+//! Reusable forward-pass working memory ([`Workspace`]) and the
+//! serve-time pool it is checked out of ([`WorkspacePool`]).
+//!
+//! A workspace owns every buffer the planned forward path writes:
+//! activation slot tensors (the ping-pong buffers the
+//! [`super::ModelPlan`]'s register allocation maps node outputs onto),
+//! per-sample quantized inputs, the sample-major global output buffer
+//! the row tiles write into, optional trace planes, and one
+//! [`WorkerScratch`] per row-tile worker thread (im2col gather buffers,
+//! the [`PatchTile`], dot/skip/survivor scratch, per-sample stats).
+//!
+//! Buffers grow to the plan's high-water marks on first use and never
+//! shrink, so after warmup [`super::execute_into`] performs **zero**
+//! heap allocations (single-threaded, non-tracing configuration — the
+//! serving default); `rust/tests/plan_contracts.rs` proves it with a
+//! counting allocator.
+//!
+//! ```
+//! use mor::model::synth;
+//! use mor::plan::{self, Workspace};
+//! use mor::predictor::RunOpts;
+//!
+//! let model = synth::tiny_serving_model(1);
+//! let plan = plan::compile(&model, None, RunOpts::default());
+//! // one workspace serves any number of forwards; buffers are reused
+//! let mut ws = Workspace::for_plan(&plan, 2);
+//! let (h, w, c) = model.input_shape;
+//! let xs: Vec<Vec<f32>> = (0..2).map(|i| vec![0.2 * i as f32; h * w * c]).collect();
+//! let inputs: Vec<&[f32]> = xs.iter().map(|x| x.as_slice()).collect();
+//! let r1 = plan::execute(&plan, &model, None, &mut ws, &inputs);
+//! let r2 = plan::execute(&plan, &model, None, &mut ws, &inputs);
+//! assert_eq!(r1[0].logits, r2[0].logits);
+//! assert!(ws.heap_bytes() > 0);
+//! ```
+
+use super::compile::ModelPlan;
+use crate::engine::gemm::{PatchTile, TILE_ROWS};
+use crate::engine::{PatchGather, QuantizedTensor, Tensor};
+use crate::predictor::{OpsStats, PredStats, RunResult};
+use crate::util::bits::PackedVec;
+use crate::util::reserve_capacity;
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Per-worker (per row-tile thread) scratch: everything one
+/// `process_row_range` invocation writes besides the output rows.
+/// Formerly reallocated on every call (`ri_cache`, `skip`, `applied`,
+/// `survivors` in the old `exec::process_row_range`); now owned here
+/// and re-dimensioned per layer without freeing.
+pub struct WorkerScratch {
+    /// im2col patch gather buffers (patch, packed ±1 plane, nnz).
+    pub gather: PatchGather,
+    /// The row tile (patches, packed planes, compressed lanes).
+    pub tile: PatchTile,
+    /// Per-tile dot products, `TILE_ROWS * cout`.
+    pub dots: Vec<i32>,
+    /// Current row's proxy ReLU inputs (cluster strategies).
+    pub ri_cache: Vec<f32>,
+    /// Current row's skip verdicts.
+    pub skip: Vec<bool>,
+    /// Current row's "predictor applied" flags.
+    pub applied: Vec<bool>,
+    /// Current row's surviving filters, in evaluation order.
+    pub survivors: Vec<usize>,
+    /// This range's per-sample stats share (merged by the caller in
+    /// deterministic range order).
+    pub pred: Vec<PredStats>,
+    pub ops: Vec<OpsStats>,
+}
+
+impl WorkerScratch {
+    fn new() -> WorkerScratch {
+        WorkerScratch {
+            gather: PatchGather::new(),
+            tile: PatchTile::empty(),
+            dots: Vec::new(),
+            ri_cache: Vec::new(),
+            skip: Vec::new(),
+            applied: Vec::new(),
+            survivors: Vec::new(),
+            pred: Vec::new(),
+            ops: Vec::new(),
+        }
+    }
+
+    fn heap_bytes(&self) -> usize {
+        self.gather.patch.capacity()
+            + packed_bytes(&self.gather.packed)
+            + self.tile.heap_bytes()
+            + self.dots.capacity() * 4
+            + self.ri_cache.capacity() * 4
+            + self.skip.capacity()
+            + self.applied.capacity()
+            + self.survivors.capacity() * std::mem::size_of::<usize>()
+            + self.pred.capacity() * std::mem::size_of::<PredStats>()
+            + self.ops.capacity() * std::mem::size_of::<OpsStats>()
+    }
+}
+
+fn packed_bytes(p: &PackedVec) -> usize {
+    (p.bits.capacity() + p.valid.capacity()) * 8
+}
+
+/// One forward pass's working memory. See the module docs; created
+/// empty ([`Workspace::new`]) or presized ([`Workspace::for_plan`]),
+/// checked out of a [`WorkspacePool`] on the serve path.
+pub struct Workspace {
+    /// Per-sample copy of the model input (the graph's `consumes: -1`
+    /// source tensor).
+    pub(crate) input: Vec<Tensor>,
+    /// Activation slot tensors, sample-major: slot `k` of sample `s`
+    /// lives at `s * plan.n_slots + k`. Only `plan.n_slots` tensors per
+    /// sample are ever live — the plan's liveness analysis keeps peak
+    /// live tensors O(1) in the layer count.
+    pub(crate) slots: Vec<Tensor>,
+    /// Per-sample quantized layer input (requantized per layer).
+    pub(crate) qts: Vec<QuantizedTensor>,
+    /// Sample-major global output rows of the current layer.
+    pub(crate) out: Vec<f32>,
+    /// Trace planes (only sized when the plan collects traces).
+    pub(crate) skipped: Vec<bool>,
+    pub(crate) bin_eval: Vec<bool>,
+    /// Per-sample stats accumulators for the whole forward.
+    pub(crate) pred: Vec<PredStats>,
+    pub(crate) ops: Vec<OpsStats>,
+    /// Worker row-range list (threaded path).
+    pub(crate) ranges: Vec<(usize, usize)>,
+    /// One scratch per row-tile worker.
+    pub(crate) workers: Vec<WorkerScratch>,
+    /// Warmed `RunResult` envelopes parked here when a caller-reused
+    /// results vector shrinks to a smaller batch — a later larger batch
+    /// takes them back instead of allocating, so serve loops with
+    /// fluctuating micro-batch sizes stay allocation-free too.
+    pub(crate) spare_results: Vec<RunResult>,
+}
+
+impl Default for Workspace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Workspace {
+    /// An empty workspace (no heap allocation); buffers grow to the
+    /// plan's high-water marks on first use.
+    pub fn new() -> Workspace {
+        Workspace {
+            input: Vec::new(),
+            slots: Vec::new(),
+            qts: Vec::new(),
+            out: Vec::new(),
+            skipped: Vec::new(),
+            bin_eval: Vec::new(),
+            pred: Vec::new(),
+            ops: Vec::new(),
+            ranges: Vec::new(),
+            workers: Vec::new(),
+            spare_results: Vec::new(),
+        }
+    }
+
+    /// A workspace pre-grown to `plan`'s exact scratch requirements for
+    /// batches up to `batch` — the first forward is already
+    /// allocation-free.
+    pub fn for_plan(plan: &ModelPlan, batch: usize) -> Workspace {
+        let mut ws = Workspace::new();
+        ws.prepare(plan, batch);
+        ws
+    }
+
+    /// Grow every buffer to `plan`'s high-water marks for a batch of
+    /// `batch` samples. Idempotent and allocation-free once the sizes
+    /// have been reached; called by [`super::execute_into`] on entry.
+    pub fn prepare(&mut self, plan: &ModelPlan, batch: usize) {
+        if self.input.len() < batch {
+            self.input.resize_with(batch, || Tensor::new(0, 0, 0));
+        }
+        if self.qts.len() < batch {
+            self.qts.resize_with(batch, QuantizedTensor::empty);
+        }
+        let want_slots = batch * plan.n_slots;
+        if self.slots.len() < want_slots {
+            self.slots.resize_with(want_slots, || Tensor::new(0, 0, 0));
+        }
+        for s in 0..batch {
+            reserve_capacity(&mut self.input[s].data, plan.input_elems);
+            reserve_capacity(&mut self.qts[s].q, plan.max_qt_elems);
+            for (k, &elems) in plan.slot_elems.iter().enumerate() {
+                reserve_capacity(&mut self.slots[s * plan.n_slots + k].data, elems);
+            }
+        }
+        reserve_capacity(&mut self.out, batch * plan.max_row_elems);
+        if plan.opts.collect_trace {
+            reserve_capacity(&mut self.skipped, batch * plan.max_row_elems);
+            reserve_capacity(&mut self.bin_eval, batch * plan.max_row_elems);
+        }
+        reserve_capacity(&mut self.pred, batch);
+        reserve_capacity(&mut self.ops, batch);
+        // parked result envelopes never outnumber the largest batch seen
+        reserve_capacity(&mut self.spare_results, batch);
+        let n_workers = plan.opts.threads.max(1);
+        if self.workers.len() < n_workers {
+            self.workers.resize_with(n_workers, WorkerScratch::new);
+        }
+        reserve_capacity(&mut self.ranges, n_workers);
+        for w in &mut self.workers[..n_workers] {
+            // capacity-only growth: the per-layer `tile.reset` inside the
+            // row loop re-dimensions it; here we just make sure that
+            // reset never allocates (lane buffers sized from the largest
+            // lane-enabled layer, not a dense-only giant)
+            w.tile.reserve(plan.max_k_len, plan.max_lanes_k_len);
+            w.gather.reserve(plan.max_k_len);
+            reserve_capacity(&mut w.dots, TILE_ROWS * plan.max_cout);
+            reserve_capacity(&mut w.ri_cache, plan.max_cout);
+            reserve_capacity(&mut w.skip, plan.max_cout);
+            reserve_capacity(&mut w.applied, plan.max_cout);
+            reserve_capacity(&mut w.survivors, plan.max_cout);
+            reserve_capacity(&mut w.pred, batch);
+            reserve_capacity(&mut w.ops, batch);
+        }
+    }
+
+    /// Total heap bytes currently held by this workspace's buffers —
+    /// the "workspace bytes per worker" figure `BENCH_hotpaths.json`
+    /// reports.
+    pub fn heap_bytes(&self) -> usize {
+        let tensors = |ts: &[Tensor]| ts.iter().map(|t| t.data.capacity() * 4).sum::<usize>();
+        tensors(&self.input)
+            + tensors(&self.slots)
+            + self.qts.iter().map(|q| q.q.capacity()).sum::<usize>()
+            + self.out.capacity() * 4
+            + self.skipped.capacity()
+            + self.bin_eval.capacity()
+            + self.pred.capacity() * std::mem::size_of::<PredStats>()
+            + self.ops.capacity() * std::mem::size_of::<OpsStats>()
+            + self.ranges.capacity() * std::mem::size_of::<(usize, usize)>()
+            + self.workers.iter().map(|w| w.heap_bytes()).sum::<usize>()
+            + self.spare_results.capacity() * std::mem::size_of::<RunResult>()
+            + self
+                .spare_results
+                .iter()
+                .map(|r| r.logits.capacity() * 4)
+                .sum::<usize>()
+    }
+}
+
+/// A grow-on-demand pool of [`Workspace`]s, owned by a
+/// [`crate::session::Session`] and shared (behind an `Arc`) with the
+/// serving coordinator's workers. `checkout` never blocks: when the
+/// free list is empty a fresh workspace is created, so the pool grows
+/// to the peak concurrency and then stabilizes — each serve worker
+/// checks one out for its whole lifetime and returns it on drop.
+pub struct WorkspacePool {
+    free: Mutex<Vec<Workspace>>,
+    created: AtomicUsize,
+}
+
+impl Default for WorkspacePool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl WorkspacePool {
+    pub fn new() -> WorkspacePool {
+        WorkspacePool {
+            free: Mutex::new(Vec::new()),
+            created: AtomicUsize::new(0),
+        }
+    }
+
+    /// Check a workspace out of `pool` (creating one if the free list
+    /// is empty). The guard returns it on drop; while held, the
+    /// workspace is exclusively owned — no aliasing between concurrent
+    /// workers.
+    pub fn checkout(pool: &Arc<WorkspacePool>) -> PooledWorkspace {
+        let reused = pool.free.lock().expect("workspace pool poisoned").pop();
+        let ws = reused.unwrap_or_else(|| {
+            pool.created.fetch_add(1, Ordering::Relaxed);
+            Workspace::new()
+        });
+        PooledWorkspace {
+            ws: Some(ws),
+            pool: Arc::clone(pool),
+        }
+    }
+
+    /// Workspaces ever created by this pool (= peak concurrent checkouts).
+    pub fn created(&self) -> usize {
+        self.created.load(Ordering::Relaxed)
+    }
+
+    /// Workspaces currently idle in the free list.
+    pub fn available(&self) -> usize {
+        self.free.lock().expect("workspace pool poisoned").len()
+    }
+}
+
+/// An exclusively-held workspace; dereferences to [`Workspace`] and
+/// returns itself to the pool on drop.
+pub struct PooledWorkspace {
+    ws: Option<Workspace>,
+    pool: Arc<WorkspacePool>,
+}
+
+impl Deref for PooledWorkspace {
+    type Target = Workspace;
+    fn deref(&self) -> &Workspace {
+        self.ws.as_ref().expect("workspace taken")
+    }
+}
+
+impl DerefMut for PooledWorkspace {
+    fn deref_mut(&mut self) -> &mut Workspace {
+        self.ws.as_mut().expect("workspace taken")
+    }
+}
+
+impl Drop for PooledWorkspace {
+    fn drop(&mut self) {
+        if let Some(ws) = self.ws.take() {
+            // a poisoned pool only loses the workspace, never panics in drop
+            if let Ok(mut free) = self.pool.free.lock() {
+                free.push(ws);
+            }
+        }
+    }
+}

@@ -4,27 +4,24 @@
 //!
 //! Two interchangeable engines implement each compute layer:
 //!
-//! * **Tiled** (default) — a cache-blocked, row-batched im2col GEMM with a
-//!   two-phase predict-then-evaluate dataflow. The batch's output rows
-//!   form one sample-major row space, so a tile of [`TILE_ROWS`] patches
-//!   is filled across request boundaries — the serving coordinator's
-//!   micro-batches keep the micro-kernel's weight blocks hot even when a
-//!   single request contributes only a handful of rows. Per tile:
-//!   (1) gather the patches (each from its own sample's quantized input),
-//!   (2) run the packed binary predictor + cluster-proxy logic over the
-//!   whole tile to produce a skip mask, (3) run the multi-filter
-//!   micro-kernel ([`crate::engine::gemm`]) only over surviving
-//!   (row, filter) pairs. The engine is **dual-sided sparse**: each tile
-//!   row additionally carries a compressed nonzero-lane list of its
-//!   patch, and [`RunOpts::input_sparsity`] selects (per row, on a
-//!   density crossover in `Auto` mode) whether the surviving dots run
-//!   on the dense block kernel or the input-zero-skipping sparse one —
-//!   a pure kernel choice, bit-identical either way. Row tiles are
-//!   optionally parallelized across `std::thread::scope` workers
-//!   ([`RunOpts::threads`]); stats and traces are accounted per sample
-//!   and merge deterministically.
+//! * **Tiled** (default) — the planned path: [`run_batch`] compiles the
+//!   model into a [`crate::plan::ModelPlan`] and drives
+//!   [`crate::plan::execute()`] over a [`crate::plan::Workspace`]. The
+//!   engine itself is unchanged — a cache-blocked, row-batched im2col
+//!   GEMM with a two-phase predict-then-evaluate dataflow, cross-sample
+//!   tiles, dual-sided sparsity and optional row-tile threading (see
+//!   the [`crate::plan`] docs) — but all per-layer decisions are frozen
+//!   at compile time and all working memory lives in the workspace.
+//!   These free functions build a throwaway plan + workspace per call
+//!   (the correctness path the equivalence suites drive); the
+//!   steady-state allocation-free path goes through
+//!   [`crate::session::Session`], which compiles once and pools
+//!   workspaces.
 //! * **ScalarRef** — the original per-neuron GEMV path, retained as the
-//!   bit-exact test oracle and perf baseline. Logits, [`OpsStats`],
+//!   bit-exact test oracle and perf baseline. It stays deliberately
+//!   *unplanned* (it re-derives everything per call and retains every
+//!   intermediate tensor), so the equivalence suites prove the planned
+//!   path against an independent implementation. Logits, [`OpsStats`],
 //!   [`PredStats`] and traces are identical between the two (all dot
 //!   products are exact integer sums and the per-output float tail is the
 //!   same code), which `rust/tests/engine_equivalence.rs` asserts.
@@ -40,16 +37,12 @@
 //! produced a zero ReLU output is checked with the binary predictor, and
 //! skipped only when *both* components agree on zero.
 
-use super::strategies::{
-    bn_affine, margin_of, LayerState, RowCtx, SkipMask, Strategy, ZeroPredictor,
-};
+use super::strategies::{bn_affine, margin_of, LayerState, Strategy};
 use super::{EngineSel, LayerTrace, MorPolicy, OpsStats, PredStats, RunOpts, RunResult};
-use crate::engine::gemm::{self, PatchTile, PrepackedFilters, NR, TILE_ROWS};
-use crate::engine::{
-    self, dot::dot_i8, relu_input, ConvGeom, InputSparsity, PatchGather, QuantizedTensor,
-    Tensor,
-};
+use crate::engine::dot::dot_i8;
+use crate::engine::{self, relu_input, ConvGeom, PatchGather, QuantizedTensor, Tensor};
 use crate::model::{Model, Node};
+use crate::plan;
 
 /// Run one sample (H*W*C float input) through the model.
 pub fn run_sample(
@@ -71,7 +64,7 @@ pub fn run_sample(
 /// Results are **bit-identical** to calling [`run_sample`] per input —
 /// logits, [`OpsStats`], [`PredStats`] and traces — for any batch size,
 /// thread count, tile alignment (ragged final tiles included), or
-/// [`InputSparsity`] mode.
+/// [`crate::engine::InputSparsity`] mode.
 ///
 /// ```
 /// use mor::model::synth;
@@ -91,10 +84,34 @@ pub fn run_batch(
     inputs: &[&[f32]],
     opts: RunOpts,
 ) -> Vec<RunResult> {
-    let b = inputs.len();
-    if b == 0 {
+    if inputs.is_empty() {
         return Vec::new();
     }
+    match opts.engine {
+        EngineSel::Tiled => {
+            // throwaway plan + workspace: bit-identical to the session's
+            // cached-plan path (same compile, same executor) — the
+            // session only removes the per-call setup cost
+            let compiled = plan::compile(model, policy, opts);
+            let mut ws = plan::Workspace::new();
+            plan::execute(&compiled, model, policy, &mut ws, inputs)
+        }
+        EngineSel::ScalarRef => run_batch_scalar(model, policy, inputs, opts),
+    }
+}
+
+/// The unplanned per-neuron reference path (`EngineSel::ScalarRef`).
+/// Keeps the pre-plan structure — including retaining every
+/// intermediate tensor per sample — on purpose: it is the independent
+/// oracle the planned path's slot reuse and frozen decisions are proven
+/// against, so it shares none of that machinery.
+fn run_batch_scalar(
+    model: &Model,
+    policy: Option<&MorPolicy>,
+    inputs: &[&[f32]],
+    opts: RunOpts,
+) -> Vec<RunResult> {
+    let b = inputs.len();
     let (h, w, c) = model.input_shape;
     let input_ts: Vec<Tensor> = inputs
         .iter()
@@ -115,39 +132,22 @@ pub fn run_batch(
                 let lp = policy.and_then(|p| p.layers.get(&i));
                 let pol = lp.map(|l| (l, policy.unwrap()));
                 let is_relu_layer = relu_layers.contains(&i);
-                match opts.engine {
-                    EngineSel::ScalarRef => {
-                        for s in 0..b {
-                            let src = src_of(&input_ts[s], &outs[s], node);
-                            let residual = res_tensor(node, &outs[s]);
-                            let out = compute_layer_scalar(
-                                node,
-                                src,
-                                residual,
-                                pol,
-                                is_relu_layer,
-                                i,
-                                opts,
-                                &mut pred[s],
-                                &mut ops[s],
-                                &mut traces[s],
-                            );
-                            outs[s].push(out);
-                        }
-                    }
-                    EngineSel::Tiled => compute_layer_tiled(
-                        model.prepacked().layer(i),
+                for s in 0..b {
+                    let src = src_of(&input_ts[s], &outs[s], node);
+                    let residual = res_tensor(node, &outs[s]);
+                    let out = compute_layer_scalar(
                         node,
-                        &input_ts,
-                        &mut outs,
+                        src,
+                        residual,
                         pol,
                         is_relu_layer,
                         i,
                         opts,
-                        &mut pred,
-                        &mut ops,
-                        &mut traces,
-                    ),
+                        &mut pred[s],
+                        &mut ops[s],
+                        &mut traces[s],
+                    );
+                    outs[s].push(out);
                 }
             }
             Node::MaxPool { size, .. } => {
@@ -231,495 +231,6 @@ fn geom_of(node: &Node, src: &Tensor) -> (ConvGeom, usize, usize, usize) {
 }
 
 // ---------------------------------------------------------------------------
-// Tiled engine (batch-native)
-// ---------------------------------------------------------------------------
-//
-// The batch's output rows form one sample-major global row space of
-// `b * rows` rows (global row g → sample g / rows, sample-local row
-// g % rows). Tiles and worker ranges are carved from the global space, so
-// a tile may hold patches from several samples; every per-row accounting
-// lands in that row's sample's counters, which keeps the batch bit-exact
-// with the per-sample path.
-
-/// Shared read-only context for one layer's tile workers.
-struct TiledCtx<'a> {
-    node: &'a Node,
-    pf: &'a PrepackedFilters,
-    /// One quantized input per sample of the batch.
-    qts: &'a [QuantizedTensor],
-    /// One optional residual tensor per sample of the batch.
-    residuals: &'a [Option<&'a Tensor>],
-    policy: Option<(&'a LayerState, &'a MorPolicy)>,
-    geom: ConvGeom,
-    kh: usize,
-    kw: usize,
-    stride: usize,
-    /// Output rows per sample (`geom.oh * geom.ow`).
-    rows: usize,
-    cout: usize,
-    k: u64,
-    dq: f32,
-    bn: Option<&'a (Vec<f32>, Vec<f32>)>,
-    node_relu: bool,
-    is_relu_layer: bool,
-    is_conv: bool,
-    oracle: bool,
-    /// Input-side sparsity mode (kernel selection only — results are
-    /// bit-identical in every mode).
-    sparsity: InputSparsity,
-}
-
-impl TiledCtx<'_> {
-    #[inline]
-    fn res_at(&self, s: usize, row: usize, f: usize) -> f32 {
-        self.residuals[s]
-            .map(|r| r.data[row * self.cout + f])
-            .unwrap_or(0.0)
-    }
-}
-
-#[allow(clippy::too_many_arguments)]
-fn compute_layer_tiled(
-    pf: &PrepackedFilters,
-    node: &Node,
-    inputs: &[Tensor],
-    outs: &mut [Vec<Tensor>],
-    policy: Option<(&LayerState, &MorPolicy)>,
-    is_relu_layer: bool,
-    node_idx: usize,
-    opts: RunOpts,
-    pred: &mut [PredStats],
-    ops: &mut [OpsStats],
-    traces: &mut [Vec<LayerTrace>],
-) {
-    let b = inputs.len();
-    let (sx, sw, bn, node_relu) = layer_params(node);
-    // all samples share one geometry: same model, same input shape
-    let (geom, kh, kw, stride) = geom_of(node, src_of(&inputs[0], &outs[0], node));
-    let rows = geom.oh * geom.ow;
-    let total_rows = rows * b;
-    let cout = node.cout();
-
-    // global sample-major buffers; split per sample after the compute
-    let mut out = vec![0.0f32; total_rows * cout];
-    let mut skipped =
-        if opts.collect_trace { vec![false; total_rows * cout] } else { Vec::new() };
-    let mut bin_eval =
-        if opts.collect_trace { vec![false; total_rows * cout] } else { Vec::new() };
-
-    {
-        // the residual refs borrow `outs` for the duration of the compute;
-        // the new tensors are pushed only after this scope releases them
-        let qts: Vec<QuantizedTensor> = (0..b)
-            .map(|s| QuantizedTensor::new(src_of(&inputs[s], &outs[s], node), sx))
-            .collect();
-        let residuals: Vec<Option<&Tensor>> =
-            (0..b).map(|s| res_tensor(node, &outs[s])).collect();
-        let ctx = TiledCtx {
-            node,
-            pf,
-            qts: &qts,
-            residuals: &residuals,
-            policy,
-            geom,
-            kh,
-            kw,
-            stride,
-            rows,
-            cout,
-            k: node.k_len() as u64,
-            dq: sw * sx,
-            bn,
-            node_relu,
-            is_relu_layer,
-            is_conv: matches!(node, Node::Conv { .. }),
-            // the oracle strategy's skip accounting IS the ground truth:
-            // force it on so its Fig-12 categories are always populated
-            oracle: opts.oracle
-                || policy.is_some_and(|(_, mp)| mp.cfg.strategy == Strategy::Oracle),
-            sparsity: opts.input_sparsity,
-        };
-
-        let n_tiles = total_rows.div_ceil(TILE_ROWS).max(1);
-        let workers = opts.threads.max(1).min(n_tiles);
-        if workers <= 1 {
-            let trace = opts
-                .collect_trace
-                .then(|| (&mut skipped[..], &mut bin_eval[..]));
-            let (p, o) = process_row_range(&ctx, 0, total_rows, &mut out, trace);
-            for s in 0..b {
-                pred[s].add(&p[s]);
-                ops[s].add(&o[s]);
-            }
-        } else {
-            // contiguous tile-aligned global row ranges, one per worker;
-            // every buffer is split into disjoint per-range slices so
-            // workers never share mutable state, and per-sample stats
-            // merge in range order (deterministic)
-            let tiles_per = n_tiles.div_ceil(workers);
-            let mut ranges: Vec<(usize, usize)> = Vec::new();
-            let mut start = 0usize;
-            while start < total_rows {
-                let end = total_rows.min(start + tiles_per * TILE_ROWS);
-                ranges.push((start, end));
-                start = end;
-            }
-            let mut out_parts: Vec<&mut [f32]> = Vec::with_capacity(ranges.len());
-            let mut sk_parts: Vec<&mut [bool]> = Vec::with_capacity(ranges.len());
-            let mut be_parts: Vec<&mut [bool]> = Vec::with_capacity(ranges.len());
-            let mut out_rest: &mut [f32] = &mut out;
-            let mut sk_rest: &mut [bool] = &mut skipped;
-            let mut be_rest: &mut [bool] = &mut bin_eval;
-            for &(r0, r1) in &ranges {
-                let n = (r1 - r0) * cout;
-                let (head, tail) = std::mem::take(&mut out_rest).split_at_mut(n);
-                out_parts.push(head);
-                out_rest = tail;
-                if opts.collect_trace {
-                    let (head, tail) = std::mem::take(&mut sk_rest).split_at_mut(n);
-                    sk_parts.push(head);
-                    sk_rest = tail;
-                    let (head, tail) = std::mem::take(&mut be_rest).split_at_mut(n);
-                    be_parts.push(head);
-                    be_rest = tail;
-                }
-            }
-            let mut trace_parts: Vec<Option<(&mut [bool], &mut [bool])>> = if opts.collect_trace
-            {
-                sk_parts
-                    .into_iter()
-                    .zip(be_parts)
-                    .map(|(s, b)| Some((s, b)))
-                    .collect()
-            } else {
-                ranges.iter().map(|_| None).collect()
-            };
-
-            let stats: Vec<(Vec<PredStats>, Vec<OpsStats>)> = std::thread::scope(|s| {
-                let ctx = &ctx;
-                let handles: Vec<_> = ranges
-                    .iter()
-                    .zip(out_parts)
-                    .zip(trace_parts.drain(..))
-                    .map(|((&(r0, r1), out_part), trace_part)| {
-                        s.spawn(move || process_row_range(ctx, r0, r1, out_part, trace_part))
-                    })
-                    .collect();
-                handles
-                    .into_iter()
-                    .map(|h| h.join().expect("tile worker panicked"))
-                    .collect()
-            });
-            for (p, o) in stats {
-                for s in 0..b {
-                    pred[s].add(&p[s]);
-                    ops[s].add(&o[s]);
-                }
-            }
-        }
-    }
-
-    // scatter the global buffers back into per-sample tensors/traces
-    for s in 0..b {
-        let span = s * rows * cout..(s + 1) * rows * cout;
-        if opts.collect_trace {
-            traces[s].push(LayerTrace {
-                node: node_idx,
-                rows,
-                cout,
-                skipped: skipped[span.clone()].to_vec(),
-                bin_eval: bin_eval[span.clone()].to_vec(),
-            });
-        }
-        let mut t = Tensor::new(geom.oh, geom.ow, cout);
-        t.data.copy_from_slice(&out[span]);
-        outs[s].push(t);
-    }
-}
-
-/// Process global rows `row0..row1` tile by tile. `out` and the optional
-/// trace slices cover exactly those rows; returned stats are this range's
-/// per-sample share (indexed by sample, length = batch size).
-fn process_row_range(
-    ctx: &TiledCtx,
-    row0: usize,
-    row1: usize,
-    out: &mut [f32],
-    trace: Option<(&mut [bool], &mut [bool])>,
-) -> (Vec<PredStats>, Vec<OpsStats>) {
-    let b = ctx.qts.len();
-    let mut pred = vec![PredStats::default(); b];
-    let mut ops = vec![OpsStats::default(); b];
-    let cout = ctx.cout;
-    let k = ctx.k;
-    let (mut tr_skip, mut tr_bin) = match trace {
-        Some((sk, be)) => (Some(sk), Some(be)),
-        None => (None, None),
-    };
-
-    let mut pgs: Vec<PatchGather> = ctx.qts.iter().map(PatchGather::new).collect();
-    let mut tile = PatchTile::new(ctx.node.k_len(), ctx.sparsity != InputSparsity::Off);
-    let mut tile_sample = [0usize; TILE_ROWS]; // sample of each tile row
-    // per-row kernel choice: iterate only nonzero input lanes when the
-    // mode (and, in Auto, the measured density) says so — either kernel
-    // yields the exact same integer dots
-    let mut row_sparse = [false; TILE_ROWS];
-    let mut dots = vec![0i32; TILE_ROWS * cout];
-    let mut ri_cache = vec![0.0f32; cout]; // current row's proxy ReLU inputs
-    let mut skip = vec![false; cout];
-    let mut applied = vec![false; cout];
-    let mut survivors: Vec<usize> = Vec::with_capacity(cout);
-    let mut blk = [0i32; NR];
-
-    // cluster proxies are row-invariant (prepared by the strategy):
-    // empty for strategies without a spatial component
-    let proxies: &[usize] = ctx.policy.map(|(lp, _)| lp.proxies.as_slice()).unwrap_or(&[]);
-
-    let mut t0 = row0;
-    while t0 < row1 {
-        let trows = TILE_ROWS.min(row1 - t0);
-
-        // ---- phase 1: gather a tile of im2col patches (cross-sample) ----
-        for r in 0..trows {
-            let g = t0 + r;
-            let (s, row) = (g / ctx.rows, g % ctx.rows);
-            tile_sample[r] = s;
-            let pg = &mut pgs[s];
-            if ctx.is_conv {
-                let (oy, ox) = (row / ctx.geom.ow, row % ctx.geom.ow);
-                pg.gather(ctx.geom, ctx.kh, ctx.kw, ctx.stride, oy, ox);
-            } else {
-                pg.gather_fc(row);
-            }
-            row_sparse[r] = match ctx.sparsity {
-                InputSparsity::Off => false,
-                InputSparsity::On => tile.has_sparse(),
-                InputSparsity::Auto => {
-                    tile.has_sparse() && gemm::sparse_wins(pg.nnz, ctx.node.k_len())
-                }
-            };
-            // the compression pass only runs for rows that will use the
-            // sparse kernel — dense rows pay one compare, nothing more
-            tile.set_row(r, &pg.patch, &pg.packed, pg.nnz, row_sparse[r]);
-            ops[s].macs_total += k * cout as u64;
-            if ctx.is_relu_layer {
-                ops[s].relu_macs += k * cout as u64;
-                pred[s].relu_outputs += cout as u64;
-            }
-        }
-
-        match ctx.policy {
-            // ---- dense layer: every (row, filter) pair survives. Filter
-            // blocks run outermost so each weight block is loaded once per
-            // tile and reused across all TILE_ROWS patches. ---------------
-            None => {
-                let mut f0 = 0;
-                while f0 < cout {
-                    let nf = NR.min(cout - f0);
-                    for r in 0..trows {
-                        if row_sparse[r] {
-                            let (li, lv) = tile.lanes(r);
-                            gemm::dot_block_sparse(li, lv, ctx.pf, f0, nf, &mut blk);
-                        } else {
-                            gemm::dot_block(tile.patch(r), ctx.pf, f0, nf, &mut blk);
-                        }
-                        dots[r * cout + f0..r * cout + f0 + nf].copy_from_slice(&blk[..nf]);
-                    }
-                    f0 += NR;
-                }
-                for r in 0..trows {
-                    let g = t0 + r;
-                    let (s, row) = (tile_sample[r], g % ctx.rows);
-                    let zeros = k - tile.nnz(r) as u64;
-                    let out_row = &mut out[(g - row0) * cout..(g - row0 + 1) * cout];
-                    for (f, o) in out_row.iter_mut().enumerate() {
-                        let d = dots[r * cout + f];
-                        account_eval(
-                            ctx, d, s, row, f, false, zeros, o, &mut pred[s], &mut ops[s],
-                        );
-                    }
-                }
-            }
-
-            Some((lp, mp)) => {
-                let strategy = mp.cfg.strategy;
-
-                // ---- phase 2a: proxies — always fully evaluated, filter
-                // blocks outer for weight reuse across the tile -----------
-                for chunk in proxies.chunks(NR) {
-                    for r in 0..trows {
-                        if row_sparse[r] {
-                            let (li, lv) = tile.lanes(r);
-                            gemm::dot_block_indexed_sparse(li, lv, ctx.pf, chunk, &mut blk);
-                        } else {
-                            gemm::dot_block_indexed(tile.patch(r), ctx.pf, chunk, &mut blk);
-                        }
-                        for (j, &f) in chunk.iter().enumerate() {
-                            dots[r * cout + f] = blk[j];
-                        }
-                    }
-                }
-
-                for r in 0..trows {
-                    let g = t0 + r;
-                    let (s, row) = (tile_sample[r], g % ctx.rows);
-                    let zeros = k - tile.nnz(r) as u64;
-                    let local = (g - row0) * cout;
-                    let out_row = &mut out[local..local + cout];
-
-                    for &p in proxies {
-                        let ri = account_eval(
-                            ctx, dots[r * cout + p], s, row, p, false, zeros,
-                            &mut out_row[p], &mut pred[s], &mut ops[s],
-                        );
-                        ri_cache[p] = ri;
-                    }
-
-                    // ---- phase 2b: skip decisions (strategy dispatch) ----
-                    survivors.clear();
-                    let rctx = RowCtx {
-                        lp,
-                        cfg: &mp.cfg,
-                        packed: tile.packed(r),
-                        patch: tile.patch(r),
-                        pf: ctx.pf,
-                        proxy_ri: &ri_cache,
-                        res_row: ctx.residuals[s]
-                            .map(|t| &t.data[row * cout..(row + 1) * cout]),
-                        bn: ctx.bn,
-                        dq: ctx.dq,
-                        k: ctx.k,
-                        cout,
-                    };
-                    let mut be_row =
-                        tr_bin.as_deref_mut().map(|be| &mut be[local..local + cout]);
-                    strategy.fill_skip_mask(
-                        &rctx,
-                        &mut SkipMask {
-                            skip: &mut skip,
-                            applied: &mut applied,
-                            survivors: &mut survivors,
-                        },
-                        &mut be_row,
-                        &mut ops[s],
-                    );
-
-                    // ---- phase 3: GEMM over surviving pairs only (the
-                    // row's kernel flavour follows its input density) --
-                    for chunk in survivors.chunks(NR) {
-                        if row_sparse[r] {
-                            let (li, lv) = tile.lanes(r);
-                            gemm::dot_block_indexed_sparse(li, lv, ctx.pf, chunk, &mut blk);
-                        } else {
-                            gemm::dot_block_indexed(tile.patch(r), ctx.pf, chunk, &mut blk);
-                        }
-                        for (j, &f) in chunk.iter().enumerate() {
-                            account_eval(
-                                ctx, blk[j], s, row, f, applied[f], zeros, &mut out_row[f],
-                                &mut pred[s], &mut ops[s],
-                            );
-                        }
-                    }
-
-                    // ---- skipped outputs: zero + optional oracle truth ---
-                    // (proxies never set `skip`, so a full scan equals the
-                    // strategy-shaped iteration)
-                    for f in 0..cout {
-                        if skip[f] {
-                            account_skip(
-                                ctx, tile.patch(r), local, s, row, f, &mut out_row[f],
-                                tr_skip.as_deref_mut(), &mut pred[s], &mut ops[s],
-                            );
-                        }
-                    }
-                }
-            }
-        }
-        t0 += trows;
-    }
-    (pred, ops)
-}
-
-/// Account one fully-evaluated output (dot already computed). Matches the
-/// scalar path's `full_eval!` (with `applied = false`) and the non-skip
-/// branch of `finish_neuron` exactly. `zeros` is the patch's zero-lane
-/// count (`k - nnz`) — the ineffectual share of this output's MACs.
-/// Returns the ReLU input.
-#[allow(clippy::too_many_arguments)]
-#[inline]
-fn account_eval(
-    ctx: &TiledCtx,
-    d: i32,
-    s: usize,
-    row: usize,
-    f: usize,
-    applied: bool,
-    zeros: u64,
-    out_val: &mut f32,
-    pred: &mut PredStats,
-    ops: &mut OpsStats,
-) -> f32 {
-    let ri = relu_input(d, ctx.dq, ctx.bn, f, ctx.res_at(s, row, f));
-    *out_val = if ctx.node_relu { ri.max(0.0) } else { ri };
-    ops.macs_done += ctx.k;
-    ops.macs_skipped_input_zero += zeros;
-    ops.weight_bytes_fetched += ctx.k;
-    if ctx.is_relu_layer {
-        if ri <= 0.0 {
-            ops.neg_relu_macs += ctx.k;
-            ops.true_zero_outputs += 1;
-        }
-        if applied {
-            if ri <= 0.0 {
-                pred.incorrect_nonzero += 1;
-            } else {
-                pred.correct_nonzero += 1;
-            }
-        } else {
-            pred.not_applied += 1;
-        }
-    }
-    ri
-}
-
-/// Account one skipped output. Matches the skip branch of the scalar
-/// path's `finish_neuron` exactly (`local` = row offset within this
-/// worker's trace slice).
-#[allow(clippy::too_many_arguments)]
-fn account_skip(
-    ctx: &TiledCtx,
-    patch: &[i8],
-    local: usize,
-    s: usize,
-    row: usize,
-    f: usize,
-    out_val: &mut f32,
-    tr_skip: Option<&mut [bool]>,
-    pred: &mut PredStats,
-    ops: &mut OpsStats,
-) {
-    *out_val = 0.0;
-    ops.weight_bytes_saved += ctx.k;
-    if let Some(sk) = tr_skip {
-        sk[local + f] = true;
-    }
-    if ctx.oracle {
-        // ground truth for Fig 12 / accuracy accounting
-        let d = dot_i8(patch, ctx.pf.filter(f));
-        let ri = relu_input(d, ctx.dq, ctx.bn, f, ctx.res_at(s, row, f));
-        if ctx.is_relu_layer {
-            if ri <= 0.0 {
-                pred.correct_zero += 1;
-                ops.neg_relu_macs += ctx.k;
-                ops.true_zero_outputs += 1;
-            } else {
-                pred.incorrect_zero += 1;
-            }
-        }
-    }
-}
-
-// ---------------------------------------------------------------------------
 // Scalar reference engine (the original per-neuron GEMV path)
 // ---------------------------------------------------------------------------
 
@@ -737,7 +248,7 @@ fn compute_layer_scalar(
     traces: &mut Vec<LayerTrace>,
 ) -> Tensor {
     // the oracle strategy's skip accounting IS the ground truth: force
-    // it on (mirrors the tiled engine) so both engines stay bit-exact
+    // it on (mirrors the planned engine) so both engines stay bit-exact
     let opts = RunOpts {
         oracle: opts.oracle
             || policy.is_some_and(|(_, mp)| mp.cfg.strategy == Strategy::Oracle),
@@ -753,7 +264,7 @@ fn compute_layer_scalar(
     let mut out = Tensor::new(geom.oh, geom.ow, cout);
 
     let qt = QuantizedTensor::new(src, sx);
-    let mut pg = PatchGather::new(&qt);
+    let mut pg = PatchGather::new();
     let mut trace = if opts.collect_trace {
         Some(LayerTrace {
             node: node_idx,
@@ -772,9 +283,9 @@ fn compute_layer_scalar(
     for row in 0..rows {
         match node {
             Node::Conv { .. } => {
-                pg.gather(geom, kh, kw, stride, row / geom.ow, row % geom.ow)
+                pg.gather(&qt, geom, kh, kw, stride, row / geom.ow, row % geom.ow)
             }
-            _ => pg.gather_fc(row),
+            _ => pg.gather_fc(&qt, row),
         }
         ops.macs_total += k * cout as u64;
         if is_relu_layer {
@@ -963,7 +474,9 @@ fn finish_neuron(
     }
 }
 
-fn layer_params(node: &Node) -> (f32, f32, Option<&(Vec<f32>, Vec<f32>)>, bool) {
+/// Quantization scales, folded BN and activation flag of a compute node
+/// (shared with the planned executor in [`crate::plan`]).
+pub(crate) fn layer_params(node: &Node) -> (f32, f32, Option<&(Vec<f32>, Vec<f32>)>, bool) {
     match node {
         Node::Conv { sx, sw, bn, relu, .. } | Node::Fc { sx, sw, bn, relu, .. } => {
             (*sx, *sw, bn.as_ref(), *relu)
@@ -976,6 +489,7 @@ fn layer_params(node: &Node) -> (f32, f32, Option<&(Vec<f32>, Vec<f32>)>, bool) 
 mod tests {
     use super::*;
     use crate::config::PredictorConfig;
+    use crate::engine::InputSparsity;
     use crate::model::testutil::{tiny_conv, tiny_fc};
     use crate::model::PredictorParams;
     use crate::predictor::EngineSel;
@@ -1185,9 +699,9 @@ mod tests {
         }
     }
 
-    /// The tiled engine must be bit-identical to the scalar reference on
-    /// the in-tree models, for every (policy, oracle, trace, threads)
-    /// combination. Random-model coverage lives in
+    /// The planned tiled engine must be bit-identical to the scalar
+    /// reference on the in-tree models, for every (policy, oracle,
+    /// trace, threads) combination. Random-model coverage lives in
     /// rust/tests/engine_equivalence.rs.
     #[test]
     fn tiled_matches_scalar_reference() {

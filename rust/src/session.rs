@@ -29,20 +29,39 @@
 //!
 //! Internally the model and policy live behind `Arc`s, so the serving
 //! coordinator's worker threads share one prepacked copy.
+//!
+//! `finish()` also **compiles the model into a
+//! [`crate::plan::ModelPlan`]** (tiled engine) and owns a
+//! [`crate::plan::WorkspacePool`]: per-layer geometry, strategy state,
+//! sparsity decisions and scratch sizes are frozen once, and every
+//! forward after that reuses pooled working memory — the steady-state
+//! request path performs zero heap allocations (see the [`crate::plan`]
+//! docs). Serving workers check one workspace out for their whole
+//! lifetime via [`Session::checkout_workspace`] and drive
+//! [`Session::run_batch_into`].
 
 use crate::config::PredictorConfig;
 use crate::model::{Artifacts, Model, PredictorParams};
+use crate::plan::{self, ModelPlan, PooledWorkspace, Workspace, WorkspacePool};
 use crate::predictor::strategies::{Strategy, ZeroPredictor};
 use crate::predictor::{exec, EngineSel, InputSparsity, MorPolicy, RunOpts, RunResult};
 use anyhow::Result;
 use std::sync::Arc;
 
-/// A prepared inference context: model + policy + execution options.
+/// A prepared inference context: model + policy + execution options,
+/// plus the compiled [`ModelPlan`] and workspace pool the steady-state
+/// forward path runs on.
 #[derive(Clone)]
 pub struct Session {
     model: Arc<Model>,
     policy: Option<Arc<MorPolicy>>,
     opts: RunOpts,
+    /// Compiled execution plan (`None` for the unplanned `ScalarRef`
+    /// reference engine).
+    plan: Option<Arc<ModelPlan>>,
+    /// Reusable forward workspaces, shared with derived sessions (the
+    /// buffers fit any plan of the same model).
+    pool: Arc<WorkspacePool>,
 }
 
 impl Session {
@@ -88,31 +107,79 @@ impl Session {
 
     /// Run one sample through the session.
     pub fn run_sample(&self, input: &[f32]) -> RunResult {
-        exec::run_sample(&self.model, self.policy.as_deref(), input, self.opts)
+        self.run_batch(&[input])
+            .pop()
+            .expect("run_batch returns one result per input")
     }
 
     /// Run a micro-batch; bit-identical to mapping [`Session::run_sample`]
-    /// over the inputs (see `rust/tests/batch_equivalence.rs`).
+    /// over the inputs (see `rust/tests/batch_equivalence.rs`). On the
+    /// tiled engine this executes the session's cached [`ModelPlan`]
+    /// over a pooled workspace (no per-request compilation or buffer
+    /// allocation beyond the result envelope).
     pub fn run_batch(&self, inputs: &[&[f32]]) -> Vec<RunResult> {
-        exec::run_batch(&self.model, self.policy.as_deref(), inputs, self.opts)
+        let mut ws = WorkspacePool::checkout(&self.pool);
+        self.run_batch_in(&mut ws, inputs)
+    }
+
+    /// Like [`Session::run_batch`], but over a caller-held workspace —
+    /// serving workers check one out once ([`Session::checkout_workspace`])
+    /// and reuse it for their whole lifetime.
+    pub fn run_batch_in(&self, ws: &mut Workspace, inputs: &[&[f32]]) -> Vec<RunResult> {
+        let mut results = Vec::new();
+        self.run_batch_into(ws, inputs, &mut results);
+        results
+    }
+
+    /// The fully allocation-free form: reuses the caller's workspace
+    /// *and* result vector (logits buffers included). After warmup this
+    /// performs zero heap allocations per request in the
+    /// single-threaded, non-tracing configuration — the property
+    /// `rust/tests/plan_contracts.rs` pins with a counting allocator.
+    pub fn run_batch_into(
+        &self,
+        ws: &mut Workspace,
+        inputs: &[&[f32]],
+        results: &mut Vec<RunResult>,
+    ) {
+        match &self.plan {
+            Some(p) => {
+                plan::execute_into(p, &self.model, self.policy.as_deref(), ws, inputs, results)
+            }
+            None => {
+                *results = exec::run_batch(&self.model, self.policy.as_deref(), inputs, self.opts)
+            }
+        }
+    }
+
+    /// Check a reusable workspace out of the session's pool (grows under
+    /// contention; returned on drop).
+    pub fn checkout_workspace(&self) -> PooledWorkspace {
+        WorkspacePool::checkout(&self.pool)
+    }
+
+    /// The compiled execution plan (`None` for the `ScalarRef` engine).
+    pub fn plan(&self) -> Option<&Arc<ModelPlan>> {
+        self.plan.as_ref()
+    }
+
+    /// The session's workspace pool (shared with derived sessions).
+    pub fn workspace_pool(&self) -> &Arc<WorkspacePool> {
+        &self.pool
     }
 
     pub fn model(&self) -> &Model {
         &self.model
     }
 
-    /// The shared model handle (serving workers clone this).
+    /// The shared model handle (serving workers share it by cloning the
+    /// whole session; this exposes just the model Arc).
     pub fn model_arc(&self) -> Arc<Model> {
         Arc::clone(&self.model)
     }
 
     pub fn policy(&self) -> Option<&MorPolicy> {
         self.policy.as_deref()
-    }
-
-    /// The shared policy handle (serving workers clone this).
-    pub fn policy_arc(&self) -> Option<Arc<MorPolicy>> {
-        self.policy.clone()
     }
 
     pub fn opts(&self) -> RunOpts {
@@ -137,27 +204,57 @@ impl Session {
     }
 
     /// A derived session with a different (or no) policy, sharing the
-    /// model and its prepacked weights.
+    /// model and its prepacked weights. The plan is recompiled (cheap —
+    /// graph metadata only) because the set of policied layers may
+    /// change; the workspace pool is shared.
     pub fn with_policy(&self, policy: Option<MorPolicy>) -> Session {
+        let policy = policy.map(Arc::new);
         Session {
             model: Arc::clone(&self.model),
-            policy: policy.map(Arc::new),
+            plan: compile_plan(&self.model, policy.as_deref(), self.opts),
+            policy,
             opts: self.opts,
+            pool: Arc::clone(&self.pool),
         }
     }
 
     /// A derived session at candidate threshold `t`: the cached policy
     /// is re-thresholded (enabled sets only), packed filter sign bits
-    /// and the model are shared. Dense sessions stay dense.
+    /// and the model are shared — and so is the compiled [`ModelPlan`]
+    /// itself, since a threshold change keeps the policied-layer set
+    /// and every frozen per-layer decision intact. Dense sessions stay
+    /// dense.
     pub fn with_threshold(&self, t: f32) -> Session {
-        self.with_policy(self.policy.as_deref().map(|p| p.with_threshold(t)))
+        Session {
+            model: Arc::clone(&self.model),
+            policy: self.policy.as_deref().map(|p| Arc::new(p.with_threshold(t))),
+            opts: self.opts,
+            plan: self.plan.clone(),
+            pool: Arc::clone(&self.pool),
+        }
     }
 
     /// A derived session with different execution options (same model,
-    /// same policy).
+    /// same policy); the plan is recompiled for the new options.
     pub fn with_opts(&self, opts: RunOpts) -> Session {
-        Session { opts, ..self.clone() }
+        Session {
+            model: Arc::clone(&self.model),
+            policy: self.policy.clone(),
+            opts,
+            plan: compile_plan(&self.model, self.policy.as_deref(), opts),
+            pool: Arc::clone(&self.pool),
+        }
     }
+}
+
+/// Compile the session's plan (tiled engine only — `ScalarRef` runs the
+/// unplanned reference path).
+fn compile_plan(
+    model: &Model,
+    policy: Option<&MorPolicy>,
+    opts: RunOpts,
+) -> Option<Arc<ModelPlan>> {
+    (opts.engine == EngineSel::Tiled).then(|| Arc::new(plan::compile(model, policy, opts)))
 }
 
 /// Builder for [`Session`]; every knob has the same default as the
@@ -236,8 +333,9 @@ impl<'a> SessionBuilder<'a> {
     }
 
     /// Build the session: clone the model behind an `Arc`, warm its
-    /// prepacked weight blocks (tiled engine), and prepare the policy
-    /// through the configured strategy.
+    /// prepacked weight blocks (tiled engine), prepare the policy
+    /// through the configured strategy, and compile the
+    /// [`crate::plan::ModelPlan`] the request path executes.
     pub fn finish(self) -> Session {
         let model = Arc::new(self.model.clone());
         if self.opts.engine == EngineSel::Tiled {
@@ -248,7 +346,14 @@ impl<'a> SessionBuilder<'a> {
             (_, Strategy::None) | (None, _) => None,
             (Some(p), _) => Some(Arc::new(MorPolicy::new(&model, p, self.cfg))),
         };
-        Session { model, policy, opts: self.opts }
+        let plan = compile_plan(&model, policy.as_deref(), self.opts);
+        Session {
+            model,
+            policy,
+            opts: self.opts,
+            plan,
+            pool: Arc::new(WorkspacePool::new()),
+        }
     }
 }
 
@@ -340,5 +445,51 @@ mod tests {
         let s = Session::build(&m).finish();
         let d = s.with_policy(None);
         assert!(Arc::ptr_eq(&s.model_arc(), &d.model_arc()));
+    }
+
+    #[test]
+    fn tiled_session_compiles_a_plan_scalar_does_not() {
+        let m = synth::tiny_serving_model(17);
+        let tiled = Session::build(&m).finish();
+        assert!(tiled.plan().is_some());
+        let scalar = Session::build(&m).engine(crate::predictor::EngineSel::ScalarRef).finish();
+        assert!(scalar.plan().is_none());
+        // both produce identical logits
+        let x = input(&m, 18);
+        assert_eq!(tiled.run_sample(&x).logits, scalar.run_sample(&x).logits);
+    }
+
+    #[test]
+    fn with_threshold_shares_the_compiled_plan_and_pool() {
+        let m = synth::tiny_serving_model(19);
+        let s = Session::from_artifacts(
+            &synth::artifacts_for(m, 20, 2, 2),
+            PredictorConfig { threshold: 0.9, ..Default::default() },
+        );
+        let t = s.with_threshold(0.3);
+        // a threshold re-plan is free: same plan, same pool
+        assert!(Arc::ptr_eq(s.plan().unwrap(), t.plan().unwrap()));
+        assert!(Arc::ptr_eq(s.workspace_pool(), t.workspace_pool()));
+        // with_opts / with_policy recompile but keep the pool
+        let o = s.with_opts(s.opts());
+        assert!(!Arc::ptr_eq(s.plan().unwrap(), o.plan().unwrap()));
+        assert!(Arc::ptr_eq(s.workspace_pool(), o.workspace_pool()));
+    }
+
+    #[test]
+    fn run_batch_into_reuses_result_buffers() {
+        let m = synth::tiny_serving_model(23);
+        let s = Session::build(&m).finish();
+        let x = input(&m, 24);
+        let xs = [x.as_slice(), x.as_slice()];
+        let mut ws = s.checkout_workspace();
+        let mut results = Vec::new();
+        s.run_batch_into(&mut ws, &xs, &mut results);
+        assert_eq!(results.len(), 2);
+        let want = results[0].logits.clone();
+        let cap_before = results[0].logits.capacity();
+        s.run_batch_into(&mut ws, &xs, &mut results);
+        assert_eq!(results[0].logits, want);
+        assert_eq!(results[0].logits.capacity(), cap_before);
     }
 }

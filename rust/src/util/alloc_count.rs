@@ -1,0 +1,68 @@
+//! Allocation-counting global allocator for the zero-allocation
+//! contracts of the planned forward path ([`crate::plan`]).
+//!
+//! The counter is **per-thread** (const-initialized TLS, so the counter
+//! access itself never allocates and other test threads in the same
+//! process don't disturb a measurement). Each consumer binary installs
+//! it itself — a `#[global_allocator]` must live in the final binary,
+//! not in this library:
+//!
+//! ```ignore
+//! use mor::util::alloc_count::{allocs_on_this_thread, CountingAlloc};
+//!
+//! #[global_allocator]
+//! static COUNTING: CountingAlloc = CountingAlloc;
+//!
+//! let before = allocs_on_this_thread();
+//! // ... steady-state forward ...
+//! assert_eq!(allocs_on_this_thread() - before, 0);
+//! ```
+//!
+//! Used by `rust/tests/plan_contracts.rs` (debug) and
+//! `rust/benches/perf_hotpaths.rs` (release) so both assertions measure
+//! exactly the same thing.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// System allocator wrapper that counts `alloc`/`alloc_zeroed`/`realloc`
+/// calls on the current thread (deallocations are free and not counted).
+pub struct CountingAlloc;
+
+impl CountingAlloc {
+    #[inline]
+    fn bump() {
+        // try_with: TLS may be unavailable during thread teardown —
+        // losing those counts is fine, panicking in the allocator is not
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+    }
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        Self::bump();
+        System.alloc(l)
+    }
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        Self::bump();
+        System.alloc_zeroed(l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
+        Self::bump();
+        System.realloc(p, l, new_size)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+}
+
+/// Heap allocations performed by the current thread since it started
+/// (meaningful only when [`CountingAlloc`] is installed as the global
+/// allocator).
+pub fn allocs_on_this_thread() -> u64 {
+    ALLOCS.with(|c| c.get())
+}

@@ -1,6 +1,7 @@
 //! Substrate utilities implemented in-tree (the offline vendor set has no
 //! serde/clap/rand/proptest/criterion — see DESIGN.md §3).
 
+pub mod alloc_count;
 pub mod bench;
 pub mod bits;
 pub mod json;
@@ -14,6 +15,16 @@ pub mod toml;
 pub fn ceil_div(a: u64, b: u64) -> u64 {
     debug_assert!(b > 0);
     (a + b - 1) / b
+}
+
+/// Grow a vector's capacity to at least `want` elements without touching
+/// its length or contents — the capacity-only warmup idiom the
+/// zero-allocation forward path ([`crate::plan`]) is built on.
+#[inline]
+pub fn reserve_capacity<T>(v: &mut Vec<T>, want: usize) {
+    if v.capacity() < want {
+        v.reserve(want - v.len());
+    }
 }
 
 /// Mean of a slice (0.0 for empty input).

@@ -1,0 +1,285 @@
+//! Contracts of the plan/execute split (`mor::plan`):
+//!
+//! * planned execution is bit-identical to the unplanned `ScalarRef`
+//!   oracle on compile-time edge cases (layers with fewer rows than a
+//!   tile, an all-skip layer under the `oracle` strategy);
+//! * a threshold re-plan (`Session::with_threshold`) reuses the packed
+//!   rookie sign bits AND the compiled plan;
+//! * workspace checkout/return is aliasing-free under concurrent serve
+//!   workers and the pool grows exactly to the peak contention;
+//! * the plan's liveness analysis keeps peak live activation tensors
+//!   per sample O(1), not O(layers);
+//! * the steady-state forward loop performs **zero heap allocations**
+//!   after warmup — asserted with a counting global allocator.
+
+use mor::config::PredictorConfig;
+use mor::model::synth;
+use mor::model::{Model, Node};
+use mor::plan;
+use mor::predictor::strategies::{Strategy, ZeroPredictor};
+use mor::predictor::{exec, EngineSel, RunOpts};
+use mor::session::Session;
+use mor::util::alloc_count::{allocs_on_this_thread, CountingAlloc};
+use mor::util::rng::Rng;
+use std::sync::{Arc, Barrier};
+
+// Per-thread allocation counting (other test threads in this binary
+// don't disturb the measured thread) — see mor::util::alloc_count.
+#[global_allocator]
+static COUNTING: CountingAlloc = CountingAlloc;
+
+fn rand_input(model: &Model, seed: u64) -> Vec<f32> {
+    let (h, w, c) = model.input_shape;
+    let mut rng = Rng::new(seed);
+    (0..h * w * c).map(|_| rng.uniform(-1.0, 1.0) as f32).collect()
+}
+
+fn assert_same(a: &mor::predictor::RunResult, b: &mor::predictor::RunResult, what: &str) {
+    assert_eq!(a.logits, b.logits, "{what}: logits");
+    assert_eq!(a.pred, b.pred, "{what}: pred stats");
+    assert_eq!(a.ops, b.ops, "{what}: ops stats");
+    assert_eq!(a.traces, b.traces, "{what}: traces");
+}
+
+/// Layers whose row count is below `TILE_ROWS` (an FC head has exactly
+/// one output row per sample) must plan and execute bit-exactly — the
+/// ragged "tile" is the only tile.
+#[test]
+fn plan_single_row_layers_match_scalar_oracle() {
+    let model = synth::tiny_serving_model(41); // FC head: 1 row
+    let params = synth::predictor_for(&model, 42);
+    let x = rand_input(&model, 43);
+    for strategy in Strategy::ALL {
+        let base = Session::build(&model)
+            .params(&params)
+            .strategy(strategy)
+            .threshold(0.5)
+            .oracle(true)
+            .collect_trace(true)
+            .finish();
+        let want = base
+            .with_opts(RunOpts { engine: EngineSel::ScalarRef, ..base.opts() })
+            .run_sample(&x);
+        let got = base.run_sample(&x);
+        assert_same(&got, &want, strategy.name());
+    }
+}
+
+/// An FC model whose first layer's folded-BN shift forces every ReLU
+/// input negative: under the `oracle` strategy the whole layer is
+/// skipped (every output is a true zero).
+fn all_zero_layer_model(seed: u64) -> Model {
+    let mut rng = Rng::new(seed);
+    let n = 6usize;
+    let w1: Vec<i8> = (0..8 * n).map(|_| rng.int8()).collect();
+    let w2: Vec<i8> = (0..n * 4).map(|_| rng.int8()).collect();
+    Model::new(
+        "all_zero_l0".into(),
+        1.0 / 127.0,
+        (1, 1, 8),
+        vec![
+            Node::Fc {
+                cin: 8,
+                cout: n,
+                sw: 0.01,
+                sx: 1.0 / 127.0,
+                w: w1,
+                // shift −1000 ≪ any dequantized dot: every pre-activation
+                // is negative, every ReLU output is a true zero
+                bn: Some((vec![1.0; n], vec![-1000.0; n])),
+                relu: true,
+                res_from: None,
+                consumes: -1,
+            },
+            Node::Fc {
+                cin: n,
+                cout: 4,
+                sw: 0.02,
+                sx: 0.05,
+                w: w2,
+                bn: None,
+                relu: false,
+                res_from: None,
+                consumes: 0,
+            },
+        ],
+    )
+}
+
+#[test]
+fn plan_all_skip_layer_under_oracle() {
+    let model = all_zero_layer_model(47);
+    let params = synth::predictor_for(&model, 48);
+    let x = rand_input(&model, 49);
+    let sess = Session::build(&model)
+        .params(&params)
+        .strategy(Strategy::Oracle)
+        .collect_trace(true)
+        .finish();
+    let r = sess.run_sample(&x);
+    let scalar = sess
+        .with_opts(RunOpts { engine: EngineSel::ScalarRef, ..sess.opts() })
+        .run_sample(&x);
+    assert_same(&r, &scalar, "all-skip oracle");
+    // the entire predictable layer was skipped, correctly
+    assert_eq!(r.pred.relu_outputs, 6);
+    assert_eq!(r.pred.correct_zero, 6);
+    assert_eq!(r.pred.incorrect_zero, 0);
+    // only the (non-ReLU) head performed MACs
+    assert_eq!(r.ops.macs_done, 6 * 4);
+    // and the logits equal the dense forward's (skipped zeros ARE zeros)
+    let dense = Session::build(&model).finish().run_sample(&x);
+    assert_eq!(r.logits, dense.logits);
+}
+
+/// `with_threshold` must not re-pack rookie sign bits NOR recompile the
+/// plan — the policied-layer set and every frozen decision survive a
+/// threshold change — and the derived session must match a from-scratch
+/// build at that threshold bit for bit.
+#[test]
+fn threshold_replan_reuses_plan_and_packed_bits() {
+    let model = synth::tiny_serving_model(53);
+    let arts = synth::artifacts_for(model, 54, 2, 2);
+    let cfg = PredictorConfig { threshold: 0.9, ..Default::default() };
+    let base = Session::from_artifacts(&arts, cfg);
+    let derived = base.with_threshold(0.2);
+    assert!(Arc::ptr_eq(base.plan().unwrap(), derived.plan().unwrap()));
+    for (l, st) in &base.policy().unwrap().layers {
+        assert!(Arc::ptr_eq(
+            &st.packed_w,
+            &derived.policy().unwrap().layers[l].packed_w
+        ));
+    }
+    let fresh = Session::from_artifacts(
+        &arts,
+        PredictorConfig { threshold: 0.2, ..Default::default() },
+    );
+    let x = rand_input(fresh.model(), 55);
+    assert_same(&derived.run_sample(&x), &fresh.run_sample(&x), "re-threshold");
+}
+
+/// N workers checking out concurrently get N distinct workspaces (the
+/// pool grows to peak contention), returns land back in the free list,
+/// and a later checkout reuses instead of growing.
+#[test]
+fn workspace_pool_grows_under_contention_without_aliasing() {
+    let model = synth::tiny_serving_model(59);
+    let sess = Session::build(&model).finish();
+    let pool = sess.workspace_pool();
+    const N: usize = 6;
+    let barrier = Arc::new(Barrier::new(N));
+    std::thread::scope(|sc| {
+        for t in 0..N {
+            let sess = sess.clone();
+            let barrier = Arc::clone(&barrier);
+            sc.spawn(move || {
+                let mut ws = sess.checkout_workspace();
+                // hold all N concurrently so the pool must grow to N
+                barrier.wait();
+                // exclusive &mut access: run a real forward in each
+                let x = rand_input(sess.model(), 60 + t as u64);
+                let r = sess.run_batch_in(&mut ws, &[x.as_slice()]);
+                assert_eq!(r.len(), 1);
+                barrier.wait();
+            });
+        }
+    });
+    assert_eq!(pool.created(), N, "pool must grow exactly to peak contention");
+    assert_eq!(pool.available(), N, "every workspace returned on drop");
+    {
+        let _ws = sess.checkout_workspace();
+        assert_eq!(pool.available(), N - 1, "checkout reuses a pooled workspace");
+    }
+    assert_eq!(pool.created(), N, "no growth without contention");
+    assert_eq!(pool.available(), N);
+}
+
+/// The liveness analysis keeps live activation tensors per sample O(1):
+/// a 10-node chain ping-pongs 2 slots; a residual branch adds exactly
+/// one more — never one per layer.
+#[test]
+fn peak_live_tensors_per_sample_is_o1() {
+    let chain = synth::cnn10_like(61);
+    let plan = plan::compile(&chain, None, RunOpts::default());
+    let compute_layers = chain.nodes.iter().filter(|n| n.is_compute()).count();
+    assert_eq!(plan.n_slots, 2, "a pure chain needs exactly 2 ping-pong slots");
+    assert!(compute_layers >= 9, "cnn10_like should be deep");
+    assert!(
+        plan.n_slots < compute_layers,
+        "peak live tensors must not scale with depth"
+    );
+    // random graphs (incl. pools and FC heads) stay O(1) too
+    let mut rng = Rng::new(62);
+    for _ in 0..20 {
+        let m = synth::random_model(&mut rng);
+        let p = plan::compile(&m, None, RunOpts::default());
+        assert!(p.n_slots <= 3, "random model needed {} slots", p.n_slots);
+    }
+}
+
+/// The zero-allocation contract: after warmup, the planned forward
+/// (single-threaded, no tracing — the serving worker configuration)
+/// performs no heap allocation at all: no output tensors, no quantized
+/// buffers, no per-row scratch, no result envelopes.
+#[test]
+fn steady_state_forward_makes_zero_allocations() {
+    let model = synth::tiny_serving_model(67);
+    let params = synth::predictor_for(&model, 68);
+    for strategy in [Strategy::None, Strategy::Mor] {
+        let sess = Session::build(&model)
+            .params(&params)
+            .strategy(strategy)
+            .threshold(0.5)
+            .oracle(false)
+            .collect_trace(false)
+            .threads(1)
+            .finish();
+        let xs: Vec<Vec<f32>> = (0..4).map(|i| rand_input(&model, 70 + i)).collect();
+        let inputs: Vec<&[f32]> = xs.iter().map(|x| x.as_slice()).collect();
+        let mut ws = sess.checkout_workspace();
+        let mut results = Vec::new();
+        // warmup: buffers grow to their high-water marks
+        sess.run_batch_into(&mut ws, &inputs, &mut results);
+        sess.run_batch_into(&mut ws, &inputs, &mut results);
+        let want = results.iter().map(|r| r.logits.clone()).collect::<Vec<_>>();
+
+        let before = allocs_on_this_thread();
+        // steady batches AND fluctuating micro-batch sizes (shrunk
+        // result envelopes park in the workspace and come back): the
+        // lingering batcher's normal behavior must not allocate either
+        for &take in &[4usize, 2, 4, 1, 3, 4] {
+            sess.run_batch_into(&mut ws, &inputs[..take], &mut results);
+            assert_eq!(results.len(), take);
+        }
+        let after = allocs_on_this_thread();
+        assert_eq!(
+            after - before,
+            0,
+            "steady-state forward allocated ({strategy:?} strategy)"
+        );
+        // and it still computes the right thing
+        for (r, w) in results.iter().zip(&want) {
+            assert_eq!(&r.logits, w);
+        }
+    }
+}
+
+/// The free-function path (`exec::run_batch`) compiles a throwaway plan
+/// per call; it must agree with the session's cached-plan path exactly.
+#[test]
+fn session_cached_plan_matches_per_call_compile() {
+    let model = synth::tiny_serving_model(71);
+    let params = synth::predictor_for(&model, 72);
+    let sess = Session::build(&model)
+        .params(&params)
+        .threshold(0.5)
+        .collect_trace(true)
+        .finish();
+    let xs: Vec<Vec<f32>> = (0..5).map(|i| rand_input(&model, 73 + i)).collect();
+    let inputs: Vec<&[f32]> = xs.iter().map(|x| x.as_slice()).collect();
+    let via_session = sess.run_batch(&inputs);
+    let via_exec = exec::run_batch(sess.model(), sess.policy(), &inputs, sess.opts());
+    for (a, b) in via_session.iter().zip(&via_exec) {
+        assert_same(a, b, "session vs free function");
+    }
+}
