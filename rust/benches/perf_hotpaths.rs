@@ -1,10 +1,12 @@
 //! §Perf micro-benchmarks: the host hot paths tracked across the
-//! optimization passes — dot kernels (dense and input-sparse), the
-//! scalar GEMV vs tiled GEMM engine, the full MoR forward at 1/2/4/8
-//! row-tile threads, the dual-sided input-sparsity modes (§Sparse),
-//! and the plan/workspace steady-state path (§Plan): cached-plan
-//! forward vs per-call compile + fresh workspace, with an asserted
-//! zero-allocations-per-request count and the workspace footprint.
+//! optimization passes — dot kernels (dense, input-sparse and
+//! doubly-sparse), the scalar GEMV vs tiled GEMM engine, the full MoR
+//! forward at 1/2/4/8 row-tile threads, the input-sparsity modes
+//! (§Sparse), the weight-sparsity modes on a pruned model
+//! (§Weights, triple-sided MAC split), and the plan/workspace
+//! steady-state path (§Plan): cached-plan forward vs per-call compile +
+//! fresh workspace, with an asserted zero-allocations-per-request count
+//! and the workspace footprint.
 //!
 //! Besides the human-readable report, emits `BENCH_hotpaths.json`
 //! (override the path with `MOR_BENCH_OUT`) so the perf trajectory is
@@ -14,8 +16,9 @@
 mod common;
 
 use mor::config::PredictorConfig;
-use mor::engine::dot::{dot_i8, dot_i8_sparse};
+use mor::engine::dot::{dot_i8, dot_i8_sparse, dot_i8_sparse_sparse};
 use mor::engine::gemm::{self, PrepackedFilters, NR};
+use mor::engine::{crossover, WeightSparsity};
 use mor::model::synth;
 use mor::predictor::strategies::{Strategy, ZeroPredictor};
 use mor::predictor::{exec, EngineSel, InputSparsity, OpsStats, RunOpts};
@@ -193,16 +196,17 @@ fn main() {
         t1 / tiled.iter().find(|(n, _)| *n == 4).map(|(_, t)| t.min_ns).unwrap_or(t1)
     );
 
-    // ---- dual-sided input sparsity (§Sparse) ----------------------------
+    // ---- input sparsity (§Sparse) ----------------------------------------
     // same forward, three kernel modes; results are bit-identical, so the
     // stats come from one run and only wall-clock differs
-    println!("\ninput sparsity (dual-sided) on {model_label}:");
+    println!("\ninput sparsity on {model_label}:");
     let sp_base = RunOpts {
         oracle: false,
         collect_trace: false,
         threads: 1,
         engine: EngineSel::Tiled,
         input_sparsity: InputSparsity::Off,
+        weight_sparsity: WeightSparsity::Off,
     };
     let sp_ops: OpsStats = session.with_opts(sp_base).run_sample(&xs).ops;
     let mut sparse_ms: Vec<(&str, f64)> = Vec::new();
@@ -231,6 +235,87 @@ fn main() {
         sp_ops.macs_saved_frac() * 100.0,
         sp_ops.input_zero_frac() * 100.0,
         gemm::sparse_auto_cutoff()
+    );
+
+    // ---- triple-sided weight sparsity (§Weights) ------------------------
+    // (a) the doubly-sparse index-intersection dot at a few weight
+    // densities (x fixed at 25% dense, matching a post-ReLU activation);
+    // effective GMAC/s counts the full K, like the input-sparse kernel
+    println!("\nweight sparsity (triple-sided):");
+    let (x_idx, x_val): (Vec<u16>, Vec<i8>) = {
+        let (mut idx, mut val) = (Vec::new(), Vec::new());
+        for (i, &v) in x.iter().enumerate() {
+            if (i * 97) % 100 < 25 && v != 0 {
+                idx.push(i as u16);
+                val.push(v);
+            }
+        }
+        (idx, val)
+    };
+    let mut ss_gmacs: Vec<(usize, f64)> = Vec::new();
+    for density_pct in [10usize, 25, 50] {
+        let (mut w_idx, mut w_val) = (Vec::new(), Vec::new());
+        for (i, &v) in w.iter().enumerate() {
+            if (i * 89) % 100 < density_pct && v != 0 {
+                w_idx.push(i as u16);
+                w_val.push(v);
+            }
+        }
+        let t_ss = bench_with(
+            &format!("dot_i8_sparse_sparse (K=576, w {density_pct}% dense, x 25%)"),
+            10,
+            0.2,
+            &mut || {
+                black_box(dot_i8_sparse_sparse(
+                    black_box(&x_idx),
+                    black_box(&x_val),
+                    black_box(&w_idx),
+                    black_box(&w_val),
+                ));
+            },
+        );
+        t_ss.report();
+        let g = k as f64 / t_ss.min_ns;
+        println!("    ≈ {g:.2} effective GMAC/s ({:.2}x vs dense dot)", t_dot.min_ns / t_ss.min_ns);
+        ss_gmacs.push((density_pct, g));
+    }
+
+    // (b) full forward per weight-sparsity mode on a pruned clone of the
+    // workload model (90% zeroed: well past the ≥30%-zero target and
+    // below the crossover on every host, so `exact` swaps kernels);
+    // results are bit-identical, so the triple-sided split comes from
+    // one run and only wall-clock differs
+    let mut wmodel = arts.model.clone();
+    synth::sparsify_weights(&mut wmodel, 31, 90);
+    let w_zero_frac = wmodel.weight_zero_fraction();
+    let wsession = Session::build(&wmodel)
+        .params(&arts.predictor)
+        .threshold(thr)
+        .finish();
+    let w_ops: OpsStats = wsession.with_opts(sp_base).run_sample(&xs).ops;
+    let mut weight_ms: Vec<(&str, f64)> = Vec::new();
+    for (label, mode) in [("off", WeightSparsity::Off), ("exact", WeightSparsity::Exact)] {
+        let sess = wsession.with_opts(RunOpts { weight_sparsity: mode, ..sp_base });
+        let r = sess.run_sample(&xs);
+        assert_eq!(r.ops, w_ops, "weight-sparsity mode changed OpsStats");
+        let t = bench_with(
+            &format!("{model_label} (90% zero wt) MoR fwd, --weight-sparsity {label}"),
+            1,
+            0.3,
+            &mut || {
+                black_box(sess.run_sample(black_box(&xs)));
+            },
+        );
+        t.report();
+        weight_ms.push((label, t.min_ns / 1e6));
+    }
+    println!(
+        "    weight-zero {:.1}% of done MACs | input-zero {:.1}% | output-pred saved {:.1}% \
+         of total | weight cutoff {:.2}",
+        w_ops.weight_zero_frac() * 100.0,
+        w_ops.input_zero_frac() * 100.0,
+        w_ops.macs_saved_frac() * 100.0,
+        crossover::weight_sparse_cutoff()
     );
 
     // ---- plan & workspace steady state (§Plan) --------------------------
@@ -332,8 +417,9 @@ fn main() {
         "  \"gemm_vs_gemv_speedup\": {:.4},\n",
         t_gemv.min_ns / t_gemm.min_ns
     ));
-    // dual-sided accounting: output-prediction savings vs input-zero
-    // (ineffectual) MACs, plus per-mode forward wall-clock
+    // input-side accounting: output-prediction savings vs input-zero
+    // (ineffectual) MACs, plus per-mode forward wall-clock (the full
+    // triple-sided split lives in the weight_sparsity object below)
     js.push_str("  \"input_sparsity\": {\n");
     js.push_str(&format!(
         "    \"auto_cutoff\": {:.2},\n",
@@ -356,6 +442,50 @@ fn main() {
     js.push_str(&format!("    \"effectual_macs\": {},\n", sp_ops.effectual_macs()));
     js.push_str("    \"forward_ms\": {");
     for (i, (label, ms)) in sparse_ms.iter().enumerate() {
+        if i > 0 {
+            js.push_str(", ");
+        }
+        js.push_str(&format!("\"{label}\": {ms:.4}"));
+    }
+    js.push_str("}\n  },\n");
+    // triple-sided accounting on the pruned model: output-prediction,
+    // input-zero and weight-zero savings, per-mode wall-clock, and the
+    // doubly-sparse intersection dot's throughput by weight density
+    js.push_str("  \"weight_sparsity\": {\n");
+    js.push_str(&format!(
+        "    \"weight_cutoff\": {:.2},\n",
+        crossover::weight_sparse_cutoff()
+    ));
+    js.push_str(&format!("    \"model_weight_zero_frac\": {w_zero_frac:.4},\n"));
+    js.push_str(&format!("    \"macs_total\": {},\n", w_ops.macs_total));
+    js.push_str(&format!("    \"macs_done\": {},\n", w_ops.macs_done));
+    js.push_str(&format!(
+        "    \"macs_saved_output_pred\": {},\n",
+        w_ops.macs_total - w_ops.macs_done
+    ));
+    js.push_str(&format!(
+        "    \"macs_skipped_input_zero\": {},\n",
+        w_ops.macs_skipped_input_zero
+    ));
+    js.push_str(&format!(
+        "    \"macs_skipped_weight_zero\": {},\n",
+        w_ops.macs_skipped_weight_zero
+    ));
+    js.push_str(&format!(
+        "    \"weight_zero_frac_of_done\": {:.4},\n",
+        w_ops.weight_zero_frac()
+    ));
+    js.push_str(&format!("    \"effectual_macs\": {},\n", w_ops.effectual_macs()));
+    js.push_str("    \"sparse_sparse_dot_gmacs\": {");
+    for (i, (d, g)) in ss_gmacs.iter().enumerate() {
+        if i > 0 {
+            js.push_str(", ");
+        }
+        js.push_str(&format!("\"{d}\": {g:.4}"));
+    }
+    js.push_str("},\n");
+    js.push_str("    \"forward_ms\": {");
+    for (i, (label, ms)) in weight_ms.iter().enumerate() {
         if i > 0 {
             js.push_str(", ");
         }

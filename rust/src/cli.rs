@@ -123,10 +123,16 @@ COMMANDS:
                  --input-sparsity <m>  input-zero lane skipping: auto|on|off
                                        (default: auto; bit-identical either way,
                                        see EXPERIMENTS.md §Sparse)
+                 --weight-sparsity <m> weight-zero lane elision: off|exact|<t>
+                                       (default: off; exact is bit-identical,
+                                       a numeric threshold t magnitude-prunes
+                                       weights below t and reports the accuracy
+                                       delta, see EXPERIMENTS.md §Weights)
                  --samples <n>         cap evaluated samples
     simulate   Cycle-level accelerator simulation (baseline vs MoR)
                  --model/--artifacts/--predictor/--threshold as above
                  --input-sparsity <m>  as above
+                 --weight-sparsity <m> as above
                  --config <file>       accelerator TOML (default: Table 1)
                  --samples <n>         samples to simulate (default: 16)
     figures    Regenerate paper figures/tables
@@ -136,6 +142,7 @@ COMMANDS:
                  --out <dir>           CSV output directory (default: figures_out)
                  --predictor <name>    strategy for fig13/simulate paths
                  --input-sparsity <m>  input-zero lane skipping: auto|on|off
+                 --weight-sparsity <m> weight-zero lane elision: off|exact|<t>
     serve      Run the serving coordinator on a synthetic request stream
                  --model <name>        model to serve (default: tds)
                  --rps <r>             request rate (default: 200)
@@ -154,6 +161,7 @@ COMMANDS:
                                        (default: workers * max-batch)
                  --predictor <name>    skip strategy (default: mor)
                  --input-sparsity <m>  input-zero lane skipping: auto|on|off
+                 --weight-sparsity <m> weight-zero lane elision: off|exact|<t>
                  --no-predictor        serve the dense baseline (alias for
                                        --predictor none)
                  --runtime pjrt|engine execution backend (default: engine;

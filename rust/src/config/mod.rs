@@ -1,10 +1,12 @@
 //! Configuration system: accelerator (Table 1), predictor, host-engine
 //! and workload parameters, loadable from TOML files (configs/*.toml)
 //! with CLI overrides. Accelerator/DRAM defaults are *exactly* the
-//! paper's Table 1; `[engine]` holds host-side kernel knobs (input
-//! sparsity) that never change results.
+//! paper's Table 1; `[engine]` holds host-side kernel knobs. Input
+//! sparsity and `weight_sparsity = "exact"` never change results; a
+//! numeric `weight_sparsity` threshold prunes small weights and *does*
+//! change them (accuracy is measured and reported by `mor run`).
 
-use crate::engine::InputSparsity;
+use crate::engine::{InputSparsity, WeightSparsity};
 use crate::predictor::strategies::Strategy;
 use crate::util::toml::Toml;
 use anyhow::{Context, Result};
@@ -157,15 +159,22 @@ impl Default for PredictorConfig {
     }
 }
 
-/// Host engine configuration (kernel selection knobs — never affects
-/// results, only how the functional engine executes them).
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+/// Host engine configuration (kernel selection knobs; everything except
+/// a numeric weight-sparsity threshold is result-neutral).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct EngineConfig {
     /// Input-side sparsity mode for the tiled engine: skip zero-valued
     /// input activation lanes via the compressed-lane kernels. TOML key
     /// `engine.input_sparsity` (`"auto"`/`"on"`/`"off"`), CLI
     /// `--input-sparsity`. All modes are bit-identical.
     pub input_sparsity: InputSparsity,
+    /// Weight-side sparsity mode: elide zero weight lanes via the
+    /// compressed-weight kernels. TOML key `engine.weight_sparsity` —
+    /// `"off"`, `"exact"` (bit-identical by construction), or a number
+    /// `t > 0` (magnitude-prune lanes with dequantized `|w|·sw < t` at
+    /// session build; changes results, accuracy is reported). CLI
+    /// `--weight-sparsity`.
+    pub weight_sparsity: WeightSparsity,
 }
 
 /// Top-level config bundle.
@@ -212,6 +221,22 @@ impl Config {
             }
             None => d.engine.input_sparsity,
         };
+        // string ("off"/"exact") or numeric threshold — both spellings
+        // funnel through WeightSparsity::parse's validation
+        let weight_sparsity = match t.get("engine.weight_sparsity") {
+            Some(v) => match v.as_str() {
+                Some(name) => WeightSparsity::parse(name)?,
+                None => {
+                    let num = v.as_f64().ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "engine.weight_sparsity must be \"off\", \"exact\" or a number"
+                        )
+                    })?;
+                    WeightSparsity::parse(&format!("{num}"))?
+                }
+            },
+            None => d.engine.weight_sparsity,
+        };
         Ok(Config {
             accel: AcceleratorConfig {
                 frequency_mhz: t.i64_or("accelerator.frequency_mhz", d.accel.frequency_mhz as i64) as u64,
@@ -252,7 +277,7 @@ impl Config {
                     d.predictor.margin_sigmas as f64,
                 ) as f32,
             },
-            engine: EngineConfig { input_sparsity },
+            engine: EngineConfig { input_sparsity, weight_sparsity },
         })
     }
 
@@ -358,6 +383,37 @@ mod tests {
         );
         let bad = Toml::parse("[engine]\ninput_sparsity = \"dense\"\n").unwrap();
         assert!(Config::from_toml(&bad).is_err());
+    }
+
+    #[test]
+    fn toml_engine_weight_sparsity_key() {
+        // default off; both string and numeric spellings accepted
+        assert_eq!(Config::default().engine.weight_sparsity, WeightSparsity::Off);
+        let t = Toml::parse("[engine]\nweight_sparsity = \"exact\"\n").unwrap();
+        assert_eq!(
+            Config::from_toml(&t).unwrap().engine.weight_sparsity,
+            WeightSparsity::Exact
+        );
+        let t = Toml::parse("[engine]\nweight_sparsity = 0.02\n").unwrap();
+        assert_eq!(
+            Config::from_toml(&t).unwrap().engine.weight_sparsity,
+            WeightSparsity::Threshold(0.02)
+        );
+        // integers work too (1 → threshold 1.0)
+        let t = Toml::parse("[engine]\nweight_sparsity = 1\n").unwrap();
+        assert_eq!(
+            Config::from_toml(&t).unwrap().engine.weight_sparsity,
+            WeightSparsity::Threshold(1.0)
+        );
+        for bad in [
+            "[engine]\nweight_sparsity = \"dense\"\n",
+            "[engine]\nweight_sparsity = -0.5\n",
+            "[engine]\nweight_sparsity = 0\n",
+            "[engine]\nweight_sparsity = true\n",
+        ] {
+            let t = Toml::parse(bad).unwrap();
+            assert!(Config::from_toml(&t).is_err(), "{bad} should be rejected");
+        }
     }
 
     #[test]

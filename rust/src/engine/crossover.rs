@@ -1,0 +1,108 @@
+//! Sparse-kernel crossover points — the single home for every
+//! "compressed vs dense" density cutoff (they used to live as literals
+//! scattered through `gemm.rs` and `plan/compile.rs`).
+//!
+//! ## Rationale
+//!
+//! The dense kernel ([`super::dot::dot_i8`]) streams every lane; with
+//! AVX2 it retires ~16 MACs per `vpmaddwd` and is limited by loads, so
+//! its per-lane cost is tiny. The compressed kernels
+//! ([`super::dot::dot_i8_sparse`] and friends) pay an indexed gather
+//! per *nonzero* lane: cheaper only when enough lanes are zero. The
+//! break-even density was measured with `cargo bench` (perf_hotpaths,
+//! EXPERIMENTS.md §Sparse): the sparse kernel wins below ~20% nonzero
+//! density against the AVX2 dense kernel, and below ~75% against the
+//! scalar fallback (where the dense kernel has no SIMD advantage).
+//!
+//! The *weight*-sparse kernel is the same gather loop under an operand
+//! swap — a compressed filter walking a dense patch instead of a
+//! compressed patch walking a dense filter — so its break-even point
+//! against the same dense kernel is the same, and the weight-side
+//! cutoffs deliberately share the input-side constants. They are named
+//! separately because they are *used* differently: the input cutoff is
+//! applied per tile row at execute time (activation density is data),
+//! while the weight cutoff is applied per layer at plan-compile time
+//! (weight density is frozen at prepack).
+//!
+//! All cutoffs are host-performance knobs only: the kernels they choose
+//! between are bit-identical (zero lanes contribute exactly 0 to the
+//! integer dot).
+
+/// Nonzero-density cutoff for the per-row compressed-*input* kernel
+/// against the AVX2 dense kernel.
+pub const INPUT_CUTOFF_AVX2: f32 = 0.20;
+/// ... and against the scalar dense fallback (no SIMD to beat, so the
+/// compressed kernel stays profitable much longer).
+pub const INPUT_CUTOFF_SCALAR: f32 = 0.75;
+/// Nonzero-density cutoff for the per-layer compressed-*weight* kernel
+/// against the AVX2 dense kernel — shared with the input side because
+/// the kernel is the same gather loop under an operand swap.
+pub const WEIGHT_CUTOFF_AVX2: f32 = INPUT_CUTOFF_AVX2;
+/// ... and against the scalar dense fallback.
+pub const WEIGHT_CUTOFF_SCALAR: f32 = INPUT_CUTOFF_SCALAR;
+
+/// The input-side crossover for this host (AVX2-detected at runtime):
+/// a tile row with `nnz/k_len` below this should take the
+/// compressed-lane kernel under `InputSparsity::Auto`.
+#[inline]
+pub fn input_sparse_cutoff() -> f32 {
+    if avx2() {
+        INPUT_CUTOFF_AVX2
+    } else {
+        INPUT_CUTOFF_SCALAR
+    }
+}
+
+/// The weight-side crossover for this host: a layer whose prepacked
+/// nonzero-weight density is below this should bake the weight-sparse
+/// kernel into its `ModelPlan` step (under `WeightSparsity::Exact` /
+/// `Threshold`).
+#[inline]
+pub fn weight_sparse_cutoff() -> f32 {
+    if avx2() {
+        WEIGHT_CUTOFF_AVX2
+    } else {
+        WEIGHT_CUTOFF_SCALAR
+    }
+}
+
+#[inline]
+fn avx2() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        super::dot::avx2_enabled()
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cutoffs_are_sane_fractions() {
+        for c in [
+            INPUT_CUTOFF_AVX2,
+            INPUT_CUTOFF_SCALAR,
+            WEIGHT_CUTOFF_AVX2,
+            WEIGHT_CUTOFF_SCALAR,
+            input_sparse_cutoff(),
+            weight_sparse_cutoff(),
+        ] {
+            assert!(c > 0.0 && c < 1.0, "cutoff {c} must be a density fraction");
+        }
+        // the SIMD dense kernel is harder to beat: its cutoff is lower
+        assert!(INPUT_CUTOFF_AVX2 < INPUT_CUTOFF_SCALAR);
+        assert!(WEIGHT_CUTOFF_AVX2 < WEIGHT_CUTOFF_SCALAR);
+    }
+
+    #[test]
+    fn weight_and_input_sides_share_the_operand_swap_constants() {
+        assert_eq!(WEIGHT_CUTOFF_AVX2, INPUT_CUTOFF_AVX2);
+        assert_eq!(WEIGHT_CUTOFF_SCALAR, INPUT_CUTOFF_SCALAR);
+        assert_eq!(weight_sparse_cutoff(), input_sparse_cutoff());
+    }
+}

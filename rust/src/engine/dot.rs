@@ -8,7 +8,12 @@
 //! [`dot_i8_sparse`] is the input-zero-skipping variant (EXPERIMENTS.md
 //! §Sparse): it consumes a compressed nonzero-lane list instead of the
 //! dense activation vector and is **exact** — the lanes it elides are
-//! zero, and integer addition of zero products changes nothing.
+//! zero, and integer addition of zero products changes nothing. The
+//! same kernel doubles as the *weight*-zero-skipping variant under an
+//! operand swap (a compressed filter against a dense patch), and
+//! [`dot_i8_sparse_sparse`] closes the doubly-sparse corner where a
+//! compressed filter meets a compressed patch (EXPERIMENTS.md
+//! §Weights).
 
 /// int8 dot product with int32 accumulation (never overflows for
 /// K ≤ 2^16: |x·w| ≤ K · 127² < 2^31).
@@ -117,6 +122,49 @@ pub fn dot_i8_sparse(idx: &[u16], val: &[i8], w: &[i8]) -> i32 {
         acc += (val[j] as i16 * w[idx[j] as usize] as i16) as i32;
     }
     acc
+}
+
+/// Doubly-sparse int8 dot product: two compressed nonzero-lane lists,
+/// both sorted ascending by lane index (gather and prepack both build
+/// them by a linear scan, so this holds by construction), merged with a
+/// two-pointer walk — only lanes present in **both** lists multiply.
+/// Bit-identical to `dot_i8(x, w)` when the lists exactly cover the
+/// nonzero lanes of `x` and `w`: every elided product has a zero factor.
+///
+/// §Weights: cost is O(nnz_x + nnz_w) independent of K — the
+/// multiplicative-sparsity payoff Cnvlutin2/SparseNN predict. Exact for
+/// K ≤ 2^16 (same i32 bound as `dot_i8`).
+#[inline]
+pub fn dot_i8_sparse_sparse(a_idx: &[u16], a_val: &[i8], b_idx: &[u16], b_val: &[i8]) -> i32 {
+    debug_assert_eq!(a_idx.len(), a_val.len());
+    debug_assert_eq!(b_idx.len(), b_val.len());
+    let (mut i, mut j) = (0usize, 0usize);
+    let mut acc = 0i32;
+    while i < a_idx.len() && j < b_idx.len() {
+        let (ai, bj) = (a_idx[i], b_idx[j]);
+        if ai == bj {
+            acc += (a_val[i] as i16 * b_val[j] as i16) as i32;
+            i += 1;
+            j += 1;
+        } else if ai < bj {
+            i += 1;
+        } else {
+            j += 1;
+        }
+    }
+    acc
+}
+
+/// Lanes where the activation is nonzero but the weight is zero — the
+/// ineffectual-weight pool among *performed* MACs, disjoint from the
+/// input-zero pool (`x == 0` lanes) by construction. Both engines count
+/// `OpsStats::macs_skipped_weight_zero` with exactly this definition:
+/// the scalar reference calls this directly; the tiled engine computes
+/// the same quantity as `nnz(x) - popcount(nzmask(x) & wmask(w))`.
+#[inline]
+pub fn weight_zero_lanes(x: &[i8], w: &[i8]) -> u64 {
+    debug_assert_eq!(x.len(), w.len());
+    x.iter().zip(w).filter(|&(&xv, &wv)| xv != 0 && wv == 0).count() as u64
 }
 
 /// Quantize a float slice to int8 with round-half-away and saturation,
@@ -236,6 +284,79 @@ mod tests {
         let val = vec![-128i8; k];
         let w = vec![-128i8; k];
         assert_eq!(dot_i8_sparse(&idx, &val, &w), 128 * 128 * k as i32);
+    }
+
+    #[test]
+    fn sparse_sparse_dot_matches_dense_at_every_density_pair() {
+        property("dot_i8_sparse_sparse == dot_i8 on compressed pairs", 300, |g| {
+            let n = g.usize(0, 600);
+            let keep_x = g.usize(0, 100);
+            let keep_w = g.usize(0, 100);
+            let mk = |g: &mut crate::util::prop::Gen, keep: usize| -> Vec<i8> {
+                (0..n)
+                    .map(|_| if g.usize(0, 99) < keep { g.rng().int8() } else { 0 })
+                    .collect()
+            };
+            let x = mk(g, keep_x);
+            let w = mk(g, keep_w);
+            let (xi, xv) = compress(&x);
+            let (wi, wv) = compress(&w);
+            let got = dot_i8_sparse_sparse(&xi, &xv, &wi, &wv);
+            let want = dot_i8(&x, &w);
+            crate::prop_assert!(
+                g,
+                got == want,
+                "n={n} nnz_x={} nnz_w={} got={got} want={want}",
+                xi.len(),
+                wi.len()
+            );
+            // operand order is symmetric
+            let swapped = dot_i8_sparse_sparse(&wi, &wv, &xi, &xv);
+            crate::prop_assert!(g, swapped == want, "swap got={swapped} want={want}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sparse_sparse_dot_empty_and_disjoint() {
+        assert_eq!(dot_i8_sparse_sparse(&[], &[], &[0, 1], &[5, 5]), 0);
+        assert_eq!(dot_i8_sparse_sparse(&[0, 2], &[3, 3], &[], &[]), 0);
+        // disjoint supports never multiply
+        assert_eq!(dot_i8_sparse_sparse(&[0, 2, 4], &[7, 7, 7], &[1, 3, 5], &[7, 7, 7]), 0);
+    }
+
+    #[test]
+    fn sparse_sparse_dot_extreme_no_overflow() {
+        let k = 1440usize;
+        let idx: Vec<u16> = (0..k as u16).collect();
+        let val = vec![-128i8; k];
+        assert_eq!(
+            dot_i8_sparse_sparse(&idx, &val, &idx, &val),
+            128 * 128 * k as i32
+        );
+    }
+
+    #[test]
+    fn weight_zero_lanes_counts_only_live_x_dead_w() {
+        //        x: 1  0  2  0  3
+        //        w: 0  0  5  6  0
+        // wz lanes: ^           ^   (x != 0 && w == 0)
+        assert_eq!(weight_zero_lanes(&[1, 0, 2, 0, 3], &[0, 0, 5, 6, 0]), 2);
+        assert_eq!(weight_zero_lanes(&[], &[]), 0);
+        property("weight_zero_lanes + effectual + x-zero == K", 100, |g| {
+            let n = g.usize(0, 300);
+            let x = g.vec_i8(n);
+            let w = g.vec_i8(n);
+            let wz = weight_zero_lanes(&x, &w);
+            let xz = x.iter().filter(|&&v| v == 0).count() as u64;
+            let eff = x
+                .iter()
+                .zip(&w)
+                .filter(|&(&xv, &wv)| xv != 0 && wv != 0)
+                .count() as u64;
+            crate::prop_assert!(g, wz + xz + eff == n as u64, "lanes must partition K");
+            Ok(())
+        });
     }
 
     #[test]

@@ -15,17 +15,27 @@
 //! kernels running at full occupancy even when each request contributes
 //! only a handful of rows (e.g. an FC layer's single row per request).
 //!
-//! The engine is dual-sided sparse: besides the predictor's output-side
-//! skipping, [`PatchTile`] optionally carries a compressed nonzero-lane
-//! list per patch, and the `*_sparse` kernel variants iterate only those
-//! lanes — Cnvlutin2/SparseNN-style ineffectual-input elision, selected
-//! per tile row by a density crossover ([`sparse_auto_cutoff`]).
+//! The engine is triple-sided sparse: besides the predictor's
+//! output-side skipping, [`PatchTile`] optionally carries a compressed
+//! nonzero-lane list per patch and the `*_sparse` kernel variants
+//! iterate only those lanes — Cnvlutin2/SparseNN-style
+//! ineffectual-input elision, selected per tile row by a density
+//! crossover ([`sparse_auto_cutoff`]) — and [`PrepackedFilters`]
+//! carries a compressed nonzero-lane list per *filter*, which the
+//! `*_wsparse` kernel variants walk instead of the dense weight row
+//! (Cnvlutin2's weight-lane elision), selected per layer at
+//! plan-compile time from the frozen prepack density
+//! ([`crate::engine::crossover::weight_sparse_cutoff`]). Where a
+//! compressed filter meets a compressed patch the `*_wsparse_x`
+//! variants run the doubly-sparse index-intersection dot
+//! ([`dot::dot_i8_sparse_sparse`]).
 //!
 //! All kernels are exact int8×int8→int32 sums, so the tiled engine is
 //! bit-identical to the scalar reference path by construction — the
 //! property suite in `rust/tests/engine_equivalence.rs` proves it, and
-//! `rust/tests/input_sparsity.rs` proves the sparse/dense kernel choice
-//! is invisible in logits, stats and traces.
+//! `rust/tests/input_sparsity.rs` / `rust/tests/weight_sparsity.rs`
+//! prove the sparse/dense kernel choices are invisible in logits,
+//! stats and traces.
 
 use crate::engine::dot;
 use crate::model::{Model, Node};
@@ -50,12 +60,45 @@ pub fn pad_k(k_len: usize) -> usize {
 /// to [`K_ALIGN`] so the micro-kernel needs no tail handling. Padding lanes
 /// multiply against zero patch lanes and contribute nothing, keeping every
 /// dot product exactly equal to the unpadded `dot_i8`.
+///
+/// Alongside the dense layout the prepack scans every filter for zero
+/// weight lanes and records, per filter:
+///
+/// * a nonzero-weight **bitmask** ([`PrepackedFilters::wmask`],
+///   [`PrepackedFilters::mask_words`] u64 words per filter, bits beyond
+///   `k_len` clear) — intersected with the tile's nonzero-activation
+///   mask for the engine-independent `macs_skipped_weight_zero`
+///   accounting;
+/// * a compressed **lane list** ([`PrepackedFilters::lanes`], `(u16
+///   idx, i8 w)` sorted ascending by lane — the mirror of
+///   [`PatchTile::lanes`]) that the `*_wsparse` kernels walk instead of
+///   the dense row. Lists are only built when `k_len` fits the u16
+///   index range ([`SPARSE_K_MAX`]; [`PrepackedFilters::has_lanes`]),
+///   exactly like the input side's fallback.
+///
+/// Both views describe **true zeros** in the weights as loaded — any
+/// magnitude pruning (`WeightSparsity::Threshold`) has already zeroed
+/// lanes at session build, so one compressed format serves the `exact`
+/// and `threshold` modes alike, and the prepack stays config-free.
 #[derive(Clone, Debug)]
 pub struct PrepackedFilters {
     pub cout: usize,
     pub k_len: usize,
     pub k_pad: usize,
     data: Vec<i8>,
+    /// Nonzero-weight bitmask, `mask_words` words per filter.
+    w_mask: Vec<u64>,
+    /// u64 words per filter in `w_mask` (= `k_len.div_ceil(64)`).
+    mask_words: usize,
+    /// Compressed weight lanes: filter `f` owns
+    /// `w_idx[w_off[f]..w_off[f+1]]` / `w_val[..]`. Empty (with
+    /// `w_off` empty) when `k_len > SPARSE_K_MAX`.
+    w_idx: Vec<u16>,
+    w_val: Vec<i8>,
+    w_off: Vec<usize>,
+    /// Nonzero weight lanes across all filters (mask popcount — present
+    /// even when the lane lists are not).
+    nnz_total: usize,
 }
 
 impl PrepackedFilters {
@@ -63,15 +106,46 @@ impl PrepackedFilters {
         let k_len = node.k_len();
         let cout = node.cout();
         let k_pad = pad_k(k_len);
+        let mask_words = k_len.div_ceil(64);
+        let build_lanes = k_len <= SPARSE_K_MAX;
         let mut data = vec![0i8; cout * k_pad];
+        let mut w_mask = vec![0u64; cout * mask_words];
+        let mut w_idx = Vec::new();
+        let mut w_val = Vec::new();
+        let mut w_off = Vec::new();
+        if build_lanes {
+            w_off.reserve(cout + 1);
+            w_off.push(0);
+        }
+        let mut nnz_total = 0usize;
         for f in 0..cout {
             data[f * k_pad..f * k_pad + k_len].copy_from_slice(node.filter(f));
+            let mask = &mut w_mask[f * mask_words..(f + 1) * mask_words];
+            for (k, &w) in node.filter(f).iter().enumerate() {
+                if w != 0 {
+                    mask[k / 64] |= 1u64 << (k % 64);
+                    nnz_total += 1;
+                    if build_lanes {
+                        w_idx.push(k as u16);
+                        w_val.push(w);
+                    }
+                }
+            }
+            if build_lanes {
+                w_off.push(w_idx.len());
+            }
         }
         PrepackedFilters {
             cout,
             k_len,
             k_pad,
             data,
+            w_mask,
+            mask_words,
+            w_idx,
+            w_val,
+            w_off,
+            nnz_total,
         }
     }
 
@@ -80,6 +154,55 @@ impl PrepackedFilters {
     pub fn filter(&self, f: usize) -> &[i8] {
         &self.data[f * self.k_pad..(f + 1) * self.k_pad]
     }
+
+    /// Nonzero-weight bitmask of filter `f` ([`PrepackedFilters::mask_words`]
+    /// u64 words, bits beyond `k_len` clear).
+    #[inline]
+    pub fn wmask(&self, f: usize) -> &[u64] {
+        &self.w_mask[f * self.mask_words..(f + 1) * self.mask_words]
+    }
+
+    /// u64 words per filter bitmask (= `k_len.div_ceil(64)`).
+    #[inline]
+    pub fn mask_words(&self) -> usize {
+        self.mask_words
+    }
+
+    /// Whether the per-filter compressed lane lists were built (`k_len`
+    /// within the u16 index range — mirrors [`PatchTile::has_sparse`]).
+    #[inline]
+    pub fn has_lanes(&self) -> bool {
+        !self.w_off.is_empty()
+    }
+
+    /// Compressed nonzero weight lanes of filter `f`: `(indices,
+    /// values)`, sorted ascending by lane index. Only valid when
+    /// [`PrepackedFilters::has_lanes`] is true.
+    #[inline]
+    pub fn lanes(&self, f: usize) -> (&[u16], &[i8]) {
+        let (a, b) = (self.w_off[f], self.w_off[f + 1]);
+        (&self.w_idx[a..b], &self.w_val[a..b])
+    }
+
+    /// Nonzero-weight density across the whole layer (`1.0` for a layer
+    /// with no zero lane; `0.0` for an all-zero layer) — the quantity
+    /// the plan compiler compares against
+    /// [`crate::engine::crossover::weight_sparse_cutoff`].
+    #[inline]
+    pub fn density(&self) -> f32 {
+        self.nnz_total as f32 / (self.cout * self.k_len).max(1) as f32
+    }
+}
+
+/// Popcount of the lane-wise AND of two equal-length bitmasks — the
+/// number of lanes nonzero in **both** a patch and a filter. The tiled
+/// engine's weight-zero accounting is
+/// `nnz(x) - masked_nnz(xmask, wmask)`, identical by construction to
+/// the scalar reference's [`dot::weight_zero_lanes`] scan.
+#[inline]
+pub fn masked_nnz(a: &[u64], b: &[u64]) -> u64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| (x & y).count_ones() as u64).sum()
 }
 
 /// Prepacked weight blocks for every compute node of a model, built once
@@ -135,6 +258,12 @@ pub struct PatchTile {
     nz_val: Vec<i8>,
     /// Whether the compressed-lane builder is active for this layer.
     sparse: bool,
+    /// Nonzero-activation bitmask per row, `mask_words` words per row
+    /// (always tracked, copied from `PatchGather::nzmask` — feeds the
+    /// `macs_skipped_weight_zero` accounting via [`masked_nnz`]).
+    xmask: Vec<u64>,
+    /// u64 words per row bitmask (= `k_len.div_ceil(64)`).
+    mask_words: usize,
 }
 
 /// Largest dot length the compressed u16 lane indices can address.
@@ -164,6 +293,8 @@ impl PatchTile {
             nz_idx: Vec::new(),
             nz_val: Vec::new(),
             sparse: false,
+            xmask: Vec::new(),
+            mask_words: 0,
         }
     }
 
@@ -192,6 +323,9 @@ impl PatchTile {
             p.len = k_len;
         }
         self.nnz = [0; TILE_ROWS];
+        self.mask_words = words;
+        self.xmask.clear();
+        self.xmask.resize(TILE_ROWS * words, 0);
         if self.sparse {
             // no clear: `lanes(r)` only ever reads the prefix `set_row`
             // wrote for row r, so stale tails need no re-zeroing — this
@@ -216,14 +350,16 @@ impl PatchTile {
             reserve_capacity(&mut p.bits, words);
             reserve_capacity(&mut p.valid, words);
         }
+        reserve_capacity(&mut self.xmask, TILE_ROWS * words);
         let lk = lanes_k_len.min(SPARSE_K_MAX);
         reserve_capacity(&mut self.nz_idx, TILE_ROWS * lk);
         reserve_capacity(&mut self.nz_val, TILE_ROWS * lk);
     }
 
-    /// Store one gathered patch (its packed sign plane, nonzero count
-    /// and — when `build_lanes` is set — compressed lane lists) as tile
-    /// row `r`. `nnz` is the patch's nonzero-lane count, tracked by
+    /// Store one gathered patch (its packed sign plane, nonzero-lane
+    /// bitmask, nonzero count and — when `build_lanes` is set —
+    /// compressed lane lists) as tile row `r`. `nnz` and `nzmask` are
+    /// the patch's nonzero-lane count and bitmask, tracked by
     /// [`crate::engine::PatchGather`] during the gather.
     ///
     /// `build_lanes` is the caller's per-row kernel decision: the
@@ -238,15 +374,18 @@ impl PatchTile {
         patch: &[i8],
         packed: &PackedVec,
         nnz: usize,
+        nzmask: &[u64],
         build_lanes: bool,
     ) {
         debug_assert_eq!(patch.len(), self.k_len);
+        debug_assert_eq!(nzmask.len(), self.mask_words);
         self.data[r * self.k_pad..r * self.k_pad + self.k_len].copy_from_slice(patch);
         let p = &mut self.packed[r];
         p.bits.copy_from_slice(&packed.bits);
         p.valid.copy_from_slice(&packed.valid);
         p.len = packed.len;
         self.nnz[r] = nnz;
+        self.xmask[r * self.mask_words..(r + 1) * self.mask_words].copy_from_slice(nzmask);
         if build_lanes && self.sparse {
             let base = r * self.k_len;
             let mut n = 0usize;
@@ -279,6 +418,15 @@ impl PatchTile {
         self.nnz[r]
     }
 
+    /// Nonzero-activation bitmask of tile row `r`'s patch
+    /// ([`mask_words`](PatchTile::reset) u64 words, bits beyond `k_len`
+    /// clear) — [`masked_nnz`] against a filter's
+    /// [`PrepackedFilters::wmask`] yields the effectual-lane count.
+    #[inline]
+    pub fn xmask(&self, r: usize) -> &[u64] {
+        &self.xmask[r * self.mask_words..(r + 1) * self.mask_words]
+    }
+
     /// Whether the compressed-lane lists are being built for this tile.
     #[inline]
     pub fn has_sparse(&self) -> bool {
@@ -295,6 +443,7 @@ impl PatchTile {
                 .sum::<usize>()
             + self.nz_idx.capacity() * 2
             + self.nz_val.capacity()
+            + self.xmask.capacity() * 8
     }
 
     /// Compressed nonzero lanes of tile row `r`: `(indices, values)`,
@@ -391,21 +540,91 @@ pub fn dot_block_indexed_sparse(
     }
 }
 
+/// Weight-sparse block: evaluate a contiguous block of `nf <= NR`
+/// **compressed** filters (`f0..f0+nf`, lanes from
+/// [`PrepackedFilters::lanes`]) against one dense padded patch —
+/// [`dot::dot_i8_sparse`] under an operand swap. Exact: the elided
+/// weight lanes are zero, so `out` is bit-identical to [`dot_block`]'s.
+pub fn dot_block_wsparse(
+    patch: &[i8],
+    pf: &PrepackedFilters,
+    f0: usize,
+    nf: usize,
+    out: &mut [i32; NR],
+) {
+    debug_assert!(nf <= NR && f0 + nf <= pf.cout);
+    debug_assert!(pf.has_lanes());
+    for (j, o) in out.iter_mut().enumerate().take(nf) {
+        let (wi, wv) = pf.lanes(f0 + j);
+        *o = dot::dot_i8_sparse(wi, wv, patch);
+    }
+}
+
+/// Like [`dot_block_wsparse`] but over an arbitrary set of filter
+/// indices (cluster proxies and surviving (row, filter) pairs).
+pub fn dot_block_indexed_wsparse(
+    patch: &[i8],
+    pf: &PrepackedFilters,
+    filters: &[usize],
+    out: &mut [i32; NR],
+) {
+    debug_assert!(filters.len() <= NR);
+    debug_assert!(pf.has_lanes());
+    for (o, &f) in out.iter_mut().zip(filters) {
+        let (wi, wv) = pf.lanes(f);
+        *o = dot::dot_i8_sparse(wi, wv, patch);
+    }
+}
+
+/// Doubly-sparse block: compressed filters against a compressed patch
+/// (`(x_idx, x_val)` from [`PatchTile::lanes`]) — the index-intersection
+/// dot [`dot::dot_i8_sparse_sparse`] per filter. Exact for the same
+/// reason as every sparse variant: every elided product has a zero
+/// factor.
+pub fn dot_block_wsparse_x(
+    x_idx: &[u16],
+    x_val: &[i8],
+    pf: &PrepackedFilters,
+    f0: usize,
+    nf: usize,
+    out: &mut [i32; NR],
+) {
+    debug_assert!(nf <= NR && f0 + nf <= pf.cout);
+    debug_assert!(pf.has_lanes());
+    for (j, o) in out.iter_mut().enumerate().take(nf) {
+        let (wi, wv) = pf.lanes(f0 + j);
+        *o = dot::dot_i8_sparse_sparse(x_idx, x_val, wi, wv);
+    }
+}
+
+/// Like [`dot_block_wsparse_x`] but over an arbitrary set of filter
+/// indices.
+pub fn dot_block_indexed_wsparse_x(
+    x_idx: &[u16],
+    x_val: &[i8],
+    pf: &PrepackedFilters,
+    filters: &[usize],
+    out: &mut [i32; NR],
+) {
+    debug_assert!(filters.len() <= NR);
+    debug_assert!(pf.has_lanes());
+    for (o, &f) in out.iter_mut().zip(filters) {
+        let (wi, wv) = pf.lanes(f);
+        *o = dot::dot_i8_sparse_sparse(x_idx, x_val, wi, wv);
+    }
+}
+
 /// Density below which the compressed-lane kernel beats the dense block
 /// kernel on this host (`InputSparsity::Auto`'s crossover). The dense
 /// AVX2 kernel retires 16 lanes per instruction pair, so the scalar
 /// gather-multiply loop only wins at low density; against the portable
 /// scalar fallback the crossover sits much higher. Any choice is
 /// correctness-neutral — both kernels are exact — so this is purely a
-/// host-throughput heuristic (EXPERIMENTS.md §Sparse).
+/// host-throughput heuristic. The constant itself lives with its
+/// rationale in [`crate::engine::crossover`]; this wrapper keeps the
+/// historical call sites working.
 pub fn sparse_auto_cutoff() -> f32 {
-    #[cfg(target_arch = "x86_64")]
-    {
-        if dot::avx2_enabled() {
-            return 0.20;
-        }
-    }
-    0.75
+    crate::engine::crossover::input_sparse_cutoff()
 }
 
 /// `InputSparsity::Auto`'s per-row decision: use the sparse kernel when
@@ -554,11 +773,13 @@ mod tests {
         assert!(!tile.has_sparse());
         let patch: Vec<i8> = (0..10).map(|v| v as i8 - 5).collect();
         let packed = PackedVec::from_acts(&patch);
-        tile.set_row(3, &patch, &packed, 9, false);
+        tile.set_row(3, &patch, &packed, 9, &nzmask_of(&patch), false);
         assert_eq!(&tile.patch(3)[..10], &patch[..]);
         assert!(tile.patch(3)[10..].iter().all(|&v| v == 0));
         assert_eq!(tile.packed(3), &packed);
         assert_eq!(tile.nnz(3), 9); // lane 5 holds value 0
+        assert_eq!(tile.xmask(3), &nzmask_of(&patch)[..]);
+        assert_eq!(tile.xmask(3)[0].count_ones(), 9);
         // untouched rows stay zero-padded
         assert!(tile.patch(2).iter().all(|&v| v == 0));
     }
@@ -567,13 +788,23 @@ mod tests {
         patch.iter().filter(|&&v| v != 0).count()
     }
 
+    fn nzmask_of(patch: &[i8]) -> Vec<u64> {
+        let mut m = vec![0u64; patch.len().div_ceil(64)];
+        for (i, &v) in patch.iter().enumerate() {
+            if v != 0 {
+                m[i / 64] |= 1u64 << (i % 64);
+            }
+        }
+        m
+    }
+
     #[test]
     fn compressed_builder_all_zero_patch() {
         // all-zero patch: empty lane list, and the sparse kernel
         // produces the same (zero) dots as the dense one
         let mut tile = PatchTile::new(13, true);
         let patch = vec![0i8; 13];
-        tile.set_row(0, &patch, &PackedVec::from_acts(&patch), 0, true);
+        tile.set_row(0, &patch, &PackedVec::from_acts(&patch), 0, &nzmask_of(&patch), true);
         assert_eq!(tile.nnz(0), 0);
         let (idx, val) = tile.lanes(0);
         assert!(idx.is_empty() && val.is_empty());
@@ -592,7 +823,7 @@ mod tests {
         // kernels still agree
         let mut tile = PatchTile::new(9, true);
         let patch: Vec<i8> = (0..9).map(|v| v as i8 + 1).collect();
-        tile.set_row(2, &patch, &PackedVec::from_acts(&patch), 9, true);
+        tile.set_row(2, &patch, &PackedVec::from_acts(&patch), 9, &nzmask_of(&patch), true);
         let (idx, val) = tile.lanes(2);
         assert_eq!(idx, (0..9u16).collect::<Vec<_>>().as_slice());
         assert_eq!(val, &patch[..]);
@@ -620,7 +851,7 @@ mod tests {
                 .collect();
             let nnz = nnz_of(&patch);
             let mut tile = PatchTile::new(k, true);
-            tile.set_row(1, &patch, &PackedVec::from_acts(&patch), nnz, true);
+            tile.set_row(1, &patch, &PackedVec::from_acts(&patch), nnz, &nzmask_of(&patch), true);
             let (idx, val) = tile.lanes(1);
             crate::prop_assert!(g, idx.len() == nnz, "list len {} != nnz {nnz}", idx.len());
             crate::prop_assert!(
@@ -649,6 +880,176 @@ mod tests {
         });
     }
 
+    /// FC node whose weights have roughly `zero_pct`% zero lanes.
+    fn sparse_fc_node(cin: usize, cout: usize, zero_pct: usize, seed: u64) -> Node {
+        let mut rng = Rng::new(seed);
+        let w: Vec<i8> = (0..cin * cout)
+            .map(|_| {
+                if (rng.int_in(0, 99) as usize) < zero_pct {
+                    0
+                } else {
+                    rng.int8()
+                }
+            })
+            .collect();
+        Node::Fc {
+            cin,
+            cout,
+            sw: 0.01,
+            sx: 0.01,
+            w,
+            bn: None,
+            relu: false,
+            res_from: None,
+            consumes: -1,
+        }
+    }
+
+    #[test]
+    fn prepack_builds_weight_lanes_and_masks() {
+        let node = sparse_fc_node(70, 6, 50, 9);
+        let pf = PrepackedFilters::new(&node);
+        assert!(pf.has_lanes());
+        assert_eq!(pf.mask_words(), 2); // 70 lanes → 2 u64 words
+        let mut nnz_total = 0usize;
+        for f in 0..6 {
+            let w = node.filter(f);
+            let (wi, wv) = pf.lanes(f);
+            // lists exactly cover the nonzero lanes, sorted ascending
+            let want: Vec<(u16, i8)> = w
+                .iter()
+                .enumerate()
+                .filter(|(_, &v)| v != 0)
+                .map(|(i, &v)| (i as u16, v))
+                .collect();
+            let got: Vec<(u16, i8)> = wi.iter().copied().zip(wv.iter().copied()).collect();
+            assert_eq!(got, want, "filter {f} lane list");
+            assert!(wi.windows(2).all(|p| p[0] < p[1]), "filter {f} not sorted");
+            // bitmask agrees, lane for lane, with bits beyond k_len clear
+            for (i, &v) in w.iter().enumerate() {
+                assert_eq!(pf.wmask(f)[i / 64] >> (i % 64) & 1 == 1, v != 0);
+            }
+            assert_eq!(pf.wmask(f)[1] >> (70 - 64), 0);
+            nnz_total += wi.len();
+        }
+        let want_density = nnz_total as f32 / (70 * 6) as f32;
+        assert_eq!(pf.density(), want_density);
+        assert!(pf.density() > 0.2 && pf.density() < 0.8);
+    }
+
+    #[test]
+    fn weight_sparse_blocks_match_dense_at_every_density() {
+        property("wsparse kernels == dense kernels", 80, |g| {
+            let k = g.usize(1, 150);
+            let cout = g.usize(1, 20);
+            let zero_pct = g.usize(0, 100);
+            let node = sparse_fc_node(k, cout, zero_pct, g.seed ^ 7);
+            let pf = PrepackedFilters::new(&node);
+            let patch_raw: Vec<i8> = (0..k)
+                .map(|_| if g.bool() { 0 } else { g.rng().int8() })
+                .collect();
+            let nnz = nnz_of(&patch_raw);
+            let mut tile = PatchTile::new(k, true);
+            tile.set_row(0, &patch_raw, &PackedVec::from_acts(&patch_raw), nnz, &nzmask_of(&patch_raw), true);
+            let (xi, xv) = tile.lanes(0);
+            let patch = tile.patch(0);
+            let mut want = [0i32; NR];
+            let (mut ws, mut wsx) = ([0i32; NR], [0i32; NR]);
+            let mut f0 = 0;
+            while f0 < cout {
+                let nf = NR.min(cout - f0);
+                dot_block(patch, &pf, f0, nf, &mut want);
+                dot_block_wsparse(patch, &pf, f0, nf, &mut ws);
+                dot_block_wsparse_x(xi, xv, &pf, f0, nf, &mut wsx);
+                for j in 0..nf {
+                    crate::prop_assert!(
+                        g,
+                        ws[j] == want[j] && wsx[j] == want[j],
+                        "k={k} zero_pct={zero_pct} f={} dense={} wsparse={} doubly={}",
+                        f0 + j,
+                        want[j],
+                        ws[j],
+                        wsx[j]
+                    );
+                }
+                f0 += NR;
+            }
+            // the indexed variants on a scattered filter subset
+            let mut filters: Vec<usize> = (0..cout).filter(|_| g.bool()).collect();
+            g.shuffle(&mut filters);
+            for chunk in filters.chunks(NR) {
+                dot_block_indexed(patch, &pf, chunk, &mut want);
+                dot_block_indexed_wsparse(patch, &pf, chunk, &mut ws);
+                dot_block_indexed_wsparse_x(xi, xv, &pf, chunk, &mut wsx);
+                for j in 0..chunk.len() {
+                    crate::prop_assert!(
+                        g,
+                        ws[j] == want[j] && wsx[j] == want[j],
+                        "indexed f={} dense={} wsparse={} doubly={}",
+                        chunk[j],
+                        want[j],
+                        ws[j],
+                        wsx[j]
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn all_zero_filter_has_empty_lane_list() {
+        let mut node = sparse_fc_node(20, 3, 0, 11);
+        if let Node::Fc { w, .. } = &mut node {
+            w[..20].fill(1); // filter 0: all ones (a surely-nonzero dot)
+            w[20..40].fill(0); // filter 1: entirely zero
+        }
+        let pf = PrepackedFilters::new(&node);
+        let (wi, wv) = pf.lanes(1);
+        assert!(wi.is_empty() && wv.is_empty());
+        assert!(pf.wmask(1).iter().all(|&w| w == 0));
+        let patch = vec![3i8; pf.k_pad];
+        let mut out = [0i32; NR];
+        dot_block_wsparse(&patch, &pf, 0, 3, &mut out);
+        assert_eq!(out[1], 0);
+        assert_ne!(out[0], 0); // dense neighbours unaffected
+    }
+
+    #[test]
+    fn prepack_overflow_k_skips_lanes_but_keeps_masks() {
+        // k_len beyond the u16 index range: no lane lists (the kernels
+        // fall back to dense), but the accounting masks are still built
+        let node = sparse_fc_node(SPARSE_K_MAX + 1, 1, 90, 13);
+        let pf = PrepackedFilters::new(&node);
+        assert!(!pf.has_lanes());
+        assert_eq!(pf.mask_words(), (SPARSE_K_MAX + 1).div_ceil(64));
+        let want_nnz = node.filter(0).iter().filter(|&&v| v != 0).count() as u64;
+        let full = vec![u64::MAX; pf.mask_words()];
+        assert_eq!(masked_nnz(pf.wmask(0), &full), want_nnz);
+        assert!(pf.density() < 0.2);
+    }
+
+    #[test]
+    fn masked_nnz_agrees_with_scalar_weight_zero_scan() {
+        property("mask algebra == reference scan", 100, |g| {
+            let k = g.usize(1, 300);
+            let node = sparse_fc_node(k, 1, g.usize(0, 100), g.seed ^ 21);
+            let pf = PrepackedFilters::new(&node);
+            let x: Vec<i8> = (0..k)
+                .map(|_| if g.bool() { 0 } else { g.rng().int8() })
+                .collect();
+            let nnz_x = nnz_of(&x) as u64;
+            let tiled_wz = nnz_x - masked_nnz(&nzmask_of(&x), pf.wmask(0));
+            let scalar_wz = dot::weight_zero_lanes(&x, node.filter(0));
+            crate::prop_assert!(
+                g,
+                tiled_wz == scalar_wz,
+                "k={k} tiled={tiled_wz} scalar={scalar_wz}"
+            );
+            Ok(())
+        });
+    }
+
     #[test]
     fn auto_threshold_crossover_picks_dense_kernel() {
         // rows denser than the crossover go dense, sparser rows go
@@ -673,10 +1074,11 @@ mod tests {
         // lists reflect the new patch, not the stale one
         let mut tile = PatchTile::new(8, true);
         let dense: Vec<i8> = (1i8..=8).collect();
-        tile.set_row(0, &dense, &PackedVec::from_acts(&dense), 8, false);
+        tile.set_row(0, &dense, &PackedVec::from_acts(&dense), 8, &nzmask_of(&dense), false);
         assert_eq!(tile.nnz(0), 8); // nnz tracked even without lists
         let sparse = vec![0i8, 7, 0, 0, -3, 0, 0, 0];
-        tile.set_row(0, &sparse, &PackedVec::from_acts(&sparse), 2, true);
+        tile.set_row(0, &sparse, &PackedVec::from_acts(&sparse), 2, &nzmask_of(&sparse), true);
+        assert_eq!(tile.xmask(0), &[0b10010u64][..]); // mask refreshed too
         let (idx, val) = tile.lanes(0);
         assert_eq!(idx, &[1u16, 4][..]);
         assert_eq!(val, &[7i8, -3][..]);

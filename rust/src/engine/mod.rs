@@ -8,16 +8,24 @@
 //! this module provides tensors, im2col patch gathering, pooling and the
 //! dot kernels.
 //!
-//! The engine is **dual-sided sparse**: besides the MoR predictor's
+//! The engine is **triple-sided sparse**: besides the MoR predictor's
 //! output-side skipping, zero-valued *input* activation lanes (ReLU
 //! guarantees the previous layer's output is highly sparse) can be
 //! elided per tile row through a compressed nonzero-lane representation
 //! ([`gemm::PatchTile`]) and sparse kernels ([`dot::dot_i8_sparse`],
-//! [`gemm::dot_block_sparse`]). Zero lanes contribute exactly zero to
-//! the integer dot, so the sparse path is bit-identical to the dense
-//! one — [`InputSparsity`] is purely a host-performance knob (see
-//! EXPERIMENTS.md §Sparse).
+//! [`gemm::dot_block_sparse`]), and zero *weight* lanes (pruned or
+//! naturally-dead filter taps) can be elided per layer through a
+//! prepack-time compressed filter representation
+//! ([`gemm::PrepackedFilters`]) and weight-sparse kernels (including
+//! the doubly-sparse index-intersection dot
+//! [`dot::dot_i8_sparse_sparse`]). Zero lanes contribute exactly zero
+//! to the integer dot, so both sparse paths are bit-identical to the
+//! dense one — [`InputSparsity`] and [`WeightSparsity::Exact`] are
+//! purely host-performance knobs; only [`WeightSparsity::Threshold`]
+//! (magnitude pruning) changes results (see EXPERIMENTS.md §Sparse and
+//! §Weights). Kernel-choice crossover points live in [`crossover`].
 
+pub mod crossover;
 pub mod dot;
 pub mod gemm;
 
@@ -72,6 +80,77 @@ impl InputSparsity {
             InputSparsity::Auto => "auto",
             InputSparsity::On => "on",
             InputSparsity::Off => "off",
+        }
+    }
+}
+
+/// Weight-side sparsity mode: whether the tiled engine elides zero
+/// weight lanes through the prepack-time compressed filter lists
+/// ([`gemm::PrepackedFilters`]) — the third ineffectual source next to
+/// MoR output prediction and [`InputSparsity`] input-zero skipping
+/// (Cnvlutin2-style weight-lane elision).
+///
+/// [`WeightSparsity::Off`] and [`WeightSparsity::Exact`] are
+/// **bit-identical** — `Exact` elides only true-zero lanes, which
+/// contribute exactly 0 to the integer dot, and the
+/// `macs_skipped_weight_zero` counter is a property of the data that is
+/// recorded in every mode. [`WeightSparsity::Threshold`] additionally
+/// zeroes small-magnitude weights at session build (magnitude pruning),
+/// which **does change results**; its accuracy cost is measured and
+/// reported by `mor run`.
+///
+/// Surface: `RunOpts::weight_sparsity`, TOML `[engine] weight_sparsity
+/// = "off"|"exact"|<t>`, CLI `--weight-sparsity`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum WeightSparsity {
+    /// Dense weight kernels everywhere (the default). The
+    /// weight-zero accounting still runs so `OpsStats` are
+    /// mode-independent.
+    #[default]
+    Off,
+    /// Elide true-zero weight lanes where the per-layer density makes
+    /// the compressed kernel profitable ([`crossover`]); bit-identical
+    /// to `Off` by construction.
+    Exact,
+    /// Zero every weight with dequantized magnitude `|w|·sw` below the
+    /// threshold when the session is built, then elide as `Exact`.
+    /// Accuracy-affecting and opt-in.
+    Threshold(f32),
+}
+
+impl WeightSparsity {
+    /// The result-preserving modes (a threshold is an open set and not
+    /// enumerable) — what the equivalence suites sweep.
+    pub const EXACT_MODES: [WeightSparsity; 2] = [WeightSparsity::Off, WeightSparsity::Exact];
+
+    /// Parse a CLI / TOML mode (`off`, `exact`, or a threshold > 0).
+    pub fn parse(name: &str) -> Result<WeightSparsity> {
+        match name {
+            "off" => Ok(WeightSparsity::Off),
+            "exact" => Ok(WeightSparsity::Exact),
+            other => match other.parse::<f32>() {
+                Ok(t) if t > 0.0 && t.is_finite() => Ok(WeightSparsity::Threshold(t)),
+                _ => bail!(
+                    "unknown weight-sparsity mode '{other}' (expected off, exact or a threshold > 0)"
+                ),
+            },
+        }
+    }
+
+    /// Stable CLI / config identifier (threshold renders its value).
+    pub fn name(self) -> String {
+        match self {
+            WeightSparsity::Off => "off".into(),
+            WeightSparsity::Exact => "exact".into(),
+            WeightSparsity::Threshold(t) => format!("{t}"),
+        }
+    }
+
+    /// The magnitude-pruning threshold, 0 for the non-pruning modes.
+    pub fn threshold(self) -> f32 {
+        match self {
+            WeightSparsity::Threshold(t) => t,
+            _ => 0.0,
         }
     }
 }
@@ -232,10 +311,16 @@ pub struct PatchGather {
     /// packed ±1 activations of the current patch (padding lanes invalid)
     pub packed: PackedVec,
     /// nonzero lanes in the current patch (padding lanes are zero and
-    /// never counted) — feeds the dual-sided sparsity accounting
+    /// never counted) — feeds the sparsity accounting
     /// (`OpsStats::macs_skipped_input_zero`) and the compressed-lane
     /// kernel selection.
     pub nnz: usize,
+    /// nonzero-activation bitmask of the current patch, one bit per
+    /// lane (`lane/64` word, `lane%64` bit; bits beyond `k_len` stay
+    /// clear) — intersected with the per-filter nonzero-weight mask
+    /// ([`gemm::PrepackedFilters::wmask`]) for the weight-zero
+    /// accounting (`OpsStats::macs_skipped_weight_zero`).
+    pub nzmask: Vec<u64>,
 }
 
 impl Default for PatchGather {
@@ -250,6 +335,7 @@ impl PatchGather {
             patch: Vec::new(),
             packed: PackedVec::zeros(0),
             nnz: 0,
+            nzmask: Vec::new(),
         }
     }
 
@@ -288,7 +374,10 @@ impl PatchGather {
                     for ch in 0..c {
                         let v = src.q[off + ch];
                         self.packed.push_lane(idx + ch, v > 0);
-                        self.nnz += (v != 0) as usize;
+                        if v != 0 {
+                            self.nnz += 1;
+                            self.nzmask[(idx + ch) / 64] |= 1u64 << ((idx + ch) % 64);
+                        }
                     }
                     idx += c;
                 } else {
@@ -307,6 +396,7 @@ impl PatchGather {
         let words = k_len.div_ceil(64);
         crate::util::reserve_capacity(&mut self.packed.bits, words);
         crate::util::reserve_capacity(&mut self.packed.valid, words);
+        crate::util::reserve_capacity(&mut self.nzmask, words);
     }
 
     /// FC "gather": the patch is simply the (h*w-position) channel vector.
@@ -317,7 +407,10 @@ impl PatchGather {
         for i in 0..c {
             let v = self.patch[i];
             self.packed.push_lane(i, v > 0);
-            self.nnz += (v != 0) as usize;
+            if v != 0 {
+                self.nnz += 1;
+                self.nzmask[i / 64] |= 1u64 << (i % 64);
+            }
         }
     }
 
@@ -334,6 +427,10 @@ impl PatchGather {
         self.packed.bits.fill(0);
         self.packed.valid.fill(0);
         self.packed.len = k_len;
+        if self.nzmask.len() != words {
+            self.nzmask.resize(words, 0);
+        }
+        self.nzmask.fill(0);
         self.nnz = 0;
     }
 }
@@ -526,6 +623,48 @@ mod tests {
         }
         assert!(InputSparsity::parse("dense").is_err());
         assert_eq!(InputSparsity::default(), InputSparsity::Auto);
+    }
+
+    #[test]
+    fn weight_sparsity_parse_round_trips() {
+        assert_eq!(WeightSparsity::parse("off").unwrap(), WeightSparsity::Off);
+        assert_eq!(WeightSparsity::parse("exact").unwrap(), WeightSparsity::Exact);
+        assert_eq!(
+            WeightSparsity::parse("0.02").unwrap(),
+            WeightSparsity::Threshold(0.02)
+        );
+        for m in WeightSparsity::EXACT_MODES {
+            assert_eq!(WeightSparsity::parse(&m.name()).unwrap(), m);
+        }
+        assert_eq!(WeightSparsity::default(), WeightSparsity::Off);
+        assert_eq!(WeightSparsity::Threshold(0.5).threshold(), 0.5);
+        assert_eq!(WeightSparsity::Exact.threshold(), 0.0);
+        // rejected: negative, zero, NaN, junk
+        assert!(WeightSparsity::parse("-1").is_err());
+        assert!(WeightSparsity::parse("0").is_err());
+        assert!(WeightSparsity::parse("NaN").is_err());
+        assert!(WeightSparsity::parse("dense").is_err());
+    }
+
+    #[test]
+    fn gather_builds_nonzero_mask() {
+        let t = Tensor::from_slice(2, 2, 1, &[3., 0., 0., -2.]);
+        let qt = QuantizedTensor::new(&t, 1.0);
+        let mut pg = PatchGather::new();
+        // SAME 3x3 over the 2x2 input at (0,0): patch lanes 4,5,7,8 are
+        // interior, with values [3, 0, 0, -2] → nonzero at lanes 4 and 8
+        let geom = conv_geom(2, 2, 3, 3, 1, true);
+        pg.gather(&qt, geom, 3, 3, 1, 0, 0);
+        assert_eq!(pg.nnz, 2);
+        assert_eq!(pg.nzmask, vec![(1u64 << 4) | (1u64 << 8)]);
+        // mask matches the patch, lane for lane, and resets on reuse
+        pg.gather_fc(&qt, 1);
+        assert_eq!(pg.nzmask, vec![0]);
+        pg.gather_fc(&qt, 3);
+        assert_eq!(pg.nzmask, vec![1]);
+        for (i, &v) in pg.patch.iter().enumerate() {
+            assert_eq!(pg.nzmask[i / 64] >> (i % 64) & 1 == 1, v != 0);
+        }
     }
 
     #[test]

@@ -362,16 +362,20 @@ pub fn strategy_ablation(artifacts: &[Artifacts], samples: usize) -> Table {
     t
 }
 
-/// Dual-sided MAC accounting (§Sparse): for each model, how the dense
-/// MAC budget splits between output-prediction savings (MoR skips),
-/// ineffectual input-zero MACs among the work that remained, and the
-/// effectual rest — the Cnvlutin2/SparseNN observation that input-side
-/// and output-side sparsity compound.
+/// Triple-sided MAC accounting (§Sparse, §Weights): for each model, how
+/// the dense MAC budget splits between output-prediction savings (MoR
+/// skips), ineffectual input-zero MACs among the work that remained,
+/// ineffectual weight-zero MACs (lanes where the weight is zero but the
+/// activation is not), and the effectual rest — the Cnvlutin2/SparseNN
+/// observation that input-side, weight-side and output-side sparsity
+/// compound. The three pools are disjoint by construction, so the four
+/// columns partition the evaluated MACs exactly.
 pub fn sparsity_table(artifacts: &[Artifacts], samples: usize) -> Table {
     let mut t = Table::new(
-        "Dual-sided sparsity — output-prediction vs input-zero MAC savings (%)",
+        "Triple-sided sparsity — output-prediction vs input-zero vs weight-zero \
+         MAC savings (%)",
         &["model", "predictor", "output_pred_saved_pct", "input_zero_of_done_pct",
-          "effectual_macs_pct", "combined_elidable_pct"],
+          "weight_zero_of_done_pct", "effectual_macs_pct", "combined_elidable_pct"],
     );
     for a in artifacts {
         let sess = session_with(a, PredictorConfig::default());
@@ -388,6 +392,7 @@ pub fn sparsity_table(artifacts: &[Artifacts], samples: usize) -> Table {
                 if policied { sess.predictor_name().to_string() } else { "none".into() },
                 format!("{:.2}", o.macs_saved_frac() * 100.0),
                 format!("{:.2}", o.input_zero_frac() * 100.0),
+                format!("{:.2}", o.weight_zero_frac() * 100.0),
                 format!("{:.2}", o.effectual_macs() as f64 / total * 100.0),
                 format!(
                     "{:.2}",

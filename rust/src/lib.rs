@@ -7,8 +7,9 @@
 //! * **L3 (this crate)** — the paper's evaluation platform: a cycle-level
 //!   accelerator simulator ([`sim`]) with an LPDDR4 DRAM model, an
 //!   energy/area model ([`energy`]), the functional int8 inference engine
-//!   ([`engine`]) — dual-sided sparse: the predictor's output skipping
-//!   composes with input-zero lane elision ([`engine::InputSparsity`]) —
+//!   ([`engine`]) — triple-sided sparse: the predictor's output skipping
+//!   composes with input-zero lane elision ([`engine::InputSparsity`])
+//!   and weight-zero lane elision ([`engine::WeightSparsity`]) —
 //!   the online MoR predictor ([`predictor`]), the offline
 //!   angle clustering re-implementation ([`cluster`]), a PJRT runtime to
 //!   execute the AOT-compiled JAX artifacts (`runtime`, behind the

@@ -7,7 +7,7 @@ use anyhow::{bail, Result};
 use mor::cli::{Args, USAGE};
 use mor::config::Config;
 use mor::coordinator::{self, Backend, ServeOpts};
-use mor::engine::InputSparsity;
+use mor::engine::{InputSparsity, WeightSparsity};
 use mor::figures;
 use mor::model::Artifacts;
 use mor::predictor::strategies::{Strategy, ZeroPredictor};
@@ -65,6 +65,9 @@ fn config_from(args: &Args) -> Result<Config> {
     if let Some(mode) = args.opt("input-sparsity") {
         cfg.engine.input_sparsity = InputSparsity::parse(mode)?;
     }
+    if let Some(mode) = args.opt("weight-sparsity") {
+        cfg.engine.weight_sparsity = WeightSparsity::parse(mode)?;
+    }
     if let Some(name) = args.opt("predictor") {
         cfg.predictor.strategy = Strategy::parse(name)?;
     } else if args.flag("no-clusters") || args.flag("no-binary") {
@@ -97,13 +100,15 @@ fn cmd_run(args: &Args) -> Result<()> {
             .params(&arts.predictor)
             .config(pcfg.clone())
             .input_sparsity(cfg.engine.input_sparsity)
+            .weight_sparsity(cfg.engine.weight_sparsity)
             .finish();
         let base = MorRun::evaluate(&arts, &session.with_policy(None), samples);
         let s = MorRun::evaluate(&arts, &session, samples);
         let p = &s.pred;
         println!(
             "[{name}] predictor={} T={:.2}{} | acc {:.2}% (baseline {:.2}%, Δ {:+.2}%) | \
-             MACs saved {:.1}% | input-zero MACs {:.1}% of done | DRAM wt saved {:.1}%",
+             MACs elided: output-pred {:.1}% | input-zero {:.1}% | weight-zero {:.1}% of done | \
+             DRAM wt saved {:.1}%",
             session.predictor_name(),
             pcfg.threshold,
             if auto_thr { " (auto)" } else { "" },
@@ -112,10 +117,28 @@ fn cmd_run(args: &Args) -> Result<()> {
             (s.accuracy - base.accuracy) * 100.0,
             s.ops.macs_saved_frac() * 100.0,
             s.ops.input_zero_frac() * 100.0,
+            s.ops.weight_zero_frac() * 100.0,
             s.ops.weight_bytes_saved as f64
                 / (s.ops.weight_bytes_fetched + s.ops.weight_bytes_saved).max(1) as f64
                 * 100.0,
         );
+        if let WeightSparsity::Threshold(t) = cfg.engine.weight_sparsity {
+            // the lossy mode: quantify what pruning itself cost by
+            // re-running the *unpruned* dense model (both runs above
+            // share the pruned clone, so their Δ is predictor-only)
+            let unpruned = Session::build(&arts.model)
+                .input_sparsity(cfg.engine.input_sparsity)
+                .finish();
+            let u = MorRun::evaluate(&arts, &unpruned, samples);
+            println!(
+                "       weight pruning: t={t} zeroed {:.1}% of weights | dense acc \
+                 {:.2}% pruned vs {:.2}% unpruned (Δ {:+.2}%)",
+                session.model().weight_zero_fraction() * 100.0,
+                base.accuracy * 100.0,
+                u.accuracy * 100.0,
+                (base.accuracy - u.accuracy) * 100.0,
+            );
+        }
         println!(
             "       outcomes: correct-zero {:.2}% | incorrect-zero {:.2}% | \
              correct-nonzero {:.2}% | incorrect-nonzero {:.2}% | not-applied {:.2}%",
@@ -193,7 +216,7 @@ fn cmd_figures(args: &Args) -> Result<()> {
         emit("ablation_strategies", figures::strategy_ablation(&artifacts, samples))?;
     }
     if want("sparsity") {
-        emit("sparsity_dual_sided", figures::sparsity_table(&artifacts, samples))?;
+        emit("sparsity_triple_sided", figures::sparsity_table(&artifacts, samples))?;
     }
     if want("fig12") {
         let (t, _) = figures::fig12(&artifacts, samples);
@@ -243,6 +266,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .config(cfg.predictor.clone())
         .threads(intra_threads)
         .input_sparsity(cfg.engine.input_sparsity)
+        .weight_sparsity(cfg.engine.weight_sparsity)
         .finish();
     let arrival = Arrival::from_cli(arrival_kind, rps)?;
     let mut stream = RequestStream::with_arrival(arrival, arts.data.n_test(), 42);

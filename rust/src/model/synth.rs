@@ -240,6 +240,26 @@ pub fn tiny_serving_model(seed: u64) -> Model {
     Model::new(format!("tiny_serve_{seed}"), 1.0 / 127.0, (8, 8, 4), nodes)
 }
 
+/// Zero roughly `zero_pct` percent of every compute node's weight
+/// lanes, in place — the weight-sparsity suites and benches need models
+/// whose prepacked density is controlled rather than the ~0.4% natural
+/// zero rate of uniform int8 weights. Deterministic for a given seed;
+/// resets the prepack cache so the compressed lane lists are rebuilt
+/// from the new weights.
+pub fn sparsify_weights(model: &mut Model, seed: u64, zero_pct: u32) {
+    let mut rng = Rng::new(seed ^ 0x5A12_51F7);
+    for node in &mut model.nodes {
+        if let Node::Conv { w, .. } | Node::Fc { w, .. } = node {
+            for v in w.iter_mut() {
+                if rng.chance(zero_pct as f64 / 100.0) {
+                    *v = 0;
+                }
+            }
+        }
+    }
+    model.prepacked = std::sync::OnceLock::new();
+}
+
 /// Wrap a synthetic model into a full [`Artifacts`] bundle (predictor
 /// params, random evaluation data, meta) so the serving coordinator and
 /// its benches/tests run without `make artifacts`.
@@ -324,6 +344,15 @@ mod tests {
         // covers them all
         let p = predictor_for(&m, 4);
         assert_eq!(p.layers.len(), m.relu_layers().len());
+    }
+
+    #[test]
+    fn sparsify_weights_hits_the_requested_density() {
+        let mut m = cnn10_like(1);
+        sparsify_weights(&mut m, 9, 70);
+        // ~30% of the lanes survive; the prepack cache was rebuilt
+        let d = m.prepacked().layer(0).density();
+        assert!(d > 0.2 && d < 0.4, "density {d}");
     }
 
     #[test]

@@ -138,6 +138,47 @@ impl Model {
         self.prepacked
             .get_or_init(|| crate::engine::gemm::PrepackedModel::new(self))
     }
+
+    /// Zero every weight lane whose dequantized magnitude `|w| * sw` is
+    /// below `t` (the `WeightSparsity::Threshold` magnitude pruning,
+    /// applied to a model clone at session build — see
+    /// [`crate::session::SessionBuilder::weight_sparsity`]). Returns the
+    /// number of lanes newly zeroed, and resets the prepack cache so the
+    /// compressed weight lanes are rebuilt from the pruned tensors.
+    pub fn prune_weights_below(&mut self, t: f32) -> u64 {
+        let mut zeroed = 0u64;
+        for node in &mut self.nodes {
+            if let Node::Conv { w, sw, .. } | Node::Fc { w, sw, .. } = node {
+                let sw = *sw;
+                for v in w.iter_mut() {
+                    if *v != 0 && (*v as f32).abs() * sw < t {
+                        *v = 0;
+                        zeroed += 1;
+                    }
+                }
+            }
+        }
+        self.prepacked = OnceLock::new();
+        zeroed
+    }
+
+    /// Fraction of weight lanes that are exactly zero across all compute
+    /// nodes (`0.0` for a weightless model) — what `mor run` reports
+    /// alongside a threshold-pruned forward.
+    pub fn weight_zero_fraction(&self) -> f64 {
+        let (mut zeros, mut total) = (0u64, 0u64);
+        for node in &self.nodes {
+            if let Node::Conv { w, .. } | Node::Fc { w, .. } = node {
+                total += w.len() as u64;
+                zeros += w.iter().filter(|&&v| v == 0).count() as u64;
+            }
+        }
+        if total == 0 {
+            0.0
+        } else {
+            zeros as f64 / total as f64
+        }
+    }
     pub fn load<P: AsRef<Path>>(path: P, name: &str) -> Result<Model> {
         let buf = std::fs::read(&path)
             .with_context(|| format!("reading {} — run `make artifacts`", path.as_ref().display()))?;
@@ -441,6 +482,33 @@ mod tests {
         let macs = m.mac_counts();
         assert_eq!(macs[0], 6 * 6 * 4 * (3 * 3 * 2));
         assert_eq!(macs[4], 0);
+    }
+
+    #[test]
+    fn prune_weights_below_zeroes_small_lanes_and_rebuilds_prepack() {
+        let m0 = Node::Fc {
+            cin: 3,
+            cout: 2,
+            sw: 0.1,
+            sx: 0.5,
+            w: vec![1, 3, 5, 2, 4, -6],
+            bn: None,
+            relu: false,
+            res_from: None,
+            consumes: -1,
+        };
+        let mut m = Model::new("p".into(), 0.5, (1, 1, 3), vec![m0]);
+        assert_eq!(m.prepacked().layer(0).density(), 1.0); // cache forced
+        // |w| * 0.1 < 0.25 → lanes 1 and 2 go, everything else stays
+        let zeroed = m.prune_weights_below(0.25);
+        assert_eq!(zeroed, 2);
+        assert_eq!(m.nodes[0].filter(0), &[0, 3, 5]);
+        assert_eq!(m.nodes[0].filter(1), &[0, 4, -6]);
+        assert_eq!(m.weight_zero_fraction(), 2.0 / 6.0);
+        // the prepack cache was reset, so the rebuilt density sees them
+        assert_eq!(m.prepacked().layer(0).density(), 4.0 / 6.0);
+        // idempotent: already-zero lanes are not re-counted
+        assert_eq!(m.prune_weights_below(0.25), 0);
     }
 
     #[test]

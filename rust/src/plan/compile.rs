@@ -31,7 +31,7 @@
 //! the execution options are unchanged.
 
 use crate::engine::gemm::{self, pad_k, SPARSE_K_MAX};
-use crate::engine::{conv_geom, ConvGeom, InputSparsity};
+use crate::engine::{conv_geom, crossover, ConvGeom, InputSparsity, WeightSparsity};
 use crate::model::{Model, Node};
 use crate::predictor::strategies::Strategy;
 use crate::predictor::{MorPolicy, RunOpts};
@@ -95,6 +95,15 @@ pub struct ComputeStep {
     /// sparse_cutoff` — bit-identical to the unplanned `Auto`/`On`
     /// decision (`sparse_auto_cutoff() * k_len` resp. `+inf`).
     pub sparse_cutoff: f32,
+    /// The layer's dot products run on the compressed-*weight* kernels
+    /// ([`gemm::dot_block_wsparse`] and friends). Frozen at compile
+    /// time from the prepacked per-layer weight density against
+    /// [`crossover::weight_sparse_cutoff`]: unlike activation density,
+    /// weight density is a constant of the model, so the decision is
+    /// per layer, not per row. Always `false` under
+    /// [`WeightSparsity::Off`], and when the prepack skipped lane lists
+    /// (`k_len` beyond the u16 index range).
+    pub w_sparse: bool,
     pub src: Src,
     /// Residual source's activation slot, if the node has one.
     pub res: Option<usize>,
@@ -164,10 +173,13 @@ pub struct ModelPlan {
 
 /// Compile `model` (+ the prepared `policy`, if any) into a
 /// [`ModelPlan`] under `opts`. Cheap — one O(nodes²) walk over graph
-/// metadata, no weight or activation data is touched — so the
-/// unplanned entry points ([`crate::predictor::exec::run_batch`])
-/// compile per call; a [`crate::session::Session`] compiles once at
-/// `finish()` and reuses the plan for every request.
+/// metadata; no activation data is touched, and weight data only
+/// through the shared prepack cache (forced once here when
+/// `opts.weight_sparsity` is on, to read the frozen per-layer weight
+/// densities) — so the unplanned entry points
+/// ([`crate::predictor::exec::run_batch`]) compile per call; a
+/// [`crate::session::Session`] compiles once at `finish()` and reuses
+/// the plan for every request.
 pub fn compile(model: &Model, policy: Option<&MorPolicy>, opts: RunOpts) -> ModelPlan {
     let n = model.nodes.len();
     let shapes = model.node_shapes();
@@ -271,6 +283,13 @@ pub fn compile(model: &Model, policy: Option<&MorPolicy>, opts: RunOpts) -> Mode
                         gemm::sparse_auto_cutoff() * k_len.max(1) as f32
                     }
                 };
+                // weight side: density is a model constant, so the
+                // kernel choice is per layer; reading it forces the
+                // shared prepack cache only when the mode is on
+                let w_sparse = opts.weight_sparsity != WeightSparsity::Off && {
+                    let pf = model.prepacked().layer(i);
+                    pf.has_lanes() && pf.density() < crossover::weight_sparse_cutoff()
+                };
                 max_cout = max_cout.max(cout);
                 max_k_len = max_k_len.max(k_len);
                 max_row_elems = max_row_elems.max(rows * cout);
@@ -299,6 +318,7 @@ pub fn compile(model: &Model, policy: Option<&MorPolicy>, opts: RunOpts) -> Mode
                     oracle: opts.oracle || (policied && strategy == Some(Strategy::Oracle)),
                     lanes,
                     sparse_cutoff,
+                    w_sparse,
                     src,
                     res,
                     dst,
@@ -423,5 +443,50 @@ mod tests {
             }
             assert_eq!(plan.max_lanes_k_len > 0, want_lanes);
         }
+    }
+
+    #[test]
+    fn weight_sparsity_decision_is_frozen_per_layer() {
+        // Off never takes the weight-sparse kernels; Exact freezes the
+        // per-layer choice from the prepacked density vs the crossover
+        let dense = synth::tiny_serving_model(2);
+        for ws in WeightSparsity::EXACT_MODES {
+            let plan = compile(
+                &dense,
+                None,
+                RunOpts { weight_sparsity: ws, ..Default::default() },
+            );
+            for step in &plan.steps {
+                if let StepPlan::Compute(c) = step {
+                    let want = ws != WeightSparsity::Off && {
+                        let pf = dense.prepacked().layer(c.node);
+                        pf.has_lanes() && pf.density() < crossover::weight_sparse_cutoff()
+                    };
+                    assert_eq!(c.w_sparse, want, "mode {ws:?} node {}", c.node);
+                }
+            }
+        }
+        // with 90% of the weight lanes zeroed every layer crosses under
+        // the cutoff and the sparse kernels are baked in
+        let mut sparse = synth::tiny_serving_model(2);
+        synth::sparsify_weights(&mut sparse, 7, 90);
+        let plan = compile(
+            &sparse,
+            None,
+            RunOpts { weight_sparsity: WeightSparsity::Exact, ..Default::default() },
+        );
+        let mut n_compute = 0;
+        for step in &plan.steps {
+            if let StepPlan::Compute(c) = step {
+                n_compute += 1;
+                assert!(
+                    c.w_sparse,
+                    "node {} density {}",
+                    c.node,
+                    sparse.prepacked().layer(c.node).density()
+                );
+            }
+        }
+        assert!(n_compute >= 2);
     }
 }

@@ -3,12 +3,13 @@
 //! [`execute`] / [`execute_into`] walk a [`ModelPlan`]'s frozen steps
 //! over a [`Workspace`], running the batch-native tiled engine exactly
 //! as the pre-plan `exec::run_batch` did — the tile loop, the
-//! predict-then-evaluate phases, the dual-sided sparse kernel choice
-//! and every stats/trace accounting line are ported verbatim, so the
-//! planned path stays **bit-identical** to the `EngineSel::ScalarRef`
-//! oracle (the `engine_equivalence` / `batch_equivalence` /
-//! `strategy_contracts` / `input_sparsity` suites all run through this
-//! code).
+//! predict-then-evaluate phases, the triple-sided sparse kernel choice
+//! (per-row compressed inputs, per-layer compressed weights, and their
+//! doubly-sparse intersection) and every stats/trace accounting line
+//! are ported verbatim, so the planned path stays **bit-identical** to
+//! the `EngineSel::ScalarRef` oracle (the `engine_equivalence` /
+//! `batch_equivalence` / `strategy_contracts` / `input_sparsity` /
+//! `weight_sparsity` suites all run through this code).
 //!
 //! What changed is *where state lives*: geometry, slot wiring, sparsity
 //! cutoffs and scratch sizes come from the plan; activations ping-pong
@@ -269,6 +270,11 @@ struct TiledCtx<'a> {
     /// are bit-identical either way).
     lanes: bool,
     sparse_cutoff: f32,
+    /// Frozen per-layer weight-sparsity decision: dots run on the
+    /// compressed-weight kernels (and, for rows that also compress
+    /// their input, the doubly-sparse index-intersection kernel).
+    /// Kernel selection only — bit-identical either way.
+    w_sparse: bool,
 }
 
 impl TiledCtx<'_> {
@@ -358,6 +364,7 @@ fn compute_step(
             oracle: cs.oracle,
             lanes: cs.lanes,
             sparse_cutoff: cs.sparse_cutoff,
+            w_sparse: cs.w_sparse,
         };
 
         let n_tiles = total_rows.div_ceil(TILE_ROWS).max(1);
@@ -535,7 +542,14 @@ fn process_row_range(
             row_sparse[r] = ctx.lanes && (gather.nnz as f32) < ctx.sparse_cutoff;
             // the compression pass only runs for rows that will use the
             // sparse kernel — dense rows pay one compare, nothing more
-            tile.set_row(r, &gather.patch, &gather.packed, gather.nnz, row_sparse[r]);
+            tile.set_row(
+                r,
+                &gather.patch,
+                &gather.packed,
+                gather.nnz,
+                &gather.nzmask,
+                row_sparse[r],
+            );
             ops[s].macs_total += k * cout as u64;
             if ctx.is_relu_layer {
                 ops[s].relu_macs += k * cout as u64;
@@ -552,7 +566,14 @@ fn process_row_range(
                 while f0 < cout {
                     let nf = NR.min(cout - f0);
                     for r in 0..trows {
-                        if row_sparse[r] {
+                        if ctx.w_sparse {
+                            if row_sparse[r] {
+                                let (li, lv) = tile.lanes(r);
+                                gemm::dot_block_wsparse_x(li, lv, ctx.pf, f0, nf, &mut blk);
+                            } else {
+                                gemm::dot_block_wsparse(tile.patch(r), ctx.pf, f0, nf, &mut blk);
+                            }
+                        } else if row_sparse[r] {
                             let (li, lv) = tile.lanes(r);
                             gemm::dot_block_sparse(li, lv, ctx.pf, f0, nf, &mut blk);
                         } else {
@@ -565,12 +586,15 @@ fn process_row_range(
                 for r in 0..trows {
                     let g = t0 + r;
                     let (s, row) = (tile_sample[r], g % ctx.rows);
-                    let zeros = k - tile.nnz(r) as u64;
+                    let nnz_x = tile.nnz(r) as u64;
+                    let zeros = k - nnz_x;
+                    let xm = tile.xmask(r);
                     let out_row = &mut out[(g - row0) * cout..(g - row0 + 1) * cout];
                     for (f, o) in out_row.iter_mut().enumerate() {
                         let d = dots[r * cout + f];
+                        let wz = nnz_x - gemm::masked_nnz(xm, ctx.pf.wmask(f));
                         account_eval(
-                            ctx, d, s, row, f, false, zeros, o, &mut pred[s], &mut ops[s],
+                            ctx, d, s, row, f, false, zeros, wz, o, &mut pred[s], &mut ops[s],
                         );
                     }
                 }
@@ -583,7 +607,14 @@ fn process_row_range(
                 // blocks outer for weight reuse across the tile -----------
                 for chunk in proxies.chunks(NR) {
                     for r in 0..trows {
-                        if row_sparse[r] {
+                        if ctx.w_sparse {
+                            if row_sparse[r] {
+                                let (li, lv) = tile.lanes(r);
+                                gemm::dot_block_indexed_wsparse_x(li, lv, ctx.pf, chunk, &mut blk);
+                            } else {
+                                gemm::dot_block_indexed_wsparse(tile.patch(r), ctx.pf, chunk, &mut blk);
+                            }
+                        } else if row_sparse[r] {
                             let (li, lv) = tile.lanes(r);
                             gemm::dot_block_indexed_sparse(li, lv, ctx.pf, chunk, &mut blk);
                         } else {
@@ -598,13 +629,16 @@ fn process_row_range(
                 for r in 0..trows {
                     let g = t0 + r;
                     let (s, row) = (tile_sample[r], g % ctx.rows);
-                    let zeros = k - tile.nnz(r) as u64;
+                    let nnz_x = tile.nnz(r) as u64;
+                    let zeros = k - nnz_x;
+                    let xm = tile.xmask(r);
                     let local = (g - row0) * cout;
                     let out_row = &mut out[local..local + cout];
 
                     for &p in proxies {
+                        let wz = nnz_x - gemm::masked_nnz(xm, ctx.pf.wmask(p));
                         let ri = account_eval(
-                            ctx, dots[r * cout + p], s, row, p, false, zeros,
+                            ctx, dots[r * cout + p], s, row, p, false, zeros, wz,
                             &mut out_row[p], &mut pred[s], &mut ops[s],
                         );
                         ri_cache[p] = ri;
@@ -641,15 +675,23 @@ fn process_row_range(
                     // ---- phase 3: GEMM over surviving pairs only (the
                     // row's kernel flavour follows its input density) --
                     for chunk in survivors.chunks(NR) {
-                        if row_sparse[r] {
+                        if ctx.w_sparse {
+                            if row_sparse[r] {
+                                let (li, lv) = tile.lanes(r);
+                                gemm::dot_block_indexed_wsparse_x(li, lv, ctx.pf, chunk, &mut blk);
+                            } else {
+                                gemm::dot_block_indexed_wsparse(tile.patch(r), ctx.pf, chunk, &mut blk);
+                            }
+                        } else if row_sparse[r] {
                             let (li, lv) = tile.lanes(r);
                             gemm::dot_block_indexed_sparse(li, lv, ctx.pf, chunk, &mut blk);
                         } else {
                             gemm::dot_block_indexed(tile.patch(r), ctx.pf, chunk, &mut blk);
                         }
                         for (j, &f) in chunk.iter().enumerate() {
+                            let wz = nnz_x - gemm::masked_nnz(xm, ctx.pf.wmask(f));
                             account_eval(
-                                ctx, blk[j], s, row, f, applied[f], zeros, &mut out_row[f],
+                                ctx, blk[j], s, row, f, applied[f], zeros, wz, &mut out_row[f],
                                 &mut pred[s], &mut ops[s],
                             );
                         }
@@ -676,8 +718,10 @@ fn process_row_range(
 /// Account one fully-evaluated output (dot already computed). Matches the
 /// scalar path's `full_eval!` (with `applied = false`) and the non-skip
 /// branch of `finish_neuron` exactly. `zeros` is the patch's zero-lane
-/// count (`k - nnz`) — the ineffectual share of this output's MACs.
-/// Returns the ReLU input.
+/// count (`k - nnz`) — the input-side ineffectual share of this output's
+/// MACs; `wz` is the weight-side share (lanes with a live activation but
+/// a zero weight), disjoint from `zeros` by construction. Returns the
+/// ReLU input.
 #[allow(clippy::too_many_arguments)]
 #[inline]
 fn account_eval(
@@ -688,6 +732,7 @@ fn account_eval(
     f: usize,
     applied: bool,
     zeros: u64,
+    wz: u64,
     out_val: &mut f32,
     pred: &mut PredStats,
     ops: &mut OpsStats,
@@ -696,6 +741,7 @@ fn account_eval(
     *out_val = if ctx.node_relu { ri.max(0.0) } else { ri };
     ops.macs_done += ctx.k;
     ops.macs_skipped_input_zero += zeros;
+    ops.macs_skipped_weight_zero += wz;
     ops.weight_bytes_fetched += ctx.k;
     if ctx.is_relu_layer {
         if ri <= 0.0 {

@@ -87,6 +87,7 @@ impl WorkerScratch {
     fn heap_bytes(&self) -> usize {
         self.gather.patch.capacity()
             + packed_bytes(&self.gather.packed)
+            + self.gather.nzmask.capacity() * 8
             + self.tile.heap_bytes()
             + self.dots.capacity() * 4
             + self.ri_cache.capacity() * 4

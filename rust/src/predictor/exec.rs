@@ -9,7 +9,7 @@
 //!   [`crate::plan::execute()`] over a [`crate::plan::Workspace`]. The
 //!   engine itself is unchanged — a cache-blocked, row-batched im2col
 //!   GEMM with a two-phase predict-then-evaluate dataflow, cross-sample
-//!   tiles, dual-sided sparsity and optional row-tile threading (see
+//!   tiles, triple-sided sparsity and optional row-tile threading (see
 //!   the [`crate::plan`] docs) — but all per-layer decisions are frozen
 //!   at compile time and all working memory lives in the workspace.
 //!   These free functions build a throwaway plan + workspace per call
@@ -39,7 +39,7 @@
 
 use super::strategies::{bn_affine, margin_of, LayerState, Strategy};
 use super::{EngineSel, LayerTrace, MorPolicy, OpsStats, PredStats, RunOpts, RunResult};
-use crate::engine::dot::dot_i8;
+use crate::engine::dot::{dot_i8, weight_zero_lanes};
 use crate::engine::{self, relu_input, ConvGeom, PatchGather, QuantizedTensor, Tensor};
 use crate::model::{Model, Node};
 use crate::plan;
@@ -304,6 +304,7 @@ fn compute_layer_scalar(
                 out.data[row * cout + f] = if node_relu { ri.max(0.0) } else { ri };
                 ops.macs_done += k;
                 ops.macs_skipped_input_zero += k - pg.nnz as u64;
+                ops.macs_skipped_weight_zero += weight_zero_lanes(&pg.patch, node.filter(f));
                 ops.weight_bytes_fetched += k;
                 if is_relu_layer && ri <= 0.0 {
                     ops.neg_relu_macs += k;
@@ -455,6 +456,7 @@ fn finish_neuron(
         out.data[row * cout + f] = if node_relu { ri.max(0.0) } else { ri };
         ops.macs_done += k;
         ops.macs_skipped_input_zero += k - pg.nnz as u64;
+        ops.macs_skipped_weight_zero += weight_zero_lanes(&pg.patch, node.filter(f));
         ops.weight_bytes_fetched += k;
         if is_relu_layer {
             if ri <= 0.0 {

@@ -28,7 +28,7 @@ use crate::session::Session;
 use std::collections::BTreeMap;
 use strategies::{LayerState, Strategy, ZeroPredictor};
 
-pub use crate::engine::InputSparsity;
+pub use crate::engine::{InputSparsity, WeightSparsity};
 
 /// The full prepared policy for a model: the configured strategy plus
 /// the per-layer state it built. Shared read-only across worker
@@ -133,7 +133,7 @@ pub struct OpsStats {
     pub true_zero_outputs: u64,
     /// Among [`OpsStats::macs_done`]: MACs whose *input* activation lane
     /// is exactly zero (ineffectual — they contribute nothing to the
-    /// integer dot). This is the input-side savings pool the dual-sided
+    /// integer dot). This is the input-side savings pool the triple-sided
     /// engine elides via the compressed-lane kernels, complementary to
     /// the output-prediction savings (`macs_total - macs_done`).
     ///
@@ -142,6 +142,20 @@ pub struct OpsStats {
     /// the equivalence suites can demand `OpsStats` bit-equality across
     /// sparse/dense runs.
     pub macs_skipped_input_zero: u64,
+    /// Among [`OpsStats::macs_done`]: MACs whose *weight* lane is
+    /// exactly zero while the input lane is nonzero — the weight-side
+    /// ineffectual pool (Cnvlutin2's weight-lane elision), disjoint
+    /// from [`OpsStats::macs_skipped_input_zero`] by construction
+    /// (input-zero lanes are counted there regardless of the weight).
+    /// The three savings sources therefore partition `macs_total`
+    /// exactly: skipped-output MACs (`macs_total - macs_done`) +
+    /// input-zero + weight-zero + [`OpsStats::effectual_macs`].
+    ///
+    /// Like the input counter, a property of the data: counted
+    /// identically in every [`WeightSparsity`] mode and both engines
+    /// (scalar lane scan vs prepacked-bitmask popcount — same
+    /// definition, proven equal in `rust/tests/weight_sparsity.rs`).
+    pub macs_skipped_weight_zero: u64,
 }
 
 impl OpsStats {
@@ -155,6 +169,7 @@ impl OpsStats {
         self.relu_macs += o.relu_macs;
         self.true_zero_outputs += o.true_zero_outputs;
         self.macs_skipped_input_zero += o.macs_skipped_input_zero;
+        self.macs_skipped_weight_zero += o.macs_skipped_weight_zero;
     }
 
     /// Fraction of all MACs avoided (the paper's "computations avoided").
@@ -167,8 +182,7 @@ impl OpsStats {
     }
 
     /// Fraction of the *performed* MACs that were ineffectual
-    /// (zero-valued input lane) — the dual-sided engine's input-side
-    /// savings pool.
+    /// (zero-valued input lane) — the engine's input-side savings pool.
     pub fn input_zero_frac(&self) -> f64 {
         if self.macs_done == 0 {
             0.0
@@ -177,10 +191,24 @@ impl OpsStats {
         }
     }
 
-    /// MACs that both survived output prediction *and* had a nonzero
-    /// input lane — the work a dual-sided accelerator actually performs.
+    /// Fraction of the *performed* MACs whose weight lane is zero (and
+    /// input lane nonzero) — the weight-side savings pool, same
+    /// denominator as [`OpsStats::input_zero_frac`].
+    pub fn weight_zero_frac(&self) -> f64 {
+        if self.macs_done == 0 {
+            0.0
+        } else {
+            self.macs_skipped_weight_zero as f64 / self.macs_done as f64
+        }
+    }
+
+    /// MACs that survived output prediction *and* had a nonzero input
+    /// lane *and* a nonzero weight lane — the work a triple-sided
+    /// accelerator actually performs. Together with the three elidable
+    /// pools this partitions `macs_total` exactly:
+    /// `effectual + input_zero + weight_zero + (total - done) == total`.
     pub fn effectual_macs(&self) -> u64 {
-        self.macs_done - self.macs_skipped_input_zero
+        self.macs_done - self.macs_skipped_input_zero - self.macs_skipped_weight_zero
     }
 }
 
@@ -236,6 +264,16 @@ pub struct RunOpts {
     /// modes are bit-identical (see [`InputSparsity`]); `Auto` picks
     /// sparse vs dense per tile row on a density crossover.
     pub input_sparsity: InputSparsity,
+    /// Weight-side sparsity mode for the tiled engine: elide zero
+    /// weight lanes via the prepack-time compressed filter lists.
+    /// `Off` and `Exact` are bit-identical (see [`WeightSparsity`]);
+    /// `Threshold` prunes at session build and is the one
+    /// accuracy-affecting knob. NOTE the free-function
+    /// [`exec::run_batch`] path borrows its `Model` and therefore
+    /// cannot prune — `Threshold` pruning is applied by
+    /// [`crate::session::SessionBuilder::finish`] (the Session/CLI
+    /// layer); below that it selects kernels exactly like `Exact`.
+    pub weight_sparsity: WeightSparsity,
 }
 
 impl Default for RunOpts {
@@ -246,6 +284,7 @@ impl Default for RunOpts {
             threads: 1,
             engine: EngineSel::Tiled,
             input_sparsity: InputSparsity::Auto,
+            weight_sparsity: WeightSparsity::Off,
         }
     }
 }
@@ -430,5 +469,29 @@ mod tests {
             ..Default::default()
         };
         assert!((o.macs_saved_frac() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn opsstats_triple_sided_partition() {
+        let o = OpsStats {
+            macs_total: 100,
+            macs_done: 80,
+            macs_skipped_input_zero: 25,
+            macs_skipped_weight_zero: 15,
+            ..Default::default()
+        };
+        assert_eq!(o.effectual_macs(), 40);
+        // the three elidable pools + effectual work partition the total
+        assert_eq!(
+            (o.macs_total - o.macs_done)
+                + o.macs_skipped_input_zero
+                + o.macs_skipped_weight_zero
+                + o.effectual_macs(),
+            o.macs_total
+        );
+        assert!((o.weight_zero_frac() - 15.0 / 80.0).abs() < 1e-12);
+        assert!((o.input_zero_frac() - 25.0 / 80.0).abs() < 1e-12);
+        let zero = OpsStats::default();
+        assert_eq!(zero.weight_zero_frac(), 0.0);
     }
 }

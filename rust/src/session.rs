@@ -44,7 +44,7 @@ use crate::config::PredictorConfig;
 use crate::model::{Artifacts, Model, PredictorParams};
 use crate::plan::{self, ModelPlan, PooledWorkspace, Workspace, WorkspacePool};
 use crate::predictor::strategies::{Strategy, ZeroPredictor};
-use crate::predictor::{exec, EngineSel, InputSparsity, MorPolicy, RunOpts, RunResult};
+use crate::predictor::{exec, EngineSel, InputSparsity, MorPolicy, RunOpts, RunResult, WeightSparsity};
 use anyhow::Result;
 use std::sync::Arc;
 
@@ -320,6 +320,18 @@ impl<'a> SessionBuilder<'a> {
         self
     }
 
+    /// Weight-side sparsity mode (`off`/`exact`/threshold): whether the
+    /// engines elide zero-weight lanes through the compressed per-filter
+    /// lane lists built at prepack time. `exact` is bit-identical by
+    /// construction; a numeric threshold additionally magnitude-prunes
+    /// the cloned model's weights at [`SessionBuilder::finish`] (a
+    /// lossy, accuracy-measured transformation) — the
+    /// `--weight-sparsity` CLI surface.
+    pub fn weight_sparsity(mut self, mode: WeightSparsity) -> Self {
+        self.opts.weight_sparsity = mode;
+        self
+    }
+
     /// Compute the true value of skipped outputs (Fig-12 categories).
     pub fn oracle(mut self, on: bool) -> Self {
         self.opts.oracle = on;
@@ -332,12 +344,18 @@ impl<'a> SessionBuilder<'a> {
         self
     }
 
-    /// Build the session: clone the model behind an `Arc`, warm its
-    /// prepacked weight blocks (tiled engine), prepare the policy
-    /// through the configured strategy, and compile the
-    /// [`crate::plan::ModelPlan`] the request path executes.
+    /// Build the session: clone the model behind an `Arc` (magnitude-
+    /// pruning the clone first under `WeightSparsity::Threshold` — the
+    /// caller's model is never mutated), warm its prepacked weight
+    /// blocks (tiled engine), prepare the policy through the configured
+    /// strategy, and compile the [`crate::plan::ModelPlan`] the request
+    /// path executes.
     pub fn finish(self) -> Session {
-        let model = Arc::new(self.model.clone());
+        let mut model = self.model.clone();
+        if let WeightSparsity::Threshold(t) = self.opts.weight_sparsity {
+            model.prune_weights_below(t);
+        }
+        let model = Arc::new(model);
         if self.opts.engine == EngineSel::Tiled {
             model.prepacked();
         }
@@ -437,6 +455,33 @@ mod tests {
             Session::build(&m).finish().opts().input_sparsity,
             InputSparsity::Auto
         );
+    }
+
+    #[test]
+    fn weight_sparsity_knob_threads_through() {
+        let m = synth::tiny_serving_model(25);
+        let s = Session::build(&m).weight_sparsity(WeightSparsity::Exact).finish();
+        assert_eq!(s.opts().weight_sparsity, WeightSparsity::Exact);
+        assert_eq!(
+            Session::build(&m).finish().opts().weight_sparsity,
+            WeightSparsity::Off
+        );
+    }
+
+    #[test]
+    fn threshold_mode_prunes_the_session_clone_only() {
+        let m = synth::tiny_serving_model(27);
+        let before = m.weight_zero_fraction();
+        // a huge threshold zeroes every weight in the session's clone
+        let s = Session::build(&m)
+            .weight_sparsity(WeightSparsity::Threshold(1e9))
+            .finish();
+        assert_eq!(s.model().weight_zero_fraction(), 1.0);
+        // the caller's model is untouched
+        assert_eq!(m.weight_zero_fraction(), before);
+        // exact mode never prunes
+        let e = Session::build(&m).weight_sparsity(WeightSparsity::Exact).finish();
+        assert_eq!(e.model().weight_zero_fraction(), before);
     }
 
     #[test]

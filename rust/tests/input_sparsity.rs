@@ -1,4 +1,4 @@
-//! Input-sparsity property suite: the dual-sided engine's
+//! Input-sparsity property suite: the triple-sided engine's
 //! input-zero-skipping kernels (`--input-sparsity on|auto`) must be
 //! **bit-identical** to the dense kernels (`off`) — logits, `OpsStats`
 //! (including the data-derived `macs_skipped_input_zero` counter),
@@ -74,6 +74,7 @@ fn sparse_kernels_bit_identical_across_densities() {
             threads: 1,
             engine: EngineSel::Tiled,
             input_sparsity: InputSparsity::Off,
+            ..Default::default()
         };
         let want = run_sample(&model, policy, &x, base);
         for mode in [InputSparsity::On, InputSparsity::Auto] {

@@ -17,7 +17,7 @@ use mor::model::synth;
 use mor::model::{Model, Node};
 use mor::plan;
 use mor::predictor::strategies::{Strategy, ZeroPredictor};
-use mor::predictor::{exec, EngineSel, RunOpts};
+use mor::predictor::{exec, EngineSel, RunOpts, WeightSparsity};
 use mor::session::Session;
 use mor::util::alloc_count::{allocs_on_this_thread, CountingAlloc};
 use mor::util::rng::Rng;
@@ -220,12 +220,26 @@ fn peak_live_tensors_per_sample_is_o1() {
 /// The zero-allocation contract: after warmup, the planned forward
 /// (single-threaded, no tracing — the serving worker configuration)
 /// performs no heap allocation at all: no output tensors, no quantized
-/// buffers, no per-row scratch, no result envelopes.
+/// buffers, no per-row scratch, no result envelopes. The compressed-
+/// weight kernels (`WeightSparsity::Exact` on a sparsified model, so
+/// the weight-sparse plan decision actually fires) honour the same
+/// contract — the lane lists live in the shared prepack, not in
+/// per-request scratch.
 #[test]
 fn steady_state_forward_makes_zero_allocations() {
-    let model = synth::tiny_serving_model(67);
-    let params = synth::predictor_for(&model, 68);
-    for strategy in [Strategy::None, Strategy::Mor] {
+    for (strategy, ws_mode) in [
+        (Strategy::None, WeightSparsity::Off),
+        (Strategy::Mor, WeightSparsity::Off),
+        (Strategy::None, WeightSparsity::Exact),
+        (Strategy::Mor, WeightSparsity::Exact),
+    ] {
+        let mut model = synth::tiny_serving_model(67);
+        if ws_mode == WeightSparsity::Exact {
+            // 90% zeros: density lands below the weight-sparse
+            // crossover on every host, so the compressed kernels run
+            synth::sparsify_weights(&mut model, 69, 90);
+        }
+        let params = synth::predictor_for(&model, 68);
         let sess = Session::build(&model)
             .params(&params)
             .strategy(strategy)
@@ -233,6 +247,7 @@ fn steady_state_forward_makes_zero_allocations() {
             .oracle(false)
             .collect_trace(false)
             .threads(1)
+            .weight_sparsity(ws_mode)
             .finish();
         let xs: Vec<Vec<f32>> = (0..4).map(|i| rand_input(&model, 70 + i)).collect();
         let inputs: Vec<&[f32]> = xs.iter().map(|x| x.as_slice()).collect();
@@ -255,7 +270,7 @@ fn steady_state_forward_makes_zero_allocations() {
         assert_eq!(
             after - before,
             0,
-            "steady-state forward allocated ({strategy:?} strategy)"
+            "steady-state forward allocated ({strategy:?} strategy, {ws_mode:?} weights)"
         );
         // and it still computes the right thing
         for (r, w) in results.iter().zip(&want) {

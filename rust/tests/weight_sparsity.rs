@@ -1,0 +1,318 @@
+//! Weight-sparsity property suite: the triple-sided engine's
+//! weight-zero lane-elision kernels (`--weight-sparsity exact`) must be
+//! **bit-identical** to the dense kernels (`off`) — logits, `OpsStats`
+//! (including the data-derived `macs_skipped_weight_zero` counter),
+//! `PredStats` and skip traces — across random models, controlled
+//! per-model weight densities, strategies, input densities (so the
+//! doubly-sparse index-intersection dot is exercised), batch sizes and
+//! thread counts. A zero int8 weight lane contributes exactly 0 to the
+//! integer dot, so the kernel choice can never be observable; these
+//! tests pin that contract, plus the u16-overflow dense fallback and
+//! the exact triple-sided MAC partition.
+//!
+//! Runs fully offline — models come from `mor::model::synth`, no
+//! `make artifacts` needed.
+
+use mor::config::PredictorConfig;
+use mor::model::{synth, Model};
+use mor::predictor::strategies::Strategy;
+use mor::predictor::{
+    exec::run_batch, exec::run_sample, EngineSel, InputSparsity, MorPolicy, RunOpts, RunResult,
+    WeightSparsity,
+};
+use mor::util::prop::property;
+use mor::util::rng::Rng;
+
+/// Random input with a controlled zero fraction, so weight-zero and
+/// input-zero lanes coincide inside the same patches.
+fn sparse_input(rng: &mut Rng, n: usize, zero_pct: usize) -> Vec<f32> {
+    (0..n)
+        .map(|_| {
+            if (rng.int_in(0, 99) as usize) < zero_pct {
+                0.0
+            } else {
+                rng.uniform(-1.0, 1.0) as f32
+            }
+        })
+        .collect()
+}
+
+fn diff(want: &RunResult, got: &RunResult) -> Option<String> {
+    if want.logits != got.logits {
+        return Some(format!(
+            "logits differ: want {:?} got {:?}",
+            want.logits, got.logits
+        ));
+    }
+    if want.pred != got.pred {
+        return Some(format!("pred stats differ: want {:?} got {:?}", want.pred, got.pred));
+    }
+    if want.ops != got.ops {
+        return Some(format!("ops stats differ: want {:?} got {:?}", want.ops, got.ops));
+    }
+    if want.traces != got.traces {
+        return Some("skip traces differ".to_string());
+    }
+    None
+}
+
+#[test]
+fn weight_sparse_kernels_bit_identical_across_densities() {
+    property("weight-sparsity exact == off", 40, |g| {
+        let mut model = synth::random_model(g.rng());
+        // 0% zeroed (natural density) through 100% (every filter empty)
+        let zero_pct = *g.pick(&[0u32, 30, 60, 90, 100]);
+        synth::sparsify_weights(&mut model, g.seed, zero_pct);
+        let params = synth::predictor_for(&model, g.seed);
+        let (h, w, c) = model.input_shape;
+        let x = sparse_input(g.rng(), h * w * c, *g.pick(&[0usize, 50, 90]));
+        let cfg = PredictorConfig {
+            threshold: *g.pick(&[0.0f32, 0.5, 0.9]),
+            strategy: *g.pick(&Strategy::ALL),
+            ..Default::default()
+        };
+        let pol = MorPolicy::new(&model, &params, cfg.clone());
+        let policy = g.bool().then_some(&pol);
+        let base = RunOpts {
+            oracle: g.bool(),
+            collect_trace: true,
+            threads: 1,
+            engine: EngineSel::Tiled,
+            input_sparsity: *g.pick(&InputSparsity::ALL),
+            weight_sparsity: WeightSparsity::Off,
+        };
+        let want = run_sample(&model, policy, &x, base);
+        for threads in [1usize, 3] {
+            let got = run_sample(
+                &model,
+                policy,
+                &x,
+                RunOpts { weight_sparsity: WeightSparsity::Exact, threads, ..base },
+            );
+            if let Some(msg) = diff(&want, &got) {
+                return Err(format!(
+                    "zero_pct={zero_pct} input_sparsity={:?} threads={threads} \
+                     strategy={:?}: {msg}",
+                    base.input_sparsity, cfg.strategy
+                ));
+            }
+        }
+        // the unplanned scalar reference agrees too (it never elides,
+        // but counts the same weight-zero pool)
+        let scalar = run_sample(&model, policy, &x, base.scalar_ref());
+        if want.logits != scalar.logits || want.ops != scalar.ops {
+            return Err(format!("scalar reference diverged at zero_pct={zero_pct}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn weight_sparse_batches_bit_identical_to_per_sample() {
+    // mixed-density batches over a sparsified model: tiles mix dense
+    // and near-empty patches, so the doubly-sparse intersection kernel
+    // and the weight-sparse dense-x kernel alternate within one tile
+    let mut rng = Rng::new(0xBEE5);
+    let mut model = synth::tiny_serving_model(21);
+    // 85% zeros: below the weight-sparse crossover on every host, so
+    // `Exact` really swaps kernels here
+    synth::sparsify_weights(&mut model, 8, 85);
+    let params = synth::predictor_for(&model, 22);
+    let (h, w, c) = model.input_shape;
+    let pol = MorPolicy::new(
+        &model,
+        &params,
+        PredictorConfig { threshold: 0.5, ..Default::default() },
+    );
+    for b in [1usize, 5, 16] {
+        let xs: Vec<Vec<f32>> = (0..b)
+            .map(|i| sparse_input(&mut rng, h * w * c, (i * 25) % 125))
+            .collect();
+        let inputs: Vec<&[f32]> = xs.iter().map(|x| x.as_slice()).collect();
+        for ws in WeightSparsity::EXACT_MODES {
+            let opts = RunOpts {
+                oracle: true,
+                collect_trace: true,
+                weight_sparsity: ws,
+                ..Default::default()
+            };
+            let got = run_batch(&model, Some(&pol), &inputs, opts);
+            for (s, x) in inputs.iter().enumerate() {
+                let want = run_sample(&model, Some(&pol), x, opts);
+                assert!(
+                    diff(&want, &got[s]).is_none(),
+                    "b={b} sample={s} mode={ws:?}: {}",
+                    diff(&want, &got[s]).unwrap()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn weight_zero_counter_is_mode_and_engine_independent() {
+    // macs_skipped_weight_zero is a property of the data: identical
+    // whichever kernel ran, and the scalar reference reports it too
+    let mut rng = Rng::new(0xF00D);
+    let mut model = synth::cnn10_like(41);
+    synth::sparsify_weights(&mut model, 5, 60);
+    let params = synth::predictor_for(&model, 42);
+    let (h, w, c) = model.input_shape;
+    let x = sparse_input(&mut rng, h * w * c, 50);
+    let pol = MorPolicy::new(
+        &model,
+        &params,
+        PredictorConfig { threshold: 0.5, ..Default::default() },
+    );
+    let base = RunOpts {
+        oracle: false,
+        collect_trace: false,
+        weight_sparsity: WeightSparsity::Off,
+        ..Default::default()
+    };
+    let want = run_sample(&model, Some(&pol), &x, base);
+    // 60% zeroed weights: the weight-side ineffectual pool must be big
+    assert!(want.ops.macs_skipped_weight_zero > 0);
+    assert!(want.ops.macs_skipped_weight_zero <= want.ops.macs_done);
+    for opts in [
+        RunOpts { weight_sparsity: WeightSparsity::Exact, ..base },
+        RunOpts { weight_sparsity: WeightSparsity::Exact, input_sparsity: InputSparsity::On, ..base },
+        base.scalar_ref(),
+    ] {
+        let got = run_sample(&model, Some(&pol), &x, opts);
+        assert_eq!(got.ops, want.ops);
+        assert_eq!(got.logits, want.logits);
+    }
+}
+
+#[test]
+fn triple_sided_partition_is_exact() {
+    // skipped-output + input-zero + weight-zero + effectual == total,
+    // with every term nonzero, in every mode combination
+    let mut rng = Rng::new(0xCAFE);
+    let mut model = synth::cnn10_like(51);
+    synth::sparsify_weights(&mut model, 6, 50);
+    let params = synth::predictor_for(&model, 52);
+    let (h, w, c) = model.input_shape;
+    let x = sparse_input(&mut rng, h * w * c, 40);
+    let pol = MorPolicy::new(
+        &model,
+        &params,
+        PredictorConfig { threshold: 0.3, ..Default::default() },
+    );
+    for ws in WeightSparsity::EXACT_MODES {
+        for is in InputSparsity::ALL {
+            for engine in [EngineSel::Tiled, EngineSel::ScalarRef] {
+                let opts = RunOpts {
+                    weight_sparsity: ws,
+                    input_sparsity: is,
+                    engine,
+                    ..Default::default()
+                };
+                let o = run_sample(&model, Some(&pol), &x, opts).ops;
+                let skipped_output = o.macs_total - o.macs_done;
+                assert!(skipped_output > 0, "{ws:?}/{is:?}/{engine:?}");
+                assert!(o.macs_skipped_input_zero > 0);
+                assert!(o.macs_skipped_weight_zero > 0);
+                assert!(o.effectual_macs() > 0);
+                assert_eq!(
+                    skipped_output
+                        + o.macs_skipped_input_zero
+                        + o.macs_skipped_weight_zero
+                        + o.effectual_macs(),
+                    o.macs_total,
+                    "{ws:?}/{is:?}/{engine:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn all_zero_weights_run_on_empty_lane_lists() {
+    // the degenerate case: every filter's lane list is empty, the whole
+    // forward reduces to bias/BN terms — still bit-identical
+    let mut model = synth::tiny_serving_model(33);
+    synth::sparsify_weights(&mut model, 1, 100);
+    let pf = model.prepacked().layer(0);
+    assert!(pf.has_lanes());
+    assert_eq!(pf.density(), 0.0);
+    assert_eq!(pf.lanes(0).0.len(), 0);
+    let (h, w, c) = model.input_shape;
+    let mut rng = Rng::new(34);
+    let x = sparse_input(&mut rng, h * w * c, 0);
+    let off = run_sample(
+        &model,
+        None,
+        &x,
+        RunOpts { weight_sparsity: WeightSparsity::Off, ..Default::default() },
+    );
+    let on = run_sample(
+        &model,
+        None,
+        &x,
+        RunOpts { weight_sparsity: WeightSparsity::Exact, ..Default::default() },
+    );
+    assert_eq!(off.logits, on.logits);
+    assert_eq!(off.ops, on.ops);
+    // every performed MAC with a nonzero input lane is weight-zero
+    assert_eq!(
+        off.ops.macs_skipped_input_zero + off.ops.macs_skipped_weight_zero,
+        off.ops.macs_done
+    );
+    assert_eq!(off.ops.effectual_macs(), 0);
+}
+
+#[test]
+fn u16_overflow_k_falls_back_to_dense_kernels() {
+    // k_len > u16::MAX + 1: lane indices cannot be represented, so the
+    // prepack skips the lane lists (masks stay) and the plan must keep
+    // the dense kernels even in `exact` mode — results identical
+    const K: usize = (u16::MAX as usize + 1) + 64;
+    let mut model = Model::new(
+        "overflow_fc".into(),
+        1.0 / 127.0,
+        (1, 1, K),
+        vec![synth::dense_node(K, 2, 5)],
+    );
+    synth::sparsify_weights(&mut model, 3, 50);
+    assert!(!model.prepacked().layer(0).has_lanes());
+    let mut rng = Rng::new(6);
+    let x = sparse_input(&mut rng, K, 50);
+    let base = RunOpts::default();
+    let want = run_sample(&model, None, &x, base);
+    // the bitmask weight-zero accounting still works above the lane cap
+    assert!(want.ops.macs_skipped_weight_zero > 0);
+    for opts in [
+        RunOpts { weight_sparsity: WeightSparsity::Exact, ..base },
+        RunOpts { weight_sparsity: WeightSparsity::Exact, input_sparsity: InputSparsity::On, ..base },
+        RunOpts { weight_sparsity: WeightSparsity::Exact, ..base.scalar_ref() },
+    ] {
+        let got = run_sample(&model, None, &x, opts);
+        assert_eq!(want.logits, got.logits);
+        assert_eq!(want.ops, got.ops);
+    }
+}
+
+#[test]
+fn session_threshold_pruning_matches_manually_pruned_model() {
+    // `Threshold(t)` is exactly: prune at build, then run `Exact`
+    use mor::session::Session;
+    let model = synth::tiny_serving_model(61);
+    let t = 0.02f32;
+    let mut pruned = model.clone();
+    pruned.prune_weights_below(t);
+    let (h, w, c) = model.input_shape;
+    let mut rng = Rng::new(62);
+    let x = sparse_input(&mut rng, h * w * c, 30);
+    let want = Session::build(&pruned)
+        .weight_sparsity(WeightSparsity::Exact)
+        .finish()
+        .run_sample(&x);
+    let got = Session::build(&model)
+        .weight_sparsity(WeightSparsity::Threshold(t))
+        .finish()
+        .run_sample(&x);
+    assert_eq!(want.logits, got.logits);
+    assert_eq!(want.ops, got.ops);
+}
