@@ -19,6 +19,7 @@ use std::collections::BTreeMap;
 /// valueless `info --config` form still parses via lookahead).
 pub const BOOLEAN_FLAGS: &[&str] = &[
     "all",
+    "json",
     "no-binary",
     "no-clusters",
     "no-predictor",
@@ -166,6 +167,17 @@ COMMANDS:
                                        --predictor none)
                  --runtime pjrt|engine execution backend (default: engine;
                                        pjrt needs --features pjrt at build)
+    lint       Statically verify compiled ModelPlans (slot liveness,
+               scratch marks, frozen sparsity/policy decisions — see
+               EXPERIMENTS.md §Lint) over the synthetic model zoo, or
+               over a real artifact model
+                 --model <name>        lint one artifact model instead of
+                                       the synthetic zoo
+                 --artifacts <dir>     artifacts directory (default: artifacts)
+                 --seed <n>            synthetic-zoo base seed (default: 7)
+                 --random-models <n>   extra random graphs to lint (default: 8)
+                 --json                machine-readable findings on stdout
+               exit status 1 if any error-severity finding is reported
     predictors List the available zero-predictor strategies
     info       Print artifact + configuration info
                  --config              print Table 1

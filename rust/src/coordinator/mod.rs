@@ -31,14 +31,16 @@
 //! uses std threads + channels; the architecture (dispatcher → queue →
 //! workers → collector) is the same shape as an async reactor.
 
+pub mod queue;
+
 use crate::model::Artifacts;
 use crate::predictor::RunOpts;
 use crate::session::Session;
 use crate::util::{mean, percentile_sorted};
 use crate::workload::Request;
 use anyhow::Result;
-use std::collections::VecDeque;
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use queue::SharedQueue;
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 /// Which execution backend serves requests.
@@ -195,85 +197,6 @@ impl ServeReport {
     }
 }
 
-/// Request queue shared between dispatcher and workers. The condvar
-/// replaces the previous 50 µs pop-and-sleep busy-poll: workers sleep
-/// until a push (or shutdown) actually happens, and the batcher's linger
-/// wait is a timed wait on the same condvar.
-struct SharedQueue {
-    state: Mutex<QueueState>,
-    cv: Condvar,
-}
-
-struct QueueState {
-    q: VecDeque<(Request, Instant)>,
-    /// Dispatcher finished: no more pushes will ever happen.
-    closed: bool,
-    depth_hwm: usize,
-    first_arrival: Option<Instant>,
-}
-
-impl SharedQueue {
-    fn new() -> SharedQueue {
-        SharedQueue {
-            state: Mutex::new(QueueState {
-                q: VecDeque::new(),
-                closed: false,
-                depth_hwm: 0,
-                first_arrival: None,
-            }),
-            cv: Condvar::new(),
-        }
-    }
-
-    fn push(&self, req: Request) {
-        let now = Instant::now();
-        let mut st = self.state.lock().unwrap();
-        st.q.push_back((req, now));
-        st.depth_hwm = st.depth_hwm.max(st.q.len());
-        st.first_arrival.get_or_insert(now);
-        drop(st);
-        self.cv.notify_one();
-    }
-
-    fn close(&self) {
-        self.state.lock().unwrap().closed = true;
-        self.cv.notify_all();
-    }
-
-    /// Pop the next micro-batch: blocks for the first request, then
-    /// lingers up to `batch_wait` for up to `max_batch` requests. Returns
-    /// None when the queue is closed and drained (worker shutdown).
-    fn next_batch(
-        &self,
-        max_batch: usize,
-        batch_wait: Duration,
-    ) -> Option<Vec<(Request, Instant)>> {
-        let mut st = self.state.lock().unwrap();
-        loop {
-            if !st.q.is_empty() {
-                break;
-            }
-            if st.closed {
-                return None;
-            }
-            st = self.cv.wait(st).unwrap();
-        }
-        if max_batch > 1 && !batch_wait.is_zero() {
-            let deadline = Instant::now() + batch_wait;
-            while st.q.len() < max_batch && !st.closed {
-                let now = Instant::now();
-                if now >= deadline {
-                    break;
-                }
-                let (guard, _timeout) = self.cv.wait_timeout(st, deadline - now).unwrap();
-                st = guard;
-            }
-        }
-        let n = st.q.len().min(max_batch.max(1));
-        Some(st.q.drain(..n).collect())
-    }
-}
-
 /// Serve a pre-generated request list through a prepared [`Session`]
 /// (which owns the model, its prepacked weights, the skip strategy and
 /// the per-forward execution options — workers share them read-only).
@@ -325,6 +248,7 @@ pub fn serve(
         threads: session.opts().threads.max(1),
         engine: session.opts().engine,
         input_sparsity: session.opts().input_sparsity,
+        weight_sparsity: session.opts().weight_sparsity,
     });
     let data = Arc::new((
         arts.data.test_x.clone(),
@@ -523,12 +447,11 @@ pub fn serve(
         h.join().expect("worker panicked");
     }
     let wall = t0.elapsed().as_secs_f64();
-    let first_arrival = queue.state.lock().unwrap().first_arrival;
-    let busy = match (first_arrival, last_done) {
+    let busy = match (queue.first_arrival(), last_done) {
         (Some(a), Some(d)) => d.duration_since(a).as_secs_f64(),
         _ => 0.0,
     };
-    let max_depth = queue.state.lock().unwrap().depth_hwm;
+    let max_depth = queue.depth_hwm();
     Ok(ServeReport::from_records(
         predictor_name,
         &records,
@@ -546,8 +469,9 @@ mod tests {
     use super::*;
 
     // Engine-backend serving is exercised end-to-end in
-    // rust/tests/serving_pipeline.rs (synthetic artifacts); here we
-    // unit-test the report math and the queue/batcher mechanics.
+    // rust/tests/serving_pipeline.rs (synthetic artifacts); the
+    // queue/batcher mechanics are unit-tested in queue.rs and
+    // model-checked in rust/tests/loom_models.rs. Here: report math.
 
     #[test]
     fn report_percentiles() {
@@ -603,55 +527,4 @@ mod tests {
         assert_eq!(r.throughput_rps, 0.0);
     }
 
-    fn req(id: u64) -> Request {
-        Request { id, sample_idx: 0, arrival_us: 0 }
-    }
-
-    #[test]
-    fn batcher_coalesces_and_drains_on_close() {
-        let q = SharedQueue::new();
-        for i in 0..5 {
-            q.push(req(i));
-        }
-        let b = q.next_batch(4, Duration::ZERO).unwrap();
-        assert_eq!(b.len(), 4);
-        assert_eq!(b[0].0.id, 0);
-        q.close();
-        // remainder drains even after close
-        let b = q.next_batch(4, Duration::from_micros(500)).unwrap();
-        assert_eq!(b.len(), 1);
-        assert_eq!(b[0].0.id, 4);
-        // then shutdown
-        assert!(q.next_batch(4, Duration::ZERO).is_none());
-    }
-
-    #[test]
-    fn batcher_lingers_for_late_arrivals() {
-        let q = Arc::new(SharedQueue::new());
-        q.push(req(0));
-        let pusher = {
-            let q = Arc::clone(&q);
-            std::thread::spawn(move || {
-                std::thread::sleep(Duration::from_millis(2));
-                q.push(req(1));
-                q.close();
-            })
-        };
-        // linger long enough for the second request to join the batch
-        let b = q.next_batch(2, Duration::from_millis(200)).unwrap();
-        pusher.join().unwrap();
-        assert_eq!(b.len(), 2, "linger should have picked up the late request");
-    }
-
-    #[test]
-    fn blocked_worker_wakes_on_close() {
-        let q = Arc::new(SharedQueue::new());
-        let waiter = {
-            let q = Arc::clone(&q);
-            std::thread::spawn(move || q.next_batch(8, Duration::from_millis(50)))
-        };
-        std::thread::sleep(Duration::from_millis(2));
-        q.close();
-        assert!(waiter.join().unwrap().is_none());
-    }
 }

@@ -38,9 +38,17 @@ pub fn dot_i8(x: &[i8], w: &[i8]) -> i32 {
 /// Cached CPU-feature dispatch: the `is_x86_feature_detected!` check is
 /// hoisted out of the hot path into a `OnceLock` so per-dot calls pay one
 /// relaxed atomic load instead of the detection macro's lookup.
+///
+/// Under Miri the intrinsics are unsupported, so the dispatch reports
+/// AVX2 absent and every caller (including the crossover cutoffs, which
+/// branch on this) takes the scalar path — that is what makes the
+/// property suites Miri-runnable.
 #[cfg(target_arch = "x86_64")]
 #[inline]
 pub fn avx2_enabled() -> bool {
+    if cfg!(miri) {
+        return false;
+    }
     use std::sync::OnceLock;
     static AVX2: OnceLock<bool> = OnceLock::new();
     *AVX2.get_or_init(|| std::arch::is_x86_feature_detected!("avx2"))
@@ -69,31 +77,51 @@ pub fn dot_i8_scalar(x: &[i8], w: &[i8]) -> i32 {
 /// AVX2 path: sign-extend 16 i8 lanes to i16 (`vpmovsxbw`), multiply-add
 /// pairs into i32 (`vpmaddwd`), accumulate in a 256-bit register.
 /// i8·i8 products fit i16 and pairwise sums fit i32, so this is exact.
+///
+/// # Safety
+///
+/// * The CPU must support AVX2 — callers dispatch through
+///   [`avx2_enabled`] (`is_x86_feature_detected!`), never directly.
+/// * `x` and `w` must have equal length (the unaligned 16-byte loads
+///   index both slices by the same `i`, bounded by `x.len()`).
+///
+/// No alignment requirement: the loads are `_mm_loadu_si128`
+/// (unaligned), and the tail past the last full 16-lane chunk is safe
+/// slice-indexed scalar code.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn dot_i8_avx2(x: &[i8], w: &[i8]) -> i32 {
     use std::arch::x86_64::*;
+    debug_assert_eq!(x.len(), w.len());
     let n = x.len();
-    let mut acc = _mm256_setzero_si256();
-    let mut i = 0;
-    while i + 16 <= n {
-        let xv = _mm256_cvtepi8_epi16(_mm_loadu_si128(x.as_ptr().add(i) as *const __m128i));
-        let wv = _mm256_cvtepi8_epi16(_mm_loadu_si128(w.as_ptr().add(i) as *const __m128i));
-        acc = _mm256_add_epi32(acc, _mm256_madd_epi16(xv, wv));
-        i += 16;
+    // SAFETY: AVX2 is available per the fn contract. The only memory
+    // operations are the two `_mm_loadu_si128` (unaligned) loads, and
+    // `i + 16 <= n == x.len() == w.len()` bounds both inside their
+    // slices; the tail loop is safe slice indexing.
+    unsafe {
+        let mut acc = _mm256_setzero_si256();
+        let mut i = 0;
+        while i + 16 <= n {
+            let xv =
+                _mm256_cvtepi8_epi16(_mm_loadu_si128(x.as_ptr().add(i) as *const __m128i));
+            let wv =
+                _mm256_cvtepi8_epi16(_mm_loadu_si128(w.as_ptr().add(i) as *const __m128i));
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(xv, wv));
+            i += 16;
+        }
+        // horizontal sum of 8 i32 lanes
+        let hi = _mm256_extracti128_si256(acc, 1);
+        let lo = _mm256_castsi256_si128(acc);
+        let s = _mm_add_epi32(hi, lo);
+        let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b01_00_11_10));
+        let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b00_00_00_01));
+        let mut total = _mm_cvtsi128_si32(s);
+        while i < n {
+            total += (x[i] as i16 * w[i] as i16) as i32;
+            i += 1;
+        }
+        total
     }
-    // horizontal sum of 8 i32 lanes
-    let hi = _mm256_extracti128_si256(acc, 1);
-    let lo = _mm256_castsi256_si128(acc);
-    let s = _mm_add_epi32(hi, lo);
-    let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b01_00_11_10));
-    let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b00_00_00_01));
-    let mut total = _mm_cvtsi128_si32(s);
-    while i < n {
-        total += (x[i] as i16 * w[i] as i16) as i32;
-        i += 1;
-    }
-    total
 }
 
 /// Sparse int8 dot product over a compressed nonzero-lane list:

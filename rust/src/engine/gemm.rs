@@ -637,6 +637,22 @@ pub fn sparse_wins(nnz: usize, k_len: usize) -> bool {
 /// AVX2 multi-filter micro-kernel: one sign-extended patch load feeds up
 /// to NR `vpmaddwd` accumulator chains. Exact: i8·i8 products fit i16 and
 /// pairwise sums fit i32 (see `dot_i8_avx2`).
+///
+/// # Safety
+///
+/// * The CPU must support AVX2 — callers dispatch through
+///   [`dot::avx2_enabled`], never directly.
+/// * `patch` must address at least `k_pad` readable bytes.
+/// * `filt[..nf]` must each address at least `k_pad` readable bytes
+///   (`nf <= NR`; the remaining entries may dangle — they are never
+///   read). [`PrepackedFilters`] guarantees this: every filter is
+///   zero-padded to exactly `k_pad` bytes at prepack time.
+/// * `k_pad` must be a multiple of [`K_ALIGN`] (what [`pad_k`]
+///   produces), so the `K_ALIGN`-stride loop covers `[0, k_pad)` with
+///   no tail — `k + K_ALIGN <= k_pad` is the loads' bounds proof.
+///
+/// No alignment requirement: all loads are `_mm_loadu_si128`
+/// (unaligned).
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn dot_block_avx2(
@@ -647,32 +663,47 @@ unsafe fn dot_block_avx2(
     out: &mut [i32; NR],
 ) {
     use std::arch::x86_64::*;
-    let mut acc = [_mm256_setzero_si256(); NR];
-    let mut k = 0usize;
-    while k + K_ALIGN <= k_pad {
-        let xv = _mm256_cvtepi8_epi16(_mm_loadu_si128(patch.add(k) as *const __m128i));
-        for j in 0..nf {
-            let wv = _mm256_cvtepi8_epi16(_mm_loadu_si128(filt[j].add(k) as *const __m128i));
-            acc[j] = _mm256_add_epi32(acc[j], _mm256_madd_epi16(xv, wv));
+    // SAFETY: AVX2 available and every pointer addresses k_pad bytes per
+    // the fn contract; k + K_ALIGN <= k_pad bounds each 16-byte
+    // unaligned load, and only filt[..nf] (the valid entries) are read.
+    unsafe {
+        let mut acc = [_mm256_setzero_si256(); NR];
+        let mut k = 0usize;
+        while k + K_ALIGN <= k_pad {
+            let xv = _mm256_cvtepi8_epi16(_mm_loadu_si128(patch.add(k) as *const __m128i));
+            for j in 0..nf {
+                let wv =
+                    _mm256_cvtepi8_epi16(_mm_loadu_si128(filt[j].add(k) as *const __m128i));
+                acc[j] = _mm256_add_epi32(acc[j], _mm256_madd_epi16(xv, wv));
+            }
+            k += K_ALIGN;
         }
-        k += K_ALIGN;
-    }
-    for j in 0..nf {
-        out[j] = hsum_epi32(acc[j]);
+        for j in 0..nf {
+            out[j] = hsum_epi32(acc[j]);
+        }
     }
 }
 
 /// Horizontal sum of 8 i32 lanes.
+///
+/// # Safety
+///
+/// The CPU must support AVX2 (the only unsafe ingredient — the fn is
+/// register-only, touching no memory); called exclusively from
+/// [`dot_block_avx2`], which has the same contract.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn hsum_epi32(v: std::arch::x86_64::__m256i) -> i32 {
     use std::arch::x86_64::*;
-    let hi = _mm256_extracti128_si256(v, 1);
-    let lo = _mm256_castsi256_si128(v);
-    let s = _mm_add_epi32(hi, lo);
-    let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b01_00_11_10));
-    let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b00_00_00_01));
-    _mm_cvtsi128_si32(s)
+    // SAFETY: AVX2 available per the fn contract; register-only ops.
+    unsafe {
+        let hi = _mm256_extracti128_si256(v, 1);
+        let lo = _mm256_castsi256_si128(v);
+        let s = _mm_add_epi32(hi, lo);
+        let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b01_00_11_10));
+        let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b00_00_00_01));
+        _mm_cvtsi128_si32(s)
+    }
 }
 
 #[cfg(test)]

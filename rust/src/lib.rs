@@ -36,6 +36,13 @@
 //! * [`sim::Simulator`] — replay a skip-trace on the cycle-level model.
 //! * [`figures`] — regenerate every table/figure of the paper.
 
+// Every unsafe operation must sit in its own `unsafe {}` block with an
+// adjacent `// SAFETY:` justification, even inside unsafe fns — the
+// contract `tools/unsafe_audit.sh` lints for. The only unsafe code in
+// the crate is the AVX2 kernels (`engine/dot.rs`, `engine/gemm.rs`)
+// and the counting allocator (`util/alloc_count.rs`).
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod cli;
 pub mod cluster;
 pub mod config;

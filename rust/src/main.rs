@@ -39,6 +39,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "simulate" => cmd_simulate(args),
         "figures" => cmd_figures(args),
         "serve" => cmd_serve(args),
+        "lint" => cmd_lint(args),
         "info" => cmd_info(args),
         "predictors" => cmd_predictors(),
         "help" | "" => {
@@ -294,6 +295,127 @@ fn cmd_serve(args: &Args) -> Result<()> {
         },
     )?;
     report.print(model);
+    Ok(())
+}
+
+fn cmd_lint(args: &Args) -> Result<()> {
+    use mor::config::PredictorConfig;
+    use mor::model::{synth, Model};
+    use mor::plan;
+    use mor::predictor::{MorPolicy, RunOpts};
+    use mor::util::json::{obj, Json};
+    use mor::util::rng::Rng;
+
+    let seed = args.opt_usize("seed", 7)? as u64;
+    let n_random = args.opt_usize("random-models", 8)?;
+
+    // Models to lint: one real artifact model under --model, otherwise
+    // the synthetic zoo (the same generators the plan test suites use).
+    let models: Vec<Model> = match args.opt("model") {
+        Some(name) => {
+            let dir = args.opt_or("artifacts", mor::DEFAULT_ARTIFACTS_DIR);
+            vec![Artifacts::load(dir, name)?.model]
+        }
+        None => {
+            let mut zoo = vec![synth::cnn10_like(seed), synth::tiny_serving_model(seed)];
+            let mut sparse = synth::tiny_serving_model(seed);
+            synth::sparsify_weights(&mut sparse, seed, 90);
+            sparse.name = format!("{}_sparse90", sparse.name);
+            zoo.push(sparse);
+            let mut rng = Rng::new(seed);
+            zoo.extend((0..n_random).map(|_| synth::random_model(&mut rng)));
+            zoo
+        }
+    };
+
+    // Each model is compiled and verified under every frozen-decision
+    // axis: input-sparsity mode × exact weight-sparsity mode × with and
+    // without a MoR policy. One clean bill per configuration.
+    let mut configs = 0usize;
+    let (mut errors, mut warnings) = (0usize, 0usize);
+    let mut json_models = Vec::new();
+    for model in &models {
+        let params = synth::predictor_for(model, seed);
+        let policy = MorPolicy::new(model, &params, PredictorConfig::default());
+        let mut json_configs = Vec::new();
+        let mut model_errors = 0usize;
+        let mut model_warnings = 0usize;
+        for is in InputSparsity::ALL {
+            for ws in WeightSparsity::EXACT_MODES {
+                for pol in [None, Some(&policy)] {
+                    let opts = RunOpts {
+                        input_sparsity: is,
+                        weight_sparsity: ws,
+                        ..Default::default()
+                    };
+                    let compiled = plan::compile(model, pol, opts);
+                    let report = plan::verify(&compiled, model, pol);
+                    configs += 1;
+                    model_errors += report.errors();
+                    model_warnings += report.warnings();
+                    if args.flag("json") {
+                        json_configs.push(obj(vec![
+                            ("input_sparsity", Json::Str(is.name().to_string())),
+                            ("weight_sparsity", Json::Str(ws.name())),
+                            ("policy", Json::Bool(pol.is_some())),
+                            ("findings", report.to_json()),
+                        ]));
+                    } else if !report.is_clean() {
+                        println!(
+                            "[{}] input-sparsity={} weight-sparsity={} policy={}",
+                            model.name,
+                            is.name(),
+                            ws.name(),
+                            pol.is_some()
+                        );
+                        for line in report.to_string().lines() {
+                            println!("    {line}");
+                        }
+                    }
+                }
+            }
+        }
+        errors += model_errors;
+        warnings += model_warnings;
+        if args.flag("json") {
+            json_models.push(obj(vec![
+                ("model", Json::Str(model.name.clone())),
+                ("errors", Json::Num(model_errors as f64)),
+                ("warnings", Json::Num(model_warnings as f64)),
+                ("configs", Json::Arr(json_configs)),
+            ]));
+        } else {
+            println!(
+                "[{}] {} plan configuration(s): {}",
+                model.name,
+                InputSparsity::ALL.len() * WeightSparsity::EXACT_MODES.len() * 2,
+                if model_errors == 0 && model_warnings == 0 {
+                    "clean".to_string()
+                } else {
+                    format!("{model_errors} error(s), {model_warnings} warning(s)")
+                }
+            );
+        }
+    }
+
+    if args.flag("json") {
+        let doc = obj(vec![
+            ("models", Json::Arr(json_models)),
+            ("configs", Json::Num(configs as f64)),
+            ("errors", Json::Num(errors as f64)),
+            ("warnings", Json::Num(warnings as f64)),
+        ]);
+        println!("{doc}");
+    } else {
+        println!(
+            "mor lint: {} model(s) × plan configs = {configs} verified | \
+             {errors} error(s), {warnings} warning(s)",
+            models.len()
+        );
+    }
+    if errors > 0 {
+        bail!("mor lint found {errors} error-severity finding(s)");
+    }
     Ok(())
 }
 

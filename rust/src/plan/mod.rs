@@ -32,13 +32,24 @@
 //! pool, and re-uses the plan across requests — and across threshold
 //! sweeps, since a re-thresholded policy keeps the same layer set.
 //!
+//! * [`verify()`] statically checks a frozen plan against its model —
+//!   slot liveness and residual wiring, scratch-mark domination, the
+//!   frozen sparsity/policy decisions — without executing a step. It
+//!   backs the `mor lint` subcommand, runs automatically in debug
+//!   builds at `Session::finish()`, and its mutation suite
+//!   (`tests/plan_verify.rs`) proves each invariant is actually
+//!   enforced.
+//!
 //! See EXPERIMENTS.md §Plan for the sizing rules and how a new layer
-//! kind registers a step.
+//! kind registers a step, and §Lint for the verifier's invariant
+//! catalogue.
 
 pub mod compile;
 pub mod execute;
+pub mod verify;
 pub mod workspace;
 
 pub use compile::{compile, ComputeStep, ModelPlan, Src, StepPlan};
 pub use execute::{execute, execute_into};
+pub use verify::{verify, Finding, LintReport, Severity};
 pub use workspace::{PooledWorkspace, WorkerScratch, Workspace, WorkspacePool};

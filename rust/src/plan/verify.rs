@@ -1,0 +1,830 @@
+//! Static plan verifier — prove a frozen [`ModelPlan`]'s structural
+//! invariants **without executing it** (`mor lint`, and the debug-build
+//! assertion at `Session::finish()`).
+//!
+//! The plan/execute split (PR 5/6) moved every correctness-critical
+//! decision out of the request path and into compile time: slot wiring
+//! from the liveness analysis, scratch high-water marks, per-layer
+//! sparse-vs-dense kernel choices, residual/BN indices, the oracle
+//! accounting flag. The property suites exercise those decisions
+//! dynamically, on inputs we happened to generate; this pass checks
+//! them *statically*, by walking the plan against its model and
+//! re-deriving what each frozen field must be. A plan that lints clean
+//! cannot read an activation slot before it is written, alias two live
+//! tensors onto one slot, undersize a workspace buffer, or run a kernel
+//! the `engine/crossover.rs` cutoffs (or the u16 lane-index range)
+//! forbid.
+//!
+//! Invariant catalogue (finding `code` prefixes):
+//!
+//! * `plan.*` — plan/model correspondence: one step per node, matching
+//!   kinds, matching node indices.
+//! * `slot.*` — the activation-slot register allocation: indices in
+//!   range, no step overwrites its own live inputs, a forward
+//!   simulation of slot contents proves every read (graph edge and
+//!   residual edge alike) sees exactly the producer it expects (this
+//!   one mechanism catches read-before-write, aliased live tensors and
+//!   mis-wired residuals, with distinct diagnostics), the logits slot
+//!   holds the last node's output, slots are big enough for every
+//!   tensor they host, and the slot count equals the liveness peak
+//!   (O(1) for chains — more is a waste warning, fewer is impossible
+//!   without an aliasing bug).
+//! * `scratch.*` — the workspace high-water marks dominate the
+//!   worst-case tile of every layer geometry (undersized marks are
+//!   errors: they mean a buffer the executor indexes out of capacity;
+//!   oversized marks are warnings: wasted memory, not wrong results).
+//! * `geom.*` — frozen geometry fields re-derived from the model:
+//!   conv/FC output shape, row count, filter count, dot length, its
+//!   [`pad_k`]-aligned padding (what the AVX2 block kernel's `# Safety`
+//!   contract relies on), quantization scales.
+//! * `sparsity.*` — the frozen kernel decisions against the documented
+//!   [`crossover`] cutoffs: the lane builder must run iff the mode asks
+//!   for it *and* the dot length fits the u16 lane index
+//!   ([`SPARSE_K_MAX`]); `Auto`'s pre-multiplied cutoff must equal
+//!   `sparse_auto_cutoff() * k_len`; the weight-sparse flag must match
+//!   the prepacked per-layer density against
+//!   [`crossover::weight_sparse_cutoff`].
+//! * `policy.*` — the policied-layer set matches the prepared policy,
+//!   and the oracle accounting flag is on exactly when `RunOpts`
+//!   requests it or the oracle strategy runs.
+//! * `mac.*` — the MAC-partition identity `(total − done) + input_zero
+//!   + weight_zero + effectual == total` is derivable from plan
+//!   metadata alone: per layer, `rows * cout * k_len` (the plan's
+//!   `total`) must equal the model's [`Model::mac_counts`], and `k_len`
+//!   must tile the consumed tensor exactly — otherwise the engines'
+//!   per-lane attribution could not sum back to the model's totals.
+//!
+//! The mutation suite (`rust/tests/plan_verify.rs`) corrupts plans in
+//! each of these dimensions and asserts the right diagnostic fires;
+//! every pristine synthetic model must lint clean in every sparsity
+//! mode.
+
+use super::compile::{ModelPlan, Src, StepPlan};
+use crate::engine::gemm::{self, pad_k, K_ALIGN, SPARSE_K_MAX};
+use crate::engine::{conv_geom, crossover, ConvGeom, InputSparsity, WeightSparsity};
+use crate::model::{Model, Node};
+use crate::predictor::strategies::Strategy;
+use crate::predictor::MorPolicy;
+use crate::util::json::{obj, Json};
+use std::fmt;
+
+/// How bad a finding is. `Error` means executing the plan can read
+/// wrong data or index out of a presized buffer; `Warning` means the
+/// plan is safe but wasteful (extra slots, oversized marks).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl Severity {
+    pub fn name(self) -> &'static str {
+        match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// One verifier diagnostic: a stable machine-readable `code` (the
+/// mutation suite pins corruptions to codes), the step it anchors to
+/// (`None` for plan-level findings) and a human message.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub code: &'static str,
+    pub severity: Severity,
+    /// Step index the finding is about, if any.
+    pub step: Option<usize>,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.step {
+            Some(s) => write!(
+                f,
+                "{}[{}] step {}: {}",
+                self.severity.name(),
+                self.code,
+                s,
+                self.message
+            ),
+            None => write!(f, "{}[{}] {}", self.severity.name(), self.code, self.message),
+        }
+    }
+}
+
+/// Everything [`verify`] found about one plan.
+#[derive(Clone, Debug, Default)]
+pub struct LintReport {
+    pub findings: Vec<Finding>,
+}
+
+impl LintReport {
+    /// No findings at all (not even warnings).
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Number of `Error`-severity findings — the exit-code driver.
+    pub fn errors(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Error).count()
+    }
+
+    pub fn warnings(&self) -> usize {
+        self.findings.len() - self.errors()
+    }
+
+    /// Is a finding with this code present (any severity)?
+    pub fn has(&self, code: &str) -> bool {
+        self.findings.iter().any(|f| f.code == code)
+    }
+
+    /// Machine-readable form for `mor lint --json`.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.findings
+                .iter()
+                .map(|f| {
+                    obj(vec![
+                        ("code", Json::Str(f.code.to_string())),
+                        ("severity", Json::Str(f.severity.name().to_string())),
+                        (
+                            "step",
+                            f.step.map(|s| Json::Num(s as f64)).unwrap_or(Json::Null),
+                        ),
+                        ("message", Json::Str(f.message.clone())),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+impl fmt::Display for LintReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_clean() {
+            return write!(f, "clean");
+        }
+        for (i, finding) in self.findings.iter().enumerate() {
+            if i > 0 {
+                writeln!(f)?;
+            }
+            write!(f, "{finding}")?;
+        }
+        Ok(())
+    }
+}
+
+struct Lint {
+    findings: Vec<Finding>,
+}
+
+impl Lint {
+    fn error(&mut self, code: &'static str, step: Option<usize>, message: String) {
+        self.findings.push(Finding { code, severity: Severity::Error, step, message });
+    }
+
+    fn warn(&mut self, code: &'static str, step: Option<usize>, message: String) {
+        self.findings.push(Finding { code, severity: Severity::Warning, step, message });
+    }
+}
+
+/// Statically verify `plan` against the `model` (and `policy`) it was
+/// compiled for. Pure inspection: no activations are touched, no step
+/// executes; weight data is only read through the shared prepack cache,
+/// and only when the plan's weight-sparsity mode is on (mirroring
+/// [`super::compile`]'s own short-circuit).
+///
+/// ```
+/// use mor::model::synth;
+/// use mor::plan;
+/// use mor::predictor::RunOpts;
+///
+/// let model = synth::cnn10_like(3);
+/// let p = plan::compile(&model, None, RunOpts::default());
+/// let report = plan::verify(&p, &model, None);
+/// assert!(report.is_clean(), "{report}");
+/// ```
+pub fn verify(plan: &ModelPlan, model: &Model, policy: Option<&MorPolicy>) -> LintReport {
+    let mut l = Lint { findings: Vec::new() };
+    let n = model.nodes.len();
+    let shapes = model.node_shapes();
+    let relu_layers = model.relu_layers();
+    let mac_counts = model.mac_counts();
+
+    // ---- plan/model correspondence ------------------------------------
+    if plan.n_nodes != n || plan.steps.len() != n {
+        l.error(
+            "plan.nodes",
+            None,
+            format!(
+                "plan covers {} steps / {} nodes but the model has {} nodes",
+                plan.steps.len(),
+                plan.n_nodes,
+                n
+            ),
+        );
+        // everything below indexes steps and nodes in lockstep
+        return LintReport { findings: l.findings };
+    }
+    if plan.slot_elems.len() != plan.n_slots {
+        l.error(
+            "slot.elems-len",
+            None,
+            format!(
+                "slot_elems has {} entries for n_slots = {}",
+                plan.slot_elems.len(),
+                plan.n_slots
+            ),
+        );
+    }
+    let (ih, iw, ic) = model.input_shape;
+    if plan.input_elems != ih * iw * ic {
+        l.error(
+            "scratch.input",
+            None,
+            format!(
+                "input_elems = {} but the model input is {}x{}x{} = {}",
+                plan.input_elems,
+                ih,
+                iw,
+                ic,
+                ih * iw * ic
+            ),
+        );
+    }
+
+    // ---- reference liveness: what the slot map must satisfy -----------
+    // last step that reads each node's output (graph edge or residual)
+    let mut last_use: Vec<usize> = (0..n).collect();
+    for (i, nd) in model.nodes.iter().enumerate() {
+        if nd.consumes() >= 0 {
+            let v = nd.consumes() as usize;
+            last_use[v] = last_use[v].max(i);
+        }
+        if let Node::Conv { res_from: Some(r), .. } | Node::Fc { res_from: Some(r), .. } =
+            nd
+        {
+            last_use[*r] = last_use[*r].max(i);
+        }
+    }
+    if n > 0 {
+        last_use[n - 1] = usize::MAX; // the logits outlive the walk
+    }
+    // peak simultaneous liveness = the minimal slot count any allocator
+    // can achieve (a step's output overlaps every input it still reads)
+    let mut peak = 0usize;
+    for i in 0..n {
+        let live = (0..=i).filter(|&v| last_use[v] >= i).count();
+        peak = peak.max(live);
+    }
+    if plan.n_slots < peak {
+        l.error(
+            "slot.count",
+            None,
+            format!(
+                "{} slots cannot host a liveness peak of {} tensors",
+                plan.n_slots, peak
+            ),
+        );
+    } else if plan.n_slots > peak {
+        l.warn(
+            "slot.excess",
+            None,
+            format!(
+                "{} slots allocated but peak liveness is {} (wasted workspace)",
+                plan.n_slots, peak
+            ),
+        );
+    }
+
+    // ---- forward slot-contents simulation ------------------------------
+    // contents[k] = node whose output currently occupies slot k. Every
+    // read must find exactly the producer the graph names; a clobbered
+    // or mis-wired slot surfaces as a stale/foreign producer.
+    let mut contents: Vec<Option<usize>> = vec![None; plan.n_slots];
+    let strategy: Option<Strategy> = policy.map(|p| p.cfg.strategy);
+    let policied_set = |i: usize| policy.is_some_and(|p| p.layers.contains_key(&i));
+
+    // max over compute layers, recomputed for the scratch-mark checks
+    let mut want_cout = 0usize;
+    let mut want_k_len = 0usize;
+    let mut want_row_elems = 0usize;
+    let mut want_qt_elems = 0usize;
+    let mut want_lanes_k_len = 0usize;
+
+    for (i, (step, nd)) in plan.steps.iter().zip(&model.nodes).enumerate() {
+        let (node_idx, src, dst, res) = match step {
+            StepPlan::Compute(c) => (c.node, c.src, c.dst, c.res),
+            StepPlan::MaxPool { node, src, dst, .. }
+            | StepPlan::Gap { node, src, dst, .. }
+            | StepPlan::Relu { node, src, dst, .. } => (*node, *src, *dst, None),
+        };
+        if node_idx != i {
+            l.error(
+                "plan.node-index",
+                Some(i),
+                format!("step carries node index {node_idx}"),
+            );
+        }
+        let kind_ok = matches!(
+            (step, nd),
+            (StepPlan::Compute(_), Node::Conv { .. } | Node::Fc { .. })
+                | (StepPlan::MaxPool { .. }, Node::MaxPool { .. })
+                | (StepPlan::Gap { .. }, Node::Gap { .. })
+                | (StepPlan::Relu { .. }, Node::Relu { .. })
+        );
+        if !kind_ok {
+            l.error(
+                "plan.step-kind",
+                Some(i),
+                format!("step kind does not match the model's {nd:?}"),
+            );
+            continue;
+        }
+
+        // -- slot indices in range ---------------------------------------
+        let mut in_range = true;
+        if dst >= plan.n_slots {
+            l.error(
+                "slot.range",
+                Some(i),
+                format!("dst slot {dst} out of range (n_slots = {})", plan.n_slots),
+            );
+            in_range = false;
+        }
+        if let Src::Slot(k) = src {
+            if k >= plan.n_slots {
+                l.error(
+                    "slot.range",
+                    Some(i),
+                    format!("src slot {k} out of range (n_slots = {})", plan.n_slots),
+                );
+                in_range = false;
+            }
+        }
+        if let Some(r) = res {
+            if r >= plan.n_slots {
+                l.error(
+                    "slot.range",
+                    Some(i),
+                    format!("residual slot {r} out of range (n_slots = {})", plan.n_slots),
+                );
+                in_range = false;
+            }
+        }
+
+        // -- a step never writes over its own still-live inputs ----------
+        if let Src::Slot(k) = src {
+            if k == dst {
+                l.error(
+                    "slot.self-overwrite",
+                    Some(i),
+                    format!("dst slot {dst} is also the src slot"),
+                );
+            }
+        }
+        if res == Some(dst) {
+            l.error(
+                "slot.self-overwrite",
+                Some(i),
+                format!("dst slot {dst} is also the residual slot"),
+            );
+        }
+
+        // -- graph edge: src must hold exactly the consumed output -------
+        if nd.consumes() < 0 {
+            if src != Src::Input {
+                l.error(
+                    "slot.src-kind",
+                    Some(i),
+                    format!("node consumes the model input but src is {src:?}"),
+                );
+            }
+        } else {
+            let want = nd.consumes() as usize;
+            match src {
+                Src::Input => l.error(
+                    "slot.src-kind",
+                    Some(i),
+                    format!("node consumes node {want}'s output but src is Input"),
+                ),
+                Src::Slot(k) if k < plan.n_slots => match contents[k] {
+                    None => l.error(
+                        "slot.read-before-write",
+                        Some(i),
+                        format!("src slot {k} read before any step wrote it"),
+                    ),
+                    Some(have) if have != want => l.error(
+                        "slot.aliased",
+                        Some(i),
+                        format!(
+                            "src slot {k} holds node {have}'s output, expected node {want}'s \
+                             (live tensor aliased or clobbered)"
+                        ),
+                    ),
+                    Some(_) => {}
+                },
+                Src::Slot(_) => {} // already reported slot.range
+            }
+        }
+
+        // -- residual edge ------------------------------------------------
+        let res_from = match nd {
+            Node::Conv { res_from, .. } | Node::Fc { res_from, .. } => *res_from,
+            _ => None,
+        };
+        match (res_from, res) {
+            (None, None) => {}
+            (Some(r), None) => l.error(
+                "slot.residual",
+                Some(i),
+                format!("node has res_from = {r} but the step carries no residual slot"),
+            ),
+            (None, Some(k)) => l.error(
+                "slot.residual",
+                Some(i),
+                format!("step carries residual slot {k} but the node has no res_from"),
+            ),
+            (Some(r), Some(k)) if k < plan.n_slots => match contents[k] {
+                Some(have) if have == r => {}
+                Some(have) => l.error(
+                    "slot.residual",
+                    Some(i),
+                    format!(
+                        "residual slot {k} holds node {have}'s output, expected node {r}'s"
+                    ),
+                ),
+                None => l.error(
+                    "slot.residual",
+                    Some(i),
+                    format!("residual slot {k} read before any step wrote it"),
+                ),
+            },
+            (Some(_), Some(_)) => {} // already reported slot.range
+        }
+
+        // -- the output fits its slot ------------------------------------
+        let (oh, ow, oc) = shapes[i];
+        let out_elems = oh * ow * oc;
+        if in_range && dst < plan.slot_elems.len() && plan.slot_elems[dst] < out_elems {
+            l.error(
+                "slot.undersized",
+                Some(i),
+                format!(
+                    "dst slot {dst} sized for {} elems but the output is {}x{}x{} = {}",
+                    plan.slot_elems[dst], oh, ow, oc, out_elems
+                ),
+            );
+        }
+
+        // -- compute-step frozen fields ----------------------------------
+        if let (StepPlan::Compute(c), Node::Conv { .. } | Node::Fc { .. }) = (step, nd) {
+            let (sh, sw2, sc) = if nd.consumes() < 0 {
+                model.input_shape
+            } else {
+                shapes[nd.consumes() as usize]
+            };
+            let (want_geom, wkh, wkw, wstride) = match nd {
+                Node::Conv { kh, kw, stride, pad_same, .. } => (
+                    conv_geom(sh, sw2, *kh, *kw, *stride, *pad_same),
+                    *kh,
+                    *kw,
+                    *stride,
+                ),
+                _ => (ConvGeom { oh: sh, ow: sw2, pad_top: 0, pad_left: 0 }, 0, 0, 1),
+            };
+            if c.geom != want_geom
+                || c.kh != wkh
+                || c.kw != wkw
+                || c.stride != wstride
+                || c.is_conv != matches!(nd, Node::Conv { .. })
+            {
+                l.error(
+                    "geom.shape",
+                    Some(i),
+                    format!(
+                        "frozen geometry {:?} (kh {} kw {} stride {}) differs from the \
+                         model's {:?} (kh {wkh} kw {wkw} stride {wstride})",
+                        c.geom, c.kh, c.kw, c.stride, want_geom
+                    ),
+                );
+            }
+            if c.rows != want_geom.oh * want_geom.ow {
+                l.error(
+                    "geom.rows",
+                    Some(i),
+                    format!(
+                        "rows = {} but the output geometry is {}x{}",
+                        c.rows, want_geom.oh, want_geom.ow
+                    ),
+                );
+            }
+            if c.cout != nd.cout() {
+                l.error(
+                    "geom.cout",
+                    Some(i),
+                    format!("cout = {} but the node has {} filters", c.cout, nd.cout()),
+                );
+            }
+            if c.k_len != nd.k_len() {
+                l.error(
+                    "geom.k-len",
+                    Some(i),
+                    format!("k_len = {} but the node's dot length is {}", c.k_len, nd.k_len()),
+                );
+            }
+            // the AVX2 block kernel's # Safety contract: every filter
+            // pointer addresses exactly k_pad = pad_k(k_len) bytes, a
+            // multiple of K_ALIGN
+            if c.k_pad != pad_k(c.k_len) || c.k_pad % K_ALIGN != 0 || c.k_pad < c.k_len {
+                l.error(
+                    "geom.k-pad",
+                    Some(i),
+                    format!(
+                        "k_pad = {} violates the kernel contract pad_k({}) = {}",
+                        c.k_pad,
+                        c.k_len,
+                        pad_k(c.k_len)
+                    ),
+                );
+            }
+            let (want_sx, want_sw) = match nd {
+                Node::Conv { sx, sw, .. } | Node::Fc { sx, sw, .. } => (*sx, *sw),
+                _ => unreachable!("compute step checked above"),
+            };
+            if c.sx != want_sx || c.dq != want_sw * want_sx {
+                l.error(
+                    "geom.scale",
+                    Some(i),
+                    format!(
+                        "quantization scales (sx {}, dq {}) differ from the node's \
+                         (sx {want_sx}, dq {})",
+                        c.sx,
+                        c.dq,
+                        want_sw * want_sx
+                    ),
+                );
+            }
+            if c.node_relu != nd.relu() || c.is_relu_layer != relu_layers.contains(&i) {
+                l.error(
+                    "geom.relu",
+                    Some(i),
+                    format!(
+                        "relu flags (node_relu {}, is_relu_layer {}) differ from the \
+                         model's ({}, {})",
+                        c.node_relu,
+                        c.is_relu_layer,
+                        nd.relu(),
+                        relu_layers.contains(&i)
+                    ),
+                );
+            }
+
+            // MAC-partition identity: total = rows * cout * k_len must be
+            // the model's per-layer MAC count, and k_len must cover the
+            // consumed tensor (FC) / the kernel window (conv) exactly, or
+            // the per-lane input-zero / weight-zero / effectual
+            // attribution could not sum back to (total - done)
+            let want_k = match nd {
+                Node::Conv { kh, kw, cin, .. } => kh * kw * cin,
+                Node::Fc { cin, .. } => {
+                    if sh * sw2 * sc != *cin {
+                        l.error(
+                            "mac.partition",
+                            Some(i),
+                            format!(
+                                "FC consumes {sh}x{sw2}x{sc} = {} elems but cin = {cin}",
+                                sh * sw2 * sc
+                            ),
+                        );
+                    }
+                    *cin
+                }
+                _ => unreachable!("compute step checked above"),
+            };
+            let total = (c.rows * c.cout * want_k) as u64;
+            if total != mac_counts[i] {
+                l.error(
+                    "mac.partition",
+                    Some(i),
+                    format!(
+                        "plan-derived MAC total {total} != model mac_counts {} — the \
+                         (total-done)+input_zero+weight_zero+effectual identity is not \
+                         derivable from this plan",
+                        mac_counts[i]
+                    ),
+                );
+            }
+
+            // input-sparsity decision: the lane builder runs iff the mode
+            // asks for it AND the dot length fits the u16 lane index
+            let want_lanes =
+                plan.opts.input_sparsity != InputSparsity::Off && c.k_len <= SPARSE_K_MAX;
+            if c.lanes != want_lanes {
+                l.error(
+                    "sparsity.lanes",
+                    Some(i),
+                    format!(
+                        "lanes = {} but mode {:?} with k_len {} (SPARSE_K_MAX {}) \
+                         requires {}",
+                        c.lanes, plan.opts.input_sparsity, c.k_len, SPARSE_K_MAX, want_lanes
+                    ),
+                );
+            }
+            let want_cutoff = match plan.opts.input_sparsity {
+                InputSparsity::Off => 0.0,
+                InputSparsity::On => f32::INFINITY,
+                InputSparsity::Auto => gemm::sparse_auto_cutoff() * c.k_len.max(1) as f32,
+            };
+            if c.sparse_cutoff != want_cutoff {
+                l.error(
+                    "sparsity.cutoff",
+                    Some(i),
+                    format!(
+                        "sparse_cutoff = {} but mode {:?} requires {} (crossover {} x \
+                         k_len {})",
+                        c.sparse_cutoff,
+                        plan.opts.input_sparsity,
+                        want_cutoff,
+                        gemm::sparse_auto_cutoff(),
+                        c.k_len
+                    ),
+                );
+            }
+            // weight-sparsity decision: per-layer, from the frozen
+            // prepacked density (only read when the mode is on, mirroring
+            // compile's short-circuit — Off must never touch the cache)
+            let want_w_sparse = plan.opts.weight_sparsity != WeightSparsity::Off && {
+                let pf = model.prepacked().layer(i);
+                pf.has_lanes() && pf.density() < crossover::weight_sparse_cutoff()
+            };
+            if c.w_sparse != want_w_sparse {
+                let detail = if plan.opts.weight_sparsity == WeightSparsity::Off {
+                    "mode off forbids the weight-sparse kernels".to_string()
+                } else {
+                    let pf = model.prepacked().layer(i);
+                    format!(
+                        "prepacked density {} vs crossover {} (has_lanes {})",
+                        pf.density(),
+                        crossover::weight_sparse_cutoff(),
+                        pf.has_lanes()
+                    )
+                };
+                l.error(
+                    "sparsity.weight",
+                    Some(i),
+                    format!("w_sparse = {} but {detail} requires {want_w_sparse}", c.w_sparse),
+                );
+            }
+
+            // policy wiring
+            let want_policied = policied_set(i);
+            if c.policied != want_policied {
+                l.error(
+                    "policy.set",
+                    Some(i),
+                    format!(
+                        "policied = {} but the prepared policy {} layer {i}",
+                        c.policied,
+                        if want_policied { "contains" } else { "does not contain" }
+                    ),
+                );
+            }
+            let want_oracle =
+                plan.opts.oracle || (want_policied && strategy == Some(Strategy::Oracle));
+            if c.oracle != want_oracle {
+                l.error(
+                    "policy.oracle",
+                    Some(i),
+                    format!(
+                        "oracle = {} but opts.oracle = {} and strategy {:?} require {}",
+                        c.oracle, plan.opts.oracle, strategy, want_oracle
+                    ),
+                );
+            }
+
+            want_cout = want_cout.max(nd.cout());
+            want_k_len = want_k_len.max(nd.k_len());
+            want_row_elems = want_row_elems.max((want_geom.oh * want_geom.ow) * nd.cout());
+            want_qt_elems = want_qt_elems.max(sh * sw2 * sc);
+            if plan.opts.input_sparsity != InputSparsity::Off && nd.k_len() <= SPARSE_K_MAX {
+                want_lanes_k_len = want_lanes_k_len.max(nd.k_len());
+            }
+        }
+
+        if dst < plan.n_slots {
+            contents[dst] = Some(i);
+        }
+    }
+
+    // ---- the logits come out of the right slot -------------------------
+    if n > 0 {
+        if plan.logits_slot >= plan.n_slots {
+            l.error(
+                "slot.logits",
+                None,
+                format!(
+                    "logits_slot = {} out of range (n_slots = {})",
+                    plan.logits_slot, plan.n_slots
+                ),
+            );
+        } else if contents[plan.logits_slot] != Some(n - 1) {
+            l.error(
+                "slot.logits",
+                None,
+                format!(
+                    "logits_slot {} holds {:?}, expected node {}'s output",
+                    plan.logits_slot,
+                    contents[plan.logits_slot],
+                    n - 1
+                ),
+            );
+        }
+    }
+
+    // ---- scratch high-water marks dominate every layer ------------------
+    for (code, have, want) in [
+        ("scratch.cout", plan.max_cout, want_cout),
+        ("scratch.k-len", plan.max_k_len, want_k_len),
+        ("scratch.rows", plan.max_row_elems, want_row_elems),
+        ("scratch.qt", plan.max_qt_elems, want_qt_elems),
+        ("scratch.lanes", plan.max_lanes_k_len, want_lanes_k_len),
+    ] {
+        if have < want {
+            l.error(
+                code,
+                None,
+                format!(
+                    "high-water mark {have} is below the worst-case layer's {want} — a \
+                     presized workspace buffer would be indexed past its capacity"
+                ),
+            );
+        } else if have > want {
+            l.warn(
+                code,
+                None,
+                format!("high-water mark {have} exceeds the worst-case layer's {want}"),
+            );
+        }
+    }
+
+    // ---- the policied-layer set is the policy's ------------------------
+    let want_policied: Vec<usize> =
+        policy.map(|p| p.layers.keys().copied().collect()).unwrap_or_default();
+    if plan.policied != want_policied {
+        l.error(
+            "policy.set",
+            None,
+            format!(
+                "plan.policied = {:?} but the prepared policy's layer set is {:?}",
+                plan.policied, want_policied
+            ),
+        );
+    }
+
+    LintReport { findings: l.findings }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::synth;
+    use crate::predictor::RunOpts;
+
+    #[test]
+    fn pristine_plans_lint_clean() {
+        for seed in [1u64, 9, 23] {
+            let m = synth::cnn10_like(seed);
+            let plan = super::super::compile(&m, None, RunOpts::default());
+            let report = verify(&plan, &m, None);
+            assert!(report.is_clean(), "cnn10_like({seed}): {report}");
+        }
+    }
+
+    #[test]
+    fn corrupted_slot_is_flagged() {
+        let m = synth::tiny_serving_model(4);
+        let mut plan = super::super::compile(&m, None, RunOpts::default());
+        if let StepPlan::Compute(c) = &mut plan.steps[0] {
+            c.dst = 99;
+        }
+        let report = verify(&plan, &m, None);
+        assert!(report.has("slot.range"), "{report}");
+        assert!(report.errors() > 0);
+    }
+
+    #[test]
+    fn report_display_and_json_carry_the_code() {
+        let m = synth::tiny_serving_model(4);
+        let mut plan = super::super::compile(&m, None, RunOpts::default());
+        plan.max_k_len = 0;
+        let report = verify(&plan, &m, None);
+        assert!(report.has("scratch.k-len"));
+        let text = report.to_string();
+        assert!(text.contains("scratch.k-len"), "{text}");
+        let json = report.to_json().to_string();
+        assert!(json.contains("scratch.k-len"), "{json}");
+    }
+}

@@ -39,9 +39,9 @@ use crate::engine::{PatchGather, QuantizedTensor, Tensor};
 use crate::predictor::{OpsStats, PredStats, RunResult};
 use crate::util::bits::PackedVec;
 use crate::util::reserve_capacity;
+use crate::util::sync::{AtomicUsize, Mutex, Ordering};
 use std::ops::{Deref, DerefMut};
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 /// Per-worker (per row-tile thread) scratch: everything one
 /// `process_row_range` invocation writes besides the output rows.
@@ -252,9 +252,25 @@ impl Workspace {
 /// free list is empty a fresh workspace is created, so the pool grows
 /// to the peak concurrency and then stabilizes — each serve worker
 /// checks one out for its whole lifetime and returns it on drop.
+///
+/// The pool invariants are pinned as `debug_assert!`s *inside* the
+/// implementation (not just in tests), so the loom model
+/// (`rust/tests/loom_models.rs`), the unit tests and every debug build
+/// check the same properties: at all times `outstanding <= created`
+/// (the pool grows to the peak concurrency exactly once — a checkout
+/// can never observe more live guards than workspaces ever created),
+/// and the free list never holds more workspaces than were created (a
+/// double return — the aliasing bug — would trip it). The sync types
+/// come from [`crate::util::sync`] so `--cfg loom` explores every
+/// interleaving of these paths.
 pub struct WorkspacePool {
     free: Mutex<Vec<Workspace>>,
     created: AtomicUsize,
+    /// Guards currently live (checkouts minus returns) — only consulted
+    /// by the invariant asserts; `SeqCst` keeps the counters' total
+    /// order consistent so the asserts cannot fire spuriously (checkout
+    /// is once per worker lifetime, never hot).
+    outstanding: AtomicUsize,
 }
 
 impl Default for WorkspacePool {
@@ -268,6 +284,7 @@ impl WorkspacePool {
         WorkspacePool {
             free: Mutex::new(Vec::new()),
             created: AtomicUsize::new(0),
+            outstanding: AtomicUsize::new(0),
         }
     }
 
@@ -278,9 +295,20 @@ impl WorkspacePool {
     pub fn checkout(pool: &Arc<WorkspacePool>) -> PooledWorkspace {
         let reused = pool.free.lock().expect("workspace pool poisoned").pop();
         let ws = reused.unwrap_or_else(|| {
-            pool.created.fetch_add(1, Ordering::Relaxed);
+            pool.created.fetch_add(1, Ordering::SeqCst);
             Workspace::new()
         });
+        // counted after `created`: a guard either reuses a returned
+        // workspace (its drop decremented `outstanding` before pushing
+        // it back) or created a fresh one above, so the live-guard count
+        // can never exceed the created count
+        let before = pool.outstanding.fetch_add(1, Ordering::SeqCst);
+        debug_assert!(
+            before < pool.created.load(Ordering::SeqCst),
+            "workspace pool invariant: {} guards live with only {} workspaces ever created",
+            before + 1,
+            pool.created.load(Ordering::SeqCst)
+        );
         PooledWorkspace {
             ws: Some(ws),
             pool: Arc::clone(pool),
@@ -289,7 +317,7 @@ impl WorkspacePool {
 
     /// Workspaces ever created by this pool (= peak concurrent checkouts).
     pub fn created(&self) -> usize {
-        self.created.load(Ordering::Relaxed)
+        self.created.load(Ordering::SeqCst)
     }
 
     /// Workspaces currently idle in the free list.
@@ -321,8 +349,19 @@ impl DerefMut for PooledWorkspace {
 impl Drop for PooledWorkspace {
     fn drop(&mut self) {
         if let Some(ws) = self.ws.take() {
+            // decrement BEFORE the workspace reappears on the free list:
+            // once pushed it can be checked out again immediately, and
+            // counting the return late would let that checkout observe
+            // `outstanding > created` and trip the invariant spuriously
+            let prev = self.pool.outstanding.fetch_sub(1, Ordering::SeqCst);
+            debug_assert!(prev >= 1, "workspace returned with no guards outstanding");
             // a poisoned pool only loses the workspace, never panics in drop
             if let Ok(mut free) = self.pool.free.lock() {
+                debug_assert!(
+                    free.len() < self.pool.created.load(Ordering::SeqCst),
+                    "workspace pool invariant: returning to a full free list \
+                     (double return / aliased workspace)"
+                );
                 free.push(ws);
             }
         }

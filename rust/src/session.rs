@@ -248,13 +248,32 @@ impl Session {
 }
 
 /// Compile the session's plan (tiled engine only — `ScalarRef` runs the
-/// unplanned reference path).
+/// unplanned reference path). Debug builds re-verify every freshly
+/// compiled plan through the static verifier ([`plan::verify`]) — the
+/// same pass `mor lint` runs — so a compiler regression that mis-wires
+/// a slot or undersizes a scratch mark fails loudly at `finish()`
+/// instead of corrupting activations at serve time. Release builds
+/// skip the check (it is O(nodes²) but, more importantly, redundant:
+/// plans are only produced by `compile`, which debug CI lints).
 fn compile_plan(
     model: &Model,
     policy: Option<&MorPolicy>,
     opts: RunOpts,
 ) -> Option<Arc<ModelPlan>> {
-    (opts.engine == EngineSel::Tiled).then(|| Arc::new(plan::compile(model, policy, opts)))
+    (opts.engine == EngineSel::Tiled).then(|| {
+        let compiled = plan::compile(model, policy, opts);
+        #[cfg(debug_assertions)]
+        {
+            let report = plan::verify(&compiled, model, policy);
+            debug_assert!(
+                report.errors() == 0,
+                "plan verifier found {} error(s) for model '{}':\n{report}",
+                report.errors(),
+                model.name
+            );
+        }
+        Arc::new(compiled)
+    })
 }
 
 /// Builder for [`Session`]; every knob has the same default as the

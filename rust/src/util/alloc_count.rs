@@ -42,21 +42,33 @@ impl CountingAlloc {
     }
 }
 
+// SAFETY: pure pass-through to `System` — every method forwards its
+// arguments unchanged after a TLS counter bump that never allocates or
+// unwinds (`try_with` + `Cell`), so `System`'s own GlobalAlloc contract
+// (layout validity, pointer provenance) is preserved verbatim.
 unsafe impl GlobalAlloc for CountingAlloc {
     unsafe fn alloc(&self, l: Layout) -> *mut u8 {
         Self::bump();
-        System.alloc(l)
+        // SAFETY: caller upholds GlobalAlloc's contract for `l`;
+        // forwarded unchanged.
+        unsafe { System.alloc(l) }
     }
     unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
         Self::bump();
-        System.alloc_zeroed(l)
+        // SAFETY: caller upholds GlobalAlloc's contract for `l`;
+        // forwarded unchanged.
+        unsafe { System.alloc_zeroed(l) }
     }
     unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
         Self::bump();
-        System.realloc(p, l, new_size)
+        // SAFETY: caller guarantees `p` came from this allocator (i.e.
+        // from `System`) with layout `l`; forwarded unchanged.
+        unsafe { System.realloc(p, l, new_size) }
     }
     unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
-        System.dealloc(p, l)
+        // SAFETY: caller guarantees `p` came from this allocator (i.e.
+        // from `System`) with layout `l`; forwarded unchanged.
+        unsafe { System.dealloc(p, l) }
     }
 }
 

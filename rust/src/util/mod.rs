@@ -7,6 +7,7 @@ pub mod bits;
 pub mod json;
 pub mod prop;
 pub mod rng;
+pub mod sync;
 pub mod toml;
 
 /// Column-major/row-major-agnostic ceil-division helper used all over the

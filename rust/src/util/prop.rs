@@ -72,10 +72,14 @@ impl Gen {
 /// with the seed and case index on the first failed case.
 ///
 /// Override the base seed with `MOR_PROP_SEED` to replay a failure.
+/// Under Miri the case count shrinks ~30x (floor 3): the interpreter is
+/// orders of magnitude slower than native, and the undefined-behavior
+/// check it contributes needs case *diversity*, not case volume.
 pub fn property<F>(name: &str, cases: usize, mut f: F)
 where
     F: FnMut(&mut Gen) -> Result<(), String>,
 {
+    let cases = if cfg!(miri) { cases.min((cases / 30).max(3)) } else { cases };
     let base_seed: u64 = std::env::var("MOR_PROP_SEED")
         .ok()
         .and_then(|s| s.parse().ok())

@@ -1,0 +1,27 @@
+//! Synchronization primitives, swappable for [loom]'s model-checked
+//! versions.
+//!
+//! The two bespoke concurrent structures in this crate — the
+//! coordinator's [`crate::coordinator::queue::SharedQueue`] and the
+//! plan layer's [`crate::plan::WorkspacePool`] — import their mutexes,
+//! condvars and atomics from here instead of `std::sync`. Normal builds
+//! re-export `std` (zero cost, identical types); `RUSTFLAGS="--cfg
+//! loom"` builds re-export `loom::sync`, whose scheduler exhaustively
+//! explores every thread interleaving of the models in
+//! `rust/tests/loom_models.rs` (no lost wakeups, no deadlock on close,
+//! exact drop accounting, grow-to-peak-once, no workspace aliasing).
+//!
+//! Only the types those structures use are re-exported, so the shim
+//! cannot drift into a parallel std. `loom` mirrors the `std::sync` API
+//! (including `LockResult` returns), which is what lets the production
+//! sources compile unchanged under both cfgs.
+
+#[cfg(loom)]
+pub use loom::sync::atomic::{AtomicUsize, Ordering};
+#[cfg(loom)]
+pub use loom::sync::{Condvar, Mutex, MutexGuard};
+
+#[cfg(not(loom))]
+pub use std::sync::atomic::{AtomicUsize, Ordering};
+#[cfg(not(loom))]
+pub use std::sync::{Condvar, Mutex, MutexGuard};

@@ -1,0 +1,470 @@
+//! Mutation suite for the static plan verifier (`mor::plan::verify`,
+//! surfaced as `mor lint` — see EXPERIMENTS.md §Lint).
+//!
+//! Two halves:
+//!
+//! * **Pristine plans lint clean** — every synthetic model generator ×
+//!   every input-sparsity mode × every exact weight-sparsity mode ×
+//!   {no policy, MoR policy} compiles to a plan with zero findings.
+//!   This is what lets `Session::finish()` assert cleanliness in debug
+//!   builds without false positives.
+//! * **Each invariant is actually enforced** — we corrupt a compiled
+//!   plan one field at a time (all `ModelPlan`/`ComputeStep` fields are
+//!   public precisely so this suite and the bench harnesses can poke
+//!   them) and assert the verifier reports the *right* diagnostic code,
+//!   not merely "something". A verifier that flags everything as one
+//!   generic error would pass a weaker test and be useless for
+//!   triaging; pinning codes keeps the catalogue honest.
+
+use mor::config::PredictorConfig;
+use mor::engine::{InputSparsity, WeightSparsity};
+use mor::model::{synth, Model, Node};
+use mor::plan::{self, Src, StepPlan};
+use mor::predictor::{MorPolicy, RunOpts};
+use mor::util::rng::Rng;
+
+// ---- helpers ---------------------------------------------------------------
+
+fn opts(is: InputSparsity, ws: WeightSparsity) -> RunOpts {
+    RunOpts { input_sparsity: is, weight_sparsity: ws, ..Default::default() }
+}
+
+fn policy_for(model: &Model, seed: u64) -> MorPolicy {
+    let params = synth::predictor_for(model, seed);
+    MorPolicy::new(model, &params, PredictorConfig::default())
+}
+
+/// A 4-node FC model with one residual edge: node 2 adds node 0's
+/// output. Liveness peaks at 3 (nodes 0, 1 live while 2 is produced),
+/// so the linear scan allocates three slots — enough room to corrupt
+/// reads without also tripping the self-overwrite check.
+/// (`model::testutil::tiny_conv` is `cfg(test)`-gated inside the crate,
+/// so integration tests build their residual model by hand.)
+fn residual_model(seed: u64) -> Model {
+    let mut rng = Rng::new(seed);
+    let mut fc = |cin: usize, cout: usize, consumes: i32, res_from: Option<usize>| Node::Fc {
+        cin,
+        cout,
+        sw: 0.02,
+        sx: 1.0 / 127.0,
+        w: (0..cin * cout).map(|_| rng.int8()).collect(),
+        bn: None,
+        relu: true,
+        res_from,
+        consumes,
+    };
+    let nodes = vec![
+        fc(8, 8, -1, None),
+        fc(8, 8, 0, None),
+        fc(8, 8, 1, Some(0)),
+        fc(8, 4, 2, None),
+    ];
+    Model::new("residual_fc".into(), 1.0 / 127.0, (1, 1, 8), nodes)
+}
+
+/// Corrupt the first compute step of `plan` in place.
+fn mutate_first_compute(plan: &mut plan::ModelPlan, f: impl FnOnce(&mut plan::ComputeStep)) {
+    let c = plan
+        .steps
+        .iter_mut()
+        .find_map(|s| match s {
+            StepPlan::Compute(c) => Some(c),
+            _ => None,
+        })
+        .expect("model has at least one compute step");
+    f(c);
+}
+
+// ---- pristine plans lint clean --------------------------------------------
+
+#[test]
+fn every_pristine_synthetic_model_lints_clean() {
+    let mut zoo = vec![
+        synth::cnn10_like(7),
+        synth::tiny_serving_model(7),
+        residual_model(7),
+    ];
+    let mut sparse = synth::tiny_serving_model(7);
+    synth::sparsify_weights(&mut sparse, 7, 90);
+    zoo.push(sparse);
+    let mut rng = Rng::new(71);
+    zoo.extend((0..12).map(|_| synth::random_model(&mut rng)));
+
+    for model in &zoo {
+        let policy = policy_for(model, 11);
+        for is in InputSparsity::ALL {
+            for ws in WeightSparsity::EXACT_MODES {
+                for pol in [None, Some(&policy)] {
+                    let plan = plan::compile(model, pol, opts(is, ws));
+                    let report = plan::verify(&plan, model, pol);
+                    assert!(
+                        report.is_clean(),
+                        "[{}] is={is:?} ws={ws:?} policy={}: {report}",
+                        model.name,
+                        pol.is_some()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn oracle_and_trace_opts_lint_clean_too() {
+    // the oracle flag and trace collection change frozen fields — the
+    // verifier must re-derive them from opts, not assume defaults
+    let model = synth::tiny_serving_model(3);
+    let policy = policy_for(&model, 3);
+    let o = RunOpts { oracle: true, collect_trace: true, ..Default::default() };
+    let plan = plan::compile(&model, Some(&policy), o);
+    let report = plan::verify(&plan, &model, Some(&policy));
+    assert!(report.is_clean(), "{report}");
+}
+
+// ---- structural corruptions: slots ----------------------------------------
+
+#[test]
+fn out_of_range_dst_slot_is_flagged() {
+    let model = synth::cnn10_like(5);
+    let mut plan = plan::compile(&model, None, RunOpts::default());
+    mutate_first_compute(&mut plan, |c| c.dst = 99);
+    let report = plan::verify(&plan, &model, None);
+    assert!(report.has("slot.range"), "{report}");
+    assert!(report.errors() > 0);
+}
+
+#[test]
+fn self_overwriting_step_is_flagged() {
+    let model = synth::cnn10_like(5);
+    let mut plan = plan::compile(&model, None, RunOpts::default());
+    // point a mid-chain step's src at its own dst
+    let c = plan
+        .steps
+        .iter_mut()
+        .filter_map(|s| match s {
+            StepPlan::Compute(c) if matches!(c.src, Src::Slot(_)) => Some(c),
+            _ => None,
+        })
+        .next()
+        .expect("a compute step reads a slot");
+    c.src = Src::Slot(c.dst);
+    let report = plan::verify(&plan, &model, None);
+    assert!(report.has("slot.self-overwrite"), "{report}");
+}
+
+#[test]
+fn read_before_write_is_flagged() {
+    let model = residual_model(9);
+    let mut plan = plan::compile(&model, None, RunOpts::default());
+    assert_eq!(plan.n_slots, 3, "residual model should need 3 slots");
+    // step 1 reads node 0's slot; redirect it at the slot that is only
+    // written later, by step 2 — a read of uninitialized memory
+    let (dst2, src1_dst) = match (&plan.steps[2], &plan.steps[1]) {
+        (StepPlan::Compute(c2), StepPlan::Compute(c1)) => (c2.dst, c1.dst),
+        _ => panic!("FC nodes compile to compute steps"),
+    };
+    assert_ne!(dst2, src1_dst);
+    if let StepPlan::Compute(c) = &mut plan.steps[1] {
+        c.src = Src::Slot(dst2);
+    }
+    let report = plan::verify(&plan, &model, None);
+    assert!(report.has("slot.read-before-write"), "{report}");
+}
+
+#[test]
+fn aliased_live_tensor_is_flagged() {
+    let model = residual_model(9);
+    let mut plan = plan::compile(&model, None, RunOpts::default());
+    // the last step consumes node 2; point it at node 0's slot instead —
+    // a live tensor is still there, but it is the *wrong* one
+    let slot0 = match &plan.steps[0] {
+        StepPlan::Compute(c) => c.dst,
+        _ => panic!(),
+    };
+    if let StepPlan::Compute(c) = &mut plan.steps[3] {
+        assert_ne!(slot0, c.dst);
+        c.src = Src::Slot(slot0);
+    }
+    let report = plan::verify(&plan, &model, None);
+    assert!(report.has("slot.aliased"), "{report}");
+}
+
+#[test]
+fn wrong_src_kind_is_flagged() {
+    let model = synth::cnn10_like(5);
+    let mut plan = plan::compile(&model, None, RunOpts::default());
+    // step 0 consumes the model input; claim it reads a slot instead
+    mutate_first_compute(&mut plan, |c| c.src = Src::Slot(0));
+    let report = plan::verify(&plan, &model, None);
+    assert!(report.has("slot.src-kind"), "{report}");
+}
+
+#[test]
+fn broken_residual_wiring_is_flagged() {
+    let model = residual_model(9);
+
+    // dropped residual edge
+    let mut plan = plan::compile(&model, None, RunOpts::default());
+    if let StepPlan::Compute(c) = &mut plan.steps[2] {
+        assert!(c.res.is_some());
+        c.res = None;
+    }
+    let report = plan::verify(&plan, &model, None);
+    assert!(report.has("slot.residual"), "dropped edge: {report}");
+
+    // residual pointed at the wrong producer's slot
+    let mut plan = plan::compile(&model, None, RunOpts::default());
+    let slot1 = match &plan.steps[1] {
+        StepPlan::Compute(c) => c.dst,
+        _ => panic!(),
+    };
+    if let StepPlan::Compute(c) = &mut plan.steps[2] {
+        assert_ne!(c.res, Some(slot1));
+        c.res = Some(slot1);
+    }
+    let report = plan::verify(&plan, &model, None);
+    assert!(report.has("slot.residual"), "wrong producer: {report}");
+}
+
+#[test]
+fn undersized_slot_is_flagged() {
+    let model = synth::cnn10_like(5);
+    let mut plan = plan::compile(&model, None, RunOpts::default());
+    let dst = match &plan.steps[0] {
+        StepPlan::Compute(c) => c.dst,
+        _ => panic!(),
+    };
+    plan.slot_elems[dst] = 1;
+    let report = plan::verify(&plan, &model, None);
+    assert!(report.has("slot.undersized"), "{report}");
+}
+
+#[test]
+fn excess_slots_are_a_warning_not_an_error() {
+    let model = synth::cnn10_like(5);
+    let mut plan = plan::compile(&model, None, RunOpts::default());
+    plan.n_slots += 2;
+    plan.slot_elems.push(64);
+    plan.slot_elems.push(64);
+    let report = plan::verify(&plan, &model, None);
+    assert!(report.has("slot.excess"), "{report}");
+    assert_eq!(report.errors(), 0, "waste is a warning: {report}");
+    assert!(report.warnings() > 0);
+    assert!(!report.is_clean());
+}
+
+#[test]
+fn corrupted_logits_slot_is_flagged() {
+    let model = synth::cnn10_like(5);
+
+    // out of range
+    let mut plan = plan::compile(&model, None, RunOpts::default());
+    plan.logits_slot = 77;
+    let report = plan::verify(&plan, &model, None);
+    assert!(report.has("slot.logits"), "{report}");
+
+    // in range but holding a stale tensor
+    let mut plan = plan::compile(&model, None, RunOpts::default());
+    let wrong = (0..plan.n_slots)
+        .find(|&s| s != plan.logits_slot)
+        .expect("two slots");
+    plan.logits_slot = wrong;
+    let report = plan::verify(&plan, &model, None);
+    assert!(report.has("slot.logits"), "{report}");
+}
+
+// ---- scratch high-water marks ---------------------------------------------
+
+#[test]
+fn undersized_scratch_marks_are_errors_oversized_are_warnings() {
+    let model = synth::cnn10_like(5);
+    let corruptions: [(&str, fn(&mut plan::ModelPlan)); 5] = [
+        ("scratch.cout", |p| p.max_cout = 0),
+        ("scratch.k-len", |p| p.max_k_len = 0),
+        ("scratch.rows", |p| p.max_row_elems = 0),
+        ("scratch.qt", |p| p.max_qt_elems = 0),
+        ("scratch.lanes", |p| p.max_lanes_k_len = 0),
+    ];
+    for (name, corrupt) in corruptions {
+        let mut plan = plan::compile(&model, None, RunOpts::default());
+        corrupt(&mut plan);
+        let report = plan::verify(&plan, &model, None);
+        assert!(report.has(name), "{name}: {report}");
+        assert!(report.errors() > 0, "{name} undersized must be an error");
+    }
+    // oversizing wastes memory but cannot misindex: warning only
+    let mut plan = plan::compile(&model, None, RunOpts::default());
+    plan.max_qt_elems *= 2;
+    let report = plan::verify(&plan, &model, None);
+    assert!(report.has("scratch.qt"), "{report}");
+    assert_eq!(report.errors(), 0, "{report}");
+}
+
+// ---- frozen geometry -------------------------------------------------------
+
+#[test]
+fn corrupted_geometry_is_flagged() {
+    let model = synth::cnn10_like(5);
+
+    let mut plan = plan::compile(&model, None, RunOpts::default());
+    mutate_first_compute(&mut plan, |c| c.geom.oh += 1);
+    assert!(plan::verify(&plan, &model, None).has("geom.shape"));
+
+    let mut plan = plan::compile(&model, None, RunOpts::default());
+    mutate_first_compute(&mut plan, |c| c.rows += 3);
+    assert!(plan::verify(&plan, &model, None).has("geom.rows"));
+
+    let mut plan = plan::compile(&model, None, RunOpts::default());
+    mutate_first_compute(&mut plan, |c| c.cout += 1);
+    assert!(plan::verify(&plan, &model, None).has("geom.cout"));
+
+    let mut plan = plan::compile(&model, None, RunOpts::default());
+    mutate_first_compute(&mut plan, |c| c.sx *= 2.0);
+    assert!(plan::verify(&plan, &model, None).has("geom.scale"));
+
+    let mut plan = plan::compile(&model, None, RunOpts::default());
+    mutate_first_compute(&mut plan, |c| c.node_relu = !c.node_relu);
+    assert!(plan::verify(&plan, &model, None).has("geom.relu"));
+}
+
+#[test]
+fn kernel_alignment_contract_is_enforced() {
+    // k_pad feeds the AVX2 block kernel's # Safety contract (every
+    // filter pointer addresses k_pad bytes, a multiple of K_ALIGN) —
+    // an unaligned or undersized pad must be an error
+    let model = synth::tiny_serving_model(5);
+    let mut plan = plan::compile(&model, None, RunOpts::default());
+    mutate_first_compute(&mut plan, |c| c.k_pad -= 1);
+    let report = plan::verify(&plan, &model, None);
+    assert!(report.has("geom.k-pad"), "{report}");
+    assert!(report.errors() > 0);
+}
+
+#[test]
+fn corrupted_k_len_breaks_the_mac_partition_identity() {
+    let model = synth::tiny_serving_model(5);
+    let mut plan = plan::compile(&model, None, RunOpts::default());
+    mutate_first_compute(&mut plan, |c| c.k_len += 8);
+    let report = plan::verify(&plan, &model, None);
+    // the corrupted dot length is caught both as a geometry mismatch and
+    // as a violation of (total-done)+input_zero+weight_zero+effectual
+    assert!(report.has("geom.k-len"), "{report}");
+    assert!(report.has("mac.partition"), "{report}");
+}
+
+// ---- frozen sparsity decisions --------------------------------------------
+
+#[test]
+fn lane_builder_under_off_mode_is_flagged() {
+    let model = synth::tiny_serving_model(5);
+    let mut plan = plan::compile(&model, None, opts(InputSparsity::Off, WeightSparsity::Off));
+    mutate_first_compute(&mut plan, |c| c.lanes = true);
+    let report = plan::verify(&plan, &model, None);
+    assert!(report.has("sparsity.lanes"), "{report}");
+}
+
+#[test]
+fn wrong_auto_cutoff_is_flagged() {
+    let model = synth::tiny_serving_model(5);
+    let mut plan = plan::compile(&model, None, opts(InputSparsity::Auto, WeightSparsity::Off));
+    mutate_first_compute(&mut plan, |c| c.sparse_cutoff *= 0.5);
+    let report = plan::verify(&plan, &model, None);
+    assert!(report.has("sparsity.cutoff"), "{report}");
+}
+
+#[test]
+fn weight_sparse_kernel_under_off_mode_is_flagged() {
+    let model = synth::tiny_serving_model(5);
+    let mut plan = plan::compile(&model, None, opts(InputSparsity::Auto, WeightSparsity::Off));
+    mutate_first_compute(&mut plan, |c| c.w_sparse = true);
+    let report = plan::verify(&plan, &model, None);
+    assert!(report.has("sparsity.weight"), "{report}");
+}
+
+#[test]
+fn weight_sparse_flag_must_match_the_frozen_density() {
+    // 90% zeroed weights cross the density cutoff on every layer; a
+    // plan claiming dense kernels under Exact contradicts the crossover
+    let mut model = synth::tiny_serving_model(5);
+    synth::sparsify_weights(&mut model, 7, 90);
+    let mut plan = plan::compile(&model, None, opts(InputSparsity::Auto, WeightSparsity::Exact));
+    let mut saw_sparse = false;
+    for s in &mut plan.steps {
+        if let StepPlan::Compute(c) = s {
+            saw_sparse |= c.w_sparse;
+            c.w_sparse = false;
+        }
+    }
+    assert!(saw_sparse, "sparsified model should freeze sparse kernels");
+    let report = plan::verify(&plan, &model, None);
+    assert!(report.has("sparsity.weight"), "{report}");
+}
+
+// ---- policy wiring ---------------------------------------------------------
+
+#[test]
+fn flipped_oracle_flag_is_flagged() {
+    let model = synth::tiny_serving_model(5);
+    let policy = policy_for(&model, 5);
+    let mut plan = plan::compile(&model, Some(&policy), RunOpts::default());
+    mutate_first_compute(&mut plan, |c| c.oracle = !c.oracle);
+    let report = plan::verify(&plan, &model, Some(&policy));
+    assert!(report.has("policy.oracle"), "{report}");
+}
+
+#[test]
+fn tampered_policied_set_is_flagged() {
+    let model = synth::tiny_serving_model(5);
+    let policy = policy_for(&model, 5);
+    let mut plan = plan::compile(&model, Some(&policy), RunOpts::default());
+    assert!(!plan.policied.is_empty(), "MoR policy prepares layers");
+    // per-step flag
+    let dropped = plan.policied[0];
+    if let StepPlan::Compute(c) = &mut plan.steps[dropped] {
+        assert!(c.policied);
+        c.policied = false;
+    }
+    let report = plan::verify(&plan, &model, Some(&policy));
+    assert!(report.has("policy.set"), "step flag: {report}");
+    // plan-level set
+    let mut plan = plan::compile(&model, Some(&policy), RunOpts::default());
+    plan.policied.pop();
+    let report = plan::verify(&plan, &model, Some(&policy));
+    assert!(report.has("policy.set"), "layer set: {report}");
+}
+
+// ---- plan/model correspondence --------------------------------------------
+
+#[test]
+fn truncated_plan_is_flagged_and_short_circuits() {
+    let model = synth::cnn10_like(5);
+    let mut plan = plan::compile(&model, None, RunOpts::default());
+    plan.steps.pop();
+    let report = plan::verify(&plan, &model, None);
+    assert!(report.has("plan.nodes"), "{report}");
+    // nothing else should pile on — the walk is abandoned
+    assert_eq!(report.findings.len(), 1, "{report}");
+}
+
+#[test]
+fn wrong_node_index_is_flagged() {
+    let model = synth::cnn10_like(5);
+    let mut plan = plan::compile(&model, None, RunOpts::default());
+    mutate_first_compute(&mut plan, |c| c.node += 1);
+    let report = plan::verify(&plan, &model, None);
+    assert!(report.has("plan.node-index"), "{report}");
+}
+
+#[test]
+fn report_json_is_machine_readable() {
+    let model = synth::cnn10_like(5);
+    let mut plan = plan::compile(&model, None, RunOpts::default());
+    mutate_first_compute(&mut plan, |c| c.dst = 99);
+    let report = plan::verify(&plan, &model, None);
+    let json = report.to_json().to_string();
+    let parsed = mor::util::json::Json::parse(&json).expect("valid json");
+    match parsed {
+        mor::util::json::Json::Arr(items) => assert!(!items.is_empty()),
+        other => panic!("expected an array, got {other:?}"),
+    }
+}

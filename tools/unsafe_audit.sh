@@ -1,0 +1,76 @@
+#!/usr/bin/env bash
+# Unsafe-soundness audit: every `unsafe` in the rust crate must carry an
+# adjacent justification, so the safety argument lives next to the code
+# it protects and a reviewer never has to reconstruct it.
+#
+#   * `unsafe fn` / `unsafe impl` / `unsafe trait` declarations need a
+#     `# Safety` doc section or a `// SAFETY:` comment within the
+#     preceding 20 lines (doc contracts sit above the signature, past
+#     attributes and other doc lines).
+#   * every other `unsafe` occurrence (an `unsafe { ... }` block) needs
+#     a `// SAFETY:` comment in the contiguous comment block directly
+#     above it (multi-line SAFETY comments count in full).
+#
+# `unsafe` is matched with explicit word boundaries (POSIX character
+# classes — portable across mawk/gawk, unlike `\<`), so identifiers like
+# `unsafe_op_in_unsafe_fn` (the crate-root lint) don't count; comment
+# lines are stripped before matching so prose about unsafety doesn't
+# either. Exits non-zero listing every unjustified site, so the audit
+# fails CI fast. The crate-root `#![deny(unsafe_op_in_unsafe_fn)]`
+# complements this: rustc proves every unsafe operation is inside a
+# block, this script proves every block argues why it is sound.
+#
+# Usage: tools/unsafe_audit.sh          # audits rust/src
+#        tools/unsafe_audit.sh DIR...   # audits the given trees
+set -u
+roots=("${@:-rust/src}")
+status=0
+found=0
+for root in "${roots[@]}"; do
+  if [ ! -e "$root" ]; then
+    echo "unsafe_audit: no such path: $root" >&2
+    status=1
+    continue
+  fi
+  while IFS= read -r file; do
+    found=1
+    out=$(awk '
+      {
+        raw = $0
+        line = raw
+        sub(/\/\/.*$/, "", line)          # strip // comments before matching
+        safety[NR] = (raw ~ /SAFETY:/ || raw ~ /# Safety/)
+        comment[NR] = (raw ~ /^[ \t]*\/\//)
+        if (line ~ /(^|[^A-Za-z0-9_])unsafe($|[^A-Za-z0-9_])/) {
+          decl = (line ~ /(^|[^A-Za-z0-9_])unsafe[ \t]+(fn|impl|trait)($|[^A-Za-z0-9_])/)
+          ok = 0
+          if (decl) {
+            # doc contract above the signature, past attributes/doc lines
+            for (i = NR - 20; i < NR; i++)
+              if (i in safety && safety[i]) ok = 1
+          } else {
+            # the contiguous comment block directly above the unsafe block
+            for (i = NR - 1; i >= 1 && comment[i]; i--)
+              if (safety[i]) ok = 1
+            if (safety[NR]) ok = 1
+          }
+          if (!ok)
+            printf "%s:%d: unsafe without adjacent %s: %s\n", FILENAME, NR, \
+                   (decl ? "# Safety contract or SAFETY: comment" : "SAFETY: comment"), raw
+        }
+      }
+    ' "$file")
+    if [ -n "$out" ]; then
+      echo "$out" >&2
+      status=1
+    fi
+  done < <(find "$root" -name '*.rs' -type f | sort)
+done
+if [ "$found" -eq 0 ]; then
+  echo "unsafe_audit: no rust files found under: ${roots[*]}" >&2
+  exit 1
+fi
+if [ "$status" -eq 0 ]; then
+  echo "unsafe_audit: every unsafe site is justified in: ${roots[*]}"
+fi
+exit "$status"
