@@ -23,6 +23,7 @@ pub const BOOLEAN_FLAGS: &[&str] = &[
     "no-binary",
     "no-clusters",
     "no-predictor",
+    "numeric",
     "oracle",
     "verbose",
 ];
@@ -176,6 +177,14 @@ COMMANDS:
                  --artifacts <dir>     artifacts directory (default: artifacts)
                  --seed <n>            synthetic-zoo base seed (default: 7)
                  --random-models <n>   extra random graphs to lint (default: 8)
+                 --numeric             also run the quantized-numerics
+                                       abstract interpreter: per-layer value
+                                       intervals from the actual prepacked
+                                       weights prove accumulator non-overflow,
+                                       requantization range safety and
+                                       predictor-threshold soundness
+                                       (diagnostics num.*, see
+                                       EXPERIMENTS.md §Numeric)
                  --json                machine-readable findings on stdout
                exit status 1 if any error-severity finding is reported
     predictors List the available zero-predictor strategies

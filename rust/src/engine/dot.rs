@@ -15,8 +15,14 @@
 //! compressed filter meets a compressed patch (EXPERIMENTS.md
 //! §Weights).
 
-/// int8 dot product with int32 accumulation (never overflows for
-/// K ≤ 2^16: |x·w| ≤ K · 127² < 2^31).
+/// int8 dot product with int32 accumulation.
+///
+/// The i32 accumulator cannot overflow: `mor lint --numeric`
+/// ([`crate::plan::ranges`]) statically proves `Σ|w| · max|x| < 2³¹`
+/// per filter for every compiled plan (diagnostic `num.acc`), and even
+/// the structural ceiling K ≤ 2^16 gives `|Σ x·w| ≤ 2^16 · 128² = 2³⁰`.
+/// The bound dominates every partial sum under any accumulation order,
+/// so it covers the scalar chunks and the AVX2 lane sums alike.
 ///
 /// §Perf: products are formed in i16 (i8·i8 fits: |p| ≤ 16384) and widened
 /// to i32 — this is the shape LLVM turns into `pmaddwd`-style SIMD with
@@ -76,7 +82,10 @@ pub fn dot_i8_scalar(x: &[i8], w: &[i8]) -> i32 {
 
 /// AVX2 path: sign-extend 16 i8 lanes to i16 (`vpmovsxbw`), multiply-add
 /// pairs into i32 (`vpmaddwd`), accumulate in a 256-bit register.
-/// i8·i8 products fit i16 and pairwise sums fit i32, so this is exact.
+/// Exact: i8·i8 products fit i16, pairwise sums fit i32, and the i32
+/// lane accumulators cannot overflow — `mor lint --numeric` proves the
+/// per-filter `Σ|w| · max|x|` bound (`num.acc`, [`crate::plan::ranges`])
+/// which dominates every lane's partial sum.
 ///
 /// # Safety
 ///
@@ -131,7 +140,10 @@ unsafe fn dot_i8_avx2(x: &[i8], w: &[i8]) -> i32 {
 ///
 /// §Sparse: four independent accumulator streams so the gather-multiply
 /// chains pipeline; products form in i16 (exact for i8·i8) and widen to
-/// i32, which never overflows for K ≤ 2^16 (same bound as `dot_i8`).
+/// i32. The four partial accumulators cannot overflow: the proven
+/// `Σ|w| · max|x|` bound of `mor lint --numeric` (`num.acc`,
+/// [`crate::plan::ranges`]) covers every lane subset, so it holds for
+/// each stream individually and for their sum.
 #[inline]
 pub fn dot_i8_sparse(idx: &[u16], val: &[i8], w: &[i8]) -> i32 {
     debug_assert_eq!(idx.len(), val.len());
@@ -160,8 +172,11 @@ pub fn dot_i8_sparse(idx: &[u16], val: &[i8], w: &[i8]) -> i32 {
 /// nonzero lanes of `x` and `w`: every elided product has a zero factor.
 ///
 /// §Weights: cost is O(nnz_x + nnz_w) independent of K — the
-/// multiplicative-sparsity payoff Cnvlutin2/SparseNN predict. Exact for
-/// K ≤ 2^16 (same i32 bound as `dot_i8`).
+/// multiplicative-sparsity payoff Cnvlutin2/SparseNN predict. The i32
+/// accumulator is exact: the intersection sums a subset of the full
+/// dot's lanes, and the `Σ|w| · max|x|` bound `mor lint --numeric`
+/// proves (`num.acc`, [`crate::plan::ranges`]) dominates every lane
+/// subset.
 #[inline]
 pub fn dot_i8_sparse_sparse(a_idx: &[u16], a_val: &[i8], b_idx: &[u16], b_val: &[i8]) -> i32 {
     debug_assert_eq!(a_idx.len(), a_val.len());
@@ -256,6 +271,18 @@ mod tests {
         assert_eq!(dot_i8(&x, &w), 128 * 128 * k as i32);
     }
 
+    #[test]
+    #[cfg_attr(miri, ignore = "2^16-lane dot is too slow interpreted")]
+    fn dot_boundary_k_max_all_extreme() {
+        // the structural ceiling: K = 2^16 of all-(−128) products is
+        // exactly 2^30 — half of i32::MAX, the kernels' absolute worst
+        let k = 1 << 16;
+        let x = vec![-128i8; k];
+        let w = vec![-128i8; k];
+        assert_eq!(dot_i8(&x, &w), 1 << 30);
+        assert_eq!(dot_i8_scalar(&x, &w), 1 << 30);
+    }
+
     /// Compress `x` into the (idx, val) nonzero-lane lists the sparse
     /// kernel consumes.
     fn compress(x: &[i8]) -> (Vec<u16>, Vec<i8>) {
@@ -315,6 +342,18 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "2^16-lane dot is too slow interpreted")]
+    fn sparse_dot_boundary_k_max_all_extreme() {
+        // fully dense compressed list at the K = 2^16 ceiling: the four
+        // accumulator streams sum to exactly 2^30 with no overflow
+        let k = 1usize << 16;
+        let idx: Vec<u16> = (0..k).map(|i| i as u16).collect();
+        let val = vec![-128i8; k];
+        let w = vec![-128i8; k];
+        assert_eq!(dot_i8_sparse(&idx, &val, &w), 1 << 30);
+    }
+
+    #[test]
     fn sparse_sparse_dot_matches_dense_at_every_density_pair() {
         property("dot_i8_sparse_sparse == dot_i8 on compressed pairs", 300, |g| {
             let n = g.usize(0, 600);
@@ -362,6 +401,17 @@ mod tests {
             dot_i8_sparse_sparse(&idx, &val, &idx, &val),
             128 * 128 * k as i32
         );
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "2^16-lane dot is too slow interpreted")]
+    fn sparse_sparse_dot_boundary_k_max_all_extreme() {
+        // full-overlap intersection at the K = 2^16 ceiling: every lane
+        // multiplies, the sum is exactly 2^30
+        let k = 1usize << 16;
+        let idx: Vec<u16> = (0..k).map(|i| i as u16).collect();
+        let val = vec![-128i8; k];
+        assert_eq!(dot_i8_sparse_sparse(&idx, &val, &idx, &val), 1 << 30);
     }
 
     #[test]

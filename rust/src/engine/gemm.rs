@@ -99,6 +99,14 @@ pub struct PrepackedFilters {
     /// Nonzero weight lanes across all filters (mask popcount — present
     /// even when the lane lists are not).
     nnz_total: usize,
+    /// Per-filter `Σ max(w, 0)` — with `w_neg_sum`, the signed
+    /// magnitude decomposition the numeric analyzer
+    /// ([`crate::plan::ranges`]) turns into per-filter accumulator
+    /// bounds (`Σ|w| · max|x|`) instead of the blanket `127·128·K`
+    /// worst case.
+    w_pos_sum: Vec<i64>,
+    /// Per-filter `Σ min(w, 0)` (non-positive).
+    w_neg_sum: Vec<i64>,
 }
 
 impl PrepackedFilters {
@@ -118,6 +126,8 @@ impl PrepackedFilters {
             w_off.push(0);
         }
         let mut nnz_total = 0usize;
+        let mut w_pos_sum = vec![0i64; cout];
+        let mut w_neg_sum = vec![0i64; cout];
         for f in 0..cout {
             data[f * k_pad..f * k_pad + k_len].copy_from_slice(node.filter(f));
             let mask = &mut w_mask[f * mask_words..(f + 1) * mask_words];
@@ -128,6 +138,11 @@ impl PrepackedFilters {
                     if build_lanes {
                         w_idx.push(k as u16);
                         w_val.push(w);
+                    }
+                    if w > 0 {
+                        w_pos_sum[f] += w as i64;
+                    } else {
+                        w_neg_sum[f] += w as i64;
                     }
                 }
             }
@@ -146,6 +161,8 @@ impl PrepackedFilters {
             w_val,
             w_off,
             nnz_total,
+            w_pos_sum,
+            w_neg_sum,
         }
     }
 
@@ -182,6 +199,26 @@ impl PrepackedFilters {
     pub fn lanes(&self, f: usize) -> (&[u16], &[i8]) {
         let (a, b) = (self.w_off[f], self.w_off[f + 1]);
         (&self.w_idx[a..b], &self.w_val[a..b])
+    }
+
+    /// Signed weight-sum decomposition of filter `f`:
+    /// `(Σ max(w, 0), Σ min(w, 0))`, both exact in i64. Against an
+    /// activation interval `[qlo, qhi]` the exact dot range is
+    /// `[pos·qlo + neg·qhi, pos·qhi + neg·qlo]` — the per-filter bound
+    /// [`crate::plan::ranges`] proves `num.acc` with.
+    #[inline]
+    pub fn filter_sums(&self, f: usize) -> (i64, i64) {
+        (self.w_pos_sum[f], self.w_neg_sum[f])
+    }
+
+    /// `Σ|w|` of filter `f` — times `max|x|` this bounds the magnitude
+    /// of **every** partial sum under **any** accumulation order or lane
+    /// subset (each elided lane contributes 0), which is why one number
+    /// covers the dense, input-sparse, weight-sparse and doubly-sparse
+    /// kernels alike.
+    #[inline]
+    pub fn abs_weight_sum(&self, f: usize) -> i64 {
+        self.w_pos_sum[f] - self.w_neg_sum[f]
     }
 
     /// Nonzero-weight density across the whole layer (`1.0` for a layer
@@ -635,8 +672,11 @@ pub fn sparse_wins(nnz: usize, k_len: usize) -> bool {
 }
 
 /// AVX2 multi-filter micro-kernel: one sign-extended patch load feeds up
-/// to NR `vpmaddwd` accumulator chains. Exact: i8·i8 products fit i16 and
-/// pairwise sums fit i32 (see `dot_i8_avx2`).
+/// to NR `vpmaddwd` accumulator chains. Exact: i8·i8 products fit i16,
+/// pairwise sums fit i32, and the i32 accumulators cannot overflow —
+/// `mor lint --numeric` proves `Σ|w| · max|x| < 2³¹` per filter for
+/// every compiled plan (diagnostic `num.acc`, see `dot_i8_avx2` and
+/// [`crate::plan::ranges`]).
 ///
 /// # Safety
 ///
@@ -1026,6 +1066,69 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn prepack_filter_sums_decompose_by_sign() {
+        let node = sparse_fc_node(120, 5, 40, 17);
+        let pf = PrepackedFilters::new(&node);
+        for f in 0..5 {
+            let w = node.filter(f);
+            let pos: i64 = w.iter().filter(|&&v| v > 0).map(|&v| v as i64).sum();
+            let neg: i64 = w.iter().filter(|&&v| v < 0).map(|&v| v as i64).sum();
+            assert_eq!(pf.filter_sums(f), (pos, neg), "filter {f}");
+            assert_eq!(pf.abs_weight_sum(f), pos - neg, "filter {f}");
+            let abs: i64 = w.iter().map(|&v| (v as i64).abs()).sum();
+            assert_eq!(pf.abs_weight_sum(f), abs, "filter {f}");
+        }
+    }
+
+    /// Extremal boundary for the weight-sparse block kernels: all-(−128)
+    /// weights against an all-(−128) patch at K = [`SPARSE_K_MAX`] (the
+    /// largest dot the compressed lanes can address). Every per-filter
+    /// accumulator lands on exactly 128·128·65536 = 2³⁰ < i32::MAX — the
+    /// worst case the numeric analyzer ([`crate::plan::ranges`]) assumes
+    /// when it proves `num.acc`.
+    #[test]
+    #[cfg_attr(miri, ignore = "2^16-lane kernels are too slow interpreted")]
+    fn wsparse_blocks_extreme_no_overflow() {
+        let k = SPARSE_K_MAX;
+        let cout = 2usize;
+        let node = Node::Fc {
+            cin: k,
+            cout,
+            sw: 0.01,
+            sx: 0.01,
+            w: vec![-128i8; k * cout],
+            bn: None,
+            relu: false,
+            res_from: None,
+            consumes: -1,
+        };
+        let pf = PrepackedFilters::new(&node);
+        assert!(pf.has_lanes(), "K = SPARSE_K_MAX must still build lanes");
+        assert_eq!(pf.abs_weight_sum(0), 128 * k as i64);
+        let patch = {
+            let mut p = vec![-128i8; k];
+            p.resize(pf.k_pad, 0);
+            p
+        };
+        let x_idx: Vec<u16> = (0..k).map(|i| i as u16).collect();
+        let x_val = vec![-128i8; k];
+        let want = (128i64 * 128 * k as i64) as i32; // 2^30, exact in i32
+        let (mut ws, mut wsx, mut wsi, mut wsxi) =
+            ([0i32; NR], [0i32; NR], [0i32; NR], [0i32; NR]);
+        dot_block_wsparse(&patch, &pf, 0, cout, &mut ws);
+        dot_block_wsparse_x(&x_idx, &x_val, &pf, 0, cout, &mut wsx);
+        let filters = [1usize, 0];
+        dot_block_indexed_wsparse(&patch, &pf, &filters, &mut wsi);
+        dot_block_indexed_wsparse_x(&x_idx, &x_val, &pf, &filters, &mut wsxi);
+        for f in 0..cout {
+            assert_eq!(ws[f], want, "wsparse filter {f}");
+            assert_eq!(wsx[f], want, "wsparse_x filter {f}");
+            assert_eq!(wsi[f], want, "indexed wsparse filter {f}");
+            assert_eq!(wsxi[f], want, "indexed wsparse_x filter {f}");
+        }
     }
 
     #[test]

@@ -308,6 +308,7 @@ fn cmd_lint(args: &Args) -> Result<()> {
 
     let seed = args.opt_usize("seed", 7)? as u64;
     let n_random = args.opt_usize("random-models", 8)?;
+    let numeric = args.flag("numeric");
 
     // Models to lint: one real artifact model under --model, otherwise
     // the synthetic zoo (the same generators the plan test suites use).
@@ -340,6 +341,9 @@ fn cmd_lint(args: &Args) -> Result<()> {
         let mut json_configs = Vec::new();
         let mut model_errors = 0usize;
         let mut model_warnings = 0usize;
+        // worst-case accumulator width proven across all configs (0
+        // until --numeric runs; 32 means the full i32 is needed)
+        let mut model_acc_bits = 0u32;
         for is in InputSparsity::ALL {
             for ws in WeightSparsity::EXACT_MODES {
                 for pol in [None, Some(&policy)] {
@@ -353,23 +357,44 @@ fn cmd_lint(args: &Args) -> Result<()> {
                     configs += 1;
                     model_errors += report.errors();
                     model_warnings += report.warnings();
+                    // --numeric: run the abstract interpreter on the
+                    // same frozen plan and fold its findings into the
+                    // per-model and exit-status accounting.
+                    let num = numeric.then(|| plan::ranges::analyze(&compiled, model, pol));
+                    if let Some(num) = &num {
+                        model_errors += num.lint.errors();
+                        model_warnings += num.lint.warnings();
+                        model_acc_bits = model_acc_bits.max(num.max_acc_bits());
+                    }
                     if args.flag("json") {
-                        json_configs.push(obj(vec![
+                        let mut pairs = vec![
                             ("input_sparsity", Json::Str(is.name().to_string())),
                             ("weight_sparsity", Json::Str(ws.name())),
                             ("policy", Json::Bool(pol.is_some())),
                             ("findings", report.to_json()),
-                        ]));
-                    } else if !report.is_clean() {
-                        println!(
-                            "[{}] input-sparsity={} weight-sparsity={} policy={}",
-                            model.name,
-                            is.name(),
-                            ws.name(),
-                            pol.is_some()
-                        );
-                        for line in report.to_string().lines() {
-                            println!("    {line}");
+                        ];
+                        if let Some(num) = &num {
+                            pairs.push(("numeric", num.to_json()));
+                        }
+                        json_configs.push(obj(pairs));
+                    } else {
+                        let num_dirty = num.as_ref().is_some_and(|n| !n.is_clean());
+                        if !report.is_clean() || num_dirty {
+                            println!(
+                                "[{}] input-sparsity={} weight-sparsity={} policy={}",
+                                model.name,
+                                is.name(),
+                                ws.name(),
+                                pol.is_some()
+                            );
+                            for line in report.to_string().lines() {
+                                println!("    {line}");
+                            }
+                            if let Some(num) = &num {
+                                for f in &num.lint.findings {
+                                    println!("    {f}");
+                                }
+                            }
                         }
                     }
                 }
@@ -378,21 +403,30 @@ fn cmd_lint(args: &Args) -> Result<()> {
         errors += model_errors;
         warnings += model_warnings;
         if args.flag("json") {
-            json_models.push(obj(vec![
+            let mut pairs = vec![
                 ("model", Json::Str(model.name.clone())),
                 ("errors", Json::Num(model_errors as f64)),
                 ("warnings", Json::Num(model_warnings as f64)),
-                ("configs", Json::Arr(json_configs)),
-            ]));
+            ];
+            if numeric {
+                pairs.push(("acc_bits", Json::Num(model_acc_bits as f64)));
+            }
+            pairs.push(("configs", Json::Arr(json_configs)));
+            json_models.push(obj(pairs));
         } else {
             println!(
-                "[{}] {} plan configuration(s): {}",
+                "[{}] {} plan configuration(s): {}{}",
                 model.name,
                 InputSparsity::ALL.len() * WeightSparsity::EXACT_MODES.len() * 2,
                 if model_errors == 0 && model_warnings == 0 {
                     "clean".to_string()
                 } else {
                     format!("{model_errors} error(s), {model_warnings} warning(s)")
+                },
+                if numeric {
+                    format!(" | widest accumulator {model_acc_bits} bit(s)")
+                } else {
+                    String::new()
                 }
             );
         }
@@ -408,8 +442,9 @@ fn cmd_lint(args: &Args) -> Result<()> {
         println!("{doc}");
     } else {
         println!(
-            "mor lint: {} model(s) × plan configs = {configs} verified | \
+            "mor lint{}: {} model(s) × plan configs = {configs} verified | \
              {errors} error(s), {warnings} warning(s)",
+            if numeric { " --numeric" } else { "" },
             models.len()
         );
     }

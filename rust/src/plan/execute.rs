@@ -242,6 +242,8 @@ fn split_two(slots: &mut [Tensor], si: usize, di: usize) -> (&Tensor, &mut Tenso
 
 /// Shared read-only context for one layer's tile workers.
 struct TiledCtx<'a> {
+    /// Model node index (numeric-observation keying in debug builds).
+    node: usize,
     pf: &'a PrepackedFilters,
     /// One quantized input per sample of the batch.
     qts: &'a [QuantizedTensor],
@@ -342,6 +344,7 @@ fn compute_step(
     let n_used_workers;
     {
         let ctx = TiledCtx {
+            node: cs.node,
             pf,
             qts: &qts[..b],
             slots,
@@ -647,6 +650,7 @@ fn process_row_range(
                     // ---- phase 2b: skip decisions (strategy dispatch) ----
                     survivors.clear();
                     let rctx = RowCtx {
+                        node: ctx.node,
                         lp,
                         cfg: &mp.cfg,
                         packed: tile.packed(r),
@@ -738,6 +742,11 @@ fn account_eval(
     ops: &mut OpsStats,
 ) -> f32 {
     let ri = relu_input(d, ctx.dq, ctx.bn, f, ctx.res_at(s, row, f));
+    #[cfg(debug_assertions)]
+    {
+        super::observe::record_dot(ctx.node, d);
+        super::observe::record_ri(ctx.node, ri);
+    }
     *out_val = if ctx.node_relu { ri.max(0.0) } else { ri };
     ops.macs_done += ctx.k;
     ops.macs_skipped_input_zero += zeros;
@@ -786,6 +795,11 @@ fn account_skip(
         // ground truth for Fig 12 / accuracy accounting
         let d = dot_i8(patch, ctx.pf.filter(f));
         let ri = relu_input(d, ctx.dq, ctx.bn, f, ctx.res_at(s, row, f));
+        #[cfg(debug_assertions)]
+        {
+            super::observe::record_dot(ctx.node, d);
+            super::observe::record_ri(ctx.node, ri);
+        }
         if ctx.is_relu_layer {
             if ri <= 0.0 {
                 pred.correct_zero += 1;

@@ -39,17 +39,30 @@
 //!   builds at `Session::finish()`, and its mutation suite
 //!   (`tests/plan_verify.rs`) proves each invariant is actually
 //!   enforced.
+//! * [`ranges::analyze`] is the *numeric* counterpart: an
+//!   abstract-interpretation pass that propagates value intervals
+//!   through the plan using the actual prepacked weights and proves
+//!   accumulator non-overflow (`num.acc`), requantization range safety
+//!   (`num.requant`) and predictor-threshold soundness
+//!   (`num.threshold`) per compute site — `mor lint --numeric`, also
+//!   run in debug builds at `Session::finish()`. The [`observe`] hook
+//!   lets the numeric property suite (`tests/numeric_ranges.rs`) check
+//!   observed runtime values against the proven intervals.
 //!
 //! See EXPERIMENTS.md §Plan for the sizing rules and how a new layer
-//! kind registers a step, and §Lint for the verifier's invariant
-//! catalogue.
+//! kind registers a step, §Lint for the verifier's invariant
+//! catalogue, and §Numeric for the abstract domain and per-site bound
+//! derivations.
 
 pub mod compile;
 pub mod execute;
+pub mod observe;
+pub mod ranges;
 pub mod verify;
 pub mod workspace;
 
 pub use compile::{compile, ComputeStep, ModelPlan, Src, StepPlan};
 pub use execute::{execute, execute_into};
+pub use ranges::{NumericOpts, NumericReport, StepRanges};
 pub use verify::{verify, Finding, LintReport, Severity};
 pub use workspace::{PooledWorkspace, WorkerScratch, Workspace, WorkspacePool};

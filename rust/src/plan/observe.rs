@@ -1,0 +1,127 @@
+//! Test-only runtime observation hook: min/max of every accumulator,
+//! pre-activation value and binarized proxy dot the engines produce,
+//! keyed by model node — what `rust/tests/numeric_ranges.rs` compares
+//! against the statically predicted intervals of [`super::ranges`].
+//!
+//! The module is always compiled (so integration tests can link it
+//! without a cargo feature), but the *call sites* in the engines are
+//! `#[cfg(debug_assertions)]` — the release-build forward path carries
+//! zero bookkeeping. Recording itself is additionally gated behind
+//! [`begin`]/[`take`], so even debug builds pay only one relaxed atomic
+//! load per recorded value while no test is observing.
+//!
+//! One global recorder: tests that observe must not run concurrently
+//! with each other (the numeric_ranges suite keeps all observation in a
+//! single `#[test]` for exactly this reason).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+/// Observed min/max per model node. `dot` covers the integer
+/// accumulators (every final dot the kernels emit), `ri` the
+/// pre-activation f32 (`relu_input`: dot·dq → BN → +residual), `proxy`
+/// the binarized rookie dots.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NodeObs {
+    pub dot: Option<(i32, i32)>,
+    pub ri: Option<(f32, f32)>,
+    pub proxy: Option<(i32, i32)>,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static LOG: Mutex<Option<BTreeMap<usize, NodeObs>>> = Mutex::new(None);
+
+/// Start recording (clears any previous log).
+pub fn begin() {
+    *LOG.lock().unwrap() = Some(BTreeMap::new());
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Stop recording and return everything observed since [`begin`].
+pub fn take() -> BTreeMap<usize, NodeObs> {
+    ENABLED.store(false, Ordering::SeqCst);
+    LOG.lock().unwrap().take().unwrap_or_default()
+}
+
+#[inline]
+fn active() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+fn with(node: usize, f: impl FnOnce(&mut NodeObs)) {
+    if let Some(map) = LOG.lock().unwrap().as_mut() {
+        f(map.entry(node).or_default());
+    }
+}
+
+fn merge_i32(slot: &mut Option<(i32, i32)>, v: i32) {
+    *slot = Some(match *slot {
+        Some((lo, hi)) => (lo.min(v), hi.max(v)),
+        None => (v, v),
+    });
+}
+
+fn merge_f32(slot: &mut Option<(f32, f32)>, v: f32) {
+    // min/max would silently drop a NaN observation — keep it sticky
+    *slot = Some(match *slot {
+        Some((lo, hi)) if !v.is_nan() => (lo.min(v), hi.max(v)),
+        Some(_) => (f32::NAN, f32::NAN),
+        None => (v, v),
+    });
+}
+
+/// Record one integer dot-product accumulator of `node`.
+#[inline]
+pub fn record_dot(node: usize, d: i32) {
+    if active() {
+        with(node, |o| merge_i32(&mut o.dot, d));
+    }
+}
+
+/// Record one pre-activation value of `node`.
+#[inline]
+pub fn record_ri(node: usize, ri: f32) {
+    if active() {
+        with(node, |o| merge_f32(&mut o.ri, ri));
+    }
+}
+
+/// Record one binarized proxy dot of `node`.
+#[inline]
+pub fn record_proxy(node: usize, p_bin: i32) {
+    if active() {
+        with(node, |o| merge_i32(&mut o.proxy, p_bin));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_only_between_begin_and_take() {
+        // lib tests run in parallel and debug-build forwards elsewhere
+        // may record real node indices concurrently — use node keys no
+        // model can reach and only assert about those
+        const A: usize = usize::MAX - 2;
+        const B: usize = usize::MAX - 1;
+        const C: usize = usize::MAX;
+        record_dot(A, 5); // inert: no begin yet (may also race a begin
+                          // from this test's past/future self — harmless)
+        begin();
+        record_dot(B, -3);
+        record_dot(B, 9);
+        record_ri(B, 0.5);
+        record_ri(B, f32::NAN);
+        record_proxy(C, -7);
+        let log = take();
+        assert_eq!(log[&B].dot, Some((-3, 9)));
+        let (lo, hi) = log[&B].ri.unwrap();
+        assert!(lo.is_nan() && hi.is_nan(), "NaN observation must stick");
+        assert_eq!(log[&C].proxy, Some((-7, -7)));
+        record_dot(C, 1); // inert again after take
+        begin();
+        assert!(!take().contains_key(&C));
+    }
+}

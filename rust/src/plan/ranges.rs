@@ -1,0 +1,654 @@
+//! Quantized-numerics abstract interpreter over a frozen [`ModelPlan`].
+//!
+//! [`analyze`] propagates per-layer **value intervals** through the
+//! whole network — using the *actual prepacked weights* (per-filter
+//! `Σ|w| · max|x|` via [`PrepackedFilters::filter_sums`]) instead of the
+//! blanket `127·128·K` worst case — and statically proves, per compute
+//! site:
+//!
+//! * **`num.acc`** — the int8 dot kernels' i32 accumulators cannot
+//!   overflow. The bound `Σ|w| · max|x|` dominates the magnitude of
+//!   *every* partial sum under *any* accumulation order or lane subset
+//!   (each term's magnitude is `|wₖ|·|xₖ| ≤ |wₖ|·max|x|`, and elided
+//!   lanes contribute exactly 0), so one number covers the dense
+//!   16-chunk scalar loop, the AVX2 `vpmaddwd` chains, the 4-stream
+//!   input-sparse kernel, the weight-sparse lane walks and the
+//!   doubly-sparse intersection dot alike.
+//! * **`num.width`** — the same bound against a *claimed* accumulator
+//!   width ([`NumericOpts::acc_bits`] < 32): the gate a future i16
+//!   fast path / VNNI lowering must pass before narrowing.
+//! * **`num.requant`** — the float pipeline (`dot · dq` → BN affine →
+//!   residual add) stays inside the finite f32 range, with saturation
+//!   only where `quantize` intends it (the `±127` clamp). Intervals are
+//!   computed in f64 and widened outward ([`Fival::widen`]) to absorb
+//!   the engine evaluating the same expressions in f32.
+//! * **`num.scale`** — quantization/dequantization scales are positive
+//!   finite numbers (a NaN or non-positive `sx` makes every downstream
+//!   bound meaningless).
+//! * **`num.threshold`** — each policied layer's skip comparison
+//!   `m·p_bin + b` (BN-affined, residual-added) against `-margin` is
+//!   sound: the line parameters and margin are finite, and the
+//!   binarized dot `p_bin ∈ [-k_len, k_len]` doesn't force a degenerate
+//!   verdict. Layers where *every* binary-consulted neuron provably
+//!   always skips (or never skips) get a Warning — the rookie is then
+//!   constant and the threshold comparison pointless.
+//!
+//! Findings reuse the structural verifier's [`LintReport`] machinery
+//! (`mor lint --numeric`, `--json`, debug-build `Session::build`); the
+//! computed [`StepRanges`] ride along in the [`NumericReport`] so
+//! future work can key off proven bounds instead of worst cases
+//! ([`NumericReport::max_acc_bits`]). The runtime property suite
+//! (`rust/tests/numeric_ranges.rs`) checks observed values ⊆ these
+//! intervals via the [`super::observe`] hook.
+
+use crate::engine::gemm::PrepackedFilters;
+use crate::model::{Model, Node};
+use crate::plan::compile::{ComputeStep, ModelPlan, Src, StepPlan};
+use crate::plan::verify::{Finding, LintReport, Severity};
+use crate::predictor::strategies::margin_of;
+use crate::predictor::MorPolicy;
+use crate::util::interval::{Fival, Ival};
+use crate::util::json::{obj, Json};
+use std::fmt;
+
+/// Knobs for [`analyze_with`]. `acc_bits` is the *claimed* signed
+/// accumulator width: 32 (the default) asks only the native-kernel
+/// question; anything narrower additionally emits `num.width` wherever
+/// the proven bound does not fit — the static gate for a narrower
+/// fast-path accumulator.
+#[derive(Clone, Copy, Debug)]
+pub struct NumericOpts {
+    pub acc_bits: u32,
+}
+
+impl Default for NumericOpts {
+    fn default() -> NumericOpts {
+        NumericOpts { acc_bits: 32 }
+    }
+}
+
+/// Outward widening applied to every derived float interval: the engine
+/// evaluates the same expressions in f32 (≤ 2⁻²⁴ relative rounding per
+/// op, a handful of ops per value), so a few orders of magnitude more
+/// slack keeps the runtime-containment property trivially true without
+/// visibly loosening any bound.
+const SLACK_REL: f64 = 1e-4;
+const SLACK_ABS: f64 = 1e-6;
+
+/// "Unknown but finite-f32" — the range of a slot nothing has
+/// constrained yet. Only ever consumed through the saturating
+/// quantizer, which collapses it to `[-127, 127]`.
+const WIDE: Fival = Fival {
+    lo: -(f32::MAX as f64),
+    hi: f32::MAX as f64,
+};
+
+/// The proven per-step value ranges — the analysis result beyond the
+/// pass/fail findings.
+#[derive(Clone, Debug)]
+pub struct StepRanges {
+    /// Plan step index.
+    pub step: usize,
+    /// Model node index.
+    pub node: usize,
+    /// Quantized input activations (`[-127, 127]` at worst — `quantize`
+    /// saturates by design; tighter after a ReLU-bounded producer).
+    pub q: Ival,
+    /// Max over filters of `Σ|w| · max|q|`: bounds the magnitude of
+    /// every accumulator partial sum under any order/subset.
+    pub acc_peak: u64,
+    /// Hull over filters of the exact final-dot interval
+    /// `[pos·qlo + neg·qhi, pos·qhi + neg·qlo]`.
+    pub dot: Ival,
+    /// Hull over filters of the pre-activation value (`dot·dq` → BN →
+    /// `+ residual`), f32-widened.
+    pub pre_act: Fival,
+    /// What the destination slot holds after the step (fused ReLU
+    /// applied; includes 0 when the predictor may write skip-zeros).
+    pub out: Fival,
+    /// Binarized proxy-dot range `[-k_len, k_len]`, when the policy
+    /// consults the binary rookie on this layer.
+    pub proxy: Option<Ival>,
+    /// Hull over binary-consulted neurons of the threshold estimate
+    /// `bn_affine(m·p_bin + b) + residual`, f32-widened.
+    pub est_ri: Option<Fival>,
+    /// Binary-consulted neuron count and how many of them are provably
+    /// degenerate (always-skip / never-skip for every possible input).
+    pub consulted: usize,
+    pub always_skip: usize,
+    pub never_skip: usize,
+}
+
+impl StepRanges {
+    /// Smallest signed accumulator width (bits) that holds every
+    /// partial sum of this step: the proven requirement a narrower
+    /// fast path must meet. 33+ means even i32 is not enough.
+    pub fn acc_bits_needed(&self) -> u32 {
+        bits_needed(self.acc_peak)
+    }
+}
+
+/// Findings plus the proven ranges. The `lint` field reuses the
+/// structural verifier's report type, so severity counting, `has`,
+/// JSON and Display formatting behave identically.
+#[derive(Clone, Debug)]
+pub struct NumericReport {
+    pub lint: LintReport,
+    pub steps: Vec<StepRanges>,
+}
+
+impl NumericReport {
+    pub fn is_clean(&self) -> bool {
+        self.lint.is_clean()
+    }
+
+    pub fn errors(&self) -> usize {
+        self.lint.errors()
+    }
+
+    pub fn warnings(&self) -> usize {
+        self.lint.warnings()
+    }
+
+    pub fn has(&self, code: &str) -> bool {
+        self.lint.has(code)
+    }
+
+    /// The proven ranges of the step computing `node`, if any.
+    pub fn step_for(&self, node: usize) -> Option<&StepRanges> {
+        self.steps.iter().find(|s| s.node == node)
+    }
+
+    /// Max over compute steps of [`StepRanges::acc_bits_needed`] — the
+    /// accumulator width this whole model provably fits in (0 for a
+    /// model with no compute step).
+    pub fn max_acc_bits(&self) -> u32 {
+        self.steps.iter().map(|s| s.acc_bits_needed()).max().unwrap_or(0)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let steps = self
+            .steps
+            .iter()
+            .map(|s| {
+                let mut pairs = vec![
+                    ("step", Json::Num(s.step as f64)),
+                    ("node", Json::Num(s.node as f64)),
+                    ("q", ival_json(s.q)),
+                    ("acc_peak", Json::Num(s.acc_peak as f64)),
+                    ("acc_bits_needed", Json::Num(s.acc_bits_needed() as f64)),
+                    ("dot", ival_json(s.dot)),
+                    ("pre_act", fival_json(s.pre_act)),
+                    ("out", fival_json(s.out)),
+                ];
+                pairs.push(("proxy", s.proxy.map_or(Json::Null, ival_json)));
+                pairs.push(("est_ri", s.est_ri.map_or(Json::Null, fival_json)));
+                pairs.push(("consulted", Json::Num(s.consulted as f64)));
+                pairs.push(("always_skip", Json::Num(s.always_skip as f64)));
+                pairs.push(("never_skip", Json::Num(s.never_skip as f64)));
+                obj(pairs)
+            })
+            .collect();
+        obj(vec![
+            ("findings", self.lint.to_json()),
+            ("steps", Json::Arr(steps)),
+        ])
+    }
+}
+
+/// Smallest signed width `b` with `peak ≤ 2^(b−1) − 1`; 65 means the
+/// magnitude exceeds even i64.
+fn bits_needed(peak: u64) -> u32 {
+    (65 - peak.leading_zeros()).max(2)
+}
+
+fn ival_json(iv: Ival) -> Json {
+    // i64 endpoints as f64: lossy above 2^53, fine for reporting (the
+    // proofs themselves run on the exact i64 values)
+    Json::Arr(vec![Json::Num(iv.lo as f64), Json::Num(iv.hi as f64)])
+}
+
+fn fival_json(iv: Fival) -> Json {
+    // JSON has no NaN/inf literal: a poisoned bound serializes as null
+    let num = |v: f64| if v.is_finite() { Json::Num(v) } else { Json::Null };
+    Json::Arr(vec![num(iv.lo), num(iv.hi)])
+}
+
+impl fmt::Display for NumericReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.lint)?;
+        for s in &self.steps {
+            writeln!(
+                f,
+                "range step {} node {}: q=[{}, {}] |acc|<={} ({} bits) dot=[{}, {}] out=[{:.3}, {:.3}]",
+                s.step,
+                s.node,
+                s.q.lo,
+                s.q.hi,
+                s.acc_peak,
+                s.acc_bits_needed(),
+                s.dot.lo,
+                s.dot.hi,
+                s.out.lo,
+                s.out.hi
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// Run the numeric analysis with default options (native i32
+/// accumulators). `model` and `policy` must be the ones `plan` was
+/// compiled from.
+pub fn analyze(plan: &ModelPlan, model: &Model, policy: Option<&MorPolicy>) -> NumericReport {
+    analyze_with(plan, model, policy, &NumericOpts::default())
+}
+
+/// [`analyze`] with explicit [`NumericOpts`].
+pub fn analyze_with(
+    plan: &ModelPlan,
+    model: &Model,
+    policy: Option<&MorPolicy>,
+    opts: &NumericOpts,
+) -> NumericReport {
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut steps: Vec<StepRanges> = Vec::new();
+    // per-slot value ranges; None = not written yet (the *structural*
+    // verifier owns use-before-def errors — here we just stay sound)
+    let mut slots: Vec<Option<Fival>> = vec![None; plan.n_slots];
+    let prep = model.prepacked();
+    for (si, step) in plan.steps.iter().enumerate() {
+        match step {
+            StepPlan::Compute(cs) => {
+                let sr = analyze_compute(
+                    si,
+                    cs,
+                    model,
+                    prep.layer(cs.node),
+                    policy,
+                    opts,
+                    &slots,
+                    &mut findings,
+                );
+                slots[cs.dst] = Some(sr.out);
+                steps.push(sr);
+            }
+            // max / mean of a tensor stay inside its hull
+            StepPlan::MaxPool { src, dst, .. } | StepPlan::Gap { src, dst, .. } => {
+                slots[*dst] = Some(src_range(*src, &slots));
+            }
+            StepPlan::Relu { src, dst, .. } => {
+                slots[*dst] = Some(src_range(*src, &slots).relu());
+            }
+        }
+    }
+    NumericReport { lint: LintReport { findings }, steps }
+}
+
+fn src_range(src: Src, slots: &[Option<Fival>]) -> Fival {
+    match src {
+        Src::Input => WIDE,
+        Src::Slot(k) => slots[k].unwrap_or(WIDE),
+    }
+}
+
+fn err(step: usize, code: &'static str, message: String) -> Finding {
+    Finding { code, severity: Severity::Error, step: Some(step), message }
+}
+
+fn warn(step: usize, code: &'static str, message: String) -> Finding {
+    Finding { code, severity: Severity::Warning, step: Some(step), message }
+}
+
+/// The quantized-activation interval `quantize(x)` can produce for
+/// `x ∈ src`: `round_half_even(x / sx)` clamped to `[-127, 127]` —
+/// the one saturation site the engine *intends*. Widened by ±1 lane
+/// before the clamp (f32 division/rounding slack); a non-negative
+/// source (post-ReLU) keeps its exact one-sidedness.
+fn quantize_interval(src: Fival, sx: f32) -> Ival {
+    if src.is_nan() {
+        // runtime: NaN clamps to NaN, and `NaN as i8` saturates to 0 —
+        // still inside the full quantizer range
+        return Ival::new(-127, 127);
+    }
+    let inv = 1.0 / sx as f64;
+    let (a, b) = (src.lo * inv, src.hi * inv);
+    // float→int casts saturate in Rust, so huge ranges land on the clamp
+    let mut lo = (a.min(b).floor() as i64).saturating_sub(1);
+    let hi = (a.max(b).ceil() as i64).saturating_add(1);
+    if src.lo >= 0.0 && sx > 0.0 {
+        lo = lo.max(0); // x ≥ 0 ⇒ round(x/sx) ≥ 0, exactly
+    }
+    Ival::new(lo.clamp(-127, 127), hi.clamp(-127, 127))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn analyze_compute(
+    si: usize,
+    cs: &ComputeStep,
+    model: &Model,
+    pf: &PrepackedFilters,
+    policy: Option<&MorPolicy>,
+    opts: &NumericOpts,
+    slots: &[Option<Fival>],
+    findings: &mut Vec<Finding>,
+) -> StepRanges {
+    let node = &model.nodes[cs.node];
+    let bn = match node {
+        Node::Conv { bn, .. } | Node::Fc { bn, .. } => bn.as_ref(),
+        _ => None,
+    };
+
+    // ---- scale sanity (num.scale) --------------------------------------
+    let mut scale_ok = true;
+    if !(cs.sx.is_finite() && cs.sx > 0.0) {
+        findings.push(err(
+            si,
+            "num.scale",
+            format!(
+                "input quantization scale sx = {} is not positive finite: \
+                 quantize() output is unbounded garbage",
+                cs.sx
+            ),
+        ));
+        scale_ok = false;
+    }
+    if !cs.dq.is_finite() {
+        findings.push(err(
+            si,
+            "num.scale",
+            format!("dequantization factor dq = {} is not finite", cs.dq),
+        ));
+        scale_ok = false;
+    }
+
+    // ---- quantized input interval --------------------------------------
+    let src = src_range(cs.src, slots);
+    let q = if scale_ok {
+        quantize_interval(src, cs.sx)
+    } else {
+        Ival::new(-127, 127) // the clamp still saturates whatever comes in
+    };
+    let qmax = q.max_abs() as i64; // ≤ 127
+
+    // ---- per-filter integer dots + accumulator bounds (num.acc/width) --
+    let res_range = match cs.res {
+        Some(s) => slots[s].unwrap_or(WIDE),
+        None => Fival::exact(0.0),
+    };
+    let eff_bits = opts.acc_bits.clamp(2, 32);
+    let mut acc_peak: u64 = 0;
+    let mut dot_hull: Option<Ival> = None;
+    let mut pre_hull: Option<Fival> = None;
+    let mut out_hull: Option<Fival> = None;
+    // one finding per code per step: the first offending filter names
+    // itself, the rest would only repeat the same root cause
+    let (mut acc_hit, mut width_hit, mut requant_hit) = (false, false, false);
+    for f in 0..cs.cout {
+        let (pos, neg) = pf.filter_sums(f);
+        // exact final-dot interval: positive weights pull toward q.hi,
+        // negative ones toward q.lo
+        let dot_iv = Ival::sum_products(&[(pos, q), (neg, q)]);
+        // prefix-safe magnitude bound: Σ|w| · max|q| dominates every
+        // partial sum under any accumulation order or lane subset
+        let abs_sum = pos - neg;
+        let bound = (abs_sum as u64).checked_mul(qmax as u64);
+        let acc_iv = match bound {
+            Some(b) if b <= i64::MAX as u64 => Ival::new(-(b as i64), b as i64),
+            _ => Ival::TOP,
+        };
+        acc_peak = acc_peak.max(bound.unwrap_or(u64::MAX));
+        if !acc_hit && !acc_iv.fits_signed(32) {
+            findings.push(err(
+                si,
+                "num.acc",
+                format!(
+                    "filter {f}: worst-case accumulator magnitude Σ|w|·max|x| = \
+                     {abs_sum}·{qmax} exceeds i32 — the int8 dot kernels can overflow"
+                ),
+            ));
+            acc_hit = true;
+        }
+        if eff_bits < 32 && !width_hit && !acc_iv.fits_signed(eff_bits) {
+            findings.push(err(
+                si,
+                "num.width",
+                format!(
+                    "filter {f}: accumulator bound {abs_sum}·{qmax} does not fit the \
+                     claimed i{eff_bits} accumulator (needs {} bits)",
+                    bits_needed(bound.unwrap_or(u64::MAX))
+                ),
+            ));
+            width_hit = true;
+        }
+        dot_hull = Some(dot_hull.map_or(dot_iv, |h| h.hull(dot_iv)));
+
+        // ---- float pipeline (num.requant) ------------------------------
+        let mut v = Fival::from_ival(dot_iv).scale(cs.dq as f64);
+        if let Some((scale, shift)) = bn {
+            v = v.affine(scale[f] as f64, shift[f] as f64);
+        }
+        let v = v.add(res_range).widen(SLACK_REL, SLACK_ABS);
+        if !requant_hit && !v.fits_f32() {
+            findings.push(err(
+                si,
+                "num.requant",
+                format!(
+                    "filter {f}: pre-activation range [{}, {}] leaves the finite f32 \
+                     range — dequantize/BN/residual arithmetic can overflow or poison \
+                     (saturation is only intended inside quantize)",
+                    v.lo, v.hi
+                ),
+            ));
+            requant_hit = true;
+        }
+        pre_hull = Some(pre_hull.map_or(v, |h| h.hull(v)));
+        let o = if cs.node_relu { v.relu() } else { v };
+        out_hull = Some(out_hull.map_or(o, |h| h.hull(o)));
+    }
+    let mut out = out_hull.unwrap_or(Fival::exact(0.0));
+    if cs.policied {
+        // skipped neurons write exactly 0.0
+        out = out.hull(Fival::exact(0.0));
+    }
+
+    // ---- predictor threshold comparison (num.threshold) ----------------
+    let mut proxy = None;
+    let mut est_hull: Option<Fival> = None;
+    let (mut consulted, mut always_skip, mut never_skip) = (0usize, 0usize, 0usize);
+    if cs.policied {
+        if let Some(p) = policy.filter(|p| p.cfg.strategy.uses_binary()) {
+            if let Some(lp) = p.layers.get(&cs.node) {
+                // PackedVec::dot = (jointly valid lanes) − 2·mismatches,
+                // and at most k_len lanes are jointly valid
+                let k = cs.k_len as i64;
+                let p_iv = Ival::new(-k, k);
+                proxy = Some(p_iv);
+                let mut thr_hit = false;
+                for f in 0..cs.cout {
+                    if !lp.enabled[f] {
+                        continue;
+                    }
+                    if p.cfg.strategy.uses_clusters() && lp.is_proxy(f) {
+                        continue; // proxies are always evaluated, never consulted
+                    }
+                    consulted += 1;
+                    let (m, b, s) = (lp.m[f], lp.b[f], lp.s[f]);
+                    let margin = margin_of(lp, bn, f, p.cfg.margin_sigmas);
+                    if !(m.is_finite() && b.is_finite() && s.is_finite() && s >= 0.0)
+                        || !margin.is_finite()
+                        || margin < 0.0
+                    {
+                        if !thr_hit {
+                            findings.push(err(
+                                si,
+                                "num.threshold",
+                                format!(
+                                    "filter {f}: predictor line m={m} b={b} s={s} \
+                                     margin={margin} is not finite/non-negative — the \
+                                     skip comparison est < -margin is unsound"
+                                ),
+                            ));
+                            thr_hit = true;
+                        }
+                        continue;
+                    }
+                    // est_ri = bn_affine(m·p_bin + b) + residual, the exact
+                    // expression binary_says_skip compares against -margin
+                    let est = Fival::from_ival(p_iv)
+                        .scale(m as f64)
+                        .add(Fival::exact(b as f64));
+                    let est_ri = match bn {
+                        Some((scale, shift)) => est.affine(scale[f] as f64, shift[f] as f64),
+                        None => est,
+                    }
+                    .add(res_range)
+                    .widen(SLACK_REL, SLACK_ABS);
+                    if est_ri.is_nan() {
+                        if !thr_hit {
+                            findings.push(err(
+                                si,
+                                "num.threshold",
+                                format!(
+                                    "filter {f}: threshold estimate range is NaN \
+                                     (poisoned BN/residual parameters)"
+                                ),
+                            ));
+                            thr_hit = true;
+                        }
+                        continue;
+                    }
+                    est_hull = Some(est_hull.map_or(est_ri, |h| h.hull(est_ri)));
+                    if est_ri.hi < -(margin as f64) {
+                        always_skip += 1;
+                    } else if est_ri.lo >= -(margin as f64) {
+                        never_skip += 1;
+                    }
+                }
+                if consulted > 0 && always_skip == consulted {
+                    findings.push(warn(
+                        si,
+                        "num.threshold",
+                        format!(
+                            "all {consulted} binary-consulted neurons provably always \
+                             skip (est_ri < -margin for every input): the layer \
+                             degenerates to constant zeros"
+                        ),
+                    ));
+                } else if consulted > 0 && never_skip == consulted {
+                    findings.push(warn(
+                        si,
+                        "num.threshold",
+                        format!(
+                            "all {consulted} binary-consulted neurons provably never \
+                             skip (est_ri ≥ -margin for every input): the binary \
+                             rookie is inert on this layer"
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+
+    StepRanges {
+        step: si,
+        node: cs.node,
+        q,
+        acc_peak,
+        dot: dot_hull.unwrap_or(Ival::exact(0)),
+        pre_act: pre_hull.unwrap_or(Fival::exact(0.0)),
+        out,
+        proxy,
+        est_ri: est_hull,
+        consulted,
+        always_skip,
+        never_skip,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::synth;
+    use crate::plan;
+    use crate::predictor::RunOpts;
+
+    #[test]
+    fn zoo_models_prove_clean() {
+        for model in [synth::cnn10_like(7), synth::tiny_serving_model(7)] {
+            let p = plan::compile(&model, None, RunOpts::default());
+            let rep = analyze(&p, &model, None);
+            assert_eq!(rep.errors(), 0, "{}: {rep}", model.name);
+            assert!(!rep.steps.is_empty());
+            // every compute step proves i32 is enough
+            assert!(rep.max_acc_bits() <= 32, "{}", model.name);
+        }
+    }
+
+    #[test]
+    fn per_filter_bound_beats_blanket_worst_case() {
+        // actual-weight bounds: uniform random i8 weights average
+        // |w| ≈ 64, so the real Σ|w|·127 of the first conv sits well
+        // under the blanket 127·128·k_len worst case the kernel docs
+        // used to quote
+        let model = synth::cnn10_like(7);
+        let p = plan::compile(&model, None, RunOpts::default());
+        let rep = analyze(&p, &model, None);
+        let first = &rep.steps[0];
+        let k = model.nodes[first.node].k_len() as u64;
+        let blanket = 127u64 * 128 * k;
+        assert!(first.acc_peak < blanket, "{} !< {blanket}", first.acc_peak);
+        assert!(first.acc_peak > 0);
+    }
+
+    #[test]
+    fn oversized_dot_is_rejected_with_num_acc() {
+        // Σ|w|·127 = 262144·128·127 ≈ 4.26e9 > 2³¹: no i32 accumulator
+        // can hold the worst case of this (absurd) layer
+        let k = 262_144usize;
+        let model = Model::new(
+            "acc_overflow".into(),
+            0.02,
+            (1, 1, k),
+            vec![Node::Fc {
+                cin: k,
+                cout: 2,
+                sw: 0.01,
+                sx: 0.02,
+                w: vec![-128i8; k * 2],
+                bn: None,
+                relu: false,
+                res_from: None,
+                consumes: -1,
+            }],
+        );
+        let p = plan::compile(&model, None, RunOpts::default());
+        let rep = analyze(&p, &model, None);
+        assert!(rep.has("num.acc"), "{rep}");
+        assert!(rep.errors() > 0);
+        assert!(rep.max_acc_bits() > 32);
+    }
+
+    #[test]
+    fn narrow_width_claim_is_rejected_with_num_width() {
+        let model = synth::cnn10_like(7);
+        let p = plan::compile(&model, None, RunOpts::default());
+        let rep = analyze_with(&p, &model, None, &NumericOpts { acc_bits: 16 });
+        assert!(rep.has("num.width"), "{rep}");
+        assert!(!rep.has("num.acc"), "i32 itself is fine for this model");
+    }
+
+    #[test]
+    fn quantize_interval_is_saturating_and_one_sided() {
+        assert_eq!(quantize_interval(WIDE, 0.02), Ival::new(-127, 127));
+        // post-ReLU source keeps q non-negative; the upper bound carries
+        // the ±1 rounding slack (1.0/0.02 rounds to ~50, +ceil, +1)
+        let q = quantize_interval(Fival::new(0.0, 1.0), 0.02);
+        assert_eq!(q.lo, 0);
+        assert!((51..=52).contains(&q.hi), "q.hi = {}", q.hi);
+        // two-sided source: symmetric-ish with slack, inside the clamp
+        let q = quantize_interval(Fival::new(-0.1, 0.1), 0.02);
+        assert!(q.contains(-5) && q.contains(5));
+        assert!(q.lo >= -8 && q.hi <= 8, "q = [{}, {}]", q.lo, q.hi);
+    }
+}

@@ -301,6 +301,11 @@ fn compute_layer_scalar(
                 let f = $f;
                 let d = dot_i8(&pg.patch, node.filter(f));
                 let ri = relu_input(d, dq, bn, f, res_at(f));
+                #[cfg(debug_assertions)]
+                {
+                    crate::plan::observe::record_dot(node_idx, d);
+                    crate::plan::observe::record_ri(node_idx, ri);
+                }
                 out.data[row * cout + f] = if node_relu { ri.max(0.0) } else { ri };
                 ops.macs_done += k;
                 ops.macs_skipped_input_zero += k - pg.nnz as u64;
@@ -329,9 +334,15 @@ fn compute_layer_scalar(
                 for f in 0..cout {
                     let d = dot_i8(&pg.patch, node.filter(f));
                     let ri = relu_input(d, dq, bn, f, res_at(f));
+                    #[cfg(debug_assertions)]
+                    {
+                        crate::plan::observe::record_dot(node_idx, d);
+                        crate::plan::observe::record_ri(node_idx, ri);
+                    }
                     finish_neuron(
                         f, ri <= 0.0, true, row, cout, k, node, &pg, dq, bn, res_at(f),
-                        node_relu, is_relu_layer, opts, &mut out, pred, ops, &mut trace,
+                        node_relu, is_relu_layer, opts, node_idx, &mut out, pred, ops,
+                        &mut trace,
                     );
                 }
             }
@@ -343,6 +354,8 @@ fn compute_layer_scalar(
                     let applied = mp.cfg.strategy.uses_binary() && lp.enabled[f];
                     if applied {
                         let p_bin = pg.packed.dot(&lp.packed_w[f]);
+                        #[cfg(debug_assertions)]
+                        crate::plan::observe::record_proxy(node_idx, p_bin);
                         ops.bin_ops += k;
                         if let Some(t) = trace.as_mut() {
                             t.bin_eval[row * cout + f] = true;
@@ -353,7 +366,8 @@ fn compute_layer_scalar(
                     }
                     finish_neuron(
                         f, skip, applied, row, cout, k, node, &pg, dq, bn, res_at(f),
-                        node_relu, is_relu_layer, opts, &mut out, pred, ops, &mut trace,
+                        node_relu, is_relu_layer, opts, node_idx, &mut out, pred, ops,
+                        &mut trace,
                     );
                 }
             }
@@ -379,6 +393,8 @@ fn compute_layer_scalar(
                             skip = false;
                             if applied && proxy_zero {
                                 let p_bin = pg.packed.dot(&lp.packed_w[f]);
+                                #[cfg(debug_assertions)]
+                                crate::plan::observe::record_proxy(node_idx, p_bin);
                                 ops.bin_ops += k;
                                 if let Some(t) = trace.as_mut() {
                                     t.bin_eval[row * cout + f] = true;
@@ -394,7 +410,8 @@ fn compute_layer_scalar(
                         }
                         finish_neuron(
                             f, skip, applied, row, cout, k, node, &pg, dq, bn, res_at(f),
-                            node_relu, is_relu_layer, opts, &mut out, pred, ops, &mut trace,
+                            node_relu, is_relu_layer, opts, node_idx, &mut out, pred, ops,
+                            &mut trace,
                         );
                     }
                 }
@@ -410,6 +427,7 @@ fn compute_layer_scalar(
 
 /// Apply the skip/evaluate decision for one member neuron and account it.
 #[allow(clippy::too_many_arguments)]
+#[cfg_attr(not(debug_assertions), allow(unused_variables))]
 fn finish_neuron(
     f: usize,
     skip: bool,
@@ -425,6 +443,7 @@ fn finish_neuron(
     node_relu: bool,
     is_relu_layer: bool,
     opts: RunOpts,
+    node_idx: usize,
     out: &mut Tensor,
     pred: &mut PredStats,
     ops: &mut OpsStats,
@@ -440,6 +459,11 @@ fn finish_neuron(
             // ground truth for Fig 12 / accuracy accounting
             let d = dot_i8(&pg.patch, node.filter(f));
             let ri = relu_input(d, dq, bn, f, res);
+            #[cfg(debug_assertions)]
+            {
+                crate::plan::observe::record_dot(node_idx, d);
+                crate::plan::observe::record_ri(node_idx, ri);
+            }
             if is_relu_layer {
                 if ri <= 0.0 {
                     pred.correct_zero += 1;
@@ -453,6 +477,11 @@ fn finish_neuron(
     } else {
         let d = dot_i8(&pg.patch, node.filter(f));
         let ri = relu_input(d, dq, bn, f, res);
+        #[cfg(debug_assertions)]
+        {
+            crate::plan::observe::record_dot(node_idx, d);
+            crate::plan::observe::record_ri(node_idx, ri);
+        }
         out.data[row * cout + f] = if node_relu { ri.max(0.0) } else { ri };
         ops.macs_done += k;
         ops.macs_skipped_input_zero += k - pg.nnz as u64;

@@ -177,6 +177,9 @@ impl LayerState {
 /// Read-only view of one output row, everything a strategy may consult
 /// while deciding which filters to skip.
 pub struct RowCtx<'a> {
+    /// Model node index of the layer (numeric-observation keying in
+    /// debug builds — see [`crate::plan::observe`]).
+    pub node: usize,
     pub lp: &'a LayerState,
     pub cfg: &'a PredictorConfig,
     /// Packed activation sign bits of this row's patch (rookie operand).
@@ -419,6 +422,8 @@ pub(crate) fn binary_says_skip(
     ops: &mut OpsStats,
 ) -> bool {
     let p_bin = ctx.packed.dot(&ctx.lp.packed_w[f]);
+    #[cfg(debug_assertions)]
+    crate::plan::observe::record_proxy(ctx.node, p_bin);
     ops.bin_ops += ctx.k;
     if let Some(be) = bin_eval.as_deref_mut() {
         be[f] = true;

@@ -252,9 +252,13 @@ impl Session {
 /// compiled plan through the static verifier ([`plan::verify`]) — the
 /// same pass `mor lint` runs — so a compiler regression that mis-wires
 /// a slot or undersizes a scratch mark fails loudly at `finish()`
-/// instead of corrupting activations at serve time. Release builds
-/// skip the check (it is O(nodes²) but, more importantly, redundant:
-/// plans are only produced by `compile`, which debug CI lints).
+/// instead of corrupting activations at serve time, and additionally
+/// through the numeric range analyzer ([`plan::ranges::analyze`], the
+/// `mor lint --numeric` pass) so an accumulator-overflow or
+/// requantization-range hazard is rejected before a single inference
+/// runs. Release builds skip both checks (they are O(nodes²) but, more
+/// importantly, redundant: plans are only produced by `compile`, which
+/// debug CI lints).
 fn compile_plan(
     model: &Model,
     policy: Option<&MorPolicy>,
@@ -269,6 +273,13 @@ fn compile_plan(
                 report.errors() == 0,
                 "plan verifier found {} error(s) for model '{}':\n{report}",
                 report.errors(),
+                model.name
+            );
+            let numeric = plan::ranges::analyze(&compiled, model, policy);
+            debug_assert!(
+                numeric.lint.errors() == 0,
+                "numeric range analysis found {} error(s) for model '{}':\n{numeric}",
+                numeric.lint.errors(),
                 model.name
             );
         }

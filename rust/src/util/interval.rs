@@ -1,0 +1,318 @@
+//! Interval-arithmetic domains for the quantized-numerics analyzer
+//! ([`crate::plan::ranges`]).
+//!
+//! Two abstract domains:
+//!
+//! * [`Ival`] — closed integer intervals over i64 with **checked**
+//!   arithmetic: any operation whose exact result cannot be represented
+//!   in i64 widens to [`Ival::TOP`] instead of wrapping. TOP then fails
+//!   every `fits_signed` query, so overflow in the *analysis* can only
+//!   make the verdict more conservative, never unsound.
+//! * [`Fival`] — closed f64 intervals for the float pipeline
+//!   (dequantize → BN affine → residual add → ReLU). The engine
+//!   evaluates the same expressions in f32, so the analyzer widens each
+//!   derived interval outward ([`Fival::widen`]) before treating it as
+//!   a bound on runtime values; NaN bounds are sticky (they propagate
+//!   through every operation) so a poisoned pipeline is always flagged
+//!   by [`Fival::fits_f32`] at the end.
+
+/// Closed integer interval `[lo, hi]` over i64, or TOP (unknown).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Ival {
+    pub lo: i64,
+    pub hi: i64,
+}
+
+impl Ival {
+    /// The widened "anything" element: the full i64 range. Produced by
+    /// any checked operation that overflows; absorbing for add/mul.
+    pub const TOP: Ival = Ival {
+        lo: i64::MIN,
+        hi: i64::MAX,
+    };
+
+    pub fn new(lo: i64, hi: i64) -> Ival {
+        debug_assert!(lo <= hi, "interval bounds out of order: [{lo}, {hi}]");
+        Ival { lo, hi }
+    }
+
+    pub fn exact(v: i64) -> Ival {
+        Ival { lo: v, hi: v }
+    }
+
+    pub fn is_top(&self) -> bool {
+        *self == Ival::TOP
+    }
+
+    /// `self + o`, widening to TOP if either endpoint overflows i64.
+    pub fn add(self, o: Ival) -> Ival {
+        match (self.lo.checked_add(o.lo), self.hi.checked_add(o.hi)) {
+            (Some(lo), Some(hi)) => Ival { lo, hi },
+            _ => Ival::TOP,
+        }
+    }
+
+    /// `k * self` for a scalar of either sign (endpoints swap when
+    /// `k < 0`), widening to TOP on overflow.
+    pub fn mul_scalar(self, k: i64) -> Ival {
+        match (self.lo.checked_mul(k), self.hi.checked_mul(k)) {
+            (Some(a), Some(b)) => Ival {
+                lo: a.min(b),
+                hi: a.max(b),
+            },
+            _ => Ival::TOP,
+        }
+    }
+
+    /// `Σ cᵢ · xᵢ` where each `xᵢ` ranges over `iv` — the sum-of-products
+    /// form every dot-product bound reduces to once weights are grouped
+    /// by sign (`Σ max(w,0)` and `Σ min(w,0)` against the activation
+    /// interval). Widens to TOP on any intermediate overflow.
+    pub fn sum_products(terms: &[(i64, Ival)]) -> Ival {
+        terms
+            .iter()
+            .fold(Ival::exact(0), |acc, &(c, iv)| acc.add(iv.mul_scalar(c)))
+    }
+
+    /// Smallest interval containing both.
+    pub fn hull(self, o: Ival) -> Ival {
+        Ival {
+            lo: self.lo.min(o.lo),
+            hi: self.hi.max(o.hi),
+        }
+    }
+
+    /// Clamp both endpoints into `[lo, hi]` (e.g. a saturating quantizer).
+    pub fn clamp(self, lo: i64, hi: i64) -> Ival {
+        Ival {
+            lo: self.lo.clamp(lo, hi),
+            hi: self.hi.clamp(lo, hi),
+        }
+    }
+
+    pub fn contains(&self, v: i64) -> bool {
+        self.lo <= v && v <= self.hi
+    }
+
+    /// Largest absolute value in the interval (u64 so `|i64::MIN|` is
+    /// representable).
+    pub fn max_abs(&self) -> u64 {
+        self.lo.unsigned_abs().max(self.hi.unsigned_abs())
+    }
+
+    /// Does every value in the interval fit a signed `bits`-wide
+    /// accumulator? TOP never fits (unknown ⇒ unprovable). `bits` must
+    /// be in `2..=63`; the analyzer only asks about 8..=32.
+    pub fn fits_signed(&self, bits: u32) -> bool {
+        debug_assert!((2..=63).contains(&bits));
+        if self.is_top() {
+            return false;
+        }
+        let min = -(1i64 << (bits - 1));
+        let max = (1i64 << (bits - 1)) - 1;
+        self.lo >= min && self.hi <= max
+    }
+}
+
+/// Closed f64 interval for the dequantized float pipeline. NaN bounds
+/// are sticky: once poisoned, every derived interval stays poisoned and
+/// [`Fival::fits_f32`] reports false.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Fival {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+/// Order two candidates into (min, max), poisoning on NaN instead of
+/// silently dropping it the way `f64::min`/`f64::max` would.
+fn order(a: f64, b: f64) -> (f64, f64) {
+    if a.is_nan() || b.is_nan() {
+        (f64::NAN, f64::NAN)
+    } else if a <= b {
+        (a, b)
+    } else {
+        (b, a)
+    }
+}
+
+impl Fival {
+    pub fn new(lo: f64, hi: f64) -> Fival {
+        debug_assert!(
+            lo <= hi || lo.is_nan() || hi.is_nan(),
+            "interval bounds out of order: [{lo}, {hi}]"
+        );
+        Fival { lo, hi }
+    }
+
+    pub fn exact(v: f64) -> Fival {
+        Fival { lo: v, hi: v }
+    }
+
+    pub fn from_ival(iv: Ival) -> Fival {
+        Fival {
+            lo: iv.lo as f64,
+            hi: iv.hi as f64,
+        }
+    }
+
+    pub fn is_nan(&self) -> bool {
+        self.lo.is_nan() || self.hi.is_nan()
+    }
+
+    pub fn add(self, o: Fival) -> Fival {
+        let (lo, hi) = order(self.lo + o.lo, self.hi + o.hi);
+        Fival { lo, hi }
+    }
+
+    /// `k * self` for a scalar of either sign; NaN scalars poison.
+    pub fn scale(self, k: f64) -> Fival {
+        let (lo, hi) = order(self.lo * k, self.hi * k);
+        Fival { lo, hi }
+    }
+
+    /// `scale * self + shift` — the BN affine per filter.
+    pub fn affine(self, scale: f64, shift: f64) -> Fival {
+        let s = self.scale(scale);
+        let (lo, hi) = order(s.lo + shift, s.hi + shift);
+        Fival { lo, hi }
+    }
+
+    /// `max(·, 0)` applied pointwise. NaN intervals pass through
+    /// unchanged so a poisoned pipeline is still flagged downstream.
+    pub fn relu(self) -> Fival {
+        if self.is_nan() {
+            return self;
+        }
+        Fival {
+            lo: self.lo.max(0.0),
+            hi: self.hi.max(0.0),
+        }
+    }
+
+    pub fn hull(self, o: Fival) -> Fival {
+        if self.is_nan() || o.is_nan() {
+            return Fival {
+                lo: f64::NAN,
+                hi: f64::NAN,
+            };
+        }
+        Fival {
+            lo: self.lo.min(o.lo),
+            hi: self.hi.max(o.hi),
+        }
+    }
+
+    pub fn contains(&self, v: f64) -> bool {
+        self.lo <= v && v <= self.hi
+    }
+
+    /// Expand both bounds outward by `abs + rel · max(|lo|, |hi|)` — the
+    /// slack that covers the engine evaluating the same expression in
+    /// f32 (each op rounds at ≤ 2⁻²⁴ relative; the analyzer uses a far
+    /// larger margin so slack is never the thing a test debugs). NaN
+    /// intervals pass through unchanged.
+    pub fn widen(self, rel: f64, abs: f64) -> Fival {
+        if self.is_nan() {
+            return self;
+        }
+        let pad = abs + rel * self.lo.abs().max(self.hi.abs());
+        Fival {
+            lo: self.lo - pad,
+            hi: self.hi + pad,
+        }
+    }
+
+    /// Is every value in the interval a finite f32? The requantization
+    /// soundness question: false means some runtime f32 in this range
+    /// could be ±inf or NaN.
+    pub fn fits_f32(&self) -> bool {
+        self.lo.is_finite()
+            && self.hi.is_finite()
+            && self.lo.abs() <= f32::MAX as f64
+            && self.hi.abs() <= f32::MAX as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_widens_on_overflow() {
+        let near = Ival::exact(i64::MAX - 1);
+        assert!(near.add(Ival::exact(2)).is_top());
+        assert_eq!(near.add(Ival::exact(1)).hi, i64::MAX);
+        assert!(Ival::TOP.add(Ival::exact(0)).is_top());
+    }
+
+    #[test]
+    fn mul_scalar_sign_handling() {
+        let iv = Ival::new(-3, 5);
+        assert_eq!(iv.mul_scalar(2), Ival::new(-6, 10));
+        assert_eq!(iv.mul_scalar(-2), Ival::new(-10, 6));
+        assert_eq!(iv.mul_scalar(0), Ival::exact(0));
+        assert!(Ival::new(1, i64::MAX / 2 + 1).mul_scalar(2).is_top());
+    }
+
+    #[test]
+    fn sum_products_matches_manual_bound() {
+        // Σ max(w,0)=7, Σ min(w,0)=-4 against x ∈ [-127, 127]:
+        // exact dot range is [-(7+4)·127, (7+4)·127].
+        let q = Ival::new(-127, 127);
+        let d = Ival::sum_products(&[(7, q), (-4, q)]);
+        assert_eq!(d, Ival::new(-11 * 127, 11 * 127));
+        // tighter when the activation range is one-sided (post-ReLU)
+        let q = Ival::new(0, 127);
+        let d = Ival::sum_products(&[(7, q), (-4, q)]);
+        assert_eq!(d, Ival::new(-4 * 127, 7 * 127));
+    }
+
+    #[test]
+    fn fits_signed_boundaries() {
+        assert!(Ival::new(-32768, 32767).fits_signed(16));
+        assert!(!Ival::new(-32769, 0).fits_signed(16));
+        assert!(!Ival::new(0, 32768).fits_signed(16));
+        assert!(Ival::new(i32::MIN as i64, i32::MAX as i64).fits_signed(32));
+        assert!(!Ival::new(0, i32::MAX as i64 + 1).fits_signed(32));
+        assert!(!Ival::TOP.fits_signed(32));
+    }
+
+    #[test]
+    fn hull_clamp_contains_max_abs() {
+        let h = Ival::new(-2, 3).hull(Ival::new(1, 9));
+        assert_eq!(h, Ival::new(-2, 9));
+        assert!(h.contains(-2) && h.contains(9) && !h.contains(10));
+        assert_eq!(Ival::new(-300, 50).clamp(-127, 127), Ival::new(-127, 50));
+        assert_eq!(Ival::new(-9, 4).max_abs(), 9);
+        assert_eq!(Ival::exact(i64::MIN).max_abs(), 1u64 << 63);
+    }
+
+    #[test]
+    fn fival_affine_and_relu() {
+        let v = Fival::new(-2.0, 3.0);
+        let a = v.affine(-2.0, 1.0); // [-6,4] + 1 = [-5, 7]
+        assert_eq!((a.lo, a.hi), (-5.0, 7.0));
+        let r = a.relu();
+        assert_eq!((r.lo, r.hi), (0.0, 7.0));
+    }
+
+    #[test]
+    fn fival_nan_is_sticky() {
+        let bad = Fival::exact(1.0).scale(f64::NAN);
+        assert!(bad.is_nan());
+        assert!(bad.add(Fival::exact(0.0)).is_nan());
+        assert!(bad.relu().is_nan());
+        assert!(bad.hull(Fival::exact(0.0)).is_nan());
+        assert!(!bad.fits_f32());
+    }
+
+    #[test]
+    fn fival_widen_and_fits_f32() {
+        let v = Fival::new(-1.0, 2.0).widen(0.01, 0.5);
+        assert!(v.lo < -1.5 && v.hi > 2.5);
+        assert!(v.contains(-1.0) && v.contains(2.52));
+        assert!(Fival::new(-1e38, 1e38).fits_f32());
+        assert!(!Fival::new(0.0, 1e39).fits_f32());
+        assert!(!Fival::new(f64::NEG_INFINITY, 0.0).fits_f32());
+    }
+}

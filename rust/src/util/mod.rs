@@ -4,6 +4,7 @@
 pub mod alloc_count;
 pub mod bench;
 pub mod bits;
+pub mod interval;
 pub mod json;
 pub mod prop;
 pub mod rng;

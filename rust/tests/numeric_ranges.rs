@@ -1,0 +1,391 @@
+//! Property suite for the quantized-numerics abstract interpreter
+//! (`mor::plan::ranges`, surfaced as `mor lint --numeric` — see
+//! EXPERIMENTS.md §Numeric).
+//!
+//! Three halves:
+//!
+//! * **Pristine models prove clean** — every synthetic model generator ×
+//!   every input-sparsity mode × every exact weight-sparsity mode ×
+//!   {no policy, MoR policy} passes its overflow/saturation/threshold
+//!   proofs with zero error-severity findings. This is what lets
+//!   `Session` assert numeric cleanliness in debug builds.
+//! * **Observed ⊆ predicted** — actually run the engines (both the
+//!   tiled and the scalar-reference path, every strategy, the sparsity
+//!   kernel modes, single- and multi-threaded) with the
+//!   `plan::observe` hook recording every accumulator, pre-activation
+//!   and binarized proxy dot, and assert each observed value lies
+//!   inside the statically predicted interval of its layer. An
+//!   interval analysis that is merely *plausible* would pass the clean
+//!   sweep; this half pins it to the real dataflow.
+//! * **Each proof actually rejects** — seeded numeric corruptions
+//!   (an accumulator-overflow layer, a narrowed width claim, a NaN
+//!   quantization scale, an f32-overflowing BN fold, a poisoned
+//!   predictor line) must each be caught with their *own* `num.*`
+//!   diagnostic code, not a generic failure.
+
+use mor::config::PredictorConfig;
+use mor::engine::{InputSparsity, WeightSparsity};
+use mor::model::{synth, Model, Node};
+use mor::plan::{self, NumericOpts, StepPlan};
+use mor::predictor::strategies::Strategy;
+use mor::predictor::{exec::run_batch, EngineSel, MorPolicy, RunOpts};
+use mor::util::rng::Rng;
+
+// ---- helpers ---------------------------------------------------------------
+
+fn opts(is: InputSparsity, ws: WeightSparsity) -> RunOpts {
+    RunOpts { input_sparsity: is, weight_sparsity: ws, ..Default::default() }
+}
+
+fn policy_for(model: &Model, seed: u64, cfg: PredictorConfig) -> MorPolicy {
+    let params = synth::predictor_for(model, seed);
+    MorPolicy::new(model, &params, cfg)
+}
+
+fn zoo(seed: u64) -> Vec<Model> {
+    let mut zoo = vec![synth::cnn10_like(seed), synth::tiny_serving_model(seed)];
+    let mut sparse = synth::tiny_serving_model(seed);
+    synth::sparsify_weights(&mut sparse, seed, 90);
+    sparse.name = format!("{}_sparse90", sparse.name);
+    zoo.push(sparse);
+    let mut rng = Rng::new(seed ^ 0x9e37);
+    zoo.extend((0..6).map(|_| synth::random_model(&mut rng)));
+    zoo
+}
+
+fn rand_input(rng: &mut Rng, model: &Model) -> Vec<f32> {
+    let (h, w, c) = model.input_shape;
+    (0..h * w * c).map(|_| rng.uniform(-1.0, 1.0) as f32).collect()
+}
+
+/// Corrupt the first compute step of `plan` in place.
+fn mutate_first_compute(plan: &mut plan::ModelPlan, f: impl FnOnce(&mut plan::ComputeStep)) {
+    let c = plan
+        .steps
+        .iter_mut()
+        .find_map(|s| match s {
+            StepPlan::Compute(c) => Some(c),
+            _ => None,
+        })
+        .expect("model has at least one compute step");
+    f(c);
+}
+
+/// A one-layer FC model with hand-picked weights/BN for the corruption
+/// tests (integration tests cannot reach `Model.prepacked`, so models
+/// are built through the public constructor).
+fn fc_model(name: &str, cin: usize, cout: usize, w: Vec<i8>, bn: Option<(Vec<f32>, Vec<f32>)>) -> Model {
+    assert_eq!(w.len(), cin * cout);
+    Model::new(
+        name.into(),
+        0.02,
+        (1, 1, cin),
+        vec![Node::Fc {
+            cin,
+            cout,
+            sw: 0.01,
+            sx: 0.02,
+            w,
+            bn,
+            relu: false,
+            res_from: None,
+            consumes: -1,
+        }],
+    )
+}
+
+// ---- pristine models prove clean ------------------------------------------
+
+#[test]
+fn every_pristine_model_proves_numeric_clean() {
+    for model in &zoo(7) {
+        let policy = policy_for(model, 11, PredictorConfig::default());
+        for is in InputSparsity::ALL {
+            for ws in WeightSparsity::EXACT_MODES {
+                for pol in [None, Some(&policy)] {
+                    let compiled = plan::compile(model, pol, opts(is, ws));
+                    let rep = plan::ranges::analyze(&compiled, model, pol);
+                    assert_eq!(
+                        rep.errors(),
+                        0,
+                        "[{}] is={is:?} ws={ws:?} policy={}: {rep}",
+                        model.name,
+                        pol.is_some()
+                    );
+                    assert!(!rep.steps.is_empty(), "[{}] no compute steps analyzed", model.name);
+                    // every compute step proves the native i32 suffices
+                    assert!(
+                        rep.max_acc_bits() <= 32,
+                        "[{}] needs {} bits",
+                        model.name,
+                        rep.max_acc_bits()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn report_json_is_machine_readable() {
+    let model = synth::tiny_serving_model(5);
+    let policy = policy_for(&model, 5, PredictorConfig::default());
+    let compiled = plan::compile(&model, Some(&policy), RunOpts::default());
+    let rep = plan::ranges::analyze(&compiled, &model, Some(&policy));
+    let json = rep.to_json().to_string();
+    let parsed = mor::util::json::Json::parse(&json).expect("valid json");
+    match parsed {
+        mor::util::json::Json::Obj(pairs) => {
+            assert!(pairs.iter().any(|(k, _)| k == "findings"), "{json}");
+            let steps = pairs.iter().find(|(k, _)| k == "steps").expect("steps key");
+            match &steps.1 {
+                mor::util::json::Json::Arr(items) => assert!(!items.is_empty()),
+                other => panic!("steps should be an array, got {other:?}"),
+            }
+        }
+        other => panic!("expected an object, got {other:?}"),
+    }
+}
+
+// ---- observed runtime values ⊆ predicted intervals -------------------------
+
+/// Run one configuration with the observation hook armed and assert
+/// every recorded value lies inside its layer's predicted interval.
+fn check_containment(
+    model: &Model,
+    pol: Option<&MorPolicy>,
+    run_opts: RunOpts,
+    inputs: &[&[f32]],
+    label: &str,
+) {
+    let compiled = plan::compile(model, pol, run_opts);
+    let rep = plan::ranges::analyze(&compiled, model, pol);
+    assert_eq!(rep.errors(), 0, "{label}: pristine model must prove clean: {rep}");
+
+    mor::plan::observe::begin();
+    let _ = run_batch(model, pol, inputs, run_opts);
+    let log = mor::plan::observe::take();
+    assert!(!log.is_empty(), "{label}: forward recorded nothing");
+
+    for (node, obs) in &log {
+        let sr = rep
+            .step_for(*node)
+            .unwrap_or_else(|| panic!("{label}: observed node {node} has no analyzed step"));
+        if let Some((lo, hi)) = obs.dot {
+            for d in [lo, hi] {
+                assert!(
+                    sr.dot.contains(d as i64),
+                    "{label} node {node}: dot {d} outside predicted [{}, {}]",
+                    sr.dot.lo,
+                    sr.dot.hi
+                );
+                assert!(
+                    (d as i64).unsigned_abs() <= sr.acc_peak,
+                    "{label} node {node}: |dot {d}| exceeds proven peak {}",
+                    sr.acc_peak
+                );
+            }
+        }
+        if let Some((lo, hi)) = obs.ri {
+            assert!(
+                !lo.is_nan() && !hi.is_nan(),
+                "{label} node {node}: runtime pre-activation went NaN"
+            );
+            for v in [lo, hi] {
+                assert!(
+                    sr.pre_act.contains(v as f64),
+                    "{label} node {node}: ri {v} outside predicted [{}, {}]",
+                    sr.pre_act.lo,
+                    sr.pre_act.hi
+                );
+            }
+        }
+        if let Some((lo, hi)) = obs.proxy {
+            let p = sr.proxy.unwrap_or_else(|| {
+                panic!("{label} node {node}: proxy dot observed but not predicted")
+            });
+            for v in [lo, hi] {
+                assert!(
+                    p.contains(v as i64),
+                    "{label} node {node}: proxy {v} outside predicted [{}, {}]",
+                    p.lo,
+                    p.hi
+                );
+            }
+        }
+    }
+}
+
+/// One `#[test]` on purpose: the observation recorder is a process-wide
+/// global, so all observing runs stay in a single test and cycle
+/// `begin`/`take` sequentially (the other tests in this binary never
+/// run a forward, so parallel test threads cannot pollute the log).
+#[test]
+fn observed_values_lie_inside_predicted_intervals() {
+    if !cfg!(debug_assertions) {
+        // the engines' record calls are compiled out in release builds
+        return;
+    }
+    let mut rng = Rng::new(0x4a11);
+    let mut models = vec![synth::tiny_serving_model(7), synth::cnn10_like(7)];
+    models.push(synth::random_model(&mut rng));
+
+    for model in &models {
+        let xs: Vec<Vec<f32>> = (0..2).map(|_| rand_input(&mut rng, model)).collect();
+        let inputs: Vec<&[f32]> = xs.iter().map(|x| x.as_slice()).collect();
+
+        for engine in [EngineSel::Tiled, EngineSel::ScalarRef] {
+            // no policy: the dense baseline on both engines
+            let o = RunOpts { engine, ..Default::default() };
+            check_containment(model, None, o, &inputs, &format!("[{}] {engine:?} none", model.name));
+            // every strategy (threshold 0.0 keeps all neurons enabled so
+            // the binary rookie is consulted as widely as possible)
+            for strategy in Strategy::ALL {
+                let cfg = PredictorConfig { strategy, threshold: 0.0, ..Default::default() };
+                let pol = policy_for(model, 11, cfg);
+                check_containment(
+                    model,
+                    Some(&pol),
+                    o,
+                    &inputs,
+                    &format!("[{}] {engine:?} {strategy:?}", model.name),
+                );
+            }
+        }
+
+        // sparsity kernel modes under the default hybrid strategy
+        let pol = policy_for(model, 11, PredictorConfig::default());
+        for is in InputSparsity::ALL {
+            for ws in WeightSparsity::EXACT_MODES {
+                let o = opts(is, ws);
+                check_containment(
+                    model,
+                    Some(&pol),
+                    o,
+                    &inputs,
+                    &format!("[{}] is={is:?} ws={ws:?}", model.name),
+                );
+            }
+        }
+
+        // multi-threaded tiled run: records cross worker threads
+        let o = RunOpts { threads: 2, ..Default::default() };
+        check_containment(model, Some(&pol), o, &inputs, &format!("[{}] threads=2", model.name));
+    }
+}
+
+// ---- seeded corruptions: each rejected with its own code -------------------
+
+#[test]
+fn accumulator_overflow_is_rejected_with_num_acc() {
+    // Σ|w|·max|x| = (2^18·128)·127 ≈ 4.26e9 > 2³¹: no i32 accumulator
+    // holds the worst case of this (absurdly wide) layer
+    let k = 1usize << 18;
+    let model = fc_model("acc_overflow", k, 2, vec![-128i8; k * 2], None);
+    let compiled = plan::compile(&model, None, RunOpts::default());
+    let rep = plan::ranges::analyze(&compiled, &model, None);
+    assert!(rep.has("num.acc"), "{rep}");
+    assert!(rep.errors() > 0);
+    assert!(rep.max_acc_bits() > 32, "needs {} bits", rep.max_acc_bits());
+}
+
+#[test]
+fn narrowed_width_claim_is_rejected_with_num_width() {
+    // cnn10 is safe for i32 but nowhere near an i16 accumulator: the
+    // width gate must fire without tripping the native num.acc proof
+    let model = synth::cnn10_like(7);
+    let compiled = plan::compile(&model, None, RunOpts::default());
+    let rep = plan::ranges::analyze_with(&compiled, &model, None, &NumericOpts { acc_bits: 16 });
+    assert!(rep.has("num.width"), "{rep}");
+    assert!(!rep.has("num.acc"), "i32 itself is provably fine: {rep}");
+    assert!(rep.errors() > 0);
+}
+
+#[test]
+fn poisoned_quantization_scale_is_rejected_with_num_scale() {
+    let model = synth::tiny_serving_model(5);
+    let mut compiled = plan::compile(&model, None, RunOpts::default());
+    mutate_first_compute(&mut compiled, |c| c.sx = f32::NAN);
+    let rep = plan::ranges::analyze(&compiled, &model, None);
+    assert!(rep.has("num.scale"), "{rep}");
+    assert!(rep.errors() > 0);
+
+    let mut compiled = plan::compile(&model, None, RunOpts::default());
+    mutate_first_compute(&mut compiled, |c| c.dq = f32::INFINITY);
+    let rep = plan::ranges::analyze(&compiled, &model, None);
+    assert!(rep.has("num.scale"), "{rep}");
+}
+
+#[test]
+fn f32_overflowing_bn_fold_is_rejected_with_num_requant() {
+    // dot ∈ ±800·127, dq = 2e-4 → ±20.3; a 1e38 BN scale pushes the
+    // pre-activation range past f32::MAX — saturation the engine never
+    // intends outside quantize()
+    let cin = 8;
+    let model = fc_model(
+        "requant_overflow",
+        cin,
+        2,
+        vec![100i8; cin * 2],
+        Some((vec![1e38; 2], vec![0.0; 2])),
+    );
+    let compiled = plan::compile(&model, None, RunOpts::default());
+    let rep = plan::ranges::analyze(&compiled, &model, None);
+    assert!(rep.has("num.requant"), "{rep}");
+    assert!(rep.errors() > 0);
+    assert!(!rep.has("num.acc"), "the integer side is fine: {rep}");
+}
+
+#[test]
+fn poisoned_predictor_line_is_rejected_with_num_threshold() {
+    let model = synth::tiny_serving_model(5);
+    // binary-only strategy + threshold 0.0: every neuron's line is
+    // consulted, so poisoning layer 0's slopes must be seen
+    let cfg = PredictorConfig { strategy: Strategy::Binary, threshold: 0.0, ..Default::default() };
+    let mut policy = policy_for(&model, 5, cfg);
+    let (&node, _) = policy.layers.iter().next().expect("policy prepares a layer");
+    let lp = policy.layers.get_mut(&node).expect("layer state");
+    for m in lp.m.iter_mut() {
+        *m = f32::NAN;
+    }
+    let compiled = plan::compile(&model, Some(&policy), RunOpts::default());
+    let rep = plan::ranges::analyze(&compiled, &model, Some(&policy));
+    assert!(rep.has("num.threshold"), "{rep}");
+    assert!(rep.errors() > 0);
+}
+
+#[test]
+fn provably_degenerate_layer_warns_with_num_threshold() {
+    // m = 0, b = -10⁶: the estimate is the constant -10⁶ < -margin for
+    // every input, so every consulted neuron provably always skips —
+    // a Warning (the layer degenerates), not an Error (nothing overflows)
+    let model = synth::tiny_serving_model(5);
+    let cfg = PredictorConfig { strategy: Strategy::Binary, threshold: 0.0, ..Default::default() };
+    let mut policy = policy_for(&model, 5, cfg);
+    let (&node, _) = policy.layers.iter().next().expect("policy prepares a layer");
+    let lp = policy.layers.get_mut(&node).expect("layer state");
+    for m in lp.m.iter_mut() {
+        *m = 0.0;
+    }
+    for b in lp.b.iter_mut() {
+        *b = -1e6;
+    }
+    let compiled = plan::compile(&model, Some(&policy), RunOpts::default());
+    let rep = plan::ranges::analyze(&compiled, &model, Some(&policy));
+    assert!(rep.has("num.threshold"), "{rep}");
+    assert_eq!(rep.errors(), 0, "degeneracy is a warning, not an error: {rep}");
+    assert!(rep.warnings() > 0);
+}
+
+#[test]
+fn corruption_codes_are_distinct() {
+    // the catalogue stays honest: the overflow corruption must NOT be
+    // reported as a requant or threshold problem, and vice versa
+    let k = 1usize << 18;
+    let model = fc_model("acc_overflow_distinct", k, 2, vec![-128i8; k * 2], None);
+    let compiled = plan::compile(&model, None, RunOpts::default());
+    let rep = plan::ranges::analyze(&compiled, &model, None);
+    assert!(rep.has("num.acc"));
+    assert!(!rep.has("num.scale"), "{rep}");
+    assert!(!rep.has("num.threshold"), "{rep}");
+}

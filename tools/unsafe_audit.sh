@@ -20,10 +20,61 @@
 # complements this: rustc proves every unsafe operation is inside a
 # block, this script proves every block argues why it is sound.
 #
-# Usage: tools/unsafe_audit.sh          # audits rust/src
-#        tools/unsafe_audit.sh DIR...   # audits the given trees
+# Usage: tools/unsafe_audit.sh              # audits rust/src, rust/tests,
+#                                           # rust/benches (missing roots
+#                                           # are skipped with a note)
+#        tools/unsafe_audit.sh DIR...       # audits the given trees
+#        tools/unsafe_audit.sh --self-test  # red/green check of the audit
+#                                           # itself over fixture trees
 set -u
-roots=("${@:-rust/src}")
+
+# --self-test: prove the audit both accepts a justified tree and rejects
+# an unjustified one, across all three default root kinds, so a silent
+# regression in the awk matcher can't greenwash CI.
+if [ "${1:-}" = "--self-test" ]; then
+  tmp=$(mktemp -d)
+  trap 'rm -rf "$tmp"' EXIT
+  mkdir -p "$tmp/good/src" "$tmp/good/tests" "$tmp/good/benches" "$tmp/bad/tests"
+  for d in src tests benches; do
+    cat > "$tmp/good/$d/fixture.rs" <<'EOF'
+fn main() {
+    // SAFETY: the pointer is derived from a live reference above.
+    unsafe { std::ptr::read(&0u8) };
+}
+EOF
+  done
+  cat > "$tmp/bad/tests/fixture.rs" <<'EOF'
+fn main() {
+    unsafe { std::ptr::read(&0u8) };
+}
+EOF
+  if ! bash "$0" "$tmp/good/src" "$tmp/good/tests" "$tmp/good/benches" >/dev/null 2>&1; then
+    echo "unsafe_audit self-test: FAILED (justified fixture tree was rejected)" >&2
+    exit 1
+  fi
+  if bash "$0" "$tmp/bad/tests" >/dev/null 2>&1; then
+    echo "unsafe_audit self-test: FAILED (unjustified unsafe in a tests root passed)" >&2
+    exit 1
+  fi
+  echo "unsafe_audit self-test: ok (green tree passes, red tree fails)"
+  exit 0
+fi
+
+# default roots: the crate sources AND the test/bench trees — an unsafe
+# block smuggled into a test must argue its soundness like any other.
+# ${@:-...} would collapse the default into one word, so branch instead.
+if [ "$#" -eq 0 ]; then
+  roots=()
+  for d in rust/src rust/tests rust/benches; do
+    if [ -e "$d" ]; then
+      roots+=("$d")
+    else
+      echo "unsafe_audit: skipping absent default root: $d" >&2
+    fi
+  done
+else
+  roots=("$@")
+fi
 status=0
 found=0
 for root in "${roots[@]}"; do
