@@ -8,13 +8,21 @@
 //! synthetic cnn10-scale bundle — the emitted `BENCH_serving.json`
 //! (override the path with `MOR_BENCH_SERVING_OUT`) is always complete
 //! and machine-diffable across PRs.
+//!
+//! A second section replays the sharded serving tier's canonical
+//! overload scenario on the **virtual clock** (`ServingTier::simulate`):
+//! two models, two weighted tenants, a 20 ms deadline, work stealing.
+//! Those numbers are deterministic — identical on every machine — so
+//! the `serving_tier` block of `BENCH_serving.json` diffs exactly
+//! across PRs, including its per-tenant and per-model breakdowns.
 mod common;
 
 use mor::config::PredictorConfig;
-use mor::coordinator::{serve, Backend, ServeOpts};
+use mor::coordinator::tier::{ServingTier, VirtualService};
+use mor::coordinator::{serve, Backend, GroupStats, ServeOpts};
 use mor::model::{synth, Artifacts};
 use mor::session::Session;
-use mor::workload::RequestStream;
+use mor::workload::{merge, Arrival, RequestStream};
 
 const WORKERS: [usize; 2] = [1, 4];
 const BATCHES: [usize; 4] = [1, 4, 8, 16];
@@ -91,6 +99,8 @@ fn main() {
         }
     }
 
+    let tier_js = tier_section(&arts, &session);
+
     let out_path = std::env::var("MOR_BENCH_SERVING_OUT")
         .unwrap_or_else(|_| "BENCH_serving.json".to_string());
     let mut js = String::new();
@@ -106,9 +116,97 @@ fn main() {
     js.push_str("  \"mode\": \"closed_loop\",\n");
     js.push_str("  \"configs\": [\n");
     js.push_str(&rows.join(",\n"));
-    js.push_str("\n  ]\n}\n");
+    js.push_str("\n  ],\n");
+    js.push_str(&tier_js);
+    js.push_str("}\n");
     match std::fs::write(&out_path, &js) {
         Ok(()) => println!("\nwrote {out_path}"),
         Err(e) => eprintln!("\nfailed to write {out_path}: {e}"),
     }
+}
+
+/// The tier's canonical overload scenario on the virtual clock: model
+/// "hot" takes 5 000 rps (2 500 each from tenants gold:2 and free:1)
+/// against a 2-replica, 1 ms/request capacity of 2 000 rps; model
+/// "cold" idles at 500 rps, lending its spare replicas through work
+/// stealing. Deadline 20 ms. Returns the `"serving_tier": {...}` JSON
+/// fragment (trailing newline, no trailing comma).
+fn tier_section(arts: &Artifacts, session: &Session) -> String {
+    const SVC_US: u64 = 1000;
+    const DEADLINE_MS: f64 = 20.0;
+    let tier = ServingTier::builder()
+        .model("hot", arts, session, 2)
+        .model("cold", arts, session, 2)
+        .tenant("gold", 2)
+        .tenant("free", 1)
+        .deadline_ms(DEADLINE_MS)
+        .finish();
+    let steady = |rate: f64, tenant: usize, seed: u64| {
+        let mut s = RequestStream::with_arrival(
+            Arrival::Steady { rate_per_s: rate },
+            arts.data.n_test(),
+            seed,
+        )
+        .for_tenant(tenant);
+        s.generate(1.0)
+    };
+    let traces = vec![
+        merge(vec![steady(2500.0, 0, 81), steady(2500.0, 1, 82)]),
+        steady(500.0, 0, 83),
+    ];
+    let rep = tier
+        .simulate(traces, &VirtualService { svc_us: vec![SVC_US, SVC_US], execute: false })
+        .expect("tier simulate");
+    assert!(rep.conserved(), "tier bench lost requests");
+    println!(
+        "\nserving tier (virtual clock): {} submitted → {} completed, {} shed \
+         | goodput {:.0} rps | p99 {:.2} ms",
+        rep.submitted, rep.completed, rep.shed, rep.goodput_rps, rep.p99_ms
+    );
+
+    let group = |g: &GroupStats| {
+        format!(
+            "      {{\"name\": \"{}\", \"submitted\": {}, \"completed\": {}, \
+             \"shed\": {}, \"goodput_rps\": {:.2}, \"p50_ms\": {:.3}, \"p99_ms\": {:.3}}}",
+            g.name, g.submitted, g.completed, g.shed, g.goodput_rps, g.p50_ms, g.p99_ms
+        )
+    };
+    let tenants: Vec<String> = rep.per_tenant.iter().map(&group).collect();
+    let models: Vec<String> = rep.per_model.iter().map(&group).collect();
+    format!(
+        "  \"serving_tier\": {{\n\
+         \x20   \"scenario\": \"hot 5000 rps (gold:2 + free:1) vs cold 500 rps, \
+         2 replicas/model, 1 ms/request, deadline 20 ms, stealing on\",\n\
+         \x20   \"deadline_ms\": {DEADLINE_MS:.1},\n\
+         \x20   \"svc_us\": {SVC_US},\n\
+         \x20   \"replicas\": 2,\n\
+         \x20   \"steal\": true,\n\
+         \x20   \"submitted\": {},\n\
+         \x20   \"completed\": {},\n\
+         \x20   \"dropped\": {},\n\
+         \x20   \"shed\": {},\n\
+         \x20   \"shed_admission\": {},\n\
+         \x20   \"shed_expired\": {},\n\
+         \x20   \"throughput_rps\": {:.2},\n\
+         \x20   \"goodput_rps\": {:.2},\n\
+         \x20   \"p50_ms\": {:.3},\n\
+         \x20   \"p99_ms\": {:.3},\n\
+         \x20   \"max_queue_depth\": {},\n\
+         \x20   \"per_tenant\": [\n{}\n    ],\n\
+         \x20   \"per_model\": [\n{}\n    ]\n\
+         \x20 }}\n",
+        rep.submitted,
+        rep.completed,
+        rep.dropped,
+        rep.shed,
+        rep.shed_admission,
+        rep.shed_expired,
+        rep.throughput_rps,
+        rep.goodput_rps,
+        rep.p50_ms,
+        rep.p99_ms,
+        rep.max_queue_depth,
+        tenants.join(",\n"),
+        models.join(",\n")
+    )
 }

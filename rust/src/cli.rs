@@ -23,6 +23,7 @@ pub const BOOLEAN_FLAGS: &[&str] = &[
     "no-binary",
     "no-clusters",
     "no-predictor",
+    "no-steal",
     "numeric",
     "oracle",
     "verbose",
@@ -155,12 +156,29 @@ COMMANDS:
                                        (default: 1 = no batching)
                  --batch-wait-us <t>   max linger for a partial batch
                                        (default: 200)
-                 --arrival <kind>      poisson|steady|bursty|closed
-                                       (default: poisson; closed ignores
-                                       arrival times and keeps --concurrency
-                                       requests outstanding)
+                 --arrival <kind>      poisson|steady|bursty|diurnal|
+                                       flashcrowd|closed (default: poisson;
+                                       closed ignores arrival times and keeps
+                                       --concurrency requests outstanding;
+                                       diurnal/flashcrowd are the tier's
+                                       time-varying overload traces)
                  --concurrency <n>     closed-loop outstanding requests
                                        (default: workers * max-batch)
+               Serving-tier mode (any of --models/--tenants/--deadline-ms
+               routes to the sharded multi-model tier, EXPERIMENTS.md §Tier):
+                 --models <a,b,...>    serve several models in one process,
+                                       each with its own session + queue +
+                                       replica pool (default: --model)
+                 --replicas <n>        workers per model (default: 2)
+                 --tenants <spec>      weighted fair sharing classes, e.g.
+                                       gold:2,free:1 (default: all:1)
+                 --deadline-ms <t>     per-request deadline: admission
+                                       rejects arrivals whose projected wait
+                                       exceeds it, dequeue sheds requests
+                                       that can no longer finish in time
+                                       (default: 0 = no deadline)
+                 --no-steal            disable work stealing between idle
+                                       replicas of different models
                  --predictor <name>    skip strategy (default: mor)
                  --input-sparsity <m>  input-zero lane skipping: auto|on|off
                  --weight-sparsity <m> weight-zero lane elision: off|exact|<t>
@@ -255,6 +273,15 @@ mod tests {
         assert!(a.flag("no-predictor"));
         assert_eq!(a.positional, vec!["extra"]);
         assert_eq!(a.opt("model"), Some("tds"));
+    }
+
+    #[test]
+    fn tier_flags_parse() {
+        let a = parse(&["serve", "--no-steal", "--models", "tds,cnn10", "--tenants", "gold:2,free:1", "--deadline-ms", "20"]);
+        assert!(a.flag("no-steal"));
+        assert_eq!(a.opt("models"), Some("tds,cnn10"));
+        assert_eq!(a.opt("tenants"), Some("gold:2,free:1"));
+        assert_eq!(a.opt_f64("deadline-ms", 0.0).unwrap(), 20.0);
     }
 
     #[test]

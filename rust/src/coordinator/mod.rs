@@ -30,8 +30,16 @@
 //! No async runtime is available offline (no tokio), so the coordinator
 //! uses std threads + channels; the architecture (dispatcher → queue →
 //! workers → collector) is the same shape as an async reactor.
+//!
+//! [`serve`] is the single-model path. The multi-model generalization —
+//! several registered models with replicas, per-model weighted-fair
+//! queues with work stealing, deadline-aware admission control and load
+//! shedding, per-tenant QoS — lives in [`tier`] ([`tier::ServingTier`]),
+//! which shares this module's [`ServeReport`] accounting and the queue
+//! primitives in [`queue`].
 
 pub mod queue;
+pub mod tier;
 
 use crate::model::Artifacts;
 use crate::predictor::RunOpts;
@@ -92,9 +100,48 @@ impl Default for ServeOpts {
 #[derive(Clone, Copy, Debug)]
 pub struct Served {
     pub id: u64,
+    /// Tenant index (into the tier's tenant table; 0 for single-tenant).
+    pub tenant: usize,
+    /// Model index (into the tier's model table; 0 for single-model).
+    pub model: usize,
     pub queue_us: u64,
     pub service_us: u64,
     pub correct: bool,
+    /// Completed within its deadline (always true when no deadline is
+    /// configured) — the numerator of goodput.
+    pub deadline_ok: bool,
+}
+
+/// One shed (never-executed) request: rejected at admission because the
+/// projected wait exceeded its deadline, or dropped at dequeue because
+/// it could no longer finish in time. Kept as a record (not a bare
+/// count) so shedding can be attributed per tenant and per model.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct Shed {
+    pub tenant: usize,
+    pub model: usize,
+    /// true = expired at dequeue; false = rejected at admission.
+    pub expired: bool,
+}
+
+/// Raw counters a serving driver hands to [`ServeReport::from_records`].
+/// Collecting them in one struct keeps the two drivers ([`serve`] and
+/// [`tier::ServingTier`]) honest about reporting the same things.
+#[derive(Clone, Debug, Default)]
+pub(crate) struct Tally {
+    /// Completed requests only — shed/dropped requests never produce a
+    /// [`Served`] record, so the latency vector below is shed-free by
+    /// construction.
+    pub records: Vec<Served>,
+    pub shed: Vec<Shed>,
+    /// Requests lost to execution errors (distinct from `shed`).
+    pub dropped: usize,
+    pub first_error: Option<String>,
+    /// Everything the driver was asked to serve; the conservation
+    /// invariant is `records.len() + dropped + shed.len() == submitted`.
+    pub submitted: usize,
+    pub batches: usize,
+    pub max_depth: usize,
 }
 
 /// What a worker reports to the collector.
@@ -104,21 +151,50 @@ enum Event {
     Dropped { n: usize, error: String },
 }
 
+/// Latency/goodput stats for one request class (a tenant or a model).
+#[derive(Clone, Debug, Default)]
+pub struct GroupStats {
+    pub name: String,
+    /// Requests attributed to this group (`completed + shed`; error
+    /// drops are not attributed to a group).
+    pub submitted: usize,
+    pub completed: usize,
+    pub shed: usize,
+    /// Completed-within-deadline per second over the busy window.
+    pub goodput_rps: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+}
+
 /// Aggregate serving report.
 #[derive(Clone, Debug, Default)]
 pub struct ServeReport {
     /// Name of the skip strategy the engine served with (`mor`,
     /// `binary`, ..., `none`) — makes BENCH artifacts self-describing.
     pub predictor: String,
+    /// Requests handed to the driver; see [`ServeReport::conserved`].
+    pub submitted: usize,
     pub completed: usize,
     /// Requests lost to worker/backend errors (0 in the happy path).
     pub dropped: usize,
+    /// Requests shed by load control (never executed): admission
+    /// rejections plus deadline expiries — counted separately from
+    /// error `dropped`.
+    pub shed: usize,
+    /// Shed at admission: projected wait already exceeded the deadline.
+    pub shed_admission: usize,
+    /// Shed at dequeue: the request could no longer finish in time.
+    pub shed_expired: usize,
     /// Wall time of the whole serve call (includes arrival-replay tail).
     pub duration_s: f64,
     /// First arrival → last completion: the window the system was
     /// actually busy; the basis for `throughput_rps`.
     pub busy_s: f64,
     pub throughput_rps: f64,
+    /// Completed-within-deadline per second over the busy window — the
+    /// SLO-weighted throughput (equals `throughput_rps` when no
+    /// deadline is configured).
+    pub goodput_rps: f64,
     pub accuracy: f64,
     pub p50_ms: f64,
     pub p95_ms: f64,
@@ -129,21 +205,97 @@ pub struct ServeReport {
     pub batch_occupancy: f64,
     /// First execution error, if any request was dropped.
     pub first_error: Option<String>,
+    /// One entry per tenant, in tenant-table order.
+    pub per_tenant: Vec<GroupStats>,
+    /// One entry per registered model, in registration order.
+    pub per_model: Vec<GroupStats>,
+}
+
+/// Aggregate one request class. Out-of-range indices clamp to the last
+/// group, mirroring [`queue::TierQueue`]'s lane clamp, so a record can
+/// never silently vanish from the per-group accounting.
+fn group_stats(
+    names: &[String],
+    records: &[Served],
+    shed: &[Shed],
+    busy_s: f64,
+    rec_key: impl Fn(&Served) -> usize,
+    shed_key: impl Fn(&Shed) -> usize,
+) -> Vec<GroupStats> {
+    let last = names.len().saturating_sub(1);
+    names
+        .iter()
+        .enumerate()
+        .map(|(i, name)| {
+            let mut lat = Vec::new();
+            let mut completed = 0usize;
+            let mut good = 0usize;
+            for r in records.iter().filter(|r| rec_key(r).min(last) == i) {
+                completed += 1;
+                good += r.deadline_ok as usize;
+                lat.push((r.queue_us + r.service_us) as f64 / 1000.0);
+            }
+            lat.sort_by(f64::total_cmp);
+            let shed_n = shed.iter().filter(|s| shed_key(s).min(last) == i).count();
+            GroupStats {
+                name: name.clone(),
+                submitted: completed + shed_n,
+                completed,
+                shed: shed_n,
+                goodput_rps: if completed == 0 {
+                    0.0
+                } else {
+                    good as f64 / busy_s.max(1e-9)
+                },
+                p50_ms: percentile_sorted(&lat, 50.0),
+                p99_ms: percentile_sorted(&lat, 99.0),
+            }
+        })
+        .collect()
 }
 
 impl ServeReport {
-    #[allow(clippy::too_many_arguments)]
-    fn from_records(
+    pub(crate) fn from_records(
         predictor: String,
-        records: &[Served],
+        tally: Tally,
         wall_s: f64,
         busy_s: f64,
-        max_depth: usize,
-        batches: usize,
-        dropped: usize,
-        first_error: Option<String>,
+        tenant_names: &[String],
+        model_names: &[String],
     ) -> ServeReport {
-        // sort once; every percentile below reads the sorted vector
+        let Tally { records, shed, dropped, first_error, submitted, batches, max_depth } =
+            tally;
+        let shed_admission = shed.iter().filter(|s| !s.expired).count();
+        let base = ServeReport {
+            predictor,
+            submitted,
+            dropped,
+            shed: shed.len(),
+            shed_admission,
+            shed_expired: shed.len() - shed_admission,
+            duration_s: wall_s,
+            busy_s,
+            max_queue_depth: max_depth,
+            per_tenant: group_stats(tenant_names, &records, &shed, busy_s, |r| r.tenant, |s| {
+                s.tenant
+            }),
+            per_model: group_stats(model_names, &records, &shed, busy_s, |r| r.model, |s| {
+                s.model
+            }),
+            first_error,
+            ..Default::default()
+        };
+        if records.is_empty() {
+            // explicit zero shape: with no completions every latency,
+            // accuracy and rate stat is exactly 0.0 — never a NaN from
+            // a 0/0 — while the shed/dropped accounting above still
+            // reports what happened to the submitted requests
+            return base;
+        }
+        // Latency samples come from *completed* requests only: a shed
+        // request never ran, so it has no latency — its cost is already
+        // visible in `shed` and in the goodput gap. Sort once; every
+        // percentile below reads the sorted vector.
         let mut lat: Vec<f64> = records
             .iter()
             .map(|r| (r.queue_us + r.service_us) as f64 / 1000.0)
@@ -151,22 +303,26 @@ impl ServeReport {
         lat.sort_by(f64::total_cmp);
         let svc: Vec<f64> = records.iter().map(|r| r.service_us as f64 / 1000.0).collect();
         let correct = records.iter().filter(|r| r.correct).count();
+        let good = records.iter().filter(|r| r.deadline_ok).count();
         ServeReport {
-            predictor,
             completed: records.len(),
-            dropped,
-            duration_s: wall_s,
-            busy_s,
             throughput_rps: records.len() as f64 / busy_s.max(1e-9),
-            accuracy: correct as f64 / records.len().max(1) as f64,
+            goodput_rps: good as f64 / busy_s.max(1e-9),
+            accuracy: correct as f64 / records.len() as f64,
             p50_ms: percentile_sorted(&lat, 50.0),
             p95_ms: percentile_sorted(&lat, 95.0),
             p99_ms: percentile_sorted(&lat, 99.0),
             mean_service_ms: mean(&svc),
-            max_queue_depth: max_depth,
             batch_occupancy: records.len() as f64 / batches.max(1) as f64,
-            first_error,
+            ..base
         }
+    }
+
+    /// The accounting invariant every serving driver must preserve:
+    /// each submitted request is counted exactly once —
+    /// `completed + dropped + shed == submitted`.
+    pub fn conserved(&self) -> bool {
+        self.completed + self.dropped + self.shed == self.submitted
     }
 
     pub fn print(&self, label: &str) {
@@ -187,6 +343,29 @@ impl ServeReport {
             self.max_queue_depth,
             self.batch_occupancy,
         );
+        if self.shed > 0 || self.goodput_rps != self.throughput_rps {
+            println!(
+                "[serve:{label}] submitted {} | shed {} (admission {} / expired {}) | \
+                 goodput {:.1} rps",
+                self.submitted,
+                self.shed,
+                self.shed_admission,
+                self.shed_expired,
+                self.goodput_rps,
+            );
+        }
+        for (kind, groups) in [("tenant", &self.per_tenant), ("model", &self.per_model)] {
+            if groups.len() < 2 {
+                continue;
+            }
+            for g in groups {
+                println!(
+                    "[serve:{label}]   {kind} {:>12}: {}/{} done ({} shed) | \
+                     goodput {:.1} rps | p50 {:.2} ms p99 {:.2} ms",
+                    g.name, g.completed, g.submitted, g.shed, g.goodput_rps, g.p50_ms, g.p99_ms,
+                );
+            }
+        }
         if self.dropped > 0 {
             println!(
                 "[serve:{label}] DROPPED {} request(s); first error: {}",
@@ -229,6 +408,18 @@ pub fn serve(
         return Ok(ServeReport { predictor: predictor_name, ..Default::default() });
     }
     let n_req = requests.len();
+    // single-model path: one model group; tenants usually collapse to
+    // one "all" class unless the trace was tagged (workload::merge of
+    // for_tenant streams)
+    let model_names = vec![arts.meta.name.clone()];
+    let tenant_names: Vec<String> = {
+        let n = requests.iter().map(|r| r.tenant).max().unwrap_or(0) + 1;
+        if n == 1 {
+            vec!["all".to_string()]
+        } else {
+            (0..n).map(|i| format!("tenant{i}")).collect()
+        }
+    };
     let max_batch = opts.max_batch.max(1);
     let batch_wait = Duration::from_micros(opts.batch_wait_us);
 
@@ -398,10 +589,16 @@ pub fn serve(
                             event_tx
                                 .send(Event::Done(Served {
                                     id: req.id,
+                                    tenant: req.tenant,
+                                    model: 0,
                                     queue_us: svc_t.duration_since(*enqueued).as_micros()
                                         as u64,
                                     service_us,
                                     correct,
+                                    // the single-model path has no
+                                    // deadline: every completion counts
+                                    // toward goodput
+                                    deadline_ok: true,
                                 }))
                                 .ok();
                         }
@@ -454,13 +651,19 @@ pub fn serve(
     let max_depth = queue.depth_hwm();
     Ok(ServeReport::from_records(
         predictor_name,
-        &records,
+        Tally {
+            records,
+            shed: Vec::new(), // no admission control on the legacy path
+            dropped,
+            first_error,
+            submitted: n_req,
+            batches: batches.load(std::sync::atomic::Ordering::Relaxed),
+            max_depth,
+        },
         wall,
         busy,
-        max_depth,
-        batches.load(std::sync::atomic::Ordering::Relaxed),
-        dropped,
-        first_error,
+        &tenant_names,
+        &model_names,
     ))
 }
 
@@ -473,48 +676,87 @@ mod tests {
     // queue/batcher mechanics are unit-tested in queue.rs and
     // model-checked in rust/tests/loom_models.rs. Here: report math.
 
+    fn served(id: u64, tenant: usize, model: usize, lat_us: u64, correct: bool) -> Served {
+        Served {
+            id,
+            tenant,
+            model,
+            queue_us: 0,
+            service_us: lat_us,
+            correct,
+            deadline_ok: true,
+        }
+    }
+
+    fn names(list: &[&str]) -> Vec<String> {
+        list.iter().map(|s| s.to_string()).collect()
+    }
+
     #[test]
     fn report_percentiles() {
-        let recs: Vec<Served> = (0..100)
-            .map(|i| Served {
-                id: i,
-                queue_us: 0,
-                service_us: (i + 1) * 1000,
-                correct: i % 2 == 0,
-            })
-            .collect();
-        let r = ServeReport::from_records("mor".into(), &recs, 3.0, 2.0, 7, 100, 0, None);
+        let recs: Vec<Served> =
+            (0..100).map(|i| served(i, 0, 0, (i + 1) * 1000, i % 2 == 0)).collect();
+        let tally = Tally {
+            records: recs,
+            submitted: 100,
+            batches: 100,
+            max_depth: 7,
+            ..Default::default()
+        };
+        let r = ServeReport::from_records(
+            "mor".into(),
+            tally,
+            3.0,
+            2.0,
+            &names(&["all"]),
+            &names(&["tiny"]),
+        );
         assert_eq!(r.predictor, "mor");
         assert_eq!(r.completed, 100);
         assert_eq!(r.dropped, 0);
+        assert!(r.conserved());
         assert!((r.duration_s - 3.0).abs() < 1e-9);
         assert!((r.busy_s - 2.0).abs() < 1e-9);
         // throughput is measured over the busy window, not the wall
         assert!((r.throughput_rps - 50.0).abs() < 1e-9);
+        // no deadline → every completion is goodput
+        assert!((r.goodput_rps - 50.0).abs() < 1e-9);
         assert!((r.accuracy - 0.5).abs() < 1e-9);
         assert!(r.p50_ms > 49.0 && r.p50_ms < 52.0);
         assert!(r.p99_ms > 98.0);
         assert_eq!(r.max_queue_depth, 7);
         assert!((r.batch_occupancy - 1.0).abs() < 1e-9);
+        // single-group reports mirror the top-level numbers
+        assert_eq!(r.per_tenant.len(), 1);
+        assert_eq!(r.per_model.len(), 1);
+        assert_eq!(r.per_model[0].name, "tiny");
+        assert_eq!(r.per_model[0].completed, 100);
+        assert!((r.per_tenant[0].p99_ms - r.p99_ms).abs() < 1e-9);
     }
 
     #[test]
     fn report_counts_drops_and_surfaces_error() {
-        let recs: Vec<Served> = (0..4)
-            .map(|i| Served { id: i, queue_us: 10, service_us: 100, correct: true })
-            .collect();
+        let recs: Vec<Served> = (0..4).map(|i| served(i, 0, 0, 100, true)).collect();
+        let tally = Tally {
+            records: recs,
+            dropped: 3,
+            first_error: Some("backend exploded".into()),
+            submitted: 7,
+            batches: 2,
+            max_depth: 2,
+            ..Default::default()
+        };
         let r = ServeReport::from_records(
             "none".into(),
-            &recs,
+            tally,
             1.0,
             0.5,
-            2,
-            2,
-            3,
-            Some("backend exploded".into()),
+            &names(&["all"]),
+            &names(&["tiny"]),
         );
         assert_eq!(r.completed, 4);
         assert_eq!(r.dropped, 3);
+        assert!(r.conserved());
         assert_eq!(r.first_error.as_deref(), Some("backend exploded"));
         assert!((r.batch_occupancy - 2.0).abs() < 1e-9);
     }
@@ -525,6 +767,102 @@ mod tests {
         assert_eq!(r.completed, 0);
         assert_eq!(r.dropped, 0);
         assert_eq!(r.throughput_rps, 0.0);
+        assert!(r.conserved());
     }
 
+    #[test]
+    fn report_zero_completed_is_nan_free() {
+        // everything shed, nothing completed: the explicit early shape
+        // must produce exact zeros (not 0/0 NaNs) in every stat — and
+        // the shed split must still be fully reported
+        let shed: Vec<Shed> = (0..5)
+            .map(|i| Shed { tenant: i % 2, model: 0, expired: i % 2 == 1 })
+            .collect();
+        let tally = Tally { shed, submitted: 5, ..Default::default() };
+        let r = ServeReport::from_records(
+            "mor".into(),
+            tally,
+            1.0,
+            0.0,
+            &names(&["a", "b"]),
+            &names(&["tiny"]),
+        );
+        assert_eq!(r.completed, 0);
+        assert_eq!(r.shed, 5);
+        assert_eq!(r.shed_admission, 3);
+        assert_eq!(r.shed_expired, 2);
+        assert!(r.conserved());
+        for v in [
+            r.throughput_rps,
+            r.goodput_rps,
+            r.accuracy,
+            r.p50_ms,
+            r.p95_ms,
+            r.p99_ms,
+            r.mean_service_ms,
+            r.batch_occupancy,
+        ] {
+            assert!(v == 0.0, "expected exact 0.0, got {v}");
+        }
+        assert_eq!(r.per_tenant[0].shed, 3);
+        assert_eq!(r.per_tenant[1].shed, 2);
+        assert!(r.per_tenant[0].goodput_rps == 0.0);
+        assert!(r.per_tenant[0].p99_ms == 0.0);
+    }
+
+    #[test]
+    fn report_groups_split_by_tenant_and_model() {
+        // tenant 0 → model 0 at 10 ms, tenant 1 → model 1 at 30 ms;
+        // one shed for tenant 1 / model 1; one out-of-range tenant
+        // index clamps into the last group instead of vanishing
+        let mut recs = Vec::new();
+        for i in 0..10 {
+            recs.push(served(i, 0, 0, 10_000, true));
+            recs.push(served(100 + i, 1, 1, 30_000, true));
+        }
+        recs.push(served(999, 7, 1, 30_000, true)); // clamps to tenant "b"
+        let shed = vec![Shed { tenant: 1, model: 1, expired: false }];
+        let tally = Tally { records: recs, shed, submitted: 22, ..Default::default() };
+        let r = ServeReport::from_records(
+            "mor".into(),
+            tally,
+            2.0,
+            2.0,
+            &names(&["a", "b"]),
+            &names(&["m0", "m1"]),
+        );
+        assert!(r.conserved());
+        let (a, b) = (&r.per_tenant[0], &r.per_tenant[1]);
+        assert_eq!((a.completed, a.shed), (10, 0));
+        assert_eq!((b.completed, b.shed), (11, 1));
+        assert_eq!(b.submitted, 12);
+        assert!(a.p50_ms < 11.0 && b.p50_ms > 29.0);
+        // goodput split follows the completion split over the same window
+        assert!((a.goodput_rps - 5.0).abs() < 1e-9);
+        assert!((b.goodput_rps - 5.5).abs() < 1e-9);
+        let (m0, m1) = (&r.per_model[0], &r.per_model[1]);
+        assert_eq!(m0.name, "m0");
+        assert_eq!((m0.completed, m1.completed), (10, 11));
+        assert_eq!(m1.shed, 1);
+    }
+
+    #[test]
+    fn report_goodput_counts_only_in_deadline_completions() {
+        let mut recs: Vec<Served> = (0..8).map(|i| served(i, 0, 0, 1000, true)).collect();
+        for r in recs.iter_mut().skip(6) {
+            r.deadline_ok = false; // finished, but past its deadline
+        }
+        let tally = Tally { records: recs, submitted: 8, ..Default::default() };
+        let r = ServeReport::from_records(
+            "mor".into(),
+            tally,
+            2.0,
+            2.0,
+            &names(&["all"]),
+            &names(&["tiny"]),
+        );
+        assert!((r.throughput_rps - 4.0).abs() < 1e-9);
+        assert!((r.goodput_rps - 3.0).abs() < 1e-9);
+        assert!((r.per_tenant[0].goodput_rps - 3.0).abs() < 1e-9);
+    }
 }

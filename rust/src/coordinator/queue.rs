@@ -1,18 +1,30 @@
-//! The dispatcher→worker request queue, extracted so its concurrency
-//! contract is a unit: a condvar-backed micro-batching MPMC queue.
+//! The dispatcher→worker request queues, extracted so their concurrency
+//! contracts are units: a condvar-backed micro-batching MPMC queue
+//! ([`SharedQueue`], the single-model coordinator's) and a per-tenant
+//! weighted-fair queue with non-blocking pop/steal ([`TierQueue`], one
+//! per registered model in the serving tier) plus the group-wide
+//! [`Notifier`] idle workers park on between steal scans.
 //!
 //! Contract (what the loom models in `rust/tests/loom_models.rs` check
 //! exhaustively, and the unit tests below check on real threads):
 //!
 //! * **No lost wakeups** — every [`SharedQueue::push`] is observed by
 //!   some [`SharedQueue::next_batch`] caller; requests never stall in
-//!   the queue while a worker sleeps forever.
+//!   the queue while a worker sleeps forever. For the tier: a stealer
+//!   that reads [`Notifier::epoch`] *before* scanning and then parks
+//!   with [`Notifier::wait_past`] cannot miss a push or close that
+//!   lands between the scan and the park.
 //! * **No deadlock on close** — [`SharedQueue::close`] wakes every
 //!   blocked worker; after the queue is closed *and drained*,
 //!   `next_batch` returns `None` (worker shutdown), never blocks.
+//!   [`TierQueue::close`] bumps the group notifier, so parked stealers
+//!   re-scan and observe [`Poll::Closed`].
 //! * **Exact accounting** — each pushed request is handed out exactly
 //!   once across all workers (the coordinator's dropped-request
-//!   arithmetic depends on this: `completed + dropped == pushed`).
+//!   arithmetic depends on this: `completed + dropped == pushed`, and
+//!   the tier's `completed + dropped + shed == submitted`). Racing
+//!   [`TierQueue::try_pop`] calls — a home worker and a stealer — can
+//!   never hand the same request out twice.
 //!
 //! The synchronization types come from [`crate::util::sync`] so
 //! `--cfg loom` builds swap in the model checker's instrumented
@@ -21,6 +33,7 @@
 use crate::util::sync::{Condvar, Mutex};
 use crate::workload::Request;
 use std::collections::VecDeque;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Request queue shared between dispatcher and workers. The condvar
@@ -119,13 +132,219 @@ impl Default for SharedQueue {
     }
 }
 
+// ---- serving-tier queue ----------------------------------------------------
+
+/// Group-wide wakeup channel for the tier's work-stealing workers.
+///
+/// An idle worker scans every model queue non-blockingly; between scans
+/// it parks here instead of busy-polling. The epoch counter closes the
+/// classic lost-wakeup window: read [`Notifier::epoch`] **before** the
+/// scan, and [`Notifier::wait_past`] returns immediately if any push or
+/// close bumped the epoch while the scan was running.
+pub struct Notifier {
+    epoch: Mutex<u64>,
+    cv: Condvar,
+}
+
+impl Notifier {
+    pub fn new() -> Notifier {
+        Notifier { epoch: Mutex::new(0), cv: Condvar::new() }
+    }
+
+    /// Current epoch. Sample this before scanning the queues.
+    pub fn epoch(&self) -> u64 {
+        *self.epoch.lock().unwrap()
+    }
+
+    /// Bump the epoch and wake every parked worker (every push and
+    /// every close calls this).
+    pub fn notify_all(&self) {
+        let mut e = self.epoch.lock().unwrap();
+        *e = e.wrapping_add(1);
+        drop(e);
+        self.cv.notify_all();
+    }
+
+    /// Park until the epoch moves past `seen` or `timeout` elapses;
+    /// returns the epoch observed on wakeup. If the epoch already moved
+    /// (a push/close landed after `seen` was sampled), returns at once —
+    /// the no-lost-wakeup half of the stealing contract.
+    pub fn wait_past(&self, seen: u64, timeout: Duration) -> u64 {
+        let mut e = self.epoch.lock().unwrap();
+        while *e == seen {
+            let (guard, to) = self.cv.wait_timeout(e, timeout).unwrap();
+            e = guard;
+            if to.timed_out() {
+                break;
+            }
+        }
+        *e
+    }
+}
+
+impl Default for Notifier {
+    fn default() -> Notifier {
+        Notifier::new()
+    }
+}
+
+/// A queued tier request: the request plus its enqueue timestamp on the
+/// driver's clock — real elapsed µs in the threaded driver, virtual µs
+/// in the deterministic simulator. Deadline/expiry math happens on this
+/// timestamp, so the same policy code runs under both clocks.
+#[derive(Clone, Debug)]
+pub struct Queued {
+    pub req: Request,
+    pub enq_us: u64,
+    /// WFQ virtual finish tag, assigned at push.
+    tag: u64,
+}
+
+/// Result of a non-blocking [`TierQueue::try_pop`].
+#[derive(Debug)]
+pub enum Poll {
+    Item(Queued),
+    /// Nothing queued right now, but the queue may still receive pushes.
+    Empty,
+    /// Closed *and* drained: this queue will never yield again.
+    Closed,
+}
+
+/// Virtual-finish-tag granularity: a weight-1 request advances a lane's
+/// tag by this much, a weight-w request by `WFQ_SCALE / w`. Weights are
+/// expected to be small integers (≪ 2^20).
+const WFQ_SCALE: u64 = 1 << 20;
+
+/// Per-model request queue of the serving tier: one FIFO lane per
+/// tenant, dequeued in weighted-fair order (start-time fair queueing
+/// with unit request cost: each lane's next virtual finish tag is
+/// `max(vtime, lane.last_finish) + WFQ_SCALE/weight`; [`TierQueue::try_pop`]
+/// hands out the lowest head tag, ties to the lowest lane index). With
+/// every lane backlogged, tenant service rates converge to the weight
+/// ratio — the 2:1 goodput contract the fairness suite asserts.
+///
+/// All operations are non-blocking; workers park on the shared
+/// [`Notifier`] between scans, which is what makes cross-queue work
+/// stealing race-free: stealing *is* `try_pop` on a foreign queue, and
+/// the per-queue mutex makes hand-out exactly-once.
+pub struct TierQueue {
+    state: Mutex<TierState>,
+    notifier: Arc<Notifier>,
+}
+
+struct TierState {
+    lanes: Vec<Lane>,
+    /// WFQ virtual time: the largest finish tag ever handed out.
+    vtime: u64,
+    len: usize,
+    closed: bool,
+    depth_hwm: usize,
+}
+
+struct Lane {
+    q: VecDeque<Queued>,
+    weight: u64,
+    last_finish: u64,
+}
+
+impl TierQueue {
+    /// One lane per entry of `weights` (all weights ≥ 1). Requests whose
+    /// `tenant` is out of range are clamped to the last lane.
+    pub fn new(weights: &[u64], notifier: Arc<Notifier>) -> TierQueue {
+        assert!(!weights.is_empty(), "a TierQueue needs at least one tenant lane");
+        assert!(weights.iter().all(|&w| w >= 1), "tenant weights must be >= 1");
+        TierQueue {
+            state: Mutex::new(TierState {
+                lanes: weights
+                    .iter()
+                    .map(|&weight| Lane { q: VecDeque::new(), weight, last_finish: 0 })
+                    .collect(),
+                vtime: 0,
+                len: 0,
+                closed: false,
+                depth_hwm: 0,
+            }),
+            notifier,
+        }
+    }
+
+    /// Enqueue at `enq_us` on the driver's clock. Wakes parked workers
+    /// through the group notifier.
+    pub fn push(&self, req: Request, enq_us: u64) {
+        let mut st = self.state.lock().unwrap();
+        debug_assert!(!st.closed, "push after close");
+        let lane_idx = req.tenant.min(st.lanes.len() - 1);
+        let vtime = st.vtime;
+        let lane = &mut st.lanes[lane_idx];
+        let tag = vtime.max(lane.last_finish) + WFQ_SCALE / lane.weight;
+        lane.last_finish = tag;
+        lane.q.push_back(Queued { req, enq_us, tag });
+        st.len += 1;
+        st.depth_hwm = st.depth_hwm.max(st.len);
+        drop(st);
+        self.notifier.notify_all();
+    }
+
+    /// Dequeue the weighted-fair next request, without blocking. Both
+    /// the home worker and stealers call this; the mutex guarantees a
+    /// request is handed out exactly once. A closed queue keeps
+    /// yielding until drained, then reports [`Poll::Closed`].
+    pub fn try_pop(&self) -> Poll {
+        let mut st = self.state.lock().unwrap();
+        if st.len == 0 {
+            return if st.closed { Poll::Closed } else { Poll::Empty };
+        }
+        let lane = (0..st.lanes.len())
+            .filter(|&i| !st.lanes[i].q.is_empty())
+            .min_by_key(|&i| st.lanes[i].q.front().expect("non-empty").tag)
+            .expect("len > 0 implies a non-empty lane");
+        let item = st.lanes[lane].q.pop_front().expect("chosen lane non-empty");
+        st.vtime = st.vtime.max(item.tag);
+        st.len -= 1;
+        Poll::Item(item)
+    }
+
+    /// No more pushes will ever happen; parked workers are woken so
+    /// they can observe the drain-then-[`Poll::Closed`] state.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.notifier.notify_all();
+    }
+
+    /// Queued requests right now (the steal scan's size signal).
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().len
+    }
+
+    /// Queued requests in one tenant's lane (admission control's depth
+    /// input: a tenant's projected wait depends on its own backlog and
+    /// its weighted share, not on other tenants' backlogs). Out-of-range
+    /// tenants clamp to the last lane, mirroring [`TierQueue::push`].
+    pub fn lane_len(&self, tenant: usize) -> usize {
+        let st = self.state.lock().unwrap();
+        st.lanes[tenant.min(st.lanes.len() - 1)].q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Peak depth observed (`ServeReport::max_queue_depth` per model).
+    pub fn depth_hwm(&self) -> usize {
+        self.state.lock().unwrap().depth_hwm
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::Arc;
 
     fn req(id: u64) -> Request {
-        Request { id, sample_idx: 0, arrival_us: 0 }
+        Request { id, sample_idx: 0, arrival_us: 0, tenant: 0 }
+    }
+
+    fn treq(id: u64, tenant: usize) -> Request {
+        Request { id, sample_idx: 0, arrival_us: 0, tenant }
     }
 
     #[test]
@@ -189,5 +408,125 @@ mod tests {
         let _ = q.next_batch(3, Duration::ZERO);
         // the high-water mark is a peak, not the current depth
         assert_eq!(q.depth_hwm(), 3);
+    }
+
+    // ---- TierQueue -------------------------------------------------------
+
+    fn pop_id(q: &TierQueue) -> u64 {
+        match q.try_pop() {
+            Poll::Item(item) => item.req.id,
+            other => panic!("expected an item, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn tier_queue_wfq_serves_weights_2_to_1() {
+        let q = TierQueue::new(&[2, 1], Arc::new(Notifier::new()));
+        // tenant 0 requests have even ids, tenant 1 odd ids
+        for i in 0..6 {
+            q.push(treq(2 * i, 0), 0);
+            q.push(treq(2 * i + 1, 1), 0);
+        }
+        // weight 2:1 → the service pattern is A A B repeating
+        let tenants: Vec<u64> = (0..9).map(|_| pop_id(&q) % 2).collect();
+        assert_eq!(tenants, vec![0, 0, 1, 0, 0, 1, 0, 0, 1], "not a 2:1 pattern");
+        // within a lane, FIFO order holds
+        let q = TierQueue::new(&[1], Arc::new(Notifier::new()));
+        for i in 0..4 {
+            q.push(treq(i, 0), 0);
+        }
+        let ids: Vec<u64> = (0..4).map(|_| pop_id(&q)).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn tier_queue_idle_lane_does_not_starve_the_other() {
+        // only tenant 1 (weight 1 of a 3:1 split) is active: it gets
+        // every slot — WFQ shares capacity, it doesn't reserve it
+        let q = TierQueue::new(&[3, 1], Arc::new(Notifier::new()));
+        for i in 0..3 {
+            q.push(treq(i, 1), 0);
+        }
+        let ids: Vec<u64> = (0..3).map(|_| pop_id(&q)).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn tier_queue_out_of_range_tenant_clamps_to_last_lane() {
+        let q = TierQueue::new(&[1, 1], Arc::new(Notifier::new()));
+        q.push(treq(0, 7), 0); // no lane 7: lands in lane 1
+        q.push(treq(1, 1), 0);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.lane_len(0), 0);
+        assert_eq!(q.lane_len(1), 2);
+        assert_eq!(q.lane_len(9), 2); // lane_len clamps like push
+        assert_eq!(pop_id(&q), 0);
+        assert_eq!(pop_id(&q), 1);
+    }
+
+    #[test]
+    fn tier_queue_drains_after_close_then_reports_closed() {
+        let q = TierQueue::new(&[1], Arc::new(Notifier::new()));
+        q.push(treq(0, 0), 10);
+        q.close();
+        match q.try_pop() {
+            Poll::Item(item) => {
+                assert_eq!(item.req.id, 0);
+                assert_eq!(item.enq_us, 10);
+            }
+            other => panic!("closed queue must drain first, got {other:?}"),
+        }
+        assert!(matches!(q.try_pop(), Poll::Closed));
+        // empty-but-open reports Empty, not Closed
+        let open = TierQueue::new(&[1], Arc::new(Notifier::new()));
+        assert!(matches!(open.try_pop(), Poll::Empty));
+    }
+
+    #[test]
+    fn tier_queue_depth_hwm_is_a_peak() {
+        let q = TierQueue::new(&[1, 1], Arc::new(Notifier::new()));
+        assert_eq!(q.depth_hwm(), 0);
+        for i in 0..5 {
+            q.push(treq(i, (i % 2) as usize), 0);
+        }
+        assert_eq!(q.depth_hwm(), 5);
+        for _ in 0..5 {
+            pop_id(&q);
+        }
+        assert!(q.is_empty());
+        assert_eq!(q.depth_hwm(), 5);
+    }
+
+    #[test]
+    fn notifier_epoch_advances_on_notify_and_unparks() {
+        let n = Arc::new(Notifier::new());
+        let e0 = n.epoch();
+        n.notify_all();
+        assert_ne!(n.epoch(), e0);
+        // a stale `seen` returns immediately even with a long timeout
+        let t = std::time::Instant::now();
+        n.wait_past(e0, Duration::from_secs(10));
+        assert!(t.elapsed() < Duration::from_secs(1), "missed-wakeup stall");
+        // cross-thread: a parked waiter is woken by a push through the
+        // queue (push → notify_all)
+        let q = Arc::new(TierQueue::new(&[1], Arc::clone(&n)));
+        let waiter = {
+            let (n, q) = (Arc::clone(&n), Arc::clone(&q));
+            std::thread::spawn(move || {
+                loop {
+                    let seen = n.epoch();
+                    match q.try_pop() {
+                        Poll::Item(item) => return item.req.id,
+                        Poll::Closed => panic!("queue closed unexpectedly"),
+                        Poll::Empty => {
+                            n.wait_past(seen, Duration::from_secs(10));
+                        }
+                    }
+                }
+            })
+        };
+        std::thread::sleep(Duration::from_millis(2));
+        q.push(treq(42, 0), 0);
+        assert_eq!(waiter.join().unwrap(), 42);
     }
 }

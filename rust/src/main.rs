@@ -6,6 +6,7 @@
 use anyhow::{bail, Result};
 use mor::cli::{Args, USAGE};
 use mor::config::Config;
+use mor::coordinator::tier::ServingTier;
 use mor::coordinator::{self, Backend, ServeOpts};
 use mor::engine::{InputSparsity, WeightSparsity};
 use mor::figures;
@@ -241,6 +242,14 @@ fn cmd_figures(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    // the multi-model/multi-tenant/deadline surface routes to the
+    // sharded serving tier; the single-model path below is untouched
+    if args.opt("models").is_some()
+        || args.opt("tenants").is_some()
+        || args.opt("deadline-ms").is_some()
+    {
+        return cmd_serve_tier(args);
+    }
     let dir = args.opt_or("artifacts", mor::DEFAULT_ARTIFACTS_DIR);
     let model = args.opt_or("model", "tds");
     let rps = args.opt_f64("rps", 200.0)?;
@@ -295,6 +304,99 @@ fn cmd_serve(args: &Args) -> Result<()> {
         },
     )?;
     report.print(model);
+    Ok(())
+}
+
+/// `mor serve --models a,b --tenants gold:2,free:1 --deadline-ms 20`:
+/// the sharded serving tier — one session + queue + replica pool per
+/// model, weighted-fair tenant lanes, deadline admission control and
+/// load shedding, work stealing between idle replicas.
+fn cmd_serve_tier(args: &Args) -> Result<()> {
+    let dir = args.opt_or("artifacts", mor::DEFAULT_ARTIFACTS_DIR);
+    let model_list = args.opt_or("models", args.opt_or("model", "tds")).to_string();
+    let replicas = args.opt_usize("replicas", 2)?;
+    let rps = args.opt_f64("rps", 200.0)?;
+    let duration = args.opt_f64("duration", 5.0)?;
+    let intra_threads = args.opt_usize("intra-threads", 1)?;
+    let max_batch = args.opt_usize("max-batch", 1)?;
+    let deadline_ms = args.opt_f64("deadline-ms", 0.0)?;
+    let arrival_kind = args.opt_or("arrival", "poisson");
+    let mut cfg = config_from(args)?;
+    if args.flag("no-predictor") {
+        cfg.predictor.strategy = Strategy::None;
+    }
+
+    // --tenants name:weight,... (weight defaults to 1)
+    let mut builder = ServingTier::builder()
+        .deadline_ms(deadline_ms)
+        .max_batch(max_batch)
+        .steal(!args.flag("no-steal"));
+    let mut tenants = Vec::new();
+    for part in args.opt_or("tenants", "all:1").split(',').filter(|s| !s.is_empty()) {
+        let (name, weight) = match part.split_once(':') {
+            Some((n, w)) => (
+                n,
+                w.parse::<u64>().map_err(|_| {
+                    anyhow::anyhow!("--tenants expects name:weight entries, got '{part}'")
+                })?,
+            ),
+            None => (part, 1),
+        };
+        builder = builder.tenant(name, weight);
+        tenants.push(name.to_string());
+    }
+    anyhow::ensure!(!tenants.is_empty(), "--tenants must name at least one tenant");
+
+    let mut bundles = Vec::new();
+    for name in model_list.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        bundles.push(Artifacts::load(dir, name)?);
+    }
+    anyhow::ensure!(!bundles.is_empty(), "--models must name at least one model");
+    for arts in &bundles {
+        let session = Session::build(&arts.model)
+            .params(&arts.predictor)
+            .config(cfg.predictor.clone())
+            .threads(intra_threads)
+            .input_sparsity(cfg.engine.input_sparsity)
+            .weight_sparsity(cfg.engine.weight_sparsity)
+            .finish();
+        builder = builder.model(&arts.meta.name, arts, &session, replicas);
+    }
+    let tier = builder.finish();
+
+    // per-model traces: each tenant gets an equal slice of --rps on its
+    // own seeded stream; merge interleaves them arrival-ordered
+    let arrival = Arrival::from_cli(arrival_kind, rps / tenants.len() as f64)?;
+    let traces: Vec<Vec<mor::workload::Request>> = bundles
+        .iter()
+        .enumerate()
+        .map(|(mi, arts)| {
+            mor::workload::merge(
+                (0..tenants.len())
+                    .map(|ti| {
+                        RequestStream::with_arrival(
+                            arrival,
+                            arts.data.n_test(),
+                            42 + (mi * 101 + ti) as u64,
+                        )
+                        .for_tenant(ti)
+                        .generate(duration)
+                    })
+                    .collect(),
+            )
+        })
+        .collect();
+    println!(
+        "[serve] tier: {} model(s) x {replicas} replica(s), tenants [{}], \
+         deadline {deadline_ms}ms, arrival={arrival_kind} rps={rps} duration={duration}s \
+         → {} requests",
+        bundles.len(),
+        tenants.join(","),
+        traces.iter().map(|t| t.len()).sum::<usize>()
+    );
+    let report = tier.serve(traces)?;
+    report.print("tier");
+    anyhow::ensure!(report.conserved(), "serving tier lost requests (accounting bug)");
     Ok(())
 }
 

@@ -24,6 +24,13 @@
 //!   `debug_assert!` invariants (`outstanding <= created`, free list
 //!   never overfull — the double-return/aliasing tripwire) hold on
 //!   every interleaving, since loom runs debug assertions too.
+//! * [`TierQueue`] + [`Notifier`] — the serving tier's work-stealing
+//!   substrate: racing `try_pop` calls (a home worker and a stealer)
+//!   conserve requests and never hand one out twice, and a stealer
+//!   that samples the notifier epoch *before* its scan can never miss
+//!   a push or close that lands mid-scan (the tier's
+//!   `completed + dropped + shed == submitted` invariant rests on
+//!   these).
 //!
 //! Wall-clock caveat: loom requires deterministic executions, so the
 //! linger model uses a deadline far in the future — the
@@ -34,14 +41,18 @@
 #![cfg(loom)]
 
 use loom::thread;
-use mor::coordinator::queue::SharedQueue;
+use mor::coordinator::queue::{Notifier, Poll, SharedQueue, TierQueue};
 use mor::plan::WorkspacePool;
 use mor::workload::Request;
 use std::sync::Arc;
 use std::time::Duration;
 
 fn req(id: u64) -> Request {
-    Request { id, sample_idx: 0, arrival_us: 0 }
+    Request { id, sample_idx: 0, arrival_us: 0, tenant: 0 }
+}
+
+fn treq(id: u64, tenant: usize) -> Request {
+    Request { id, sample_idx: 0, arrival_us: 0, tenant }
 }
 
 /// A deadline the model never reaches — keeps the linger loop on the
@@ -158,6 +169,112 @@ fn queue_linger_batch_conserves_requests() {
         let mut ids = consumer.join().unwrap();
         ids.sort_unstable();
         assert_eq!(ids, vec![0, 1]);
+    });
+}
+
+// ---- TierQueue + Notifier (work stealing) ----------------------------------
+
+#[test]
+fn tier_queue_racing_steals_conserve_requests() {
+    loom::model(|| {
+        let n = Arc::new(Notifier::new());
+        let q = Arc::new(TierQueue::new(&[1, 1], Arc::clone(&n)));
+        q.push(treq(0, 0), 0);
+        q.push(treq(1, 1), 0);
+        q.close();
+        // a home worker and a stealer race try_pop on the same queue;
+        // closed-before-spawn keeps Poll::Empty unreachable, so every
+        // interleaving is a pure pop-ordering race
+        let poppers: Vec<_> = (0..2)
+            .map(|_| {
+                let q = Arc::clone(&q);
+                thread::spawn(move || {
+                    let mut ids = Vec::new();
+                    loop {
+                        match q.try_pop() {
+                            Poll::Item(it) => ids.push(it.req.id),
+                            Poll::Closed => return ids,
+                            Poll::Empty => unreachable!("closed before spawn"),
+                        }
+                    }
+                })
+            })
+            .collect();
+        let mut all: Vec<u64> =
+            poppers.into_iter().flat_map(|p| p.join().unwrap()).collect();
+        all.sort_unstable();
+        // exactly once each, across both contenders
+        assert_eq!(all, vec![0, 1], "a request was lost or handed out twice");
+    });
+}
+
+#[test]
+fn tier_queue_stolen_request_executes_exactly_once() {
+    loom::model(|| {
+        let n = Arc::new(Notifier::new());
+        let q = Arc::new(TierQueue::new(&[1], Arc::clone(&n)));
+        q.push(treq(7, 0), 0);
+        q.close();
+        // one request, two racing contenders: in every interleaving
+        // exactly one of them wins the pop — the mutex-serialized
+        // hand-out is what makes stealing double-execution-free
+        let contenders: Vec<_> = (0..2)
+            .map(|_| {
+                let q = Arc::clone(&q);
+                thread::spawn(move || {
+                    let mut ids = Vec::new();
+                    loop {
+                        match q.try_pop() {
+                            Poll::Item(it) => ids.push(it.req.id),
+                            Poll::Closed => return ids,
+                            Poll::Empty => unreachable!("closed before spawn"),
+                        }
+                    }
+                })
+            })
+            .collect();
+        let all: Vec<u64> =
+            contenders.into_iter().flat_map(|t| t.join().unwrap()).collect();
+        assert_eq!(all, vec![7], "a stolen request must execute exactly once");
+    });
+}
+
+#[test]
+fn tier_notifier_close_wakes_parked_stealer() {
+    loom::model(|| {
+        let n = Arc::new(Notifier::new());
+        let q = Arc::new(TierQueue::new(&[1], Arc::clone(&n)));
+        // the stealer's protocol: sample the epoch BEFORE the scan,
+        // park with wait_past after a failed scan. A push or close
+        // landing between scan and park bumps the epoch, so wait_past
+        // returns immediately — loom proves no interleaving deadlocks
+        // (i.e. no lost wakeup) and the item plus the close are both
+        // eventually observed.
+        let stealer = {
+            let (n, q) = (Arc::clone(&n), Arc::clone(&q));
+            thread::spawn(move || {
+                let mut got = 0usize;
+                loop {
+                    let seen = n.epoch();
+                    match q.try_pop() {
+                        Poll::Item(_) => got += 1,
+                        Poll::Closed => return got,
+                        Poll::Empty => {
+                            n.wait_past(seen, FOREVER);
+                        }
+                    }
+                }
+            })
+        };
+        let producer = {
+            let q = Arc::clone(&q);
+            thread::spawn(move || {
+                q.push(treq(0, 0), 0);
+                q.close();
+            })
+        };
+        producer.join().unwrap();
+        assert_eq!(stealer.join().unwrap(), 1, "push or close missed a parked stealer");
     });
 }
 

@@ -2,13 +2,22 @@
 //! `integration.rs`, these never skip: `mor::model::synth::artifacts_for`
 //! builds a full bundle in memory, so CI exercises the coordinator
 //! (queue, batcher, drop accounting, closed loop) on every run.
+//!
+//! The `tier_*` suites below drive the sharded [`ServingTier`] through
+//! its deterministic virtual-clock simulator: overload shedding,
+//! conservation (`completed + dropped + shed == submitted`), weighted
+//! fairness, flash-crowd isolation, work stealing, expiry-at-dequeue,
+//! and bit-exact reproducibility — assertions that would be flaky on
+//! wall-clock threads are theorems on the virtual clock. One real
+//! threaded `ServingTier::serve` smoke test rides along.
 
 use mor::config::PredictorConfig;
+use mor::coordinator::tier::{ServingTier, VirtualService};
 use mor::coordinator::{serve, Backend, ServeOpts};
 use mor::model::synth;
 use mor::model::Artifacts;
 use mor::session::Session;
-use mor::workload::{Arrival, RequestStream};
+use mor::workload::{merge, Arrival, Request, RequestStream};
 
 fn synth_arts() -> Artifacts {
     synth::artifacts_for(synth::tiny_serving_model(9), 10, 32, 4)
@@ -46,6 +55,8 @@ fn serve_smoke_unbatched() {
     assert_eq!(rep.completed, n, "requests lost without batching");
     assert_eq!(rep.predictor, "mor", "report must name the active strategy");
     assert_eq!(rep.dropped, 0);
+    assert_eq!(rep.shed, 0, "no deadline, nothing to shed");
+    assert!(rep.conserved(), "completed + dropped + shed != submitted");
     assert!(rep.first_error.is_none());
     assert!((rep.batch_occupancy - 1.0).abs() < 1e-9, "max_batch=1 must not batch");
     assert!(rep.busy_s > 0.0 && rep.busy_s <= rep.duration_s + 1e-9);
@@ -80,6 +91,7 @@ fn serve_smoke_batched_matches_unbatched_answers() {
     assert_eq!(unbatched.completed, n);
     assert_eq!(batched.completed, n, "requests lost with batching");
     assert_eq!(batched.dropped, 0);
+    assert!(unbatched.conserved() && batched.conserved());
     // run_batch is bit-exact with run_sample, so per-request correctness
     // — and therefore accuracy — must be identical batched or not
     assert_eq!(unbatched.accuracy, batched.accuracy);
@@ -109,6 +121,7 @@ fn serve_closed_loop_completes_all() {
     .expect("serve");
     assert_eq!(rep.completed, n, "closed loop lost requests");
     assert_eq!(rep.dropped, 0);
+    assert!(rep.conserved());
     // with 8 outstanding and batches of up to 4, real coalescing happens
     assert!(rep.batch_occupancy >= 1.0);
 }
@@ -142,6 +155,7 @@ fn serve_bursty_arrivals_complete() {
     .expect("serve");
     assert_eq!(rep.completed, n);
     assert_eq!(rep.dropped, 0);
+    assert!(rep.conserved());
     assert_eq!(rep.accuracy, 1.0, "dense forward must reproduce its own labels");
     assert_eq!(rep.predictor, "none");
 }
@@ -171,6 +185,7 @@ fn serve_dense_batched_accuracy_is_exact() {
     )
     .expect("serve");
     assert_eq!(rep.completed, n);
+    assert!(rep.conserved());
     assert_eq!(rep.accuracy, 1.0);
     // everything arrives almost at once with a 16-deep batcher: real
     // cross-request tiles must have formed
@@ -179,4 +194,311 @@ fn serve_dense_batched_accuracy_is_exact() {
         "expected coalescing, occupancy {}",
         rep.batch_occupancy
     );
+}
+
+// ---- ServingTier: deterministic virtual-clock suites -----------------------
+//
+// Shared constants: every request costs SVC_US = 1 ms on the virtual
+// clock, every model runs REPLICAS = 2 replicas, so one model's
+// capacity is exactly 2 000 requests/s. The deadline is 20 ms, which
+// with the per-lane admission bound
+//   lane_depth * svc * w_sum / (w * replicas) + 2 * svc <= deadline
+// caps a single weight-1 lane at depth 36 (then one in-flight push:
+// high-water mark <= 37).
+
+const SVC_US: u64 = 1000;
+const REPLICAS: usize = 2;
+const DEADLINE_MS: f64 = 20.0;
+
+fn vsvc(n_models: usize) -> VirtualService {
+    VirtualService { svc_us: vec![SVC_US; n_models], execute: false }
+}
+
+fn tier_builder(arts: &Artifacts, names: &[&str]) -> mor::coordinator::tier::TierBuilder {
+    let sess = session(arts);
+    let mut b = ServingTier::builder();
+    for name in names {
+        b = b.model(name, arts, &sess, REPLICAS);
+    }
+    b.deadline_ms(DEADLINE_MS)
+}
+
+fn steady_trace(arts: &Artifacts, rate: f64, dur_s: f64, tenant: usize, seed: u64) -> Vec<Request> {
+    let mut s = RequestStream::with_arrival(
+        Arrival::Steady { rate_per_s: rate },
+        arts.data.n_test(),
+        seed,
+    )
+    .for_tenant(tenant);
+    s.generate(dur_s)
+}
+
+/// 0.8 s at 1 000 rps (half of one model's capacity) with an 8 000 rps
+/// spike — 4x capacity — during [0.2 s, 0.5 s).
+fn flash_trace(arts: &Artifacts, seed: u64) -> Vec<Request> {
+    let mut s = RequestStream::with_arrival(
+        Arrival::FlashCrowd {
+            base_rate_per_s: 1000.0,
+            spike_mult: 8.0,
+            spike_start_s: 0.2,
+            spike_dur_s: 0.3,
+        },
+        arts.data.n_test(),
+        seed,
+    );
+    s.generate(0.8)
+}
+
+#[test]
+fn tier_overload_sheds_and_keeps_accepted_p99_inside_deadline() {
+    let arts = synth_arts();
+    let tier = tier_builder(&arts, &["solo"]).finish();
+    let trace = flash_trace(&arts, 11);
+    let n = trace.len();
+    assert!(n > 2000, "flash-crowd trace too short: {n}");
+    let rep = tier.simulate(vec![trace], &vsvc(1)).expect("simulate");
+
+    // conservation on an overload report: everything not completed was
+    // shed, nothing silently vanished
+    assert_eq!(rep.submitted, n);
+    assert_eq!(rep.dropped, 0);
+    assert!(rep.conserved(), "completed + dropped + shed != submitted");
+
+    // 4x capacity must engage load shedding — and with conservative
+    // admission doing its job, *only* admission sheds: an admitted
+    // request always finishes inside the deadline, so expiry never fires
+    assert!(rep.shed > 0, "4x-capacity spike did not shed");
+    assert!(rep.shed_admission > 0);
+    assert_eq!(rep.shed_expired, 0, "admission let an expiring request through");
+    assert_eq!(rep.shed, rep.shed_admission + rep.shed_expired);
+
+    // accepted requests keep their SLO: p99 (completed only — shed
+    // requests have no latency) stays inside the 20 ms deadline, so
+    // every completion counts toward goodput
+    assert!(rep.completed > 0);
+    assert!(rep.p99_ms <= DEADLINE_MS + 1e-9, "accepted p99 {} ms", rep.p99_ms);
+    assert!((rep.goodput_rps - rep.throughput_rps).abs() < 1e-9);
+
+    // backlog stays below the admission bound (depth 36 + 1 in-flight)
+    assert!(rep.max_queue_depth <= 37, "queue depth {}", rep.max_queue_depth);
+}
+
+#[test]
+fn tier_weighted_fairness_splits_goodput_two_to_one() {
+    // one saturated model, two tenants at identical offered load but
+    // 2:1 weights: weighted-fair dequeue + per-lane admission must
+    // split goodput ~2:1 (each lane is throttled to its own share)
+    let arts = synth_arts();
+    let tier = tier_builder(&arts, &["shared"]).tenant("gold", 2).tenant("free", 1).finish();
+    let gold = steady_trace(&arts, 4000.0, 0.5, 0, 21);
+    let free = steady_trace(&arts, 4000.0, 0.5, 1, 22);
+    let offered = gold.len() + free.len();
+    let rep = tier.simulate(vec![merge(vec![gold, free])], &vsvc(1)).expect("simulate");
+
+    assert_eq!(rep.submitted, offered);
+    assert!(rep.conserved());
+    assert_eq!(rep.per_tenant.len(), 2);
+    let g = &rep.per_tenant[0];
+    let f = &rep.per_tenant[1];
+    assert_eq!(g.name, "gold");
+    assert_eq!(f.name, "free");
+    // 8 000 rps offered into 2 000 rps capacity: both classes shed...
+    assert!(g.shed > 0 && f.shed > 0, "saturation must shed in both classes");
+    assert!(g.completed > 0 && f.completed > 0, "no class may starve");
+    // ...and the served split tracks the 2:1 weights within +/-20%
+    let ratio = g.goodput_rps / f.goodput_rps;
+    assert!(
+        (1.6..=2.4).contains(&ratio),
+        "goodput ratio {ratio:.3} (gold {:.0} rps, free {:.0} rps)",
+        g.goodput_rps,
+        f.goodput_rps
+    );
+}
+
+#[test]
+fn tier_flash_crowd_on_one_model_spares_the_other() {
+    // model A takes a 4x-capacity flash crowd; model B idles at 25% of
+    // its capacity. Shared-process multi-tenancy must not leak A's
+    // overload into B: B sheds nothing and keeps a low p99 (its own
+    // replicas serve their home queue first, stealing only when idle).
+    let arts = synth_arts();
+    let tier = tier_builder(&arts, &["hot", "cold"]).finish();
+    let hot = flash_trace(&arts, 31);
+    let cold = steady_trace(&arts, 500.0, 0.8, 0, 32);
+    let n_cold = cold.len();
+    let rep = tier.simulate(vec![hot, cold], &vsvc(2)).expect("simulate");
+
+    assert!(rep.conserved());
+    assert_eq!(rep.per_model.len(), 2);
+    let (a, b) = (&rep.per_model[0], &rep.per_model[1]);
+    assert_eq!(a.name, "hot");
+    assert!(a.shed > 0, "the hot model must be the one shedding");
+    assert_eq!(b.shed, 0, "flash crowd on 'hot' leaked shedding into 'cold'");
+    assert_eq!(b.completed, n_cold, "'cold' lost requests to 'hot''s overload");
+    // a cold request waits at most one stolen-request service: ~2 ms
+    // worst case, far inside the deadline
+    assert!(b.p99_ms < 5.0, "cold p99 {} ms", b.p99_ms);
+}
+
+#[test]
+fn tier_work_stealing_drains_overload_with_foreign_replicas() {
+    // model A offered 1.5x its capacity, model B completely idle, no
+    // deadline (isolating stealing from shedding): with stealing B's
+    // replicas double the service rate, so the backlog — and tail
+    // latency — collapses versus the no-steal run.
+    let arts = synth_arts();
+    let trace = steady_trace(&arts, 3000.0, 0.3, 0, 41);
+    let n = trace.len();
+    let run = |steal: bool| {
+        let sess = session(&arts);
+        let tier = ServingTier::builder()
+            .model("busy", &arts, &sess, REPLICAS)
+            .model("idle", &arts, &sess, REPLICAS)
+            .steal(steal)
+            .finish();
+        tier.simulate(vec![trace.clone(), Vec::new()], &vsvc(2)).expect("simulate")
+    };
+    let lone = run(false);
+    let helped = run(true);
+    // no deadline: nothing sheds, everything completes either way
+    for rep in [&lone, &helped] {
+        assert_eq!(rep.completed, n);
+        assert_eq!(rep.shed, 0);
+        assert!(rep.conserved());
+    }
+    // 1 000 rps of excess for 0.3 s piles up ~300 requests behind 2
+    // replicas (~150 ms tail); 4 effective replicas never fall behind
+    assert!(
+        helped.p99_ms * 5.0 < lone.p99_ms,
+        "stealing p99 {} ms vs lone p99 {} ms",
+        helped.p99_ms,
+        lone.p99_ms
+    );
+    assert!(helped.busy_s < lone.busy_s);
+}
+
+#[test]
+fn tier_expiry_sheds_exactly_the_requests_that_cannot_finish() {
+    // admission off, 100 requests burst-arrive at t=0 on 1 replica at
+    // 1 ms each with a 20 ms deadline: requests 0..19 dequeue at
+    // 0..19 ms and finish by 20 ms; from 20 ms on, `now + svc` exceeds
+    // the deadline and the remaining 80 shed at dequeue — exactly.
+    let arts = synth_arts();
+    let sess = session(&arts);
+    let tier = ServingTier::builder()
+        .model("m", &arts, &sess, 1)
+        .deadline_ms(DEADLINE_MS)
+        .admission(false)
+        .finish();
+    let burst: Vec<Request> = (0..100)
+        .map(|i| Request { id: i, sample_idx: (i % 32) as usize, arrival_us: 0, tenant: 0 })
+        .collect();
+    let rep = tier.simulate(vec![burst], &vsvc(1)).expect("simulate");
+
+    assert_eq!(rep.submitted, 100);
+    assert_eq!(rep.completed, 20);
+    assert_eq!(rep.shed, 80);
+    assert_eq!(rep.shed_expired, 80, "all shedding must be expiry (admission is off)");
+    assert_eq!(rep.shed_admission, 0);
+    assert!(rep.conserved());
+    // the 20th completion lands exactly on the deadline — still good
+    assert!((rep.p99_ms - 20.0).abs() < 1e-9);
+    assert!((rep.goodput_rps - rep.throughput_rps).abs() < 1e-9);
+}
+
+#[test]
+fn tier_simulation_is_reproducible() {
+    // same seeds, same knobs, back-to-back on one tier: the virtual
+    // clock makes the reports identical — including f64 stats — with
+    // no state leaking between runs (queues are rebuilt per call)
+    let arts = synth_arts();
+    let tier = tier_builder(&arts, &["a", "b"]).tenant("gold", 2).tenant("free", 1).finish();
+    let traces = || {
+        vec![
+            merge(vec![
+                steady_trace(&arts, 2500.0, 0.4, 0, 51),
+                steady_trace(&arts, 2500.0, 0.4, 1, 52),
+            ]),
+            flash_trace(&arts, 53),
+        ]
+    };
+    let r1 = tier.simulate(traces(), &vsvc(2)).expect("simulate");
+    let r2 = tier.simulate(traces(), &vsvc(2)).expect("simulate");
+
+    assert!(r1.shed > 0, "pick an overloaded scenario so the assertion has teeth");
+    assert_eq!(r1.completed, r2.completed);
+    assert_eq!(r1.shed, r2.shed);
+    assert_eq!(r1.shed_admission, r2.shed_admission);
+    assert_eq!(r1.shed_expired, r2.shed_expired);
+    assert_eq!(r1.max_queue_depth, r2.max_queue_depth);
+    assert_eq!(r1.p50_ms, r2.p50_ms);
+    assert_eq!(r1.p99_ms, r2.p99_ms);
+    assert_eq!(r1.goodput_rps, r2.goodput_rps);
+    for (t1, t2) in r1.per_tenant.iter().zip(&r2.per_tenant) {
+        assert_eq!(t1.completed, t2.completed);
+        assert_eq!(t1.shed, t2.shed);
+        assert_eq!(t1.goodput_rps, t2.goodput_rps);
+        assert_eq!(t1.p99_ms, t2.p99_ms);
+    }
+    for (m1, m2) in r1.per_model.iter().zip(&r2.per_model) {
+        assert_eq!(m1.completed, m2.completed);
+        assert_eq!(m1.shed, m2.shed);
+    }
+}
+
+#[test]
+fn tier_simulate_runs_real_inference_for_accuracy() {
+    // execute: true routes every virtual completion through the actual
+    // engine; a dense session over self-consistent labels must be exact
+    let arts = synth_arts();
+    let sess = session(&arts).with_policy(None);
+    let tier = ServingTier::builder().model("dense", &arts, &sess, REPLICAS).finish();
+    let trace = trace(&arts, 61);
+    let n = trace.len();
+    let rep = tier
+        .simulate(vec![trace], &VirtualService { svc_us: vec![SVC_US], execute: true })
+        .expect("simulate");
+    assert_eq!(rep.completed, n);
+    assert!(rep.conserved());
+    assert_eq!(rep.predictor, "none");
+    assert_eq!(rep.accuracy, 1.0, "dense forward must reproduce its own labels");
+}
+
+#[test]
+fn tier_threaded_serve_smoke() {
+    // the real-threads driver: two models, two tenants, no deadline —
+    // everything must complete, conserve, and aggregate per group.
+    // (Latency assertions live in the virtual-clock tests; wall-clock
+    // timing here is smoke-level only.)
+    let arts = synth_arts();
+    let tier = tier_builder(&arts, &["a", "b"])
+        .deadline_ms(0.0)
+        .tenant("gold", 2)
+        .tenant("free", 1)
+        .time_scale(0.1)
+        .finish();
+    let traces = vec![
+        merge(vec![
+            steady_trace(&arts, 400.0, 0.25, 0, 71),
+            steady_trace(&arts, 400.0, 0.25, 1, 72),
+        ]),
+        steady_trace(&arts, 400.0, 0.25, 0, 73),
+    ];
+    let n: usize = traces.iter().map(|t| t.len()).sum();
+    assert!(n > 50, "trace too short: {n}");
+    let rep = tier.serve(traces).expect("serve");
+
+    assert_eq!(rep.submitted, n);
+    assert_eq!(rep.completed, n, "no deadline: the tier must serve everything");
+    assert_eq!((rep.dropped, rep.shed), (0, 0));
+    assert!(rep.conserved());
+    assert_eq!(rep.predictor, "mor");
+    assert!((0.0..=1.0).contains(&rep.accuracy));
+    assert!(rep.busy_s > 0.0);
+    assert_eq!(rep.per_model.len(), 2);
+    assert_eq!(rep.per_tenant.len(), 2);
+    let by_tenant: usize = rep.per_tenant.iter().map(|g| g.completed).sum();
+    let by_model: usize = rep.per_model.iter().map(|g| g.completed).sum();
+    assert_eq!(by_tenant, n, "per-tenant accounting lost a completion");
+    assert_eq!(by_model, n, "per-model accounting lost a completion");
 }

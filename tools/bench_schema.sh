@@ -1,0 +1,91 @@
+#!/usr/bin/env bash
+# Schema + conservation check for BENCH_serving.json.
+#
+# The serving_tier block is the machine-readable contract of the
+# sharded tier (EXPERIMENTS.md §Tier): this script fails CI if the
+# block goes missing, loses its per-tenant/per-model breakdowns, or
+# stops conserving requests (completed + dropped + shed == submitted,
+# per group and in total). Works on both the hand-authored snapshot and
+# regenerated bench output — conservation is exact in either.
+#
+# Usage: bash tools/bench_schema.sh [path/to/BENCH_serving.json]
+set -euo pipefail
+
+FILE="${1:-BENCH_serving.json}"
+
+python3 - "$FILE" <<'EOF'
+import json, sys
+
+path = sys.argv[1]
+errors = []
+
+with open(path) as f:
+    doc = json.load(f)
+
+def need(obj, key, types, where):
+    if key not in obj:
+        errors.append(f"{where}: missing key '{key}'")
+        return None
+    if not isinstance(obj[key], types):
+        errors.append(f"{where}: '{key}' has type {type(obj[key]).__name__}")
+        return None
+    return obj[key]
+
+num = (int, float)
+
+tier = need(doc, "serving_tier", dict, path)
+if tier is not None:
+    where = "serving_tier"
+    for key in ("deadline_ms", "throughput_rps", "goodput_rps", "p50_ms", "p99_ms"):
+        need(tier, key, num, where)
+    for key in ("submitted", "completed", "dropped", "shed",
+                "shed_admission", "shed_expired", "max_queue_depth"):
+        need(tier, key, int, where)
+
+    if not errors:
+        if tier["completed"] + tier["dropped"] + tier["shed"] != tier["submitted"]:
+            errors.append(
+                f"{where}: conservation broken: {tier['completed']} completed + "
+                f"{tier['dropped']} dropped + {tier['shed']} shed != "
+                f"{tier['submitted']} submitted")
+        if tier["shed_admission"] + tier["shed_expired"] != tier["shed"]:
+            errors.append(f"{where}: shed_admission + shed_expired != shed")
+
+    group_keys = ("name", "submitted", "completed", "shed",
+                  "goodput_rps", "p50_ms", "p99_ms")
+    for block in ("per_tenant", "per_model"):
+        groups = need(tier, block, list, where)
+        if groups is None:
+            continue
+        if not groups:
+            errors.append(f"{where}.{block}: empty — the breakdown is the point")
+            continue
+        for i, g in enumerate(groups):
+            gw = f"{where}.{block}[{i}]"
+            if not isinstance(g, dict):
+                errors.append(f"{gw}: not an object")
+                continue
+            for key in group_keys:
+                need(g, key, str if key == "name" else num, gw)
+            if all(k in g for k in ("submitted", "completed", "shed")):
+                if g["completed"] + g["shed"] != g["submitted"]:
+                    errors.append(f"{gw}: completed + shed != submitted")
+        # error drops are not attributed to groups, so group completions
+        # and sheds must sum exactly to the tier totals
+        if all(isinstance(g, dict) for g in groups):
+            for key in ("completed", "shed"):
+                if key in tier and all(key in g for g in groups):
+                    total = sum(g[key] for g in groups)
+                    if total != tier[key]:
+                        errors.append(
+                            f"{where}.{block}: sum of {key} is {total}, "
+                            f"tier total is {tier[key]}")
+
+if errors:
+    print(f"{path}: serving-tier schema check FAILED")
+    for e in errors:
+        print(f"  - {e}")
+    sys.exit(1)
+print(f"{path}: serving-tier schema OK "
+      f"({len(tier['per_tenant'])} tenants, {len(tier['per_model'])} models)")
+EOF
