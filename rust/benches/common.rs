@@ -24,3 +24,19 @@ pub fn load_zoo() -> Option<Vec<Artifacts>> {
 pub fn out_dir() -> String {
     std::env::var("MOR_FIGURES_OUT").unwrap_or_else(|_| "figures_out".to_string())
 }
+
+/// The `_provenance` line every `BENCH_*.json` carries: which ISA tiers
+/// the host detected and dispatched, and the content hash of the tune
+/// profile the run defaulted to — so perf trajectories are only diffed
+/// between like configurations. Returns a full `"_provenance": {...},`
+/// line (two-space indent, trailing comma + newline).
+pub fn provenance_json() -> String {
+    use mor::engine::{isa, tune::TuneProfile};
+    format!(
+        "  \"_provenance\": {{\"isa_detected\": \"{}\", \"isa_active\": \"{}\", \
+         \"tune_profile_hash\": \"{:016x}\"}},\n",
+        isa::detected().name(),
+        isa::active().name(),
+        TuneProfile::host_default().hash()
+    )
+}

@@ -18,6 +18,8 @@ mod common;
 use mor::config::PredictorConfig;
 use mor::engine::dot::{dot_i8, dot_i8_sparse, dot_i8_sparse_sparse};
 use mor::engine::gemm::{self, PrepackedFilters, NR};
+use mor::engine::isa;
+use mor::engine::tune;
 use mor::engine::{crossover, WeightSparsity};
 use mor::model::synth;
 use mor::predictor::strategies::{Strategy, ZeroPredictor};
@@ -98,6 +100,40 @@ fn main() {
             t_dot.min_ns / t_sp.min_ns
         );
     }
+
+    // ---- per-ISA dot kernels (§ISA) -------------------------------------
+    // the same K=576 dot forced down every tier this host can run, at a
+    // density sweep. The dense kernels are density-invariant by design
+    // (the i32-dot contract trades no correctness for sparsity), so flat
+    // rows here are the expected shape — the columns give the sparse-dot
+    // trajectories above a per-ISA dense baseline at matching shapes.
+    // This bench binary is single-threaded, so the process-global
+    // forced-ISA override is safe to sweep here.
+    println!("\nper-ISA dot kernels:");
+    let mut isa_dot: Vec<(&'static str, Vec<(usize, f64)>)> = Vec::new();
+    for tier in isa::available() {
+        isa::force(Some(tier));
+        let mut pts = Vec::new();
+        for density_pct in [10usize, 25, 50, 100] {
+            let xd: Vec<i8> = x
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| if (i * 97) % 100 < density_pct { v } else { 0 })
+                .collect();
+            let t = bench_with(
+                &format!("dot_i8 [{}] (K=576, {density_pct}% dense)", tier.name()),
+                10,
+                0.2,
+                &mut || {
+                    black_box(dot_i8(black_box(&xd), black_box(&w)));
+                },
+            );
+            t.report();
+            pts.push((density_pct, k as f64 / t.min_ns));
+        }
+        isa_dot.push((tier.name(), pts));
+    }
+    isa::force(None);
 
     // ---- scalar GEMV vs tiled GEMM on one dense layer -------------------
     let node = synth::dense_node(k, cout, 11);
@@ -195,6 +231,47 @@ fn main() {
         t_scalar.min_ns / t1,
         t1 / tiled.iter().find(|(n, _)| *n == 4).map(|(_, t)| t.min_ns).unwrap_or(t1)
     );
+
+    // ---- autotuned vs default forward (§Tune) ---------------------------
+    // calibrate this host, freeze the fitted profile into a derived
+    // session, and compare against the compiled-in defaults. Logits are
+    // asserted bit-identical first: the profile is a pure host-perf knob.
+    let tuned_profile = tune::calibrate();
+    println!(
+        "\nautotune on {model_label}: isa {} | input_cutoff {:.3} | weight_cutoff {:.3} \
+         | tile_rows {} | threads {} | hash {:016x}",
+        tuned_profile.isa.name(),
+        tuned_profile.input_cutoff,
+        tuned_profile.weight_cutoff,
+        tuned_profile.tile_rows,
+        tuned_profile.threads,
+        tuned_profile.hash()
+    );
+    let tuned_sess = session.with_opts(RunOpts {
+        threads: tuned_profile.threads.max(1),
+        engine: EngineSel::Tiled,
+        tune: tuned_profile,
+        ..scalar_opts
+    });
+    let default_logits = session
+        .with_opts(RunOpts { threads: 1, engine: EngineSel::Tiled, ..scalar_opts })
+        .run_sample(&xs)
+        .logits;
+    assert_eq!(
+        default_logits,
+        tuned_sess.run_sample(&xs).logits,
+        "tune profile changed logits — the i32-dot contract is broken"
+    );
+    let t_tuned = bench_with(
+        &format!("{model_label} MoR fwd, autotuned profile"),
+        1,
+        0.5,
+        &mut || {
+            black_box(tuned_sess.run_sample(&xs));
+        },
+    );
+    t_tuned.report();
+    println!("    vs 1-thread default: {:.2}x", t1 / t_tuned.min_ns);
 
     // ---- input sparsity (§Sparse) ----------------------------------------
     // same forward, three kernel modes; results are bit-identical, so the
@@ -405,10 +482,39 @@ fn main() {
     let mut js = String::new();
     js.push_str("{\n");
     js.push_str("  \"bench\": \"perf_hotpaths\",\n");
+    js.push_str(&common::provenance_json());
     js.push_str(&format!(
         "  \"threads_available\": {},\n",
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
     ));
+    // per-ISA dot throughput plus what the calibrated profile buys on
+    // the full forward — the cross-host kernel trajectory
+    js.push_str("  \"kernels\": {\n");
+    js.push_str("    \"dot_gmacs\": {");
+    for (i, (tier, pts)) in isa_dot.iter().enumerate() {
+        if i > 0 {
+            js.push_str(", ");
+        }
+        js.push_str(&format!("\"{tier}\": {{"));
+        for (j, (d, g)) in pts.iter().enumerate() {
+            if j > 0 {
+                js.push_str(", ");
+            }
+            js.push_str(&format!("\"{d}\": {g:.4}"));
+        }
+        js.push('}');
+    }
+    js.push_str("},\n");
+    js.push_str(&format!(
+        "    \"tuned_profile_hash\": \"{:016x}\",\n",
+        tuned_profile.hash()
+    ));
+    js.push_str(&format!(
+        "    \"forward_ms\": {{\"default\": {:.4}, \"tuned\": {:.4}}}\n",
+        t1 / 1e6,
+        t_tuned.min_ns / 1e6
+    ));
+    js.push_str("  },\n");
     js.push_str(&format!("  \"dot_i8_gmacs\": {dot_gmacs:.4},\n"));
     js.push_str(&format!("  \"packed_bin_dot_gops\": {bin_gops:.4},\n"));
     js.push_str(&format!("  \"gemv_scalar_gmacs\": {gemv_gmacs:.4},\n"));
@@ -639,6 +745,7 @@ fn strategy_overhead_bench(
     let mut js = String::new();
     js.push_str("{\n");
     js.push_str("  \"bench\": \"perf_predictors\",\n");
+    js.push_str(&common::provenance_json());
     js.push_str(&format!("  \"model\": \"{model_label}\",\n"));
     js.push_str(&format!(
         "  \"threads_available\": {},\n",

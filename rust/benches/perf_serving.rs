@@ -106,6 +106,7 @@ fn main() {
     let mut js = String::new();
     js.push_str("{\n");
     js.push_str("  \"bench\": \"perf_serving\",\n");
+    js.push_str(&common::provenance_json());
     js.push_str(&format!("  \"model\": \"{label}\",\n"));
     js.push_str(&format!("  \"predictor\": \"{}\",\n", session.predictor_name()));
     js.push_str(&format!("  \"requests_per_config\": {REQUESTS_PER_CONFIG},\n"));

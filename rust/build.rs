@@ -1,0 +1,28 @@
+//! Build probe: AVX-512 intrinsics (`_mm512_dpbusd_epi32` and friends)
+//! stabilized in rustc 1.89. The crate's MSRV is 1.77, so the VNNI
+//! kernels are compiled only when the active toolchain is new enough —
+//! `cfg(mor_avx512)` gates them, and the runtime dispatch
+//! (`engine::isa`) tops out at AVX2 on older compilers. A probe failure
+//! (unparseable `rustc --version`) conservatively disables the cfg.
+
+use std::process::Command;
+
+fn rustc_minor() -> Option<u32> {
+    let rustc = std::env::var("RUSTC").unwrap_or_else(|_| "rustc".to_string());
+    let out = Command::new(rustc).arg("--version").output().ok()?;
+    let text = String::from_utf8(out.stdout).ok()?;
+    // "rustc 1.89.0 (abc 2025-08-01)" → 89; tolerate channel suffixes
+    let ver = text.split_whitespace().nth(1)?;
+    let minor = ver.split('.').nth(1)?;
+    let minor = minor.split(|c: char| !c.is_ascii_digit()).next()?;
+    minor.parse().ok()
+}
+
+fn main() {
+    println!("cargo:rerun-if-changed=build.rs");
+    // always declare the cfg so -D warnings builds accept it either way
+    println!("cargo:rustc-check-cfg=cfg(mor_avx512)");
+    if rustc_minor().is_some_and(|m| m >= 89) {
+        println!("cargo:rustc-cfg=mor_avx512");
+    }
+}

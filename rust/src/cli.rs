@@ -19,6 +19,7 @@ use std::collections::BTreeMap;
 /// valueless `info --config` form still parses via lookahead).
 pub const BOOLEAN_FLAGS: &[&str] = &[
     "all",
+    "autotune",
     "json",
     "no-binary",
     "no-clusters",
@@ -131,6 +132,14 @@ COMMANDS:
                                        a numeric threshold t magnitude-prunes
                                        weights below t and reports the accuracy
                                        delta, see EXPERIMENTS.md §Weights)
+                 --autotune            microbenchmark-calibrate the kernel
+                                       crossovers / tile height / thread
+                                       fan-out at session build and freeze
+                                       them into the plan (bit-identical;
+                                       see EXPERIMENTS.md §Tune)
+                 --tune-profile <f>    load a saved tune profile (with
+                                       --autotune: calibrate, then save
+                                       the measured profile to <f>)
                  --samples <n>         cap evaluated samples
     simulate   Cycle-level accelerator simulation (baseline vs MoR)
                  --model/--artifacts/--predictor/--threshold as above
@@ -184,6 +193,9 @@ COMMANDS:
                  --weight-sparsity <m> weight-zero lane elision: off|exact|<t>
                  --no-predictor        serve the dense baseline (alias for
                                        --predictor none)
+                 --autotune            calibrate kernel crossovers at build
+                 --tune-profile <f>    load (or with --autotune, save) a
+                                       tune profile
                  --runtime pjrt|engine execution backend (default: engine;
                                        pjrt needs --features pjrt at build)
     lint       Statically verify compiled ModelPlans (slot liveness,
@@ -203,11 +215,23 @@ COMMANDS:
                                        predictor-threshold soundness
                                        (diagnostics num.*, see
                                        EXPERIMENTS.md §Numeric)
+                 --acc-bits <n>        with --numeric: claim an <n>-bit
+                                       accumulator; layers whose proven
+                                       bound needs more report num.width
+                                       (the VNNI offset bound reports
+                                       num.vnni — it is wider than the
+                                       true dot's; default: 32)
+                 --tune-profile <f>    audit every plan's frozen kernel
+                                       decisions against the saved
+                                       profile instead of its own
                  --json                machine-readable findings on stdout
                exit status 1 if any error-severity finding is reported
     predictors List the available zero-predictor strategies
-    info       Print artifact + configuration info
+    info       Print artifact + configuration info, detected CPU ISA
+               tiers, the active kernel set and the tune profile
                  --config              print Table 1
+                 --tune-profile <f>    report a saved profile (+ hash)
+                                       instead of the host default
                  --artifacts <dir>
     help       Show this help
 ";
@@ -241,6 +265,18 @@ mod tests {
         let a = parse(&["figures", "fig6", "fig9", "--out", "x"]);
         assert_eq!(a.positional, vec!["fig6", "fig9"]);
         assert_eq!(a.opt("out"), Some("x"));
+    }
+
+    #[test]
+    fn autotune_is_boolean_tune_profile_takes_a_value() {
+        let a = parse(&["run", "--autotune", "--tune-profile", "p.tune", "--acc-bits", "24"]);
+        assert!(a.flag("autotune"));
+        assert_eq!(a.opt("tune-profile"), Some("p.tune"));
+        assert_eq!(a.opt_usize("acc-bits", 32).unwrap(), 24);
+        // --autotune never swallows a following positional
+        let a = parse(&["serve", "--autotune", "tds"]);
+        assert!(a.flag("autotune"));
+        assert_eq!(a.positional, vec!["tds"]);
     }
 
     #[test]

@@ -175,6 +175,12 @@ pub struct EngineConfig {
     /// session build; changes results, accuracy is reported). CLI
     /// `--weight-sparsity`.
     pub weight_sparsity: WeightSparsity,
+    /// Run the kernel-calibration microbenchmark pass at session build
+    /// and freeze its measured crossovers / tile height / thread fan-out
+    /// into the plan. TOML key `engine.autotune`, CLI `--autotune`.
+    /// Result-neutral (kernel selection only); off by default so plans
+    /// stay deterministic without a saved profile.
+    pub autotune: bool,
 }
 
 /// Top-level config bundle.
@@ -277,7 +283,11 @@ impl Config {
                     d.predictor.margin_sigmas as f64,
                 ) as f32,
             },
-            engine: EngineConfig { input_sparsity, weight_sparsity },
+            engine: EngineConfig {
+                input_sparsity,
+                weight_sparsity,
+                autotune: t.bool_or("engine.autotune", d.engine.autotune),
+            },
         })
     }
 
@@ -414,6 +424,15 @@ mod tests {
             let t = Toml::parse(bad).unwrap();
             assert!(Config::from_toml(&t).is_err(), "{bad} should be rejected");
         }
+    }
+
+    #[test]
+    fn toml_engine_autotune_key() {
+        assert!(!Config::default().engine.autotune);
+        let t = Toml::parse("[engine]\nautotune = true\n").unwrap();
+        assert!(Config::from_toml(&t).unwrap().engine.autotune);
+        let t = Toml::parse("[engine]\nautotune = false\n").unwrap();
+        assert!(!Config::from_toml(&t).unwrap().engine.autotune);
     }
 
     #[test]

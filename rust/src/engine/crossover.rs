@@ -41,12 +41,17 @@ pub const WEIGHT_CUTOFF_AVX2: f32 = INPUT_CUTOFF_AVX2;
 /// ... and against the scalar dense fallback.
 pub const WEIGHT_CUTOFF_SCALAR: f32 = INPUT_CUTOFF_SCALAR;
 
-/// The input-side crossover for this host (AVX2-detected at runtime):
-/// a tile row with `nnz/k_len` below this should take the
-/// compressed-lane kernel under `InputSparsity::Auto`.
+/// The input-side crossover for this host (from the active ISA tier —
+/// see [`super::isa`]): a tile row with `nnz/k_len` below this should
+/// take the compressed-lane kernel under `InputSparsity::Auto`.
+///
+/// These are the *compiled-in defaults* — what a [`super::tune::TuneProfile`]
+/// starts from, and what plans compiled without autotuning freeze. Any
+/// SIMD tier (NEON, AVX2, VNNI) takes the SIMD cutoff: the dense kernel
+/// it must beat retires ≥ 16 MACs per instruction on all of them.
 #[inline]
 pub fn input_sparse_cutoff() -> f32 {
-    if avx2() {
+    if simd() {
         INPUT_CUTOFF_AVX2
     } else {
         INPUT_CUTOFF_SCALAR
@@ -59,23 +64,17 @@ pub fn input_sparse_cutoff() -> f32 {
 /// `Threshold`).
 #[inline]
 pub fn weight_sparse_cutoff() -> f32 {
-    if avx2() {
+    if simd() {
         WEIGHT_CUTOFF_AVX2
     } else {
         WEIGHT_CUTOFF_SCALAR
     }
 }
 
+/// Whether the active dispatch tier has a SIMD dense kernel to beat.
 #[inline]
-fn avx2() -> bool {
-    #[cfg(target_arch = "x86_64")]
-    {
-        super::dot::avx2_enabled()
-    }
-    #[cfg(not(target_arch = "x86_64"))]
-    {
-        false
-    }
+fn simd() -> bool {
+    super::isa::active() > super::isa::Isa::Scalar
 }
 
 #[cfg(test)]

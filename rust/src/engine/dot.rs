@@ -15,6 +15,16 @@
 //! compressed filter meets a compressed patch (EXPERIMENTS.md
 //! §Weights).
 
+/// Largest dot length the VNNI offset-trick kernel accepts. The
+/// unsigned decomposition accumulates `Σ (x+128)·w`, whose magnitude is
+/// bounded by `Σ|w| · 255 ≤ 128 · 255 · K`; at `K = 2^16` that is
+/// 2,139,095,040 < 2³¹ − 1, so the offset accumulator provably cannot
+/// overflow for any input at or below this length — no per-model
+/// analysis needed. Longer dots (none exist in practice: the structural
+/// ceiling is K ≤ 2^16) fall back to AVX2. `mor lint --numeric` reports
+/// the same bound per layer (`num.vnni`, [`crate::plan::ranges`]).
+pub const VNNI_K_MAX: usize = 1 << 16;
+
 /// int8 dot product with int32 accumulation.
 ///
 /// The i32 accumulator cannot overflow: `mor lint --numeric`
@@ -22,7 +32,13 @@
 /// per filter for every compiled plan (diagnostic `num.acc`), and even
 /// the structural ceiling K ≤ 2^16 gives `|Σ x·w| ≤ 2^16 · 128² = 2³⁰`.
 /// The bound dominates every partial sum under any accumulation order,
-/// so it covers the scalar chunks and the AVX2 lane sums alike.
+/// so it covers the scalar chunks and the AVX2 lane sums alike. The
+/// VNNI path accumulates in an offset domain with its own (wider)
+/// bound — see [`VNNI_K_MAX`].
+///
+/// Dispatch is by [`super::isa::active`] (detection ∧ `MOR_ISA` ∧
+/// [`super::isa::force`]); every tier is bit-identical, so the choice
+/// is invisible to everything but the clock.
 ///
 /// §Perf: products are formed in i16 (i8·i8 fits: |p| ≤ 16384) and widened
 /// to i32 — this is the shape LLVM turns into `pmaddwd`-style SIMD with
@@ -31,6 +47,13 @@
 #[inline]
 pub fn dot_i8(x: &[i8], w: &[i8]) -> i32 {
     debug_assert_eq!(x.len(), w.len());
+    #[cfg(all(target_arch = "x86_64", mor_avx512))]
+    {
+        if super::isa::vnni_enabled() && x.len() <= VNNI_K_MAX {
+            // SAFETY: features checked at runtime; slices have equal length.
+            return unsafe { dot_i8_vnni(x, w) };
+        }
+    }
     #[cfg(target_arch = "x86_64")]
     {
         if avx2_enabled() {
@@ -38,27 +61,20 @@ pub fn dot_i8(x: &[i8], w: &[i8]) -> i32 {
             return unsafe { dot_i8_avx2(x, w) };
         }
     }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if super::isa::neon_enabled() {
+            // SAFETY: NEON is baseline on aarch64; slices have equal length.
+            return unsafe { dot_i8_neon(x, w) };
+        }
+    }
     dot_i8_scalar(x, w)
 }
 
-/// Cached CPU-feature dispatch: the `is_x86_feature_detected!` check is
-/// hoisted out of the hot path into a `OnceLock` so per-dot calls pay one
-/// relaxed atomic load instead of the detection macro's lookup.
-///
-/// Under Miri the intrinsics are unsupported, so the dispatch reports
-/// AVX2 absent and every caller (including the crossover cutoffs, which
-/// branch on this) takes the scalar path — that is what makes the
-/// property suites Miri-runnable.
-#[cfg(target_arch = "x86_64")]
-#[inline]
-pub fn avx2_enabled() -> bool {
-    if cfg!(miri) {
-        return false;
-    }
-    use std::sync::OnceLock;
-    static AVX2: OnceLock<bool> = OnceLock::new();
-    *AVX2.get_or_init(|| std::arch::is_x86_feature_detected!("avx2"))
-}
+/// AVX2 dispatch predicate — re-exported from the single detection/
+/// override point ([`super::isa`]); kept here because this is where the
+/// historical call sites import it from.
+pub use super::isa::avx2_enabled;
 
 /// Portable fallback.
 #[inline]
@@ -125,6 +141,107 @@ unsafe fn dot_i8_avx2(x: &[i8], w: &[i8]) -> i32 {
         let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b01_00_11_10));
         let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b00_00_00_01));
         let mut total = _mm_cvtsi128_si32(s);
+        while i < n {
+            total += (x[i] as i16 * w[i] as i16) as i32;
+            i += 1;
+        }
+        total
+    }
+}
+
+/// AVX-512 VNNI path: `vpdpbusd` multiplies **unsigned** bytes by signed
+/// bytes, so the signed activations are lifted into the unsigned domain
+/// with the offset trick — `x ⊕ 0x80` reinterpreted as u8 equals
+/// `x + 128`, giving
+///
+/// ```text
+/// Σ (x+128)·w  =  Σ x·w  +  128·Σ w
+/// ```
+///
+/// and the true dot is recovered by subtracting `128·Σw`, where `Σw` is
+/// accumulated in the same loop by a second `vpdpbusd` against an
+/// all-ones unsigned vector. Exact by construction: both accumulations
+/// are exact i32 sums (offset sum bounded by `128·255·K < 2³¹` for
+/// `K ≤` [`VNNI_K_MAX`], which the dispatcher enforces; `128·|Σw| ≤
+/// 2¹⁴·K ≤ 2³⁰`), and the algebra above is an identity over ℤ.
+///
+/// # Safety
+///
+/// * The CPU must support AVX-512 F+VNNI — callers dispatch through
+///   [`super::isa::vnni_enabled`], never directly.
+/// * `x` and `w` must have equal length, at most [`VNNI_K_MAX`] (the
+///   unaligned 64-byte loads index both slices by the same `i`, bounded
+///   by `x.len()`; the length cap is the overflow proof above).
+#[cfg(all(target_arch = "x86_64", mor_avx512))]
+#[target_feature(enable = "avx512f,avx512vnni")]
+unsafe fn dot_i8_vnni(x: &[i8], w: &[i8]) -> i32 {
+    use std::arch::x86_64::*;
+    debug_assert_eq!(x.len(), w.len());
+    debug_assert!(x.len() <= VNNI_K_MAX);
+    let n = x.len();
+    // SAFETY: AVX-512 F+VNNI available per the fn contract. The only
+    // memory operations are the `_mm512_loadu_si512` (unaligned) loads,
+    // and `i + 64 <= n == x.len() == w.len()` bounds both inside their
+    // slices; the tail loop is safe slice indexing.
+    unsafe {
+        let sign = _mm512_set1_epi8(-128i8); // 0x80: XOR flips the sign bit
+        let ones = _mm512_set1_epi8(1);
+        let mut acc = _mm512_setzero_si512();
+        let mut wsum = _mm512_setzero_si512();
+        let mut i = 0;
+        while i + 64 <= n {
+            let xv = _mm512_loadu_si512(x.as_ptr().add(i) as *const _);
+            let wv = _mm512_loadu_si512(w.as_ptr().add(i) as *const _);
+            // (x ⊕ 0x80) as u8 == x + 128
+            acc = _mm512_dpbusd_epi32(acc, _mm512_xor_si512(xv, sign), wv);
+            wsum = _mm512_dpbusd_epi32(wsum, ones, wv);
+            i += 64;
+        }
+        let mut total =
+            _mm512_reduce_add_epi32(acc) - 128 * _mm512_reduce_add_epi32(wsum);
+        while i < n {
+            total += (x[i] as i16 * w[i] as i16) as i32;
+            i += 1;
+        }
+        total
+    }
+}
+
+/// NEON path: `vmull_s8` widens i8×i8 products to i16 exactly
+/// (|p| ≤ 16384), `vpadalq_s16` pairwise-widens and accumulates them
+/// into four i32 lanes. Exact: the pairwise add happens *after*
+/// widening to i32, so no i16 partial sum is ever formed, and the lane
+/// accumulators inherit the `Σ|w| · max|x|` bound (`num.acc`) that
+/// dominates every lane subset.
+///
+/// # Safety
+///
+/// * NEON must be available — guaranteed by the aarch64 baseline;
+///   callers dispatch through [`super::isa::neon_enabled`].
+/// * `x` and `w` must have equal length (the 16-byte `vld1q_s8` loads
+///   index both slices by the same `i`, bounded by `x.len()`).
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn dot_i8_neon(x: &[i8], w: &[i8]) -> i32 {
+    use std::arch::aarch64::*;
+    debug_assert_eq!(x.len(), w.len());
+    let n = x.len();
+    // SAFETY: NEON is baseline on aarch64. The only memory operations
+    // are the `vld1q_s8` loads, and `i + 16 <= n == x.len() == w.len()`
+    // bounds both inside their slices; the tail loop is safe indexing.
+    unsafe {
+        let mut acc = vdupq_n_s32(0);
+        let mut i = 0;
+        while i + 16 <= n {
+            let xv = vld1q_s8(x.as_ptr().add(i));
+            let wv = vld1q_s8(w.as_ptr().add(i));
+            let lo = vmull_s8(vget_low_s8(xv), vget_low_s8(wv));
+            let hi = vmull_s8(vget_high_s8(xv), vget_high_s8(wv));
+            acc = vpadalq_s16(acc, lo);
+            acc = vpadalq_s16(acc, hi);
+            i += 16;
+        }
+        let mut total = vaddvq_s32(acc);
         while i < n {
             total += (x[i] as i16 * w[i] as i16) as i32;
             i += 1;
@@ -281,6 +398,34 @@ mod tests {
         let w = vec![-128i8; k];
         assert_eq!(dot_i8(&x, &w), 1 << 30);
         assert_eq!(dot_i8_scalar(&x, &w), 1 << 30);
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "2^16-lane dot is too slow interpreted")]
+    fn dot_boundary_k_max_vnni_offset_worst_case() {
+        // worst case for the VNNI offset accumulator: x = +127 (255 in
+        // the unsigned domain) against w = −128 at the K = 2^16 ceiling
+        // puts the offset sum at −2,139,095,040 — ~8.4M inside i32 —
+        // and the 128·Σw correction must restore the true dot exactly.
+        // Runs on every host (dispatch picks the best tier; the bound
+        // argument is only *needed* on VNNI ones).
+        let k = 1usize << 16;
+        let x = vec![127i8; k];
+        let w = vec![-128i8; k];
+        let want = 127 * -128 * k as i32;
+        assert_eq!(dot_i8(&x, &w), want);
+        assert_eq!(dot_i8_scalar(&x, &w), want);
+    }
+
+    #[test]
+    fn dot_tail_lanes_cross_every_simd_width() {
+        // lengths straddling the 16-lane (AVX2/NEON) and 64-lane (VNNI)
+        // chunk widths force the scalar tails of each kernel
+        for n in [0usize, 1, 15, 16, 17, 63, 64, 65, 127, 128, 129] {
+            let x: Vec<i8> = (0..n).map(|i| (i as i8).wrapping_mul(37)).collect();
+            let w: Vec<i8> = (0..n).map(|i| (i as i8).wrapping_mul(91).wrapping_sub(3)).collect();
+            assert_eq!(dot_i8(&x, &w) as i64, dot_ref(&x, &w), "n={n}");
+        }
     }
 
     /// Compress `x` into the (idx, val) nonzero-lane lists the sparse

@@ -502,6 +502,23 @@ impl PatchTile {
 pub fn dot_block(patch: &[i8], pf: &PrepackedFilters, f0: usize, nf: usize, out: &mut [i32; NR]) {
     debug_assert!(nf <= NR && f0 + nf <= pf.cout);
     debug_assert_eq!(patch.len(), pf.k_pad);
+    #[cfg(all(target_arch = "x86_64", mor_avx512))]
+    {
+        if super::isa::vnni_enabled() && pf.k_pad <= dot::VNNI_K_MAX {
+            let mut ptrs = [std::ptr::null::<i8>(); NR];
+            let mut sums = [0i32; NR];
+            for j in 0..nf {
+                ptrs[j] = pf.filter(f0 + j).as_ptr();
+                let (pos, neg) = pf.filter_sums(f0 + j);
+                sums[j] = (pos + neg) as i32;
+            }
+            // SAFETY: features checked; every pointer addresses k_pad
+            // bytes and patch.len() == k_pad (multiples of K_ALIGN);
+            // k_pad ≤ VNNI_K_MAX is the offset-overflow bound.
+            unsafe { dot_block_vnni(patch.as_ptr(), &ptrs, &sums, nf, pf.k_pad, out) };
+            return;
+        }
+    }
     #[cfg(target_arch = "x86_64")]
     {
         if dot::avx2_enabled() {
@@ -515,8 +532,10 @@ pub fn dot_block(patch: &[i8], pf: &PrepackedFilters, f0: usize, nf: usize, out:
             return;
         }
     }
+    // Portable fallback — `dot_i8` re-dispatches per the active ISA, so
+    // this is the NEON path on aarch64 and exact scalar elsewhere.
     for (j, o) in out.iter_mut().enumerate().take(nf) {
-        *o = dot::dot_i8_scalar(patch, pf.filter(f0 + j));
+        *o = dot::dot_i8(patch, pf.filter(f0 + j));
     }
 }
 
@@ -526,6 +545,21 @@ pub fn dot_block(patch: &[i8], pf: &PrepackedFilters, f0: usize, nf: usize, out:
 pub fn dot_block_indexed(patch: &[i8], pf: &PrepackedFilters, idx: &[usize], out: &mut [i32; NR]) {
     debug_assert!(idx.len() <= NR);
     debug_assert_eq!(patch.len(), pf.k_pad);
+    #[cfg(all(target_arch = "x86_64", mor_avx512))]
+    {
+        if super::isa::vnni_enabled() && pf.k_pad <= dot::VNNI_K_MAX {
+            let mut ptrs = [std::ptr::null::<i8>(); NR];
+            let mut sums = [0i32; NR];
+            for (j, &f) in idx.iter().enumerate() {
+                ptrs[j] = pf.filter(f).as_ptr();
+                let (pos, neg) = pf.filter_sums(f);
+                sums[j] = (pos + neg) as i32;
+            }
+            // SAFETY: as in dot_block.
+            unsafe { dot_block_vnni(patch.as_ptr(), &ptrs, &sums, idx.len(), pf.k_pad, out) };
+            return;
+        }
+    }
     #[cfg(target_arch = "x86_64")]
     {
         if dot::avx2_enabled() {
@@ -538,8 +572,9 @@ pub fn dot_block_indexed(patch: &[i8], pf: &PrepackedFilters, idx: &[usize], out
             return;
         }
     }
+    // Portable fallback — NEON via `dot_i8` dispatch on aarch64.
     for (o, &f) in out.iter_mut().zip(idx) {
-        *o = dot::dot_i8_scalar(patch, pf.filter(f));
+        *o = dot::dot_i8(patch, pf.filter(f));
     }
 }
 
@@ -720,6 +755,78 @@ unsafe fn dot_block_avx2(
         }
         for j in 0..nf {
             out[j] = hsum_epi32(acc[j]);
+        }
+    }
+}
+
+/// AVX-512 VNNI multi-filter micro-kernel: one offset-lifted patch load
+/// (`x ⊕ 0x80`, see `dot::dot_i8_vnni`) feeds up to NR `vpdpbusd`
+/// accumulator chains, 64 lanes per step with a masked tail. The true
+/// dots are recovered per filter by subtracting `128·Σw`, which the
+/// prepack already knows ([`PrepackedFilters::filter_sums`]) — the
+/// correction is free here, unlike the free-function kernel which must
+/// accumulate `Σw` on the fly.
+///
+/// Exact: the offset accumulation is an exact i32 sum (bounded by
+/// `128·255·k_pad < 2³¹` for `k_pad ≤` [`dot::VNNI_K_MAX`], which the
+/// dispatchers enforce), `Σ (x+128)·w − 128·Σw = Σ x·w` is an identity
+/// over ℤ, and the masked tail zeroes both operand tails so padding
+/// contributes nothing to either sum.
+///
+/// # Safety
+///
+/// * The CPU must support AVX-512 F+BW+VNNI — callers dispatch through
+///   [`super::isa::vnni_enabled`], never directly.
+/// * `patch` must address at least `k_pad` readable bytes.
+/// * `filt[..nf]` must each address at least `k_pad` readable bytes
+///   (`nf <= NR`; the remaining entries may dangle — never read).
+/// * `sums[j]` must be `Σw` over filter `j`'s `k_pad` bytes (zero
+///   padding contributes 0, so the prepack's per-filter sum is it).
+/// * `k_pad` must be a multiple of [`K_ALIGN`] and at most
+///   [`dot::VNNI_K_MAX`] (the offset-overflow bound above).
+#[cfg(all(target_arch = "x86_64", mor_avx512))]
+#[target_feature(enable = "avx512f,avx512bw,avx512vnni")]
+unsafe fn dot_block_vnni(
+    patch: *const i8,
+    filt: &[*const i8; NR],
+    sums: &[i32; NR],
+    nf: usize,
+    k_pad: usize,
+    out: &mut [i32; NR],
+) {
+    use std::arch::x86_64::*;
+    debug_assert!(k_pad % K_ALIGN == 0 && k_pad <= dot::VNNI_K_MAX);
+    // SAFETY: AVX-512 F+BW+VNNI available and every pointer addresses
+    // k_pad bytes per the fn contract; `k + 64 <= k_pad` bounds the full
+    // loads, the tail load's mask covers exactly the remaining
+    // `k_pad - k < 64` bytes (masked-off lanes are not read), and only
+    // filt[..nf] (the valid entries) are read.
+    unsafe {
+        let sign = _mm512_set1_epi8(-128i8); // 0x80: XOR flips the sign bit
+        let mut acc = [_mm512_setzero_si512(); NR];
+        let mut k = 0usize;
+        while k + 64 <= k_pad {
+            let xv = _mm512_loadu_si512(patch.add(k) as *const _);
+            let xu = _mm512_xor_si512(xv, sign);
+            for j in 0..nf {
+                let wv = _mm512_loadu_si512(filt[j].add(k) as *const _);
+                acc[j] = _mm512_dpbusd_epi32(acc[j], xu, wv);
+            }
+            k += 64;
+        }
+        if k < k_pad {
+            let rem = k_pad - k; // in (0, 64), multiple of K_ALIGN
+            let m: __mmask64 = (1u64 << rem) - 1;
+            let xu = _mm512_xor_si512(_mm512_maskz_loadu_epi8(m, patch.add(k)), sign);
+            // masked-off patch lanes become 128 after the offset, but the
+            // matching filter lanes are masked to 0, so they contribute 0
+            for j in 0..nf {
+                let wv = _mm512_maskz_loadu_epi8(m, filt[j].add(k));
+                acc[j] = _mm512_dpbusd_epi32(acc[j], xu, wv);
+            }
+        }
+        for j in 0..nf {
+            out[j] = _mm512_reduce_add_epi32(acc[j]) - 128 * sums[j];
         }
     }
 }

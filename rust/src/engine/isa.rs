@@ -1,0 +1,251 @@
+//! CPU ISA detection and dispatch override — the single
+//! detection/override point for every kernel in the engine.
+//!
+//! Every SIMD dispatch question (`avx2_enabled`, `vnni_enabled`,
+//! `neon_enabled`) funnels through [`active`], which combines three
+//! inputs, cached once per process:
+//!
+//! 1. **Detection** ([`detected`], `OnceLock`): `is_x86_feature_detected!`
+//!    on x86-64 (AVX-512 VNNI requires the `mor_avx512` build-probe cfg —
+//!    rustc ≥ 1.89 stabilized the intrinsics; older toolchains top out at
+//!    AVX2), baseline NEON on aarch64, scalar elsewhere. Under Miri the
+//!    intrinsics are unsupported, so detection reports [`Isa::Scalar`]
+//!    and every kernel takes the portable path — that is what keeps the
+//!    property suites Miri-runnable.
+//! 2. **Environment override** (`MOR_ISA=scalar|avx2|avx512vnni|neon`,
+//!    read once): caps dispatch at the named tier. Used by the CI
+//!    forced-ISA matrix to run the whole test suite per tier.
+//! 3. **Programmatic override** ([`force`]): same cap, settable from
+//!    tests. It is process-global — tests that use it serialize on a
+//!    mutex (see `tests/isa_equivalence.rs`).
+//!
+//! Overrides can only *lower* the tier (`min` with detection): forcing
+//! AVX2 on a scalar-only host still runs scalar, so an override can
+//! never select an unsupported instruction. All tiers are bit-identical
+//! by the engine's i32-dot contract, so the override is purely a
+//! dispatch knob — the equivalence suites double as the cross-ISA
+//! oracle.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// A dispatchable kernel tier, ordered from most portable to fastest.
+/// The numeric order is the override `min` lattice: NEON sits between
+/// scalar and the x86 tiers but never coexists with them at runtime
+/// (an architecture has one SIMD family).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Isa {
+    /// Portable integer loops — the bit-exactness oracle everywhere.
+    Scalar = 0,
+    /// aarch64 NEON (`smull`/`vpadal` widening dot) — baseline on every
+    /// aarch64 target, so detection is compile-time.
+    Neon = 1,
+    /// x86-64 AVX2 (`vpmovsxbw` + `vpmaddwd`).
+    Avx2 = 2,
+    /// x86-64 AVX-512 VNNI (`vpdpbusd`, unsigned×signed with the
+    /// `x ⊕ 0x80` offset trick — see `dot::dot_i8_vnni`). Requires the
+    /// `mor_avx512` cfg from the build probe *and* runtime
+    /// avx512f/avx512bw/avx512vnni (BW for the masked-tail byte loads).
+    Avx512Vnni = 3,
+}
+
+impl Isa {
+    /// Every tier, in lattice order.
+    pub const ALL: [Isa; 4] = [Isa::Scalar, Isa::Neon, Isa::Avx2, Isa::Avx512Vnni];
+
+    /// Stable identifier used by `MOR_ISA`, bench provenance and
+    /// `TuneProfile` serialization.
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Neon => "neon",
+            Isa::Avx2 => "avx2",
+            Isa::Avx512Vnni => "avx512vnni",
+        }
+    }
+
+    /// Parse a `MOR_ISA` / profile identifier (`vnni` is accepted as an
+    /// alias for `avx512vnni`).
+    pub fn parse(name: &str) -> Option<Isa> {
+        match name {
+            "scalar" => Some(Isa::Scalar),
+            "neon" => Some(Isa::Neon),
+            "avx2" => Some(Isa::Avx2),
+            "avx512vnni" | "vnni" => Some(Isa::Avx512Vnni),
+            _ => None,
+        }
+    }
+
+    fn from_rank(rank: u8) -> Isa {
+        match rank {
+            0 => Isa::Scalar,
+            1 => Isa::Neon,
+            2 => Isa::Avx2,
+            _ => Isa::Avx512Vnni,
+        }
+    }
+}
+
+/// The best tier this host supports (cached; Miri always reports
+/// scalar — the intrinsics are uninterpretable there).
+pub fn detected() -> Isa {
+    if cfg!(miri) {
+        return Isa::Scalar;
+    }
+    static DETECTED: OnceLock<Isa> = OnceLock::new();
+    *DETECTED.get_or_init(detect)
+}
+
+fn detect() -> Isa {
+    #[cfg(target_arch = "x86_64")]
+    {
+        #[cfg(mor_avx512)]
+        {
+            if std::arch::is_x86_feature_detected!("avx512f")
+                && std::arch::is_x86_feature_detected!("avx512bw")
+                && std::arch::is_x86_feature_detected!("avx512vnni")
+            {
+                return Isa::Avx512Vnni;
+            }
+        }
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return Isa::Avx2;
+        }
+        Isa::Scalar
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        // NEON is part of the aarch64 baseline — no runtime probe needed.
+        Isa::Neon
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        Isa::Scalar
+    }
+}
+
+/// Programmatic override slot: 0..=3 = forced rank, `UNSET` = none.
+static FORCED: AtomicU8 = AtomicU8::new(UNSET);
+const UNSET: u8 = u8::MAX;
+
+/// The `MOR_ISA` environment cap, read once. Invalid values warn to
+/// stderr and are ignored rather than silently selecting a tier.
+fn env_cap() -> Option<Isa> {
+    static ENV: OnceLock<Option<Isa>> = OnceLock::new();
+    *ENV.get_or_init(|| match std::env::var("MOR_ISA") {
+        Ok(v) => {
+            let isa = Isa::parse(&v);
+            if isa.is_none() {
+                eprintln!(
+                    "warning: MOR_ISA='{v}' not recognized (expected scalar|neon|avx2|avx512vnni); ignoring"
+                );
+            }
+            isa
+        }
+        Err(_) => None,
+    })
+}
+
+/// Cap dispatch at `isa` (or clear the cap with `None`) for the whole
+/// process. Testing knob only — callers must serialize (the override is
+/// global) and the cap still `min`s with [`detected`], so it can never
+/// enable an unsupported tier.
+pub fn force(isa: Option<Isa>) {
+    FORCED.store(isa.map(|i| i as u8).unwrap_or(UNSET), Ordering::Relaxed);
+}
+
+/// The tier kernels actually dispatch to right now:
+/// `min(detected, MOR_ISA cap, forced cap)`.
+#[inline]
+pub fn active() -> Isa {
+    let mut isa = detected();
+    let forced = FORCED.load(Ordering::Relaxed);
+    if forced != UNSET {
+        isa = isa.min(Isa::from_rank(forced));
+    } else if let Some(cap) = env_cap() {
+        isa = isa.min(cap);
+    }
+    isa
+}
+
+/// Every tier this host can actually run (always includes scalar) —
+/// what the cross-ISA equivalence suite sweeps and `mor info` prints.
+pub fn available() -> Vec<Isa> {
+    let top = detected();
+    Isa::ALL
+        .iter()
+        .copied()
+        .filter(|&i| {
+            i <= top
+                && match i {
+                    Isa::Neon => cfg!(target_arch = "aarch64"),
+                    Isa::Avx2 | Isa::Avx512Vnni => cfg!(target_arch = "x86_64"),
+                    Isa::Scalar => true,
+                }
+        })
+        .collect()
+}
+
+/// AVX2 dispatch predicate (false off-x86). The former
+/// `dot::avx2_enabled` — every AVX2 kernel call site funnels here.
+#[inline]
+pub fn avx2_enabled() -> bool {
+    cfg!(target_arch = "x86_64") && active() >= Isa::Avx2
+}
+
+/// AVX-512 VNNI dispatch predicate (false off-x86 and on pre-1.89
+/// toolchains, where the kernels aren't compiled).
+#[inline]
+pub fn vnni_enabled() -> bool {
+    cfg!(all(target_arch = "x86_64", mor_avx512)) && active() == Isa::Avx512Vnni
+}
+
+/// NEON dispatch predicate (false off-aarch64).
+#[inline]
+pub fn neon_enabled() -> bool {
+    cfg!(target_arch = "aarch64") && active() == Isa::Neon
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_round_trip() {
+        for isa in Isa::ALL {
+            assert_eq!(Isa::parse(isa.name()), Some(isa));
+        }
+        assert_eq!(Isa::parse("vnni"), Some(Isa::Avx512Vnni));
+        assert_eq!(Isa::parse("sse9"), None);
+    }
+
+    #[test]
+    fn lattice_order_is_portability_order() {
+        assert!(Isa::Scalar < Isa::Neon);
+        assert!(Isa::Neon < Isa::Avx2);
+        assert!(Isa::Avx2 < Isa::Avx512Vnni);
+        for isa in Isa::ALL {
+            assert_eq!(Isa::from_rank(isa as u8), isa);
+        }
+    }
+
+    #[test]
+    fn available_starts_at_scalar_and_is_ordered() {
+        let avail = available();
+        assert_eq!(avail.first(), Some(&Isa::Scalar));
+        assert!(avail.windows(2).all(|w| w[0] < w[1]));
+        assert!(avail.contains(&detected()) || detected() == Isa::Scalar);
+    }
+
+    // NOTE [`force`] is deliberately untested here: the override is
+    // process-global and the in-crate unit tests run multithreaded, so
+    // mutating it would race every dispatch-reading test. The
+    // force/clamp behaviour is covered by `tests/isa_equivalence.rs`,
+    // which owns its process and serializes on a mutex.
+
+    #[test]
+    fn active_never_exceeds_detection() {
+        assert!(active() <= detected());
+    }
+}

@@ -28,6 +28,8 @@
 pub mod crossover;
 pub mod dot;
 pub mod gemm;
+pub mod isa;
+pub mod tune;
 
 use crate::model::Node;
 use crate::util::bits::PackedVec;

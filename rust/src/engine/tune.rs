@@ -1,0 +1,526 @@
+//! On-machine autotuner: measures the actual host's kernel crossovers
+//! and freezes the winners into a [`TuneProfile`] that rides in
+//! `RunOpts` and is baked into every `ModelPlan`.
+//!
+//! The hardwired heuristics this replaces — the [`super::crossover`]
+//! density cutoffs, the [`super::gemm::TILE_ROWS`] tile height, the
+//! thread fan-out — were measured on one machine. Cnvlutin2 and
+//! SparseNN both observe that sparse-vs-dense profitability is
+//! hardware-dependent; [`calibrate`] re-measures it where the model
+//! will actually run:
+//!
+//! * **Input/weight crossover** — time the dense block kernel against
+//!   the compressed-lane kernels over a density grid and fit the
+//!   break-even density (the highest density where sparse still wins).
+//! * **Tile height** — time the real loop nest (filter block held hot
+//!   across the tile's rows) at each candidate height ≤ `TILE_ROWS`.
+//! * **Thread fan-out** — time the row-partitioned workload at rising
+//!   thread counts and keep the smallest count within 3% of the best
+//!   aggregate throughput (over-subscription is a loss on small tiles).
+//!
+//! Everything in the profile is a *host-performance* knob: every kernel
+//! the cutoffs choose between is bit-identical (the i32-dot contract),
+//! so a wrong profile can only cost time, never correctness — which is
+//! why profiles may be calibrated once and shipped to a fleet
+//! (`--tune-profile`, [`TuneProfile::save`] / [`TuneProfile::load`]).
+//!
+//! The **default** profile ([`TuneProfile::host_default`]) is fast and
+//! deterministic: no measurement, just the compiled-in
+//! [`super::crossover`] constants for the active ISA tier. Plans
+//! compiled without opting in (`SessionBuilder::autotune`, `[engine]
+//! autotune`, `--autotune`) are byte-identical to the pre-autotuner
+//! ones.
+
+use super::crossover;
+use super::gemm::{self, NR, TILE_ROWS};
+use super::isa::{self, Isa};
+use crate::model::Node;
+use crate::util::rng::Rng;
+use anyhow::{bail, Context, Result};
+use std::time::Instant;
+
+/// Frozen kernel-choice decisions for one host. `Copy` on purpose: it
+/// rides inside `RunOpts` (itself `Copy`) into every compiled
+/// `ModelPlan`, so the plan verifier can re-derive each step's frozen
+/// decision from the same numbers that produced it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TuneProfile {
+    /// ISA tier the profile was calibrated for (provenance — dispatch
+    /// still follows [`isa::active`] at run time).
+    pub isa: Isa,
+    /// Input-side density crossover: a tile row with `nnz/k_len` below
+    /// this takes the compressed-lane kernel under `InputSparsity::Auto`.
+    pub input_cutoff: f32,
+    /// Weight-side density crossover: a layer whose prepacked density is
+    /// below this bakes the weight-sparse kernel into its plan step.
+    pub weight_cutoff: f32,
+    /// Row-tile height the executor should use (1..=[`TILE_ROWS`] — the
+    /// compiled-in constant is the hard buffer bound, so tuning can only
+    /// shrink it).
+    pub tile_rows: usize,
+    /// Suggested intra-op thread count; 0 = no suggestion (keep the
+    /// caller's `RunOpts::threads`).
+    pub threads: usize,
+}
+
+impl TuneProfile {
+    /// The deterministic compiled-in profile for a given ISA tier: the
+    /// [`crossover`] constants, full tile height, no thread suggestion.
+    pub fn default_for(isa: Isa) -> TuneProfile {
+        let simd = isa > Isa::Scalar;
+        TuneProfile {
+            isa,
+            input_cutoff: if simd {
+                crossover::INPUT_CUTOFF_AVX2
+            } else {
+                crossover::INPUT_CUTOFF_SCALAR
+            },
+            weight_cutoff: if simd {
+                crossover::WEIGHT_CUTOFF_AVX2
+            } else {
+                crossover::WEIGHT_CUTOFF_SCALAR
+            },
+            tile_rows: TILE_ROWS,
+            threads: 0,
+        }
+    }
+
+    /// The default profile for the ISA tier that is active right now —
+    /// what `RunOpts::default()` carries, and therefore what every plan
+    /// compiled without autotuning freezes. Matches
+    /// [`crossover::input_sparse_cutoff`] / [`crossover::weight_sparse_cutoff`]
+    /// by construction.
+    pub fn host_default() -> TuneProfile {
+        TuneProfile::default_for(isa::active())
+    }
+
+    /// Range-check every field (used on load and by `mor lint` when a
+    /// profile is supplied).
+    pub fn validate(&self) -> Result<()> {
+        for (name, v) in [("input_cutoff", self.input_cutoff), ("weight_cutoff", self.weight_cutoff)] {
+            if !(v.is_finite() && v > 0.0 && v < 1.0) {
+                bail!("tune profile: {name} = {v} must be a density fraction in (0, 1)");
+            }
+        }
+        if self.tile_rows == 0 || self.tile_rows > TILE_ROWS {
+            bail!(
+                "tune profile: tile_rows = {} must be in 1..={TILE_ROWS} (the compiled buffer bound)",
+                self.tile_rows
+            );
+        }
+        if self.threads > 4096 {
+            bail!("tune profile: threads = {} is not plausible", self.threads);
+        }
+        Ok(())
+    }
+
+    /// Stable FNV-1a content hash — recorded in `BENCH_*.json`
+    /// provenance so perf trajectories are comparable across hosts, and
+    /// printed by `mor info`.
+    pub fn hash(&self) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        let mut eat = |bytes: &[u8]| {
+            for &b in bytes {
+                h = (h ^ b as u64).wrapping_mul(0x1_0000_0000_01b3);
+            }
+        };
+        eat(self.isa.name().as_bytes());
+        eat(&self.input_cutoff.to_bits().to_le_bytes());
+        eat(&self.weight_cutoff.to_bits().to_le_bytes());
+        eat(&(self.tile_rows as u64).to_le_bytes());
+        eat(&(self.threads as u64).to_le_bytes());
+        h
+    }
+
+    /// Serialize as the versioned key=value profile format (see
+    /// EXPERIMENTS.md §Tune).
+    pub fn to_text(&self) -> String {
+        format!(
+            "# mor tune profile\nversion = 1\nisa = {}\ninput_cutoff = {}\nweight_cutoff = {}\ntile_rows = {}\nthreads = {}\n",
+            self.isa.name(),
+            self.input_cutoff,
+            self.weight_cutoff,
+            self.tile_rows,
+            self.threads,
+        )
+    }
+
+    /// Parse the profile format ([`TuneProfile::to_text`]); unknown keys
+    /// are rejected so typos fail loudly, and the parsed profile is
+    /// validated before it is returned.
+    pub fn from_text(text: &str) -> Result<TuneProfile> {
+        let mut p = TuneProfile::default_for(Isa::Scalar);
+        let mut version = None;
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .with_context(|| format!("tune profile line {}: expected key = value", ln + 1))?;
+            let (key, val) = (key.trim(), val.trim());
+            match key {
+                "version" => version = Some(val.parse::<u32>().context("bad profile version")?),
+                "isa" => {
+                    p.isa = Isa::parse(val)
+                        .with_context(|| format!("unknown isa '{val}' in tune profile"))?
+                }
+                "input_cutoff" => p.input_cutoff = val.parse().context("bad input_cutoff")?,
+                "weight_cutoff" => p.weight_cutoff = val.parse().context("bad weight_cutoff")?,
+                "tile_rows" => p.tile_rows = val.parse().context("bad tile_rows")?,
+                "threads" => p.threads = val.parse().context("bad threads")?,
+                other => bail!("tune profile: unknown key '{other}'"),
+            }
+        }
+        match version {
+            Some(1) => {}
+            Some(v) => bail!("tune profile version {v} not supported (this build reads 1)"),
+            None => bail!("not a tune profile: missing 'version = 1'"),
+        }
+        p.validate()?;
+        Ok(p)
+    }
+
+    /// Write the profile to a file (`--tune-profile` save side).
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_text())
+            .with_context(|| format!("writing tune profile to {path}"))
+    }
+
+    /// Read a profile from a file (`--tune-profile` load side).
+    pub fn load(path: &str) -> Result<TuneProfile> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading tune profile from {path}"))?;
+        TuneProfile::from_text(&text).with_context(|| format!("parsing tune profile {path}"))
+    }
+}
+
+impl Default for TuneProfile {
+    fn default() -> Self {
+        TuneProfile::host_default()
+    }
+}
+
+/// Calibration workload shape: a mid-sized conv-like layer (K = 3·3·128,
+/// 64 filters) — big enough that the kernels run out of L1 the way real
+/// layers do, small enough that the whole pass stays well under a second.
+const CAL_K: usize = 1152;
+const CAL_COUT: usize = 64;
+/// Density grid the crossover fit walks (fractions of nonzero lanes).
+const CAL_GRID: [f32; 10] = [0.05, 0.10, 0.15, 0.20, 0.30, 0.40, 0.50, 0.65, 0.80, 0.95];
+/// Per-measurement time budget. Each point is measured until both this
+/// budget and a minimum repetition count are reached, so one stray
+/// scheduler tick cannot decide a crossover.
+const CAL_BUDGET: std::time::Duration = std::time::Duration::from_micros(1500);
+const CAL_MIN_REPS: u32 = 8;
+
+/// Time `f` (ns per call): warm twice, then repeat until the budget and
+/// the minimum rep count are both met.
+fn measure<F: FnMut()>(mut f: F) -> f64 {
+    f();
+    f();
+    let start = Instant::now();
+    let mut reps = 0u32;
+    loop {
+        f();
+        reps += 1;
+        if reps >= CAL_MIN_REPS && start.elapsed() >= CAL_BUDGET {
+            break;
+        }
+    }
+    start.elapsed().as_nanos() as f64 / reps as f64
+}
+
+/// A patch of length `k` with ~`density` nonzero lanes plus its
+/// compressed (idx, val) form, deterministic in `seed`.
+fn cal_patch(k: usize, density: f32, seed: u64) -> (Vec<i8>, Vec<u16>, Vec<i8>) {
+    let mut rng = Rng::new(seed);
+    let mut patch = vec![0i8; gemm::pad_k(k)];
+    let (mut idx, mut val) = (Vec::new(), Vec::new());
+    for lane in 0..k {
+        if (rng.int_in(0, 9999) as f32) < density * 10000.0 {
+            let mut v = rng.int8();
+            if v == 0 {
+                v = 1;
+            }
+            patch[lane] = v;
+            idx.push(lane as u16);
+            val.push(v);
+        }
+    }
+    (patch, idx, val)
+}
+
+/// An FC node whose weights have ~`density` nonzero lanes.
+fn cal_node(density: f32, seed: u64) -> Node {
+    let mut rng = Rng::new(seed);
+    let w: Vec<i8> = (0..CAL_K * CAL_COUT)
+        .map(|_| {
+            if (rng.int_in(0, 9999) as f32) < density * 10000.0 {
+                let v = rng.int8();
+                if v == 0 {
+                    1
+                } else {
+                    v
+                }
+            } else {
+                0
+            }
+        })
+        .collect();
+    Node::Fc {
+        cin: CAL_K,
+        cout: CAL_COUT,
+        sw: 0.01,
+        sx: 0.01,
+        w,
+        bn: None,
+        relu: false,
+        res_from: None,
+        consumes: -1,
+    }
+}
+
+/// Fit a crossover from per-grid-point (sparse_ns, dense_ns) pairs: the
+/// midpoint between the last density where sparse wins and the first
+/// where dense wins. Sparse-never-wins → 0.02; sparse-always-wins → 0.98.
+fn fit_cutoff(times: &[(f32, f64, f64)]) -> f32 {
+    let mut last_sparse_win = None;
+    let mut first_dense_win = None;
+    for &(d, sparse_ns, dense_ns) in times {
+        if sparse_ns < dense_ns {
+            last_sparse_win = Some(d);
+        } else if first_dense_win.is_none() {
+            first_dense_win = Some(d);
+        }
+    }
+    let cut = match (last_sparse_win, first_dense_win) {
+        (None, _) => 0.02,
+        (Some(_), None) => 0.98,
+        (Some(s), Some(f)) => (s + f) / 2.0,
+    };
+    cut.clamp(0.02, 0.98)
+}
+
+/// Microbenchmark this machine and return the fitted profile. Wall time
+/// is bounded by the per-point budget (~60 points ≈ 150 ms release).
+/// The measurement itself is inherently noisy — determinism guarantees
+/// attach to a *given* profile (same profile in ⇒ same plan out), not
+/// to repeated calibration runs.
+pub fn calibrate() -> TuneProfile {
+    let mut out = [0i32; NR];
+    let mut sink = 0i32;
+
+    // --- input-side crossover: dense block vs compressed-lane block ---
+    let dense_node = cal_node(1.0, 11);
+    let dense_pf = gemm::PrepackedFilters::new(&dense_node);
+    let mut input_times = Vec::with_capacity(CAL_GRID.len());
+    for (gi, &d) in CAL_GRID.iter().enumerate() {
+        let (patch, idx, val) = cal_patch(CAL_K, d, 100 + gi as u64);
+        let dense_ns = measure(|| {
+            let mut f0 = 0;
+            while f0 < CAL_COUT {
+                gemm::dot_block(&patch, &dense_pf, f0, NR.min(CAL_COUT - f0), &mut out);
+                sink = sink.wrapping_add(out[0]);
+                f0 += NR;
+            }
+        });
+        let sparse_ns = measure(|| {
+            let mut f0 = 0;
+            while f0 < CAL_COUT {
+                gemm::dot_block_sparse(&idx, &val, &dense_pf, f0, NR.min(CAL_COUT - f0), &mut out);
+                sink = sink.wrapping_add(out[0]);
+                f0 += NR;
+            }
+        });
+        input_times.push((d, sparse_ns, dense_ns));
+    }
+    let input_cutoff = fit_cutoff(&input_times);
+
+    // --- weight-side crossover: dense block vs compressed-filter block ---
+    let (dense_patch, _, _) = cal_patch(CAL_K, 1.0, 7);
+    let mut weight_times = Vec::with_capacity(CAL_GRID.len());
+    for (gi, &d) in CAL_GRID.iter().enumerate() {
+        let node = cal_node(d, 200 + gi as u64);
+        let pf = gemm::PrepackedFilters::new(&node);
+        let dense_ns = measure(|| {
+            let mut f0 = 0;
+            while f0 < CAL_COUT {
+                gemm::dot_block(&dense_patch, &pf, f0, NR.min(CAL_COUT - f0), &mut out);
+                sink = sink.wrapping_add(out[0]);
+                f0 += NR;
+            }
+        });
+        let wsparse_ns = measure(|| {
+            let mut f0 = 0;
+            while f0 < CAL_COUT {
+                gemm::dot_block_wsparse(&dense_patch, &pf, f0, NR.min(CAL_COUT - f0), &mut out);
+                sink = sink.wrapping_add(out[0]);
+                f0 += NR;
+            }
+        });
+        weight_times.push((d, wsparse_ns, dense_ns));
+    }
+    let weight_cutoff = fit_cutoff(&weight_times);
+
+    // --- tile height: the real loop nest (filter block hot across the
+    // tile's rows) over a 64-row workload at each candidate height ---
+    let rows: Vec<(Vec<i8>, Vec<u16>, Vec<i8>)> =
+        (0..64).map(|r| cal_patch(CAL_K, 0.6, 300 + r as u64)).collect();
+    let mut best_tile = (TILE_ROWS, f64::INFINITY);
+    for tr in [4usize, 8, TILE_ROWS] {
+        let ns = measure(|| {
+            let mut t0 = 0;
+            while t0 < rows.len() {
+                let t1 = (t0 + tr).min(rows.len());
+                let mut f0 = 0;
+                while f0 < CAL_COUT {
+                    let nf = NR.min(CAL_COUT - f0);
+                    for row in &rows[t0..t1] {
+                        gemm::dot_block(&row.0, &dense_pf, f0, nf, &mut out);
+                        sink = sink.wrapping_add(out[0]);
+                    }
+                    f0 += NR;
+                }
+                t0 = t1;
+            }
+        });
+        if ns < best_tile.1 {
+            best_tile = (tr, ns);
+        }
+    }
+
+    // --- thread fan-out: row-partitioned workload, keep the smallest
+    // count within 3% of the best aggregate throughput ---
+    let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut thread_times: Vec<(usize, f64)> = Vec::new();
+    for t in [1usize, 2, 4, 8] {
+        if t > avail {
+            break;
+        }
+        let ns = measure(|| {
+            std::thread::scope(|s| {
+                for part in rows.chunks(rows.len().div_ceil(t)) {
+                    let dense_pf = &dense_pf;
+                    s.spawn(move || {
+                        let mut out = [0i32; NR];
+                        let mut local = 0i32;
+                        for row in part {
+                            let mut f0 = 0;
+                            while f0 < CAL_COUT {
+                                gemm::dot_block(&row.0, &dense_pf, f0, NR.min(CAL_COUT - f0), &mut out);
+                                local = local.wrapping_add(out[0]);
+                                f0 += NR;
+                            }
+                        }
+                        std::hint::black_box(local);
+                    });
+                }
+            });
+        });
+        thread_times.push((t, ns));
+    }
+    let best_ns = thread_times.iter().map(|&(_, ns)| ns).fold(f64::INFINITY, f64::min);
+    let threads = thread_times
+        .iter()
+        .find(|&&(_, ns)| ns <= best_ns * 1.03)
+        .map(|&(t, _)| t)
+        .unwrap_or(1);
+
+    std::hint::black_box(sink);
+    let profile = TuneProfile {
+        isa: isa::active(),
+        input_cutoff,
+        weight_cutoff,
+        tile_rows: best_tile.0,
+        threads,
+    };
+    debug_assert!(profile.validate().is_ok());
+    profile
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_profile_matches_compiled_in_cutoffs() {
+        // the no-autotune path must freeze exactly what the pre-tuner
+        // code froze — the crossover module's host cutoffs
+        let p = TuneProfile::host_default();
+        assert_eq!(p.input_cutoff, crossover::input_sparse_cutoff());
+        assert_eq!(p.weight_cutoff, crossover::weight_sparse_cutoff());
+        assert_eq!(p.tile_rows, TILE_ROWS);
+        assert_eq!(p.threads, 0);
+        assert!(p.validate().is_ok());
+        let scalar = TuneProfile::default_for(Isa::Scalar);
+        assert_eq!(scalar.input_cutoff, crossover::INPUT_CUTOFF_SCALAR);
+        let simd = TuneProfile::default_for(Isa::Avx2);
+        assert_eq!(simd.input_cutoff, crossover::INPUT_CUTOFF_AVX2);
+        assert_eq!(TuneProfile::default_for(Isa::Neon).input_cutoff, simd.input_cutoff);
+    }
+
+    #[test]
+    fn profile_text_round_trips() {
+        for p in [
+            TuneProfile::default_for(Isa::Scalar),
+            TuneProfile::default_for(Isa::Avx512Vnni),
+            TuneProfile { isa: Isa::Neon, input_cutoff: 0.31, weight_cutoff: 0.11, tile_rows: 8, threads: 4 },
+        ] {
+            let text = p.to_text();
+            let q = TuneProfile::from_text(&text).unwrap();
+            assert_eq!(p, q, "round trip through:\n{text}");
+            assert_eq!(p.hash(), q.hash());
+        }
+    }
+
+    #[test]
+    fn profile_parse_rejects_junk() {
+        assert!(TuneProfile::from_text("").is_err(), "missing version");
+        assert!(TuneProfile::from_text("version = 2\nisa = avx2\n").is_err(), "future version");
+        assert!(TuneProfile::from_text("version = 1\nisa = mmx\n").is_err(), "unknown isa");
+        assert!(TuneProfile::from_text("version = 1\nwat = 3\n").is_err(), "unknown key");
+        let bad_cut = "version = 1\nisa = avx2\ninput_cutoff = 1.5\n";
+        assert!(TuneProfile::from_text(bad_cut).is_err(), "cutoff out of range");
+        let bad_tile = "version = 1\nisa = avx2\ntile_rows = 99\n";
+        assert!(TuneProfile::from_text(bad_tile).is_err(), "tile_rows beyond buffer bound");
+    }
+
+    #[test]
+    fn hash_distinguishes_fields() {
+        let base = TuneProfile::default_for(Isa::Avx2);
+        let mut seen = vec![base.hash()];
+        for p in [
+            TuneProfile { isa: Isa::Scalar, ..base },
+            TuneProfile { input_cutoff: 0.21, ..base },
+            TuneProfile { weight_cutoff: 0.19, ..base },
+            TuneProfile { tile_rows: 8, ..base },
+            TuneProfile { threads: 2, ..base },
+        ] {
+            let h = p.hash();
+            assert!(!seen.contains(&h), "hash collision for {p:?}");
+            seen.push(h);
+        }
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "wall-clock microbenchmarks are meaningless interpreted")]
+    fn calibrate_produces_a_valid_profile() {
+        let p = calibrate();
+        p.validate().unwrap();
+        assert_eq!(p.isa, isa::active());
+        assert!(p.tile_rows >= 1 && p.tile_rows <= TILE_ROWS);
+        assert!(p.threads >= 1, "calibration must suggest a thread count");
+    }
+
+    #[test]
+    fn fit_cutoff_edges() {
+        // sparse never wins → floor; always wins → ceiling; the normal
+        // case lands between the flanking grid points
+        assert_eq!(fit_cutoff(&[(0.1, 5.0, 1.0), (0.5, 5.0, 1.0)]), 0.02);
+        assert_eq!(fit_cutoff(&[(0.1, 1.0, 5.0), (0.5, 1.0, 5.0)]), 0.98);
+        let mid = fit_cutoff(&[(0.1, 1.0, 5.0), (0.3, 1.0, 5.0), (0.5, 9.0, 5.0)]);
+        assert!((mid - 0.4).abs() < 1e-6, "got {mid}");
+    }
+}

@@ -8,6 +8,8 @@ use mor::cli::{Args, USAGE};
 use mor::config::Config;
 use mor::coordinator::tier::ServingTier;
 use mor::coordinator::{self, Backend, ServeOpts};
+use mor::engine::tune::TuneProfile;
+use mor::engine::isa::{self, Isa};
 use mor::engine::{InputSparsity, WeightSparsity};
 use mor::figures;
 use mor::model::Artifacts;
@@ -84,10 +86,45 @@ fn config_from(args: &Args) -> Result<Config> {
     Ok(cfg)
 }
 
+/// Resolve the tuning surface shared by `run` and `serve`:
+/// `--autotune` (or `[engine] autotune`) calibrates once per process
+/// and, with `--tune-profile <f>`, saves the measured profile to `<f>`;
+/// `--tune-profile` alone loads a saved profile. `None` = host default.
+fn tune_from(args: &Args, cfg: &Config) -> Result<Option<TuneProfile>> {
+    let autotune = args.flag("autotune") || cfg.engine.autotune;
+    let path = args.opt("tune-profile");
+    if autotune {
+        let p = mor::engine::tune::calibrate();
+        eprintln!(
+            "[tune] calibrated for {}: input_cutoff {:.3} weight_cutoff {:.3} \
+             tile_rows {} threads {} (hash {:016x})",
+            p.isa.name(),
+            p.input_cutoff,
+            p.weight_cutoff,
+            p.tile_rows,
+            p.threads,
+            p.hash()
+        );
+        if let Some(path) = path {
+            p.save(path)?;
+            eprintln!("[tune] profile saved to {path}");
+        }
+        return Ok(Some(p));
+    }
+    match path {
+        Some(path) => {
+            let p = TuneProfile::load(path)?;
+            Ok(Some(p))
+        }
+        None => Ok(None),
+    }
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
     let dir = args.opt_or("artifacts", mor::DEFAULT_ARTIFACTS_DIR);
     let samples = args.opt_usize("samples", 128)?;
     let cfg = config_from(args)?;
+    let tune = tune_from(args, &cfg)?;
     let auto_thr = args.opt("threshold").is_none() && cfg.predictor.strategy.uses_binary();
     for name in models_arg(args) {
         let arts = Artifacts::load(dir, &name)?;
@@ -98,12 +135,15 @@ fn cmd_run(args: &Args) -> Result<()> {
         }
         // one session carries both runs: the dense baseline shares the
         // model (and prepacked weights) with the policied evaluation
-        let session = Session::build(&arts.model)
+        let mut builder = Session::build(&arts.model)
             .params(&arts.predictor)
             .config(pcfg.clone())
             .input_sparsity(cfg.engine.input_sparsity)
-            .weight_sparsity(cfg.engine.weight_sparsity)
-            .finish();
+            .weight_sparsity(cfg.engine.weight_sparsity);
+        if let Some(p) = tune {
+            builder = builder.tune_profile(p);
+        }
+        let session = builder.finish();
         let base = MorRun::evaluate(&arts, &session.with_policy(None), samples);
         let s = MorRun::evaluate(&arts, &session, samples);
         let p = &s.pred;
@@ -269,15 +309,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if args.flag("no-predictor") {
         cfg.predictor.strategy = Strategy::None;
     }
+    let tune = tune_from(args, &cfg)?;
 
     let arts = Artifacts::load(dir, model)?;
-    let session = Session::build(&arts.model)
+    let mut builder = Session::build(&arts.model)
         .params(&arts.predictor)
         .config(cfg.predictor.clone())
         .threads(intra_threads)
         .input_sparsity(cfg.engine.input_sparsity)
-        .weight_sparsity(cfg.engine.weight_sparsity)
-        .finish();
+        .weight_sparsity(cfg.engine.weight_sparsity);
+    if let Some(p) = tune {
+        builder = builder.tune_profile(p);
+    }
+    let session = builder.finish();
     let arrival = Arrival::from_cli(arrival_kind, rps)?;
     let mut stream = RequestStream::with_arrival(arrival, arts.data.n_test(), 42);
     let requests = stream.generate(duration);
@@ -325,6 +369,7 @@ fn cmd_serve_tier(args: &Args) -> Result<()> {
     if args.flag("no-predictor") {
         cfg.predictor.strategy = Strategy::None;
     }
+    let tune = tune_from(args, &cfg)?;
 
     // --tenants name:weight,... (weight defaults to 1)
     let mut builder = ServingTier::builder()
@@ -353,13 +398,16 @@ fn cmd_serve_tier(args: &Args) -> Result<()> {
     }
     anyhow::ensure!(!bundles.is_empty(), "--models must name at least one model");
     for arts in &bundles {
-        let session = Session::build(&arts.model)
+        let mut sb = Session::build(&arts.model)
             .params(&arts.predictor)
             .config(cfg.predictor.clone())
             .threads(intra_threads)
             .input_sparsity(cfg.engine.input_sparsity)
-            .weight_sparsity(cfg.engine.weight_sparsity)
-            .finish();
+            .weight_sparsity(cfg.engine.weight_sparsity);
+        if let Some(p) = tune {
+            sb = sb.tune_profile(p);
+        }
+        let session = sb.finish();
         builder = builder.model(&arts.meta.name, arts, &session, replicas);
     }
     let tier = builder.finish();
@@ -411,6 +459,16 @@ fn cmd_lint(args: &Args) -> Result<()> {
     let seed = args.opt_usize("seed", 7)? as u64;
     let n_random = args.opt_usize("random-models", 8)?;
     let numeric = args.flag("numeric");
+    // --acc-bits narrows the *claimed* accumulator the numeric pass
+    // proves against (num.width / num.vnni); 32 is the real i32.
+    let acc_bits = args.opt_usize("acc-bits", 32)? as u32;
+    // --tune-profile: freeze every plan from the saved profile and then
+    // audit the frozen decisions against that same profile — a clean
+    // report proves the compile/verify round-trip agrees with the file.
+    let tprof = match args.opt("tune-profile") {
+        Some(path) => Some(mor::engine::tune::TuneProfile::load(path)?),
+        None => None,
+    };
 
     // Models to lint: one real artifact model under --model, otherwise
     // the synthetic zoo (the same generators the plan test suites use).
@@ -452,17 +510,25 @@ fn cmd_lint(args: &Args) -> Result<()> {
                     let opts = RunOpts {
                         input_sparsity: is,
                         weight_sparsity: ws,
+                        tune: tprof.unwrap_or_default(),
                         ..Default::default()
                     };
                     let compiled = plan::compile(model, pol, opts);
-                    let report = plan::verify(&compiled, model, pol);
+                    let report = plan::verify_with(&compiled, model, pol, tprof.as_ref());
                     configs += 1;
                     model_errors += report.errors();
                     model_warnings += report.warnings();
                     // --numeric: run the abstract interpreter on the
                     // same frozen plan and fold its findings into the
                     // per-model and exit-status accounting.
-                    let num = numeric.then(|| plan::ranges::analyze(&compiled, model, pol));
+                    let num = numeric.then(|| {
+                        plan::ranges::analyze_with(
+                            &compiled,
+                            model,
+                            pol,
+                            &plan::ranges::NumericOpts { acc_bits },
+                        )
+                    });
                     if let Some(num) = &num {
                         model_errors += num.lint.errors();
                         model_warnings += num.lint.warnings();
@@ -575,19 +641,55 @@ fn cmd_info(args: &Args) -> Result<()> {
         println!("{}", cfg.table1());
         return Ok(());
     }
+
+    // Host ISA report: what the CPU offers, what the dispatcher will
+    // actually use (after any MOR_ISA cap), and the kernels that implies.
+    let tiers: Vec<&str> = isa::available().into_iter().map(Isa::name).collect();
+    println!("isa:");
+    println!("  detected   {}", isa::detected().name());
+    println!("  active     {} (cap via MOR_ISA=<tier>)", isa::active().name());
+    println!("  available  [{}]", tiers.join(", "));
+    println!(
+        "  kernels    dot={} gemm={}",
+        if isa::vnni_enabled() {
+            "avx512-vnni vpdpbusd"
+        } else if isa::avx2_enabled() {
+            "avx2 maddubs/madd"
+        } else if isa::neon_enabled() {
+            "neon smlal"
+        } else {
+            "scalar"
+        },
+        if isa::active() > Isa::Scalar { "simd-tiled" } else { "scalar-tiled" },
+    );
+
+    // Tune profile: the saved one under --tune-profile, else the
+    // compiled-in host default every non-autotuned plan freezes.
+    let (p, src) = match args.opt("tune-profile") {
+        Some(path) => (TuneProfile::load(path)?, format!("loaded from {path}")),
+        None => (TuneProfile::host_default(), "host default".to_string()),
+    };
+    println!("tune profile ({src}):");
+    println!("  isa {} | input_cutoff {:.3} | weight_cutoff {:.3} | tile_rows {} | threads {} | hash {:016x}",
+        p.isa.name(), p.input_cutoff, p.weight_cutoff, p.tile_rows, p.threads, p.hash());
+
     let dir = args.opt_or("artifacts", mor::DEFAULT_ARTIFACTS_DIR);
-    let metas = mor::model::load_meta(dir)?;
-    println!("artifacts in {dir}:");
-    for m in metas {
-        println!(
-            "  {:<12} input {:?} | {:.1}M MACs/sample | fp32 {:.1}% | int8 {:.1}% | {} relu layers",
-            m.name,
-            m.input_shape,
-            m.macs_per_sample as f64 / 1e6,
-            m.fp32_accuracy * 100.0,
-            m.int8_accuracy * 100.0,
-            m.relu_layers.len()
-        );
+    match mor::model::load_meta(dir) {
+        Ok(metas) => {
+            println!("artifacts in {dir}:");
+            for m in metas {
+                println!(
+                    "  {:<12} input {:?} | {:.1}M MACs/sample | fp32 {:.1}% | int8 {:.1}% | {} relu layers",
+                    m.name,
+                    m.input_shape,
+                    m.macs_per_sample as f64 / 1e6,
+                    m.fp32_accuracy * 100.0,
+                    m.int8_accuracy * 100.0,
+                    m.relu_layers.len()
+                );
+            }
+        }
+        Err(e) => println!("artifacts in {dir}: none ({e})"),
     }
     Ok(())
 }

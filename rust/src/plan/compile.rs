@@ -30,8 +30,8 @@
 //! free: the plan is reusable as long as the set of policied layers and
 //! the execution options are unchanged.
 
-use crate::engine::gemm::{self, pad_k, SPARSE_K_MAX};
-use crate::engine::{conv_geom, crossover, ConvGeom, InputSparsity, WeightSparsity};
+use crate::engine::gemm::{pad_k, SPARSE_K_MAX};
+use crate::engine::{conv_geom, ConvGeom, InputSparsity, WeightSparsity};
 use crate::model::{Model, Node};
 use crate::predictor::strategies::Strategy;
 use crate::predictor::{MorPolicy, RunOpts};
@@ -92,14 +92,18 @@ pub struct ComputeStep {
     /// The compressed-lane builder runs for this layer.
     pub lanes: bool,
     /// A row uses the sparse kernels iff `lanes && (nnz as f32) <
-    /// sparse_cutoff` — bit-identical to the unplanned `Auto`/`On`
-    /// decision (`sparse_auto_cutoff() * k_len` resp. `+inf`).
+    /// sparse_cutoff` — frozen from the plan's
+    /// [`crate::engine::tune::TuneProfile`] (`opts.tune.input_cutoff *
+    /// k_len` under `Auto`, `+inf` under `On`). The default profile's
+    /// cutoff equals the compiled-in crossover constant, so plans built
+    /// without autotuning are unchanged.
     pub sparse_cutoff: f32,
     /// The layer's dot products run on the compressed-*weight* kernels
-    /// ([`gemm::dot_block_wsparse`] and friends). Frozen at compile
-    /// time from the prepacked per-layer weight density against
-    /// [`crossover::weight_sparse_cutoff`]: unlike activation density,
-    /// weight density is a constant of the model, so the decision is
+    /// ([`crate::engine::gemm::dot_block_wsparse`] and friends). Frozen
+    /// at compile time from the prepacked per-layer weight density
+    /// against the plan's `opts.tune.weight_cutoff`: unlike activation
+    /// density, weight density is a constant of the model, so the
+    /// decision is
     /// per layer, not per row. Always `false` under
     /// [`WeightSparsity::Off`], and when the prepack skipped lane lists
     /// (`k_len` beyond the u16 index range).
@@ -280,7 +284,7 @@ pub fn compile(model: &Model, policy: Option<&MorPolicy>, opts: RunOpts) -> Mode
                     InputSparsity::Off => 0.0,
                     InputSparsity::On => f32::INFINITY,
                     InputSparsity::Auto => {
-                        gemm::sparse_auto_cutoff() * k_len.max(1) as f32
+                        opts.tune.input_cutoff * k_len.max(1) as f32
                     }
                 };
                 // weight side: density is a model constant, so the
@@ -288,7 +292,7 @@ pub fn compile(model: &Model, policy: Option<&MorPolicy>, opts: RunOpts) -> Mode
                 // shared prepack cache only when the mode is on
                 let w_sparse = opts.weight_sparsity != WeightSparsity::Off && {
                     let pf = model.prepacked().layer(i);
-                    pf.has_lanes() && pf.density() < crossover::weight_sparse_cutoff()
+                    pf.has_lanes() && pf.density() < opts.tune.weight_cutoff
                 };
                 max_cout = max_cout.max(cout);
                 max_k_len = max_k_len.max(k_len);
@@ -434,9 +438,12 @@ mod tests {
                     match mode {
                         InputSparsity::Off => assert_eq!(c.sparse_cutoff, 0.0),
                         InputSparsity::On => assert_eq!(c.sparse_cutoff, f32::INFINITY),
+                        // compared against the plan's own frozen profile
+                        // (not a live crossover re-read — the tune
+                        // profile is the single source now)
                         InputSparsity::Auto => assert_eq!(
                             c.sparse_cutoff,
-                            gemm::sparse_auto_cutoff() * c.k_len as f32
+                            plan.opts.tune.input_cutoff * c.k_len as f32
                         ),
                     }
                 }
@@ -460,7 +467,7 @@ mod tests {
                 if let StepPlan::Compute(c) = step {
                     let want = ws != WeightSparsity::Off && {
                         let pf = dense.prepacked().layer(c.node);
-                        pf.has_lanes() && pf.density() < crossover::weight_sparse_cutoff()
+                        pf.has_lanes() && pf.density() < plan.opts.tune.weight_cutoff
                     };
                     assert_eq!(c.w_sparse, want, "mode {ws:?} node {}", c.node);
                 }

@@ -277,6 +277,11 @@ struct TiledCtx<'a> {
     /// their input, the doubly-sparse index-intersection kernel).
     /// Kernel selection only — bit-identical either way.
     w_sparse: bool,
+    /// Tile height from the plan's frozen [`crate::engine::tune::TuneProfile`],
+    /// clamped to the fixed scratch capacity `1..=TILE_ROWS`. A
+    /// host-performance knob only: any height partitions the global row
+    /// space into the same rows, so results are bit-identical.
+    tile_rows: usize,
 }
 
 impl TiledCtx<'_> {
@@ -368,9 +373,10 @@ fn compute_step(
             lanes: cs.lanes,
             sparse_cutoff: cs.sparse_cutoff,
             w_sparse: cs.w_sparse,
+            tile_rows: opts.tune.tile_rows.clamp(1, TILE_ROWS),
         };
 
-        let n_tiles = total_rows.div_ceil(TILE_ROWS).max(1);
+        let n_tiles = total_rows.div_ceil(ctx.tile_rows).max(1);
         let nw = opts.threads.max(1).min(n_tiles);
         if nw <= 1 {
             let trace = opts
@@ -387,7 +393,7 @@ fn compute_step(
             ranges.clear();
             let mut start = 0usize;
             while start < total_rows {
-                let end = total_rows.min(start + tiles_per * TILE_ROWS);
+                let end = total_rows.min(start + tiles_per * ctx.tile_rows);
                 ranges.push((start, end));
                 start = end;
             }
@@ -528,7 +534,7 @@ fn process_row_range(
 
     let mut t0 = row0;
     while t0 < row1 {
-        let trows = TILE_ROWS.min(row1 - t0);
+        let trows = ctx.tile_rows.min(row1 - t0);
 
         // ---- phase 1: gather a tile of im2col patches (cross-sample) ----
         for r in 0..trows {

@@ -64,5 +64,5 @@ pub mod workspace;
 pub use compile::{compile, ComputeStep, ModelPlan, Src, StepPlan};
 pub use execute::{execute, execute_into};
 pub use ranges::{NumericOpts, NumericReport, StepRanges};
-pub use verify::{verify, Finding, LintReport, Severity};
+pub use verify::{verify, verify_with, Finding, LintReport, Severity};
 pub use workspace::{PooledWorkspace, WorkerScratch, Workspace, WorkspacePool};

@@ -16,7 +16,21 @@
 //!   doubly-sparse intersection dot alike.
 //! * **`num.width`** — the same bound against a *claimed* accumulator
 //!   width ([`NumericOpts::acc_bits`] < 32): the gate a future i16
-//!   fast path / VNNI lowering must pass before narrowing.
+//!   fast path must pass before narrowing.
+//! * **`num.vnni`** — the AVX-512 VNNI lowering's *offset* accumulator.
+//!   `vpdpbusd` is unsigned×signed, so the kernel computes
+//!   `Σ(x⊕0x80)·w = Σ(x+128)·w` and subtracts `128·Σw` afterwards (see
+//!   `engine/dot.rs`); its partial sums are bounded by
+//!   `Σ|w| · (max|x| + 128)` — wider than the true dot's
+//!   `Σ|w| · max|x|`. Per VNNI-eligible layer
+//!   (`k_pad ≤ `[`VNNI_K_MAX`]) that bound must fit i32. It always
+//!   does — the dispatch gate makes `128·255·2¹⁶ < 2³¹−1` a static
+//!   fact — and this pass re-proves it per layer from the actual
+//!   weights, which is `mor lint --numeric`'s explicit answer to "can
+//!   the VNNI kernel overflow". Under a narrowed `--acc-bits` claim the
+//!   offset bound is also checked against the claimed width: a width
+//!   that holds the true dot may still be too narrow for the offset
+//!   partials, so a VNNI lowering cannot ride a `num.width` pass alone.
 //! * **`num.requant`** — the float pipeline (`dot · dq` → BN affine →
 //!   residual add) stays inside the finite f32 range, with saturation
 //!   only where `quantize` intends it (the `±127` clamp). Intervals are
@@ -41,6 +55,7 @@
 //! (`rust/tests/numeric_ranges.rs`) checks observed values ⊆ these
 //! intervals via the [`super::observe`] hook.
 
+use crate::engine::dot::VNNI_K_MAX;
 use crate::engine::gemm::PrepackedFilters;
 use crate::model::{Model, Node};
 use crate::plan::compile::{ComputeStep, ModelPlan, Src, StepPlan};
@@ -97,6 +112,13 @@ pub struct StepRanges {
     /// Max over filters of `Σ|w| · max|q|`: bounds the magnitude of
     /// every accumulator partial sum under any order/subset.
     pub acc_peak: u64,
+    /// Max over filters of `Σ|w| · (max|q| + 128)`: bounds the VNNI
+    /// offset kernel's partial sums (`vpdpbusd` accumulates
+    /// `Σ(x+128)·w` before the `128·Σw` correction).
+    pub vnni_peak: u64,
+    /// The VNNI kernels can dispatch on this layer
+    /// (`k_pad ≤ VNNI_K_MAX`); the `num.vnni` checks apply iff true.
+    pub vnni_eligible: bool,
     /// Hull over filters of the exact final-dot interval
     /// `[pos·qlo + neg·qhi, pos·qhi + neg·qlo]`.
     pub dot: Ival,
@@ -125,6 +147,12 @@ impl StepRanges {
     /// fast path must meet. 33+ means even i32 is not enough.
     pub fn acc_bits_needed(&self) -> u32 {
         bits_needed(self.acc_peak)
+    }
+
+    /// Same, for the VNNI offset accumulator: the width `vpdpbusd`'s
+    /// pre-correction partial sums provably need on this layer.
+    pub fn vnni_bits_needed(&self) -> u32 {
+        bits_needed(self.vnni_peak)
     }
 }
 
@@ -177,6 +205,9 @@ impl NumericReport {
                     ("q", ival_json(s.q)),
                     ("acc_peak", Json::Num(s.acc_peak as f64)),
                     ("acc_bits_needed", Json::Num(s.acc_bits_needed() as f64)),
+                    ("vnni_peak", Json::Num(s.vnni_peak as f64)),
+                    ("vnni_bits_needed", Json::Num(s.vnni_bits_needed() as f64)),
+                    ("vnni_eligible", Json::Bool(s.vnni_eligible)),
                     ("dot", ival_json(s.dot)),
                     ("pre_act", fival_json(s.pre_act)),
                     ("out", fival_json(s.out)),
@@ -220,13 +251,16 @@ impl fmt::Display for NumericReport {
         for s in &self.steps {
             writeln!(
                 f,
-                "range step {} node {}: q=[{}, {}] |acc|<={} ({} bits) dot=[{}, {}] out=[{:.3}, {:.3}]",
+                "range step {} node {}: q=[{}, {}] |acc|<={} ({} bits) |vnni|<={} ({} bits{}) dot=[{}, {}] out=[{:.3}, {:.3}]",
                 s.step,
                 s.node,
                 s.q.lo,
                 s.q.hi,
                 s.acc_peak,
                 s.acc_bits_needed(),
+                s.vnni_peak,
+                s.vnni_bits_needed(),
+                if s.vnni_eligible { "" } else { ", ineligible" },
                 s.dot.lo,
                 s.dot.hi,
                 s.out.lo,
@@ -377,13 +411,16 @@ fn analyze_compute(
         None => Fival::exact(0.0),
     };
     let eff_bits = opts.acc_bits.clamp(2, 32);
+    let vnni_eligible = cs.k_pad <= VNNI_K_MAX;
     let mut acc_peak: u64 = 0;
+    let mut vnni_peak: u64 = 0;
     let mut dot_hull: Option<Ival> = None;
     let mut pre_hull: Option<Fival> = None;
     let mut out_hull: Option<Fival> = None;
     // one finding per code per step: the first offending filter names
     // itself, the rest would only repeat the same root cause
     let (mut acc_hit, mut width_hit, mut requant_hit) = (false, false, false);
+    let mut vnni_hit = false;
     for f in 0..cs.cout {
         let (pos, neg) = pf.filter_sums(f);
         // exact final-dot interval: positive weights pull toward q.hi,
@@ -420,6 +457,31 @@ fn analyze_compute(
                 ),
             ));
             width_hit = true;
+        }
+        // VNNI offset accumulator: Σ(x+128)·w partial sums are bounded
+        // by Σ|w|·(max|x|+128) — checked against i32 (provably always
+        // fits under the k_pad ≤ VNNI_K_MAX dispatch gate) and against
+        // any narrower claimed width (which it legitimately can exceed)
+        let vnni_bound = (abs_sum as u64).checked_mul(qmax as u64 + 128);
+        let vnni_iv = match vnni_bound {
+            Some(b) if b <= i64::MAX as u64 => Ival::new(-(b as i64), b as i64),
+            _ => Ival::TOP,
+        };
+        vnni_peak = vnni_peak.max(vnni_bound.unwrap_or(u64::MAX));
+        if vnni_eligible && !vnni_hit && !vnni_iv.fits_signed(eff_bits) {
+            findings.push(err(
+                si,
+                "num.vnni",
+                format!(
+                    "filter {f}: VNNI offset bound Σ|w|·(max|x|+128) = \
+                     {abs_sum}·{} does not fit the i{eff_bits} accumulator \
+                     (needs {} bits) — the vpdpbusd partial sums are wider \
+                     than the true dot's",
+                    qmax + 128,
+                    bits_needed(vnni_bound.unwrap_or(u64::MAX))
+                ),
+            ));
+            vnni_hit = true;
         }
         dot_hull = Some(dot_hull.map_or(dot_iv, |h| h.hull(dot_iv)));
 
@@ -555,6 +617,8 @@ fn analyze_compute(
         node: cs.node,
         q,
         acc_peak,
+        vnni_peak,
+        vnni_eligible,
         dot: dot_hull.unwrap_or(Ival::exact(0)),
         pre_act: pre_hull.unwrap_or(Fival::exact(0.0)),
         out,
@@ -627,6 +691,95 @@ mod tests {
         assert!(rep.has("num.acc"), "{rep}");
         assert!(rep.errors() > 0);
         assert!(rep.max_acc_bits() > 32);
+    }
+
+    #[test]
+    fn vnni_worst_case_at_the_dispatch_gate_fits_i32() {
+        // the static fact behind VNNI_K_MAX: even all-(-128) weights at
+        // the largest dispatchable dot length keep the offset partial
+        // sums 128·2¹⁶·255 = 2,139,095,040 inside i32 — lint answers
+        // "can vpdpbusd overflow" with a per-layer proof, not a shrug
+        let k = VNNI_K_MAX;
+        let model = Model::new(
+            "vnni_worst".into(),
+            0.02,
+            (1, 1, k),
+            vec![Node::Fc {
+                cin: k,
+                cout: 2,
+                sw: 0.01,
+                sx: 0.02,
+                w: vec![-128i8; k * 2],
+                bn: None,
+                relu: false,
+                res_from: None,
+                consumes: -1,
+            }],
+        );
+        let p = plan::compile(&model, None, RunOpts::default());
+        let rep = analyze(&p, &model, None);
+        assert!(!rep.has("num.vnni"), "{rep}");
+        let s = &rep.steps[0];
+        assert!(s.vnni_eligible);
+        assert_eq!(s.vnni_peak, 128 * (VNNI_K_MAX as u64) * 255);
+        assert_eq!(s.vnni_bits_needed(), 32);
+        assert!(s.vnni_peak > s.acc_peak);
+    }
+
+    #[test]
+    fn narrow_claim_can_pass_acc_but_fail_vnni() {
+        // Σ|w| = 128·256 = 32768: the true dot (·127) fits a claimed
+        // i23, the VNNI offset partials (·255) need i24 — the explicit
+        // "wider than the true dot" answer under --acc-bits
+        let k = 256usize;
+        let model = Model::new(
+            "vnni_width".into(),
+            0.02,
+            (1, 1, k),
+            vec![Node::Fc {
+                cin: k,
+                cout: 2,
+                sw: 0.01,
+                sx: 0.02,
+                w: vec![-128i8; k * 2],
+                bn: None,
+                relu: false,
+                res_from: None,
+                consumes: -1,
+            }],
+        );
+        let p = plan::compile(&model, None, RunOpts::default());
+        let rep = analyze_with(&p, &model, None, &NumericOpts { acc_bits: 23 });
+        assert!(!rep.has("num.width"), "{rep}");
+        assert!(rep.has("num.vnni"), "{rep}");
+        assert!(rep.errors() > 0);
+    }
+
+    #[test]
+    fn oversized_layers_are_vnni_ineligible() {
+        // k_pad beyond VNNI_K_MAX never dispatches the VNNI kernels, so
+        // no num.vnni finding applies even where num.acc fires
+        let k = 262_144usize;
+        let model = Model::new(
+            "vnni_inel".into(),
+            0.02,
+            (1, 1, k),
+            vec![Node::Fc {
+                cin: k,
+                cout: 2,
+                sw: 0.01,
+                sx: 0.02,
+                w: vec![-128i8; k * 2],
+                bn: None,
+                relu: false,
+                res_from: None,
+                consumes: -1,
+            }],
+        );
+        let p = plan::compile(&model, None, RunOpts::default());
+        let rep = analyze(&p, &model, None);
+        assert!(!rep.steps[0].vnni_eligible);
+        assert!(!rep.has("num.vnni"), "{rep}");
     }
 
     #[test]

@@ -12,8 +12,8 @@
 //! re-deriving what each frozen field must be. A plan that lints clean
 //! cannot read an activation slot before it is written, alias two live
 //! tensors onto one slot, undersize a workspace buffer, or run a kernel
-//! the `engine/crossover.rs` cutoffs (or the u16 lane-index range)
-//! forbid.
+//! the plan's frozen [`TuneProfile`] cutoffs (or the u16 lane-index
+//! range) forbid.
 //!
 //! Invariant catalogue (finding `code` prefixes):
 //!
@@ -37,13 +37,17 @@
 //!   conv/FC output shape, row count, filter count, dot length, its
 //!   [`pad_k`]-aligned padding (what the AVX2 block kernel's `# Safety`
 //!   contract relies on), quantization scales.
-//! * `sparsity.*` — the frozen kernel decisions against the documented
-//!   [`crossover`] cutoffs: the lane builder must run iff the mode asks
-//!   for it *and* the dot length fits the u16 lane index
-//!   ([`SPARSE_K_MAX`]); `Auto`'s pre-multiplied cutoff must equal
-//!   `sparse_auto_cutoff() * k_len`; the weight-sparse flag must match
-//!   the prepacked per-layer density against
-//!   [`crossover::weight_sparse_cutoff`].
+//! * `sparsity.*` — the frozen kernel decisions against the plan's
+//!   [`TuneProfile`] (or one supplied to [`verify_with`], which is how
+//!   `mor lint --tune-profile` audits a plan against a saved profile):
+//!   the lane builder must run iff the mode asks for it *and* the dot
+//!   length fits the u16 lane index ([`SPARSE_K_MAX`]); `Auto`'s
+//!   pre-multiplied cutoff must equal `tune.input_cutoff * k_len`; the
+//!   weight-sparse flag must match the prepacked per-layer density
+//!   against `tune.weight_cutoff`.
+//! * `tune.*` — the frozen profile itself is well-formed
+//!   ([`TuneProfile::validate`]), and, under [`verify_with`], matches
+//!   the supplied profile's ISA.
 //! * `policy.*` — the policied-layer set matches the prepared policy,
 //!   and the oracle accounting flag is on exactly when `RunOpts`
 //!   requests it or the oracle strategy runs.
@@ -60,8 +64,9 @@
 //! mode.
 
 use super::compile::{ModelPlan, Src, StepPlan};
-use crate::engine::gemm::{self, pad_k, K_ALIGN, SPARSE_K_MAX};
-use crate::engine::{conv_geom, crossover, ConvGeom, InputSparsity, WeightSparsity};
+use crate::engine::gemm::{pad_k, K_ALIGN, SPARSE_K_MAX};
+use crate::engine::tune::TuneProfile;
+use crate::engine::{conv_geom, ConvGeom, InputSparsity, WeightSparsity};
 use crate::model::{Model, Node};
 use crate::predictor::strategies::Strategy;
 use crate::predictor::MorPolicy;
@@ -207,7 +212,50 @@ impl Lint {
 /// assert!(report.is_clean(), "{report}");
 /// ```
 pub fn verify(plan: &ModelPlan, model: &Model, policy: Option<&MorPolicy>) -> LintReport {
+    verify_with(plan, model, policy, None)
+}
+
+/// [`verify`], but auditing the plan's frozen kernel decisions against
+/// `profile` instead of the plan's own `opts.tune` — how
+/// `mor lint --tune-profile` proves a plan was compiled under a given
+/// saved [`TuneProfile`]. With `None` the plan is checked for
+/// self-consistency against its own frozen profile (every compile
+/// freezes its decisions *from* `opts.tune`, so a pristine plan is
+/// always self-consistent; a plan compiled under a different profile
+/// than the one supplied fails with `sparsity.cutoff` /
+/// `sparsity.weight` / `tune.isa` findings).
+pub fn verify_with(
+    plan: &ModelPlan,
+    model: &Model,
+    policy: Option<&MorPolicy>,
+    profile: Option<&TuneProfile>,
+) -> LintReport {
     let mut l = Lint { findings: Vec::new() };
+    // the profile the frozen decisions are audited against
+    let tune = profile.copied().unwrap_or(plan.opts.tune);
+    if let Err(e) = plan.opts.tune.validate() {
+        l.error(
+            "tune.profile",
+            None,
+            format!("the plan's frozen tune profile is malformed: {e}"),
+        );
+    }
+    if let Some(p) = profile {
+        if let Err(e) = p.validate() {
+            l.error("tune.profile", None, format!("supplied tune profile is malformed: {e}"));
+        }
+        if p.isa != plan.opts.tune.isa {
+            l.error(
+                "tune.isa",
+                None,
+                format!(
+                    "plan was frozen for isa {} but the supplied profile targets {}",
+                    plan.opts.tune.isa.name(),
+                    p.isa.name()
+                ),
+            );
+        }
+    }
     let n = model.nodes.len();
     let shapes = model.node_shapes();
     let relu_layers = model.relu_layers();
@@ -636,19 +684,19 @@ pub fn verify(plan: &ModelPlan, model: &Model, policy: Option<&MorPolicy>) -> Li
             let want_cutoff = match plan.opts.input_sparsity {
                 InputSparsity::Off => 0.0,
                 InputSparsity::On => f32::INFINITY,
-                InputSparsity::Auto => gemm::sparse_auto_cutoff() * c.k_len.max(1) as f32,
+                InputSparsity::Auto => tune.input_cutoff * c.k_len.max(1) as f32,
             };
             if c.sparse_cutoff != want_cutoff {
                 l.error(
                     "sparsity.cutoff",
                     Some(i),
                     format!(
-                        "sparse_cutoff = {} but mode {:?} requires {} (crossover {} x \
+                        "sparse_cutoff = {} but mode {:?} requires {} (profile cutoff {} x \
                          k_len {})",
                         c.sparse_cutoff,
                         plan.opts.input_sparsity,
                         want_cutoff,
-                        gemm::sparse_auto_cutoff(),
+                        tune.input_cutoff,
                         c.k_len
                     ),
                 );
@@ -658,7 +706,7 @@ pub fn verify(plan: &ModelPlan, model: &Model, policy: Option<&MorPolicy>) -> Li
             // compile's short-circuit — Off must never touch the cache)
             let want_w_sparse = plan.opts.weight_sparsity != WeightSparsity::Off && {
                 let pf = model.prepacked().layer(i);
-                pf.has_lanes() && pf.density() < crossover::weight_sparse_cutoff()
+                pf.has_lanes() && pf.density() < tune.weight_cutoff
             };
             if c.w_sparse != want_w_sparse {
                 let detail = if plan.opts.weight_sparsity == WeightSparsity::Off {
@@ -666,9 +714,9 @@ pub fn verify(plan: &ModelPlan, model: &Model, policy: Option<&MorPolicy>) -> Li
                 } else {
                     let pf = model.prepacked().layer(i);
                     format!(
-                        "prepacked density {} vs crossover {} (has_lanes {})",
+                        "prepacked density {} vs profile cutoff {} (has_lanes {})",
                         pf.density(),
-                        crossover::weight_sparse_cutoff(),
+                        tune.weight_cutoff,
                         pf.has_lanes()
                     )
                 };
@@ -812,6 +860,43 @@ mod tests {
         }
         let report = verify(&plan, &m, None);
         assert!(report.has("slot.range"), "{report}");
+        assert!(report.errors() > 0);
+    }
+
+    #[test]
+    fn profile_override_audits_frozen_cutoffs() {
+        use crate::engine::tune::TuneProfile;
+        let m = synth::tiny_serving_model(4);
+        let plan = super::super::compile(&m, None, RunOpts::default());
+        // the plan's own profile: self-consistent
+        let report = verify_with(&plan, &m, None, Some(&plan.opts.tune));
+        assert!(report.is_clean(), "{report}");
+        // a profile with a different input cutoff: every Auto layer's
+        // pre-multiplied cutoff now disagrees
+        let other = TuneProfile {
+            input_cutoff: plan.opts.tune.input_cutoff * 0.5,
+            ..plan.opts.tune
+        };
+        let report = verify_with(&plan, &m, None, Some(&other));
+        assert!(report.has("sparsity.cutoff"), "{report}");
+        // a profile for a different ISA: flagged even when cutoffs agree
+        let mut foreign = plan.opts.tune;
+        foreign.isa = if foreign.isa == crate::engine::isa::Isa::Scalar {
+            crate::engine::isa::Isa::Avx2
+        } else {
+            crate::engine::isa::Isa::Scalar
+        };
+        let report = verify_with(&plan, &m, None, Some(&foreign));
+        assert!(report.has("tune.isa"), "{report}");
+    }
+
+    #[test]
+    fn malformed_frozen_profile_is_flagged() {
+        let m = synth::tiny_serving_model(4);
+        let mut plan = super::super::compile(&m, None, RunOpts::default());
+        plan.opts.tune.input_cutoff = 2.0;
+        let report = verify(&plan, &m, None);
+        assert!(report.has("tune.profile"), "{report}");
         assert!(report.errors() > 0);
     }
 

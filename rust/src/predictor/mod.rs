@@ -274,6 +274,15 @@ pub struct RunOpts {
     /// [`crate::session::SessionBuilder::finish`] (the Session/CLI
     /// layer); below that it selects kernels exactly like `Exact`.
     pub weight_sparsity: WeightSparsity,
+    /// Kernel-choice calibration profile: the density crossovers, tile
+    /// height and thread suggestion that plan compilation freezes into
+    /// each `ComputeStep`. Defaults to the deterministic compiled-in
+    /// profile for the active ISA
+    /// ([`crate::engine::tune::TuneProfile::host_default`]);
+    /// `SessionBuilder::autotune` replaces it with a measured one and
+    /// `--tune-profile` loads a shipped one. Host-performance only:
+    /// every kernel the profile chooses between is bit-identical.
+    pub tune: crate::engine::tune::TuneProfile,
 }
 
 impl Default for RunOpts {
@@ -285,6 +294,7 @@ impl Default for RunOpts {
             engine: EngineSel::Tiled,
             input_sparsity: InputSparsity::Auto,
             weight_sparsity: WeightSparsity::Off,
+            tune: crate::engine::tune::TuneProfile::host_default(),
         }
     }
 }

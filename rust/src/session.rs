@@ -41,6 +41,7 @@
 //! [`Session::run_batch_into`].
 
 use crate::config::PredictorConfig;
+use crate::engine::tune::{self, TuneProfile};
 use crate::model::{Artifacts, Model, PredictorParams};
 use crate::plan::{self, ModelPlan, PooledWorkspace, Workspace, WorkspacePool};
 use crate::predictor::strategies::{Strategy, ZeroPredictor};
@@ -93,6 +94,9 @@ impl Session {
             params: None,
             cfg: PredictorConfig::default(),
             opts: RunOpts::default(),
+            autotune: false,
+            profile_set: false,
+            threads_set: false,
         }
     }
 
@@ -294,6 +298,15 @@ pub struct SessionBuilder<'a> {
     params: Option<&'a PredictorParams>,
     cfg: PredictorConfig,
     opts: RunOpts,
+    /// Run the calibration pass at `finish()` (unless an explicit
+    /// profile was supplied).
+    autotune: bool,
+    /// An explicit [`TuneProfile`] was supplied — calibration is
+    /// skipped even under `autotune(true)`.
+    profile_set: bool,
+    /// [`SessionBuilder::threads`] was called — the profile's thread
+    /// fan-out is not adopted.
+    threads_set: bool,
 }
 
 impl<'a> SessionBuilder<'a> {
@@ -330,9 +343,34 @@ impl<'a> SessionBuilder<'a> {
         self
     }
 
-    /// Row-tile worker threads per forward pass.
+    /// Row-tile worker threads per forward pass. Calling this pins the
+    /// thread count: a tune profile's measured fan-out is then ignored.
     pub fn threads(mut self, n: usize) -> Self {
         self.opts.threads = n;
+        self.threads_set = true;
+        self
+    }
+
+    /// Run the [`tune::calibrate`] microbenchmark pass at `finish()`
+    /// and freeze its measured crossovers / tile height / thread
+    /// fan-out into the compiled plan — the `--autotune` CLI surface.
+    /// Purely a host-performance knob: every kernel the tuner chooses
+    /// between is bit-identical. Ignored when an explicit
+    /// [`SessionBuilder::tune_profile`] is supplied (the saved profile
+    /// IS the calibration result).
+    pub fn autotune(mut self, on: bool) -> Self {
+        self.autotune = on;
+        self
+    }
+
+    /// Use an explicit [`TuneProfile`] (e.g. loaded from
+    /// `--tune-profile <path>`) instead of the host default or a fresh
+    /// calibration. The same profile always freezes the same plan
+    /// decisions — profiles are how tuned configurations are made
+    /// reproducible across runs.
+    pub fn tune_profile(mut self, profile: TuneProfile) -> Self {
+        self.opts.tune = profile;
+        self.profile_set = true;
         self
     }
 
@@ -380,7 +418,15 @@ impl<'a> SessionBuilder<'a> {
     /// blocks (tiled engine), prepare the policy through the configured
     /// strategy, and compile the [`crate::plan::ModelPlan`] the request
     /// path executes.
-    pub fn finish(self) -> Session {
+    pub fn finish(mut self) -> Session {
+        if self.autotune && !self.profile_set {
+            self.opts.tune = tune::calibrate();
+        }
+        // adopt the profile's measured thread fan-out unless the caller
+        // pinned a count (0 in a profile means "no opinion")
+        if !self.threads_set && self.opts.tune.threads > 0 {
+            self.opts.threads = self.opts.tune.threads;
+        }
         let mut model = self.model.clone();
         if let WeightSparsity::Threshold(t) = self.opts.weight_sparsity {
             model.prune_weights_below(t);
@@ -512,6 +558,59 @@ mod tests {
         // exact mode never prunes
         let e = Session::build(&m).weight_sparsity(WeightSparsity::Exact).finish();
         assert_eq!(e.model().weight_zero_fraction(), before);
+    }
+
+    #[test]
+    fn tune_profile_freezes_plan_decisions_and_thread_fanout() {
+        let m = synth::tiny_serving_model(29);
+        let mut p = TuneProfile::host_default();
+        p.threads = 3;
+        // an extreme cutoff flips every Auto layer to "dense always"
+        p.input_cutoff = 0.02;
+        let s = Session::build(&m).tune_profile(p).finish();
+        assert_eq!(s.opts().threads, 3, "profile fan-out adopted");
+        assert_eq!(s.opts().tune, p);
+        let plan = s.plan().unwrap();
+        for step in &plan.steps {
+            if let plan::StepPlan::Compute(c) = step {
+                assert_eq!(c.sparse_cutoff, 0.02 * c.k_len as f32);
+            }
+        }
+        // an explicit thread count beats the profile's
+        let s2 = Session::build(&m).tune_profile(p).threads(2).finish();
+        assert_eq!(s2.opts().threads, 2);
+        // results are bit-identical to the default profile's
+        let x = input(&m, 30);
+        let want = Session::build(&m).finish().run_sample(&x);
+        assert_eq!(s.run_sample(&x).logits, want.logits);
+    }
+
+    #[test]
+    fn same_profile_compiles_identical_plan_decisions() {
+        // tuner determinism contract: profile in ⇒ frozen decisions out,
+        // with no dependence on when/where the plan is compiled
+        let m = synth::tiny_serving_model(31);
+        let mut p = TuneProfile::host_default();
+        p.input_cutoff = 0.33;
+        p.weight_cutoff = 0.44;
+        p.tile_rows = 8;
+        let a = Session::build(&m)
+            .tune_profile(p)
+            .weight_sparsity(WeightSparsity::Exact)
+            .finish();
+        let b = Session::build(&m)
+            .tune_profile(p)
+            .weight_sparsity(WeightSparsity::Exact)
+            .finish();
+        let (pa, pb) = (a.plan().unwrap(), b.plan().unwrap());
+        for (sa, sb) in pa.steps.iter().zip(&pb.steps) {
+            if let (plan::StepPlan::Compute(ca), plan::StepPlan::Compute(cb)) = (sa, sb) {
+                assert_eq!(ca.sparse_cutoff, cb.sparse_cutoff);
+                assert_eq!(ca.w_sparse, cb.w_sparse);
+                assert_eq!(ca.lanes, cb.lanes);
+            }
+        }
+        assert_eq!(pa.opts.tune.hash(), pb.opts.tune.hash());
     }
 
     #[test]

@@ -1,0 +1,205 @@
+//! Cross-ISA equivalence suite: every SIMD tier this host can run
+//! (scalar, NEON, AVX2, AVX-512 VNNI — whatever [`isa::available`]
+//! reports) must produce **bit-identical** logits, stats and skip
+//! traces to the retained per-neuron scalar reference, across random
+//! models, predictor strategies, input-sparsity modes and exact
+//! weight-sparsity modes. The i32-dot contract says the ISA knob is a
+//! pure host-performance choice; this suite is the oracle for it.
+//!
+//! The forced-ISA override ([`isa::force`]) is process-global, so this
+//! file is the only test binary that mutates it, and every test here
+//! serializes on one lock and restores the default on drop.
+
+use std::sync::{Mutex, MutexGuard};
+
+use mor::config::PredictorConfig;
+use mor::engine::isa::{self, Isa};
+use mor::engine::tune::TuneProfile;
+use mor::engine::{InputSparsity, WeightSparsity};
+use mor::model::synth;
+use mor::plan;
+use mor::predictor::strategies::Strategy;
+use mor::predictor::{exec::run_sample, EngineSel, MorPolicy, RunOpts, RunResult};
+use mor::util::prop::property;
+use mor::util::rng::Rng;
+
+static ISA_LOCK: Mutex<()> = Mutex::new(());
+
+/// Holds the global ISA lock for a test's lifetime and clears any
+/// forced tier when dropped, even if the test panics.
+struct ForcedIsa(#[allow(dead_code)] MutexGuard<'static, ()>);
+
+impl ForcedIsa {
+    fn lock() -> ForcedIsa {
+        ForcedIsa(ISA_LOCK.lock().unwrap_or_else(|e| e.into_inner()))
+    }
+}
+
+impl Drop for ForcedIsa {
+    fn drop(&mut self) {
+        isa::force(None);
+    }
+}
+
+fn rand_input(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.uniform(-1.0, 1.0) as f32).collect()
+}
+
+fn diff(want: &RunResult, got: &RunResult) -> Option<String> {
+    if want.logits != got.logits {
+        return Some(format!("logits differ: want {:?} got {:?}", want.logits, got.logits));
+    }
+    if want.pred != got.pred {
+        return Some(format!("pred stats differ: want {:?} got {:?}", want.pred, got.pred));
+    }
+    if want.ops != got.ops {
+        return Some(format!("ops stats differ: want {:?} got {:?}", want.ops, got.ops));
+    }
+    if want.traces != got.traces {
+        return Some("skip traces differ".to_string());
+    }
+    None
+}
+
+#[test]
+fn every_available_isa_matches_scalar_reference() {
+    let _guard = ForcedIsa::lock();
+    let tiers = isa::available();
+    assert!(tiers.contains(&Isa::Scalar), "scalar must always be available");
+
+    property("every ISA tier == scalar reference", 12, |g| {
+        let mut model = synth::random_model(g.rng());
+        // half the cases get real weight zeros so the weight-sparse
+        // kernels (and their per-ISA lane paths) are actually exercised
+        if g.bool() {
+            synth::sparsify_weights(&mut model, g.seed ^ 3, 80);
+        }
+        let params = synth::predictor_for(&model, g.seed);
+        let (h, w, c) = model.input_shape;
+        let x = rand_input(g.rng(), h * w * c);
+        let cfg = PredictorConfig {
+            threshold: *g.pick(&[0.0f32, 0.5]),
+            strategy: *g.pick(&Strategy::ALL),
+            ..Default::default()
+        };
+        let pol = MorPolicy::new(&model, &params, cfg);
+        let policy = g.bool().then_some(&pol);
+
+        // the scalar reference path never dispatches on ISA, so one
+        // baseline serves every forced tier below
+        isa::force(None);
+        let want = run_sample(
+            &model,
+            policy,
+            &x,
+            RunOpts {
+                oracle: true,
+                collect_trace: true,
+                threads: 1,
+                engine: EngineSel::ScalarRef,
+                ..Default::default()
+            },
+        );
+
+        for &tier in &tiers {
+            isa::force(Some(tier));
+            assert_eq!(isa::active(), tier, "force must pin an available tier exactly");
+            for is in InputSparsity::ALL {
+                for ws in WeightSparsity::EXACT_MODES {
+                    for threads in [1usize, 3] {
+                        let got = run_sample(
+                            &model,
+                            policy,
+                            &x,
+                            RunOpts {
+                                oracle: true,
+                                collect_trace: true,
+                                threads,
+                                engine: EngineSel::Tiled,
+                                input_sparsity: is,
+                                weight_sparsity: ws,
+                                // defaulted *after* force: freezes this
+                                // tier's own crossover cutoffs into the plan
+                                ..Default::default()
+                            },
+                        );
+                        if let Some(msg) = diff(&want, &got) {
+                            isa::force(None);
+                            return Err(format!(
+                                "isa={} input_sparsity={is:?} weight_sparsity={ws:?} \
+                                 threads={threads} policy={}: {msg}",
+                                tier.name(),
+                                policy.is_some()
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        isa::force(None);
+        Ok(())
+    });
+}
+
+#[test]
+fn forcing_beyond_detected_clamps_to_detected() {
+    let _guard = ForcedIsa::lock();
+    let top = isa::detected();
+    // asking for the highest tier in the lattice can only ever deliver
+    // what the CPU has — force mins with detection, never widens it
+    isa::force(Some(Isa::Avx512Vnni));
+    assert_eq!(isa::active(), top);
+    isa::force(Some(Isa::Scalar));
+    assert_eq!(isa::active(), Isa::Scalar);
+    assert!(!isa::avx2_enabled() && !isa::vnni_enabled() && !isa::neon_enabled());
+    // host_default() follows the active tier, so scalar-forced sessions
+    // freeze the scalar crossovers
+    assert_eq!(TuneProfile::host_default().isa, Isa::Scalar);
+    isa::force(None);
+    assert_eq!(isa::active(), isa::detected().min(isa::active()));
+}
+
+#[test]
+fn profile_file_round_trip_preserves_plan_decisions() {
+    let _guard = ForcedIsa::lock();
+    let profile = TuneProfile {
+        isa: isa::active(),
+        input_cutoff: 0.33,
+        weight_cutoff: 0.44,
+        tile_rows: 8,
+        threads: 2,
+    };
+    let path = std::env::temp_dir().join(format!("mor_tune_{}.profile", std::process::id()));
+    let path = path.to_str().unwrap().to_string();
+    profile.save(&path).unwrap();
+    let loaded = TuneProfile::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(profile, loaded);
+    assert_eq!(profile.hash(), loaded.hash());
+
+    // the loaded profile must freeze the exact same plan: same cutoff,
+    // same per-layer weight-sparse choice, verifier-clean against the
+    // file's contents
+    let mut model = synth::tiny_serving_model(5);
+    synth::sparsify_weights(&mut model, 5, 85);
+    let mk = |p: TuneProfile| {
+        plan::compile(
+            &model,
+            None,
+            RunOpts { weight_sparsity: WeightSparsity::Exact, tune: p, ..Default::default() },
+        )
+    };
+    let (saved_plan, loaded_plan) = (mk(profile), mk(loaded));
+    let mut computes = 0;
+    for (a, b) in std::iter::zip(&saved_plan.steps, &loaded_plan.steps) {
+        if let (plan::StepPlan::Compute(ca), plan::StepPlan::Compute(cb)) = (a, b) {
+            assert_eq!(ca.sparse_cutoff, cb.sparse_cutoff);
+            assert_eq!(ca.w_sparse, cb.w_sparse);
+            assert_eq!(ca.sparse_cutoff, 0.33 * ca.k_len as f32);
+            computes += 1;
+        }
+    }
+    assert!(computes > 0, "model must have compute steps to compare");
+    let report = plan::verify_with(&loaded_plan, &model, None, Some(&loaded));
+    assert!(report.is_clean(), "round-tripped profile must audit clean:\n{report}");
+}

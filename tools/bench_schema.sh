@@ -1,26 +1,32 @@
 #!/usr/bin/env bash
-# Schema + conservation check for BENCH_serving.json.
+# Schema + conservation checks for the committed BENCH_*.json snapshots.
 #
-# The serving_tier block is the machine-readable contract of the
-# sharded tier (EXPERIMENTS.md §Tier): this script fails CI if the
-# block goes missing, loses its per-tenant/per-model breakdowns, or
-# stops conserving requests (completed + dropped + shed == submitted,
-# per group and in total). Works on both the hand-authored snapshot and
-# regenerated bench output — conservation is exact in either.
+# BENCH_serving.json — the serving_tier block is the machine-readable
+# contract of the sharded tier (EXPERIMENTS.md §Tier): this script fails
+# CI if the block goes missing, loses its per-tenant/per-model
+# breakdowns, or stops conserving requests (completed + dropped + shed
+# == submitted, per group and in total).
 #
-# Usage: bash tools/bench_schema.sh [path/to/BENCH_serving.json]
+# BENCH_hotpaths.json — the kernels block is the cross-ISA contract
+# (EXPERIMENTS.md §Tune): per-ISA dot GMAC/s over the density grid and
+# the tuned-vs-default forward, all positive and keyed by known tiers.
+#
+# Both files must carry an `_provenance` object naming the detected and
+# active ISA tiers plus the 16-hex-digit tune-profile hash, so perf
+# trajectories are only diffed between like hosts. Works on both the
+# hand-authored snapshots and regenerated bench output.
+#
+# Usage: bash tools/bench_schema.sh [BENCH_serving.json] [BENCH_hotpaths.json]
 set -euo pipefail
 
-FILE="${1:-BENCH_serving.json}"
+SERVING="${1:-BENCH_serving.json}"
+HOTPATHS="${2:-BENCH_hotpaths.json}"
 
-python3 - "$FILE" <<'EOF'
-import json, sys
+python3 - "$SERVING" "$HOTPATHS" <<'EOF'
+import json, re, sys
 
-path = sys.argv[1]
+serving_path, hotpaths_path = sys.argv[1], sys.argv[2]
 errors = []
-
-with open(path) as f:
-    doc = json.load(f)
 
 def need(obj, key, types, where):
     if key not in obj:
@@ -33,7 +39,27 @@ def need(obj, key, types, where):
 
 num = (int, float)
 
-tier = need(doc, "serving_tier", dict, path)
+ISA_TIERS = ("scalar", "neon", "avx2", "avx512vnni")
+
+def check_provenance(doc, path):
+    prov = need(doc, "_provenance", dict, path)
+    if prov is None:
+        return
+    where = f"{path}:_provenance"
+    for key in ("isa_detected", "isa_active"):
+        tier = need(prov, key, str, where)
+        if tier is not None and tier not in ISA_TIERS:
+            errors.append(f"{where}: '{key}' = '{tier}' is not an ISA tier")
+    h = need(prov, "tune_profile_hash", str, where)
+    if h is not None and not re.fullmatch(r"[0-9a-f]{16}", h):
+        errors.append(f"{where}: tune_profile_hash '{h}' is not 16 hex digits")
+
+# ---- BENCH_serving.json ------------------------------------------------
+with open(serving_path) as f:
+    doc = json.load(f)
+check_provenance(doc, serving_path)
+
+tier = need(doc, "serving_tier", dict, serving_path)
 if tier is not None:
     where = "serving_tier"
     for key in ("deadline_ms", "throughput_rps", "goodput_rps", "p50_ms", "p99_ms"):
@@ -81,11 +107,50 @@ if tier is not None:
                             f"{where}.{block}: sum of {key} is {total}, "
                             f"tier total is {tier[key]}")
 
+# ---- BENCH_hotpaths.json -----------------------------------------------
+with open(hotpaths_path) as f:
+    hdoc = json.load(f)
+check_provenance(hdoc, hotpaths_path)
+
+kernels = need(hdoc, "kernels", dict, hotpaths_path)
+n_tiers = 0
+if kernels is not None:
+    where = f"{hotpaths_path}:kernels"
+    dots = need(kernels, "dot_gmacs", dict, where)
+    if dots is not None:
+        if not dots:
+            errors.append(f"{where}.dot_gmacs: empty — at least scalar must be present")
+        if "scalar" not in dots:
+            errors.append(f"{where}.dot_gmacs: missing the 'scalar' baseline tier")
+        for tier_name, grid in dots.items():
+            gw = f"{where}.dot_gmacs.{tier_name}"
+            if tier_name not in ISA_TIERS:
+                errors.append(f"{gw}: not an ISA tier")
+                continue
+            n_tiers += 1
+            if not isinstance(grid, dict):
+                errors.append(f"{gw}: not an object")
+                continue
+            for d in ("10", "25", "50", "100"):
+                v = need(grid, d, num, gw)
+                if v is not None and v <= 0:
+                    errors.append(f"{gw}.{d}: GMAC/s must be positive, got {v}")
+    h = need(kernels, "tuned_profile_hash", str, where)
+    if h is not None and not re.fullmatch(r"[0-9a-f]{16}", h):
+        errors.append(f"{where}: tuned_profile_hash '{h}' is not 16 hex digits")
+    fwd = need(kernels, "forward_ms", dict, where)
+    if fwd is not None:
+        for key in ("default", "tuned"):
+            v = need(fwd, key, num, where + ".forward_ms")
+            if v is not None and v <= 0:
+                errors.append(f"{where}.forward_ms.{key}: must be positive, got {v}")
+
 if errors:
-    print(f"{path}: serving-tier schema check FAILED")
+    print("bench schema check FAILED")
     for e in errors:
         print(f"  - {e}")
     sys.exit(1)
-print(f"{path}: serving-tier schema OK "
+print(f"{serving_path}: serving-tier schema OK "
       f"({len(tier['per_tenant'])} tenants, {len(tier['per_model'])} models)")
+print(f"{hotpaths_path}: kernels schema OK ({n_tiers} ISA tier(s))")
 EOF
